@@ -1,0 +1,78 @@
+//! Quickstart: compress a fine-tune into a 1-bit per-axis delta, save it,
+//! hot-swap it back onto the base, and check behavioural fidelity.
+//!
+//! Runs in seconds on the `tiny` preset with no AOT artifacts required:
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
+use pawd::delta::format::{load_delta, save_delta};
+use pawd::eval::fidelity::fidelity;
+use pawd::model::config::ModelConfig;
+use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
+use pawd::model::{FlatParams, Transformer};
+use pawd::util::benchkit::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A base model and a "fine-tune" of it (here synthesized with
+    //    anisotropic per-row delta structure; the full pipeline in
+    //    examples/train_and_compress.rs *trains* real pairs).
+    let cfg = ModelConfig::preset("tiny")?;
+    let base = FlatParams::init(&cfg, 42);
+    let finetuned = synth_finetune(
+        &base,
+        &SynthDeltaSpec { magnitude: 0.03, anisotropy: 1.2, axis_bias: 0.7, seed: 7 },
+    );
+    println!("model: {} ({} params)", cfg.name, cfg.n_params());
+
+    // 2. Calibration documents (stand-in for the paper's 50 C4 samples).
+    let calib: Vec<Vec<u8>> = (0..8)
+        .map(|i| (0..48).map(|t| ((t * 7 + i * 31) % 200 + 20) as u8).collect())
+        .collect();
+
+    // 3. Compress: 1-bit sign masks + learned per-row/col scales, axis
+    //    chosen per module by held-out validation MSE (Alg. 6).
+    let opts = CompressOptions { fit: FitMode::ClosedForm, ..Default::default() };
+    let (delta, reports, _student) = compress_model("demo-ft", &base, &finetuned, &calib, &opts);
+    let row = reports.iter().filter(|r| r.chosen == pawd::delta::Axis::Row).count();
+    println!("compressed {} modules ({} chose row, {} col)", reports.len(), row, reports.len() - row);
+
+    // 4. Save + reload the PAWD artifact; compare sizes against FP16.
+    let dir = std::env::temp_dir().join("pawd_quickstart");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("demo-ft.pawd");
+    let bytes = save_delta(&path, &delta)?;
+    let fp16 = finetuned.fp16_bytes();
+    println!(
+        "artifact: {} vs FP16 checkpoint {} -> {:.2}x smaller",
+        fmt_bytes(bytes),
+        fmt_bytes(fp16),
+        fp16 as f64 / bytes as f64
+    );
+
+    // 5. Hot-swap: one read, one fused apply per module.
+    let loaded = load_delta(&path)?;
+    let t0 = std::time::Instant::now();
+    let student = pawd::delta::apply::materialize(&base, &loaded.modules);
+    println!("hot-swap (clone base + apply {} modules): {:?}", loaded.modules.len(), t0.elapsed());
+
+    // 6. Fidelity: the reconstructed student must track the fine-tune far
+    //    better than the raw base does.
+    let tf = Transformer::new(&cfg);
+    let probes: Vec<Vec<u8>> =
+        (0..4).map(|i| (0..48).map(|t| ((t * 13 + i * 53) % 200 + 20) as u8).collect()).collect();
+    let f_base = fidelity(&tf, &finetuned, &base, &probes);
+    let f_student = fidelity(&tf, &finetuned, &student, &probes);
+    println!(
+        "teacher-fidelity   KL: base {:.4} -> student {:.4}   argmax agreement: {:.1}% -> {:.1}%",
+        f_base.kl,
+        f_student.kl,
+        f_base.agreement * 100.0,
+        f_student.agreement * 100.0
+    );
+    assert!(f_student.kl < f_base.kl);
+    println!("quickstart OK");
+    Ok(())
+}

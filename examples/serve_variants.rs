@@ -1,0 +1,110 @@
+//! Multi-variant serving demo — the paper's systems scenario: many
+//! task-specialized fine-tunes of one base served from compact deltas,
+//! with hot-swap cold starts and an LRU variant cache.
+//!
+//! Builds N variants on disk, starts the coordinator, replays a skewed
+//! request mix from several client threads, and reports throughput,
+//! latency percentiles, cache behaviour and cold-start times.
+//!
+//! ```bash
+//! cargo run --release --example serve_variants [n_variants] [n_requests]
+//! ```
+
+use pawd::coordinator::{Engine, Payload, Server, ServerConfig, VariantStore};
+use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
+use pawd::delta::format::save_delta;
+use pawd::model::config::ModelConfig;
+use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
+use pawd::model::FlatParams;
+use pawd::util::rng::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n_variants: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(6);
+    let n_requests: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(400);
+
+    // --- build the variant fleet ---
+    let cfg = ModelConfig::preset("tiny")?;
+    let base = Arc::new(FlatParams::init(&cfg, 11));
+    let dir = std::env::temp_dir().join("pawd_serve_variants");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+    let calib: Vec<Vec<u8>> = (0..4)
+        .map(|i| (0..40).map(|t| ((t * 7 + i * 31) % 200 + 20) as u8).collect())
+        .collect();
+    let opts = CompressOptions { fit: FitMode::ClosedForm, ..Default::default() };
+    println!("building {n_variants} compressed variants of {} ...", cfg.name);
+    for k in 0..n_variants {
+        let ft = synth_finetune(&base, &SynthDeltaSpec { seed: 900 + k as u64, ..Default::default() });
+        let (delta, _, _) = compress_model(&format!("task{k}"), &base, &ft, &calib, &opts);
+        let bytes = save_delta(dir.join(format!("task{k}.pawd")), &delta)?;
+        println!("  task{k}: {} on disk", pawd::util::benchkit::fmt_bytes(bytes));
+    }
+
+    // --- start the coordinator with a budget that holds ~half the fleet ---
+    let variant_bytes = (base.data.len() * 4) as u64;
+    let store = VariantStore::new(base.clone(), &dir);
+    let server = Server::start(
+        store,
+        Engine::Native,
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            n_workers: 2,
+            cache_budget_bytes: variant_bytes * (n_variants as u64 / 2).max(1) + 1024,
+        },
+    );
+
+    // --- replay a zipf-ish request mix from 4 client threads ---
+    println!("replaying {n_requests} requests across 4 client threads ...");
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for tid in 0..4 {
+            let client = server.client();
+            s.spawn(move || {
+                let mut rng = Rng::new(tid as u64);
+                for i in 0..n_requests / 4 {
+                    // Skewed popularity: variant 0 is hot, tail is cold.
+                    let v = if rng.chance(0.5) {
+                        0
+                    } else {
+                        rng.below(n_variants)
+                    };
+                    let rx = client.submit(
+                        &format!("task{v}"),
+                        Payload::Score {
+                            prompt: format!("Q: request {i} from {tid}? A: "),
+                            choices: vec!["yes".into(), "no".into(), "maybe".into(), "never".into()],
+                        },
+                    );
+                    let resp = rx.recv().expect("response");
+                    assert!(resp.result.is_ok());
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+
+    // --- report ---
+    let snap = server.metrics.snapshot();
+    let cache = server.cache.stats();
+    println!("\n=== serving report ===");
+    println!("requests served      : {} in {:.2}s -> {:.1} req/s", snap.served, wall.as_secs_f64(), snap.served as f64 / wall.as_secs_f64());
+    println!("errors               : {}", snap.errors);
+    println!("batches              : {} (mean size {:.2})", snap.batches, snap.mean_batch_size);
+    println!("queue   p50/p99      : {} / {} µs", snap.queue_p50_us, snap.queue_p99_us);
+    println!("compute p50/p99      : {} / {} µs", snap.compute_p50_us, snap.compute_p99_us);
+    println!("total   p50/p99      : {} / {} µs", snap.total_p50_us, snap.total_p99_us);
+    println!("cache hits/misses    : {} / {} ({} evictions)", cache.hits, cache.misses, cache.evictions);
+    let cold: Vec<f64> = cache.cold_start.iter().map(|d| d.as_secs_f64() * 1e3).collect();
+    if !cold.is_empty() {
+        let s = pawd::util::stats::Summary::of(&cold);
+        println!("cold-start (ms)      : mean {:.2}  p50 {:.2}  max {:.2}  (n={})", s.mean, s.p50, s.max, s.n);
+    }
+    println!("resident variants    : {:?}", server.cache.resident());
+    server.shutdown();
+    println!("serve_variants OK");
+    Ok(())
+}

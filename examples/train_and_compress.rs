@@ -1,0 +1,94 @@
+//! The end-to-end system driver (DESIGN.md "End-to-end validation"):
+//!
+//! 1. pre-train a base LM on the synthetic corpus via the **AOT train-step
+//!    artifact** executed from Rust through PJRT (loss curve logged),
+//! 2. fine-tune it on the instruct mixture -> the teacher,
+//! 3. run the full compression pipeline (per-layer caches -> AdamW scale
+//!    fitting -> row/col selection -> end-to-end joint vector training),
+//!    for both the paper's method and the BitDelta scalar baseline,
+//! 4. write PAWD artifacts + the FP16 teacher checkpoint,
+//! 5. evaluate base / teacher / both students on the five zero-shot suites
+//!    and print a Table-1-shaped summary plus Table-2-shaped sizes.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_and_compress [config]
+//! ```
+//! `config` defaults to `llama-mini`; use `tiny` for a fast smoke.
+
+use pawd::baselines;
+use pawd::data::tasks::TaskFamily;
+use pawd::delta::compress::CompressOptions;
+use pawd::pipeline::{run_pair, PairConfig};
+use pawd::util::benchkit::{fmt_bytes, Table};
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let config = std::env::args().nth(1).unwrap_or_else(|| "llama-mini".to_string());
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let h = pawd::runtime::start(&artifacts)?;
+    let pc = if std::env::var("PAWD_FULL").is_ok() {
+        PairConfig::full(&config)
+    } else {
+        PairConfig::quick(&config)
+    };
+    let methods = vec![
+        ("BitDelta (scalar)", baselines::bitdelta_options(), false),
+        ("Vector (row/col)", baselines::vector_options(), true),
+    ];
+    let out_dir = std::env::temp_dir().join("pawd_train_and_compress").join(&config);
+    let t0 = std::time::Instant::now();
+    let res = run_pair(&h, &pc, &methods, &out_dir, |m| println!("{m}"))?;
+
+    // Loss curves (downsampled).
+    println!("\n--- base pre-training loss curve ({} steps) ---", res.base_losses.len());
+    print_curve(&res.base_losses);
+    println!("--- fine-tuning loss curve ({} steps) ---", res.finetune_losses.len());
+    print_curve(&res.finetune_losses);
+
+    // Table-1-shaped accuracy summary.
+    let mut t = Table::new(&["Method", "ARC-C*", "ARC-E*", "HellaSwag*", "PIQA*", "Winogrande*", "Avg"]);
+    let mut add = |suite: &pawd::eval::harness::SuiteResult| {
+        let mut row = vec![suite.label.clone()];
+        for fam in TaskFamily::ALL {
+            row.push(format!("{:.2}", suite.pct(fam)));
+        }
+        row.push(format!("{:.2}", suite.average() * 100.0));
+        t.row(&row);
+    };
+    add(&res.base_suite);
+    add(&res.baseline_suite);
+    for m in &res.methods {
+        add(&m.suite);
+    }
+    t.print(&format!("Zero-shot accuracy (%) — {} pair", res.config.name));
+
+    // Table-2-shaped sizes.
+    let mut t2 = Table::new(&["Artifact", "Size", "vs FP16"]);
+    t2.row(&["FP16 teacher".into(), fmt_bytes(res.fp16_bytes), "1.00x".into()]);
+    for m in &res.methods {
+        t2.row(&[
+            m.method.clone(),
+            fmt_bytes(m.artifact_bytes),
+            format!("{:.2}x smaller", res.fp16_bytes as f64 / m.artifact_bytes as f64),
+        ]);
+    }
+    t2.print("Checkpoint sizes");
+
+    println!("artifacts in {}", out_dir.display());
+    println!("total wall time: {:.1}s", t0.elapsed().as_secs_f64());
+    h.shutdown();
+    Ok(())
+}
+
+fn print_curve(losses: &[f32]) {
+    let n = losses.len();
+    let stride = (n / 10).max(1);
+    for (i, chunk) in losses.chunks(stride).enumerate() {
+        let mean: f32 = chunk.iter().sum::<f32>() / chunk.len() as f32;
+        println!("  step {:>4}: loss {:.4}", i * stride, mean);
+    }
+}

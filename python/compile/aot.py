@@ -1,0 +1,244 @@
+"""AOT export: lower every program the Rust runtime needs to HLO *text* and
+write a manifest describing shapes/dtypes/argument order.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md). All programs are lowered with
+``return_tuple=True`` so the Rust side unwraps one tuple per execution.
+
+Exported program families (see artifacts/manifest.json):
+
+* ``fwd_{cfg}_b{B}_t{T}``      — (params f32[P], tokens i32[B,T]) -> logits
+* ``train_{cfg}_b{B}_t{T}``    — fused AdamW LM step
+* ``lmgrad_{cfg}_b{B}_t{T}``   — logit-matching loss + flat grad (Alg. 2)
+* ``dapply_{axis}_{O}x{I}``    — Pallas delta apply for a weight shape
+* ``dmm_{axis}_n{N}_{O}x{I}``  — Pallas fused delta-GEMM
+
+Run ``python -m compile.aot --out-dir ../artifacts``; it is incremental-
+friendly (the Makefile only invokes it when compile/ sources change).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.delta_apply import delta_apply
+from .kernels.fused_matmul import fused_delta_matmul
+from .kernels.ref import words_per_row
+
+# Shape buckets exported per config. Kept deliberately small: each entry is
+# one more XLA program the runtime compiles at startup.
+FWD_BUCKETS = {
+    "tiny": [(1, 48), (4, 48), (8, 48)],
+    "llama-mini": [(1, 96), (4, 96), (8, 96)],
+    "qwen-mini": [(1, 96), (4, 96)],
+    "phi-mini": [(1, 96), (4, 96)],
+    "base-110m": [(1, 128)],
+}
+TRAIN_BUCKETS = {
+    "tiny": (8, 48),
+    "llama-mini": (8, 96),
+    "qwen-mini": (8, 96),
+    "phi-mini": (8, 96),
+    "base-110m": (4, 128),
+}
+# lmgrad batches are small (150 calibration docs streamed in chunks).
+LMGRAD_BUCKETS = {
+    "tiny": (4, 48),
+    "llama-mini": (4, 96),
+    "qwen-mini": (4, 96),
+    "phi-mini": (4, 96),
+    "base-110m": (2, 128),
+}
+# Kernel artifact shapes: the patchable weight shapes of these configs.
+KERNEL_CONFIGS = ["tiny", "llama-mini"]
+FUSED_N = 64  # token rows per fused-GEMM artifact
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def dtype_name(dt) -> str:
+    return {jnp.float32: "f32", jnp.int32: "i32", jnp.uint32: "u32"}[dt]
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"programs": {}, "configs": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, name: str, fn, in_specs, meta=None):
+        """Lower fn at in_specs, write HLO text, record manifest entry."""
+        lowered = jax.jit(fn).lower(*[spec(s, d) for (s, d) in in_specs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_tree = lowered.out_info
+        outs = []
+
+        def walk(x):
+            outs.append({"shape": list(x.shape), "dtype": str(x.dtype)})
+
+        jax.tree_util.tree_map(walk, out_tree)
+        self.manifest["programs"][name] = {
+            "file": fname,
+            "inputs": [{"shape": list(s), "dtype": dtype_name(d)} for (s, d) in in_specs],
+            "outputs": outs,
+            "meta": meta or {},
+        }
+        print(f"  wrote {fname} ({len(text) / 1024:.0f} KiB)")
+
+    def save_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"  wrote manifest.json ({len(self.manifest['programs'])} programs)")
+
+
+def patchable_shapes(cfg: M.ModelConfig):
+    d, f = cfg.dim, cfg.ff
+    return sorted({(d, d), (f, d), (d, f)})
+
+
+def export_config(ex: Exporter, cfg: M.ModelConfig):
+    P = cfg.n_params()
+    ex.manifest["configs"][cfg.name] = {
+        "vocab": cfg.vocab,
+        "dim": cfg.dim,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "ff": cfg.ff,
+        "max_seq": cfg.max_seq,
+        "n_params": P,
+    }
+    f32, i32 = jnp.float32, jnp.int32
+    for (b, t) in FWD_BUCKETS[cfg.name]:
+        ex.add(
+            f"fwd_{cfg.name}_b{b}_t{t}",
+            lambda p, tok, cfg=cfg: (M.forward(cfg, p, tok),),
+            [((P,), f32), ((b, t), i32)],
+            meta={"kind": "forward", "config": cfg.name, "batch": b, "seq": t},
+        )
+    (b, t) = TRAIN_BUCKETS[cfg.name]
+    ex.add(
+        f"train_{cfg.name}_b{b}_t{t}",
+        lambda p, m, v, s, lr, tok, cfg=cfg: M.train_step(cfg, p, m, v, s, lr, tok),
+        [((P,), f32), ((P,), f32), ((P,), f32), ((), i32), ((), f32), ((b, t + 1), i32)],
+        meta={"kind": "train_step", "config": cfg.name, "batch": b, "seq": t},
+    )
+    (b, t) = LMGRAD_BUCKETS[cfg.name]
+    ex.add(
+        f"lmgrad_{cfg.name}_b{b}_t{t}",
+        lambda p, tok, tl, cfg=cfg: M.logit_match_grad(cfg, p, tok, tl),
+        [((P,), f32), ((b, t), i32), ((b, t, cfg.vocab), f32)],
+        meta={"kind": "lmgrad", "config": cfg.name, "batch": b, "seq": t},
+    )
+
+
+def export_kernels(ex: Exporter, cfg: M.ModelConfig):
+    f32, u32 = jnp.float32, jnp.uint32
+    for (d_out, d_in) in patchable_shapes(cfg):
+        wpr = words_per_row(d_in)
+        for axis in ("row", "col"):
+            ns = d_out if axis == "row" else d_in
+            ex.add(
+                f"dapply_{axis}_{d_out}x{d_in}",
+                lambda base, packed, scales, axis=axis: (
+                    delta_apply(base, packed, scales, axis=axis),
+                ),
+                [((d_out, d_in), f32), ((d_out, wpr), u32), ((ns,), f32)],
+                meta={"kind": "delta_apply", "axis": axis, "d_out": d_out, "d_in": d_in},
+            )
+            ex.add(
+                f"dmm_{axis}_n{FUSED_N}_{d_out}x{d_in}",
+                lambda x, base, packed, scales, axis=axis: (
+                    fused_delta_matmul(x, base, packed, scales, axis=axis),
+                ),
+                [((FUSED_N, d_in), f32), ((d_out, d_in), f32), ((d_out, wpr), u32), ((ns,), f32)],
+                meta={
+                    "kind": "fused_delta_matmul",
+                    "axis": axis,
+                    "n": FUSED_N,
+                    "d_out": d_out,
+                    "d_in": d_in,
+                },
+            )
+
+
+def export_parity_fixture(ex: Exporter, cfg: M.ModelConfig, b: int, t: int):
+    """Golden cross-language fixture: concrete params + tokens + the jax
+    logits, consumed by rust/tests/integration_runtime.rs to check that the
+    native Rust forward, the jax forward, and the PJRT-executed artifact all
+    agree. Binary little-endian layout:
+    u32 P | f32×P params | u32 B | u32 T | i32×(B·T) tokens |
+    u32 V | f32×(B·T·V) logits."""
+    import numpy as np
+
+    params = np.asarray(M.init_params(cfg, 12345), np.float32)
+    rng = np.random.default_rng(777)
+    tokens = rng.integers(0, cfg.vocab, size=(b, t)).astype(np.int32)
+    logits = np.asarray(M.jit_forward(cfg)(jnp.asarray(params), jnp.asarray(tokens)), np.float32)
+    path = os.path.join(ex.out_dir, f"parity_{cfg.name}.bin")
+    with open(path, "wb") as f:
+        f.write(np.uint32(params.size).tobytes())
+        f.write(params.tobytes())
+        f.write(np.uint32(b).tobytes())
+        f.write(np.uint32(t).tobytes())
+        f.write(tokens.tobytes())
+        f.write(np.uint32(cfg.vocab).tobytes())
+        f.write(logits.tobytes())
+    ex.manifest["programs"][f"parity_{cfg.name}"] = {
+        "file": f"parity_{cfg.name}.bin",
+        "inputs": [],
+        "outputs": [],
+        "meta": {"kind": "parity_fixture", "config": cfg.name, "batch": b, "seq": t},
+    }
+    print(f"  wrote parity_{cfg.name}.bin")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default="tiny,llama-mini,qwen-mini,phi-mini",
+        help="comma-separated config presets to export (base-110m on demand)",
+    )
+    args = ap.parse_args(argv)
+    ex = Exporter(args.out_dir)
+    names = [c for c in args.configs.split(",") if c]
+    for name in names:
+        cfg = M.PRESETS[name]
+        print(f"[aot] exporting {name} (P={cfg.n_params() / 1e6:.2f}M)")
+        export_config(ex, cfg)
+        if name in KERNEL_CONFIGS:
+            export_kernels(ex, cfg)
+        if name == "tiny":
+            b, t = FWD_BUCKETS["tiny"][1]
+            export_parity_fixture(ex, cfg, b, t)
+    ex.save_manifest()
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: packed-sign per-axis delta apply.
+
+Computes ``Ŵ = W_b + v ⊙ B`` where B arrives *packed* (u32 words, 1 bit per
+entry along the input axis) and is expanded in-kernel — the packed tile is
+32× smaller than the dense tile, so HBM→VMEM traffic is dominated by the
+base weights alone (the paper's "masks stay packed end-to-end").
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks row blocks;
+each step streams one `(block_rows, d_in)` base tile into VMEM together
+with its `(block_rows, d_in/32)` packed words and the scale block, expands
+bits with shift/AND on the VPU, and writes one output tile. Double
+buffering comes from the Pallas pipeline. `interpret=True` everywhere on
+this CPU image (real-TPU lowering emits Mosaic custom-calls the CPU PJRT
+plugin cannot execute).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import words_per_row
+
+
+def _pick_block(n: int, cap: int = 128) -> int:
+    """Largest power-of-two-ish divisor of n, at most cap."""
+    for b in (128, 64, 32, 16, 8, 4, 2, 1):
+        if b <= cap and n % b == 0:
+            return b
+    return 1
+
+
+def _expand_signs(packed_tile, d_in: int):
+    """[bo, wpr] u32 -> ±1.0 f32 [bo, d_in] (in-kernel bit expansion)."""
+    wpr = packed_tile.shape[-1]
+    i = jnp.arange(wpr * 32, dtype=jnp.uint32)
+    word_idx = (i // 32).astype(jnp.int32)
+    bit_idx = i % 32
+    bits = (packed_tile[:, word_idx] >> bit_idx[None, :]) & jnp.uint32(1)
+    return (bits.astype(jnp.float32) * 2.0 - 1.0)[:, :d_in]
+
+
+def _kernel_row(base_ref, packed_ref, scales_ref, out_ref, *, d_in):
+    signs = _expand_signs(packed_ref[...], d_in)
+    out_ref[...] = base_ref[...] + scales_ref[...][:, None] * signs
+
+
+def _kernel_col(base_ref, packed_ref, scales_ref, out_ref, *, d_in):
+    signs = _expand_signs(packed_ref[...], d_in)
+    out_ref[...] = base_ref[...] + scales_ref[...][None, :] * signs
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "block_rows"))
+def delta_apply(base, packed, scales, *, axis: str, block_rows: int | None = None):
+    """Pallas delta apply. base [d_out, d_in] f32, packed [d_out, wpr] u32,
+    scales [d_out] (row) or [d_in] (col) f32 -> Ŵ [d_out, d_in] f32."""
+    d_out, d_in = base.shape
+    wpr = words_per_row(d_in)
+    assert packed.shape == (d_out, wpr), (packed.shape, (d_out, wpr))
+    bo = block_rows or _pick_block(d_out)
+    assert d_out % bo == 0, f"block_rows {bo} must divide d_out {d_out}"
+    grid = (d_out // bo,)
+    if axis == "row":
+        assert scales.shape == (d_out,)
+        kernel = functools.partial(_kernel_row, d_in=d_in)
+        scale_spec = pl.BlockSpec((bo,), lambda i: (i,))
+    elif axis == "col":
+        assert scales.shape == (d_in,)
+        kernel = functools.partial(_kernel_col, d_in=d_in)
+        scale_spec = pl.BlockSpec((d_in,), lambda i: (0,))
+    else:
+        raise ValueError(f"bad axis {axis}")
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bo, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((bo, wpr), lambda i: (i, 0)),
+            scale_spec,
+        ],
+        out_specs=pl.BlockSpec((bo, d_in), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_out, d_in), jnp.float32),
+        interpret=True,  # CPU image: Mosaic lowering unavailable
+    )(base, packed, scales)
+
+
+def vmem_bytes_per_step(d_out: int, d_in: int, block_rows: int | None = None) -> int:
+    """Structural VMEM footprint estimate for one grid step (perf model for
+    DESIGN.md §Perf: base tile + out tile + packed tile + scale block)."""
+    bo = block_rows or _pick_block(d_out)
+    wpr = words_per_row(d_in)
+    base = bo * d_in * 4
+    out = bo * d_in * 4
+    packed = bo * wpr * 4
+    scales = max(bo, d_in) * 4
+    return base + out + packed + scales

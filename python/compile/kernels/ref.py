@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness reference for:
+* sign extraction + bit packing (1 bit along the input axis, u32 words,
+  bit i of word w = sign of column 32·w + i; 1 -> +1, 0 -> -1; ties at 0
+  map to +1 — matching ``rust/src/delta/pack.rs``),
+* the per-axis delta apply ``Ŵ = W_b + v ⊙ B``,
+* the fused delta-GEMM ``y = x · (W_b + v ⊙ B)ᵀ``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def words_per_row(d_in: int) -> int:
+    return (d_in + 31) // 32
+
+
+def pack_signs(delta: jnp.ndarray) -> jnp.ndarray:
+    """delta: [d_out, d_in] f32 -> packed [d_out, ceil(d_in/32)] uint32."""
+    d_out, d_in = delta.shape
+    wpr = words_per_row(d_in)
+    bits = (delta >= 0).astype(jnp.uint32)  # sign(0) -> +1
+    pad = wpr * 32 - d_in
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    bits = bits.reshape(d_out, wpr, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def unpack_signs(packed: jnp.ndarray, d_in: int) -> jnp.ndarray:
+    """packed: [d_out, wpr] uint32 -> ±1.0 f32 [d_out, d_in]."""
+    d_out, wpr = packed.shape
+    assert wpr == words_per_row(d_in)
+    i = jnp.arange(wpr * 32, dtype=jnp.uint32)
+    word_idx = (i // 32).astype(jnp.int32)
+    bit_idx = i % 32
+    bits = (packed[:, word_idx] >> bit_idx[None, :]) & 1
+    signs = bits.astype(jnp.float32) * 2.0 - 1.0
+    return signs[:, :d_in]
+
+
+def delta_apply_ref(base, packed, scales, axis: str):
+    """Ŵ = W_b + v ⊙ B. axis ∈ {row, col}; scales [d_out] or [d_in]."""
+    d_out, d_in = base.shape
+    signs = unpack_signs(packed, d_in)
+    if axis == "row":
+        assert scales.shape == (d_out,)
+        return base + scales[:, None] * signs
+    elif axis == "col":
+        assert scales.shape == (d_in,)
+        return base + scales[None, :] * signs
+    raise ValueError(f"bad axis {axis}")
+
+
+def fused_delta_matmul_ref(x, base, packed, scales, axis: str):
+    """y = x · (W_b + v ⊙ B)ᵀ without the caller materializing Ŵ."""
+    w = delta_apply_ref(base, packed, scales, axis)
+    return x @ w.T

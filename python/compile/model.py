@@ -1,0 +1,252 @@
+"""L2: JAX transformer (decoder-only, pre-RMSNorm, RoPE, SwiGLU) over a
+single flat parameter vector, plus the fused-AdamW train step and the
+logit-matching gradient program.
+
+The flat layout mirrors ``rust/src/model/params.rs`` exactly::
+
+    embed [V,D] | per layer: attn_norm [D] | wq wk wv wo [D,D] |
+    mlp_norm [D] | w_gate w_up [F,D] | w_down [D,F] | final_norm [D] |
+    lm_head [V,D]
+
+and every op (RMSNorm eps, RoPE convention, attention scaling, SiLU) matches
+the native Rust forward pass operation-for-operation — the Rust side is the
+parity oracle in ``rust/tests/integration_runtime.rs``.
+
+Python here is build-time only: these functions are AOT-lowered to HLO text
+by ``aot.py`` and executed from Rust via PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+RMS_EPS = 1e-5
+ROPE_BASE = 10_000.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    dim: int
+    n_layers: int
+    n_heads: int
+    ff: int
+    max_seq: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.n_heads == 0
+        return self.dim // self.n_heads
+
+    def n_params(self) -> int:
+        d, f, v = self.dim, self.ff, self.vocab
+        return v * d + self.n_layers * (d + 4 * d * d + d + 2 * f * d + d * f) + d + v * d
+
+
+# Must stay in sync with rust/src/model/config.rs presets.
+PRESETS = {
+    "tiny": ModelConfig("tiny", 256, 64, 2, 2, 128, 64),
+    "llama-mini": ModelConfig("llama-mini", 256, 256, 4, 4, 688, 128),
+    "qwen-mini": ModelConfig("qwen-mini", 256, 320, 5, 5, 1280, 128),
+    "phi-mini": ModelConfig("phi-mini", 256, 288, 6, 6, 864, 128),
+    "base-110m": ModelConfig("base-110m", 256, 768, 12, 12, 3072, 256),
+}
+
+
+def layout_offsets(cfg: ModelConfig):
+    """Offsets of each tensor in the flat vector (mirrors Layout::new)."""
+    d, f, v = cfg.dim, cfg.ff, cfg.vocab
+    off = 0
+
+    def take(n):
+        nonlocal off
+        o = off
+        off += n
+        return o
+
+    out = {"embed": take(v * d), "layers": []}
+    for _ in range(cfg.n_layers):
+        out["layers"].append(
+            {
+                "attn_norm": take(d),
+                "wq": take(d * d),
+                "wk": take(d * d),
+                "wv": take(d * d),
+                "wo": take(d * d),
+                "mlp_norm": take(d),
+                "w_gate": take(f * d),
+                "w_up": take(f * d),
+                "w_down": take(d * f),
+            }
+        )
+    out["final_norm"] = take(d)
+    out["lm_head"] = take(v * d)
+    out["total"] = off
+    assert off == cfg.n_params()
+    return out
+
+
+def _slice2(params, off, rows, cols):
+    return jax.lax.dynamic_slice(params, (off,), (rows * cols,)).reshape(rows, cols)
+
+
+def _slice1(params, off, n):
+    return jax.lax.dynamic_slice(params, (off,), (n,))
+
+
+def rmsnorm(x, w):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + RMS_EPS) * w
+
+
+def rope_tables(cfg: ModelConfig, t_len: int):
+    hd = cfg.head_dim
+    half = hd // 2
+    inv_freq = ROPE_BASE ** (-2.0 * jnp.arange(half, dtype=jnp.float32) / hd)
+    ang = jnp.arange(t_len, dtype=jnp.float32)[:, None] * inv_freq[None, :]  # [T, half]
+    cos = jnp.concatenate([jnp.cos(ang), jnp.cos(ang)], axis=-1)  # [T, hd]
+    sin = jnp.concatenate([jnp.sin(ang), jnp.sin(ang)], axis=-1)
+    return cos, sin
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., T, heads, hd]; rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    rotated = jnp.concatenate([-x2, x1], axis=-1)
+    return x * cos + rotated * sin
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """tokens: [B, T] int32 -> logits [B, T, V]."""
+    lay = layout_offsets(cfg)
+    b, t = tokens.shape
+    d, nh, hd = cfg.dim, cfg.n_heads, cfg.head_dim
+    embed = _slice2(params, lay["embed"], cfg.vocab, d)
+    x = embed[tokens]  # [B, T, D]
+    cos, sin = rope_tables(cfg, t)
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    for lo in lay["layers"]:
+        # --- attention ---
+        h = rmsnorm(x, _slice1(params, lo["attn_norm"], d))
+        wq = _slice2(params, lo["wq"], d, d)
+        wk = _slice2(params, lo["wk"], d, d)
+        wv = _slice2(params, lo["wv"], d, d)
+        wo = _slice2(params, lo["wo"], d, d)
+        q = (h @ wq.T).reshape(b, t, nh, hd)
+        k = (h @ wk.T).reshape(b, t, nh, hd)
+        v = (h @ wv.T).reshape(b, t, nh, hd)
+        q = apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
+        k = apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+        neg = jnp.asarray(-1e30, dtype=scores.dtype)
+        scores = jnp.where(causal[None, None, :, :], scores, neg)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, t, d)
+        x = x + ctx @ wo.T
+        # --- MLP ---
+        h = rmsnorm(x, _slice1(params, lo["mlp_norm"], d))
+        w_gate = _slice2(params, lo["w_gate"], cfg.ff, d)
+        w_up = _slice2(params, lo["w_up"], cfg.ff, d)
+        w_down = _slice2(params, lo["w_down"], d, cfg.ff)
+        gate = h @ w_gate.T
+        up = h @ w_up.T
+        x = x + (jax.nn.silu(gate) * up) @ w_down.T
+    x = rmsnorm(x, _slice1(params, lay["final_norm"], d))
+    lm = _slice2(params, lay["lm_head"], cfg.vocab, d)
+    return x @ lm.T
+
+
+def lm_loss(cfg: ModelConfig, params, tokens_plus):
+    """Causal-LM cross entropy. tokens_plus: [B, T+1] int32."""
+    inputs = tokens_plus[:, :-1]
+    targets = tokens_plus[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelConfig, params, m, v, step, lr, tokens_plus):
+    """One fused AdamW step on the LM loss.
+
+    (params, m, v, step i32[], lr f32[], tokens [B, T+1] i32)
+    -> (params', m', v', step+1, loss)  — all flat, PJRT-friendly.
+    """
+    loss, grads = jax.value_and_grad(lambda p: lm_loss(cfg, p, tokens_plus))(params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    step = step + 1
+    fstep = step.astype(jnp.float32)
+    m = b1 * m + (1.0 - b1) * grads
+    v = b2 * v + (1.0 - b2) * jnp.square(grads)
+    mhat = m / (1.0 - b1**fstep)
+    vhat = v / (1.0 - b2**fstep)
+    params = params - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return params, m, v, step, loss
+
+
+def logit_match_grad(cfg: ModelConfig, params, tokens, teacher_logits):
+    """Loss + flat-weight gradient of the end-to-end objective (Alg. 2):
+    L = mean((student_logits − teacher_logits)²).
+
+    Rust maps the weight gradient back to per-axis scale gradients via the
+    delta chain rule (dL/dv_j = Σ_i dL/dW[j,i] · B[j,i], etc.).
+    """
+
+    def loss_fn(p):
+        logits = forward(cfg, p, tokens)
+        return jnp.mean(jnp.square(logits - teacher_logits))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    return loss, grads
+
+
+def init_params(cfg: ModelConfig, seed: int) -> jnp.ndarray:
+    """Scaled-normal init (distributionally equal to the Rust init; parity
+    fixtures ship concrete params across the boundary, not seeds)."""
+    lay = layout_offsets(cfg)
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    d, f, v = cfg.dim, cfg.ff, cfg.vocab
+    std_d = 1.0 / float(d) ** 0.5
+    std_f = 1.0 / float(f) ** 0.5
+
+    def nrm(key, n, std):
+        return jax.random.normal(key, (n,), dtype=jnp.float32) * std
+
+    key, k = jax.random.split(key)
+    parts.append(nrm(k, v * d, 0.02))
+    for _ in range(cfg.n_layers):
+        key, k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 8)
+        parts.append(jnp.ones((d,), jnp.float32))
+        parts.append(nrm(k1, d * d, std_d))
+        parts.append(nrm(k2, d * d, std_d))
+        parts.append(nrm(k3, d * d, std_d))
+        parts.append(nrm(k4, d * d, std_d))
+        parts.append(jnp.ones((d,), jnp.float32))
+        parts.append(nrm(k5, f * d, std_d))
+        parts.append(nrm(k6, f * d, std_d))
+        parts.append(nrm(k7, d * f, std_f))
+    key, k = jax.random.split(key)
+    parts.append(jnp.ones((d,), jnp.float32))
+    parts.append(nrm(k, v * d, std_d))
+    flat = jnp.concatenate(parts)
+    assert flat.shape[0] == lay["total"]
+    return flat
+
+
+def jit_forward(cfg: ModelConfig):
+    return jax.jit(partial(forward, cfg))
+
+
+def jit_train_step(cfg: ModelConfig):
+    return jax.jit(partial(train_step, cfg))
+
+
+def jit_logit_match_grad(cfg: ModelConfig):
+    return jax.jit(partial(logit_match_grad, cfg))

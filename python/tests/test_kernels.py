@@ -1,0 +1,157 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (including non-multiples of the 32-bit word size
+and degenerate dims) and value distributions; fixed regression cases cover
+the exact weight shapes shipped in the AOT manifest.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.delta_apply import delta_apply, vmem_bytes_per_step
+from compile.kernels.fused_matmul import fused_delta_matmul, mxu_utilization_estimate
+
+DIMS = st.integers(min_value=1, max_value=97)
+
+
+def mk(rng, d_out, d_in, axis):
+    base = jnp.asarray(rng.normal(size=(d_out, d_in)), jnp.float32)
+    delta = jnp.asarray(rng.normal(size=(d_out, d_in)), jnp.float32)
+    packed = ref.pack_signs(delta)
+    n = d_out if axis == "row" else d_in
+    scales = jnp.asarray(rng.uniform(0.001, 0.5, size=(n,)), jnp.float32)
+    return base, delta, packed, scales
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(d_out=DIMS, d_in=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(d_out, d_in, seed):
+    rng = np.random.default_rng(seed)
+    delta = jnp.asarray(rng.normal(size=(d_out, d_in)), jnp.float32)
+    packed = ref.pack_signs(delta)
+    assert packed.shape == (d_out, ref.words_per_row(d_in))
+    signs = ref.unpack_signs(packed, d_in)
+    want = np.where(np.asarray(delta) >= 0, 1.0, -1.0)
+    np.testing.assert_array_equal(np.asarray(signs), want)
+
+
+def test_pack_zero_maps_to_plus_one():
+    delta = jnp.asarray([[0.0, -0.0, 1.0, -1.0]], jnp.float32)
+    signs = ref.unpack_signs(ref.pack_signs(delta), 4)
+    np.testing.assert_array_equal(np.asarray(signs), [[1.0, 1.0, 1.0, -1.0]])
+
+
+def test_pack_bit_layout_matches_rust_convention():
+    # bit i of word w == sign of column 32*w + i; first column -> LSB.
+    delta = jnp.zeros((1, 33), jnp.float32).at[0, 0].set(-1.0).at[0, 32].set(-1.0)
+    packed = np.asarray(ref.pack_signs(delta))
+    assert packed.shape == (1, 2)
+    assert packed[0, 0] & 1 == 0  # column 0 negative -> bit clear
+    assert packed[0, 0] >> 1 == (1 << 31) - 1  # columns 1..31 positive
+    assert packed[0, 1] & 1 == 0  # column 32 negative
+
+
+# ---------------------------------------------------------------------------
+# delta_apply kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(d_out=DIMS, d_in=DIMS, axis=st.sampled_from(["row", "col"]), seed=st.integers(0, 2**31 - 1))
+def test_delta_apply_matches_ref(d_out, d_in, axis, seed):
+    rng = np.random.default_rng(seed)
+    base, _, packed, scales = mk(rng, d_out, d_in, axis)
+    want = ref.delta_apply_ref(base, packed, scales, axis)
+    got = delta_apply(base, packed, scales, axis=axis)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("d_out,d_in", [(256, 256), (688, 256), (256, 688), (64, 64), (128, 64), (64, 128)])
+@pytest.mark.parametrize("axis", ["row", "col"])
+def test_delta_apply_manifest_shapes(d_out, d_in, axis):
+    rng = np.random.default_rng(d_out * 7 + d_in)
+    base, _, packed, scales = mk(rng, d_out, d_in, axis)
+    want = ref.delta_apply_ref(base, packed, scales, axis)
+    got = delta_apply(base, packed, scales, axis=axis)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d_out=st.integers(2, 32).map(lambda k: 2 * k),
+    d_in=DIMS,
+    block=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_delta_apply_block_invariance(d_out, d_in, block, seed):
+    # The result must not depend on the grid block size.
+    rng = np.random.default_rng(seed)
+    base, _, packed, scales = mk(rng, d_out, d_in, "row")
+    a = delta_apply(base, packed, scales, axis="row", block_rows=block)
+    b = delta_apply(base, packed, scales, axis="row", block_rows=d_out)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_delta_apply_rejects_bad_axis():
+    rng = np.random.default_rng(0)
+    base, _, packed, scales = mk(rng, 4, 8, "row")
+    with pytest.raises(ValueError):
+        delta_apply(base, packed, scales, axis="diag")
+
+
+# ---------------------------------------------------------------------------
+# fused delta-GEMM kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 32),
+    d_out=DIMS,
+    d_in=DIMS,
+    axis=st.sampled_from(["row", "col"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_matmul_matches_ref(n, d_out, d_in, axis, seed):
+    rng = np.random.default_rng(seed)
+    base, _, packed, scales = mk(rng, d_out, d_in, axis)
+    x = jnp.asarray(rng.normal(size=(n, d_in)), jnp.float32)
+    want = ref.fused_delta_matmul_ref(x, base, packed, scales, axis)
+    got = fused_delta_matmul(x, base, packed, scales, axis=axis)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_fused_matmul_equals_apply_then_gemm():
+    # The fused kernel must equal materialize-then-GEMM numerically.
+    rng = np.random.default_rng(5)
+    base, _, packed, scales = mk(rng, 64, 96, "row")
+    x = jnp.asarray(rng.normal(size=(16, 96)), jnp.float32)
+    w = delta_apply(base, packed, scales, axis="row")
+    want = x @ w.T
+    got = fused_delta_matmul(x, base, packed, scales, axis="row")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# structural perf model sanity
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_footprint_fits_tpu_budget():
+    # Largest patchable shape across presets must fit a 16 MiB VMEM budget.
+    for (d_out, d_in) in [(256, 256), (688, 256), (256, 688), (1280, 320), (3072, 768)]:
+        assert vmem_bytes_per_step(d_out, d_in) < 16 * 1024 * 1024
+
+
+def test_mxu_estimate_in_unit_range():
+    for args in [(64, 256, 256), (64, 688, 256), (8, 64, 64)]:
+        u = mxu_utilization_estimate(*args)
+        assert 0.0 < u <= 1.0

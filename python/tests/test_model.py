@@ -1,0 +1,140 @@
+"""L2 JAX model tests: shapes, causality, training, the logit-matching
+gradient, and the layout contract shared with the Rust side."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, 0)
+
+
+def toks(rng, b, t):
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=(b, t)), jnp.int32)
+
+
+def test_param_count_matches_layout():
+    lay = M.layout_offsets(CFG)
+    assert lay["total"] == CFG.n_params()
+    # Layer offsets strictly increasing and disjoint.
+    prev = lay["embed"]
+    for lo in lay["layers"]:
+        for key in ["attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down"]:
+            assert lo[key] >= prev
+            prev = lo[key]
+
+
+def test_forward_shape_and_finite(params):
+    rng = np.random.default_rng(0)
+    logits = M.jit_forward(CFG)(params, toks(rng, 2, 12))
+    assert logits.shape == (2, 12, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_causality(params):
+    rng = np.random.default_rng(1)
+    a = np.asarray(toks(rng, 1, 10))
+    b = a.copy()
+    b[0, 7:] = (b[0, 7:] + 13) % CFG.vocab
+    fwd = M.jit_forward(CFG)
+    la = np.asarray(fwd(params, jnp.asarray(a)))
+    lb = np.asarray(fwd(params, jnp.asarray(b)))
+    np.testing.assert_allclose(la[0, :7], lb[0, :7], atol=1e-5)
+    assert np.abs(la[0, 7:] - lb[0, 7:]).max() > 1e-4
+
+
+def test_batch_independence(params):
+    rng = np.random.default_rng(2)
+    t1 = toks(rng, 1, 8)
+    t2 = toks(rng, 1, 8)
+    both = jnp.concatenate([t1, t2], axis=0)
+    fwd = M.jit_forward(CFG)
+    la = fwd(params, both)
+    l1 = fwd(params, t1)
+    np.testing.assert_allclose(np.asarray(la[0]), np.asarray(l1[0]), rtol=2e-5, atol=2e-5)
+
+
+def test_train_step_reduces_loss(params):
+    rng = np.random.default_rng(3)
+    tp = toks(rng, 4, 17)
+    p = params
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    step = jnp.int32(0)
+    ts = M.jit_train_step(CFG)
+    losses = []
+    for _ in range(25):
+        p, m, v, step, loss = ts(p, m, v, step, jnp.float32(3e-3), tp)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7
+    assert int(step) == 25
+
+
+def test_train_step_loss_is_lm_loss(params):
+    rng = np.random.default_rng(4)
+    tp = toks(rng, 2, 9)
+    _, _, _, _, loss = M.jit_train_step(CFG)(
+        params, jnp.zeros_like(params), jnp.zeros_like(params), jnp.int32(0), jnp.float32(0.0), tp
+    )
+    direct = M.lm_loss(CFG, params, tp)
+    np.testing.assert_allclose(float(loss), float(direct), rtol=1e-5)
+
+
+def test_logit_match_grad_zero_at_teacher(params):
+    rng = np.random.default_rng(5)
+    t = toks(rng, 1, 8)
+    teacher_logits = M.jit_forward(CFG)(params, t)
+    loss, g = M.jit_logit_match_grad(CFG)(params, t, teacher_logits)
+    assert float(loss) < 1e-10
+    assert float(jnp.max(jnp.abs(g))) < 1e-4
+
+
+def test_logit_match_grad_descends(params):
+    rng = np.random.default_rng(6)
+    t = toks(rng, 2, 10)
+    teacher = M.init_params(CFG, 9)
+    teacher_logits = M.jit_forward(CFG)(teacher, t)
+    lm = M.jit_logit_match_grad(CFG)
+    p = params
+    loss0, g = lm(p, t, teacher_logits)
+    p = p - 0.05 * g
+    loss1, _ = lm(p, t, teacher_logits)
+    assert float(loss1) < float(loss0)
+
+
+def test_rope_preserves_norm():
+    cos, sin = M.rope_tables(CFG, 16)
+    x = jnp.asarray(np.random.default_rng(7).normal(size=(1, 16, 2, CFG.head_dim)), jnp.float32)
+    y = M.apply_rope(x, cos[None, :, None, :], sin[None, :, None, :])
+    nx = np.linalg.norm(np.asarray(x), axis=-1)
+    ny = np.linalg.norm(np.asarray(y), axis=-1)
+    np.testing.assert_allclose(nx, ny, rtol=1e-5)
+
+
+def test_rmsnorm_matches_definition():
+    x = jnp.asarray([[3.0, 4.0]], jnp.float32)
+    w = jnp.ones((2,), jnp.float32)
+    got = np.asarray(M.rmsnorm(x, w))[0]
+    inv = 1.0 / np.sqrt(12.5 + M.RMS_EPS)
+    np.testing.assert_allclose(got, [3 * inv, 4 * inv], rtol=1e-6)
+
+
+def test_presets_match_rust_table():
+    # Config constants shared with rust/src/model/config.rs.
+    want = {
+        "tiny": (256, 64, 2, 2, 128, 64),
+        "llama-mini": (256, 256, 4, 4, 688, 128),
+        "qwen-mini": (256, 320, 5, 5, 1280, 128),
+        "phi-mini": (256, 288, 6, 6, 864, 128),
+        "base-110m": (256, 768, 12, 12, 3072, 256),
+    }
+    for name, (v, d, l, h, f, s) in want.items():
+        c = M.PRESETS[name]
+        assert (c.vocab, c.dim, c.n_layers, c.n_heads, c.ff, c.max_seq) == (v, d, l, h, f, s)

@@ -1,0 +1,45 @@
+//! **A2 — calibration budget**: sweep the number of calibration documents
+//! and training epochs; report held-out layer MSE and wall time. Backs the
+//! paper's choice of 50 samples / 5 epochs and its §4 note that larger
+//! calibration improves robustness at preparation cost.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
+use pawd::util::benchkit::{fmt_dur, Table};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let (base, ft) = bench_common::synth_pair("tiny", 47);
+    let mut t = Table::new(&["calib docs", "fit", "epochs", "mean val MSE", "wall"]);
+    for &n_docs in &[5usize, 10, 25, 50] {
+        let docs = bench_common::calib_docs(n_docs, 48);
+        for (fit, epochs) in [(FitMode::AdamW, 1), (FitMode::AdamW, 5), (FitMode::ClosedForm, 0)] {
+            let mut opts = CompressOptions { fit, ..Default::default() };
+            opts.calib.epochs = epochs.max(1);
+            let t0 = Instant::now();
+            let (_, reports, _) = compress_model("x", &base, &ft, &docs, &opts);
+            let wall = t0.elapsed();
+            let mse = reports
+                .iter()
+                .map(|r| r.candidates.iter().map(|c| c.2).fold(f64::INFINITY, f64::min))
+                .sum::<f64>()
+                / reports.len() as f64;
+            let fit_label = match fit {
+                FitMode::AdamW => "adamw",
+                FitMode::ClosedForm => "closed-form",
+                FitMode::InitOnly => "init",
+            };
+            t.row(&[
+                n_docs.to_string(),
+                fit_label.into(),
+                if fit == FitMode::ClosedForm { "-".into() } else { epochs.to_string() },
+                format!("{mse:.3e}"),
+                fmt_dur(wall.as_secs_f64()),
+            ]);
+        }
+    }
+    t.print("Ablation A2: calibration budget sweep (paper protocol: 50 docs, 5 epochs, AdamW)");
+    Ok(())
+}

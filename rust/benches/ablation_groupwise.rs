@@ -1,0 +1,40 @@
+//! **A3 — blockwise per-group scaling (§5 future work)**: sweep group size
+//! between the paper's Vector (g=1 rows) and BitDelta's Scalar (g=∞),
+//! reporting held-out layer MSE and artifact bytes — the
+//! quality/metadata trade-off curve.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
+use pawd::delta::format::save_delta;
+use pawd::delta::types::Axis;
+use pawd::util::benchkit::{fmt_bytes, Table};
+
+fn main() -> anyhow::Result<()> {
+    let (base, ft) = bench_common::synth_pair("tiny", 53);
+    let docs = bench_common::calib_docs(16, 48);
+    let dir = bench_common::tmp_dir("groupwise");
+    let mut t = Table::new(&["scales", "mean val MSE", "artifact bytes"]);
+    let sweep: Vec<(String, Vec<Axis>)> = vec![
+        ("vector row/col (paper)".into(), vec![Axis::Row, Axis::Col]),
+        ("row (g=1)".into(), vec![Axis::Row]),
+        ("group g=4".into(), vec![Axis::Group(4)]),
+        ("group g=8".into(), vec![Axis::Group(8)]),
+        ("group g=32".into(), vec![Axis::Group(32)]),
+        ("scalar (BitDelta)".into(), vec![Axis::Scalar]),
+    ];
+    for (label, axes) in sweep {
+        let opts = CompressOptions { fit: FitMode::ClosedForm, axes, ..Default::default() };
+        let (model, reports, _) = compress_model("g", &base, &ft, &docs, &opts);
+        let mse = reports
+            .iter()
+            .map(|r| r.candidates.iter().map(|c| c.2).fold(f64::INFINITY, f64::min))
+            .sum::<f64>()
+            / reports.len() as f64;
+        let bytes = save_delta(dir.join(format!("{}.pawd", label.replace([' ', '/', '(', ')', '='], "_"))), &model)?;
+        t.row(&[label, format!("{mse:.3e}"), fmt_bytes(bytes)]);
+    }
+    t.print("Ablation A3: blockwise per-group scales (quality vs metadata)");
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! **A1 — isotropy limitation (§4)**: sweep the anisotropy of the
+//! synthetic delta and measure the vector-vs-scalar validation-MSE gap.
+//! Paper's claim: gains rely on anisotropy; when ΔW is isotropic a single
+//! scalar matches per-axis vectors.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
+use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
+use pawd::model::FlatParams;
+use pawd::util::benchkit::Table;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = pawd::model::ModelConfig::preset("tiny")?;
+    let base = FlatParams::init(&cfg, 41);
+    let docs = bench_common::calib_docs(16, 48);
+    let mut t = Table::new(&["anisotropy", "vector val MSE", "scalar val MSE", "scalar/vector"]);
+    for &aniso in &[0.0f32, 0.25, 0.5, 1.0, 1.5, 2.0] {
+        let ft = synth_finetune(
+            &base,
+            &SynthDeltaSpec { magnitude: 0.03, anisotropy: aniso, axis_bias: 0.7, seed: 5 },
+        );
+        let run = |axes: Vec<pawd::delta::Axis>| {
+            let opts = CompressOptions { fit: FitMode::ClosedForm, axes, ..Default::default() };
+            let (_, reports, _) = compress_model("x", &base, &ft, &docs, &opts);
+            // Mean best val MSE across modules.
+            reports
+                .iter()
+                .map(|r| r.candidates.iter().map(|c| c.2).fold(f64::INFINITY, f64::min))
+                .sum::<f64>()
+                / reports.len() as f64
+        };
+        let v = run(vec![pawd::delta::Axis::Row, pawd::delta::Axis::Col]);
+        let s = run(vec![pawd::delta::Axis::Scalar]);
+        t.row(&[
+            format!("{aniso:.2}"),
+            format!("{v:.3e}"),
+            format!("{s:.3e}"),
+            format!("{:.2}x", s / v),
+        ]);
+    }
+    t.print("Ablation A1: per-axis advantage vs delta anisotropy (expect ratio -> 1 as anisotropy -> 0)");
+    Ok(())
+}

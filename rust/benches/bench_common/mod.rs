@@ -1,0 +1,56 @@
+//! Shared helpers for the bench targets: synthetic model pairs, compressed
+//! variants on disk, and calibration docs — everything deterministic so
+//! bench output is reproducible run-to-run.
+
+use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
+use pawd::delta::types::DeltaModel;
+use pawd::model::config::ModelConfig;
+use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
+use pawd::model::FlatParams;
+use std::path::PathBuf;
+
+pub fn calib_docs(n: usize, len: usize) -> Vec<Vec<u8>> {
+    (0..n)
+        .map(|i| (0..len).map(|t| ((t * 7 + i * 29) % 220 + 10) as u8).collect())
+        .collect()
+}
+
+pub fn probe_docs(n: usize, len: usize) -> Vec<Vec<u8>> {
+    (100..100 + n)
+        .map(|i| (0..len).map(|t| ((t * 7 + i * 29) % 220 + 10) as u8).collect())
+        .collect()
+}
+
+/// Base + synthetic fine-tune for a preset (no training needed; used by
+/// the size/load/axis/kernel benches where the *bytes and structure*
+/// matter, not downstream accuracy).
+pub fn synth_pair(preset: &str, seed: u64) -> (FlatParams, FlatParams) {
+    let cfg = ModelConfig::preset(preset).unwrap();
+    let base = FlatParams::init(&cfg, seed);
+    let ft = synth_finetune(
+        &base,
+        &SynthDeltaSpec { magnitude: 0.02, anisotropy: 1.0, axis_bias: 0.6, seed: seed ^ 0xF7 },
+    );
+    (base, ft)
+}
+
+/// Compress a pair with the vector method (closed-form for speed).
+pub fn compress_vector(base: &FlatParams, ft: &FlatParams, docs: &[Vec<u8>]) -> DeltaModel {
+    let opts = CompressOptions { fit: FitMode::ClosedForm, ..Default::default() };
+    compress_model("bench", base, ft, docs, &opts).0
+}
+
+pub fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("pawd_bench").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

@@ -1,0 +1,74 @@
+//! **K1a — delta-apply hot path**: native apply throughput per weight
+//! shape (row/col/scalar), compared against `memcpy` (the memory-bandwidth
+//! roofline: apply reads base + packed mask and writes Ŵ, so ~2 passes)
+//! and against the Pallas/XLA kernel artifact (validation path).
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use pawd::delta::pack::PackedMask;
+use pawd::delta::types::{Axis, DeltaModule};
+use pawd::model::{ModuleId, ProjKind};
+use pawd::util::benchkit::{fmt_rate, Bench};
+use pawd::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::from_env();
+    let shapes = [(256usize, 256usize), (688, 256), (256, 688), (768, 3072), (3072, 768)];
+    for (d_out, d_in) in shapes {
+        let n = d_out * d_in;
+        let bytes = (n * 4 * 2) as f64; // read base + write out
+        let mut rng = Rng::new(1);
+        let base: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let delta: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        let mask = PackedMask::pack(&delta, d_out, d_in);
+        let mut out = vec![0f32; n];
+
+        // memcpy roofline reference.
+        b.run_items(&format!("memcpy_{d_out}x{d_in}"), bytes, || {
+            out.copy_from_slice(&base);
+            std::hint::black_box(&out);
+        });
+        for axis in [Axis::Row, Axis::Col, Axis::Scalar] {
+            let m = DeltaModule {
+                id: ModuleId { layer: 0, kind: ProjKind::Q },
+                mask: mask.clone(),
+                axis,
+                scales: vec![0.05; axis.n_scales(d_out, d_in)],
+            };
+            b.run_items(&format!("apply_{}_{d_out}x{d_in}", axis.label()), bytes, || {
+                pawd::delta::apply::apply_module_into(&base, &mut out, &m);
+                std::hint::black_box(&out);
+            });
+        }
+    }
+    // Effective bandwidth summary.
+    println!("\nroofline note: apply touches 2 passes of the dense matrix + 1/32 packed mask;");
+    println!("target is the memcpy rate above (same traffic). Gap = compute overhead.");
+
+    // XLA/Pallas kernel path (single shape, includes PJRT transfer cost).
+    if bench_common::have_artifacts() {
+        let h = pawd::runtime::start(&bench_common::artifacts_dir())?;
+        let (d_out, d_in) = (688usize, 256usize);
+        let n = d_out * d_in;
+        let mut rng = Rng::new(2);
+        let base: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let delta: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        let mask = PackedMask::pack(&delta, d_out, d_in);
+        let scales = vec![0.05f32; d_out];
+        // warm the compile cache
+        let _ = pawd::runtime::api::delta_apply_xla(&h, "row", &base, d_out, d_in, &mask.words, &scales)?;
+        b.run_items("apply_xla_pallas_row_688x256 (incl. transfers)", (n * 8) as f64, || {
+            let out = pawd::runtime::api::delta_apply_xla(
+                &h, "row", &base, d_out, d_in, &mask.words, &scales,
+            )
+            .unwrap();
+            std::hint::black_box(&out);
+        });
+        h.shutdown();
+    } else {
+        println!("(skipping XLA kernel path — run `make artifacts`)");
+    }
+    let _ = fmt_rate(0.0);
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! **F2 — Figure 2**: counts of row vs column axis selections per module
+//! sub-type (q/k/v/o/gate/up/down) plus the layer-wise trend, across the
+//! three mini pairs. The synthetic fine-tunes carry the kind-dependent
+//! anisotropy structure the paper observes (q/v/o/down row-leaning,
+//! gate/up col-leaning, k mixed) — the selection machinery must discover
+//! it from activations alone.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use pawd::delta::types::Axis;
+use pawd::model::ProjKind;
+use pawd::util::benchkit::Table;
+use std::collections::BTreeMap;
+
+fn main() -> anyhow::Result<()> {
+    let mut per_kind: BTreeMap<&'static str, (usize, usize)> = BTreeMap::new();
+    let mut per_layer: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
+    for preset in ["llama-mini", "qwen-mini", "phi-mini"] {
+        let (base, ft) = bench_common::synth_pair(preset, 23);
+        let docs = bench_common::calib_docs(8, 48);
+        let model = bench_common::compress_vector(&base, &ft, &docs);
+        for m in &model.modules {
+            let slot = per_kind.entry(m.id.kind.name()).or_insert((0, 0));
+            let lslot = per_layer.entry(m.id.layer).or_insert((0, 0));
+            match m.axis {
+                Axis::Row => {
+                    slot.0 += 1;
+                    lslot.0 += 1;
+                }
+                Axis::Col => {
+                    slot.1 += 1;
+                    lslot.1 += 1;
+                }
+                _ => {}
+            }
+        }
+    }
+    let mut t = Table::new(&["sub_type", "row", "col", "bar (row=#, col=.)"]);
+    for kind in ProjKind::ALL {
+        let (r, c) = per_kind.get(kind.name()).copied().unwrap_or((0, 0));
+        t.row(&[kind.name().into(), r.to_string(), c.to_string(), format!("{}{}", "#".repeat(r), ".".repeat(c))]);
+    }
+    t.print("Figure 2 (reproduction): row vs col delta-quantization per sub_type (3 pairs pooled)");
+
+    let mut t2 = Table::new(&["layer", "row", "col"]);
+    for (layer, (r, c)) in &per_layer {
+        t2.row(&[layer.to_string(), r.to_string(), c.to_string()]);
+    }
+    t2.print("Layer-wise axis trend");
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! **K1b — fused delta-GEMM**: on-the-fly serving mode (§4 future work).
+//! Compares materialize-then-GEMM (native) against the fused Pallas kernel
+//! artifact, and reports the resident-bytes saving that motivates the
+//! fused mode.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use pawd::delta::pack::PackedMask;
+use pawd::delta::types::{Axis, DeltaModule};
+use pawd::model::{ModuleId, ProjKind};
+use pawd::tensor::Tensor2;
+use pawd::util::benchkit::{fmt_bytes, Bench};
+use pawd::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::from_env();
+    let (n, d_out, d_in) = (64usize, 688usize, 256usize);
+    let flops = (2 * n * d_out * d_in) as f64;
+    let mut rng = Rng::new(3);
+    let base: Vec<f32> = (0..d_out * d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let delta: Vec<f32> = (0..d_out * d_in).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+    let mask = PackedMask::pack(&delta, d_out, d_in);
+    let scales: Vec<f32> = (0..d_out).map(|_| rng.uniform_in(0.01, 0.1)).collect();
+    let x: Vec<f32> = (0..n * d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let module = DeltaModule {
+        id: ModuleId { layer: 0, kind: ProjKind::Up },
+        mask: mask.clone(),
+        axis: Axis::Row,
+        scales: scales.clone(),
+    };
+    let xt = Tensor2::from_vec(n, d_in, x.clone());
+
+    // Mode A: apply once + plain GEMM per forward (amortized swap cost).
+    let mut w = vec![0f32; base.len()];
+    pawd::delta::apply::apply_module_into(&base, &mut w, &module);
+    let wt = Tensor2::from_vec(d_out, d_in, w);
+    b.run_items(&format!("gemm_native_{n}x{d_out}x{d_in} (materialized)"), flops, || {
+        let y = xt.matmul_bt(&wt);
+        std::hint::black_box(&y);
+    });
+    b.run_items("apply+gemm_native (swap every forward)", flops, || {
+        let mut w = vec![0f32; base.len()];
+        pawd::delta::apply::apply_module_into(&base, &mut w, &module);
+        let wt = Tensor2::from_vec(d_out, d_in, w);
+        let y = xt.matmul_bt(&wt);
+        std::hint::black_box(&y);
+    });
+
+    // Mode B: fused Pallas kernel through PJRT.
+    if bench_common::have_artifacts() {
+        let h = pawd::runtime::start(&bench_common::artifacts_dir())?;
+        let _ = pawd::runtime::api::fused_delta_matmul_xla(
+            &h, "row", &x, n, &base, d_out, d_in, &mask.words, &scales,
+        )?; // warm compile
+        b.run_items("fused_delta_gemm_xla (incl. transfers)", flops, || {
+            let y = pawd::runtime::api::fused_delta_matmul_xla(
+                &h, "row", &x, n, &base, d_out, d_in, &mask.words, &scales,
+            )
+            .unwrap();
+            std::hint::black_box(&y);
+        });
+        h.shutdown();
+    } else {
+        println!("(skipping fused XLA path — run `make artifacts`)");
+    }
+
+    let dense = (d_out * d_in * 4) as u64;
+    let packed = mask.n_bytes() + (scales.len() * 2) as u64;
+    println!(
+        "\nresident bytes per variant for this module: dense {} vs packed {} ({:.1}x)",
+        fmt_bytes(dense),
+        fmt_bytes(packed),
+        dense as f64 / packed as f64
+    );
+    println!("(interpret-mode Pallas on CPU measures structure, not TPU wallclock — see DESIGN.md)");
+    Ok(())
+}

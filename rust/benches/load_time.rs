@@ -1,0 +1,62 @@
+//! **LT — §3.2 load-time**: cold-start latency of the delta hot-swap path
+//! (read PAWD + one fused apply per module onto the resident base) vs
+//! loading the full FP16 checkpoint. 10 runs each, as in the paper.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use pawd::coordinator::VariantStore;
+use pawd::delta::format::save_delta;
+use pawd::model::checkpoint::save_fp16;
+use pawd::util::benchkit::{fmt_bytes, fmt_dur, Table};
+use pawd::util::stats::Summary;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let runs = 10;
+    let mut t = Table::new(&["Model", "Path", "Bytes read", "Load (mean of 10)", "p50", "Speedup"]);
+    for preset in ["llama-mini", "qwen-mini", "phi-mini"] {
+        let (base, ft) = bench_common::synth_pair(preset, 11);
+        let docs = bench_common::calib_docs(6, 48);
+        let dir = bench_common::tmp_dir(&format!("lt_{preset}"));
+        let delta = bench_common::compress_vector(&base, &ft, &docs);
+        save_delta(dir.join("variant.pawd"), &delta)?;
+        save_fp16(dir.join("variant_full.fp16"), &ft)?;
+        // Rename so the store sees two distinct variants.
+        std::fs::rename(dir.join("variant_full.fp16"), dir.join("full.fp16"))?;
+        let store = VariantStore::new(Arc::new(base), &dir);
+
+        let mut time_path = |name: &str| -> anyhow::Result<(Vec<f64>, u64)> {
+            let mut times = Vec::with_capacity(runs);
+            let mut bytes = 0;
+            for _ in 0..runs {
+                let v = store.load(name)?;
+                times.push(v.load_time.as_secs_f64());
+                bytes = v.bytes_read;
+            }
+            Ok((times, bytes))
+        };
+        let (d_times, d_bytes) = time_path("variant")?;
+        let (f_times, f_bytes) = time_path("full")?;
+        let ds = Summary::of(&d_times);
+        let fs = Summary::of(&f_times);
+        t.row(&[
+            preset.into(),
+            "delta hot-swap".into(),
+            fmt_bytes(d_bytes),
+            fmt_dur(ds.mean),
+            fmt_dur(ds.p50),
+            format!("{:.2}x faster", fs.mean / ds.mean),
+        ]);
+        t.row(&[
+            "".into(),
+            "full FP16 load".into(),
+            fmt_bytes(f_bytes),
+            fmt_dur(fs.mean),
+            fmt_dur(fs.p50),
+            "1.00x".into(),
+        ]);
+    }
+    t.print("Load time (reproduction of §3.2: paper reports 0.80s delta vs 2.08s full at 8B)");
+    Ok(())
+}

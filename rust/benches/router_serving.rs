@@ -1,0 +1,97 @@
+//! **S1 — serving**: coordinator throughput/latency as the number of
+//! variants and the cache budget vary (the paper's multi-tenant
+//! motivation: many fine-tunes of one base, hot-swapped on demand).
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use pawd::coordinator::{Engine, Payload, Server, ServerConfig, VariantStore};
+use pawd::delta::format::save_delta;
+use pawd::util::benchkit::Table;
+use pawd::util::rng::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let (base, _) = bench_common::synth_pair("tiny", 31);
+    let base = Arc::new(base);
+    let docs = bench_common::calib_docs(4, 40);
+    let n_requests: usize = if std::env::var("PAWD_BENCH_FAST").is_ok() { 120 } else { 320 };
+
+    let mut t = Table::new(&[
+        "variants", "cache", "req/s", "p50 total", "p99 total", "mean batch", "cold starts", "evictions",
+    ]);
+    for &n_variants in &[2usize, 6, 12] {
+        // Build fleet.
+        let dir = bench_common::tmp_dir(&format!("serve_{n_variants}"));
+        for k in 0..n_variants {
+            let ft = pawd::model::synth::synth_finetune(
+                &base,
+                &pawd::model::synth::SynthDeltaSpec { seed: 70 + k as u64, ..Default::default() },
+            );
+            let (delta, _, _) = pawd::delta::compress::compress_model(
+                &format!("v{k}"),
+                &base,
+                &ft,
+                &docs,
+                &pawd::delta::compress::CompressOptions {
+                    fit: pawd::delta::compress::FitMode::ClosedForm,
+                    ..Default::default()
+                },
+            );
+            save_delta(dir.join(format!("v{k}.pawd")), &delta)?;
+        }
+        let one = (base.data.len() * 4) as u64;
+        for (cache_label, budget) in
+            [("all", one * n_variants as u64 + 1024), ("half", one * (n_variants as u64 / 2).max(1) + 1024)]
+        {
+            let store = VariantStore::new(base.clone(), &dir);
+            let server = Server::start(
+                store,
+                Engine::Native,
+                ServerConfig {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(2),
+                    n_workers: 2,
+                    cache_budget_bytes: budget,
+                },
+            );
+            let t0 = Instant::now();
+            std::thread::scope(|s| {
+                for tid in 0..4u64 {
+                    let client = server.client();
+                    s.spawn(move || {
+                        let mut rng = Rng::new(tid);
+                        for i in 0..n_requests / 4 {
+                            let v = if rng.chance(0.5) { 0 } else { rng.below(n_variants) };
+                            let rx = client.submit(
+                                &format!("v{v}"),
+                                Payload::Score {
+                                    prompt: format!("Q: item {i}? A: "),
+                                    choices: vec!["yes".into(), "no".into()],
+                                },
+                            );
+                            let _ = rx.recv();
+                        }
+                    });
+                }
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let snap = server.metrics.snapshot();
+            let cache = server.cache.stats();
+            t.row(&[
+                n_variants.to_string(),
+                cache_label.into(),
+                format!("{:.0}", snap.served as f64 / wall),
+                format!("{}µs", snap.total_p50_us),
+                format!("{}µs", snap.total_p99_us),
+                format!("{:.2}", snap.mean_batch_size),
+                snap.cold_starts.to_string(),
+                cache.evictions.to_string(),
+            ]);
+            server.shutdown();
+        }
+    }
+    t.print("Serving: throughput/latency vs fleet size and cache budget (native engine, tiny)");
+    Ok(())
+}

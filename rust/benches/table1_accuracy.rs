@@ -1,0 +1,98 @@
+//! **T1 — Table 1**: zero-shot accuracy for {Baseline, BitDelta (scalar),
+//! Vector (row/col)} across model pairs and the five task suites, via the
+//! full train→finetune→compress→e2e→eval pipeline.
+//!
+//! Defaults run the `tiny` pair (minutes). Set `PAWD_PAIRS=llama-mini` (or
+//! a comma list incl. qwen-mini, phi-mini) and/or `PAWD_FULL=1` for the
+//! paper-protocol calibration budget (50 + 150 samples, 5 epochs).
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use pawd::baselines;
+use pawd::data::tasks::TaskFamily;
+use pawd::delta::compress::CompressOptions;
+use pawd::delta::compress::FitMode;
+use pawd::eval::fidelity::fidelity;
+use pawd::model::Transformer;
+use pawd::pipeline::{run_pair, PairConfig};
+use pawd::util::benchkit::{fmt_bytes, Table};
+
+fn main() -> anyhow::Result<()> {
+    if !bench_common::have_artifacts() {
+        eprintln!("table1_accuracy: artifacts missing — run `make artifacts`");
+        return Ok(());
+    }
+    let pairs = std::env::var("PAWD_PAIRS").unwrap_or_else(|_| "tiny".to_string());
+    let full = std::env::var("PAWD_FULL").is_ok();
+    let h = pawd::runtime::start(&bench_common::artifacts_dir())?;
+
+    for pair in pairs.split(',').filter(|s| !s.is_empty()) {
+        let mut pc = if full { PairConfig::full(pair) } else { PairConfig::quick(pair) };
+        if pair == "tiny" && !full {
+            pc.base_steps = 800;
+            pc.finetune_steps = 400;
+            pc.base_lr = 3e-3;
+            pc.finetune_lr = 1e-3;
+            pc.eval_items_per_family = 30;
+        }
+        let methods = vec![
+            (
+                "BitDelta (scalar)",
+                CompressOptions { fit: FitMode::AdamW, ..baselines::bitdelta_options() },
+                false,
+            ),
+            ("Vector (row/col)", baselines::vector_options(), true),
+        ];
+        let out = bench_common::tmp_dir(&format!("table1_{pair}"));
+        let res = run_pair(&h, &pc, &methods, &out, |m| eprintln!("{m}"))?;
+
+        let mut t = Table::new(&[
+            "Method", "ARC-C*", "ARC-E*", "HellaSwag*", "PIQA*", "Winogrande*", "Avg", "KL(teach)", "Agree%",
+        ]);
+        let tf = Transformer::new(&res.config);
+        let probes: Vec<Vec<u8>> = bench_common::probe_docs(4, res.config.max_seq.min(96));
+        let mut add = |suite: &pawd::eval::harness::SuiteResult, params: Option<&pawd::model::FlatParams>| {
+            let mut row = vec![suite.label.clone()];
+            for fam in TaskFamily::ALL {
+                row.push(format!("{:.2}", suite.pct(fam)));
+            }
+            row.push(format!("{:.2}", suite.average() * 100.0));
+            match params {
+                Some(p) => {
+                    let f = fidelity(&tf, &res.teacher, p, &probes);
+                    row.push(format!("{:.4}", f.kl));
+                    row.push(format!("{:.1}", f.agreement * 100.0));
+                }
+                None => {
+                    row.push("-".into());
+                    row.push("-".into());
+                }
+            }
+            t.row(&row);
+        };
+        add(&res.base_suite, Some(&res.base));
+        add(&res.baseline_suite, None);
+        for m in &res.methods {
+            let student = m
+                .delta
+                .as_ref()
+                .map(|d| pawd::delta::apply::materialize(&res.base, &d.modules));
+            add(&m.suite, student.as_ref());
+        }
+        t.print(&format!(
+            "Table 1 (reproduction): zero-shot accuracy (%) — {} pair, calib {}+{} docs",
+            res.config.name, pc.calib_layer_docs, pc.calib_e2e_docs
+        ));
+        println!(
+            "fp16 teacher checkpoint: {}; loss base {:.3}->{:.3}, ft {:.3}->{:.3}",
+            fmt_bytes(res.fp16_bytes),
+            res.base_losses.first().unwrap(),
+            res.base_losses.last().unwrap(),
+            res.finetune_losses.first().unwrap(),
+            res.finetune_losses.last().unwrap()
+        );
+    }
+    h.shutdown();
+    Ok(())
+}

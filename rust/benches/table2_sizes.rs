@@ -1,0 +1,54 @@
+//! **T2 — Table 2**: checkpoint sizes — PAWD delta artifacts vs the full
+//! FP16 checkpoint, for all three mini model pairs (structure-only: the
+//! bytes depend on shapes, not on training).
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use pawd::delta::format::save_delta;
+use pawd::model::checkpoint::save_fp16;
+use pawd::util::benchkit::{fmt_bytes, Table};
+
+fn main() -> anyhow::Result<()> {
+    let mut t = Table::new(&["Model", "Artifact", "Size", "vs. FP16 weights"]);
+    for preset in ["llama-mini", "qwen-mini", "phi-mini"] {
+        let (base, ft) = bench_common::synth_pair(preset, 7);
+        let docs = bench_common::calib_docs(6, 48);
+        let dir = bench_common::tmp_dir(&format!("t2_{preset}"));
+        let fp16 = save_fp16(dir.join("teacher.fp16"), &ft)?;
+
+        // Vector (row/col) artifact.
+        let vec_model = bench_common::compress_vector(&base, &ft, &docs);
+        let vec_bytes = save_delta(dir.join("vector.pawd"), &vec_model)?;
+        // BitDelta (scalar) artifact.
+        let opts = pawd::delta::compress::CompressOptions {
+            fit: pawd::delta::compress::FitMode::ClosedForm,
+            ..pawd::baselines::bitdelta_options()
+        };
+        let (sca_model, _, _) =
+            pawd::delta::compress::compress_model("s", &base, &ft, &docs, &opts);
+        let sca_bytes = save_delta(dir.join("scalar.pawd"), &sca_model)?;
+
+        t.row(&[preset.into(), "FP16 checkpoint".into(), fmt_bytes(fp16), "1.00x".into()]);
+        t.row(&[
+            "".into(),
+            "BitDelta (scalar)".into(),
+            fmt_bytes(sca_bytes),
+            format!("≈ {:.2}x smaller", fp16 as f64 / sca_bytes as f64),
+        ]);
+        t.row(&[
+            "".into(),
+            "Vector (row/col)".into(),
+            fmt_bytes(vec_bytes),
+            format!("≈ {:.2}x smaller", fp16 as f64 / vec_bytes as f64),
+        ]);
+    }
+    t.print("Table 2 (reproduction): checkpoint sizes");
+    println!(
+        "note: deltas cover the 7·L projection matrices (attention+MLP), as in the paper;\n\
+         embeddings/norms ride with the shared base. The paper's 5-8x ratios arise at\n\
+         8-14B scale where projections dominate the parameter count; at mini scale the\n\
+         embedding tables weigh relatively more, so ratios here are structural lower bounds."
+    );
+    Ok(())
+}

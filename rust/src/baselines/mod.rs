@@ -1,0 +1,62 @@
+//! Baselines and extensions the paper compares against (or proposes as
+//! future work):
+//!
+//! * **BitDelta (scalar)** — Liu et al. 2024: 1-bit sign mask + a single
+//!   learned scalar per matrix, trained with the same pipeline but one
+//!   epoch (paper §3.1). Implemented as a [`CompressOptions`] preset over
+//!   the shared machinery so the comparison isolates exactly the scale
+//!   parameterization.
+//! * **Groupwise** — blockwise per-group scales over consecutive output
+//!   rows (§5 future work); interpolates between Row (g=1) and Scalar
+//!   (g=d_out).
+//! * **Magnitude-only** — `mean(|ΔW|)` init without calibration (isolates
+//!   the value of activation-aware fitting).
+//! * **FP16 full checkpoint** — the uncompressed baseline for storage and
+//!   load-time comparisons lives in `model::checkpoint`.
+
+use crate::delta::compress::{CompressOptions, FitMode};
+use crate::delta::types::Axis;
+
+/// BitDelta (scalar) protocol: single scalar per matrix, one training epoch.
+pub fn bitdelta_options() -> CompressOptions {
+    CompressOptions::bitdelta()
+}
+
+/// The paper's method: per-row/col vectors, 5 epochs AdamW.
+pub fn vector_options() -> CompressOptions {
+    CompressOptions::default()
+}
+
+/// Groupwise extension with a fixed group size.
+pub fn groupwise_options(group: u32) -> CompressOptions {
+    CompressOptions { axes: vec![Axis::Group(group)], ..CompressOptions::default() }
+}
+
+/// Magnitude-only ablation: no calibration, row axis.
+pub fn magnitude_only_options() -> CompressOptions {
+    CompressOptions { fit: FitMode::InitOnly, ..CompressOptions::default() }
+}
+
+/// Closed-form variant of the paper's method (our extension).
+pub fn vector_closed_form_options() -> CompressOptions {
+    CompressOptions { fit: FitMode::ClosedForm, ..CompressOptions::default() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_have_expected_protocols() {
+        let b = bitdelta_options();
+        assert_eq!(b.axes, vec![Axis::Scalar]);
+        assert_eq!(b.calib.epochs, 1);
+        let v = vector_options();
+        assert_eq!(v.axes, vec![Axis::Row, Axis::Col]);
+        assert_eq!(v.calib.epochs, 5);
+        assert_eq!(v.calib.lr, 1e-4);
+        let g = groupwise_options(8);
+        assert_eq!(g.axes, vec![Axis::Group(8)]);
+        assert_eq!(magnitude_only_options().fit, FitMode::InitOnly);
+    }
+}

@@ -1,0 +1,238 @@
+//! LRU cache of materialized variants under a byte budget.
+//!
+//! Serving many fine-tuned variants of one base means most variants are
+//! cold most of the time; the cache keeps the hot set resident and charges
+//! cold loads to the hot-swap loader (whose latency the paper's §3.2
+//! load-time experiment measures).
+
+use super::store::{LoadedVariant, VariantStore};
+use crate::model::FlatParams;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Cold-start (materialization) times observed on misses.
+    pub cold_start: Vec<Duration>,
+}
+
+struct Entry {
+    params: Arc<FlatParams>,
+    bytes: u64,
+    /// Monotone counter for LRU ordering.
+    last_used: u64,
+}
+
+struct Inner {
+    entries: HashMap<String, Entry>,
+    /// Variants currently being materialized by some thread (single-flight
+    /// guard: concurrent requests for the same cold variant wait instead of
+    /// duplicating the load).
+    loading: std::collections::HashSet<String>,
+    clock: u64,
+    used_bytes: u64,
+    stats: CacheStats,
+}
+
+/// Thread-safe LRU variant cache with single-flight cold loads.
+pub struct VariantCache {
+    store: VariantStore,
+    budget_bytes: u64,
+    inner: Mutex<Inner>,
+    loaded_cv: std::sync::Condvar,
+}
+
+impl VariantCache {
+    pub fn new(store: VariantStore, budget_bytes: u64) -> VariantCache {
+        VariantCache {
+            store,
+            budget_bytes,
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                loading: std::collections::HashSet::new(),
+                clock: 0,
+                used_bytes: 0,
+                stats: CacheStats::default(),
+            }),
+            loaded_cv: std::sync::Condvar::new(),
+        }
+    }
+
+    pub fn base(&self) -> Arc<FlatParams> {
+        self.store.base.clone()
+    }
+
+    fn variant_bytes(params: &FlatParams) -> u64 {
+        (params.data.len() * 4) as u64
+    }
+
+    /// Fetch a variant, materializing on miss. Returns the params and the
+    /// cold-start duration if this call performed the load.
+    pub fn get(&self, name: &str) -> Result<(Arc<FlatParams>, Option<Duration>)> {
+        // Fast path under the lock; on a cold miss, claim the single-flight
+        // slot (or wait for whoever holds it).
+        {
+            let mut inner = self.inner.lock().unwrap();
+            loop {
+                inner.clock += 1;
+                let clock = inner.clock;
+                let hit = if let Some(e) = inner.entries.get_mut(name) {
+                    e.last_used = clock;
+                    Some(e.params.clone())
+                } else {
+                    None
+                };
+                if let Some(params) = hit {
+                    inner.stats.hits += 1;
+                    return Ok((params, None));
+                }
+                if inner.loading.insert(name.to_string()) {
+                    inner.stats.misses += 1;
+                    break; // we own the load
+                }
+                // Someone else is loading this variant: wait, then re-check.
+                inner = self.loaded_cv.wait(inner).unwrap();
+            }
+        }
+        // Load outside the lock (the expensive part). Ensure the loading
+        // claim is released even on error.
+        let loaded: Result<LoadedVariant> = self.store.load(name);
+        let loaded: LoadedVariant = match loaded {
+            Ok(l) => l,
+            Err(e) => {
+                let mut inner = self.inner.lock().unwrap();
+                inner.loading.remove(name);
+                drop(inner);
+                self.loaded_cv.notify_all();
+                return Err(e);
+            }
+        };
+        let bytes = Self::variant_bytes(&loaded.params);
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        inner.stats.cold_start.push(loaded.load_time);
+        // Evict LRU until the new entry fits.
+        while inner.used_bytes + bytes > self.budget_bytes && !inner.entries.is_empty() {
+            let lru = inner
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .unwrap();
+            if let Some(e) = inner.entries.remove(&lru) {
+                inner.used_bytes -= e.bytes;
+                inner.stats.evictions += 1;
+            }
+        }
+        inner.used_bytes += bytes;
+        inner.entries.insert(
+            name.to_string(),
+            Entry { params: loaded.params.clone(), bytes, last_used: clock },
+        );
+        inner.loading.remove(name);
+        drop(inner);
+        self.loaded_cv.notify_all();
+        Ok((loaded.params, Some(loaded.load_time)))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats.clone()
+    }
+
+    pub fn resident(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        let mut v: Vec<_> = inner.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().used_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::compress::{compress_model, CompressOptions, FitMode};
+    use crate::delta::format::save_delta;
+    use crate::model::config::ModelConfig;
+    use crate::model::synth::{synth_finetune, SynthDeltaSpec};
+    use std::path::Path;
+
+    fn setup(dir: &Path, n_variants: usize) -> VariantStore {
+        let _ = std::fs::remove_dir_all(dir);
+        std::fs::create_dir_all(dir).unwrap();
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = FlatParams::init(&cfg, 1);
+        let docs: Vec<Vec<u8>> = (0..2).map(|i| vec![(i + 9) as u8; 20]).collect();
+        let opts = CompressOptions { fit: FitMode::ClosedForm, ..Default::default() };
+        for k in 0..n_variants {
+            let ft = synth_finetune(
+                &base,
+                &SynthDeltaSpec { seed: 100 + k as u64, ..Default::default() },
+            );
+            let (delta, _, _) = compress_model(&format!("v{k}"), &base, &ft, &docs, &opts);
+            save_delta(dir.join(format!("v{k}.pawd")), &delta).unwrap();
+        }
+        VariantStore::new(Arc::new(base), dir)
+    }
+
+    #[test]
+    fn hit_after_miss() {
+        let dir = std::env::temp_dir().join("pawd_test_cache1");
+        let store = setup(&dir, 2);
+        let cache = VariantCache::new(store, u64::MAX);
+        let (_, cold) = cache.get("v0").unwrap();
+        assert!(cold.is_some());
+        let (_, cold2) = cache.get("v0").unwrap();
+        assert!(cold2.is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 2 - 1));
+    }
+
+    #[test]
+    fn budget_evicts_lru() {
+        let dir = std::env::temp_dir().join("pawd_test_cache2");
+        let store = setup(&dir, 3);
+        let one = (ModelConfig::preset("tiny").unwrap().n_params() * 4) as u64;
+        let cache = VariantCache::new(store, one * 2 + 1024); // fits 2 variants
+        cache.get("v0").unwrap();
+        cache.get("v1").unwrap();
+        cache.get("v0").unwrap(); // refresh v0 -> v1 becomes LRU
+        cache.get("v2").unwrap(); // must evict v1
+        let resident = cache.resident();
+        assert!(resident.contains(&"v0".to_string()));
+        assert!(resident.contains(&"v2".to_string()));
+        assert!(!resident.contains(&"v1".to_string()));
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.used_bytes() <= one * 2 + 1024);
+    }
+
+    #[test]
+    fn concurrent_gets_are_consistent() {
+        let dir = std::env::temp_dir().join("pawd_test_cache3");
+        let store = setup(&dir, 2);
+        let cache = std::sync::Arc::new(VariantCache::new(store, u64::MAX));
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let c = cache.clone();
+                s.spawn(move || {
+                    for i in 0..20 {
+                        let name = if (t + i) % 2 == 0 { "v0" } else { "v1" };
+                        let (p, _) = c.get(name).unwrap();
+                        assert!(!p.data.is_empty());
+                    }
+                });
+            }
+        });
+        let s = cache.stats();
+        assert_eq!(s.hits + s.misses, 8 * 20);
+    }
+}

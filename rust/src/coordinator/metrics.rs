@@ -1,0 +1,131 @@
+//! Serving metrics: latency histograms per stage, throughput counters,
+//! cold-start accounting. Shared across dispatcher/workers via a mutex
+//! (recording is a few hundred ns; the engine dominates by orders of
+//! magnitude).
+
+use crate::util::stats::LatencyHistogram;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+#[derive(Default)]
+struct Inner {
+    queue: LatencyHistogram,
+    compute: LatencyHistogram,
+    total: LatencyHistogram,
+    cold_start: LatencyHistogram,
+    served: u64,
+    errors: u64,
+    batches: u64,
+    batch_size_sum: u64,
+    per_variant: BTreeMap<String, u64>,
+    started: Option<Instant>,
+}
+
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// Read-only snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub served: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub throughput_rps: f64,
+    pub queue_p50_us: u64,
+    pub queue_p99_us: u64,
+    pub compute_p50_us: u64,
+    pub compute_p99_us: u64,
+    pub total_p50_us: u64,
+    pub total_p99_us: u64,
+    pub cold_starts: u64,
+    pub cold_p50_us: u64,
+    pub per_variant: BTreeMap<String, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        let m = Metrics::default();
+        m.inner.lock().unwrap().started = Some(Instant::now());
+        m
+    }
+
+    pub fn record_request(
+        &self,
+        variant: &str,
+        queue: Duration,
+        compute: Duration,
+        total: Duration,
+        error: bool,
+    ) {
+        let mut i = self.inner.lock().unwrap();
+        i.queue.record(queue);
+        i.compute.record(compute);
+        i.total.record(total);
+        i.served += 1;
+        if error {
+            i.errors += 1;
+        }
+        *i.per_variant.entry(variant.to_string()).or_insert(0) += 1;
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        let mut i = self.inner.lock().unwrap();
+        i.batches += 1;
+        i.batch_size_sum += size as u64;
+    }
+
+    pub fn record_cold_start(&self, d: Duration) {
+        self.inner.lock().unwrap().cold_start.record(d);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let i = self.inner.lock().unwrap();
+        let elapsed = i.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        MetricsSnapshot {
+            served: i.served,
+            errors: i.errors,
+            batches: i.batches,
+            mean_batch_size: if i.batches > 0 {
+                i.batch_size_sum as f64 / i.batches as f64
+            } else {
+                0.0
+            },
+            throughput_rps: if elapsed > 0.0 { i.served as f64 / elapsed } else { 0.0 },
+            queue_p50_us: i.queue.quantile_us(0.5),
+            queue_p99_us: i.queue.quantile_us(0.99),
+            compute_p50_us: i.compute.quantile_us(0.5),
+            compute_p99_us: i.compute.quantile_us(0.99),
+            total_p50_us: i.total.quantile_us(0.5),
+            total_p99_us: i.total.quantile_us(0.99),
+            cold_starts: i.cold_start.count(),
+            cold_p50_us: i.cold_start.quantile_us(0.5),
+            per_variant: i.per_variant.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::new();
+        m.record_request("a", Duration::from_micros(10), Duration::from_micros(100), Duration::from_micros(120), false);
+        m.record_request("b", Duration::from_micros(20), Duration::from_micros(200), Duration::from_micros(230), true);
+        m.record_batch(2);
+        m.record_cold_start(Duration::from_millis(5));
+        let s = m.snapshot();
+        assert_eq!(s.served, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.mean_batch_size, 2.0);
+        assert_eq!(s.cold_starts, 1);
+        assert_eq!(s.per_variant["a"], 1);
+        assert!(s.total_p99_us >= s.total_p50_us);
+    }
+}

@@ -1,0 +1,22 @@
+//! L3 serving coordinator — the systems side of the paper: serve many
+//! fine-tuned variants of one shared base model, with compressed deltas
+//! hot-swapped on cold start.
+//!
+//! * [`request`] — request/response types with per-stage timing.
+//! * [`store`] — on-disk variant registry + the single-read/single-apply
+//!   hot-swap loader (delta path) and FP16 full-checkpoint baseline.
+//! * [`cache`] — LRU cache of materialized variants under a byte budget.
+//! * [`server`] — dispatcher (per-variant queues, size/deadline batching)
+//!   and worker engines (native transformer or the PJRT runtime).
+//! * [`metrics`] — latency histograms, throughput, cold-start accounting.
+
+pub mod cache;
+pub mod metrics;
+pub mod request;
+pub mod server;
+pub mod store;
+
+pub use cache::VariantCache;
+pub use request::{Payload, RespBody, Response};
+pub use server::{Client, Engine, Server, ServerConfig};
+pub use store::VariantStore;

@@ -1,0 +1,71 @@
+//! Request/response types for the multi-variant serving coordinator.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// What a client asks of a variant.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Rank `choices` as completions of `prompt` by log-likelihood
+    /// (the zero-shot MC scoring primitive).
+    Score { prompt: String, choices: Vec<String> },
+    /// Per-token cross entropy of `text` (perplexity probes, health checks).
+    Perplexity { text: String },
+}
+
+#[derive(Clone, Debug)]
+pub enum RespBody {
+    Score { choice: usize, scores: Vec<f64> },
+    Perplexity { nats_per_token: f64 },
+}
+
+/// Timing breakdown a response carries back (drives the latency
+/// histograms and the cold-start experiments).
+#[derive(Clone, Debug, Default)]
+pub struct Timing {
+    /// Time spent queued before batching.
+    pub queue: Duration,
+    /// Variant materialization time, if this request triggered a cold load.
+    pub cold_start: Option<Duration>,
+    /// Forward/scoring compute time for the batch this request rode in.
+    pub compute: Duration,
+    /// Total submit→response latency.
+    pub total: Duration,
+}
+
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub variant: String,
+    pub payload: Payload,
+    pub resp: mpsc::Sender<Response>,
+    pub submitted: Instant,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub variant: String,
+    pub result: Result<RespBody, String>,
+    pub timing: Timing,
+}
+
+impl Request {
+    pub fn new(
+        id: u64,
+        variant: &str,
+        payload: Payload,
+    ) -> (Request, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                id,
+                variant: variant.to_string(),
+                payload,
+                resp: tx,
+                submitted: Instant::now(),
+            },
+            rx,
+        )
+    }
+}

@@ -1,0 +1,403 @@
+//! The serving coordinator: ingress → per-variant queues → dynamic batcher
+//! → worker engines over the LRU variant cache.
+//!
+//! Thread topology (no async runtime available offline; this is plain
+//! threads + channels, which for a CPU-bound engine is also the faster
+//! choice):
+//!
+//! ```text
+//! clients --mpsc--> dispatcher ----work queue----> worker 0..N-1
+//!                    (per-variant queues,           (variant cache get,
+//!                     size/deadline batching)        score batch, reply)
+//! ```
+
+use super::cache::VariantCache;
+use super::metrics::Metrics;
+use super::request::{Payload, Request, RespBody, Response, Timing};
+use super::store::VariantStore;
+use crate::data::corpus::encode;
+use crate::model::{FlatParams, Transformer};
+use crate::runtime::RuntimeHandle;
+use crate::tensor::ops::log_softmax_into;
+use crate::util::par;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which engine executes forwards.
+#[derive(Clone)]
+pub enum Engine {
+    /// Native Rust transformer (always available).
+    Native,
+    /// AOT artifacts through the PJRT runtime thread; `config` names the
+    /// manifest config whose buckets to use.
+    Xla { handle: RuntimeHandle, config: String },
+}
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub n_workers: usize,
+    pub cache_budget_bytes: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(4),
+            n_workers: 2,
+            cache_budget_bytes: 1 << 30,
+        }
+    }
+}
+
+struct Batch {
+    variant: String,
+    requests: Vec<Request>,
+}
+
+/// Ingress message: a request or an explicit shutdown signal (needed
+/// because live `Client` clones keep the channel open).
+enum Ingress {
+    Req(Request),
+    Shutdown,
+}
+
+pub struct Server {
+    ingress: mpsc::Sender<Ingress>,
+    next_id: Arc<AtomicU64>,
+    pub metrics: Arc<Metrics>,
+    pub cache: Arc<VariantCache>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Cheap cloneable client handle.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::Sender<Ingress>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Client {
+    /// Submit without blocking; returns the response receiver.
+    pub fn submit(&self, variant: &str, payload: Payload) -> mpsc::Receiver<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (req, rx) = Request::new(id, variant, payload);
+        // If the server is gone the receiver errors on recv — fine.
+        let _ = self.tx.send(Ingress::Req(req));
+        rx
+    }
+
+    /// Blocking convenience: score choices on a variant.
+    pub fn score(&self, variant: &str, prompt: &str, choices: &[String]) -> Response {
+        let rx = self.submit(
+            variant,
+            Payload::Score { prompt: prompt.to_string(), choices: choices.to_vec() },
+        );
+        rx.recv().unwrap_or(Response {
+            id: 0,
+            variant: variant.into(),
+            result: Err("server terminated".into()),
+            timing: Timing::default(),
+        })
+    }
+}
+
+impl Server {
+    pub fn start(store: VariantStore, engine: Engine, cfg: ServerConfig) -> Server {
+        let metrics = Arc::new(Metrics::new());
+        let cache = Arc::new(VariantCache::new(store, cfg.cache_budget_bytes));
+        let (ingress_tx, ingress_rx) = mpsc::channel::<Ingress>();
+        let (work_tx, work_rx) = mpsc::channel::<Batch>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        let mut workers = Vec::new();
+        for wid in 0..cfg.n_workers.max(1) {
+            let work_rx = work_rx.clone();
+            let cache = cache.clone();
+            let metrics = metrics.clone();
+            let engine = engine.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("pawd-worker-{wid}"))
+                    .spawn(move || worker_loop(work_rx, cache, metrics, engine))
+                    .expect("spawn worker"),
+            );
+        }
+        let dcfg = cfg.clone();
+        let dmetrics = metrics.clone();
+        let dispatcher = std::thread::Builder::new()
+            .name("pawd-dispatcher".into())
+            .spawn(move || dispatcher_loop(ingress_rx, work_tx, dcfg, dmetrics))
+            .expect("spawn dispatcher");
+
+        Server {
+            ingress: ingress_tx,
+            next_id: Arc::new(AtomicU64::new(1)),
+            metrics,
+            cache,
+            dispatcher: Some(dispatcher),
+            workers,
+        }
+    }
+
+    pub fn client(&self) -> Client {
+        Client { tx: self.ingress.clone(), next_id: self.next_id.clone() }
+    }
+
+    /// Graceful shutdown: signal the dispatcher (live Client clones keep
+    /// the channel open, so dropping our sender is not enough), drain,
+    /// join threads.
+    pub fn shutdown(mut self) {
+        let _ = self.ingress.send(Ingress::Shutdown);
+        drop(self.ingress);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn dispatcher_loop(
+    ingress: mpsc::Receiver<Ingress>,
+    work: mpsc::Sender<Batch>,
+    cfg: ServerConfig,
+    metrics: Arc<Metrics>,
+) {
+    // Per-variant FIFO queues with the arrival time of their oldest entry.
+    let mut queues: HashMap<String, VecDeque<Request>> = HashMap::new();
+    let mut open = true;
+    while open || queues.values().any(|q| !q.is_empty()) {
+        // Pull with a small timeout so deadline flushes happen on time.
+        match ingress.recv_timeout(Duration::from_micros(500)) {
+            Ok(Ingress::Req(req)) => {
+                queues.entry(req.variant.clone()).or_default().push_back(req);
+            }
+            Ok(Ingress::Shutdown) => open = false,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+        }
+        // Flush full or overdue queues.
+        let now = Instant::now();
+        for (variant, q) in queues.iter_mut() {
+            let due = q
+                .front()
+                .map(|r| now.duration_since(r.submitted) >= cfg.max_wait)
+                .unwrap_or(false);
+            while q.len() >= cfg.max_batch || (due && !q.is_empty()) || (!open && !q.is_empty()) {
+                let take = q.len().min(cfg.max_batch);
+                let requests: Vec<Request> = q.drain(..take).collect();
+                metrics.record_batch(requests.len());
+                if work.send(Batch { variant: variant.clone(), requests }).is_err() {
+                    return; // workers gone
+                }
+                if q.len() < cfg.max_batch && open {
+                    break;
+                }
+            }
+        }
+    }
+    // work sender drops here -> workers drain and exit.
+}
+
+fn worker_loop(
+    work: Arc<Mutex<mpsc::Receiver<Batch>>>,
+    cache: Arc<VariantCache>,
+    metrics: Arc<Metrics>,
+    engine: Engine,
+) {
+    // One Transformer per worker (RoPE tables etc.) for the native engine.
+    let tf = Transformer::new(cache.base().cfg());
+    loop {
+        let batch = {
+            let rx = work.lock().unwrap();
+            match rx.recv() {
+                Ok(b) => b,
+                Err(_) => return,
+            }
+        };
+        let batch_start = Instant::now();
+        let (params, cold) = match cache.get(&batch.variant) {
+            Ok(x) => x,
+            Err(e) => {
+                let msg = format!("variant load failed: {e}");
+                for req in batch.requests {
+                    let timing = Timing {
+                        queue: batch_start.duration_since(req.submitted),
+                        total: req.submitted.elapsed(),
+                        ..Default::default()
+                    };
+                    metrics.record_request(&req.variant, timing.queue, Duration::ZERO, timing.total, true);
+                    let _ = req.resp.send(Response {
+                        id: req.id,
+                        variant: req.variant.clone(),
+                        result: Err(msg.clone()),
+                        timing,
+                    });
+                }
+                continue;
+            }
+        };
+        if let Some(c) = cold {
+            metrics.record_cold_start(c);
+        }
+        let compute_start = Instant::now();
+        let results = score_batch(&engine, &tf, &params, &batch.requests);
+        let compute = compute_start.elapsed();
+        for (req, result) in batch.requests.into_iter().zip(results) {
+            let queue = batch_start.duration_since(req.submitted);
+            let total = req.submitted.elapsed();
+            metrics.record_request(&req.variant, queue, compute, total, result.is_err());
+            let timing = Timing { queue, cold_start: cold, compute, total };
+            let _ = req.resp.send(Response {
+                id: req.id,
+                variant: req.variant.clone(),
+                result,
+                timing,
+            });
+        }
+    }
+}
+
+/// Score every request in a batch against the materialized params.
+fn score_batch(
+    engine: &Engine,
+    tf: &Transformer,
+    params: &Arc<FlatParams>,
+    requests: &[Request],
+) -> Vec<Result<RespBody, String>> {
+    match engine {
+        Engine::Native => {
+            let out: Vec<Mutex<Option<Result<RespBody, String>>>> =
+                (0..requests.len()).map(|_| Mutex::new(None)).collect();
+            par::parallel_items(requests.len(), 8, |i| {
+                let r = score_one_native(tf, params, &requests[i].payload);
+                *out[i].lock().unwrap() = Some(r);
+            });
+            out.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+        }
+        Engine::Xla { handle, config } => {
+            requests
+                .iter()
+                .map(|r| score_one_xla(handle, config, params, &r.payload))
+                .collect()
+        }
+    }
+}
+
+fn score_one_native(
+    tf: &Transformer,
+    params: &FlatParams,
+    payload: &Payload,
+) -> Result<RespBody, String> {
+    match payload {
+        Payload::Score { prompt, choices } => {
+            let mut scores = Vec::with_capacity(choices.len());
+            for choice in choices {
+                let full = clamp(encode(&format!("{prompt}{choice}")), tf.cfg.max_seq);
+                // The choice is the tail of the sequence; score exactly its
+                // tokens (robust under prompt clamping).
+                let choice_len = encode(choice).len().min(full.len() - 1).max(1);
+                let start = full.len() - choice_len;
+                let s = tf.score_span(params, &full, start..full.len());
+                scores.push(s / choice_len as f64);
+            }
+            let choice = argmax_f64(&scores);
+            Ok(RespBody::Score { choice, scores })
+        }
+        Payload::Perplexity { text } => {
+            let tokens = clamp(encode(text), tf.cfg.max_seq);
+            if tokens.len() < 2 {
+                return Err("text too short".into());
+            }
+            Ok(RespBody::Perplexity { nats_per_token: tf.cross_entropy(params, &tokens) })
+        }
+    }
+}
+
+fn score_one_xla(
+    handle: &RuntimeHandle,
+    config: &str,
+    params: &FlatParams,
+    payload: &Payload,
+) -> Result<RespBody, String> {
+    match payload {
+        Payload::Score { prompt, choices } => {
+            // One batched forward over all choice continuations.
+            let max_seq = handle
+                .manifest()
+                .fwd_buckets(config)
+                .last()
+                .and_then(|p| p.seq)
+                .unwrap_or(64);
+            let seqs: Vec<Vec<u8>> = choices
+                .iter()
+                .map(|c| clamp(encode(&format!("{prompt}{c}")), max_seq))
+                .collect();
+            let logits = crate::runtime::forward_logits(handle, config, &params.data, &seqs)
+                .map_err(|e| e.to_string())?;
+            let mut scores = Vec::with_capacity(choices.len());
+            for ((seq, l), choice) in seqs.iter().zip(&logits).zip(choices) {
+                let choice_len = encode(choice).len().min(seq.len() - 1).max(1);
+                let start = seq.len() - choice_len;
+                let mut buf = vec![0f32; l.cols];
+                let mut total = 0f64;
+                for pos in start..seq.len() {
+                    log_softmax_into(l.row(pos - 1), &mut buf);
+                    total += buf[seq[pos] as usize] as f64;
+                }
+                scores.push(total / choice_len as f64);
+            }
+            let choice = argmax_f64(&scores);
+            Ok(RespBody::Score { choice, scores })
+        }
+        Payload::Perplexity { text } => {
+            let max_seq = handle
+                .manifest()
+                .fwd_buckets(config)
+                .last()
+                .and_then(|p| p.seq)
+                .unwrap_or(64);
+            let tokens = clamp(encode(text), max_seq);
+            if tokens.len() < 2 {
+                return Err("text too short".into());
+            }
+            let logits = crate::runtime::forward_logits(handle, config, &params.data, &[tokens.clone()])
+                .map_err(|e| e.to_string())?;
+            let l = &logits[0];
+            let mut buf = vec![0f32; l.cols];
+            let mut total = 0f64;
+            for pos in 1..tokens.len() {
+                log_softmax_into(l.row(pos - 1), &mut buf);
+                total += buf[tokens[pos] as usize] as f64;
+            }
+            Ok(RespBody::Perplexity { nats_per_token: -total / (tokens.len() - 1) as f64 })
+        }
+    }
+}
+
+fn clamp(tokens: Vec<u8>, max: usize) -> Vec<u8> {
+    if tokens.len() <= max {
+        tokens
+    } else {
+        tokens[tokens.len() - max..].to_vec()
+    }
+}
+
+fn argmax_f64(xs: &[f64]) -> usize {
+    let mut best = (f64::NEG_INFINITY, 0usize);
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best.0 {
+            best = (x, i);
+        }
+    }
+    best.1
+}

@@ -1,0 +1,176 @@
+//! Corpus generation: base (pre-training) documents, the instruct
+//! fine-tuning mixture, and calibration samples (the stand-in for the
+//! paper's 50 + 150 C4 examples).
+
+use super::tasks::{train_texts, TaskFamily};
+use super::world::World;
+use crate::util::rng::Rng;
+
+/// Filler sentence templates to give the base corpus generic "web text"
+/// structure beyond raw facts (keeps the LM from degenerating into a pure
+/// fact lookup table).
+const FILLERS: [&str; 8] = [
+    "the mill by the river turns all day.",
+    "rain fell on the old stone road.",
+    "a cart rolled past the market square.",
+    "the bell rang twice at dusk.",
+    "ships came in with the morning tide.",
+    "the lamplighter walked the long lane.",
+    "snow settled on the quiet field.",
+    "the well in the yard ran clear.",
+];
+
+/// Base (pre-training) corpus: declarative facts + filler, a few sentences
+/// per document.
+pub fn base_corpus(world: &World, n_docs: usize, seed: u64) -> Vec<String> {
+    let mut rng = Rng::new(seed ^ 0xBA5E);
+    let facts = world.all_facts();
+    let mut docs = Vec::with_capacity(n_docs);
+    for _ in 0..n_docs {
+        let n_sent = rng.range(3, 6);
+        let mut doc = String::new();
+        for s in 0..n_sent {
+            if s > 0 {
+                doc.push(' ');
+            }
+            if rng.chance(0.75) {
+                let f = *rng.choice(&facts);
+                doc.push_str(&world.render_declarative(f));
+            } else {
+                doc.push_str(FILLERS[rng.below(FILLERS.len())]);
+            }
+        }
+        docs.push(doc);
+    }
+    docs
+}
+
+/// Instruct fine-tuning mixture: Q/A texts over the train split of every
+/// task family, plus a sprinkle of declarative facts to avoid format
+/// overfitting.
+pub fn instruct_corpus(world: &World, n_docs: usize, seed: u64) -> Vec<String> {
+    let mut rng = Rng::new(seed ^ 0x1257);
+    let per_family = n_docs / (TaskFamily::ALL.len() + 1);
+    let mut docs = Vec::with_capacity(n_docs);
+    for fam in TaskFamily::ALL {
+        docs.extend(train_texts(world, fam, per_family, seed));
+    }
+    let facts = world.all_facts();
+    while docs.len() < n_docs {
+        let f = *rng.choice(&facts);
+        if world.is_train_fact(f) {
+            let (q, a) = world.render_qa(f);
+            docs.push(format!("{q} A: {a}"));
+        }
+    }
+    rng.shuffle(&mut docs);
+    docs
+}
+
+/// Calibration samples (the C4 stand-in): documents drawn from the *base*
+/// distribution, disjoint seed from training. The paper uses 50 samples for
+/// the per-layer caches and 150 for the end-to-end objective.
+pub fn calibration_samples(world: &World, n: usize, seed: u64) -> Vec<String> {
+    base_corpus(world, n, seed ^ 0xCA11B)
+}
+
+/// Byte-level tokenization (vocab = 256): the corpus is ASCII by
+/// construction so bytes == chars.
+pub fn encode(text: &str) -> Vec<u8> {
+    text.as_bytes().to_vec()
+}
+
+pub fn decode(tokens: &[u8]) -> String {
+    String::from_utf8_lossy(tokens).into_owned()
+}
+
+/// Pack documents into fixed-length training windows: documents are joined
+/// with `\n` and split into consecutive `seq_len + 1`-byte windows (inputs +
+/// next-token targets), shuffled deterministically.
+pub fn pack_windows(docs: &[String], seq_len: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut stream = Vec::new();
+    for d in docs {
+        stream.extend_from_slice(d.as_bytes());
+        stream.push(b'\n');
+    }
+    let w = seq_len + 1;
+    let mut windows: Vec<Vec<u8>> =
+        stream.chunks_exact(w).map(|c| c.to_vec()).collect();
+    Rng::new(seed ^ 0x57D0).shuffle(&mut windows);
+    windows
+}
+
+/// Round-robin batches of `batch` windows (drops the ragged tail).
+pub fn batches(windows: &[Vec<u8>], batch: usize) -> Vec<Vec<Vec<u8>>> {
+    windows.chunks_exact(batch).map(|c| c.to_vec()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> World {
+        World::generate(11, 30)
+    }
+
+    #[test]
+    fn base_corpus_is_ascii_and_deterministic() {
+        let w = world();
+        let a = base_corpus(&w, 50, 1);
+        let b = base_corpus(&w, 50, 1);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 50);
+        for d in &a {
+            assert!(d.is_ascii());
+            assert!(d.len() > 20);
+        }
+    }
+
+    #[test]
+    fn instruct_corpus_contains_qa_format() {
+        let w = world();
+        let docs = instruct_corpus(&w, 120, 2);
+        assert_eq!(docs.len(), 120);
+        let qa = docs.iter().filter(|d| d.starts_with("Q:") || d.contains("A: ")).count();
+        assert!(qa > 60, "expected mostly Q/A docs, got {qa}/120");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = "Q: where does bela live? A: rome";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn windows_have_exact_length() {
+        let w = world();
+        let docs = base_corpus(&w, 30, 3);
+        let wins = pack_windows(&docs, 64, 4);
+        assert!(!wins.is_empty());
+        for win in &wins {
+            assert_eq!(win.len(), 65);
+        }
+    }
+
+    #[test]
+    fn batches_are_full() {
+        let w = world();
+        let docs = base_corpus(&w, 40, 5);
+        let wins = pack_windows(&docs, 32, 6);
+        let bs = batches(&wins, 4);
+        for b in &bs {
+            assert_eq!(b.len(), 4);
+        }
+        assert!(bs.len() * 4 <= wins.len());
+    }
+
+    #[test]
+    fn calibration_disjoint_from_training_seeded_corpus() {
+        let w = world();
+        let train = base_corpus(&w, 30, 7);
+        let calib = calibration_samples(&w, 30, 7);
+        // Same world so the same facts appear, but document composition
+        // should differ (different stream).
+        assert_ne!(train, calib);
+    }
+}

@@ -1,0 +1,11 @@
+//! Synthetic data substrate: a seeded world of entities/facts, base and
+//! instruct corpora, calibration samples, byte-level tokenization, batching,
+//! and the five zero-shot MC task families (ARC/HellaSwag/PIQA/Winogrande
+//! analogs). See DESIGN.md "Substitutions".
+
+pub mod corpus;
+pub mod tasks;
+pub mod world;
+
+pub use tasks::{McItem, TaskFamily};
+pub use world::World;

@@ -1,0 +1,337 @@
+//! The five zero-shot multiple-choice task families (synthetic analogs of
+//! the paper's ARC-Challenge, ARC-Easy, HellaSwag, PIQA, Winogrande).
+//!
+//! Scoring follows lm-eval-harness: each choice is appended to the prompt
+//! and ranked by completion log-likelihood (see `eval::harness`). Families:
+//!
+//! * `AttrChain`   (ARC-C analog)    — 4-way, two-hop relational question.
+//! * `AttrEasy`    (ARC-E analog)    — 4-way, single attribute lookup.
+//! * `Continuation`(HellaSwag analog)— 4-way, pick the world-consistent
+//!                                     story continuation.
+//! * `Physical`    (PIQA analog)     — 2-way, procedural "how do you X".
+//! * `Pronoun`     (Winogrande analog)— 2-way, referent resolution by a
+//!                                     templated convention.
+
+use super::world::{Fact, World, CRAFTS, PRODUCTS};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TaskFamily {
+    AttrChain,
+    AttrEasy,
+    Continuation,
+    Physical,
+    Pronoun,
+}
+
+impl TaskFamily {
+    pub const ALL: [TaskFamily; 5] = [
+        TaskFamily::AttrChain,
+        TaskFamily::AttrEasy,
+        TaskFamily::Continuation,
+        TaskFamily::Physical,
+        TaskFamily::Pronoun,
+    ];
+
+    /// Paper-table column name.
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            TaskFamily::AttrChain => "ARC-C*",
+            TaskFamily::AttrEasy => "ARC-E*",
+            TaskFamily::Continuation => "HellaSwag*",
+            TaskFamily::Physical => "PIQA*",
+            TaskFamily::Pronoun => "Winogrande*",
+        }
+    }
+
+    pub fn n_choices(&self) -> usize {
+        match self {
+            TaskFamily::Physical | TaskFamily::Pronoun => 2,
+            _ => 4,
+        }
+    }
+}
+
+/// One multiple-choice item. The full scored text for choice `i` is
+/// `format!("{}{}", prompt, choices[i])`.
+#[derive(Clone, Debug)]
+pub struct McItem {
+    pub family: TaskFamily,
+    pub prompt: String,
+    pub choices: Vec<String>,
+    pub correct: usize,
+}
+
+/// Procedural rule base for the Physical family: (goal, correct, distractor).
+pub const PHYSICAL_RULES: [(&str, &str, &str); 12] = [
+    ("open the jar", "twist the lid", "shake the jar"),
+    ("light the lamp", "strike a match", "pour out the oil"),
+    ("cross the river", "row the boat", "drop the oars"),
+    ("warm the bread", "heat the oven", "open the window"),
+    ("sharpen the knife", "use the whetstone", "dip it in water"),
+    ("dry the cloth", "hang it in the sun", "fold it in a box"),
+    ("quiet the drum", "rest the sticks", "hit it harder"),
+    ("fill the jug", "pour from the well", "tip it over"),
+    ("mend the net", "knot the torn cord", "cut more holes"),
+    ("cool the tea", "let it stand", "add more fire"),
+    ("raise the kite", "run against the wind", "wet the string"),
+    ("seal the letter", "press the wax", "tear the page"),
+];
+
+/// Adjective conventions for the Pronoun family: these adjectives describe
+/// the *giver* (first entity)...
+pub const GIVER_ADJS: [&str; 3] = ["kind", "generous", "gentle"];
+/// ...and these the *receiver* (second entity).
+pub const RECEIVER_ADJS: [&str; 3] = ["glad", "lucky", "grateful"];
+
+/// Generate evaluation items for a family (held-out facts / instances only).
+pub fn eval_items(world: &World, family: TaskFamily, n: usize, seed: u64) -> Vec<McItem> {
+    let mut rng = Rng::new(seed ^ family_salt(family));
+    let mut out = Vec::with_capacity(n);
+    let mut guard = 0usize;
+    while out.len() < n && guard < n * 200 {
+        guard += 1;
+        if let Some(item) = gen_item(world, family, &mut rng, false) {
+            out.push(item);
+        }
+    }
+    out
+}
+
+/// Generate training Q/A strings for the instruct fine-tuning mixture (the
+/// train split of each family, rendered as prompt+answer text).
+pub fn train_texts(world: &World, family: TaskFamily, n: usize, seed: u64) -> Vec<String> {
+    let mut rng = Rng::new(seed ^ family_salt(family) ^ 0x7121);
+    let mut out = Vec::with_capacity(n);
+    let mut guard = 0usize;
+    while out.len() < n && guard < n * 200 {
+        guard += 1;
+        if let Some(item) = gen_item(world, family, &mut rng, true) {
+            out.push(format!("{}{}", item.prompt, item.choices[item.correct]));
+        }
+    }
+    out
+}
+
+fn family_salt(f: TaskFamily) -> u64 {
+    match f {
+        TaskFamily::AttrChain => 0xA11C,
+        TaskFamily::AttrEasy => 0xA11E,
+        TaskFamily::Continuation => 0xC047,
+        TaskFamily::Physical => 0xF151,
+        TaskFamily::Pronoun => 0x9409,
+    }
+}
+
+/// Instance-level train/eval split shared by all families.
+fn is_train_instance(key: u64) -> bool {
+    let h = key.wrapping_mul(0xD6E8FEB86659FD93);
+    (h >> 33) % 10 < 7
+}
+
+fn gen_item(world: &World, family: TaskFamily, rng: &mut Rng, train: bool) -> Option<McItem> {
+    match family {
+        TaskFamily::AttrEasy => {
+            let e = rng.below(world.n());
+            let fact = match rng.below(4) {
+                0 => Fact::Color(e),
+                1 => Fact::Place(e),
+                2 => Fact::Craft(e),
+                _ => Fact::Owns(e),
+            };
+            if world.is_train_fact(fact) != train {
+                return None;
+            }
+            let (q, a) = world.render_qa(fact);
+            let mut choices = world.distractors(fact, 3, rng);
+            let correct = rng.below(4);
+            choices.insert(correct, a);
+            Some(McItem { family, prompt: format!("{q} A: "), choices, correct })
+        }
+        TaskFamily::AttrChain => {
+            // Two-hop: attribute of the entity that e likes.
+            let e = rng.below(world.n());
+            let friend = world.likes[e];
+            let fact = match rng.below(3) {
+                0 => Fact::Color(friend),
+                1 => Fact::Place(friend),
+                _ => Fact::Craft(friend),
+            };
+            // The item is train iff BOTH hops are in the train split.
+            let hop_train = world.is_train_fact(Fact::Likes(e)) && world.is_train_fact(fact);
+            if hop_train != train {
+                return None;
+            }
+            let (attr_word, answer) = match fact {
+                Fact::Color(f) => ("color", super::world::COLORS[world.color[f]].to_string()),
+                Fact::Place(f) => ("home", super::world::PLACES[world.place[f]].to_string()),
+                Fact::Craft(f) => ("craft", CRAFTS[world.craft[f]].to_string()),
+                _ => unreachable!(),
+            };
+            let q = format!(
+                "Q: {} likes someone. what is the {} of that friend?",
+                world.entities[e], attr_word
+            );
+            let mut choices = world.distractors(fact, 3, rng);
+            let correct = rng.below(4);
+            choices.insert(correct, answer);
+            Some(McItem { family, prompt: format!("{q} A: "), choices, correct })
+        }
+        TaskFamily::Continuation => {
+            let e = rng.below(world.n());
+            let craft = world.craft[e];
+            if is_train_instance(e as u64 ^ 0xC0) != train {
+                return None;
+            }
+            let name = &world.entities[e];
+            let prompt = format!(
+                "{} is a {}. {} started the day of work. then ",
+                name, CRAFTS[craft], name
+            );
+            let correct_text = format!("{} made {}.", name, PRODUCTS[craft]);
+            let mut choices = Vec::with_capacity(4);
+            let mut used = vec![craft];
+            while choices.len() < 3 {
+                let c = rng.below(CRAFTS.len());
+                if !used.contains(&c) {
+                    used.push(c);
+                    choices.push(format!("{} made {}.", name, PRODUCTS[c]));
+                }
+            }
+            let correct = rng.below(4);
+            choices.insert(correct, correct_text);
+            Some(McItem { family, prompt, choices, correct })
+        }
+        TaskFamily::Physical => {
+            let ri = rng.below(PHYSICAL_RULES.len());
+            if is_train_instance(ri as u64 ^ 0xF1) != train {
+                return None;
+            }
+            let (goal, good, bad) = PHYSICAL_RULES[ri];
+            let prompt = format!("Q: to {goal}, what do you do? A: ");
+            let correct = rng.below(2);
+            let choices = if correct == 0 {
+                vec![good.to_string(), bad.to_string()]
+            } else {
+                vec![bad.to_string(), good.to_string()]
+            };
+            Some(McItem { family, prompt, choices, correct })
+        }
+        TaskFamily::Pronoun => {
+            let a = rng.below(world.n());
+            let mut b = rng.below(world.n());
+            while b == a {
+                b = rng.below(world.n());
+            }
+            let giver_case = rng.chance(0.5);
+            let adj = if giver_case {
+                *rng.choice(&GIVER_ADJS)
+            } else {
+                *rng.choice(&RECEIVER_ADJS)
+            };
+            // Split on the (pair, adjective) instance.
+            let key = (a as u64) << 24 | (b as u64) << 8 | adj.len() as u64;
+            if is_train_instance(key) != train {
+                return None;
+            }
+            let item_word = super::world::ITEMS[world.item[a]];
+            let prompt = format!(
+                "{} gave {} the {} because the {} one is ",
+                world.entities[a], world.entities[b], item_word, adj
+            );
+            let correct_name =
+                if giver_case { world.entities[a].clone() } else { world.entities[b].clone() };
+            let other_name =
+                if giver_case { world.entities[b].clone() } else { world.entities[a].clone() };
+            let correct = rng.below(2);
+            let choices = if correct == 0 {
+                vec![format!("{correct_name}."), format!("{other_name}.")]
+            } else {
+                vec![format!("{other_name}."), format!("{correct_name}.")]
+            };
+            Some(McItem { family, prompt, choices, correct })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> World {
+        World::generate(42, 40)
+    }
+
+    #[test]
+    fn all_families_generate_requested_count() {
+        let w = world();
+        for fam in TaskFamily::ALL {
+            let items = eval_items(&w, fam, 50, 1);
+            assert_eq!(items.len(), 50, "{fam:?}");
+            for it in &items {
+                assert_eq!(it.choices.len(), fam.n_choices());
+                assert!(it.correct < it.choices.len());
+                assert!(!it.prompt.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn items_are_deterministic_per_seed() {
+        let w = world();
+        let a = eval_items(&w, TaskFamily::AttrEasy, 10, 7);
+        let b = eval_items(&w, TaskFamily::AttrEasy, 10, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.correct, y.correct);
+        }
+    }
+
+    #[test]
+    fn correct_choice_position_is_uniformish() {
+        let w = world();
+        let items = eval_items(&w, TaskFamily::AttrEasy, 200, 3);
+        let mut counts = [0usize; 4];
+        for it in &items {
+            counts[it.correct] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 20, "position bias: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn train_and_eval_instances_disjoint_for_physical() {
+        let w = world();
+        let train: std::collections::HashSet<String> =
+            train_texts(&w, TaskFamily::Physical, 50, 1).into_iter().collect();
+        let eval = eval_items(&w, TaskFamily::Physical, 30, 2);
+        for it in &eval {
+            let full = format!("{}{}", it.prompt, it.choices[it.correct]);
+            assert!(!train.contains(&full), "eval item leaked into train: {full}");
+        }
+    }
+
+    #[test]
+    fn train_texts_end_with_correct_answer() {
+        let w = world();
+        for fam in TaskFamily::ALL {
+            for t in train_texts(&w, fam, 10, 5) {
+                assert!(t.len() > 10);
+            }
+        }
+    }
+
+    #[test]
+    fn choices_are_distinct() {
+        let w = world();
+        for fam in TaskFamily::ALL {
+            for it in eval_items(&w, fam, 40, 9) {
+                let mut c = it.choices.clone();
+                c.sort();
+                c.dedup();
+                assert_eq!(c.len(), it.choices.len(), "dup choices in {:?}", it);
+            }
+        }
+    }
+}

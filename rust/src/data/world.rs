@@ -1,0 +1,256 @@
+//! Deterministic synthetic "world": entities with attributes and relations.
+//!
+//! The paper's pipeline needs (a) a pre-training corpus, (b) an instruct
+//! fine-tuning mixture, and (c) held-out zero-shot benchmarks whose answers
+//! the fine-tuned model knows better than the base model. Offline we cannot
+//! use C4/ARC/HellaSwag/PIQA/Winogrande, so we generate a seeded world of
+//! entities/facts; the base corpus states facts declaratively, the instruct
+//! mixture teaches a Q/A format over a *subset* of facts, and the eval items
+//! query the held-out subset (same format, unseen instances) — reproducing
+//! the base→instruct accuracy gap that the weight deltas encode.
+
+use crate::util::rng::Rng;
+
+pub const COLORS: [&str; 6] = ["red", "blue", "green", "gold", "black", "white"];
+pub const PLACES: [&str; 6] = ["rome", "york", "kiev", "oslo", "cairo", "quito"];
+pub const CRAFTS: [&str; 6] = ["baker", "smith", "scribe", "weaver", "potter", "fisher"];
+pub const ITEMS: [&str; 6] = ["book", "lamp", "coin", "drum", "kite", "harp"];
+
+/// Product made by each craft (drives the continuation task family).
+pub const PRODUCTS: [&str; 6] = ["bread", "swords", "letters", "cloth", "vases", "nets"];
+
+#[derive(Clone, Debug)]
+pub struct World {
+    pub entities: Vec<String>,
+    /// Attribute indices per entity (into the const tables above).
+    pub color: Vec<usize>,
+    pub place: Vec<usize>,
+    pub craft: Vec<usize>,
+    pub item: Vec<usize>,
+    /// `likes[i] = j`: entity i likes entity j (j != i).
+    pub likes: Vec<usize>,
+}
+
+/// A single atomic fact about the world.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fact {
+    Color(usize),
+    Place(usize),
+    Craft(usize),
+    Owns(usize),
+    Likes(usize),
+}
+
+impl World {
+    pub fn generate(seed: u64, n_entities: usize) -> World {
+        assert!(n_entities >= 2);
+        let mut rng = Rng::new(seed ^ 0x57_4F_52_4C_44); // "WORLD"
+        let mut entities = Vec::with_capacity(n_entities);
+        let consonants = b"bdfgklmnprstvz";
+        let vowels = b"aeiou";
+        let mut seen = std::collections::HashSet::new();
+        while entities.len() < n_entities {
+            let syls = rng.range(2, 4);
+            let mut name = String::new();
+            for _ in 0..syls {
+                name.push(*rng.choice(consonants) as char);
+                name.push(*rng.choice(vowels) as char);
+            }
+            if seen.insert(name.clone()) {
+                entities.push(name);
+            }
+        }
+        let n = n_entities;
+        let pick = |k: usize, r: &mut Rng| (0..n).map(|_| r.below(k)).collect::<Vec<_>>();
+        let color = pick(COLORS.len(), &mut rng);
+        let place = pick(PLACES.len(), &mut rng);
+        let craft = pick(CRAFTS.len(), &mut rng);
+        let item = pick(ITEMS.len(), &mut rng);
+        let likes = (0..n)
+            .map(|i| {
+                let mut j = rng.below(n);
+                while j == i {
+                    j = rng.below(n);
+                }
+                j
+            })
+            .collect();
+        World { entities, color, place, craft, item, likes }
+    }
+
+    pub fn n(&self) -> usize {
+        self.entities.len()
+    }
+
+    /// All facts in canonical order.
+    pub fn all_facts(&self) -> Vec<Fact> {
+        let mut out = Vec::with_capacity(self.n() * 5);
+        for e in 0..self.n() {
+            out.push(Fact::Color(e));
+            out.push(Fact::Place(e));
+            out.push(Fact::Craft(e));
+            out.push(Fact::Owns(e));
+            out.push(Fact::Likes(e));
+        }
+        out
+    }
+
+    /// Train/eval split of a fact: ~70% of facts go to the fine-tuning Q/A
+    /// mixture, the rest are reserved for held-out evaluation. Deterministic
+    /// in the fact identity.
+    pub fn is_train_fact(&self, f: Fact) -> bool {
+        let (e, salt) = match f {
+            Fact::Color(e) => (e, 11u64),
+            Fact::Place(e) => (e, 23),
+            Fact::Craft(e) => (e, 37),
+            Fact::Owns(e) => (e, 53),
+            Fact::Likes(e) => (e, 71),
+        };
+        let h = (e as u64).wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(salt.wrapping_mul(0xBF58476D1CE4E5B9));
+        (h >> 33) % 10 < 7
+    }
+
+    /// Declarative rendering (base/pre-training corpus style).
+    pub fn render_declarative(&self, f: Fact) -> String {
+        match f {
+            Fact::Color(e) => format!("the color of {} is {}.", self.entities[e], COLORS[self.color[e]]),
+            Fact::Place(e) => format!("{} lives in {}.", self.entities[e], PLACES[self.place[e]]),
+            Fact::Craft(e) => format!("{} is a {}.", self.entities[e], CRAFTS[self.craft[e]]),
+            Fact::Owns(e) => format!("{} owns a {}.", self.entities[e], ITEMS[self.item[e]]),
+            Fact::Likes(e) => {
+                format!("{} likes {}.", self.entities[e], self.entities[self.likes[e]])
+            }
+        }
+    }
+
+    /// Question rendering (instruct / eval style). Returns (question, answer).
+    pub fn render_qa(&self, f: Fact) -> (String, String) {
+        match f {
+            Fact::Color(e) => (
+                format!("Q: what is the color of {}?", self.entities[e]),
+                COLORS[self.color[e]].to_string(),
+            ),
+            Fact::Place(e) => (
+                format!("Q: where does {} live?", self.entities[e]),
+                PLACES[self.place[e]].to_string(),
+            ),
+            Fact::Craft(e) => (
+                format!("Q: what is the craft of {}?", self.entities[e]),
+                CRAFTS[self.craft[e]].to_string(),
+            ),
+            Fact::Owns(e) => (
+                format!("Q: what does {} own?", self.entities[e]),
+                ITEMS[self.item[e]].to_string(),
+            ),
+            Fact::Likes(e) => (
+                format!("Q: who does {} like?", self.entities[e]),
+                self.entities[self.likes[e]].clone(),
+            ),
+        }
+    }
+
+    /// Distractor answers from the same answer space as the fact.
+    pub fn distractors(&self, f: Fact, k: usize, rng: &mut Rng) -> Vec<String> {
+        let (pool, correct): (Vec<String>, String) = match f {
+            Fact::Color(e) => {
+                (COLORS.iter().map(|s| s.to_string()).collect(), COLORS[self.color[e]].into())
+            }
+            Fact::Place(e) => {
+                (PLACES.iter().map(|s| s.to_string()).collect(), PLACES[self.place[e]].into())
+            }
+            Fact::Craft(e) => {
+                (CRAFTS.iter().map(|s| s.to_string()).collect(), CRAFTS[self.craft[e]].into())
+            }
+            Fact::Owns(e) => {
+                (ITEMS.iter().map(|s| s.to_string()).collect(), ITEMS[self.item[e]].into())
+            }
+            Fact::Likes(e) => (
+                self.entities.clone(),
+                self.entities[self.likes[e]].clone(),
+            ),
+        };
+        let mut out = Vec::with_capacity(k);
+        let mut guard = 0;
+        while out.len() < k && guard < 10_000 {
+            guard += 1;
+            let cand = rng.choice(&pool).clone();
+            if cand != correct && !out.contains(&cand) {
+                out.push(cand);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_is_deterministic() {
+        let a = World::generate(5, 30);
+        let b = World::generate(5, 30);
+        assert_eq!(a.entities, b.entities);
+        assert_eq!(a.likes, b.likes);
+        let c = World::generate(6, 30);
+        assert_ne!(a.entities, c.entities);
+    }
+
+    #[test]
+    fn names_unique_and_wellformed() {
+        let w = World::generate(1, 100);
+        let mut names = w.entities.clone();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 100);
+        for n in &w.entities {
+            assert!(n.len() >= 4 && n.len() <= 6, "{n}");
+            assert!(n.chars().all(|c| c.is_ascii_lowercase()));
+        }
+    }
+
+    #[test]
+    fn nobody_likes_themselves() {
+        let w = World::generate(2, 50);
+        for (i, &j) in w.likes.iter().enumerate() {
+            assert_ne!(i, j);
+        }
+    }
+
+    #[test]
+    fn split_roughly_70_30_and_deterministic() {
+        let w = World::generate(3, 200);
+        let facts = w.all_facts();
+        let train = facts.iter().filter(|&&f| w.is_train_fact(f)).count();
+        let frac = train as f64 / facts.len() as f64;
+        assert!((0.6..0.8).contains(&frac), "train fraction {frac}");
+        for &f in facts.iter().take(20) {
+            assert_eq!(w.is_train_fact(f), w.is_train_fact(f));
+        }
+    }
+
+    #[test]
+    fn qa_answer_matches_declarative() {
+        let w = World::generate(4, 20);
+        for f in w.all_facts().into_iter().take(25) {
+            let decl = w.render_declarative(f);
+            let (_q, a) = w.render_qa(f);
+            assert!(decl.contains(&a), "decl '{decl}' should contain answer '{a}'");
+        }
+    }
+
+    #[test]
+    fn distractors_exclude_correct() {
+        let w = World::generate(7, 20);
+        let mut rng = Rng::new(1);
+        for f in w.all_facts().into_iter().take(25) {
+            let (_, a) = w.render_qa(f);
+            let d = w.distractors(f, 3, &mut rng);
+            assert_eq!(d.len(), 3);
+            assert!(!d.contains(&a));
+            let mut dd = d.clone();
+            dd.dedup();
+            assert_eq!(dd.len(), 3);
+        }
+    }
+}

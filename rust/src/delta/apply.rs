@@ -1,0 +1,305 @@
+//! Delta application — the serving hot path.
+//!
+//! Materializes `Ŵ = W_b + v ⊙ B` for one module or a whole model. This is
+//! the Rust-native counterpart of the L1 Pallas `delta_apply` kernel (the
+//! runtime path exists for validation and the fused on-the-fly mode; hot
+//! swaps in the coordinator use this native path).
+//!
+//! Performance notes (see EXPERIMENTS.md §Perf):
+//! * word-at-a-time bit expansion, branchless sign via IEEE bit tricks
+//!   (`±1.0` differ only in the sign bit);
+//! * one pass: read base, add signed scale, write out — the same traffic as
+//!   a memcpy plus one add, so the roofline is memory bandwidth;
+//! * row-parallel across threads for large modules.
+
+use super::types::{Axis, DeltaModule};
+use crate::model::FlatParams;
+use crate::util::par;
+
+/// `out[j,i] = base[j,i] + scale(j,i) * sign(j,i)` for one module.
+pub fn apply_module_into(base: &[f32], out: &mut [f32], m: &DeltaModule) {
+    let (d_out, d_in) = (m.d_out(), m.d_in());
+    assert_eq!(base.len(), d_out * d_in);
+    assert_eq!(out.len(), d_out * d_in);
+    match m.axis {
+        Axis::Col => {
+            let scales = &m.scales;
+            par::parallel_rows_mut(out, d_out, d_in, 16, |row0, chunk| {
+                for (r, orow) in chunk.chunks_mut(d_in).enumerate() {
+                    let j = row0 + r;
+                    apply_row_col(&base[j * d_in..(j + 1) * d_in], orow, m.mask.row_words(j), scales);
+                }
+            });
+        }
+        _ => {
+            // Row / Scalar / Group: constant scale within each row.
+            par::parallel_rows_mut(out, d_out, d_in, 16, |row0, chunk| {
+                for (r, orow) in chunk.chunks_mut(d_in).enumerate() {
+                    let j = row0 + r;
+                    let v = row_scale(m, j);
+                    apply_row_const(&base[j * d_in..(j + 1) * d_in], orow, m.mask.row_words(j), v);
+                }
+            });
+        }
+    }
+}
+
+/// In-place variant: `w += v ⊙ B` (pass `negate=true` to subtract, i.e.
+/// revert a previously applied delta during an in-place variant swap).
+pub fn apply_module_inplace(w: &mut [f32], m: &DeltaModule, negate: bool) {
+    let (d_out, d_in) = (m.d_out(), m.d_in());
+    assert_eq!(w.len(), d_out * d_in);
+    let sgn = if negate { -1.0f32 } else { 1.0 };
+    match m.axis {
+        Axis::Col => {
+            let scales: Vec<f32> = m.scales.iter().map(|&s| s * sgn).collect();
+            par::parallel_rows_mut(w, d_out, d_in, 16, |row0, chunk| {
+                for (r, wrow) in chunk.chunks_mut(d_in).enumerate() {
+                    let j = row0 + r;
+                    add_row_col(wrow, m.mask.row_words(j), &scales);
+                }
+            });
+        }
+        _ => {
+            par::parallel_rows_mut(w, d_out, d_in, 16, |row0, chunk| {
+                for (r, wrow) in chunk.chunks_mut(d_in).enumerate() {
+                    let j = row0 + r;
+                    let v = row_scale(m, j) * sgn;
+                    add_row_const(wrow, m.mask.row_words(j), v);
+                }
+            });
+        }
+    }
+}
+
+#[inline]
+fn row_scale(m: &DeltaModule, j: usize) -> f32 {
+    match m.axis {
+        Axis::Row => m.scales[j],
+        Axis::Scalar => m.scales[0],
+        Axis::Group(g) => m.scales[j / g.max(1) as usize],
+        Axis::Col => unreachable!(),
+    }
+}
+
+/// Branchless signed scale from a mask bit: bit=1 -> +v, bit=0 -> -v.
+/// `±v` differ only in the IEEE sign bit.
+#[inline(always)]
+fn signed(v: f32, bit: u32) -> f32 {
+    f32::from_bits(v.to_bits() ^ ((bit ^ 1) << 31))
+}
+
+// Perf note (EXPERIMENTS.md §Perf): the original single loop used a
+// variable bound `min(32, remaining)` per word, which blocked LLVM's
+// vectorizer (~9 GB/s vs 25 GB/s memcpy). Splitting full 32-bit words
+// (constant-bound inner loop over fixed-size array chunks) from the single
+// tail word lets the sign-injection vectorize.
+
+#[inline]
+fn apply_row_const(base: &[f32], out: &mut [f32], words: &[u32], v: f32) {
+    let d_in = base.len();
+    let full = d_in / 32;
+    let vb = v.to_bits();
+    // Full words: constant 32-wide inner loop over array chunks.
+    for wi in 0..full {
+        let w = words[wi];
+        let b32: &[f32; 32] = base[wi * 32..wi * 32 + 32].try_into().unwrap();
+        let o32: &mut [f32; 32] = (&mut out[wi * 32..wi * 32 + 32]).try_into().unwrap();
+        for b in 0..32 {
+            o32[b] = b32[b] + f32::from_bits(vb ^ ((((w >> b) & 1) ^ 1) << 31));
+        }
+    }
+    // Tail word.
+    for b in 0..d_in - full * 32 {
+        let i = full * 32 + b;
+        out[i] = base[i] + signed(v, (words[full] >> b) & 1);
+    }
+}
+
+#[inline]
+fn apply_row_col(base: &[f32], out: &mut [f32], words: &[u32], scales: &[f32]) {
+    let d_in = base.len();
+    let full = d_in / 32;
+    for wi in 0..full {
+        let w = words[wi];
+        let b32: &[f32; 32] = base[wi * 32..wi * 32 + 32].try_into().unwrap();
+        let s32: &[f32; 32] = scales[wi * 32..wi * 32 + 32].try_into().unwrap();
+        let o32: &mut [f32; 32] = (&mut out[wi * 32..wi * 32 + 32]).try_into().unwrap();
+        for b in 0..32 {
+            o32[b] = b32[b] + f32::from_bits(s32[b].to_bits() ^ ((((w >> b) & 1) ^ 1) << 31));
+        }
+    }
+    for b in 0..d_in - full * 32 {
+        let i = full * 32 + b;
+        out[i] = base[i] + signed(scales[i], (words[full] >> b) & 1);
+    }
+}
+
+#[inline]
+fn add_row_const(wrow: &mut [f32], words: &[u32], v: f32) {
+    let d_in = wrow.len();
+    let full = d_in / 32;
+    let vb = v.to_bits();
+    for wi in 0..full {
+        let w = words[wi];
+        let o32: &mut [f32; 32] = (&mut wrow[wi * 32..wi * 32 + 32]).try_into().unwrap();
+        for b in 0..32 {
+            o32[b] += f32::from_bits(vb ^ ((((w >> b) & 1) ^ 1) << 31));
+        }
+    }
+    for b in 0..d_in - full * 32 {
+        let i = full * 32 + b;
+        wrow[i] += signed(v, (words[full] >> b) & 1);
+    }
+}
+
+#[inline]
+fn add_row_col(wrow: &mut [f32], words: &[u32], scales: &[f32]) {
+    let d_in = wrow.len();
+    let full = d_in / 32;
+    for wi in 0..full {
+        let w = words[wi];
+        let s32: &[f32; 32] = scales[wi * 32..wi * 32 + 32].try_into().unwrap();
+        let o32: &mut [f32; 32] = (&mut wrow[wi * 32..wi * 32 + 32]).try_into().unwrap();
+        for b in 0..32 {
+            o32[b] += f32::from_bits(s32[b].to_bits() ^ ((((w >> b) & 1) ^ 1) << 31));
+        }
+    }
+    for b in 0..d_in - full * 32 {
+        let i = full * 32 + b;
+        wrow[i] += signed(scales[i], (words[full] >> b) & 1);
+    }
+}
+
+/// Apply a list of module deltas onto base params *in place* (the hot-swap
+/// loader path: one apply per module, paper §1 "single operation per
+/// module").
+pub fn apply_deltas_inplace(params: &mut FlatParams, modules: &[DeltaModule]) {
+    for m in modules {
+        let (rows, cols) = m.id.kind.shape(params.cfg());
+        assert_eq!((rows, cols), (m.d_out(), m.d_in()), "delta/module shape mismatch for {}", m.id);
+        apply_module_inplace(params.module_mut(m.id), m, false);
+    }
+}
+
+/// Revert previously applied deltas (in-place variant swap without
+/// re-reading the base checkpoint).
+pub fn revert_deltas_inplace(params: &mut FlatParams, modules: &[DeltaModule]) {
+    for m in modules {
+        apply_module_inplace(params.module_mut(m.id), m, true);
+    }
+}
+
+/// Materialize a fine-tuned variant: clone base then apply (the cache-fill
+/// path; the clone is the unavoidable cost of keeping the base pristine).
+pub fn materialize(base: &FlatParams, modules: &[DeltaModule]) -> FlatParams {
+    let mut out = base.clone();
+    apply_deltas_inplace(&mut out, modules);
+    out
+}
+
+/// Reference (scalar, unoptimized) apply used by tests to validate the
+/// optimized path.
+pub fn apply_module_reference(base: &[f32], m: &DeltaModule) -> Vec<f32> {
+    let (d_out, d_in) = (m.d_out(), m.d_in());
+    let mut out = vec![0f32; d_out * d_in];
+    for j in 0..d_out {
+        for i in 0..d_in {
+            out[j * d_in + i] = base[j * d_in + i] + m.scale_at(j, i) * m.mask.sign(j, i);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::pack::PackedMask;
+    use crate::model::{ModuleId, ProjKind};
+    use crate::util::rng::Rng;
+
+    fn mk_module(d_out: usize, d_in: usize, axis: Axis, seed: u64) -> (Vec<f32>, DeltaModule) {
+        let mut r = Rng::new(seed);
+        let base: Vec<f32> = (0..d_out * d_in).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let delta: Vec<f32> = (0..d_out * d_in).map(|_| r.normal_f32(0.0, 0.1)).collect();
+        let mask = PackedMask::pack(&delta, d_out, d_in);
+        let n = axis.n_scales(d_out, d_in);
+        let scales: Vec<f32> = (0..n).map(|_| r.uniform_in(0.01, 0.2)).collect();
+        (
+            base,
+            DeltaModule { id: ModuleId { layer: 0, kind: ProjKind::Q }, mask, axis, scales },
+        )
+    }
+
+    #[test]
+    fn optimized_matches_reference_all_axes() {
+        for (k, axis) in
+            [Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(3)].into_iter().enumerate()
+        {
+            for &(d_out, d_in) in &[(1, 1), (5, 33), (8, 32), (17, 100)] {
+                let (base, m) = mk_module(d_out, d_in, axis, k as u64 * 10 + d_in as u64);
+                let want = apply_module_reference(&base, &m);
+                let mut got = vec![0f32; base.len()];
+                apply_module_into(&base, &mut got, &m);
+                assert_eq!(got, want, "axis {axis:?} shape {d_out}x{d_in}");
+            }
+        }
+    }
+
+    #[test]
+    fn inplace_apply_then_revert_is_identity() {
+        for axis in [Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(4)] {
+            let (base, m) = mk_module(13, 47, axis, 99);
+            let mut w = base.clone();
+            apply_module_inplace(&mut w, &m, false);
+            assert_ne!(w, base);
+            apply_module_inplace(&mut w, &m, true);
+            for (a, b) in w.iter().zip(&base) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn signed_bit_trick() {
+        assert_eq!(signed(2.5, 1), 2.5);
+        assert_eq!(signed(2.5, 0), -2.5);
+        assert_eq!(signed(-2.5, 1), -2.5); // sign of v composes with the bit
+        assert_eq!(signed(0.0, 0), -0.0);
+    }
+
+    #[test]
+    fn materialize_respects_base() {
+        use crate::model::config::ModelConfig;
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = FlatParams::init(&cfg, 5);
+        let ids = base.layout.patchable_modules();
+        let mut modules = Vec::new();
+        for (i, &id) in ids.iter().take(3).enumerate() {
+            let (rows, cols) = id.kind.shape(&cfg);
+            let mut r = Rng::new(i as u64);
+            let delta: Vec<f32> = (0..rows * cols).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            modules.push(DeltaModule {
+                id,
+                mask: PackedMask::pack(&delta, rows, cols),
+                axis: Axis::Row,
+                scales: vec![0.05; rows],
+            });
+        }
+        let v = materialize(&base, &modules);
+        // Touched modules differ, untouched identical.
+        for (i, &id) in ids.iter().enumerate() {
+            if i < 3 {
+                assert_ne!(base.module(id), v.module(id));
+            } else {
+                assert_eq!(base.module(id), v.module(id));
+            }
+        }
+        // Revert returns to base.
+        let mut v2 = v.clone();
+        revert_deltas_inplace(&mut v2, &modules);
+        for (a, b) in v2.data.iter().zip(&base.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

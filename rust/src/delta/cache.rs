@@ -1,0 +1,183 @@
+//! Calibration caches (paper §2 "Calibration cache", Algorithm 3).
+//!
+//! For each target layer we collect, over the calibration documents:
+//! * `Y` — the **teacher** (fine-tuned model) outputs of each patchable
+//!   projection of that layer, and
+//! * `X` — the **student** (compressed-so-far model) inputs to the same
+//!   projections (the output of the already-compressed stack up to layer
+//!   i−1, immediately before entering layer i).
+//!
+//! Token positions are pooled across documents into one `[n, d]` matrix per
+//! module; `n` is capped by deterministic striding so the quadratic col-mode
+//! statistics stay cheap.
+
+use crate::model::params::ProjKind;
+use crate::model::{FlatParams, Transformer};
+use crate::tensor::Tensor2;
+use std::collections::BTreeMap;
+
+/// Pooled (X, Y) cache for one module.
+#[derive(Clone, Debug)]
+pub struct ModuleCache {
+    /// `[n, d_in]` student-side inputs.
+    pub x: Tensor2,
+    /// `[n, d_out]` teacher-side outputs.
+    pub y: Tensor2,
+}
+
+impl ModuleCache {
+    /// Split rows into (train, val) by taking every `1/val_fraction`-th row
+    /// as validation (deterministic, interleaved so both shards cover all
+    /// documents).
+    pub fn split(&self, val_fraction: f32) -> (ModuleCache, ModuleCache) {
+        let n = self.x.rows;
+        let stride = (1.0 / val_fraction.clamp(0.05, 0.5)).round() as usize;
+        let mut tr_x = Vec::new();
+        let mut tr_y = Vec::new();
+        let mut va_x = Vec::new();
+        let mut va_y = Vec::new();
+        let mut n_tr = 0;
+        let mut n_va = 0;
+        for t in 0..n {
+            if t % stride == stride - 1 {
+                va_x.extend_from_slice(self.x.row(t));
+                va_y.extend_from_slice(self.y.row(t));
+                n_va += 1;
+            } else {
+                tr_x.extend_from_slice(self.x.row(t));
+                tr_y.extend_from_slice(self.y.row(t));
+                n_tr += 1;
+            }
+        }
+        (
+            ModuleCache {
+                x: Tensor2::from_vec(n_tr, self.x.cols, tr_x),
+                y: Tensor2::from_vec(n_tr, self.y.cols, tr_y),
+            },
+            ModuleCache {
+                x: Tensor2::from_vec(n_va, self.x.cols, va_x),
+                y: Tensor2::from_vec(n_va, self.y.cols, va_y),
+            },
+        )
+    }
+}
+
+/// Build the per-module caches for one layer (Algorithm 3): one teacher
+/// forward (tapping module outputs) and one student forward (tapping module
+/// inputs) per document.
+pub fn build_layer_caches(
+    teacher: &FlatParams,
+    student: &FlatParams,
+    tf: &Transformer,
+    layer: usize,
+    docs: &[Vec<u8>],
+    max_rows: usize,
+) -> BTreeMap<ProjKind, ModuleCache> {
+    let mut xs: BTreeMap<ProjKind, Vec<f32>> = BTreeMap::new();
+    let mut ys: BTreeMap<ProjKind, Vec<f32>> = BTreeMap::new();
+    let mut rows = 0usize;
+    for doc in docs {
+        if doc.len() < 2 {
+            continue;
+        }
+        let (_, t_taps) = tf.forward_one_tapped(teacher, doc, layer);
+        let (_, s_taps) = tf.forward_one_tapped(student, doc, layer);
+        for kind in ProjKind::ALL {
+            xs.entry(kind).or_default().extend_from_slice(&s_taps.input(kind).data);
+            ys.entry(kind).or_default().extend_from_slice(&t_taps.output(kind).data);
+        }
+        rows += doc.len();
+    }
+    assert!(rows > 0, "empty calibration document set");
+
+    let mut out = BTreeMap::new();
+    for kind in ProjKind::ALL {
+        let xv = xs.remove(&kind).unwrap();
+        let yv = ys.remove(&kind).unwrap();
+        let d_in = xv.len() / rows;
+        let d_out = yv.len() / rows;
+        let mut x = Tensor2::from_vec(rows, d_in, xv);
+        let mut y = Tensor2::from_vec(rows, d_out, yv);
+        if rows > max_rows {
+            let (sx, sy) = stride_subsample(&x, &y, max_rows);
+            x = sx;
+            y = sy;
+        }
+        out.insert(kind, ModuleCache { x, y });
+    }
+    out
+}
+
+/// Deterministic stride subsample keeping row pairing.
+fn stride_subsample(x: &Tensor2, y: &Tensor2, max_rows: usize) -> (Tensor2, Tensor2) {
+    let n = x.rows;
+    let stride = n.div_ceil(max_rows);
+    let keep: Vec<usize> = (0..n).step_by(stride).collect();
+    let mut xv = Vec::with_capacity(keep.len() * x.cols);
+    let mut yv = Vec::with_capacity(keep.len() * y.cols);
+    for &t in &keep {
+        xv.extend_from_slice(x.row(t));
+        yv.extend_from_slice(y.row(t));
+    }
+    (
+        Tensor2::from_vec(keep.len(), x.cols, xv),
+        Tensor2::from_vec(keep.len(), y.cols, yv),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn caches_satisfy_linear_identity_for_identical_models() {
+        // When teacher == student, Y must equal X · Wᵀ exactly.
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let p = FlatParams::init(&cfg, 3);
+        let tf = Transformer::new(&cfg);
+        let docs: Vec<Vec<u8>> = vec![(5..25u8).collect(), (40..80u8).collect()];
+        let caches = build_layer_caches(&p, &p, &tf, 0, &docs, 10_000);
+        for kind in ProjKind::ALL {
+            let c = &caches[&kind];
+            let w = p.module_tensor(crate::model::ModuleId { layer: 0, kind });
+            let want = c.x.matmul_bt(&w);
+            let err = want.mse(&c.y);
+            assert!(err < 1e-8, "{kind:?} identity violated: {err}");
+        }
+    }
+
+    #[test]
+    fn cache_rows_pool_across_docs() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let p = FlatParams::init(&cfg, 4);
+        let tf = Transformer::new(&cfg);
+        let docs: Vec<Vec<u8>> = vec![vec![1; 10], vec![2; 15]];
+        let caches = build_layer_caches(&p, &p, &tf, 1, &docs, 10_000);
+        assert_eq!(caches[&ProjKind::Q].x.rows, 25);
+    }
+
+    #[test]
+    fn subsampling_caps_rows() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let p = FlatParams::init(&cfg, 5);
+        let tf = Transformer::new(&cfg);
+        let docs: Vec<Vec<u8>> = (0..4).map(|i| vec![i as u8 + 1; 20]).collect();
+        let caches = build_layer_caches(&p, &p, &tf, 0, &docs, 30);
+        let n = caches[&ProjKind::Up].x.rows;
+        assert!(n <= 40 && n >= 20, "n={n}");
+    }
+
+    #[test]
+    fn split_is_disjoint_and_complete() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let p = FlatParams::init(&cfg, 6);
+        let tf = Transformer::new(&cfg);
+        let docs: Vec<Vec<u8>> = vec![vec![3; 30]];
+        let caches = build_layer_caches(&p, &p, &tf, 0, &docs, 10_000);
+        let c = &caches[&ProjKind::V];
+        let (tr, va) = c.split(0.2);
+        assert_eq!(tr.x.rows + va.x.rows, c.x.rows);
+        assert!(va.x.rows >= c.x.rows / 6);
+    }
+}

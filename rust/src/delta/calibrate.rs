@@ -1,0 +1,493 @@
+//! Activation-aware calibration of scale vectors (paper §2, Algorithms 4/6).
+//!
+//! For a module with base weights `W_b [d_out, d_in]`, sign mask `B`, and a
+//! calibration cache of `(X [n, d_in], Y [n, d_out])` pairs (student-side
+//! inputs, teacher-side outputs), the layer objective is
+//!
+//! `L(v) = (1/(n·d_out)) · ‖Y − X·(W_b + v⊙B)ᵀ‖²`.
+//!
+//! `L` is a *quadratic* in `v` for every axis mode, so we precompute
+//! sufficient statistics once per module and then both training modes are
+//! cheap:
+//!
+//! * **AdamW** (paper-faithful, Alg. 4: lr 1e-4, 5 epochs) — full-batch
+//!   gradients from the statistics, bit-identical objective to minibatch
+//!   sweeps over the cache in expectation;
+//! * **closed form** (our extension) — row mode decouples per output unit
+//!   (1-D least squares); col mode solves one ridge-regularized SPD system.
+//!
+//! Row statistics also serve the `Scalar` (BitDelta) and `Group` modes,
+//! which constrain row scales to be shared.
+
+use super::pack::PackedMask;
+use super::types::Axis;
+use crate::tensor::{cholesky_solve, dot, Tensor2};
+use crate::util::par;
+
+/// Hyper-parameters for scale training (paper defaults).
+#[derive(Clone, Debug)]
+pub struct CalibConfig {
+    pub lr: f32,
+    pub epochs: usize,
+    /// Gradient steps per epoch (the paper sweeps the 50-sample cache in
+    /// minibatches; with precomputed statistics each step is full-batch, so
+    /// steps ≈ minibatches/epoch gives the same optimization budget).
+    pub steps_per_epoch: usize,
+    /// Held-out fraction of cache rows used for axis selection (Alg. 6's
+    /// "validation MSE on the held-out shard").
+    pub val_fraction: f32,
+    /// Ridge added to the col-mode normal equations (numerical safety).
+    pub ridge: f32,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        CalibConfig { lr: 1e-4, epochs: 5, steps_per_epoch: 10, val_fraction: 0.2, ridge: 1e-4 }
+    }
+}
+
+/// Initial scales = `mean(|ΔW|, axis)` (Alg. 6 lines 3/5).
+pub fn init_scales(delta: &[f32], d_out: usize, d_in: usize, axis: Axis) -> Vec<f32> {
+    assert_eq!(delta.len(), d_out * d_in);
+    match axis {
+        Axis::Row => (0..d_out)
+            .map(|j| {
+                delta[j * d_in..(j + 1) * d_in].iter().map(|x| x.abs() as f64).sum::<f64>()
+                    / d_in as f64
+            })
+            .map(|x| x as f32)
+            .collect(),
+        Axis::Col => {
+            let mut acc = vec![0f64; d_in];
+            for j in 0..d_out {
+                for (i, &x) in delta[j * d_in..(j + 1) * d_in].iter().enumerate() {
+                    acc[i] += x.abs() as f64;
+                }
+            }
+            acc.into_iter().map(|x| (x / d_out as f64) as f32).collect()
+        }
+        Axis::Scalar => {
+            let m = delta.iter().map(|x| x.abs() as f64).sum::<f64>() / delta.len() as f64;
+            vec![m as f32]
+        }
+        Axis::Group(g) => {
+            let g = g.max(1) as usize;
+            (0..d_out.div_ceil(g))
+                .map(|grp| {
+                    let j0 = grp * g;
+                    let j1 = (j0 + g).min(d_out);
+                    let cnt = ((j1 - j0) * d_in) as f64;
+                    delta[j0 * d_in..j1 * d_in].iter().map(|x| x.abs() as f64).sum::<f64>() / cnt
+                })
+                .map(|x| x as f32)
+                .collect()
+        }
+    }
+}
+
+/// Row-axis sufficient statistics (also serve Scalar and Group modes):
+/// with `u_j = X·B[j,:]ᵀ` and `R = Y − X·W_bᵀ`,
+/// `L(v) = (Σ_j ‖R_j‖² − 2 v_j·b_j + v_j²·a_j) / (n·d_out)`
+/// where `a_j = ‖u_j‖²`, `b_j = ⟨R_j, u_j⟩`.
+#[derive(Clone, Debug)]
+pub struct RowStats {
+    pub a: Vec<f64>,
+    pub b: Vec<f64>,
+    /// `‖R_j‖²` per output unit.
+    pub rr: Vec<f64>,
+    /// Total element count `n · d_out`.
+    pub n_elems: f64,
+}
+
+/// Col-axis sufficient statistics:
+/// `L(v) = (‖R‖² − 2 vᵀc + vᵀGv) / (n·d_out)` with
+/// `G = (XᵀX) ⊙ (BᵀB)` and `c_i = Σ_j B[j,i]·(XᵀR)[i,j]`.
+#[derive(Clone, Debug)]
+pub struct ColStats {
+    pub g: Tensor2,
+    pub c: Vec<f64>,
+    pub rr_total: f64,
+    pub n_elems: f64,
+}
+
+/// Compute the residual `R = Y − X·W_bᵀ` once per module.
+pub fn residual(x: &Tensor2, y: &Tensor2, w_base: &Tensor2) -> Tensor2 {
+    let base_out = x.matmul_bt(w_base); // [n, d_out]
+    y.sub(&base_out)
+}
+
+/// Build row statistics from the cache.
+pub fn row_stats(x: &Tensor2, r: &Tensor2, mask: &PackedMask) -> RowStats {
+    let n = x.rows;
+    let d_out = mask.d_out;
+    let d_in = mask.d_in;
+    assert_eq!(x.cols, d_in);
+    assert_eq!((r.rows, r.cols), (n, d_out));
+    // One (a, b, rr) triple per output unit; `parallel_rows_mut` hands each
+    // thread a disjoint mutable chunk, keeping this in safe Rust.
+    let mut triples = vec![0f64; d_out * 3];
+    par::parallel_rows_mut(&mut triples, d_out, 3, 4, |row0, chunk| {
+        let mut sign_row = vec![0f32; d_in];
+        for (rloc, tri) in chunk.chunks_mut(3).enumerate() {
+            let j = row0 + rloc;
+            mask.unpack_row(j, &mut sign_row);
+            let (mut aj, mut bj, mut rrj) = (0f64, 0f64, 0f64);
+            for t in 0..n {
+                let u = dot(x.row(t), &sign_row) as f64;
+                let rv = r.at(t, j) as f64;
+                aj += u * u;
+                bj += rv * u;
+                rrj += rv * rv;
+            }
+            tri[0] = aj;
+            tri[1] = bj;
+            tri[2] = rrj;
+        }
+    });
+    let a = (0..d_out).map(|j| triples[j * 3]).collect();
+    let b = (0..d_out).map(|j| triples[j * 3 + 1]).collect();
+    let rr = (0..d_out).map(|j| triples[j * 3 + 2]).collect();
+    RowStats { a, b, rr, n_elems: (n * d_out) as f64 }
+}
+
+/// Build col statistics from the cache.
+pub fn col_stats(x: &Tensor2, r: &Tensor2, mask: &PackedMask) -> ColStats {
+    let d_out = mask.d_out;
+    let d_in = mask.d_in;
+    // G = (XᵀX) ⊙ (BᵀB); BᵀB via dense unpack (transient).
+    let xtx = x.gram(); // [d_in, d_in]
+    let dense_b = Tensor2::from_vec(d_out, d_in, mask.unpack());
+    let btb = dense_b.gram(); // [d_in, d_in]
+    let mut g = Tensor2::zeros(d_in, d_in);
+    for idx in 0..d_in * d_in {
+        g.data[idx] = xtx.data[idx] * btb.data[idx];
+    }
+    // c_i = Σ_j B[j,i] (XᵀR)[i,j]; XᵀR is [d_in, d_out].
+    let xtr = x.transpose().matmul(r);
+    let mut c = vec![0f64; d_in];
+    for i in 0..d_in {
+        let mut acc = 0f64;
+        for j in 0..d_out {
+            acc += (mask.sign(j, i) * xtr.at(i, j)) as f64;
+        }
+        c[i] = acc;
+    }
+    ColStats { g, c, rr_total: r.frob_sq(), n_elems: (x.rows * d_out) as f64 }
+}
+
+// ---------------------------------------------------------------------------
+// Objective evaluation
+// ---------------------------------------------------------------------------
+
+/// Layer MSE for row-family axes (Row/Scalar/Group) given row stats.
+pub fn mse_rowfam(stats: &RowStats, axis: Axis, scales: &[f32]) -> f64 {
+    let d_out = stats.a.len();
+    let mut total = 0f64;
+    for j in 0..d_out {
+        let v = scale_for_row(axis, scales, j) as f64;
+        total += stats.rr[j] - 2.0 * v * stats.b[j] + v * v * stats.a[j];
+    }
+    total / stats.n_elems
+}
+
+/// Layer MSE for col axis given col stats.
+pub fn mse_col(stats: &ColStats, v: &[f32]) -> f64 {
+    let d_in = v.len();
+    let mut quad = 0f64;
+    for i in 0..d_in {
+        let gi = stats.g.row(i);
+        let mut gv = 0f64;
+        for (k, &g) in gi.iter().enumerate() {
+            gv += g as f64 * v[k] as f64;
+        }
+        quad += v[i] as f64 * gv;
+    }
+    let lin: f64 = v.iter().zip(&stats.c).map(|(&vi, &ci)| vi as f64 * ci).sum();
+    (stats.rr_total - 2.0 * lin + quad) / stats.n_elems
+}
+
+#[inline]
+fn scale_for_row(axis: Axis, scales: &[f32], j: usize) -> f32 {
+    match axis {
+        Axis::Row => scales[j],
+        Axis::Scalar => scales[0],
+        Axis::Group(g) => scales[j / g.max(1) as usize],
+        Axis::Col => unreachable!("col handled separately"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Closed-form solutions (extension; the quadratic objective has an exact
+// minimizer)
+// ---------------------------------------------------------------------------
+
+/// Row family closed form: per-row `v_j = b_j / a_j`; Scalar/Group pool the
+/// statistics over the shared rows.
+pub fn closed_form_rowfam(stats: &RowStats, axis: Axis) -> Vec<f32> {
+    let d_out = stats.a.len();
+    match axis {
+        Axis::Row => (0..d_out)
+            .map(|j| if stats.a[j] > 0.0 { (stats.b[j] / stats.a[j]) as f32 } else { 0.0 })
+            .collect(),
+        Axis::Scalar => {
+            let a: f64 = stats.a.iter().sum();
+            let b: f64 = stats.b.iter().sum();
+            vec![if a > 0.0 { (b / a) as f32 } else { 0.0 }]
+        }
+        Axis::Group(g) => {
+            let g = g.max(1) as usize;
+            (0..d_out.div_ceil(g))
+                .map(|grp| {
+                    let j0 = grp * g;
+                    let j1 = (j0 + g).min(d_out);
+                    let a: f64 = stats.a[j0..j1].iter().sum();
+                    let b: f64 = stats.b[j0..j1].iter().sum();
+                    if a > 0.0 {
+                        (b / a) as f32
+                    } else {
+                        0.0
+                    }
+                })
+                .collect()
+        }
+        Axis::Col => unreachable!(),
+    }
+}
+
+/// Col closed form: solve `(G + ridge·diag(G)) v = c`.
+pub fn closed_form_col(stats: &ColStats, ridge: f32) -> Vec<f32> {
+    let d_in = stats.c.len();
+    let mut g = stats.g.clone();
+    // Relative ridge keeps conditioning scale-free.
+    let mean_diag =
+        (0..d_in).map(|i| g.at(i, i) as f64).sum::<f64>() / d_in as f64;
+    let eps = (ridge as f64 * mean_diag).max(1e-12) as f32;
+    for i in 0..d_in {
+        *g.at_mut(i, i) += eps;
+    }
+    let c32: Vec<f32> = stats.c.iter().map(|&x| x as f32).collect();
+    cholesky_solve(&g, &c32).unwrap_or_else(|| vec![0.0; d_in])
+}
+
+// ---------------------------------------------------------------------------
+// AdamW (paper-faithful training path, Alg. 4)
+// ---------------------------------------------------------------------------
+
+/// Minimal AdamW optimizer over a flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct AdamW {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u32,
+}
+
+impl AdamW {
+    pub fn new(n: usize, lr: f32) -> AdamW {
+        AdamW { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grads[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grads[i] * grads[i];
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * (mhat / (vhat.sqrt() + self.eps) + self.weight_decay * params[i]);
+        }
+    }
+}
+
+/// Train row-family scales with AdamW on the quadratic objective.
+pub fn adamw_rowfam(stats: &RowStats, axis: Axis, init: Vec<f32>, cfg: &CalibConfig) -> Vec<f32> {
+    let mut v = init;
+    let mut opt = AdamW::new(v.len(), cfg.lr);
+    let mut grads = vec![0f32; v.len()];
+    let d_out = stats.a.len();
+    for _ in 0..cfg.epochs * cfg.steps_per_epoch {
+        grads.iter_mut().for_each(|g| *g = 0.0);
+        for j in 0..d_out {
+            let idx = match axis {
+                Axis::Row => j,
+                Axis::Scalar => 0,
+                Axis::Group(g) => j / g.max(1) as usize,
+                Axis::Col => unreachable!(),
+            };
+            let vj = v[idx] as f64;
+            grads[idx] += (2.0 * (vj * stats.a[j] - stats.b[j]) / stats.n_elems) as f32;
+        }
+        opt.step(&mut v, &grads);
+    }
+    v
+}
+
+/// Train col scales with AdamW: grad = 2(Gv − c)/N.
+pub fn adamw_col(stats: &ColStats, init: Vec<f32>, cfg: &CalibConfig) -> Vec<f32> {
+    let mut v = init;
+    let d_in = v.len();
+    let mut opt = AdamW::new(d_in, cfg.lr);
+    let mut grads = vec![0f32; d_in];
+    for _ in 0..cfg.epochs * cfg.steps_per_epoch {
+        for i in 0..d_in {
+            let gi = stats.g.row(i);
+            let mut gv = 0f64;
+            for (k, &g) in gi.iter().enumerate() {
+                gv += g as f64 * v[k] as f64;
+            }
+            grads[i] = (2.0 * (gv - stats.c[i]) / stats.n_elems) as f32;
+        }
+        opt.step(&mut v, &grads);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Build a synthetic module whose delta truly is `v* ⊙ B` for a known
+    /// ground-truth v*, plus noise. Calibration must recover v*.
+    struct Fixture {
+        x: Tensor2,
+        r: Tensor2,
+        mask: PackedMask,
+        truth_row: Vec<f32>,
+    }
+
+    fn fixture(n: usize, d_out: usize, d_in: usize, noise: f32, seed: u64) -> Fixture {
+        let mut rng = Rng::new(seed);
+        let mut x = Tensor2::zeros(n, d_in);
+        rng.fill_normal(&mut x.data, 1.0);
+        // Random sign pattern and positive ground-truth row scales.
+        let signs: Vec<f32> =
+            (0..d_out * d_in).map(|_| if rng.chance(0.5) { 1.0 } else { -1.0 }).collect();
+        let mask = PackedMask::pack(&signs, d_out, d_in);
+        let truth_row: Vec<f32> = (0..d_out).map(|_| rng.uniform_in(0.02, 0.3)).collect();
+        // R = X · (v ⊙ B)ᵀ + noise
+        let mut delta = vec![0f32; d_out * d_in];
+        for j in 0..d_out {
+            for i in 0..d_in {
+                delta[j * d_in + i] = truth_row[j] * signs[j * d_in + i];
+            }
+        }
+        let dt = Tensor2::from_vec(d_out, d_in, delta);
+        let mut r = x.matmul_bt(&dt);
+        for v in &mut r.data {
+            *v += rng.normal_f32(0.0, noise);
+        }
+        Fixture { x, r, mask, truth_row }
+    }
+
+    #[test]
+    fn closed_form_row_recovers_truth() {
+        let f = fixture(256, 12, 24, 0.01, 1);
+        let stats = row_stats(&f.x, &f.r, &f.mask);
+        let v = closed_form_rowfam(&stats, Axis::Row);
+        for (got, want) in v.iter().zip(&f.truth_row) {
+            assert!((got - want).abs() < 0.01, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn closed_form_is_global_minimum() {
+        let f = fixture(128, 8, 16, 0.05, 2);
+        let stats = row_stats(&f.x, &f.r, &f.mask);
+        let v_star = closed_form_rowfam(&stats, Axis::Row);
+        let best = mse_rowfam(&stats, Axis::Row, &v_star);
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let perturbed: Vec<f32> =
+                v_star.iter().map(|&v| v + rng.normal_f32(0.0, 0.05)).collect();
+            assert!(mse_rowfam(&stats, Axis::Row, &perturbed) >= best - 1e-9);
+        }
+    }
+
+    #[test]
+    fn col_mode_recovers_col_structured_delta() {
+        let mut rng = Rng::new(4);
+        let (n, d_out, d_in) = (256, 16, 12);
+        let mut x = Tensor2::zeros(n, d_in);
+        rng.fill_normal(&mut x.data, 1.0);
+        let signs: Vec<f32> =
+            (0..d_out * d_in).map(|_| if rng.chance(0.5) { 1.0 } else { -1.0 }).collect();
+        let mask = PackedMask::pack(&signs, d_out, d_in);
+        let truth_col: Vec<f32> = (0..d_in).map(|_| rng.uniform_in(0.02, 0.3)).collect();
+        let mut delta = vec![0f32; d_out * d_in];
+        for j in 0..d_out {
+            for i in 0..d_in {
+                delta[j * d_in + i] = truth_col[i] * signs[j * d_in + i];
+            }
+        }
+        let dt = Tensor2::from_vec(d_out, d_in, delta);
+        let r = x.matmul_bt(&dt);
+        let stats = col_stats(&x, &r, &mask);
+        let v = closed_form_col(&stats, 1e-6);
+        for (got, want) in v.iter().zip(&truth_col) {
+            assert!((got - want).abs() < 0.01, "{got} vs {want}");
+        }
+        // And the col MSE at the solution is near zero.
+        assert!(mse_col(&stats, &v) < 1e-6);
+    }
+
+    #[test]
+    fn adamw_approaches_closed_form() {
+        let f = fixture(128, 10, 20, 0.02, 5);
+        let stats = row_stats(&f.x, &f.r, &f.mask);
+        let exact = closed_form_rowfam(&stats, Axis::Row);
+        let init = vec![0.1f32; 10];
+        // Generous budget so the optimizer converges in the test.
+        let cfg = CalibConfig { lr: 5e-3, epochs: 200, steps_per_epoch: 10, ..Default::default() };
+        let trained = adamw_rowfam(&stats, Axis::Row, init, &cfg);
+        let m_exact = mse_rowfam(&stats, Axis::Row, &exact);
+        let m_train = mse_rowfam(&stats, Axis::Row, &trained);
+        assert!(m_train <= m_exact * 1.5 + 1e-8, "train {m_train} vs exact {m_exact}");
+    }
+
+    #[test]
+    fn scalar_fit_is_worse_than_row_on_anisotropic_delta() {
+        // The paper's core claim: per-axis beats scalar when ΔW scales vary
+        // across rows.
+        let f = fixture(256, 16, 24, 0.01, 6);
+        let stats = row_stats(&f.x, &f.r, &f.mask);
+        let row = closed_form_rowfam(&stats, Axis::Row);
+        let scalar = closed_form_rowfam(&stats, Axis::Scalar);
+        let m_row = mse_rowfam(&stats, Axis::Row, &row);
+        let m_scalar = mse_rowfam(&stats, Axis::Scalar, &scalar);
+        assert!(
+            m_row < m_scalar * 0.8,
+            "row {m_row} should clearly beat scalar {m_scalar} on anisotropic delta"
+        );
+    }
+
+    #[test]
+    fn group_interpolates_between_row_and_scalar() {
+        let f = fixture(256, 16, 24, 0.01, 7);
+        let stats = row_stats(&f.x, &f.r, &f.mask);
+        let m_row = mse_rowfam(&stats, Axis::Row, &closed_form_rowfam(&stats, Axis::Row));
+        let m_g4 =
+            mse_rowfam(&stats, Axis::Group(4), &closed_form_rowfam(&stats, Axis::Group(4)));
+        let m_scalar =
+            mse_rowfam(&stats, Axis::Scalar, &closed_form_rowfam(&stats, Axis::Scalar));
+        assert!(m_row <= m_g4 + 1e-9);
+        assert!(m_g4 <= m_scalar + 1e-9);
+    }
+
+    #[test]
+    fn init_scales_mean_abs() {
+        let delta = vec![1.0f32, -3.0, 2.0, -2.0]; // 2x2
+        assert_eq!(init_scales(&delta, 2, 2, Axis::Row), vec![2.0, 2.0]);
+        assert_eq!(init_scales(&delta, 2, 2, Axis::Col), vec![1.5, 2.5]);
+        assert_eq!(init_scales(&delta, 2, 2, Axis::Scalar), vec![2.0]);
+        assert_eq!(init_scales(&delta, 2, 2, Axis::Group(2)), vec![2.0]);
+    }
+}

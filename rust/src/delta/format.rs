@@ -1,0 +1,254 @@
+//! PAWD on-disk delta artifact format and the streamlined loader.
+//!
+//! The paper's systems contribution: "a streamlined loader that transfers
+//! packed deltas in a single operation per module reduces cold-start
+//! latency". Here each module is one **contiguous record** (header, FP16
+//! scale vector, packed mask, crc32), the file is read with a single
+//! `fs::read`, and application is one fused pass per module — masks stay
+//! packed end-to-end; the dense `Ŵ` only ever exists in the destination
+//! buffer.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "PAWDELTA" | version u32 | variant str | base_config str |
+//! n_modules u32 |
+//!   per module: name str | d_out u32 | d_in u32 | axis u8 | group u32 |
+//!               n_scales u32 | scales (n_scales × f16) |
+//!               mask (d_out · ceil(d_in/32) × u32) | crc32 u32
+//! ```
+//! Strings are `u32 length + bytes`. Each record's crc covers its header
+//! and payload, so corruption is detected per module.
+
+use super::pack::PackedMask;
+use super::types::{Axis, DeltaModel, DeltaModule};
+use crate::model::ModuleId;
+use crate::util::f16::{decode_f16_slice, encode_f16_slice};
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"PAWDELTA";
+const VERSION: u32 = 1;
+
+/// Serialize a delta model. Returns the file size in bytes.
+pub fn save_delta<P: AsRef<Path>>(path: P, model: &DeltaModel) -> Result<u64> {
+    let mut buf: Vec<u8> = Vec::with_capacity(model.payload_bytes() as usize + 4096);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    put_str(&mut buf, &model.variant);
+    put_str(&mut buf, &model.base_config);
+    buf.extend_from_slice(&(model.modules.len() as u32).to_le_bytes());
+    for m in &model.modules {
+        let rec_start = buf.len();
+        put_str(&mut buf, &m.id.to_string());
+        buf.extend_from_slice(&(m.d_out() as u32).to_le_bytes());
+        buf.extend_from_slice(&(m.d_in() as u32).to_le_bytes());
+        buf.push(m.axis.code());
+        let group = if let Axis::Group(g) = m.axis { g } else { 0 };
+        buf.extend_from_slice(&group.to_le_bytes());
+        buf.extend_from_slice(&(m.scales.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&encode_f16_slice(&m.scales));
+        buf.extend_from_slice(&m.mask.to_bytes());
+        let crc = crc32fast::hash(&buf[rec_start..]);
+        buf.extend_from_slice(&crc.to_le_bytes());
+    }
+    let mut f = std::fs::File::create(&path)
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    f.write_all(&buf)?;
+    f.flush()?;
+    Ok(buf.len() as u64)
+}
+
+/// Load a delta model: one sequential read, then zero-copy record parsing.
+pub fn load_delta<P: AsRef<Path>>(path: P) -> Result<DeltaModel> {
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading delta artifact {}", path.as_ref().display()))?;
+    parse_delta(&bytes)
+}
+
+/// Parse a delta model from an in-memory buffer (separated from `load_delta`
+/// so benches can isolate disk vs decode time).
+pub fn parse_delta(bytes: &[u8]) -> Result<DeltaModel> {
+    let mut r = Reader { b: bytes, i: 0 };
+    let magic = r.take(8)?;
+    if magic != MAGIC {
+        bail!("bad magic: not a PAWDELTA artifact");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("unsupported delta version {version}");
+    }
+    let variant = r.str()?;
+    let base_config = r.str()?;
+    let n_modules = r.u32()? as usize;
+    let mut modules = Vec::with_capacity(n_modules);
+    for _ in 0..n_modules {
+        let rec_start = r.i;
+        let name = r.str()?;
+        let id = ModuleId::parse(&name)
+            .ok_or_else(|| anyhow::anyhow!("bad module name '{name}'"))?;
+        let d_out = r.u32()? as usize;
+        let d_in = r.u32()? as usize;
+        let axis_code = r.u8()?;
+        let group = r.u32()?;
+        let axis = Axis::from_code(axis_code, group)?;
+        let n_scales = r.u32()? as usize;
+        if n_scales != axis.n_scales(d_out, d_in) {
+            bail!("scale count {n_scales} inconsistent with axis {axis:?} and shape {d_out}x{d_in}");
+        }
+        let scales = decode_f16_slice(r.take(n_scales * 2)?);
+        let mask_bytes = d_out * PackedMask::words_per_row_for(d_in) * 4;
+        let mask = PackedMask::from_bytes(d_out, d_in, r.take(mask_bytes)?)?;
+        let crc_stored = {
+            let rec_end = r.i;
+            let crc = r.u32()?;
+            let computed = crc32fast::hash(&bytes[rec_start..rec_end]);
+            if crc != computed {
+                bail!("crc mismatch in module record '{name}' (corrupt artifact)");
+            }
+            crc
+        };
+        let _ = crc_stored;
+        modules.push(DeltaModule { id, mask, axis, scales });
+    }
+    if r.i != bytes.len() {
+        bail!("trailing bytes after last module record");
+    }
+    Ok(DeltaModel { variant, base_config, modules })
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated artifact at offset {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        if len > 1 << 20 {
+            bail!("unreasonable string length {len}");
+        }
+        Ok(String::from_utf8(self.take(len)?.to_vec())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ProjKind;
+    use crate::util::rng::Rng;
+
+    fn sample_model() -> DeltaModel {
+        let mut rng = Rng::new(42);
+        let mut modules = Vec::new();
+        for (layer, kind, axis, d_out, d_in) in [
+            (0usize, ProjKind::Q, Axis::Row, 64usize, 64usize),
+            (0, ProjKind::Up, Axis::Col, 160, 64),
+            (1, ProjKind::Down, Axis::Scalar, 64, 160),
+            (1, ProjKind::K, Axis::Group(4), 64, 64),
+        ] {
+            let delta: Vec<f32> =
+                (0..d_out * d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mask = PackedMask::pack(&delta, d_out, d_in);
+            let n = axis.n_scales(d_out, d_in);
+            let scales: Vec<f32> = (0..n).map(|_| rng.uniform_in(0.01, 0.5)).collect();
+            modules.push(DeltaModule { id: ModuleId { layer, kind }, mask, axis, scales });
+        }
+        DeltaModel { variant: "ft-a".into(), base_config: "tiny".into(), modules }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("pawd_test_fmt");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything_but_f16_scales() {
+        let model = sample_model();
+        let p = tmp("roundtrip.pawd");
+        let size = save_delta(&p, &model).unwrap();
+        assert!(size > model.payload_bytes());
+        let loaded = load_delta(&p).unwrap();
+        assert_eq!(loaded.variant, model.variant);
+        assert_eq!(loaded.base_config, model.base_config);
+        assert_eq!(loaded.modules.len(), model.modules.len());
+        for (a, b) in loaded.modules.iter().zip(&model.modules) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.axis, b.axis);
+            assert_eq!(a.mask, b.mask);
+            for (x, y) in a.scales.iter().zip(&b.scales) {
+                assert!((x - y).abs() <= 5e-4 * y.abs().max(1e-3), "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_is_detected_per_record() {
+        let model = sample_model();
+        let p = tmp("corrupt.pawd");
+        save_delta(&p, &model).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Flip one bit inside the mask region of some record.
+        let mid = bytes.len() * 3 / 4;
+        bytes[mid] ^= 0x10;
+        let err = parse_delta(&bytes).unwrap_err().to_string();
+        assert!(err.contains("crc") || err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let model = sample_model();
+        let p = tmp("trunc.pawd");
+        save_delta(&p, &model).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let cut = &bytes[..bytes.len() - 7];
+        assert!(parse_delta(cut).is_err());
+    }
+
+    #[test]
+    fn artifact_much_smaller_than_fp16_dense() {
+        // Storage ratio sanity: 1 bit + per-row f16 vs 16-bit dense.
+        let model = sample_model();
+        let p = tmp("size.pawd");
+        let size = save_delta(&p, &model).unwrap();
+        let dense_fp16: u64 = model
+            .modules
+            .iter()
+            .map(|m| (m.d_out() * m.d_in() * 2) as u64)
+            .sum();
+        assert!(
+            size * 10 < dense_fp16,
+            "delta artifact {size} should be >10x smaller than dense fp16 {dense_fp16}"
+        );
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(parse_delta(b"garbage").is_err());
+        assert!(parse_delta(b"").is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! The paper's core contribution: 1-bit weight deltas with learned per-axis
+//! (row/column) FP16 scales.
+//!
+//! * [`pack`] — sign extraction + bit packing (1 bit along the input axis).
+//! * [`types`] — [`Axis`], [`DeltaModule`], [`DeltaModel`].
+//! * [`calibrate`] — activation-aware scale fitting (AdamW per the paper,
+//!   plus exact closed-form — the objective is quadratic in `v`).
+//! * [`cache`] — calibration (X, Y) caches via forward taps (Alg. 3).
+//! * [`compress`] — per-module row/col selection (Alg. 6) and the
+//!   layer-by-layer model sweep (Alg. 1).
+//! * [`apply`] — the serving hot path: `Ŵ = W_b + v ⊙ B` materialization,
+//!   in-place swap/revert.
+//! * [`format`] — PAWD on-disk artifact + single-read loader.
+//! * [`stats`] — delta anisotropy statistics (§4 limitation study).
+
+pub mod apply;
+pub mod cache;
+pub mod calibrate;
+pub mod compress;
+pub mod format;
+pub mod pack;
+pub mod stats;
+pub mod types;
+
+pub use compress::{compress_model, compress_module, CompressOptions, FitMode, ModuleReport};
+pub use pack::PackedMask;
+pub use types::{Axis, DeltaModel, DeltaModule};

@@ -1,0 +1,203 @@
+//! 1-bit sign masks: extraction and bit packing.
+//!
+//! `B = sign(W_f − W_b) ∈ {−1,+1}^{d_out×d_in}` is packed 1 bit per entry
+//! **along the input axis** (paper §2, "Masks stay packed end-to-end, 1 bit
+//! along input axis"): each output row j occupies `ceil(d_in/32)` u32 words,
+//! bit i of word w being the sign of `ΔW[j, 32w+i]` (1 → +1, 0 → −1; ties
+//! `ΔW == 0` map to +1, matching `jnp.where(delta >= 0, 1, -1)` on the
+//! Python side).
+//!
+//! u32 words (not u64) so the packed buffer can cross the PJRT boundary as
+//! a u32 literal and be expanded in-kernel by the Pallas delta kernels.
+
+/// Packed sign mask for one weight matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedMask {
+    pub d_out: usize,
+    pub d_in: usize,
+    /// Words per output row = ceil(d_in / 32).
+    pub words_per_row: usize,
+    /// `d_out * words_per_row` little-bit-endian words.
+    pub words: Vec<u32>,
+}
+
+impl PackedMask {
+    pub fn words_per_row_for(d_in: usize) -> usize {
+        d_in.div_ceil(32)
+    }
+
+    /// Pack the signs of `delta` (row-major `[d_out, d_in]`).
+    pub fn pack(delta: &[f32], d_out: usize, d_in: usize) -> PackedMask {
+        assert_eq!(delta.len(), d_out * d_in);
+        let wpr = Self::words_per_row_for(d_in);
+        let mut words = vec![0u32; d_out * wpr];
+        for j in 0..d_out {
+            let row = &delta[j * d_in..(j + 1) * d_in];
+            let out = &mut words[j * wpr..(j + 1) * wpr];
+            for (i, &x) in row.iter().enumerate() {
+                // sign(0) -> +1 (bit set), matching the jnp reference.
+                if x >= 0.0 || x.is_nan() {
+                    out[i / 32] |= 1 << (i % 32);
+                }
+            }
+        }
+        PackedMask { d_out, d_in, words_per_row: wpr, words }
+    }
+
+    /// Sign at (j, i) as ±1.0.
+    #[inline]
+    pub fn sign(&self, j: usize, i: usize) -> f32 {
+        debug_assert!(j < self.d_out && i < self.d_in);
+        let w = self.words[j * self.words_per_row + i / 32];
+        // Branchless ±1.0: bit set -> 0x3F800000 (+1.0), clear -> 0xBF800000.
+        f32::from_bits(0x3F80_0000 | (((w >> (i % 32)) & 1) ^ 1) << 31)
+    }
+
+    /// Raw words of row j.
+    #[inline]
+    pub fn row_words(&self, j: usize) -> &[u32] {
+        &self.words[j * self.words_per_row..(j + 1) * self.words_per_row]
+    }
+
+    /// Expand row j into ±1.0 values (length `d_in`). Used by tests and the
+    /// reference apply path; the optimized path consumes words directly.
+    pub fn unpack_row(&self, j: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.d_in);
+        let words = self.row_words(j);
+        for (i, o) in out.iter_mut().enumerate() {
+            let bit = (words[i / 32] >> (i % 32)) & 1;
+            *o = f32::from_bits(0x3F80_0000 | (bit ^ 1) << 31);
+        }
+    }
+
+    /// Dense ±1.0 matrix (test/debug only — defeats the whole point!).
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.d_out * self.d_in];
+        for j in 0..self.d_out {
+            self.unpack_row(j, &mut out[j * self.d_in..(j + 1) * self.d_in]);
+        }
+        out
+    }
+
+    /// Packed payload as little-endian bytes (for the PAWD file format).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.words.len() * 4);
+        for w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(d_out: usize, d_in: usize, bytes: &[u8]) -> anyhow::Result<PackedMask> {
+        let wpr = Self::words_per_row_for(d_in);
+        let expect = d_out * wpr * 4;
+        anyhow::ensure!(
+            bytes.len() == expect,
+            "packed mask byte length {} != expected {expect}",
+            bytes.len()
+        );
+        let words = bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(PackedMask { d_out, d_in, words_per_row: wpr, words })
+    }
+
+    /// Bytes of storage used by the packed mask.
+    pub fn n_bytes(&self) -> u64 {
+        (self.words.len() * 4) as u64
+    }
+
+    /// Fraction of +1 bits (useful delta statistic).
+    pub fn positive_fraction(&self) -> f64 {
+        let mut ones = 0u64;
+        for j in 0..self.d_out {
+            for (wi, &w) in self.row_words(j).iter().enumerate() {
+                // Mask out padding bits in the last word of each row.
+                let valid = if (wi + 1) * 32 <= self.d_in {
+                    32
+                } else {
+                    self.d_in - wi * 32
+                };
+                let mask = if valid == 32 { u32::MAX } else { (1u32 << valid) - 1 };
+                ones += (w & mask).count_ones() as u64;
+            }
+        }
+        ones as f64 / (self.d_out * self.d_in) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_unpack_roundtrips_signs() {
+        let mut r = Rng::new(1);
+        for &(d_out, d_in) in &[(1, 1), (3, 31), (4, 32), (5, 33), (16, 100)] {
+            let delta: Vec<f32> =
+                (0..d_out * d_in).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let m = PackedMask::pack(&delta, d_out, d_in);
+            let dense = m.unpack();
+            for (i, (&d, &s)) in delta.iter().zip(&dense).enumerate() {
+                let want = if d >= 0.0 { 1.0 } else { -1.0 };
+                assert_eq!(s, want, "idx {i}, d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_maps_to_plus_one() {
+        let m = PackedMask::pack(&[0.0, -0.0, 1.0, -1.0], 1, 4);
+        // IEEE: -0.0 >= 0.0 is true, so both zeros -> +1.
+        assert_eq!(m.unpack(), vec![1.0, 1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn sign_accessor_matches_unpack() {
+        let mut r = Rng::new(2);
+        let (d_out, d_in) = (7, 45);
+        let delta: Vec<f32> = (0..d_out * d_in).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let m = PackedMask::pack(&delta, d_out, d_in);
+        let dense = m.unpack();
+        for j in 0..d_out {
+            for i in 0..d_in {
+                assert_eq!(m.sign(j, i), dense[j * d_in + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut r = Rng::new(3);
+        let (d_out, d_in) = (9, 70);
+        let delta: Vec<f32> = (0..d_out * d_in).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let m = PackedMask::pack(&delta, d_out, d_in);
+        let b = m.to_bytes();
+        let m2 = PackedMask::from_bytes(d_out, d_in, &b).unwrap();
+        assert_eq!(m, m2);
+        assert!(PackedMask::from_bytes(d_out, d_in, &b[1..]).is_err());
+    }
+
+    #[test]
+    fn storage_is_one_bit_per_entry_plus_padding() {
+        let m = PackedMask::pack(&vec![1.0; 128 * 256], 128, 256);
+        assert_eq!(m.n_bytes(), 128 * 256 / 8);
+        // Non-multiple-of-32 rows pad to the word boundary.
+        let m = PackedMask::pack(&vec![1.0; 10 * 33], 10, 33);
+        assert_eq!(m.n_bytes(), (10 * 2 * 4) as u64);
+    }
+
+    #[test]
+    fn positive_fraction_balanced_for_random() {
+        let mut r = Rng::new(4);
+        let delta: Vec<f32> = (0..64 * 100).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let m = PackedMask::pack(&delta, 64, 100);
+        let f = m.positive_fraction();
+        assert!((f - 0.5).abs() < 0.03, "fraction {f}");
+        // Padding bits must not count.
+        let all_neg = PackedMask::pack(&vec![-1.0; 5 * 33], 5, 33);
+        assert_eq!(all_neg.positive_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Delta-structure statistics: anisotropy measurements backing the paper's
+//! §4 limitation discussion ("gains rely on the anisotropy of the
+//! task-induced deltas across rows/columns") and our ablation A1.
+
+/// Per-module delta statistics.
+#[derive(Clone, Debug)]
+pub struct DeltaStats {
+    pub d_out: usize,
+    pub d_in: usize,
+    /// Frobenius norm of ΔW.
+    pub delta_norm: f64,
+    /// ‖ΔW‖ / ‖W_b‖ — how far the fine-tune moved.
+    pub relative_norm: f64,
+    /// Coefficient of variation of per-row mean |ΔW| (row anisotropy).
+    pub row_cv: f64,
+    /// Coefficient of variation of per-column mean |ΔW| (col anisotropy).
+    pub col_cv: f64,
+}
+
+pub fn delta_stats(w_base: &[f32], w_ft: &[f32], d_out: usize, d_in: usize) -> DeltaStats {
+    assert_eq!(w_base.len(), d_out * d_in);
+    assert_eq!(w_ft.len(), d_out * d_in);
+    let mut row_mean = vec![0f64; d_out];
+    let mut col_mean = vec![0f64; d_in];
+    let mut dsq = 0f64;
+    let mut bsq = 0f64;
+    for j in 0..d_out {
+        for i in 0..d_in {
+            let idx = j * d_in + i;
+            let d = (w_ft[idx] - w_base[idx]) as f64;
+            let ad = d.abs();
+            row_mean[j] += ad;
+            col_mean[i] += ad;
+            dsq += d * d;
+            bsq += (w_base[idx] as f64) * (w_base[idx] as f64);
+        }
+    }
+    for r in &mut row_mean {
+        *r /= d_in as f64;
+    }
+    for c in &mut col_mean {
+        *c /= d_out as f64;
+    }
+    DeltaStats {
+        d_out,
+        d_in,
+        delta_norm: dsq.sqrt(),
+        relative_norm: if bsq > 0.0 { (dsq / bsq).sqrt() } else { 0.0 },
+        row_cv: cv(&row_mean),
+        col_cv: cv(&col_mean),
+    }
+}
+
+/// Coefficient of variation (std / mean).
+fn cv(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    if mean <= 0.0 {
+        return 0.0;
+    }
+    let var = xs.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+    var.sqrt() / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn isotropic_delta_has_low_cv() {
+        let mut rng = Rng::new(1);
+        let (d_out, d_in) = (32, 48);
+        let base = vec![0f32; d_out * d_in];
+        let ft: Vec<f32> = (0..d_out * d_in).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+        let s = delta_stats(&base, &ft, d_out, d_in);
+        assert!(s.row_cv < 0.3, "row_cv={}", s.row_cv);
+        assert!(s.col_cv < 0.3, "col_cv={}", s.col_cv);
+    }
+
+    #[test]
+    fn row_scaled_delta_has_high_row_cv() {
+        let mut rng = Rng::new(2);
+        let (d_out, d_in) = (32, 48);
+        let base = vec![0f32; d_out * d_in];
+        let mut ft = vec![0f32; d_out * d_in];
+        for j in 0..d_out {
+            let scale = (rng.normal_f32(0.0, 1.5)).exp();
+            for i in 0..d_in {
+                ft[j * d_in + i] = 0.05 * scale * rng.normal_f32(0.0, 1.0);
+            }
+        }
+        let s = delta_stats(&base, &ft, d_out, d_in);
+        assert!(s.row_cv > 0.8, "row_cv={}", s.row_cv);
+        assert!(s.row_cv > s.col_cv * 2.0, "row {} col {}", s.row_cv, s.col_cv);
+    }
+
+    #[test]
+    fn relative_norm_zero_for_identical() {
+        let base = vec![1f32; 16];
+        let s = delta_stats(&base, &base, 4, 4);
+        assert_eq!(s.delta_norm, 0.0);
+        assert_eq!(s.relative_norm, 0.0);
+    }
+}

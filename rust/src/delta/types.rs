@@ -1,0 +1,176 @@
+//! Core delta types: scaling axis, per-module delta, whole-model delta.
+
+use super::pack::PackedMask;
+use crate::model::{ModuleId, ProjKind};
+
+/// Scale parameterization for the 1-bit delta of one weight matrix
+/// `[d_out, d_in]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Axis {
+    /// One scale per output row: `Ŵ[j,·] = W_b[j,·] + v[j]·B[j,·]`
+    /// (the paper's "row" mode).
+    Row,
+    /// One scale per input column: `Ŵ[·,i] = W_b[·,i] + v[i]·B[·,i]`
+    /// (the paper's "col" mode).
+    Col,
+    /// Single scalar per matrix — the BitDelta baseline (Liu et al., 2024).
+    Scalar,
+    /// Blockwise per-group scales over consecutive output rows (the paper's
+    /// §5 future-work extension); `group = 1` degenerates to `Row`,
+    /// `group >= d_out` to `Scalar`.
+    Group(u32),
+}
+
+impl Axis {
+    /// Number of scale values for a `[d_out, d_in]` matrix.
+    pub fn n_scales(&self, d_out: usize, d_in: usize) -> usize {
+        match self {
+            Axis::Row => d_out,
+            Axis::Col => d_in,
+            Axis::Scalar => 1,
+            Axis::Group(g) => d_out.div_ceil((*g).max(1) as usize),
+        }
+    }
+
+    pub fn code(&self) -> u8 {
+        match self {
+            Axis::Row => 0,
+            Axis::Col => 1,
+            Axis::Scalar => 2,
+            Axis::Group(_) => 3,
+        }
+    }
+
+    pub fn from_code(code: u8, group: u32) -> anyhow::Result<Axis> {
+        Ok(match code {
+            0 => Axis::Row,
+            1 => Axis::Col,
+            2 => Axis::Scalar,
+            3 => Axis::Group(group),
+            other => anyhow::bail!("unknown axis code {other}"),
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Axis::Row => "row".into(),
+            Axis::Col => "col".into(),
+            Axis::Scalar => "scalar".into(),
+            Axis::Group(g) => format!("group{g}"),
+        }
+    }
+}
+
+/// Compressed delta for one patchable module.
+#[derive(Clone, Debug)]
+pub struct DeltaModule {
+    pub id: ModuleId,
+    pub mask: PackedMask,
+    pub axis: Axis,
+    /// Scale vector, length `axis.n_scales(d_out, d_in)`. Stored FP16 on
+    /// disk (paper: "vectors v are FP16"), f32 in memory.
+    pub scales: Vec<f32>,
+}
+
+impl DeltaModule {
+    pub fn d_out(&self) -> usize {
+        self.mask.d_out
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.mask.d_in
+    }
+
+    /// Scale applying to entry (j, i).
+    #[inline]
+    pub fn scale_at(&self, j: usize, i: usize) -> f32 {
+        match self.axis {
+            Axis::Row => self.scales[j],
+            Axis::Col => self.scales[i],
+            Axis::Scalar => self.scales[0],
+            Axis::Group(g) => self.scales[j / g.max(1) as usize],
+        }
+    }
+
+    /// On-disk payload bytes (mask + FP16 scales), excluding record header.
+    pub fn payload_bytes(&self) -> u64 {
+        self.mask.n_bytes() + (self.scales.len() * 2) as u64
+    }
+}
+
+/// Whole-model compressed delta (one fine-tuned variant).
+#[derive(Clone, Debug)]
+pub struct DeltaModel {
+    /// Name of the fine-tuned variant this delta reconstructs.
+    pub variant: String,
+    /// Base model config name (the delta only applies on that base).
+    pub base_config: String,
+    pub modules: Vec<DeltaModule>,
+}
+
+impl DeltaModel {
+    /// Total payload bytes across modules.
+    pub fn payload_bytes(&self) -> u64 {
+        self.modules.iter().map(|m| m.payload_bytes()).sum()
+    }
+
+    /// Count of modules per (sub-type, axis) — the Figure 2 statistic.
+    pub fn axis_counts_by_kind(&self) -> Vec<(ProjKind, usize, usize)> {
+        ProjKind::ALL
+            .iter()
+            .map(|&kind| {
+                let row = self
+                    .modules
+                    .iter()
+                    .filter(|m| m.id.kind == kind && m.axis == Axis::Row)
+                    .count();
+                let col = self
+                    .modules
+                    .iter()
+                    .filter(|m| m.id.kind == kind && m.axis == Axis::Col)
+                    .count();
+                (kind, row, col)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn n_scales_per_axis() {
+        assert_eq!(Axis::Row.n_scales(8, 16), 8);
+        assert_eq!(Axis::Col.n_scales(8, 16), 16);
+        assert_eq!(Axis::Scalar.n_scales(8, 16), 1);
+        assert_eq!(Axis::Group(4).n_scales(8, 16), 2);
+        assert_eq!(Axis::Group(3).n_scales(8, 16), 3); // ceil(8/3)
+        assert_eq!(Axis::Group(100).n_scales(8, 16), 1);
+    }
+
+    #[test]
+    fn axis_code_roundtrip() {
+        for a in [Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(32)] {
+            let g = if let Axis::Group(g) = a { g } else { 0 };
+            assert_eq!(Axis::from_code(a.code(), g).unwrap(), a);
+        }
+        assert!(Axis::from_code(9, 0).is_err());
+    }
+
+    #[test]
+    fn scale_at_indexing() {
+        use crate::model::{ModuleId, ProjKind};
+        let mask = PackedMask::pack(&vec![1.0; 6 * 4], 6, 4);
+        let m = DeltaModule {
+            id: ModuleId { layer: 0, kind: ProjKind::Q },
+            mask,
+            axis: Axis::Group(2),
+            scales: vec![10.0, 20.0, 30.0],
+        };
+        assert_eq!(m.scale_at(0, 3), 10.0);
+        assert_eq!(m.scale_at(1, 0), 10.0);
+        assert_eq!(m.scale_at(2, 0), 20.0);
+        assert_eq!(m.scale_at(5, 1), 30.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Teacher-fidelity metrics: how closely a compressed student reproduces
+//! the fine-tuned teacher's *behaviour* (the paper's "preserve the function
+//! the network computes" objective, §2 "Prior evidence against weight
+//! reconstruction").
+
+use crate::model::{FlatParams, Transformer};
+use crate::tensor::ops::log_softmax_into;
+
+/// Fidelity of `student` against `teacher` measured on a set of documents.
+#[derive(Clone, Debug, Default)]
+pub struct Fidelity {
+    /// Mean squared error between logits.
+    pub logit_mse: f64,
+    /// Mean KL(teacher ‖ student) per token (nats).
+    pub kl: f64,
+    /// Fraction of positions where the argmax token agrees.
+    pub agreement: f64,
+    pub n_tokens: usize,
+}
+
+pub fn fidelity(
+    tf: &Transformer,
+    teacher: &FlatParams,
+    student: &FlatParams,
+    docs: &[Vec<u8>],
+) -> Fidelity {
+    let vocab = tf.cfg.vocab;
+    let mut mse = 0f64;
+    let mut kl = 0f64;
+    let mut agree = 0usize;
+    let mut n = 0usize;
+    let mut lt = vec![0f32; vocab];
+    let mut ls = vec![0f32; vocab];
+    for doc in docs {
+        if doc.len() < 2 {
+            continue;
+        }
+        let t_logits = tf.forward_one(teacher, doc);
+        let s_logits = tf.forward_one(student, doc);
+        for pos in 0..doc.len() {
+            let (tr, sr) = (t_logits.row(pos), s_logits.row(pos));
+            let mut row_mse = 0f64;
+            for (a, b) in tr.iter().zip(sr) {
+                let d = (a - b) as f64;
+                row_mse += d * d;
+            }
+            mse += row_mse / vocab as f64;
+            log_softmax_into(tr, &mut lt);
+            log_softmax_into(sr, &mut ls);
+            let mut row_kl = 0f64;
+            for (a, b) in lt.iter().zip(&ls) {
+                row_kl += (a.exp() as f64) * ((a - b) as f64);
+            }
+            kl += row_kl;
+            let t_arg = argmax(tr);
+            let s_arg = argmax(sr);
+            if t_arg == s_arg {
+                agree += 1;
+            }
+            n += 1;
+        }
+    }
+    if n == 0 {
+        return Fidelity::default();
+    }
+    Fidelity {
+        logit_mse: mse / n as f64,
+        kl: kl / n as f64,
+        agreement: agree as f64 / n as f64,
+        n_tokens: n,
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = (f32::NEG_INFINITY, 0usize);
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best.0 {
+            best = (x, i);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::synth::{synth_finetune, SynthDeltaSpec};
+
+    #[test]
+    fn self_fidelity_is_perfect() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let p = FlatParams::init(&cfg, 1);
+        let tf = Transformer::new(&cfg);
+        let docs = vec![vec![1u8, 2, 3, 4, 5, 6, 7, 8]];
+        let f = fidelity(&tf, &p, &p, &docs);
+        assert_eq!(f.logit_mse, 0.0);
+        assert!(f.kl.abs() < 1e-9);
+        assert_eq!(f.agreement, 1.0);
+        assert_eq!(f.n_tokens, 8);
+    }
+
+    #[test]
+    fn fidelity_degrades_with_perturbation_size() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let p = FlatParams::init(&cfg, 2);
+        let tf = Transformer::new(&cfg);
+        let small = synth_finetune(
+            &p,
+            &SynthDeltaSpec { magnitude: 0.005, anisotropy: 0.5, ..Default::default() },
+        );
+        let large = synth_finetune(
+            &p,
+            &SynthDeltaSpec { magnitude: 0.1, anisotropy: 0.5, ..Default::default() },
+        );
+        let docs = vec![(10..40u8).collect::<Vec<u8>>()];
+        let fs = fidelity(&tf, &p, &small, &docs);
+        let fl = fidelity(&tf, &p, &large, &docs);
+        assert!(fs.logit_mse < fl.logit_mse);
+        assert!(fs.kl < fl.kl);
+        assert!(fs.agreement >= fl.agreement);
+    }
+
+    #[test]
+    fn kl_is_nonnegative() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let a = FlatParams::init(&cfg, 3);
+        let b = FlatParams::init(&cfg, 4);
+        let tf = Transformer::new(&cfg);
+        let docs = vec![(0..30u8).collect::<Vec<u8>>()];
+        let f = fidelity(&tf, &a, &b, &docs);
+        assert!(f.kl >= -1e-9, "kl={}", f.kl);
+    }
+}

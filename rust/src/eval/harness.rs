@@ -1,0 +1,169 @@
+//! Zero-shot multiple-choice accuracy (the paper's Table 1 metric).
+//!
+//! Scoring follows lm-eval-harness: for each item, every choice text is
+//! appended to the prompt and scored by the sum of completion-token
+//! log-likelihoods; the argmax choice is the prediction. Items are scored
+//! in parallel across a thread pool (the native engine) — the serving path
+//! in `coordinator` runs the same computation through batched AOT forwards.
+
+use crate::data::corpus::encode;
+use crate::data::tasks::{McItem, TaskFamily};
+use crate::model::{FlatParams, Transformer};
+use crate::util::par;
+use std::sync::Mutex;
+
+/// Result of one task family.
+#[derive(Clone, Debug)]
+pub struct FamilyResult {
+    pub family: TaskFamily,
+    pub n_items: usize,
+    pub n_correct: usize,
+}
+
+impl FamilyResult {
+    pub fn accuracy(&self) -> f64 {
+        if self.n_items == 0 {
+            0.0
+        } else {
+            self.n_correct as f64 / self.n_items as f64
+        }
+    }
+}
+
+/// Full-suite result (all five families + average, a Table-1 row).
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    pub label: String,
+    pub families: Vec<FamilyResult>,
+}
+
+impl SuiteResult {
+    pub fn average(&self) -> f64 {
+        if self.families.is_empty() {
+            return 0.0;
+        }
+        self.families.iter().map(|f| f.accuracy()).sum::<f64>() / self.families.len() as f64
+    }
+
+    /// Accuracy for one family (percent).
+    pub fn pct(&self, family: TaskFamily) -> f64 {
+        self.families
+            .iter()
+            .find(|f| f.family == family)
+            .map(|f| f.accuracy() * 100.0)
+            .unwrap_or(f64::NAN)
+    }
+}
+
+/// Score one MC item: returns the predicted choice index.
+pub fn predict(tf: &Transformer, params: &FlatParams, item: &McItem) -> usize {
+    let mut best = (f64::NEG_INFINITY, 0usize);
+    for (ci, choice) in item.choices.iter().enumerate() {
+        let full = encode(&format!("{}{}", item.prompt, choice));
+        let full = clamp_tokens(full, tf.cfg.max_seq);
+        // The choice is the tail of the sequence; score exactly its tokens
+        // (robust under prompt clamping). Length-normalized as lm-eval does.
+        let choice_len = encode(choice).len().min(full.len() - 1).max(1);
+        let start = full.len() - choice_len;
+        let score = tf.score_span(params, &full, start..full.len());
+        let s = score / choice_len as f64;
+        if s > best.0 {
+            best = (s, ci);
+        }
+    }
+    best.1
+}
+
+/// Keep the *tail* of an over-long sequence (the answer span must survive).
+fn clamp_tokens(tokens: Vec<u8>, max: usize) -> Vec<u8> {
+    if tokens.len() <= max {
+        tokens
+    } else {
+        tokens[tokens.len() - max..].to_vec()
+    }
+}
+
+/// Accuracy of `params` on a set of items (parallel over items).
+pub fn mc_accuracy(tf: &Transformer, params: &FlatParams, items: &[McItem]) -> FamilyResult {
+    let family = items.first().map(|i| i.family).unwrap_or(TaskFamily::AttrEasy);
+    let correct = Mutex::new(0usize);
+    par::parallel_items(items.len(), 16, |i| {
+        if predict(tf, params, &items[i]) == items[i].correct {
+            *correct.lock().unwrap() += 1;
+        }
+    });
+    FamilyResult { family, n_items: items.len(), n_correct: correct.into_inner().unwrap() }
+}
+
+/// Evaluate all five families, `n_per_family` items each.
+pub fn evaluate_suite(
+    label: &str,
+    tf: &Transformer,
+    params: &FlatParams,
+    world: &crate::data::World,
+    n_per_family: usize,
+    seed: u64,
+) -> SuiteResult {
+    let families = TaskFamily::ALL
+        .iter()
+        .map(|&fam| {
+            let items = crate::data::tasks::eval_items(world, fam, n_per_family, seed);
+            mc_accuracy(tf, params, &items)
+        })
+        .collect();
+    SuiteResult { label: label.to_string(), families }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::eval_items;
+    use crate::data::World;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn random_model_is_near_chance() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let params = FlatParams::init(&cfg, 1);
+        let tf = Transformer::new(&cfg);
+        let world = World::generate(3, 24);
+        let items = eval_items(&world, TaskFamily::AttrEasy, 40, 5);
+        let res = mc_accuracy(&tf, &params, &items);
+        // 4-way chance = 25%; a random-init byte LM should be within noise.
+        let acc = res.accuracy();
+        assert!((0.0..=0.6).contains(&acc), "acc={acc}");
+        assert_eq!(res.n_items, 40);
+    }
+
+    #[test]
+    fn predict_is_deterministic() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let params = FlatParams::init(&cfg, 2);
+        let tf = Transformer::new(&cfg);
+        let world = World::generate(4, 24);
+        let items = eval_items(&world, TaskFamily::Physical, 10, 6);
+        for it in &items {
+            assert_eq!(predict(&tf, &params, it), predict(&tf, &params, it));
+        }
+    }
+
+    #[test]
+    fn suite_has_five_families() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let params = FlatParams::init(&cfg, 3);
+        let tf = Transformer::new(&cfg);
+        let world = World::generate(5, 24);
+        let res = evaluate_suite("test", &tf, &params, &world, 5, 7);
+        assert_eq!(res.families.len(), 5);
+        let avg = res.average();
+        assert!((0.0..=1.0).contains(&avg));
+    }
+
+    #[test]
+    fn clamp_keeps_tail() {
+        let t: Vec<u8> = (0..100).collect();
+        let c = clamp_tokens(t, 10);
+        assert_eq!(c.len(), 10);
+        assert_eq!(c[9], 99);
+    }
+}

@@ -1,0 +1,7 @@
+//! Evaluation harness: zero-shot multiple-choice accuracy (lm-eval-harness
+//! scoring rule), perplexity, and teacher-fidelity metrics.
+
+pub mod fidelity;
+pub mod harness;
+
+pub use harness::{evaluate_suite, mc_accuracy, SuiteResult};

@@ -1,0 +1,32 @@
+//! # pawd — Per-Axis Weight Deltas for Frequent Model Updates
+//!
+//! Production-style reproduction of *"Per-Axis Weight Deltas for Frequent
+//! Model Updates"* (NeurIPS 2025 CCFM workshop): a 1-bit delta compression
+//! scheme for fine-tuned checkpoints (`Ŵ = v ⊙ sign(W_f − W_b) + W_b` with
+//! learned per-row/column FP16 scales) integrated into a multi-variant
+//! serving coordinator.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — serving coordinator (router, dynamic batcher,
+//!   variant cache, hot-swap loader) plus the full delta compression
+//!   library and all substrates (tensor math, transformer, synthetic data,
+//!   eval harness).
+//! * **L2 (python/compile)** — JAX transformer fwd / fused-AdamW train step
+//!   / logit-matching grad, AOT-lowered to HLO text once at build time.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the packed-sign
+//!   delta apply and the fused delta-GEMM, lowered into the same HLO.
+//!
+//! Python never runs at serving time: `rust/src/runtime` loads the HLO
+//! artifacts through the PJRT CPU client (`xla` crate) and executes them
+//! from the Rust hot path.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod delta;
+pub mod eval;
+pub mod model;
+pub mod pipeline;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

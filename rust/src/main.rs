@@ -1,0 +1,150 @@
+//! `pawd` CLI — leader entrypoint for the serving stack and the offline
+//! compression pipeline. Hand-rolled argument parsing (clap is unavailable
+//! offline).
+
+use anyhow::{bail, Context, Result};
+use pawd::coordinator::{Engine, Server, ServerConfig, VariantStore};
+use pawd::delta::format::load_delta;
+use pawd::model::checkpoint::load_fp16;
+use pawd::model::ModelConfig;
+use pawd::pipeline::PairConfig;
+use pawd::util::benchkit::fmt_bytes;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const USAGE: &str = "\
+pawd — Per-Axis Weight Deltas for Frequent Model Updates
+
+USAGE:
+  pawd pipeline <config> <out_dir> [--full]      train pair + compress + eval (needs artifacts)
+  pawd inspect <file.pawd>                       describe a delta artifact
+  pawd apply <base.fp16> <delta.pawd> <out.fp16> materialize a variant checkpoint
+  pawd serve <base.fp16> <variant_dir>           start the serving coordinator (demo loop)
+  pawd bench-load <base.fp16> <variant_dir> <n>  time cold loads of every variant n times
+  pawd presets                                   list model config presets
+
+Artifacts are built with `make artifacts`; examples/ and benches/ cover the
+paper's experiments (see DESIGN.md / EXPERIMENTS.md).";
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("pipeline") => cmd_pipeline(&args[1..]),
+        Some("inspect") => cmd_inspect(&args[1..]),
+        Some("apply") => cmd_apply(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("bench-load") => cmd_bench_load(&args[1..]),
+        Some("presets") => {
+            for p in ["tiny", "llama-mini", "qwen-mini", "phi-mini", "base-110m"] {
+                let c = ModelConfig::preset(p).unwrap();
+                println!(
+                    "{:<12} dim {:>4}  layers {:>2}  heads {:>2}  ff {:>4}  params {:>7.2}M",
+                    c.name,
+                    c.dim,
+                    c.n_layers,
+                    c.n_heads,
+                    c.ff,
+                    c.n_params() as f64 / 1e6
+                );
+            }
+            Ok(())
+        }
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_pipeline(args: &[String]) -> Result<()> {
+    let config = args.first().context("missing <config>")?;
+    let out_dir = PathBuf::from(args.get(1).context("missing <out_dir>")?);
+    let full = args.iter().any(|a| a == "--full");
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let h = pawd::runtime::start(&artifacts)?;
+    let pc = if full { PairConfig::full(config) } else { PairConfig::quick(config) };
+    let methods = vec![
+        ("BitDelta (scalar)", pawd::baselines::bitdelta_options(), false),
+        ("Vector (row/col)", pawd::baselines::vector_options(), true),
+    ];
+    let res = pawd::pipeline::run_pair(&h, &pc, &methods, &out_dir, |m| println!("{m}"))?;
+    println!("\nbaseline avg {:.2}%", res.baseline_suite.average() * 100.0);
+    for m in &res.methods {
+        println!(
+            "{:<20} avg {:.2}%  artifact {} ({:.2}x smaller than fp16)",
+            m.method,
+            m.suite.average() * 100.0,
+            fmt_bytes(m.artifact_bytes),
+            res.fp16_bytes as f64 / m.artifact_bytes as f64
+        );
+    }
+    h.shutdown();
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let path = args.first().context("missing <file.pawd>")?;
+    let model = load_delta(path)?;
+    println!("variant      : {}", model.variant);
+    println!("base config  : {}", model.base_config);
+    println!("modules      : {}", model.modules.len());
+    println!("payload      : {}", fmt_bytes(model.payload_bytes()));
+    for (kind, row, col) in model.axis_counts_by_kind() {
+        println!("  {:<10} row {:>3}  col {:>3}", kind.name(), row, col);
+    }
+    Ok(())
+}
+
+fn cmd_apply(args: &[String]) -> Result<()> {
+    let base = load_fp16(args.first().context("missing <base.fp16>")?)?;
+    let delta = load_delta(args.get(1).context("missing <delta.pawd>")?)?;
+    if delta.base_config != base.cfg().name {
+        bail!("delta targets '{}', base is '{}'", delta.base_config, base.cfg().name);
+    }
+    let variant = pawd::delta::apply::materialize(&base, &delta.modules);
+    let out = args.get(2).context("missing <out.fp16>")?;
+    let bytes = pawd::model::checkpoint::save_fp16(out, &variant)?;
+    println!("wrote {} ({})", out, fmt_bytes(bytes));
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let base = Arc::new(load_fp16(args.first().context("missing <base.fp16>")?)?);
+    let dir = PathBuf::from(args.get(1).context("missing <variant_dir>")?);
+    let store = VariantStore::new(base, &dir);
+    let names = store.list()?;
+    println!("serving {} variants from {}: {:?}", names.len(), dir.display(), names);
+    let server = Server::start(store, Engine::Native, ServerConfig::default());
+    let client = server.client();
+    // Demo loop: probe each variant once, print metrics, exit. (A network
+    // front-end would sit on `Server::client()`.)
+    for name in &names {
+        let resp = client.score(name, "Q: health probe? A: ", &["ok".into(), "bad".into()]);
+        println!("  {name}: ok={:?} in {:?}", resp.result.is_ok(), resp.timing.total);
+    }
+    let snap = server.metrics.snapshot();
+    println!("served {} requests, {} cold starts", snap.served, snap.cold_starts);
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_bench_load(args: &[String]) -> Result<()> {
+    let base = Arc::new(load_fp16(args.first().context("missing <base.fp16>")?)?);
+    let dir = PathBuf::from(args.get(1).context("missing <variant_dir>")?);
+    let n: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(10);
+    let store = VariantStore::new(base, &dir);
+    for name in store.list()? {
+        let mut times = Vec::new();
+        for _ in 0..n {
+            let v = store.load(&name)?;
+            times.push(v.load_time.as_secs_f64());
+        }
+        let s = pawd::util::stats::Summary::of(&times);
+        println!(
+            "{name}: mean {:.2}ms p50 {:.2}ms over {n} loads",
+            s.mean * 1e3,
+            s.p50 * 1e3
+        );
+    }
+    Ok(())
+}

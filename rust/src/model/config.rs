@@ -1,0 +1,157 @@
+//! Model configurations.
+//!
+//! The paper evaluates three base/fine-tune pairs (Llama-3.1-8B, Qwen3-14B,
+//! Phi-4). Offline we cannot load those checkpoints, so each pair is
+//! replaced by a *-mini* preset with a distinct width/depth/FF-ratio (the
+//! axis-preference statistics of Figure 2 depend on weight aspect ratios,
+//! so the presets deliberately differ in that respect). `base-110m` exists
+//! for larger-scale runs of the same pipeline.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Byte-level vocabulary (256) in all presets.
+    pub vocab: usize,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// MLP hidden width.
+    pub ff: usize,
+    /// Maximum sequence length (RoPE table size, AOT shape bound).
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    /// Total number of f32 parameters in the flat layout.
+    pub fn n_params(&self) -> usize {
+        let d = self.dim;
+        let f = self.ff;
+        let v = self.vocab;
+        // embed + L * (attn_norm + q,k,v,o + mlp_norm + gate,up,down) + final_norm + lm_head
+        v * d + self.n_layers * (d + 4 * d * d + d + 2 * f * d + d * f) + d + v * d
+    }
+
+    /// Number of patchable linear modules (attention + MLP projections).
+    pub fn n_patchable(&self) -> usize {
+        self.n_layers * 7
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.dim % self.n_heads != 0 {
+            bail!("dim {} not divisible by n_heads {}", self.dim, self.n_heads);
+        }
+        if self.head_dim() % 2 != 0 {
+            bail!("head_dim {} must be even for RoPE", self.head_dim());
+        }
+        if self.vocab == 0 || self.n_layers == 0 || self.max_seq == 0 {
+            bail!("degenerate config");
+        }
+        Ok(())
+    }
+
+    /// Named presets. The three *-mini configs are the stand-ins for the
+    /// paper's three model pairs; `tiny` is for unit tests; `base-110m`
+    /// matches the scale target in the repro instructions.
+    pub fn preset(name: &str) -> Result<ModelConfig> {
+        let c = match name {
+            "tiny" => ModelConfig {
+                name: "tiny".into(),
+                vocab: 256,
+                dim: 64,
+                n_layers: 2,
+                n_heads: 2,
+                ff: 128,
+                max_seq: 64,
+            },
+            // Llama-like FF ratio (~2.7x, SwiGLU style).
+            "llama-mini" => ModelConfig {
+                name: "llama-mini".into(),
+                vocab: 256,
+                dim: 256,
+                n_layers: 4,
+                n_heads: 4,
+                ff: 688,
+                max_seq: 128,
+            },
+            // Qwen-like 4x FF ratio, slightly wider/deeper.
+            "qwen-mini" => ModelConfig {
+                name: "qwen-mini".into(),
+                vocab: 256,
+                dim: 320,
+                n_layers: 5,
+                n_heads: 5,
+                ff: 1280,
+                max_seq: 128,
+            },
+            // Phi-like: deeper, narrower FF.
+            "phi-mini" => ModelConfig {
+                name: "phi-mini".into(),
+                vocab: 256,
+                dim: 288,
+                n_layers: 6,
+                n_heads: 6,
+                ff: 864,
+                max_seq: 128,
+            },
+            "base-110m" => ModelConfig {
+                name: "base-110m".into(),
+                vocab: 256,
+                dim: 768,
+                n_layers: 12,
+                n_heads: 12,
+                ff: 3072,
+                max_seq: 256,
+            },
+            other => bail!("unknown model preset '{other}'"),
+        };
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn all_pair_presets() -> Vec<&'static str> {
+        vec!["llama-mini", "qwen-mini", "phi-mini"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for name in ["tiny", "llama-mini", "qwen-mini", "phi-mini", "base-110m"] {
+            let c = ModelConfig::preset(name).unwrap();
+            assert_eq!(c.name, name);
+            assert!(c.n_params() > 0);
+        }
+        assert!(ModelConfig::preset("nope").is_err());
+    }
+
+    #[test]
+    fn param_count_formula_tiny() {
+        let c = ModelConfig::preset("tiny").unwrap();
+        // embed 256*64 + 2*(64 + 4*64*64 + 64 + 2*128*64 + 64*128) + 64 + 256*64
+        let want = 256 * 64 + 2 * (64 + 4 * 64 * 64 + 64 + 2 * 128 * 64 + 64 * 128) + 64 + 256 * 64;
+        assert_eq!(c.n_params(), want);
+    }
+
+    #[test]
+    fn base_110m_is_roughly_110m() {
+        let c = ModelConfig::preset("base-110m").unwrap();
+        let m = c.n_params() as f64 / 1e6;
+        assert!((100.0..130.0).contains(&m), "params = {m}M");
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ModelConfig::preset("tiny").unwrap();
+        c.n_heads = 3; // 64 % 3 != 0
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Model substrate: configuration presets, the flat parameter layout shared
+//! with the JAX side, a native Rust transformer forward pass (parity oracle
+//! and fallback engine), FP16 full checkpoints (the baseline artifact), and
+//! a controlled synthetic fine-tune generator.
+
+pub mod checkpoint;
+pub mod config;
+pub mod params;
+pub mod synth;
+pub mod transformer;
+
+pub use config::ModelConfig;
+pub use params::{FlatParams, Layout, ModuleId, ProjKind};
+pub use transformer::Transformer;

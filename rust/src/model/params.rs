@@ -1,0 +1,332 @@
+//! Flat parameter layout, shared bit-for-bit with `python/compile/model.py`.
+//!
+//! All parameters live in one contiguous f32 vector so the AOT programs take
+//! a single `params` argument and the serving path can materialize a variant
+//! with one allocation + one fused apply pass. Layout (offsets in f32s):
+//!
+//! ```text
+//! embed            [vocab, dim]
+//! for l in 0..L:
+//!   attn_norm      [dim]
+//!   wq, wk, wv, wo [dim, dim]        (row-major, [d_out, d_in])
+//!   mlp_norm       [dim]
+//!   w_gate, w_up   [ff, dim]
+//!   w_down         [dim, ff]
+//! final_norm       [dim]
+//! lm_head          [vocab, dim]
+//! ```
+//!
+//! The seven per-layer projection matrices are the *patchable modules* the
+//! paper compresses (attention + MLP projections; norms/embeddings are left
+//! untouched, matching §4).
+
+use super::config::ModelConfig;
+use crate::tensor::Tensor2;
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// Kind of patchable linear projection, with the paper's sub-type naming
+/// (Figure 2 reports axis counts per sub-type).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ProjKind {
+    Q,
+    K,
+    V,
+    O,
+    Gate,
+    Up,
+    Down,
+}
+
+impl ProjKind {
+    pub const ALL: [ProjKind; 7] =
+        [ProjKind::Q, ProjKind::K, ProjKind::V, ProjKind::O, ProjKind::Gate, ProjKind::Up, ProjKind::Down];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProjKind::Q => "q_proj",
+            ProjKind::K => "k_proj",
+            ProjKind::V => "v_proj",
+            ProjKind::O => "o_proj",
+            ProjKind::Gate => "gate_proj",
+            ProjKind::Up => "up_proj",
+            ProjKind::Down => "down_proj",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ProjKind> {
+        ProjKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    /// `[d_out, d_in]` for this projection under `cfg`.
+    pub fn shape(&self, cfg: &ModelConfig) -> (usize, usize) {
+        let (d, f) = (cfg.dim, cfg.ff);
+        match self {
+            ProjKind::Q | ProjKind::K | ProjKind::V | ProjKind::O => (d, d),
+            ProjKind::Gate | ProjKind::Up => (f, d),
+            ProjKind::Down => (d, f),
+        }
+    }
+}
+
+/// Identifier of one patchable module (layer index + projection kind).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModuleId {
+    pub layer: usize,
+    pub kind: ProjKind,
+}
+
+impl fmt::Display for ModuleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "layers.{}.{}", self.layer, self.kind.name())
+    }
+}
+
+impl ModuleId {
+    pub fn parse(s: &str) -> Option<ModuleId> {
+        let rest = s.strip_prefix("layers.")?;
+        let (layer_s, kind_s) = rest.split_once('.')?;
+        Some(ModuleId { layer: layer_s.parse().ok()?, kind: ProjKind::parse(kind_s)? })
+    }
+}
+
+/// Offsets of every parameter tensor within the flat vector.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub cfg: ModelConfig,
+    pub embed: usize,
+    pub layers: Vec<LayerOffsets>,
+    pub final_norm: usize,
+    pub lm_head: usize,
+    pub total: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerOffsets {
+    pub attn_norm: usize,
+    pub wq: usize,
+    pub wk: usize,
+    pub wv: usize,
+    pub wo: usize,
+    pub mlp_norm: usize,
+    pub w_gate: usize,
+    pub w_up: usize,
+    pub w_down: usize,
+}
+
+impl Layout {
+    pub fn new(cfg: &ModelConfig) -> Layout {
+        let (v, d, f) = (cfg.vocab, cfg.dim, cfg.ff);
+        let mut off = 0usize;
+        let mut take = |n: usize| {
+            let o = off;
+            off += n;
+            o
+        };
+        let embed = take(v * d);
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            layers.push(LayerOffsets {
+                attn_norm: take(d),
+                wq: take(d * d),
+                wk: take(d * d),
+                wv: take(d * d),
+                wo: take(d * d),
+                mlp_norm: take(d),
+                w_gate: take(f * d),
+                w_up: take(f * d),
+                w_down: take(d * f),
+            });
+        }
+        let final_norm = take(d);
+        let lm_head = take(v * d);
+        let layout = Layout { cfg: cfg.clone(), embed, layers, final_norm, lm_head, total: off };
+        debug_assert_eq!(layout.total, cfg.n_params());
+        layout
+    }
+
+    /// Flat offset and length of a patchable module's weight matrix.
+    pub fn module_span(&self, id: ModuleId) -> (usize, usize) {
+        let l = &self.layers[id.layer];
+        let (rows, cols) = id.kind.shape(&self.cfg);
+        let off = match id.kind {
+            ProjKind::Q => l.wq,
+            ProjKind::K => l.wk,
+            ProjKind::V => l.wv,
+            ProjKind::O => l.wo,
+            ProjKind::Gate => l.w_gate,
+            ProjKind::Up => l.w_up,
+            ProjKind::Down => l.w_down,
+        };
+        (off, rows * cols)
+    }
+
+    /// All patchable modules, in layer order then `ProjKind::ALL` order —
+    /// the canonical sweep order for the compression pipeline (Alg. 1).
+    pub fn patchable_modules(&self) -> Vec<ModuleId> {
+        let mut out = Vec::with_capacity(self.cfg.n_patchable());
+        for layer in 0..self.cfg.n_layers {
+            for kind in ProjKind::ALL {
+                out.push(ModuleId { layer, kind });
+            }
+        }
+        out
+    }
+}
+
+/// A full set of model parameters in the flat layout.
+#[derive(Clone)]
+pub struct FlatParams {
+    pub layout: Layout,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for FlatParams {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "FlatParams[{} x f32, cfg={}]", self.data.len(), self.layout.cfg.name)
+    }
+}
+
+impl FlatParams {
+    pub fn zeros(cfg: &ModelConfig) -> FlatParams {
+        let layout = Layout::new(cfg);
+        let total = layout.total;
+        FlatParams { layout, data: vec![0.0; total] }
+    }
+
+    /// Deterministic scaled-normal init, matching `model.py::init_params`
+    /// in *distribution* (not bit-exact across languages; parity tests use
+    /// params generated on one side and shipped to the other).
+    pub fn init(cfg: &ModelConfig, seed: u64) -> FlatParams {
+        let mut p = FlatParams::zeros(cfg);
+        let mut rng = Rng::new(seed);
+        let d = cfg.dim;
+        let f = cfg.ff;
+        let std_d = 1.0 / (d as f32).sqrt();
+        let std_f = 1.0 / (f as f32).sqrt();
+        // embed
+        {
+            let (lo, len) = (p.layout.embed, cfg.vocab * d);
+            rng.fill_normal(&mut p.data[lo..lo + len], 0.02);
+        }
+        for l in 0..cfg.n_layers {
+            let lo = p.layout.layers[l].clone();
+            for x in &mut p.data[lo.attn_norm..lo.attn_norm + d] {
+                *x = 1.0;
+            }
+            for x in &mut p.data[lo.mlp_norm..lo.mlp_norm + d] {
+                *x = 1.0;
+            }
+            rng.fill_normal(&mut p.data[lo.wq..lo.wq + d * d], std_d);
+            rng.fill_normal(&mut p.data[lo.wk..lo.wk + d * d], std_d);
+            rng.fill_normal(&mut p.data[lo.wv..lo.wv + d * d], std_d);
+            rng.fill_normal(&mut p.data[lo.wo..lo.wo + d * d], std_d);
+            rng.fill_normal(&mut p.data[lo.w_gate..lo.w_gate + f * d], std_d);
+            rng.fill_normal(&mut p.data[lo.w_up..lo.w_up + f * d], std_d);
+            rng.fill_normal(&mut p.data[lo.w_down..lo.w_down + d * f], std_f);
+        }
+        {
+            let fnorm = p.layout.final_norm;
+            for x in &mut p.data[fnorm..fnorm + d] {
+                *x = 1.0;
+            }
+            let (lo, len) = (p.layout.lm_head, cfg.vocab * d);
+            rng.fill_normal(&mut p.data[lo..lo + len], std_d);
+        }
+        p
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.layout.cfg
+    }
+
+    /// Borrow a module's weight matrix as a slice.
+    pub fn module(&self, id: ModuleId) -> &[f32] {
+        let (off, len) = self.layout.module_span(id);
+        &self.data[off..off + len]
+    }
+
+    pub fn module_mut(&mut self, id: ModuleId) -> &mut [f32] {
+        let (off, len) = self.layout.module_span(id);
+        &mut self.data[off..off + len]
+    }
+
+    /// Copy a module's weights into a `Tensor2` (for calibration math).
+    pub fn module_tensor(&self, id: ModuleId) -> Tensor2 {
+        let (rows, cols) = id.kind.shape(self.cfg());
+        Tensor2::from_vec(rows, cols, self.module(id).to_vec())
+    }
+
+    /// Total parameter bytes at FP16 (the full-checkpoint baseline size).
+    pub fn fp16_bytes(&self) -> u64 {
+        (self.data.len() * 2) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_offsets_are_disjoint_and_total() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let layout = Layout::new(&cfg);
+        assert_eq!(layout.total, cfg.n_params());
+        // Module spans must not overlap.
+        let mut spans: Vec<(usize, usize)> =
+            layout.patchable_modules().iter().map(|&m| layout.module_span(m)).collect();
+        spans.sort();
+        for w in spans.windows(2) {
+            assert!(w[0].0 + w[0].1 <= w[1].0, "overlapping spans {:?}", w);
+        }
+    }
+
+    #[test]
+    fn patchable_count_matches_config() {
+        let cfg = ModelConfig::preset("llama-mini").unwrap();
+        let layout = Layout::new(&cfg);
+        assert_eq!(layout.patchable_modules().len(), cfg.n_patchable());
+    }
+
+    #[test]
+    fn module_id_roundtrip() {
+        let id = ModuleId { layer: 3, kind: ProjKind::Gate };
+        assert_eq!(id.to_string(), "layers.3.gate_proj");
+        assert_eq!(ModuleId::parse("layers.3.gate_proj"), Some(id));
+        assert_eq!(ModuleId::parse("garbage"), None);
+        assert_eq!(ModuleId::parse("layers.x.q_proj"), None);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_nontrivial() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let a = FlatParams::init(&cfg, 7);
+        let b = FlatParams::init(&cfg, 7);
+        assert_eq!(a.data, b.data);
+        let c = FlatParams::init(&cfg, 8);
+        assert_ne!(a.data, c.data);
+        // Norm weights are ones.
+        let lo = a.layout.layers[0].attn_norm;
+        assert!(a.data[lo..lo + cfg.dim].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn module_views_have_right_shape() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let p = FlatParams::init(&cfg, 1);
+        let t = p.module_tensor(ModuleId { layer: 1, kind: ProjKind::Up });
+        assert_eq!((t.rows, t.cols), (cfg.ff, cfg.dim));
+        let t = p.module_tensor(ModuleId { layer: 0, kind: ProjKind::Down });
+        assert_eq!((t.rows, t.cols), (cfg.dim, cfg.ff));
+    }
+
+    #[test]
+    fn module_mut_edits_flat_vector() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let mut p = FlatParams::zeros(&cfg);
+        let id = ModuleId { layer: 0, kind: ProjKind::Q };
+        p.module_mut(id)[0] = 42.0;
+        let (off, _) = p.layout.module_span(id);
+        assert_eq!(p.data[off], 42.0);
+    }
+}

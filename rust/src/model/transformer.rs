@@ -1,0 +1,402 @@
+//! Native Rust transformer forward pass (decoder-only, pre-RMSNorm, RoPE,
+//! SwiGLU MLP — Llama-style, no biases).
+//!
+//! This mirrors `python/compile/model.py` operation-for-operation and serves
+//! two roles: (1) the parity oracle for the AOT/XLA runtime (integration
+//! tests compare logits), and (2) a fallback engine so the serving stack and
+//! all accuracy experiments run even without artifacts built.
+
+use super::config::ModelConfig;
+use super::params::FlatParams;
+use crate::tensor::ops::{log_softmax_into, rmsnorm_into, silu, softmax_inplace, RopeTable};
+use crate::tensor::{dot, Tensor2};
+use crate::util::par;
+
+/// Activations recorded at one layer's seven patchable projections — the
+/// native analog of the paper's forward hooks (Algorithm 3). `*_in` is the
+/// module input X, `*_out` the module (linear) output Y; q/k/v share one
+/// input (the attention RMSNorm output), gate/up share the MLP RMSNorm
+/// output.
+#[derive(Clone, Debug, Default)]
+pub struct LayerTaps {
+    pub attn_in: Tensor2,
+    pub q_out: Tensor2,
+    pub k_out: Tensor2,
+    pub v_out: Tensor2,
+    pub o_in: Tensor2,
+    pub o_out: Tensor2,
+    pub mlp_in: Tensor2,
+    pub gate_out: Tensor2,
+    pub up_out: Tensor2,
+    pub down_in: Tensor2,
+    pub down_out: Tensor2,
+}
+
+impl LayerTaps {
+    /// Module input for a projection kind.
+    pub fn input(&self, kind: crate::model::params::ProjKind) -> &Tensor2 {
+        use crate::model::params::ProjKind::*;
+        match kind {
+            Q | K | V => &self.attn_in,
+            O => &self.o_in,
+            Gate | Up => &self.mlp_in,
+            Down => &self.down_in,
+        }
+    }
+
+    /// Module (linear) output for a projection kind.
+    pub fn output(&self, kind: crate::model::params::ProjKind) -> &Tensor2 {
+        use crate::model::params::ProjKind::*;
+        match kind {
+            Q => &self.q_out,
+            K => &self.k_out,
+            V => &self.v_out,
+            O => &self.o_out,
+            Gate => &self.gate_out,
+            Up => &self.up_out,
+            Down => &self.down_out,
+        }
+    }
+}
+
+/// Forward-pass workspace reused across calls (avoids per-request allocs on
+/// the serving hot path).
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    rope: RopeTable,
+}
+
+impl Transformer {
+    pub fn new(cfg: &ModelConfig) -> Transformer {
+        Transformer { cfg: cfg.clone(), rope: RopeTable::new(cfg.head_dim(), cfg.max_seq) }
+    }
+
+    /// Full forward: `tokens` is `[batch][seq]`; returns logits as a vec of
+    /// `[seq, vocab]` tensors, one per batch element. Sequences may have
+    /// different lengths (each is processed independently — the XLA path
+    /// pads to bucket shapes instead).
+    pub fn forward_batch(&self, params: &FlatParams, tokens: &[Vec<u8>]) -> Vec<Tensor2> {
+        let mut out: Vec<Option<Tensor2>> = (0..tokens.len()).map(|_| None).collect();
+        // Parallelism strategy: across batch if batch > 1, else the matmuls
+        // inside the single sequence parallelize internally.
+        if tokens.len() > 1 {
+            let results: Vec<std::sync::Mutex<Option<Tensor2>>> =
+                (0..tokens.len()).map(|_| std::sync::Mutex::new(None)).collect();
+            par::parallel_items(tokens.len(), 16, |i| {
+                let logits = self.forward_one(params, &tokens[i]);
+                *results[i].lock().unwrap() = Some(logits);
+            });
+            for (o, r) in out.iter_mut().zip(results) {
+                *o = r.into_inner().unwrap();
+            }
+        } else {
+            for (o, t) in out.iter_mut().zip(tokens) {
+                *o = Some(self.forward_one(params, t));
+            }
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+
+    /// Forward one sequence: `[T] -> [T, vocab]` logits.
+    pub fn forward_one(&self, params: &FlatParams, tokens: &[u8]) -> Tensor2 {
+        self.forward_inner(params, tokens, None).0
+    }
+
+    /// Forward with activation taps at `tap_layer`: records, for each of the
+    /// seven patchable projections of that layer, the module *input* and
+    /// module *output* activations (the (X, Y) pairs of Algorithm 3 — the
+    /// native equivalent of the paper's PyTorch forward hooks).
+    pub fn forward_one_tapped(
+        &self,
+        params: &FlatParams,
+        tokens: &[u8],
+        tap_layer: usize,
+    ) -> (Tensor2, LayerTaps) {
+        let (logits, taps) = self.forward_inner(params, tokens, Some(tap_layer));
+        (logits, taps.expect("tap layer in range"))
+    }
+
+    fn forward_inner(
+        &self,
+        params: &FlatParams,
+        tokens: &[u8],
+        tap_layer: Option<usize>,
+    ) -> (Tensor2, Option<LayerTaps>) {
+        let cfg = &self.cfg;
+        let t_len = tokens.len();
+        assert!(t_len > 0 && t_len <= cfg.max_seq, "seq len {} out of range", t_len);
+        let d = cfg.dim;
+        let nh = cfg.n_heads;
+        let hd = cfg.head_dim();
+        let layout = &params.layout;
+
+        // Embedding lookup -> x: [T, d]
+        let mut x = Tensor2::zeros(t_len, d);
+        for (pos, &tok) in tokens.iter().enumerate() {
+            let off = layout.embed + (tok as usize) * d;
+            x.row_mut(pos).copy_from_slice(&params.data[off..off + d]);
+        }
+
+        let mut taps: Option<LayerTaps> = None;
+        let mut normed = Tensor2::zeros(t_len, d);
+        for l in 0..cfg.n_layers {
+            let tapping = tap_layer == Some(l);
+            let lo = layout.layers[l].clone();
+            // --- attention block ---
+            let norm_w = &params.data[lo.attn_norm..lo.attn_norm + d];
+            for pos in 0..t_len {
+                let (xr, nr) = (x.row(pos), pos);
+                let dst = normed.row_mut(nr);
+                rmsnorm_into(xr, norm_w, dst);
+            }
+            let wq = weight_view(params, lo.wq, d, d);
+            let wk = weight_view(params, lo.wk, d, d);
+            let wv = weight_view(params, lo.wv, d, d);
+            let wo = weight_view(params, lo.wo, d, d);
+            let mut q = normed.matmul_bt(&wq); // [T, d]
+            let mut k = normed.matmul_bt(&wk);
+            let v = normed.matmul_bt(&wv);
+            if tapping {
+                let t = taps.get_or_insert_with(LayerTaps::default);
+                t.attn_in = normed.clone(); // input of q/k/v projections
+                t.q_out = q.clone(); // linear outputs, pre-RoPE (hook point)
+                t.k_out = k.clone();
+                t.v_out = v.clone();
+            }
+            // RoPE per head on q, k.
+            for pos in 0..t_len {
+                for h in 0..nh {
+                    self.rope.apply(&mut q.row_mut(pos)[h * hd..(h + 1) * hd], pos);
+                    self.rope.apply(&mut k.row_mut(pos)[h * hd..(h + 1) * hd], pos);
+                }
+            }
+            // Causal attention, head by head.
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut attn_out = Tensor2::zeros(t_len, d);
+            for h in 0..nh {
+                let hs = h * hd;
+                let mut scores = vec![0f32; t_len]; // reused row buffer
+                for qi in 0..t_len {
+                    let qrow = &q.row(qi)[hs..hs + hd];
+                    for ki in 0..=qi {
+                        scores[ki] = dot(qrow, &k.row(ki)[hs..hs + hd]) * scale;
+                    }
+                    softmax_inplace(&mut scores[..=qi]);
+                    let orow = &mut attn_out.row_mut(qi)[hs..hs + hd];
+                    for ki in 0..=qi {
+                        let w = scores[ki];
+                        let vrow = &v.row(ki)[hs..hs + hd];
+                        for (o, &vv) in orow.iter_mut().zip(vrow) {
+                            *o += w * vv;
+                        }
+                    }
+                }
+            }
+            let proj = attn_out.matmul_bt(&wo); // [T, d]
+            if tapping {
+                let t = taps.as_mut().unwrap();
+                t.o_in = attn_out.clone();
+                t.o_out = proj.clone();
+            }
+            x.add_assign(&proj);
+
+            // --- MLP block ---
+            let norm_w = &params.data[lo.mlp_norm..lo.mlp_norm + d];
+            for pos in 0..t_len {
+                let src = x.row(pos).to_vec();
+                rmsnorm_into(&src, norm_w, normed.row_mut(pos));
+            }
+            let w_gate = weight_view(params, lo.w_gate, cfg.ff, d);
+            let w_up = weight_view(params, lo.w_up, cfg.ff, d);
+            let w_down = weight_view(params, lo.w_down, d, cfg.ff);
+            let mut gate = normed.matmul_bt(&w_gate); // [T, ff]
+            let up = normed.matmul_bt(&w_up);
+            if tapping {
+                let t = taps.as_mut().unwrap();
+                t.mlp_in = normed.clone(); // input of gate/up projections
+                t.gate_out = gate.clone(); // linear output, pre-SiLU
+                t.up_out = up.clone();
+            }
+            for (g, &u) in gate.data.iter_mut().zip(&up.data) {
+                *g = silu(*g) * u;
+            }
+            let down = gate.matmul_bt(&w_down); // [T, d]
+            if tapping {
+                let t = taps.as_mut().unwrap();
+                t.down_in = gate.clone(); // silu(gate)·up, the down_proj input
+                t.down_out = down.clone();
+            }
+            x.add_assign(&down);
+        }
+
+        // Final norm + LM head.
+        let fw = &params.data[layout.final_norm..layout.final_norm + d];
+        for pos in 0..t_len {
+            let src = x.row(pos).to_vec();
+            rmsnorm_into(&src, fw, x.row_mut(pos));
+        }
+        let lm = weight_view(params, layout.lm_head, cfg.vocab, d);
+        (x.matmul_bt(&lm), taps) // [T, vocab]
+    }
+
+    /// Sum of log p(token[i] | tokens[..i]) over `span` (used for MC
+    /// scoring: rank answer choices by completion log-likelihood).
+    pub fn score_span(&self, params: &FlatParams, tokens: &[u8], span: std::ops::Range<usize>) -> f64 {
+        assert!(span.start >= 1, "cannot score position 0 (no context)");
+        assert!(span.end <= tokens.len());
+        let logits = self.forward_one(params, tokens);
+        let mut lse_buf = vec![0f32; self.cfg.vocab];
+        let mut total = 0f64;
+        for pos in span {
+            log_softmax_into(logits.row(pos - 1), &mut lse_buf);
+            total += lse_buf[tokens[pos] as usize] as f64;
+        }
+        total
+    }
+
+    /// Per-token cross-entropy (nats) of `tokens` under the model; the
+    /// perplexity metric is `exp` of this.
+    pub fn cross_entropy(&self, params: &FlatParams, tokens: &[u8]) -> f64 {
+        if tokens.len() < 2 {
+            return 0.0;
+        }
+        -self.score_span(params, tokens, 1..tokens.len()) / (tokens.len() - 1) as f64
+    }
+}
+
+/// Zero-copy weight view from the flat vector.
+///
+/// (Allocates only the header; the data is copied because `Tensor2` owns its
+/// buffer — kept simple, the copies are small relative to matmul cost. The
+/// perf-critical path avoids this via `matmul_bt_slice`.)
+fn weight_view(params: &FlatParams, off: usize, rows: usize, cols: usize) -> Tensor2 {
+    Tensor2::from_vec(rows, cols, params.data[off..off + rows * cols].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    fn tiny() -> (ModelConfig, FlatParams, Transformer) {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let params = FlatParams::init(&cfg, 42);
+        let t = Transformer::new(&cfg);
+        (cfg, params, t)
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let (cfg, params, t) = tiny();
+        let tokens: Vec<u8> = (0..10u8).collect();
+        let logits = t.forward_one(&params, &tokens);
+        assert_eq!((logits.rows, logits.cols), (10, cfg.vocab));
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let (_, params, t) = tiny();
+        let tokens: Vec<u8> = vec![5, 4, 3, 2, 1];
+        let a = t.forward_one(&params, &tokens);
+        let b = t.forward_one(&params, &tokens);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // Logits at position i must not change when the suffix changes.
+        let (_, params, t) = tiny();
+        let a: Vec<u8> = vec![10, 20, 30, 40, 50];
+        let b: Vec<u8> = vec![10, 20, 30, 99, 98];
+        let la = t.forward_one(&params, &a);
+        let lb = t.forward_one(&params, &b);
+        for pos in 0..3 {
+            for c in 0..la.cols {
+                assert!(
+                    (la.at(pos, c) - lb.at(pos, c)).abs() < 1e-4,
+                    "pos {pos} col {c}: {} vs {}",
+                    la.at(pos, c),
+                    lb.at(pos, c)
+                );
+            }
+        }
+        // ...but position 3 should change.
+        let diff: f32 =
+            (0..la.cols).map(|c| (la.at(3, c) - lb.at(3, c)).abs()).fold(0.0, f32::max);
+        assert!(diff > 1e-3, "suffix change had no effect");
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let (_, params, t) = tiny();
+        let seqs: Vec<Vec<u8>> = vec![vec![1, 2, 3], vec![9, 8, 7, 6], vec![0, 255]];
+        let batch = t.forward_batch(&params, &seqs);
+        for (i, s) in seqs.iter().enumerate() {
+            let single = t.forward_one(&params, s);
+            assert_eq!(batch[i].data, single.data, "seq {i}");
+        }
+    }
+
+    #[test]
+    fn score_span_is_negative_loglik() {
+        let (_, params, t) = tiny();
+        let tokens: Vec<u8> = vec![1, 2, 3, 4, 5, 6];
+        let s = t.score_span(&params, &tokens, 2..5);
+        assert!(s < 0.0, "log-likelihood must be negative, got {s}");
+        // Scoring subranges adds up.
+        let s1 = t.score_span(&params, &tokens, 2..4);
+        let s2 = t.score_span(&params, &tokens, 4..5);
+        assert!((s - (s1 + s2)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cross_entropy_reasonable_for_random_model() {
+        let (cfg, params, t) = tiny();
+        let tokens: Vec<u8> = (0..32).map(|i| (i * 37 % 256) as u8).collect();
+        let ce = t.cross_entropy(&params, &tokens);
+        // Random init should be near uniform: ln(256) ≈ 5.55.
+        let uniform = (cfg.vocab as f64).ln();
+        assert!((ce - uniform).abs() < 1.0, "ce={ce} uniform={uniform}");
+    }
+
+    #[test]
+    fn tapped_forward_matches_untapped() {
+        let (cfg, params, t) = tiny();
+        let tokens: Vec<u8> = vec![7, 3, 9, 1, 4, 2];
+        let plain = t.forward_one(&params, &tokens);
+        let (tapped, taps) = t.forward_one_tapped(&params, &tokens, 1);
+        assert_eq!(plain.data, tapped.data);
+        // Tap shapes.
+        assert_eq!((taps.attn_in.rows, taps.attn_in.cols), (6, cfg.dim));
+        assert_eq!((taps.gate_out.rows, taps.gate_out.cols), (6, cfg.ff));
+        assert_eq!((taps.down_in.rows, taps.down_in.cols), (6, cfg.ff));
+        // Y = X · Wᵀ must hold exactly for the q projection.
+        use crate::model::params::{ModuleId, ProjKind};
+        let wq = params.module_tensor(ModuleId { layer: 1, kind: ProjKind::Q });
+        let want = taps.attn_in.matmul_bt(&wq);
+        for (a, b) in want.data.iter().zip(&taps.q_out.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // Same for down_proj (checks the recorded input is pre-projection).
+        let wd = params.module_tensor(ModuleId { layer: 1, kind: ProjKind::Down });
+        let want = taps.down_in.matmul_bt(&wd);
+        for (a, b) in want.data.iter().zip(&taps.down_out.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn weight_perturbation_changes_logits() {
+        let (_, mut params, t) = tiny();
+        let tokens: Vec<u8> = vec![3, 1, 4, 1, 5];
+        let before = t.forward_one(&params, &tokens);
+        use crate::model::params::{ModuleId, ProjKind};
+        let m = params.module_mut(ModuleId { layer: 0, kind: ProjKind::Q });
+        for x in m.iter_mut() {
+            *x += 0.05;
+        }
+        let after = t.forward_one(&params, &tokens);
+        assert!(before.mse(&after) > 0.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! End-to-end joint training of all scale vectors (Algorithm 2).
+//!
+//! The AOT `lmgrad` program returns dL/dW for the *flat student weights*
+//! under the logit-matching objective; since `Ŵ = W_b + v ⊙ B` is linear in
+//! `v`, the scale gradient is the masked reduction of the weight gradient:
+//!
+//! * row:    dL/dv_j = Σ_i dL/dW[j,i] · B[j,i]
+//! * col:    dL/dv_i = Σ_j dL/dW[j,i] · B[j,i]
+//! * scalar: dL/dv   = Σ_{j,i} dL/dW[j,i] · B[j,i]
+//! * group:  per-group row sums.
+//!
+//! Rust drives AdamW over the concatenated scale vectors, re-materializing
+//! the student between steps (one fused apply pass per module — cheap
+//! relative to the lmgrad forward+backward).
+
+use crate::data::corpus;
+use crate::delta::apply::materialize;
+use crate::delta::calibrate::AdamW;
+use crate::delta::types::{Axis, DeltaModel};
+use crate::model::{FlatParams, ModelConfig};
+use crate::runtime::{self, RuntimeHandle};
+use anyhow::{anyhow, Result};
+
+/// Jointly train all scale vectors of `delta` to match the teacher's
+/// logits on the e2e calibration documents. Returns the loss curve.
+pub fn e2e_train(
+    h: &RuntimeHandle,
+    cfg: &ModelConfig,
+    base: &FlatParams,
+    teacher: &FlatParams,
+    delta: &mut DeltaModel,
+    e2e_docs: &[String],
+    epochs: usize,
+    lr: f32,
+) -> Result<Vec<f32>> {
+    let spec = h
+        .manifest()
+        .find_kind("lmgrad", &cfg.name)
+        .ok_or_else(|| anyhow!("no lmgrad artifact for '{}'", cfg.name))?
+        .clone();
+    let (b, t) = (spec.batch.unwrap(), spec.seq.unwrap());
+    // Fixed-length windows for the lmgrad bucket.
+    let windows = corpus::pack_windows(e2e_docs, t - 1, 0x2E2E);
+    let batches: Vec<Vec<Vec<u8>>> = corpus::batches(&windows, b)
+        .into_iter()
+        .map(|batch| batch.into_iter().map(|mut w| {
+            w.truncate(t);
+            w
+        }).collect())
+        .collect();
+    if batches.is_empty() {
+        anyhow::bail!("e2e corpus too small for bucket batch {b} x seq {t}");
+    }
+
+    // Teacher logits per batch, computed once (the teacher is frozen).
+    let mut teacher_logits: Vec<Vec<f32>> = Vec::with_capacity(batches.len());
+    for batch in &batches {
+        let ls = runtime::forward_logits(h, &cfg.name, &teacher.data, batch)?;
+        let mut flat = Vec::with_capacity(b * t * cfg.vocab);
+        for l in &ls {
+            flat.extend_from_slice(&l.data);
+        }
+        teacher_logits.push(flat);
+    }
+
+    // Concatenated scale parameter vector + per-module offsets.
+    let mut offsets = Vec::with_capacity(delta.modules.len());
+    let mut theta: Vec<f32> = Vec::new();
+    for m in &delta.modules {
+        offsets.push(theta.len());
+        theta.extend_from_slice(&m.scales);
+    }
+    let mut opt = AdamW::new(theta.len(), lr);
+    let mut grads = vec![0f32; theta.len()];
+    let mut losses = Vec::new();
+
+    for _epoch in 0..epochs {
+        for (batch, tl) in batches.iter().zip(&teacher_logits) {
+            // Write current scales back into the modules and materialize.
+            for (m, &off) in delta.modules.iter_mut().zip(&offsets) {
+                let n = m.scales.len();
+                m.scales.copy_from_slice(&theta[off..off + n]);
+            }
+            let student = materialize(base, &delta.modules);
+            let (loss, gflat) = runtime::lmgrad(h, &cfg.name, &student.data, batch, tl)?;
+            losses.push(loss);
+            // Chain rule: weight grad -> scale grad, per module.
+            grads.iter_mut().for_each(|g| *g = 0.0);
+            for (m, &off) in delta.modules.iter().zip(&offsets) {
+                let (w_off, w_len) = base.layout.module_span(m.id);
+                let gw = &gflat[w_off..w_off + w_len];
+                let (d_out, d_in) = (m.d_out(), m.d_in());
+                match m.axis {
+                    Axis::Row => {
+                        for j in 0..d_out {
+                            let mut s = 0f64;
+                            for i in 0..d_in {
+                                s += (gw[j * d_in + i] * m.mask.sign(j, i)) as f64;
+                            }
+                            grads[off + j] = s as f32;
+                        }
+                    }
+                    Axis::Col => {
+                        for j in 0..d_out {
+                            for i in 0..d_in {
+                                grads[off + i] += gw[j * d_in + i] * m.mask.sign(j, i);
+                            }
+                        }
+                    }
+                    Axis::Scalar => {
+                        let mut s = 0f64;
+                        for j in 0..d_out {
+                            for i in 0..d_in {
+                                s += (gw[j * d_in + i] * m.mask.sign(j, i)) as f64;
+                            }
+                        }
+                        grads[off] = s as f32;
+                    }
+                    Axis::Group(g) => {
+                        let g = g.max(1) as usize;
+                        for j in 0..d_out {
+                            let mut s = 0f64;
+                            for i in 0..d_in {
+                                s += (gw[j * d_in + i] * m.mask.sign(j, i)) as f64;
+                            }
+                            grads[off + j / g] += s as f32;
+                        }
+                    }
+                }
+            }
+            opt.step(&mut theta, &grads);
+        }
+    }
+    // Final write-back.
+    for (m, &off) in delta.modules.iter_mut().zip(&offsets) {
+        let n = m.scales.len();
+        m.scales.copy_from_slice(&theta[off..off + n]);
+    }
+    Ok(losses)
+}

@@ -1,0 +1,213 @@
+//! End-to-end experiment pipeline (Algorithm 1, all four stages, plus the
+//! training runs that *produce* the model pairs).
+//!
+//! One `run_pair` call reproduces a full Table-1 row group for one model
+//! pair: pre-train the base on the synthetic corpus (AOT train step via
+//! PJRT), fine-tune on the instruct mixture, compress with every method,
+//! jointly train the vector scales end-to-end against teacher logits
+//! (Algorithm 2, via the AOT lmgrad program), save artifacts, and evaluate
+//! all variants on the five zero-shot suites.
+
+pub mod e2e;
+pub mod train;
+
+use crate::data::corpus;
+use crate::data::World;
+use crate::delta::compress::{compress_model, CompressOptions};
+use crate::delta::format::save_delta;
+use crate::delta::types::DeltaModel;
+use crate::eval::harness::{evaluate_suite, SuiteResult};
+use crate::model::checkpoint::save_fp16;
+use crate::model::{FlatParams, ModelConfig, Transformer};
+use crate::runtime::RuntimeHandle;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Knobs for one model-pair experiment.
+#[derive(Clone, Debug)]
+pub struct PairConfig {
+    pub config: String,
+    pub seed: u64,
+    pub world_entities: usize,
+    pub base_docs: usize,
+    pub instruct_docs: usize,
+    pub base_steps: usize,
+    pub finetune_steps: usize,
+    pub base_lr: f32,
+    pub finetune_lr: f32,
+    /// Calibration samples for the per-layer caches (paper: 50).
+    pub calib_layer_docs: usize,
+    /// Calibration samples for the end-to-end objective (paper: 150).
+    pub calib_e2e_docs: usize,
+    pub e2e_epochs: usize,
+    pub e2e_lr: f32,
+    pub eval_items_per_family: usize,
+}
+
+impl PairConfig {
+    /// Scaled-down defaults that run in minutes on CPU; the benches bump
+    /// them to the paper protocol (50/150 docs, more steps) under
+    /// PAWD_FULL=1.
+    pub fn quick(config: &str) -> PairConfig {
+        PairConfig {
+            config: config.to_string(),
+            seed: 42,
+            world_entities: 16,
+            base_docs: 3000,
+            instruct_docs: 3000,
+            base_steps: 800,
+            finetune_steps: 250,
+            base_lr: 3e-3,
+            finetune_lr: 5e-4,
+            calib_layer_docs: 20,
+            calib_e2e_docs: 40,
+            e2e_epochs: 2,
+            e2e_lr: 1e-3,
+            eval_items_per_family: 25,
+        }
+    }
+
+    /// Paper-faithful calibration budget (50 + 150 samples, 5 epochs).
+    pub fn full(config: &str) -> PairConfig {
+        PairConfig {
+            base_steps: 1500,
+            finetune_steps: 400,
+            calib_layer_docs: 50,
+            calib_e2e_docs: 150,
+            e2e_epochs: 5,
+            eval_items_per_family: 60,
+            ..PairConfig::quick(config)
+        }
+    }
+}
+
+/// One compressed-method outcome within a pair run.
+#[derive(Clone, Debug)]
+pub struct MethodResult {
+    pub method: String,
+    pub suite: SuiteResult,
+    pub artifact_bytes: u64,
+    pub delta: Option<DeltaModel>,
+}
+
+/// Everything a Table-1/2 row group needs.
+pub struct PairResult {
+    pub config: ModelConfig,
+    pub world: World,
+    pub base: FlatParams,
+    pub teacher: FlatParams,
+    pub base_losses: Vec<f32>,
+    pub finetune_losses: Vec<f32>,
+    pub fp16_bytes: u64,
+    pub baseline_suite: SuiteResult,
+    pub base_suite: SuiteResult,
+    pub methods: Vec<MethodResult>,
+}
+
+/// Train the pair, compress with the given (label, options, e2e) methods,
+/// evaluate everything. `out_dir` receives `<variant>.pawd` +
+/// `teacher.fp16` artifacts.
+pub fn run_pair(
+    h: &RuntimeHandle,
+    pc: &PairConfig,
+    methods: &[(&str, CompressOptions, bool)],
+    out_dir: &Path,
+    mut log: impl FnMut(&str),
+) -> Result<PairResult> {
+    std::fs::create_dir_all(out_dir)?;
+    let cfg = ModelConfig::preset(&pc.config)?;
+    let world = World::generate(pc.seed, pc.world_entities);
+
+    // --- Stage 0a: pre-train the base (AOT train step) ---
+    log(&format!("[{}] pre-training base for {} steps", cfg.name, pc.base_steps));
+    let init = FlatParams::init(&cfg, pc.seed ^ 0xBA5E);
+    let base_corpus = corpus::base_corpus(&world, pc.base_docs, pc.seed);
+    let (base_params, base_losses) =
+        train::train_lm(h, &cfg, init.data, &base_corpus, pc.base_steps, pc.base_lr, pc.seed)
+            .context("base pre-training")?;
+    let mut base = FlatParams::zeros(&cfg);
+    base.data = base_params;
+
+    // --- Stage 0b: fine-tune on the instruct mixture -> teacher ---
+    log(&format!("[{}] fine-tuning for {} steps", cfg.name, pc.finetune_steps));
+    let instruct = corpus::instruct_corpus(&world, pc.instruct_docs, pc.seed ^ 0x17);
+    let (ft_params, finetune_losses) = train::train_lm(
+        h,
+        &cfg,
+        base.data.clone(),
+        &instruct,
+        pc.finetune_steps,
+        pc.finetune_lr,
+        pc.seed ^ 0x18,
+    )
+    .context("fine-tuning")?;
+    let mut teacher = FlatParams::zeros(&cfg);
+    teacher.data = ft_params;
+    let fp16_bytes = save_fp16(out_dir.join("teacher.fp16"), &teacher)?;
+
+    // --- Evaluate the endpoints ---
+    let tf = Transformer::new(&cfg);
+    log(&format!("[{}] evaluating base + baseline (teacher)", cfg.name));
+    let base_suite =
+        evaluate_suite("Base (pre-trained)", &tf, &base, &world, pc.eval_items_per_family, pc.seed);
+    let baseline_suite = evaluate_suite(
+        "Baseline (fine-tuned)",
+        &tf,
+        &teacher,
+        &world,
+        pc.eval_items_per_family,
+        pc.seed,
+    );
+
+    // --- Calibration sets (C4 stand-ins; layer caches + e2e objective) ---
+    let layer_docs: Vec<Vec<u8>> =
+        corpus::calibration_samples(&world, pc.calib_layer_docs, pc.seed ^ 0x50)
+            .iter()
+            .map(|d| clamp_doc(d, cfg.max_seq))
+            .collect();
+    let e2e_docs = corpus::calibration_samples(&world, pc.calib_e2e_docs, pc.seed ^ 0x51);
+
+    // --- Compress with every method ---
+    let mut methods_out = Vec::new();
+    for (label, opts, do_e2e) in methods {
+        log(&format!("[{}] compressing: {label}", cfg.name));
+        let variant_name = label.replace([' ', '(', ')', '/'], "_").to_lowercase();
+        let (mut delta, _reports, _student) =
+            compress_model(&variant_name, &base, &teacher, &layer_docs, opts);
+        if *do_e2e {
+            log(&format!("[{}] e2e vector training: {label}", cfg.name));
+            e2e::e2e_train(h, &cfg, &base, &teacher, &mut delta, &e2e_docs, pc.e2e_epochs, pc.e2e_lr)
+                .context("e2e vector training")?;
+        }
+        let artifact = out_dir.join(format!("{variant_name}.pawd"));
+        let artifact_bytes = save_delta(&artifact, &delta)?;
+        let student = crate::delta::apply::materialize(&base, &delta.modules);
+        log(&format!("[{}] evaluating: {label}", cfg.name));
+        let suite = evaluate_suite(label, &tf, &student, &world, pc.eval_items_per_family, pc.seed);
+        methods_out.push(MethodResult {
+            method: label.to_string(),
+            suite,
+            artifact_bytes,
+            delta: Some(delta),
+        });
+    }
+
+    Ok(PairResult {
+        config: cfg,
+        world,
+        base,
+        teacher,
+        base_losses,
+        finetune_losses,
+        fp16_bytes,
+        baseline_suite,
+        base_suite,
+        methods: methods_out,
+    })
+}
+
+fn clamp_doc(d: &str, max: usize) -> Vec<u8> {
+    let mut t = corpus::encode(d);
+    t.truncate(max);
+    t
+}

@@ -1,0 +1,40 @@
+//! LM training driver: Rust owns the data pipeline and the loop; each step
+//! executes the fused AdamW train-step artifact on the PJRT runtime.
+
+use crate::data::corpus;
+use crate::model::ModelConfig;
+use crate::runtime::{self, RuntimeHandle};
+use anyhow::{anyhow, Result};
+
+/// Train (or continue training) a model on `docs` for `steps` steps.
+/// Returns the final flat params and the per-step loss curve.
+pub fn train_lm(
+    h: &RuntimeHandle,
+    cfg: &ModelConfig,
+    init_params: Vec<f32>,
+    docs: &[String],
+    steps: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let spec = h
+        .manifest()
+        .find_kind("train_step", &cfg.name)
+        .ok_or_else(|| anyhow!("no train_step artifact for '{}'", cfg.name))?
+        .clone();
+    let batch = spec.batch.unwrap();
+    let seq = spec.seq.unwrap();
+    let windows = corpus::pack_windows(docs, seq, seed);
+    let batches = corpus::batches(&windows, batch);
+    if batches.is_empty() {
+        anyhow::bail!("corpus too small: {} windows for batch {batch}", windows.len());
+    }
+    let mut state = runtime::TrainState::new(init_params);
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let b = &batches[step % batches.len()];
+        let loss = runtime::train_step(h, &cfg.name, &mut state, b, lr)?;
+        losses.push(loss);
+    }
+    Ok((state.params, losses))
+}

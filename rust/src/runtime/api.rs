@@ -1,0 +1,248 @@
+//! Typed wrappers over the runtime thread: batched forward with shape
+//! bucketing, the AOT train step, and the logit-matching gradient program.
+
+use super::engine::{HostTensor, RuntimeHandle};
+use crate::tensor::Tensor2;
+use anyhow::{anyhow, bail, Result};
+
+/// Run a batch of variable-length sequences through the smallest AOT
+/// forward bucket that fits; returns per-sequence `[len, vocab]` logits.
+///
+/// Padding policy: sequences are right-padded with token 0 and the batch is
+/// padded with empty rows; causality guarantees the logits at real
+/// positions are unaffected.
+pub fn forward_logits(
+    h: &RuntimeHandle,
+    config: &str,
+    params: &[f32],
+    seqs: &[Vec<u8>],
+) -> Result<Vec<Tensor2>> {
+    if seqs.is_empty() {
+        return Ok(vec![]);
+    }
+    let max_len = seqs.iter().map(|s| s.len()).max().unwrap();
+    let spec = h
+        .manifest()
+        .pick_fwd(config, seqs.len(), max_len)
+        .ok_or_else(|| {
+            anyhow!("no forward bucket for config '{config}' batch {} seq {max_len}", seqs.len())
+        })?
+        .clone();
+    let (b, t) = (spec.batch.unwrap(), spec.seq.unwrap());
+    let mut tokens = vec![0i32; b * t];
+    for (i, s) in seqs.iter().enumerate() {
+        for (j, &tok) in s.iter().enumerate() {
+            tokens[i * t + j] = tok as i32;
+        }
+    }
+    let outs = h.run(
+        &spec.name,
+        vec![
+            HostTensor::F32(params.to_vec(), vec![params.len()]),
+            HostTensor::I32(tokens, vec![b, t]),
+        ],
+    )?;
+    let (logits, shape) = outs
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow!("forward returned no outputs"))?
+        .into_f32()?;
+    if shape.len() != 3 || shape[0] != b || shape[1] != t {
+        bail!("unexpected logits shape {shape:?}");
+    }
+    let vocab = shape[2];
+    let mut result = Vec::with_capacity(seqs.len());
+    for (i, s) in seqs.iter().enumerate() {
+        let mut out = Tensor2::zeros(s.len(), vocab);
+        for pos in 0..s.len() {
+            let off = (i * t + pos) * vocab;
+            out.row_mut(pos).copy_from_slice(&logits[off..off + vocab]);
+        }
+        result.push(out);
+    }
+    Ok(result)
+}
+
+/// Optimizer + parameter state for the AOT train step.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: i32,
+}
+
+impl TrainState {
+    pub fn new(params: Vec<f32>) -> TrainState {
+        let n = params.len();
+        TrainState { params, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+}
+
+/// One fused AdamW step. `windows` must match the train bucket's batch and
+/// be `seq + 1` tokens long (inputs + shifted targets). Returns the loss.
+pub fn train_step(
+    h: &RuntimeHandle,
+    config: &str,
+    state: &mut TrainState,
+    windows: &[Vec<u8>],
+    lr: f32,
+) -> Result<f32> {
+    let spec = h
+        .manifest()
+        .find_kind("train_step", config)
+        .ok_or_else(|| anyhow!("no train_step program for '{config}'"))?
+        .clone();
+    let (b, t1) = (spec.batch.unwrap(), spec.seq.unwrap() + 1);
+    if windows.len() != b {
+        bail!("train bucket batch {b} != {} windows", windows.len());
+    }
+    let mut tokens = vec![0i32; b * t1];
+    for (i, w) in windows.iter().enumerate() {
+        if w.len() != t1 {
+            bail!("window {} length {} != bucket {}", i, w.len(), t1);
+        }
+        for (j, &tok) in w.iter().enumerate() {
+            tokens[i * t1 + j] = tok as i32;
+        }
+    }
+    let n = state.params.len();
+    let outs = h.run(
+        &spec.name,
+        vec![
+            HostTensor::F32(std::mem::take(&mut state.params), vec![n]),
+            HostTensor::F32(std::mem::take(&mut state.m), vec![n]),
+            HostTensor::F32(std::mem::take(&mut state.v), vec![n]),
+            HostTensor::scalar_i32(state.step),
+            HostTensor::scalar_f32(lr),
+            HostTensor::I32(tokens, vec![b, t1]),
+        ],
+    )?;
+    let mut it = outs.into_iter();
+    let (p, _) = it.next().ok_or_else(|| anyhow!("missing params output"))?.into_f32()?;
+    let (m, _) = it.next().ok_or_else(|| anyhow!("missing m output"))?.into_f32()?;
+    let (v, _) = it.next().ok_or_else(|| anyhow!("missing v output"))?.into_f32()?;
+    let step_out = it.next().ok_or_else(|| anyhow!("missing step output"))?;
+    let loss = match it.next().ok_or_else(|| anyhow!("missing loss output"))? {
+        HostTensor::F32(vs, _) => vs[0],
+        other => bail!("loss has dtype {:?}", other.dtype()),
+    };
+    state.params = p;
+    state.m = m;
+    state.v = v;
+    state.step = match step_out {
+        HostTensor::I32(vs, _) => vs[0],
+        _ => state.step + 1,
+    };
+    Ok(loss)
+}
+
+/// Logit-matching loss + flat gradient (Algorithm 2's objective).
+/// `seqs` must match the lmgrad bucket batch; `teacher_logits` is
+/// `[B, T, V]` flattened.
+pub fn lmgrad(
+    h: &RuntimeHandle,
+    config: &str,
+    params: &[f32],
+    seqs: &[Vec<u8>],
+    teacher_logits: &[f32],
+) -> Result<(f32, Vec<f32>)> {
+    let spec = h
+        .manifest()
+        .find_kind("lmgrad", config)
+        .ok_or_else(|| anyhow!("no lmgrad program for '{config}'"))?
+        .clone();
+    let (b, t) = (spec.batch.unwrap(), spec.seq.unwrap());
+    if seqs.len() != b {
+        bail!("lmgrad bucket batch {b} != {} seqs", seqs.len());
+    }
+    let vocab = spec.inputs[2].shape[2];
+    if teacher_logits.len() != b * t * vocab {
+        bail!("teacher logits len {} != {}", teacher_logits.len(), b * t * vocab);
+    }
+    let mut tokens = vec![0i32; b * t];
+    for (i, s) in seqs.iter().enumerate() {
+        if s.len() != t {
+            bail!("lmgrad sequences must be exactly bucket length {t}, got {}", s.len());
+        }
+        for (j, &tok) in s.iter().enumerate() {
+            tokens[i * t + j] = tok as i32;
+        }
+    }
+    let outs = h.run(
+        &spec.name,
+        vec![
+            HostTensor::F32(params.to_vec(), vec![params.len()]),
+            HostTensor::I32(tokens, vec![b, t]),
+            HostTensor::F32(teacher_logits.to_vec(), vec![b, t, vocab]),
+        ],
+    )?;
+    let mut it = outs.into_iter();
+    let loss = match it.next().ok_or_else(|| anyhow!("missing loss"))? {
+        HostTensor::F32(vs, _) => vs[0],
+        other => bail!("loss dtype {:?}", other.dtype()),
+    };
+    let (grad, _) = it.next().ok_or_else(|| anyhow!("missing grad"))?.into_f32()?;
+    Ok((loss, grad))
+}
+
+/// Pallas delta-apply through the AOT kernel artifact (validation +
+/// benchmarking path; the production hot swap uses the native
+/// `delta::apply`).
+pub fn delta_apply_xla(
+    h: &RuntimeHandle,
+    axis: &str,
+    base: &[f32],
+    d_out: usize,
+    d_in: usize,
+    packed: &[u32],
+    scales: &[f32],
+) -> Result<Vec<f32>> {
+    let name = format!("dapply_{axis}_{d_out}x{d_in}");
+    let wpr = d_in.div_ceil(32);
+    let outs = h.run(
+        &name,
+        vec![
+            HostTensor::F32(base.to_vec(), vec![d_out, d_in]),
+            HostTensor::U32(packed.to_vec(), vec![d_out, wpr]),
+            HostTensor::F32(scales.to_vec(), vec![scales.len()]),
+        ],
+    )?;
+    let (v, _) = outs
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow!("no output"))?
+        .into_f32()?;
+    Ok(v)
+}
+
+/// Fused delta-GEMM through the AOT kernel artifact.
+pub fn fused_delta_matmul_xla(
+    h: &RuntimeHandle,
+    axis: &str,
+    x: &[f32],
+    n: usize,
+    base: &[f32],
+    d_out: usize,
+    d_in: usize,
+    packed: &[u32],
+    scales: &[f32],
+) -> Result<Vec<f32>> {
+    let name = format!("dmm_{axis}_n{n}_{d_out}x{d_in}");
+    let wpr = d_in.div_ceil(32);
+    let outs = h.run(
+        &name,
+        vec![
+            HostTensor::F32(x.to_vec(), vec![n, d_in]),
+            HostTensor::F32(base.to_vec(), vec![d_out, d_in]),
+            HostTensor::U32(packed.to_vec(), vec![d_out, wpr]),
+            HostTensor::F32(scales.to_vec(), vec![scales.len()]),
+        ],
+    )?;
+    let (v, _) = outs
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow!("no output"))?
+        .into_f32()?;
+    Ok(v)
+}

@@ -1,0 +1,256 @@
+//! PJRT execution engine.
+//!
+//! The `xla` crate's `PjRtClient` wraps an `Rc` and is not `Send`/`Sync`,
+//! so all XLA state lives on one dedicated **runtime thread**; the rest of
+//! the system talks to it through a cloneable [`RuntimeHandle`] carrying
+//! plain Rust buffers over channels. Executables are compiled once per
+//! program (on first use) and cached for the life of the thread.
+
+use super::manifest::{DType, Manifest, ProgramSpec};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// A host-side tensor crossing the runtime-thread boundary.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    U32(Vec<u32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) | HostTensor::U32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(..) => DType::F32,
+            HostTensor::I32(..) => DType::I32,
+            HostTensor::U32(..) => DType::U32,
+        }
+    }
+
+    pub fn n_elems(&self) -> usize {
+        match self {
+            HostTensor::F32(v, _) => v.len(),
+            HostTensor::I32(v, _) => v.len(),
+            HostTensor::U32(v, _) => v.len(),
+        }
+    }
+
+    /// Unwrap as f32 data or fail.
+    pub fn into_f32(self) -> Result<(Vec<f32>, Vec<usize>)> {
+        match self {
+            HostTensor::F32(v, s) => Ok((v, s)),
+            other => bail!("expected f32 output, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32(vec![v], vec![])
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32(vec![v], vec![])
+    }
+}
+
+enum Job {
+    Run { name: String, inputs: Vec<HostTensor>, resp: mpsc::Sender<Result<Vec<HostTensor>>> },
+    /// Pre-compile a program (warm the cache) without executing.
+    Warm { name: String, resp: mpsc::Sender<Result<()>> },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the runtime thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::Sender<Job>,
+    manifest: Arc<Manifest>,
+}
+
+// mpsc::Sender<Job> is Send but not Sync; wrap sends in a mutex-free clone
+// per call site: RuntimeHandle is cheap to clone, and each thread should own
+// its clone. For convenience in shared structs we also provide a Mutex'd
+// variant in the coordinator.
+
+impl RuntimeHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute a program by manifest name. Validates shapes/dtypes against
+    /// the manifest before crossing the thread boundary.
+    pub fn run(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.get(name)?;
+        validate_inputs(spec, &inputs)?;
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Job::Run { name: name.to_string(), inputs, resp: tx })
+            .map_err(|_| anyhow!("runtime thread terminated"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped response"))?
+    }
+
+    /// Compile a program ahead of first use.
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let _ = self.manifest.get(name)?;
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Job::Warm { name: name.to_string(), resp: tx })
+            .map_err(|_| anyhow!("runtime thread terminated"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped response"))?
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Job::Shutdown);
+    }
+}
+
+fn validate_inputs(spec: &ProgramSpec, inputs: &[HostTensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!("program '{}' expects {} inputs, got {}", spec.name, spec.inputs.len(), inputs.len());
+    }
+    for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+        if t.dtype() != s.dtype {
+            bail!("program '{}' input {i}: dtype {:?} != manifest {:?}", spec.name, t.dtype(), s.dtype);
+        }
+        if t.n_elems() != s.n_elems() {
+            bail!(
+                "program '{}' input {i}: {} elements != manifest shape {:?}",
+                spec.name,
+                t.n_elems(),
+                s.shape
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Start the runtime thread over an artifacts directory.
+pub fn start(artifacts_dir: &Path) -> Result<RuntimeHandle> {
+    let manifest = Arc::new(Manifest::load(artifacts_dir)?);
+    let (tx, rx) = mpsc::channel::<Job>();
+    let thread_manifest = manifest.clone();
+    std::thread::Builder::new()
+        .name("pawd-runtime".into())
+        .spawn(move || runtime_thread(thread_manifest, rx))
+        .context("spawning runtime thread")?;
+    Ok(RuntimeHandle { tx, manifest })
+}
+
+fn runtime_thread(manifest: Arc<Manifest>, rx: mpsc::Receiver<Job>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the construction error.
+            let msg = format!("PjRtClient::cpu failed: {e}");
+            for job in rx {
+                match job {
+                    Job::Run { resp, .. } => {
+                        let _ = resp.send(Err(anyhow!(msg.clone())));
+                    }
+                    Job::Warm { resp, .. } => {
+                        let _ = resp.send(Err(anyhow!(msg.clone())));
+                    }
+                    Job::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    for job in rx {
+        match job {
+            Job::Shutdown => break,
+            Job::Warm { name, resp } => {
+                let r = ensure_compiled(&client, &manifest, &mut cache, &name).map(|_| ());
+                let _ = resp.send(r);
+            }
+            Job::Run { name, inputs, resp } => {
+                let r = (|| -> Result<Vec<HostTensor>> {
+                    ensure_compiled(&client, &manifest, &mut cache, &name)?;
+                    let exe = cache.get(&name).unwrap();
+                    let literals = inputs
+                        .into_iter()
+                        .map(to_literal)
+                        .collect::<Result<Vec<_>>>()?;
+                    let result = exe
+                        .execute::<xla::Literal>(&literals)
+                        .with_context(|| format!("executing '{name}'"))?;
+                    let tuple = result[0][0]
+                        .to_literal_sync()
+                        .context("fetching result literal")?;
+                    // Programs are lowered with return_tuple=True.
+                    let parts = tuple.to_tuple().context("untupling result")?;
+                    parts.into_iter().map(from_literal).collect()
+                })();
+                let _ = resp.send(r);
+            }
+        }
+    }
+}
+
+fn ensure_compiled<'a>(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+) -> Result<&'a xla::PjRtLoadedExecutable> {
+    if !cache.contains_key(name) {
+        let spec = manifest.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text for '{name}': {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling '{name}': {e}"))?;
+        cache.insert(name.to_string(), exe);
+    }
+    Ok(cache.get(name).unwrap())
+}
+
+fn to_literal(t: HostTensor) -> Result<xla::Literal> {
+    let mk = |ty: xla::ElementType, shape: &[usize], bytes: &[u8]| {
+        xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)
+            .map_err(|e| anyhow!("creating literal: {e}"))
+    };
+    match t {
+        HostTensor::F32(v, s) => mk(xla::ElementType::F32, &s, bytes_of(&v)),
+        HostTensor::I32(v, s) => mk(xla::ElementType::S32, &s, bytes_of(&v)),
+        HostTensor::U32(v, s) => mk(xla::ElementType::U32, &s, bytes_of(&v)),
+    }
+}
+
+fn from_literal(l: xla::Literal) -> Result<HostTensor> {
+    let shape = l.shape().map_err(|e| anyhow!("literal shape: {e}"))?;
+    let arr = match shape {
+        xla::Shape::Array(a) => a,
+        other => bail!("unexpected non-array output shape {other:?}"),
+    };
+    let dims: Vec<usize> = arr.dims().iter().map(|&d| d as usize).collect();
+    match arr.ty() {
+        xla::ElementType::F32 => {
+            Ok(HostTensor::F32(l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?, dims))
+        }
+        xla::ElementType::S32 => {
+            Ok(HostTensor::I32(l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?, dims))
+        }
+        xla::ElementType::U32 => {
+            Ok(HostTensor::U32(l.to_vec::<u32>().map_err(|e| anyhow!("{e}"))?, dims))
+        }
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}
+
+fn bytes_of<T: Copy>(v: &[T]) -> &[u8] {
+    // Plain-old-data reinterpretation for the FFI boundary.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}

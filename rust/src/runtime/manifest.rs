@@ -1,0 +1,186 @@
+//! AOT artifact manifest (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`).
+//!
+//! The manifest is the contract between the build-time Python side and the
+//! serving-time Rust side: every program's file name, input shapes/dtypes,
+//! output shapes, and semantic metadata (kind, config, batch/seq bucket).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" | "float32" => DType::F32,
+            "i32" | "int32" => DType::I32,
+            "u32" | "uint32" => DType::U32,
+            other => bail!("unsupported dtype '{other}'"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn n_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// kind: forward | train_step | lmgrad | delta_apply | fused_delta_matmul
+    pub kind: String,
+    pub config: Option<String>,
+    pub batch: Option<usize>,
+    pub seq: Option<usize>,
+    pub axis: Option<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub programs: BTreeMap<String, ProgramSpec>,
+    /// Config name -> n_params (for sanity checks against Rust presets).
+    pub config_params: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        let mut programs = BTreeMap::new();
+        for (name, p) in json.req("programs")?.as_obj().context("programs not an object")? {
+            let file = dir.join(p.req_str("file")?);
+            if !file.to_string_lossy().ends_with(".hlo.txt") {
+                continue; // parity fixtures etc.
+            }
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                let mut out = Vec::new();
+                for t in p.req_arr(key)? {
+                    let shape = t
+                        .req_arr("shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("bad dim"))
+                        .collect::<Result<Vec<_>>>()?;
+                    out.push(TensorSpec { shape, dtype: DType::parse(t.req_str("dtype")?)? });
+                }
+                Ok(out)
+            };
+            let meta = p.get("meta").cloned().unwrap_or(Json::Null);
+            let get_meta_str = |k: &str| meta.get(k).and_then(|v| v.as_str()).map(String::from);
+            let get_meta_usize = |k: &str| meta.get(k).and_then(|v| v.as_usize());
+            programs.insert(
+                name.clone(),
+                ProgramSpec {
+                    name: name.clone(),
+                    file,
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    kind: get_meta_str("kind").unwrap_or_default(),
+                    config: get_meta_str("config"),
+                    batch: get_meta_usize("batch"),
+                    seq: get_meta_usize("seq"),
+                    axis: get_meta_str("axis"),
+                },
+            );
+        }
+        let mut config_params = BTreeMap::new();
+        if let Some(cfgs) = json.get("configs").and_then(|c| c.as_obj()) {
+            for (name, c) in cfgs {
+                config_params.insert(name.clone(), c.req_usize("n_params")?);
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), programs, config_params })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("program '{name}' not in manifest"))
+    }
+
+    /// Forward-program buckets for a config, sorted by (batch, seq).
+    pub fn fwd_buckets(&self, config: &str) -> Vec<&ProgramSpec> {
+        let mut v: Vec<&ProgramSpec> = self
+            .programs
+            .values()
+            .filter(|p| p.kind == "forward" && p.config.as_deref() == Some(config))
+            .collect();
+        v.sort_by_key(|p| (p.batch.unwrap_or(0), p.seq.unwrap_or(0)));
+        v
+    }
+
+    /// Smallest forward bucket that fits (batch, seq), if any.
+    pub fn pick_fwd(&self, config: &str, batch: usize, seq: usize) -> Option<&ProgramSpec> {
+        self.fwd_buckets(config)
+            .into_iter()
+            .find(|p| p.batch.unwrap_or(0) >= batch && p.seq.unwrap_or(0) >= seq)
+    }
+
+    pub fn find_kind(&self, kind: &str, config: &str) -> Option<&ProgramSpec> {
+        self.programs
+            .values()
+            .find(|p| p.kind == kind && p.config.as_deref() == Some(config))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.programs.contains_key("fwd_tiny_b1_t48"));
+        let fwd = m.get("fwd_tiny_b1_t48").unwrap();
+        assert_eq!(fwd.kind, "forward");
+        assert_eq!(fwd.inputs.len(), 2);
+        assert_eq!(fwd.inputs[1].dtype, DType::I32);
+        assert_eq!(fwd.inputs[1].shape, vec![1, 48]);
+        // Param counts must agree with the Rust presets.
+        for (name, &n) in &m.config_params {
+            let cfg = crate::model::ModelConfig::preset(name).unwrap();
+            assert_eq!(cfg.n_params(), n, "param count mismatch for {name}");
+        }
+        // Bucket picking.
+        assert!(m.pick_fwd("tiny", 1, 32).is_some());
+        assert!(m.pick_fwd("tiny", 64, 48).is_none());
+        assert!(m.find_kind("train_step", "tiny").is_some());
+        assert!(m.find_kind("lmgrad", "tiny").is_some());
+    }
+
+    #[test]
+    fn missing_manifest_is_informative() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Runtime: load + execute the AOT HLO artifacts via the PJRT CPU client.
+//!
+//! * [`manifest`] — the JSON contract written by `python/compile/aot.py`.
+//! * [`engine`] — the dedicated runtime thread owning the (non-`Send`)
+//!   `PjRtClient`, with a channel-based [`engine::RuntimeHandle`].
+//! * [`api`] — typed wrappers: bucketed batched forward, fused-AdamW train
+//!   step, logit-matching gradient, and the Pallas kernel entry points.
+
+pub mod api;
+pub mod engine;
+pub mod manifest;
+
+pub use api::{forward_logits, lmgrad, train_step, TrainState};
+pub use engine::{start, HostTensor, RuntimeHandle};
+pub use manifest::Manifest;

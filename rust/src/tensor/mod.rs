@@ -1,0 +1,8 @@
+//! CPU tensor math substrate: 2-D f32 tensors, blocked matmul, and the
+//! neural-net primitives (RMSNorm/softmax/SiLU/RoPE) used by the native
+//! transformer forward pass and the calibration solver.
+
+pub mod ops;
+pub mod tensor2;
+
+pub use tensor2::{axpy, cholesky_solve, dot, Tensor2};

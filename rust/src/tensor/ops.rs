@@ -1,0 +1,182 @@
+//! Neural-net primitive ops over flat f32 buffers: RMSNorm, softmax,
+//! SiLU, RoPE, log-softmax. These mirror `python/compile/model.py` exactly —
+//! the native Rust forward pass is the parity oracle for the AOT runtime, so
+//! every epsilon and convention here must match the JAX side.
+
+/// RMSNorm: `x * w / sqrt(mean(x^2) + eps)` over the last dimension.
+pub const RMS_EPS: f32 = 1e-5;
+
+pub fn rmsnorm_into(x: &[f32], w: &[f32], out: &mut [f32]) {
+    let d = w.len();
+    debug_assert_eq!(x.len(), d);
+    debug_assert_eq!(out.len(), d);
+    let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+    let inv = 1.0 / (ms + RMS_EPS as f64).sqrt() as f32;
+    for i in 0..d {
+        out[i] = x[i] * inv * w[i];
+    }
+}
+
+/// In-place numerically-stable softmax over a row.
+pub fn softmax_inplace(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f32;
+    for x in row.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in row.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Log-softmax of one row into `out` (used for LM scoring).
+pub fn log_softmax_into(row: &[f32], out: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = row.iter().map(|&x| ((x - max) as f64).exp()).sum::<f64>().ln() as f32 + max;
+    for (o, &x) in out.iter_mut().zip(row) {
+        *o = x - lse;
+    }
+}
+
+/// SiLU (a.k.a. swish): `x * sigmoid(x)`.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Rotary position embedding tables for `max_seq` positions and `head_dim`.
+///
+/// Convention (matches `model.py`): `inv_freq[i] = base^{-2i/head_dim}` for
+/// i in [0, head_dim/2); angle `θ(pos, i) = pos · inv_freq[i]`; cos/sin are
+/// laid out `[pos][head_dim]` with the half-table duplicated
+/// (`cos[pos][i] == cos[pos][i + head_dim/2]`), and rotate-half:
+/// `q' = q·cos + rotate_half(q)·sin`, `rotate_half(q) = [-q2, q1]`.
+pub struct RopeTable {
+    pub head_dim: usize,
+    pub max_seq: usize,
+    /// `[max_seq * head_dim]`
+    pub cos: Vec<f32>,
+    pub sin: Vec<f32>,
+}
+
+pub const ROPE_BASE: f32 = 10_000.0;
+
+impl RopeTable {
+    pub fn new(head_dim: usize, max_seq: usize) -> Self {
+        assert!(head_dim % 2 == 0, "RoPE head_dim must be even");
+        let half = head_dim / 2;
+        let mut cos = vec![0f32; max_seq * head_dim];
+        let mut sin = vec![0f32; max_seq * head_dim];
+        for pos in 0..max_seq {
+            for i in 0..half {
+                let inv_freq = (ROPE_BASE as f64).powf(-2.0 * i as f64 / head_dim as f64);
+                let ang = pos as f64 * inv_freq;
+                let (s, c) = (ang.sin() as f32, ang.cos() as f32);
+                cos[pos * head_dim + i] = c;
+                cos[pos * head_dim + half + i] = c;
+                sin[pos * head_dim + i] = s;
+                sin[pos * head_dim + half + i] = s;
+            }
+        }
+        RopeTable { head_dim, max_seq, cos, sin }
+    }
+
+    /// Apply RoPE in place to one head vector `q` at position `pos`.
+    pub fn apply(&self, q: &mut [f32], pos: usize) {
+        debug_assert_eq!(q.len(), self.head_dim);
+        debug_assert!(pos < self.max_seq);
+        let half = self.head_dim / 2;
+        let cos = &self.cos[pos * self.head_dim..(pos + 1) * self.head_dim];
+        let sin = &self.sin[pos * self.head_dim..(pos + 1) * self.head_dim];
+        for i in 0..half {
+            let a = q[i];
+            let b = q[half + i];
+            q[i] = a * cos[i] - b * sin[i];
+            q[half + i] = b * cos[half + i] + a * sin[half + i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = [3.0f32, 4.0];
+        let w = [1.0f32, 1.0];
+        let mut out = [0f32; 2];
+        rmsnorm_into(&x, &w, &mut out);
+        // mean square = 12.5, norm = sqrt(12.5+eps)
+        let inv = 1.0 / (12.5f32 + RMS_EPS).sqrt();
+        assert!((out[0] - 3.0 * inv).abs() < 1e-6);
+        assert!((out[1] - 4.0 * inv).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut row = vec![1000.0f32, 1001.0, 999.0];
+        softmax_inplace(&mut row);
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(row.iter().all(|&p| p.is_finite() && p >= 0.0));
+        assert!(row[1] > row[0] && row[0] > row[2]);
+    }
+
+    #[test]
+    fn log_softmax_consistency() {
+        let row = vec![0.5f32, -1.0, 2.0, 0.0];
+        let mut ls = vec![0f32; 4];
+        log_softmax_into(&row, &mut ls);
+        let mut sm = row.clone();
+        softmax_inplace(&mut sm);
+        for (l, p) in ls.iter().zip(&sm) {
+            assert!((l.exp() - p).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn silu_known_values() {
+        assert_eq!(silu(0.0), 0.0);
+        assert!((silu(1.0) - 0.731_058_6).abs() < 1e-5);
+        assert!(silu(-20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut table = RopeTable::new(8, 16);
+        let q0 = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        for pos in [0usize, 1, 7, 15] {
+            let mut q = q0;
+            table.apply(&mut q, pos);
+            let n0: f32 = q0.iter().map(|x| x * x).sum();
+            let n1: f32 = q.iter().map(|x| x * x).sum();
+            assert!((n0 - n1).abs() / n0 < 1e-5, "pos {pos}");
+        }
+        // Position 0 is identity.
+        let mut q = q0;
+        table.apply(&mut q, 0);
+        assert_eq!(q, q0);
+        let _ = &mut table;
+    }
+
+    #[test]
+    fn rope_relative_property() {
+        // <RoPE(q,m), RoPE(k,n)> depends only on m-n for same q,k.
+        let table = RopeTable::new(4, 64);
+        let q0 = [0.3f32, -0.7, 1.1, 0.2];
+        let k0 = [-0.5f32, 0.9, 0.4, -1.3];
+        let dot = |a: &[f32], b: &[f32]| a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>();
+        let at = |m: usize, n: usize| {
+            let mut q = q0;
+            let mut k = k0;
+            table.apply(&mut q, m);
+            table.apply(&mut k, n);
+            dot(&q, &k)
+        };
+        assert!((at(3, 1) - at(10, 8)).abs() < 1e-4);
+        assert!((at(5, 5) - at(20, 20)).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,397 @@
+//! Row-major 2-D f32 tensor with blocked, multithreaded matmul.
+//!
+//! This is the CPU math substrate for the native transformer forward pass
+//! (the parity oracle for the XLA runtime), the calibration solver and the
+//! delta apply path. Weights are stored `[d_out, d_in]` (PyTorch `Linear`
+//! convention), so the hot product is `y = x · Wᵀ`, a row-by-row dot that is
+//! cache-friendly for both operands without transposition.
+
+use crate::util::par;
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor2 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor2[{}x{}]", self.rows, self.cols)
+    }
+}
+
+impl Default for Tensor2 {
+    fn default() -> Self {
+        Tensor2 { rows: 0, cols: 0, data: Vec::new() }
+    }
+}
+
+impl Tensor2 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Tensor2 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Tensor2 { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Tensor2 { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Tensor2 {
+        let mut out = Tensor2::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// `self · otherᵀ`: `[m,k] x [n,k] -> [m,n]`.
+    ///
+    /// The workhorse: `x · Wᵀ` with W stored `[n=d_out, k=d_in]`. Parallel
+    /// over output rows; inner dot unrolled 4-wide so LLVM autovectorizes.
+    pub fn matmul_bt(&self, other: &Tensor2) -> Tensor2 {
+        assert_eq!(self.cols, other.cols, "matmul_bt inner dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Tensor2::zeros(m, n);
+        let a = &self.data;
+        let b = &other.data;
+        par::parallel_rows_mut(&mut out.data, m, n, 8, |row0, chunk| {
+            for (ri, out_row) in chunk.chunks_mut(n).enumerate() {
+                let arow = &a[(row0 + ri) * k..(row0 + ri + 1) * k];
+                for (j, o) in out_row.iter_mut().enumerate() {
+                    *o = dot(arow, &b[j * k..(j + 1) * k]);
+                }
+            }
+        });
+        out
+    }
+
+    /// `self · other`: `[m,k] x [k,n] -> [m,n]` (used by calibration math).
+    pub fn matmul(&self, other: &Tensor2) -> Tensor2 {
+        assert_eq!(self.cols, other.rows, "matmul inner dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Tensor2::zeros(m, n);
+        let a = &self.data;
+        let b = &other.data;
+        par::parallel_rows_mut(&mut out.data, m, n, 8, |row0, chunk| {
+            for (ri, out_row) in chunk.chunks_mut(n).enumerate() {
+                let arow = &a[(row0 + ri) * k..(row0 + ri + 1) * k];
+                // i-k-j loop order: stream b rows, accumulate into out_row.
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (o, &bv) in out_row.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// Gram matrix `selfᵀ · self` (`[k,k]` for `[m,k]` input), symmetric.
+    pub fn gram(&self) -> Tensor2 {
+        let (m, k) = (self.rows, self.cols);
+        let mut out = Tensor2::zeros(k, k);
+        // Accumulate row outer products; parallel over output rows requires
+        // a transposed view, so do column-blocked accumulation instead.
+        let a = &self.data;
+        par::parallel_rows_mut(&mut out.data, k, k, 4, |row0, chunk| {
+            let rows_here = chunk.len() / k;
+            for mi in 0..m {
+                let arow = &a[mi * k..(mi + 1) * k];
+                for rloc in 0..rows_here {
+                    let i = row0 + rloc;
+                    let ai = arow[i];
+                    if ai == 0.0 {
+                        continue;
+                    }
+                    let orow = &mut chunk[rloc * k..(rloc + 1) * k];
+                    for (o, &aj) in orow.iter_mut().zip(arow) {
+                        *o += ai * aj;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor2) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor2) -> Tensor2 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Tensor2 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Mean squared difference against another tensor.
+    pub fn mse(&self, other: &Tensor2) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64
+    }
+}
+
+/// Unrolled dot product; LLVM vectorizes this to AVX on release builds.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..chunks {
+        let o = i * 8;
+        s0 += a[o] * b[o];
+        s1 += a[o + 1] * b[o + 1];
+        s2 += a[o + 2] * b[o + 2];
+        s3 += a[o + 3] * b[o + 3];
+        s4 += a[o + 4] * b[o + 4];
+        s5 += a[o + 5] * b[o + 5];
+        s6 += a[o + 6] * b[o + 6];
+        s7 += a[o + 7] * b[o + 7];
+    }
+    let mut s = (s0 + s1) + (s2 + s3) + ((s4 + s5) + (s6 + s7));
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x` (used in calibration gradient steps).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Solve the symmetric positive-definite system `A·x = b` in place via
+/// Cholesky (A is the calibration Gram matrix + ridge). Returns None if A is
+/// not positive definite even after the caller's ridge.
+pub fn cholesky_solve(a: &Tensor2, b: &[f32]) -> Option<Vec<f32>> {
+    assert_eq!(a.rows, a.cols);
+    assert_eq!(a.rows, b.len());
+    let n = a.rows;
+    // Lower-triangular factor, row-major.
+    let mut l = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    // Forward solve L·y = b.
+    let mut y = vec![0f64; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= l[i * n + k] * y[k];
+        }
+        y[i] = sum / l[i * n + i];
+    }
+    // Back solve Lᵀ·x = y.
+    let mut x = vec![0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    Some(x.into_iter().map(|v| v as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randt(r: &mut Rng, rows: usize, cols: usize) -> Tensor2 {
+        let mut t = Tensor2::zeros(rows, cols);
+        r.fill_normal(&mut t.data, 1.0);
+        t
+    }
+
+    fn matmul_naive(a: &Tensor2, b: &Tensor2) -> Tensor2 {
+        let mut out = Tensor2::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0f32;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *out.at_mut(i, j) = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut r = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (16, 32, 8), (33, 17, 65)] {
+            let a = randt(&mut r, m, k);
+            let b = randt(&mut r, k, n);
+            let got = a.matmul(&b);
+            let want = matmul_naive(&a, &b);
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul_of_transpose() {
+        let mut r = Rng::new(2);
+        for &(m, k, n) in &[(4, 8, 4), (7, 13, 29), (64, 128, 32)] {
+            let a = randt(&mut r, m, k);
+            let w = randt(&mut r, n, k);
+            let got = a.matmul_bt(&w);
+            let want = a.matmul(&w.transpose());
+            for (g, v) in got.data.iter().zip(&want.data) {
+                assert!((g - v).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_and_correct() {
+        let mut r = Rng::new(3);
+        let x = randt(&mut r, 37, 11);
+        let g = x.gram();
+        let want = x.transpose().matmul(&x);
+        for i in 0..11 {
+            for j in 0..11 {
+                assert!((g.at(i, j) - g.at(j, i)).abs() < 1e-4);
+                assert!((g.at(i, j) - want.at(i, j)).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_scalar_loop() {
+        let mut r = Rng::new(4);
+        for n in [0, 1, 7, 8, 9, 63, 64, 100] {
+            let mut a = vec![0f32; n];
+            let mut b = vec![0f32; n];
+            r.fill_normal(&mut a, 1.0);
+            r.fill_normal(&mut b, 1.0);
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - want).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        let mut r = Rng::new(5);
+        let n = 24;
+        let x = randt(&mut r, 64, n);
+        let mut a = x.gram();
+        for i in 0..n {
+            *a.at_mut(i, i) += 1.0; // ridge -> SPD
+        }
+        let mut truth = vec![0f32; n];
+        r.fill_normal(&mut truth, 1.0);
+        // b = A·truth
+        let b: Vec<f32> = (0..n).map(|i| dot(a.row(i), &truth)).collect();
+        let solved = cholesky_solve(&a, &b).expect("SPD");
+        for (s, t) in solved.iter().zip(&truth) {
+            assert!((s - t).abs() < 1e-2, "{s} vs {t}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Tensor2::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky_solve(&a, &[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut r = Rng::new(6);
+        let t = randt(&mut r, 5, 9);
+        assert_eq!(t.transpose().transpose(), t);
+    }
+
+    #[test]
+    fn mse_of_self_is_zero() {
+        let mut r = Rng::new(7);
+        let t = randt(&mut r, 8, 8);
+        assert_eq!(t.mse(&t), 0.0);
+    }
+}

@@ -1,0 +1,266 @@
+//! Hand-rolled benchmark harness (criterion is unavailable offline).
+//!
+//! Each `rust/benches/*.rs` target is a `harness = false` binary that uses
+//! this module: warmup, repeated timed runs, and a stable one-line report
+//! (`name ... mean ± std  p50/p90  [iters]`), plus Markdown table helpers so
+//! bench output can be pasted into EXPERIMENTS.md verbatim.
+
+use super::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time in seconds.
+    pub summary: Summary,
+    /// Optional throughput denominator: items (or bytes) processed per iter.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.summary.mean
+    }
+
+    pub fn report_line(&self) -> String {
+        let s = &self.summary;
+        let mut line = format!(
+            "{:<44} {:>12} ± {:>10}   p50 {:>10}  p90 {:>10}  ({} iters)",
+            self.name,
+            fmt_dur(s.mean),
+            fmt_dur(s.std),
+            fmt_dur(s.p50),
+            fmt_dur(s.p90),
+            self.iters
+        );
+        if let Some(items) = self.items_per_iter {
+            let rate = items / s.mean;
+            line.push_str(&format!("  [{}/s]", fmt_rate(rate)));
+        }
+        line
+    }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_dur(s: f64) -> String {
+    if !s.is_finite() {
+        return "n/a".into();
+    }
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Format a rate (items/s) with SI prefixes.
+pub fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2}G", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}k", r / 1e3)
+    } else {
+        format!("{:.1}", r)
+    }
+}
+
+/// Format a byte count.
+pub fn fmt_bytes(b: u64) -> String {
+    const KB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KB * KB * KB {
+        format!("{:.2} GiB", b / (KB * KB * KB))
+    } else if b >= KB * KB {
+        format!("{:.2} MiB", b / (KB * KB))
+    } else if b >= KB {
+        format!("{:.2} KiB", b / KB)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Benchmark runner with warmup and adaptive iteration count.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            min_iters: 5,
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-profile configuration for CI / smoke runs (set PAWD_BENCH_FAST=1).
+    pub fn from_env() -> Self {
+        let mut b = Self::default();
+        if std::env::var("PAWD_BENCH_FAST").is_ok() {
+            b.warmup = Duration::from_millis(20);
+            b.measure = Duration::from_millis(150);
+            b.min_iters = 2;
+        }
+        b
+    }
+
+    /// Time `f`, which should perform one full iteration of the workload.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.run_with_items(name, None, &mut f)
+    }
+
+    /// Time `f` and report `items` per-iteration throughput.
+    pub fn run_items<F: FnMut()>(&mut self, name: &str, items: f64, mut f: F) -> &BenchResult {
+        self.run_with_items(name, Some(items), &mut f)
+    }
+
+    fn run_with_items(
+        &mut self,
+        name: &str,
+        items_per_iter: Option<f64>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup || warm_iters < 1 {
+            f();
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let m0 = Instant::now();
+        while (m0.elapsed() < self.measure || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            summary: Summary::of(&samples),
+            items_per_iter,
+        };
+        println!("{}", res.report_line());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Markdown table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n### {title}\n");
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_samples() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_iters: 3,
+            max_iters: 100,
+            results: vec![],
+        };
+        let mut x = 0u64;
+        let r = b.run("noop", || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(2.5e-9), "2.5ns");
+        assert_eq!(fmt_dur(2.5e-6), "2.50µs");
+        assert_eq!(fmt_dur(2.5e-3), "2.50ms");
+        assert_eq!(fmt_dur(2.5), "2.500s");
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".to_string()]);
+    }
+}

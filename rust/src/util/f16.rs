@@ -1,0 +1,222 @@
+//! IEEE-754 binary16 (f16) and bfloat16 codecs.
+//!
+//! The paper stores scale vectors as FP16 and base weights as BF16; the
+//! `half` crate is unavailable offline so the conversions are implemented
+//! here. Round-to-nearest-even on encode, exact on decode.
+
+/// Convert an f32 to IEEE binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN: keep a quiet NaN payload bit if any mantissa bits set.
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // Unbiased exponent rebased for f16 (bias 15 vs 127).
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e <= 0 {
+        // Subnormal or zero in f16.
+        if e < -10 {
+            return sign; // underflow to signed zero
+        }
+        // Add implicit leading 1, shift into subnormal position.
+        let m = mant | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half_val = m >> shift;
+        // round to nearest even
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = if rem > halfway || (rem == halfway && (half_val & 1) == 1) {
+            half_val + 1
+        } else {
+            half_val
+        };
+        return sign | rounded as u16;
+    }
+    // Normal case: 23 -> 10 mantissa bits with RNE.
+    let half_val = ((e as u32) << 10) | (mant >> 13);
+    let rem = mant & 0x1FFF;
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && (half_val & 1) == 1) {
+        half_val + 1 // may carry into exponent; that is correct behaviour
+    } else {
+        half_val
+    };
+    sign | rounded as u16
+}
+
+/// Convert IEEE binary16 bits to f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // signed zero
+        } else {
+            // subnormal: normalize
+            let mut e = 0i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03FF;
+            sign | (((127 - 15 + e + 1) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13) // inf / nan
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 -> bf16 bits, round-to-nearest-even (truncation of low 16 bits + RNE).
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet NaN
+    }
+    let round_bit = 0x0000_8000u32;
+    let lower = bits & 0xFFFF;
+    let upper = bits >> 16;
+    if lower > round_bit || (lower == round_bit && (upper & 1) == 1) {
+        (upper + 1) as u16
+    } else {
+        upper as u16
+    }
+}
+
+/// bf16 bits -> f32 (exact).
+#[inline]
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Encode a slice of f32 into little-endian f16 bytes.
+pub fn encode_f16_slice(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for &x in xs {
+        out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+    }
+    out
+}
+
+/// Decode little-endian f16 bytes into f32.
+pub fn decode_f16_slice(bytes: &[u8]) -> Vec<f32> {
+    assert!(bytes.len() % 2 == 0, "f16 byte slice must have even length");
+    bytes
+        .chunks_exact(2)
+        .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+        .collect()
+}
+
+/// Encode a slice of f32 into little-endian bf16 bytes.
+pub fn encode_bf16_slice(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for &x in xs {
+        out.extend_from_slice(&f32_to_bf16_bits(x).to_le_bytes());
+    }
+    out
+}
+
+/// Decode little-endian bf16 bytes into f32.
+pub fn decode_bf16_slice(bytes: &[u8]) -> Vec<f32> {
+    assert!(bytes.len() % 2 == 0);
+    bytes
+        .chunks_exact(2)
+        .map(|c| bf16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_exact_values_roundtrip() {
+        for &v in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25, 1024.0] {
+            let h = f32_to_f16_bits(v);
+            assert_eq!(f16_bits_to_f32(h), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn f16_signed_zero() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+    }
+
+    #[test]
+    fn f16_overflow_to_inf() {
+        assert_eq!(f32_to_f16_bits(1.0e6), 0x7C00);
+        assert_eq!(f32_to_f16_bits(-1.0e6), 0xFC00);
+        assert!(f16_bits_to_f32(0x7C00).is_infinite());
+    }
+
+    #[test]
+    fn f16_nan_propagates() {
+        let h = f32_to_f16_bits(f32::NAN);
+        assert!(f16_bits_to_f32(h).is_nan());
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        // Smallest positive f16 subnormal = 2^-24.
+        let tiny = 2.0f32.powi(-24);
+        let h = f32_to_f16_bits(tiny);
+        assert_eq!(h, 0x0001);
+        assert_eq!(f16_bits_to_f32(h), tiny);
+        // Below half the smallest subnormal underflows to zero.
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-26)), 0x0000);
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10 -> rounds to even (1.0).
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), 1.0);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9 -> rounds to even (1+2^-9).
+        let y = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(y)), 1.0 + 2.0f32.powi(-9));
+    }
+
+    #[test]
+    fn f16_relative_error_bounded() {
+        // RNE guarantees rel err <= 2^-11 for normals.
+        let mut r = crate::util::rng::Rng::new(1234);
+        for _ in 0..10_000 {
+            let v = r.normal_f32(0.0, 10.0);
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            let rel = ((back - v) / v.abs().max(1e-6)).abs();
+            assert!(rel <= 4.9e-4, "v={v} back={back} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_and_error() {
+        for &v in &[0.0f32, 1.0, -2.5, 3.1415926, 1e20, -1e-20] {
+            let b = bf16_bits_to_f32(f32_to_bf16_bits(v));
+            if v == 0.0 {
+                assert_eq!(b, 0.0);
+            } else {
+                assert!(((b - v) / v).abs() < 0.01, "v={v} b={b}");
+            }
+        }
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn slice_codecs_roundtrip() {
+        let xs = vec![0.5f32, -1.25, 3.0, 0.0009765625];
+        assert_eq!(decode_f16_slice(&encode_f16_slice(&xs)), xs);
+        let bs = vec![1.0f32, -2.0, 0.5];
+        assert_eq!(decode_bf16_slice(&encode_bf16_slice(&bs)), bs);
+    }
+}

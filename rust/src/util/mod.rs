@@ -1,0 +1,14 @@
+//! Shared utilities: deterministic RNG, float codecs, JSON, parallelism,
+//! stats/benchmarking, and the property-test harness.
+//!
+//! These exist because the build environment is offline (see DESIGN.md):
+//! `rand`, `half`, `serde_json`, `rayon`, `criterion` and `proptest` are
+//! re-implemented here at the scale this project needs.
+
+pub mod benchkit;
+pub mod f16;
+pub mod json;
+pub mod par;
+pub mod prop;
+pub mod rng;
+pub mod stats;

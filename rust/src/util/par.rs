@@ -1,0 +1,172 @@
+//! Data-parallel helpers built on `std::thread::scope`.
+//!
+//! `rayon` is unavailable offline. The hot paths in this codebase (delta
+//! apply, matmul, calibration solves) are all chunked loops over row ranges,
+//! so a scoped fork-join over contiguous ranges is both simple and fast.
+//! Thread count defaults to the machine parallelism, clamped by work size so
+//! tiny inputs stay single-threaded (spawn overhead ~10s of µs).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use for `n_items` of work where each item is
+/// worth roughly `min_per_thread` items of sequential throughput.
+pub fn thread_count(n_items: usize, min_per_thread: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let by_work = n_items / min_per_thread.max(1);
+    hw.min(by_work.max(1))
+}
+
+/// Run `f(start, end)` over disjoint contiguous subranges of `0..n` in
+/// parallel. `f` must be `Sync` (called concurrently by several threads).
+pub fn parallel_ranges<F>(n: usize, min_per_thread: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = thread_count(n, min_per_thread);
+    if threads <= 1 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let fref = &f;
+            s.spawn(move || fref(lo, hi));
+        }
+    });
+}
+
+/// Parallel for over mutable row-chunks of a flat buffer: splits `data`
+/// (logically `n_rows` rows of `row_len`) into contiguous row ranges and
+/// hands each thread its disjoint `&mut [f32]` slice.
+pub fn parallel_rows_mut<T: Send, F>(
+    data: &mut [T],
+    n_rows: usize,
+    row_len: usize,
+    min_rows_per_thread: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert_eq!(data.len(), n_rows * row_len, "buffer/row shape mismatch");
+    let threads = thread_count(n_rows, min_rows_per_thread);
+    if threads <= 1 || n_rows == 0 {
+        f(0, data);
+        return;
+    }
+    let rows_per = n_rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut row0 = 0usize;
+        while row0 < n_rows {
+            let take_rows = rows_per.min(n_rows - row0);
+            let (head, tail) = rest.split_at_mut(take_rows * row_len);
+            rest = tail;
+            let fref = &f;
+            let r0 = row0;
+            s.spawn(move || fref(r0, head));
+            row0 += take_rows;
+        }
+    });
+}
+
+/// Dynamic work distribution: threads pull item indices from a shared atomic
+/// counter. Use when per-item cost is highly variable (e.g. per-module
+/// calibration where module shapes differ).
+pub fn parallel_items<F>(n: usize, max_threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = thread_count(n, 1).min(max_threads.max(1));
+    if threads <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let fref = &f;
+            let nref = &next;
+            s.spawn(move || loop {
+                let i = nref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                fref(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn ranges_cover_exactly() {
+        let hits = AtomicU64::new(0);
+        parallel_ranges(1000, 10, |lo, hi| {
+            let mut local = 0u64;
+            for i in lo..hi {
+                local += i as u64;
+            }
+            hits.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn ranges_small_input_single_thread() {
+        let hits = AtomicU64::new(0);
+        parallel_ranges(3, 100, |lo, hi| {
+            hits.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn rows_mut_disjoint_writes() {
+        let n_rows = 97;
+        let row_len = 13;
+        let mut data = vec![0f32; n_rows * row_len];
+        parallel_rows_mut(&mut data, n_rows, row_len, 4, |row0, chunk| {
+            for (r, row) in chunk.chunks_mut(row_len).enumerate() {
+                for x in row.iter_mut() {
+                    *x = (row0 + r) as f32;
+                }
+            }
+        });
+        for r in 0..n_rows {
+            for c in 0..row_len {
+                assert_eq!(data[r * row_len + c], r as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn items_process_all_once() {
+        let n = 500;
+        let flags: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_items(n, 8, |i| {
+            flags[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(flags.iter().all(|f| f.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_items_ok() {
+        parallel_ranges(0, 1, |_, _| panic!("should not run"));
+        parallel_items(0, 8, |_| panic!("should not run"));
+    }
+}

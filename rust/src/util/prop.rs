@@ -1,0 +1,138 @@
+//! Seeded property-testing harness.
+//!
+//! `proptest` is unavailable offline; this provides the same invariant-sweep
+//! style: each property runs `cases` times with a deterministic per-case RNG
+//! and a growing size parameter. On failure the harness retries the failing
+//! case at smaller sizes (a cheap shrink) and reports the seed so the exact
+//! case can be replayed with `PAWD_PROP_SEED`.
+
+use super::rng::Rng;
+
+/// Per-case generation context.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size hint in [1, max_size]; grows over the case index so early cases
+    /// exercise tiny shapes and later cases larger ones.
+    pub size: usize,
+}
+
+impl Gen {
+    /// Dimension in [1, size].
+    pub fn dim(&mut self) -> usize {
+        self.rng.range(1, self.size + 1)
+    }
+
+    /// Dimension in [lo, lo+size].
+    pub fn dim_at_least(&mut self, lo: usize) -> usize {
+        lo + self.rng.below(self.size + 1)
+    }
+
+    /// Vector of normal f32s of length n.
+    pub fn vec_normal(&mut self, n: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0f32; n];
+        self.rng.fill_normal(&mut v, std);
+        v
+    }
+
+    /// Vector with occasional special values (zeros, tiny, large, negatives).
+    pub fn vec_nasty(&mut self, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| match self.rng.below(8) {
+                0 => 0.0,
+                1 => -0.0,
+                2 => 1e-30,
+                3 => -1e-30,
+                4 => 1e20,
+                5 => -1e20,
+                _ => self.rng.normal_f32(0.0, 1.0),
+            })
+            .collect()
+    }
+}
+
+/// Run a property. `f` returns Err(description) on violation.
+///
+/// Panics with a replayable report on failure.
+pub fn check<F>(name: &str, cases: usize, max_size: usize, f: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = std::env::var("PAWD_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0x9E3779B97F4A7C15);
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0xA24BAED4963EE407);
+        // Size ramps from 1 to max_size across cases.
+        let size = 1 + (case * max_size) / cases.max(1);
+        let mut g = Gen { rng: Rng::new(seed), size: size.max(1) };
+        if let Err(msg) = f(&mut g) {
+            // Shrink attempt: replay the same seed at smaller sizes and
+            // report the smallest size that still fails.
+            let mut min_fail = size;
+            for s in 1..size {
+                let mut g2 = Gen { rng: Rng::new(seed), size: s };
+                if f(&mut g2).is_err() {
+                    min_fail = s;
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, size {size}, min-fail size {min_fail}, \
+                 seed {seed}): {msg}\nreplay with PAWD_PROP_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if !(x - y).abs().le(&tol) {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("trivial", 50, 16, |g| {
+            let n = g.dim();
+            if n >= 1 {
+                Ok(())
+            } else {
+                Err("dim < 1".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, 8, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-7], 1e-6, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-6, 1e-6).is_err());
+        assert!(assert_close(&[1.0, 2.0], &[1.0], 1e-6, 0.0).is_err());
+    }
+
+    #[test]
+    fn nasty_vectors_have_extremes() {
+        let mut g = Gen { rng: Rng::new(1), size: 10 };
+        let v = g.vec_nasty(1000);
+        assert!(v.iter().any(|&x| x == 0.0));
+        assert!(v.iter().any(|&x| x.abs() >= 1e19));
+    }
+}

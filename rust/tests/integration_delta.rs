@@ -1,0 +1,191 @@
+//! Cross-module delta integration: full compress→serialize→load→apply
+//! round trips, and the paper's method ordering (Vector ≥ Scalar) measured
+//! by teacher fidelity on held-out text.
+
+use pawd::baselines;
+use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
+use pawd::delta::format::{load_delta, save_delta};
+use pawd::delta::stats::delta_stats;
+use pawd::delta::types::Axis;
+use pawd::eval::fidelity::fidelity;
+use pawd::model::config::ModelConfig;
+use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
+use pawd::model::{FlatParams, Transformer};
+
+fn calib_docs(n: usize, len: usize) -> Vec<Vec<u8>> {
+    (0..n)
+        .map(|i| (0..len).map(|t| ((t * 7 + i * 29) % 220 + 10) as u8).collect())
+        .collect()
+}
+
+/// Probe documents drawn from the same generator family as the calibration
+/// docs (different instances). Matching distributions matters: the paper's
+/// §4 notes activation-aware calibration degrades under distribution shift,
+/// which random byte streams amplify.
+fn probe_docs() -> Vec<Vec<u8>> {
+    (10..14)
+        .map(|i| (0..48).map(|t| ((t * 7 + i * 29) % 220 + 10) as u8).collect())
+        .collect()
+}
+
+#[test]
+fn full_roundtrip_reconstruction_improves_fidelity() {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = FlatParams::init(&cfg, 21);
+    let ft = synth_finetune(&base, &SynthDeltaSpec { magnitude: 0.03, ..Default::default() });
+    let opts = CompressOptions { fit: FitMode::ClosedForm, ..Default::default() };
+    let (delta, _, _) = compress_model("ft", &base, &ft, &calib_docs(5, 40), &opts);
+
+    let dir = std::env::temp_dir().join("pawd_itest_delta");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ft.pawd");
+    save_delta(&path, &delta).unwrap();
+    let loaded = load_delta(&path).unwrap();
+    let student = pawd::delta::apply::materialize(&base, &loaded.modules);
+
+    let tf = Transformer::new(&cfg);
+    let probes = probe_docs();
+    let f_base = fidelity(&tf, &ft, &base, &probes);
+    let f_student = fidelity(&tf, &ft, &student, &probes);
+    assert!(
+        f_student.kl < f_base.kl * 0.75,
+        "student KL {} should be well under base {}",
+        f_student.kl,
+        f_base.kl
+    );
+    assert!(f_student.agreement >= f_base.agreement);
+}
+
+#[test]
+fn vector_beats_scalar_on_anisotropic_finetune() {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = FlatParams::init(&cfg, 22);
+    let ft = synth_finetune(
+        &base,
+        &SynthDeltaSpec { magnitude: 0.03, anisotropy: 1.3, axis_bias: 0.7, seed: 4 },
+    );
+    let docs = calib_docs(6, 40);
+    let o_vec = CompressOptions { fit: FitMode::ClosedForm, ..baselines::vector_options() };
+    let o_sca = CompressOptions { fit: FitMode::ClosedForm, ..baselines::bitdelta_options() };
+    let (d_vec, _, _) = compress_model("v", &base, &ft, &docs, &o_vec);
+    let (d_sca, _, _) = compress_model("s", &base, &ft, &docs, &o_sca);
+    let tf = Transformer::new(&cfg);
+    let probes = probe_docs();
+    let s_vec = pawd::delta::apply::materialize(&base, &d_vec.modules);
+    let s_sca = pawd::delta::apply::materialize(&base, &d_sca.modules);
+    let f_vec = fidelity(&tf, &ft, &s_vec, &probes);
+    let f_sca = fidelity(&tf, &ft, &s_sca, &probes);
+    assert!(
+        f_vec.kl < f_sca.kl,
+        "vector KL {} must beat scalar KL {} (anisotropic delta)",
+        f_vec.kl,
+        f_sca.kl
+    );
+}
+
+#[test]
+fn scalar_matches_vector_on_isotropic_delta() {
+    // Paper §4 limitation: near-isotropic deltas -> scalar is enough.
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = FlatParams::init(&cfg, 23);
+    let ft = synth_finetune(
+        &base,
+        &SynthDeltaSpec { magnitude: 0.03, anisotropy: 0.0, axis_bias: 0.5, seed: 5 },
+    );
+    let docs = calib_docs(6, 40);
+    let o_vec = CompressOptions { fit: FitMode::ClosedForm, ..baselines::vector_options() };
+    let o_sca = CompressOptions { fit: FitMode::ClosedForm, ..baselines::bitdelta_options() };
+    let (d_vec, _, _) = compress_model("v", &base, &ft, &docs, &o_vec);
+    let (d_sca, _, _) = compress_model("s", &base, &ft, &docs, &o_sca);
+    let tf = Transformer::new(&cfg);
+    let probes = probe_docs();
+    let f_vec = fidelity(&tf, &ft, &pawd::delta::apply::materialize(&base, &d_vec.modules), &probes);
+    let f_sca = fidelity(&tf, &ft, &pawd::delta::apply::materialize(&base, &d_sca.modules), &probes);
+    // Scalar should be within ~25% of vector (not catastrophically worse).
+    assert!(
+        f_sca.kl < f_vec.kl * 1.25 + 1e-6,
+        "isotropic: scalar {} should track vector {}",
+        f_sca.kl,
+        f_vec.kl
+    );
+}
+
+#[test]
+fn groupwise_sits_between_vector_and_scalar() {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = FlatParams::init(&cfg, 24);
+    let ft = synth_finetune(
+        &base,
+        &SynthDeltaSpec { magnitude: 0.03, anisotropy: 1.4, axis_bias: 1.0, seed: 6 },
+    );
+    let docs = calib_docs(6, 40);
+    let fit = FitMode::ClosedForm;
+    let mk = |axes: Vec<Axis>| CompressOptions { fit, axes, ..Default::default() };
+    let tf = Transformer::new(&cfg);
+    let probes = probe_docs();
+    let kl_of = |axes: Vec<Axis>| {
+        let (d, _, _) = compress_model("x", &base, &ft, &docs, &mk(axes));
+        fidelity(&tf, &ft, &pawd::delta::apply::materialize(&base, &d.modules), &probes).kl
+    };
+    let kl_row = kl_of(vec![Axis::Row]);
+    let kl_g8 = kl_of(vec![Axis::Group(8)]);
+    let kl_scalar = kl_of(vec![Axis::Scalar]);
+    assert!(kl_row <= kl_g8 * 1.05, "row {kl_row} vs group8 {kl_g8}");
+    assert!(kl_g8 <= kl_scalar * 1.05, "group8 {kl_g8} vs scalar {kl_scalar}");
+}
+
+#[test]
+fn anisotropy_stats_reflect_synth_spec() {
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = FlatParams::init(&cfg, 25);
+    let iso = synth_finetune(&base, &SynthDeltaSpec { anisotropy: 0.0, seed: 7, ..Default::default() });
+    let aniso = synth_finetune(
+        &base,
+        &SynthDeltaSpec { anisotropy: 1.5, axis_bias: 1.0, seed: 7, ..Default::default() },
+    );
+    let id = base.layout.patchable_modules()[0];
+    let (rows, cols) = id.kind.shape(&cfg);
+    let s_iso = delta_stats(base.module(id), iso.module(id), rows, cols);
+    let s_aniso = delta_stats(base.module(id), aniso.module(id), rows, cols);
+    assert!(s_aniso.row_cv > s_iso.row_cv * 3.0, "{} vs {}", s_aniso.row_cv, s_iso.row_cv);
+}
+
+#[test]
+fn calibration_beats_magnitude_only_init_on_layer_mse() {
+    // The guaranteed invariant is at the layer-output level: the fitted
+    // scales minimize held-out layer MSE, which the mean(|ΔW|) init does
+    // not. (Downstream KL from 5 random calibration docs is noisier — the
+    // paper's §4 distribution-shift caveat.)
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = FlatParams::init(&cfg, 26);
+    let ft = synth_finetune(&base, &SynthDeltaSpec { magnitude: 0.03, ..Default::default() });
+    // Enough calibration rows that the col-mode fit (up to d_in scales) is
+    // well-posed — with too few docs the exact minimizer can overfit its
+    // train shard and lose on validation, which is the paper's motivation
+    // for the 50-sample budget.
+    let docs = calib_docs(24, 48);
+    let o_cal = CompressOptions { fit: FitMode::ClosedForm, ..Default::default() };
+    let o_mag = baselines::magnitude_only_options();
+    let (_, rep_cal, _) = compress_model("c", &base, &ft, &docs, &o_cal);
+    let (_, rep_mag, _) = compress_model("m", &base, &ft, &docs, &o_mag);
+    // Only layer-0 modules see identical caches in both runs (later layers
+    // calibrate against each run's own partially-compressed student), so
+    // restrict the strict comparison to layer 0.
+    let mut wins = 0;
+    let mut total = 0;
+    for (rc, rm) in rep_cal.iter().zip(&rep_mag) {
+        if rc.id.layer != 0 {
+            continue;
+        }
+        total += 1;
+        let c = rc.candidates.iter().map(|x| x.2).fold(f64::INFINITY, f64::min);
+        let m = rm.candidates.iter().map(|x| x.2).fold(f64::INFINITY, f64::min);
+        if c <= m * 1.001 {
+            wins += 1;
+        }
+    }
+    assert_eq!(
+        wins, total,
+        "calibrated val MSE must beat init on every layer-0 module: {wins}/{total}"
+    );
+}

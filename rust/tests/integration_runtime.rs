@@ -1,0 +1,290 @@
+//! Cross-layer integration: the JAX-lowered AOT artifacts executed through
+//! the PJRT runtime must agree with (a) the golden jax logits in the parity
+//! fixture and (b) the native Rust transformer — proving all three
+//! implementations of the model (Rust, JAX, compiled HLO) coincide, and the
+//! Pallas kernel artifacts match the native delta apply.
+//!
+//! Requires `make artifacts` (skips politely otherwise).
+
+use pawd::delta::pack::PackedMask;
+use pawd::delta::types::{Axis, DeltaModule};
+use pawd::model::{FlatParams, ModelConfig, ModuleId, ProjKind, Transformer};
+use pawd::runtime::{self, HostTensor};
+use pawd::tensor::Tensor2;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Parity fixture written by aot.py: params, tokens, and jax logits.
+struct Parity {
+    params: Vec<f32>,
+    tokens: Vec<Vec<u8>>,
+    logits: Vec<f32>, // [B, T, V]
+    b: usize,
+    t: usize,
+    v: usize,
+}
+
+fn load_parity() -> Parity {
+    let raw = std::fs::read(artifacts_dir().join("parity_tiny.bin")).expect("parity fixture");
+    let mut off = 0usize;
+    let rd_u32 = |raw: &[u8], off: &mut usize| {
+        let v = u32::from_le_bytes(raw[*off..*off + 4].try_into().unwrap());
+        *off += 4;
+        v as usize
+    };
+    let p = rd_u32(&raw, &mut off);
+    let params: Vec<f32> = raw[off..off + 4 * p]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    off += 4 * p;
+    let b = rd_u32(&raw, &mut off);
+    let t = rd_u32(&raw, &mut off);
+    let tokens_flat: Vec<i32> = raw[off..off + 4 * b * t]
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    off += 4 * b * t;
+    let v = rd_u32(&raw, &mut off);
+    let logits: Vec<f32> = raw[off..off + 4 * b * t * v]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    off += 4 * b * t * v;
+    assert_eq!(off, raw.len());
+    let tokens = (0..b)
+        .map(|i| tokens_flat[i * t..(i + 1) * t].iter().map(|&x| x as u8).collect())
+        .collect();
+    Parity { params, tokens, logits, b, t, v }
+}
+
+fn close(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let mut worst = 0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        let d = (x - y).abs();
+        if d > tol && d > worst {
+            worst = d;
+        }
+    }
+    assert!(worst == 0.0, "{what}: worst abs deviation {worst}");
+}
+
+#[test]
+fn native_forward_matches_jax_fixture() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let fx = load_parity();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let mut params = FlatParams::zeros(&cfg);
+    params.data.copy_from_slice(&fx.params);
+    let tf = Transformer::new(&cfg);
+    for (i, seq) in fx.tokens.iter().enumerate() {
+        let logits = tf.forward_one(&params, seq);
+        let want = &fx.logits[i * fx.t * fx.v..(i + 1) * fx.t * fx.v];
+        close(&logits.data, want, 2e-3, 2e-3, &format!("native vs jax, seq {i}"));
+    }
+}
+
+#[test]
+fn pjrt_forward_matches_jax_fixture() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let fx = load_parity();
+    let h = runtime::start(&artifacts_dir()).expect("runtime");
+    let logits = runtime::forward_logits(&h, "tiny", &fx.params, &fx.tokens).expect("forward");
+    assert_eq!(logits.len(), fx.b);
+    for (i, l) in logits.iter().enumerate() {
+        assert_eq!((l.rows, l.cols), (fx.t, fx.v));
+        let want = &fx.logits[i * fx.t * fx.v..(i + 1) * fx.t * fx.v];
+        close(&l.data, want, 1e-4, 1e-4, &format!("pjrt vs jax, seq {i}"));
+    }
+    h.shutdown();
+}
+
+#[test]
+fn bucketed_forward_pads_correctly() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let fx = load_parity();
+    let h = runtime::start(&artifacts_dir()).expect("runtime");
+    // Short sequences must produce the same logits as their full-bucket run
+    // (causality + right-padding policy).
+    let short: Vec<Vec<u8>> = vec![fx.tokens[0][..10].to_vec()];
+    let got = runtime::forward_logits(&h, "tiny", &fx.params, &short).expect("fwd");
+    let want = &fx.logits[..10 * fx.v]; // first sequence, first 10 positions
+    close(&got[0].data, want, 1e-4, 1e-4, "padded short seq");
+    // Over-capacity requests fail cleanly.
+    let too_big: Vec<Vec<u8>> = (0..64).map(|_| vec![1u8; 8]).collect();
+    assert!(runtime::forward_logits(&h, "tiny", &fx.params, &too_big).is_err());
+    h.shutdown();
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let h = runtime::start(&artifacts_dir()).expect("runtime");
+    // Wrong arity.
+    assert!(h.run("fwd_tiny_b1_t48", vec![]).is_err());
+    // Wrong dtype.
+    let bad = vec![
+        HostTensor::I32(vec![0; 10], vec![10]),
+        HostTensor::I32(vec![0; 48], vec![1, 48]),
+    ];
+    assert!(h.run("fwd_tiny_b1_t48", bad).is_err());
+    // Unknown program.
+    assert!(h.run("nonexistent", vec![]).is_err());
+    h.shutdown();
+}
+
+#[test]
+fn train_step_reduces_loss_from_rust() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let h = runtime::start(&artifacts_dir()).expect("runtime");
+    let spec = h.manifest().find_kind("train_step", "tiny").expect("train bucket").clone();
+    let (b, t1) = (spec.batch.unwrap(), spec.seq.unwrap() + 1);
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let init = FlatParams::init(&cfg, 7);
+    let mut state = runtime::TrainState::new(init.data.clone());
+    let windows: Vec<Vec<u8>> = (0..b)
+        .map(|i| (0..t1).map(|j| ((i * 31 + j * 7) % 200 + 1) as u8).collect())
+        .collect();
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        losses.push(runtime::train_step(&h, "tiny", &mut state, &windows, 3e-3).expect("step"));
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(
+        losses[29] < losses[0] * 0.8,
+        "loss should fall: first {} last {}",
+        losses[0],
+        losses[29]
+    );
+    assert_eq!(state.step, 30);
+    assert_ne!(state.params, init.data);
+    h.shutdown();
+}
+
+#[test]
+fn lmgrad_is_zero_at_teacher_and_descends() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let h = runtime::start(&artifacts_dir()).expect("runtime");
+    let spec = h.manifest().find_kind("lmgrad", "tiny").expect("lmgrad").clone();
+    let (b, t) = (spec.batch.unwrap(), spec.seq.unwrap());
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let teacher = FlatParams::init(&cfg, 3);
+    let student = FlatParams::init(&cfg, 4);
+    let seqs: Vec<Vec<u8>> =
+        (0..b).map(|i| (0..t).map(|j| ((i * 13 + j * 3) % 250 + 1) as u8).collect()).collect();
+    // Teacher logits via the runtime forward (same bucket shape).
+    let tl = runtime::forward_logits(&h, "tiny", &teacher.data, &seqs).expect("teacher fwd");
+    let mut teacher_flat = Vec::with_capacity(b * t * cfg.vocab);
+    for l in &tl {
+        teacher_flat.extend_from_slice(&l.data);
+    }
+    // Zero at the teacher itself.
+    let (loss0, g0) =
+        runtime::lmgrad(&h, "tiny", &teacher.data, &seqs, &teacher_flat).expect("lmgrad");
+    assert!(loss0 < 1e-9, "loss at teacher = {loss0}");
+    assert!(g0.iter().all(|g| g.abs() < 1e-3));
+    // Descends from the student.
+    let (loss1, g1) =
+        runtime::lmgrad(&h, "tiny", &student.data, &seqs, &teacher_flat).expect("lmgrad");
+    assert!(loss1 > 0.0);
+    let stepped: Vec<f32> = student.data.iter().zip(&g1).map(|(p, g)| p - 0.05 * g).collect();
+    let (loss2, _) = runtime::lmgrad(&h, "tiny", &stepped, &seqs, &teacher_flat).expect("lmgrad");
+    assert!(loss2 < loss1, "{loss2} !< {loss1}");
+    h.shutdown();
+}
+
+#[test]
+fn pallas_delta_apply_matches_native() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let h = runtime::start(&artifacts_dir()).expect("runtime");
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let (d_out, d_in) = ProjKind::Up.shape(&cfg); // 128 x 64
+    let mut rng = pawd::util::rng::Rng::new(5);
+    let base: Vec<f32> = (0..d_out * d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let delta: Vec<f32> = (0..d_out * d_in).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let mask = PackedMask::pack(&delta, d_out, d_in);
+    for (axis_name, axis) in [("row", Axis::Row), ("col", Axis::Col)] {
+        let n = axis.n_scales(d_out, d_in);
+        let scales: Vec<f32> = (0..n).map(|_| rng.uniform_in(0.01, 0.3)).collect();
+        let module = DeltaModule {
+            id: ModuleId { layer: 0, kind: ProjKind::Up },
+            mask: mask.clone(),
+            axis,
+            scales: scales.clone(),
+        };
+        let mut native = vec![0f32; base.len()];
+        pawd::delta::apply::apply_module_into(&base, &mut native, &module);
+        let xla_out = runtime::api::delta_apply_xla(
+            &h, axis_name, &base, d_out, d_in, &mask.words, &scales,
+        )
+        .expect("xla apply");
+        close(&native, &xla_out, 1e-6, 1e-6, &format!("delta_apply {axis_name}"));
+    }
+    h.shutdown();
+}
+
+#[test]
+fn pallas_fused_matmul_matches_native_gemm() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let h = runtime::start(&artifacts_dir()).expect("runtime");
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let (d_out, d_in) = ProjKind::Q.shape(&cfg); // 64 x 64
+    let n = 64; // FUSED_N in aot.py
+    let mut rng = pawd::util::rng::Rng::new(6);
+    let base: Vec<f32> = (0..d_out * d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let delta: Vec<f32> = (0..d_out * d_in).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let mask = PackedMask::pack(&delta, d_out, d_in);
+    let x: Vec<f32> = (0..n * d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let scales: Vec<f32> = (0..d_out).map(|_| rng.uniform_in(0.01, 0.3)).collect();
+    let module = DeltaModule {
+        id: ModuleId { layer: 0, kind: ProjKind::Q },
+        mask: mask.clone(),
+        axis: Axis::Row,
+        scales: scales.clone(),
+    };
+    // Native: materialize then GEMM.
+    let mut w = vec![0f32; base.len()];
+    pawd::delta::apply::apply_module_into(&base, &mut w, &module);
+    let xt = Tensor2::from_vec(n, d_in, x.clone());
+    let wt = Tensor2::from_vec(d_out, d_in, w);
+    let want = xt.matmul_bt(&wt);
+    let got = runtime::api::fused_delta_matmul_xla(
+        &h, "row", &x, n, &base, d_out, d_in, &mask.words, &scales,
+    )
+    .expect("fused");
+    close(&want.data, &got, 1e-3, 1e-3, "fused matmul");
+    h.shutdown();
+}

@@ -1,0 +1,247 @@
+//! Serving-stack integration: compress variants to disk, start the
+//! coordinator, drive concurrent clients, check correctness of scoring,
+//! batching, caching and cold-start accounting.
+
+use pawd::coordinator::{Engine, Payload, RespBody, Server, ServerConfig, VariantStore};
+use pawd::data::tasks::{eval_items, TaskFamily};
+use pawd::data::World;
+use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
+use pawd::delta::format::save_delta;
+use pawd::eval::harness::predict;
+use pawd::model::config::ModelConfig;
+use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
+use pawd::model::{FlatParams, Transformer};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn setup_store(dir: &PathBuf, n_variants: usize) -> (Arc<FlatParams>, VariantStore) {
+    let _ = std::fs::remove_dir_all(dir);
+    std::fs::create_dir_all(dir).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 77));
+    let docs: Vec<Vec<u8>> = (0..3).map(|i| {
+        (0..40).map(|t| ((t * 5 + i * 11) % 200 + 20) as u8).collect()
+    }).collect();
+    let opts = CompressOptions { fit: FitMode::ClosedForm, ..Default::default() };
+    for k in 0..n_variants {
+        let ft = synth_finetune(
+            &base,
+            &SynthDeltaSpec { seed: 500 + k as u64, ..Default::default() },
+        );
+        let (delta, _, _) = compress_model(&format!("var{k}"), &base, &ft, &docs, &opts);
+        save_delta(dir.join(format!("var{k}.pawd")), &delta).unwrap();
+    }
+    let store = VariantStore::new(base.clone(), dir);
+    (base, store)
+}
+
+#[test]
+fn serves_score_requests_and_matches_direct_eval() {
+    let dir = std::env::temp_dir().join("pawd_itest_serve1");
+    let (base, store) = setup_store(&dir, 1);
+    let server = Server::start(store, Engine::Native, ServerConfig::default());
+    let client = server.client();
+
+    // Ground truth: materialize the variant directly and use the harness.
+    let loaded = VariantStore::new(base.clone(), &dir).load("var0").unwrap();
+    let tf = Transformer::new(base.cfg());
+    let world = World::generate(9, 24);
+    let items = eval_items(&world, TaskFamily::AttrEasy, 12, 3);
+    for item in &items {
+        let resp = client.score("var0", &item.prompt, &item.choices);
+        let direct = predict(&tf, &loaded.params, item);
+        match resp.result {
+            Ok(RespBody::Score { choice, ref scores }) => {
+                assert_eq!(choice, direct, "server and direct eval disagree");
+                assert_eq!(scores.len(), item.choices.len());
+            }
+            ref other => panic!("unexpected response {other:?}"),
+        }
+        assert!(resp.timing.total >= resp.timing.compute);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn batches_form_and_cold_start_is_recorded() {
+    let dir = std::env::temp_dir().join("pawd_itest_serve2");
+    let (_base, store) = setup_store(&dir, 2);
+    let server = Server::start(
+        store,
+        Engine::Native,
+        ServerConfig { max_batch: 4, max_wait: Duration::from_millis(20), ..Default::default() },
+    );
+    let client = server.client();
+    // Fire a burst of async requests at one variant so they batch.
+    let rxs: Vec<_> = (0..8)
+        .map(|i| {
+            client.submit(
+                "var0",
+                Payload::Score {
+                    prompt: format!("Q: item {i}? A: "),
+                    choices: vec!["yes".into(), "no".into()],
+                },
+            )
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.result.is_ok());
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.served, 8);
+    assert!(snap.mean_batch_size > 1.0, "expected batching, got {}", snap.mean_batch_size);
+    assert_eq!(snap.cold_starts, 1, "exactly one cold load for var0");
+    server.shutdown();
+}
+
+#[test]
+fn multi_variant_concurrent_clients() {
+    let dir = std::env::temp_dir().join("pawd_itest_serve3");
+    let (_base, store) = setup_store(&dir, 3);
+    let server = Server::start(store, Engine::Native, ServerConfig::default());
+    let n_ok = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for t in 0..6 {
+            let client = server.client();
+            let n_ok = &n_ok;
+            s.spawn(move || {
+                for i in 0..10 {
+                    let variant = format!("var{}", (t + i) % 3);
+                    let resp = client.score(
+                        &variant,
+                        "Q: what is the color of bela? A: ",
+                        &["red".to_string(), "blue".to_string()],
+                    );
+                    assert_eq!(resp.variant, variant);
+                    if resp.result.is_ok() {
+                        n_ok.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(n_ok.load(std::sync::atomic::Ordering::Relaxed), 60);
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.served, 60);
+    assert_eq!(snap.per_variant.len(), 3);
+    assert_eq!(snap.errors, 0);
+    server.shutdown();
+}
+
+#[test]
+fn unknown_variant_yields_error_response() {
+    let dir = std::env::temp_dir().join("pawd_itest_serve4");
+    let (_base, store) = setup_store(&dir, 1);
+    let server = Server::start(store, Engine::Native, ServerConfig::default());
+    let client = server.client();
+    let resp = client.score("ghost", "Q: ? A: ", &["a".to_string(), "b".to_string()]);
+    assert!(resp.result.is_err());
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.errors, 1);
+    server.shutdown();
+}
+
+#[test]
+fn perplexity_requests_work() {
+    let dir = std::env::temp_dir().join("pawd_itest_serve5");
+    let (_base, store) = setup_store(&dir, 1);
+    let server = Server::start(store, Engine::Native, ServerConfig::default());
+    let client = server.client();
+    let rx = client.submit("var0", Payload::Perplexity { text: "the mill by the river turns all day.".into() });
+    match rx.recv().unwrap().result {
+        Ok(RespBody::Perplexity { nats_per_token }) => {
+            assert!(nats_per_token > 0.0 && nats_per_token < 10.0);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn eviction_under_tight_budget_still_serves() {
+    let dir = std::env::temp_dir().join("pawd_itest_serve6");
+    let (base, store) = setup_store(&dir, 3);
+    let one_variant = (base.data.len() * 4) as u64;
+    let server = Server::start(
+        store,
+        Engine::Native,
+        ServerConfig { cache_budget_bytes: one_variant + 1024, ..Default::default() },
+    );
+    let client = server.client();
+    for round in 0..2 {
+        for k in 0..3 {
+            let resp = client.score(
+                &format!("var{k}"),
+                "Q: probe? A: ",
+                &["x".to_string(), "y".to_string()],
+            );
+            assert!(resp.result.is_ok(), "round {round} var{k}");
+        }
+    }
+    let stats = server.cache.stats();
+    assert!(stats.evictions >= 3, "tight budget must evict, got {}", stats.evictions);
+    assert!(server.cache.used_bytes() <= one_variant + 1024);
+    server.shutdown();
+}
+
+#[test]
+fn xla_engine_agrees_with_native_engine() {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let dir = std::env::temp_dir().join("pawd_itest_serve7");
+    let (_base, store) = setup_store(&dir, 1);
+    let (_b2, store2) = setup_store(&std::env::temp_dir().join("pawd_itest_serve7b"), 1);
+    let h = pawd::runtime::start(&artifacts).unwrap();
+    let native = Server::start(store, Engine::Native, ServerConfig::default());
+    let xla = Server::start(
+        store2,
+        Engine::Xla { handle: h.clone(), config: "tiny".into() },
+        ServerConfig { n_workers: 1, ..Default::default() },
+    );
+    // Short prompts only: the engines clamp to different context lengths
+    // (native: cfg.max_seq=64; XLA: largest fwd bucket=48), so items longer
+    // than the smaller bound legitimately see different contexts.
+    let items: Vec<pawd::data::McItem> = (0..8)
+        .map(|i| pawd::data::McItem {
+            family: TaskFamily::Physical,
+            prompt: format!("Q: probe {i}? A: "),
+            choices: vec!["twist the lid".into(), "shake the jar".into()],
+            correct: 0,
+        })
+        .collect();
+    let (nc, xc) = (native.client(), xla.client());
+    for item in &items {
+        let rn = nc.score("var0", &item.prompt, &item.choices);
+        let rx = xc.score("var0", &item.prompt, &item.choices);
+        match (rn.result, rx.result) {
+            (
+                Ok(RespBody::Score { choice: a, scores: sa }),
+                Ok(RespBody::Score { choice: b, scores: sb }),
+            ) => {
+                // Per-choice scores must agree numerically; the argmax may
+                // legitimately flip when two choices are within f32
+                // accumulation noise of each other.
+                for (x, y) in sa.iter().zip(&sb) {
+                    assert!(
+                        (x - y).abs() < 5e-3 * (1.0 + y.abs()),
+                        "score mismatch on {:?}: {x} vs {y}",
+                        item.prompt
+                    );
+                }
+                if a != b {
+                    let gap = (sa[a] - sa[b]).abs();
+                    assert!(gap < 5e-3, "argmax differs with non-tiny gap {gap}");
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    native.shutdown();
+    xla.shutdown();
+    h.shutdown();
+}

@@ -1,0 +1,220 @@
+//! Property-based invariants over the delta machinery, driven by the
+//! in-repo seeded shrinking harness (`util::prop`; `proptest` is not
+//! available offline — see DESIGN.md).
+
+use pawd::delta::calibrate::{
+    closed_form_col, closed_form_rowfam, col_stats, mse_col, mse_rowfam, residual, row_stats,
+};
+use pawd::delta::pack::PackedMask;
+use pawd::delta::types::{Axis, DeltaModule};
+use pawd::model::{ModuleId, ProjKind};
+use pawd::tensor::Tensor2;
+use pawd::util::prop::{assert_close, check, Gen};
+
+fn rand_tensor(g: &mut Gen, rows: usize, cols: usize) -> Tensor2 {
+    Tensor2::from_vec(rows, cols, g.vec_normal(rows * cols, 1.0))
+}
+
+#[test]
+fn prop_pack_roundtrip_preserves_signs() {
+    check("pack-roundtrip", 60, 70, |g| {
+        let d_out = g.dim();
+        let d_in = g.dim();
+        let delta = g.vec_nasty(d_out * d_in);
+        let m = PackedMask::pack(&delta, d_out, d_in);
+        let dense = m.unpack();
+        for (i, (&d, &s)) in delta.iter().zip(&dense).enumerate() {
+            let want = if d >= 0.0 || d.is_nan() { 1.0 } else { -1.0 };
+            if s != want {
+                return Err(format!("idx {i}: delta {d} sign {s}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_apply_then_revert_is_identity() {
+    check("apply-revert", 40, 50, |g| {
+        let d_out = g.dim();
+        let d_in = g.dim();
+        let base = g.vec_normal(d_out * d_in, 1.0);
+        let delta = g.vec_normal(d_out * d_in, 0.2);
+        let mask = PackedMask::pack(&delta, d_out, d_in);
+        let axis = *g.rng.choice(&[Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(3)]);
+        let scales = g.vec_normal(axis.n_scales(d_out, d_in), 0.1);
+        let m = DeltaModule {
+            id: ModuleId { layer: 0, kind: ProjKind::Q },
+            mask,
+            axis,
+            scales,
+        };
+        let mut w = base.clone();
+        pawd::delta::apply::apply_module_inplace(&mut w, &m, false);
+        pawd::delta::apply::apply_module_inplace(&mut w, &m, true);
+        assert_close(&w, &base, 1e-5, 1e-5)
+    });
+}
+
+#[test]
+fn prop_apply_optimized_matches_reference() {
+    check("apply-vs-reference", 40, 60, |g| {
+        let d_out = g.dim();
+        let d_in = g.dim();
+        let base = g.vec_normal(d_out * d_in, 1.0);
+        let delta = g.vec_nasty(d_out * d_in);
+        let mask = PackedMask::pack(&delta, d_out, d_in);
+        let axis = *g.rng.choice(&[Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(5)]);
+        let scales = g.vec_normal(axis.n_scales(d_out, d_in), 0.3);
+        let m = DeltaModule { id: ModuleId { layer: 0, kind: ProjKind::V }, mask, axis, scales };
+        let want = pawd::delta::apply::apply_module_reference(&base, &m);
+        let mut got = vec![0f32; base.len()];
+        pawd::delta::apply::apply_module_into(&base, &mut got, &m);
+        assert_close(&got, &want, 0.0, 0.0)
+    });
+}
+
+#[test]
+fn prop_closed_form_row_is_global_min() {
+    check("rowfit-global-min", 25, 24, |g| {
+        let d_out = g.dim_at_least(2);
+        let d_in = g.dim_at_least(2);
+        let n = 4 * (d_in + d_out);
+        let x = rand_tensor(g, n, d_in);
+        let y = rand_tensor(g, n, d_out);
+        let wb = rand_tensor(g, d_out, d_in);
+        let delta = g.vec_normal(d_out * d_in, 0.2);
+        let mask = PackedMask::pack(&delta, d_out, d_in);
+        let r = residual(&x, &y, &wb);
+        let st = row_stats(&x, &r, &mask);
+        let v = closed_form_rowfam(&st, Axis::Row);
+        let best = mse_rowfam(&st, Axis::Row, &v);
+        for _ in 0..5 {
+            let vp: Vec<f32> = v.iter().map(|&x| x + g.rng.normal_f32(0.0, 0.05)).collect();
+            let m = mse_rowfam(&st, Axis::Row, &vp);
+            if m < best - 1e-7 {
+                return Err(format!("perturbation improved: {m} < {best}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_col_closed_form_is_global_min() {
+    check("colfit-global-min", 15, 14, |g| {
+        let d_out = g.dim_at_least(2);
+        let d_in = g.dim_at_least(2);
+        let n = 4 * (d_in + d_out);
+        let x = rand_tensor(g, n, d_in);
+        let y = rand_tensor(g, n, d_out);
+        let wb = rand_tensor(g, d_out, d_in);
+        let delta = g.vec_normal(d_out * d_in, 0.2);
+        let mask = PackedMask::pack(&delta, d_out, d_in);
+        let r = residual(&x, &y, &wb);
+        let st = col_stats(&x, &r, &mask);
+        let v = closed_form_col(&st, 1e-8);
+        let best = mse_col(&st, &v);
+        for _ in 0..5 {
+            let vp: Vec<f32> = v.iter().map(|&x| x + g.rng.normal_f32(0.0, 0.05)).collect();
+            let m = mse_col(&st, &vp);
+            if m < best - 1e-6 {
+                return Err(format!("perturbation improved: {m} < {best}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scale_family_nesting() {
+    // Row ⊇ Group(g) ⊇ Scalar as function classes: optimal MSE must be
+    // monotone in that order for the SAME statistics.
+    check("scale-family-nesting", 25, 20, |g| {
+        let d_out = 2 * g.dim_at_least(2);
+        let d_in = g.dim_at_least(2);
+        let n = 3 * (d_in + d_out);
+        let x = rand_tensor(g, n, d_in);
+        let y = rand_tensor(g, n, d_out);
+        let wb = rand_tensor(g, d_out, d_in);
+        let delta = g.vec_normal(d_out * d_in, 0.2);
+        let mask = PackedMask::pack(&delta, d_out, d_in);
+        let r = residual(&x, &y, &wb);
+        let st = row_stats(&x, &r, &mask);
+        let m_row = mse_rowfam(&st, Axis::Row, &closed_form_rowfam(&st, Axis::Row));
+        let m_grp = mse_rowfam(&st, Axis::Group(2), &closed_form_rowfam(&st, Axis::Group(2)));
+        let m_sca = mse_rowfam(&st, Axis::Scalar, &closed_form_rowfam(&st, Axis::Scalar));
+        if m_row > m_grp + 1e-9 {
+            return Err(format!("row {m_row} > group {m_grp}"));
+        }
+        if m_grp > m_sca + 1e-9 {
+            return Err(format!("group {m_grp} > scalar {m_sca}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_format_roundtrip() {
+    check("pawd-format-roundtrip", 25, 40, |g| {
+        let n_modules = 1 + g.rng.below(3);
+        let mut modules = Vec::new();
+        for k in 0..n_modules {
+            let d_out = g.dim_at_least(1);
+            let d_in = g.dim_at_least(1);
+            let delta = g.vec_normal(d_out * d_in, 1.0);
+            let axis = *g.rng.choice(&[Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(4)]);
+            modules.push(DeltaModule {
+                id: ModuleId { layer: k, kind: ProjKind::ALL[g.rng.below(7)] },
+                mask: PackedMask::pack(&delta, d_out, d_in),
+                axis,
+                scales: g.vec_normal(axis.n_scales(d_out, d_in), 0.1),
+            });
+        }
+        let model = pawd::delta::types::DeltaModel {
+            variant: format!("v-{}", g.rng.below(1000)),
+            base_config: "tiny".into(),
+            modules,
+        };
+        let dir = std::env::temp_dir().join("pawd_prop_fmt");
+        std::fs::create_dir_all(&dir).ok();
+        let path = dir.join("prop.pawd");
+        pawd::delta::format::save_delta(&path, &model).map_err(|e| e.to_string())?;
+        let loaded = pawd::delta::format::load_delta(&path).map_err(|e| e.to_string())?;
+        if loaded.variant != model.variant || loaded.modules.len() != model.modules.len() {
+            return Err("header mismatch".into());
+        }
+        for (a, b) in loaded.modules.iter().zip(&model.modules) {
+            if a.mask != b.mask || a.axis != b.axis || a.id != b.id {
+                return Err(format!("module mismatch at {}", a.id));
+            }
+            assert_close(&a.scales, &b.scales, 1e-3, 1e-3)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fidelity_monotone_in_scale_error() {
+    // Corrupting the fitted scales can only hurt layer MSE (on average).
+    check("scale-corruption-hurts", 15, 16, |g| {
+        let d_out = g.dim_at_least(2);
+        let d_in = g.dim_at_least(2);
+        let n = 4 * (d_in + d_out);
+        let x = rand_tensor(g, n, d_in);
+        let y = rand_tensor(g, n, d_out);
+        let wb = rand_tensor(g, d_out, d_in);
+        let delta = g.vec_normal(d_out * d_in, 0.2);
+        let mask = PackedMask::pack(&delta, d_out, d_in);
+        let r = residual(&x, &y, &wb);
+        let st = row_stats(&x, &r, &mask);
+        let v = closed_form_rowfam(&st, Axis::Row);
+        let base = mse_rowfam(&st, Axis::Row, &v);
+        let corrupted: Vec<f32> = v.iter().map(|&x| x * 3.0 + 0.1).collect();
+        let worse = mse_rowfam(&st, Axis::Row, &corrupted);
+        if worse < base - 1e-9 {
+            return Err(format!("corruption improved mse: {worse} < {base}"));
+        }
+        Ok(())
+    });
+}

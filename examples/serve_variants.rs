@@ -43,7 +43,9 @@ fn main() -> anyhow::Result<()> {
         println!("  task{k}: {} on disk", pawd::util::benchkit::fmt_bytes(bytes));
     }
 
-    // --- start the coordinator with a budget that holds ~half the fleet ---
+    // --- start the coordinator with a budget that holds ~half the fleet
+    // if it were dense; in the default fused mode the same budget holds
+    // every variant as packed bytes ---
     let variant_bytes = (base.data.len() * 4) as u64;
     let store = VariantStore::new(base.clone(), &dir);
     let server = Server::start(
@@ -54,6 +56,7 @@ fn main() -> anyhow::Result<()> {
             max_wait: Duration::from_millis(2),
             n_workers: 2,
             cache_budget_bytes: variant_bytes * (n_variants as u64 / 2).max(1) + 1024,
+            exec: pawd::exec::ExecMode::Fused,
         },
     );
 
@@ -104,6 +107,15 @@ fn main() -> anyhow::Result<()> {
         println!("cold-start (ms)      : mean {:.2}  p50 {:.2}  max {:.2}  (n={})", s.mean, s.p50, s.max, s.n);
     }
     println!("resident variants    : {:?}", server.cache.resident());
+    let res = server.cache.residency();
+    println!(
+        "residency            : {} variants in {} packed ({} dense-equivalent, {:.1}x capacity)",
+        res.variants,
+        pawd::util::benchkit::fmt_bytes(res.resident_bytes),
+        pawd::util::benchkit::fmt_bytes(res.dense_equiv_bytes),
+        res.dense_equiv_bytes as f64 / res.resident_bytes.max(1) as f64
+    );
+    println!("hot swaps            : {}", snap.swaps);
     server.shutdown();
     println!("serve_variants OK");
     Ok(())

@@ -8,6 +8,7 @@ mod bench_common;
 
 use pawd::delta::pack::PackedMask;
 use pawd::delta::types::{Axis, DeltaModule};
+use pawd::exec::{DenseLinear, FusedDeltaLinear, LinearOp};
 use pawd::model::{ModuleId, ProjKind};
 use pawd::tensor::Tensor2;
 use pawd::util::benchkit::{fmt_bytes, Bench};
@@ -47,7 +48,35 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(&y);
     });
 
-    // Mode B: fused Pallas kernel through PJRT.
+    // Mode B: the exec-layer backends over the same operands — the one-flag
+    // dense-vs-fused A/B the serving coordinator runs. DenseLinear is the
+    // slice-view GEMM (no weight copy); FusedDeltaLinear executes straight
+    // from the packed bitplane, so there is no resident Ŵ at all.
+    let dense_op = DenseLinear::new(&wt.data, d_out, d_in);
+    b.run_items("exec_dense_linear (slice-view GEMM)", flops, || {
+        let y = dense_op.forward(&xt);
+        std::hint::black_box(&y);
+    });
+    let fused_op = FusedDeltaLinear::new(&base, &module);
+    b.run_items("exec_fused_delta_linear (packed, no Ŵ)", flops, || {
+        let y = fused_op.forward(&xt);
+        std::hint::black_box(&y);
+    });
+    // Sanity: the two backends agree to accumulation noise.
+    {
+        let a = dense_op.forward(&xt);
+        let f = fused_op.forward(&xt);
+        let max_rel = a
+            .data
+            .iter()
+            .zip(&f.data)
+            .map(|(x, y)| ((x - y).abs() / (1.0 + x.abs())) as f64)
+            .fold(0.0f64, f64::max);
+        println!("dense-vs-fused max rel err: {max_rel:.2e}");
+        assert!(max_rel < 1e-5, "fused backend diverged from dense");
+    }
+
+    // Mode C: fused Pallas kernel through PJRT.
     if bench_common::have_artifacts() {
         let h = pawd::runtime::start(&bench_common::artifacts_dir())?;
         let _ = pawd::runtime::api::fused_delta_matmul_xla(

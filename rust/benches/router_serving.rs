@@ -1,13 +1,20 @@
 //! **S1 — serving**: coordinator throughput/latency as the number of
-//! variants and the cache budget vary (the paper's multi-tenant
-//! motivation: many fine-tunes of one base, hot-swapped on demand).
+//! variants, the cache budget, and the exec mode vary (the paper's
+//! multi-tenant motivation: many fine-tunes of one base, hot-swapped on
+//! demand).
+//!
+//! The `exec` column is the dense-vs-fused A/B: `dense` materializes
+//! `Ŵ = W_b + v ⊙ B` per resident variant, `fused` keeps deltas packed and
+//! executes them in place — same budget, ~compression-ratio more resident
+//! variants, and hot swaps with no materialize pass.
 
 #[path = "bench_common/mod.rs"]
 mod bench_common;
 
 use pawd::coordinator::{Engine, Payload, Server, ServerConfig, VariantStore};
 use pawd::delta::format::save_delta;
-use pawd::util::benchkit::Table;
+use pawd::exec::ExecMode;
+use pawd::util::benchkit::{fmt_bytes, Table};
 use pawd::util::rng::Rng;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -19,7 +26,8 @@ fn main() -> anyhow::Result<()> {
     let n_requests: usize = if std::env::var("PAWD_BENCH_FAST").is_ok() { 120 } else { 320 };
 
     let mut t = Table::new(&[
-        "variants", "cache", "req/s", "p50 total", "p99 total", "mean batch", "cold starts", "evictions",
+        "variants", "cache", "exec", "req/s", "p50 total", "p99 total", "resident", "res bytes",
+        "cold starts", "evictions",
     ]);
     for &n_variants in &[2usize, 6, 12] {
         // Build fleet.
@@ -42,56 +50,73 @@ fn main() -> anyhow::Result<()> {
             save_delta(dir.join(format!("v{k}.pawd")), &delta)?;
         }
         let one = (base.data.len() * 4) as u64;
-        for (cache_label, budget) in
-            [("all", one * n_variants as u64 + 1024), ("half", one * (n_variants as u64 / 2).max(1) + 1024)]
-        {
-            let store = VariantStore::new(base.clone(), &dir);
-            let server = Server::start(
-                store,
-                Engine::Native,
-                ServerConfig {
-                    max_batch: 8,
-                    max_wait: Duration::from_millis(2),
-                    n_workers: 2,
-                    cache_budget_bytes: budget,
-                },
-            );
-            let t0 = Instant::now();
-            std::thread::scope(|s| {
-                for tid in 0..4u64 {
-                    let client = server.client();
-                    s.spawn(move || {
-                        let mut rng = Rng::new(tid);
-                        for i in 0..n_requests / 4 {
-                            let v = if rng.chance(0.5) { 0 } else { rng.below(n_variants) };
-                            let rx = client.submit(
-                                &format!("v{v}"),
-                                Payload::Score {
-                                    prompt: format!("Q: item {i}? A: "),
-                                    choices: vec!["yes".into(), "no".into()],
-                                },
-                            );
-                            let _ = rx.recv();
-                        }
-                    });
-                }
-            });
-            let wall = t0.elapsed().as_secs_f64();
-            let snap = server.metrics.snapshot();
-            let cache = server.cache.stats();
-            t.row(&[
-                n_variants.to_string(),
-                cache_label.into(),
-                format!("{:.0}", snap.served as f64 / wall),
-                format!("{}µs", snap.total_p50_us),
-                format!("{}µs", snap.total_p99_us),
-                format!("{:.2}", snap.mean_batch_size),
-                snap.cold_starts.to_string(),
-                cache.evictions.to_string(),
-            ]);
-            server.shutdown();
+        for (cache_label, budget) in [
+            ("all", one * n_variants as u64 + 1024),
+            ("half", one * (n_variants as u64 / 2).max(1) + 1024),
+            // The headline row: a budget that fits ONE dense variant. Dense
+            // mode thrashes; fused mode holds the entire fleet resident.
+            ("one", one + 1024),
+        ] {
+            for exec in [ExecMode::Dense, ExecMode::Fused] {
+                let store = VariantStore::new(base.clone(), &dir);
+                let server = Server::start(
+                    store,
+                    Engine::Native,
+                    ServerConfig {
+                        max_batch: 8,
+                        max_wait: Duration::from_millis(2),
+                        n_workers: 2,
+                        cache_budget_bytes: budget,
+                        exec,
+                    },
+                );
+                let t0 = Instant::now();
+                std::thread::scope(|s| {
+                    for tid in 0..4u64 {
+                        let client = server.client();
+                        s.spawn(move || {
+                            let mut rng = Rng::new(tid);
+                            for i in 0..n_requests / 4 {
+                                let v =
+                                    if rng.chance(0.5) { 0 } else { rng.below(n_variants) };
+                                let rx = client.submit(
+                                    &format!("v{v}"),
+                                    Payload::Score {
+                                        prompt: format!("Q: item {i}? A: "),
+                                        choices: vec!["yes".into(), "no".into()],
+                                    },
+                                );
+                                let _ = rx.recv();
+                            }
+                        });
+                    }
+                });
+                let wall = t0.elapsed().as_secs_f64();
+                let snap = server.metrics.snapshot();
+                let cache = server.cache.stats();
+                let res = server.cache.residency();
+                t.row(&[
+                    n_variants.to_string(),
+                    cache_label.into(),
+                    exec.label().into(),
+                    format!("{:.0}", snap.served as f64 / wall),
+                    format!("{}µs", snap.total_p50_us),
+                    format!("{}µs", snap.total_p99_us),
+                    res.variants.to_string(),
+                    fmt_bytes(res.resident_bytes),
+                    snap.cold_starts.to_string(),
+                    cache.evictions.to_string(),
+                ]);
+                server.shutdown();
+            }
         }
     }
-    t.print("Serving: throughput/latency vs fleet size and cache budget (native engine, tiny)");
+    t.print(
+        "Serving: throughput/latency vs fleet size, cache budget and exec mode (native engine, tiny)",
+    );
+    println!(
+        "\n(`one` budget = a single dense variant: fused mode keeps every fleet size fully \
+         resident because packed variants cost ~1/30 of dense bytes)"
+    );
     Ok(())
 }

@@ -1,11 +1,19 @@
-//! LRU cache of materialized variants under a byte budget.
+//! LRU cache of resident variants under a byte budget.
 //!
 //! Serving many fine-tuned variants of one base means most variants are
 //! cold most of the time; the cache keeps the hot set resident and charges
 //! cold loads to the hot-swap loader (whose latency the paper's §3.2
 //! load-time experiment measures).
+//!
+//! Residency accounting follows the store's [`ExecMode`]: a dense entry
+//! charges the full materialized parameter bytes, a packed entry charges
+//! only its mask + scale bytes (the shared base is owned by the store and
+//! charged to nobody). Under a fixed budget this multiplies the number of
+//! resident variants by the compression ratio, and a hot swap is an `Arc`
+//! clone — no materialize/revert pass ever runs on the request path.
 
 use super::store::{LoadedVariant, VariantStore};
+use crate::exec::VariantWeights;
 use crate::model::FlatParams;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -17,25 +25,44 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
-    /// Cold-start (materialization) times observed on misses.
+    /// Cold-start (load/validate, or materialization in dense mode) times
+    /// observed on misses.
     pub cold_start: Vec<Duration>,
 }
 
+/// Point-in-time residency gauges (the satellite metrics surfaced through
+/// `Metrics::snapshot` and the server's stats responses).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Residency {
+    /// Number of variants currently resident.
+    pub variants: usize,
+    /// Bytes actually charged against the budget (packed bytes for fused
+    /// entries, dense bytes otherwise).
+    pub resident_bytes: u64,
+    /// What the same resident set would cost fully materialized.
+    pub dense_equiv_bytes: u64,
+}
+
 struct Entry {
-    params: Arc<FlatParams>,
+    weights: VariantWeights,
     bytes: u64,
+    dense_equiv: u64,
     /// Monotone counter for LRU ordering.
     last_used: u64,
 }
 
 struct Inner {
     entries: HashMap<String, Entry>,
-    /// Variants currently being materialized by some thread (single-flight
-    /// guard: concurrent requests for the same cold variant wait instead of
+    /// Variants currently being loaded by some thread (single-flight guard:
+    /// concurrent requests for the same cold variant wait instead of
     /// duplicating the load).
     loading: std::collections::HashSet<String>,
     clock: u64,
     used_bytes: u64,
+    /// Running dense-equivalent total for the resident set, maintained
+    /// incrementally alongside `used_bytes` so `residency()` is O(1) (it
+    /// runs on the worker hot path).
+    dense_equiv_bytes: u64,
     stats: CacheStats,
 }
 
@@ -57,6 +84,7 @@ impl VariantCache {
                 loading: std::collections::HashSet::new(),
                 clock: 0,
                 used_bytes: 0,
+                dense_equiv_bytes: 0,
                 stats: CacheStats::default(),
             }),
             loaded_cv: std::sync::Condvar::new(),
@@ -67,13 +95,9 @@ impl VariantCache {
         self.store.base.clone()
     }
 
-    fn variant_bytes(params: &FlatParams) -> u64 {
-        (params.data.len() * 4) as u64
-    }
-
-    /// Fetch a variant, materializing on miss. Returns the params and the
+    /// Fetch a variant, loading on miss. Returns the weights and the
     /// cold-start duration if this call performed the load.
-    pub fn get(&self, name: &str) -> Result<(Arc<FlatParams>, Option<Duration>)> {
+    pub fn get(&self, name: &str) -> Result<(VariantWeights, Option<Duration>)> {
         // Fast path under the lock; on a cold miss, claim the single-flight
         // slot (or wait for whoever holds it).
         {
@@ -83,13 +107,13 @@ impl VariantCache {
                 let clock = inner.clock;
                 let hit = if let Some(e) = inner.entries.get_mut(name) {
                     e.last_used = clock;
-                    Some(e.params.clone())
+                    Some(e.weights.clone())
                 } else {
                     None
                 };
-                if let Some(params) = hit {
+                if let Some(weights) = hit {
                     inner.stats.hits += 1;
-                    return Ok((params, None));
+                    return Ok((weights, None));
                 }
                 if inner.loading.insert(name.to_string()) {
                     inner.stats.misses += 1;
@@ -112,7 +136,8 @@ impl VariantCache {
                 return Err(e);
             }
         };
-        let bytes = Self::variant_bytes(&loaded.params);
+        let bytes = loaded.weights.resident_bytes();
+        let dense_equiv = loaded.weights.dense_equiv_bytes();
         let mut inner = self.inner.lock().unwrap();
         inner.clock += 1;
         let clock = inner.clock;
@@ -127,18 +152,20 @@ impl VariantCache {
                 .unwrap();
             if let Some(e) = inner.entries.remove(&lru) {
                 inner.used_bytes -= e.bytes;
+                inner.dense_equiv_bytes -= e.dense_equiv;
                 inner.stats.evictions += 1;
             }
         }
         inner.used_bytes += bytes;
+        inner.dense_equiv_bytes += dense_equiv;
         inner.entries.insert(
             name.to_string(),
-            Entry { params: loaded.params.clone(), bytes, last_used: clock },
+            Entry { weights: loaded.weights.clone(), bytes, dense_equiv, last_used: clock },
         );
         inner.loading.remove(name);
         drop(inner);
         self.loaded_cv.notify_all();
-        Ok((loaded.params, Some(loaded.load_time)))
+        Ok((loaded.weights, Some(loaded.load_time)))
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -155,6 +182,16 @@ impl VariantCache {
     pub fn used_bytes(&self) -> u64 {
         self.inner.lock().unwrap().used_bytes
     }
+
+    /// Current residency gauges (O(1): totals are maintained incrementally).
+    pub fn residency(&self) -> Residency {
+        let inner = self.inner.lock().unwrap();
+        Residency {
+            variants: inner.entries.len(),
+            resident_bytes: inner.used_bytes,
+            dense_equiv_bytes: inner.dense_equiv_bytes,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -162,6 +199,7 @@ mod tests {
     use super::*;
     use crate::delta::compress::{compress_model, CompressOptions, FitMode};
     use crate::delta::format::save_delta;
+    use crate::exec::{ExecMode, Weights};
     use crate::model::config::ModelConfig;
     use crate::model::synth::{synth_finetune, SynthDeltaSpec};
     use std::path::Path;
@@ -200,7 +238,7 @@ mod tests {
     #[test]
     fn budget_evicts_lru() {
         let dir = std::env::temp_dir().join("pawd_test_cache2");
-        let store = setup(&dir, 3);
+        let store = setup(&dir, 3); // dense mode: entries cost full params
         let one = (ModelConfig::preset("tiny").unwrap().n_params() * 4) as u64;
         let cache = VariantCache::new(store, one * 2 + 1024); // fits 2 variants
         cache.get("v0").unwrap();
@@ -216,6 +254,32 @@ mod tests {
     }
 
     #[test]
+    fn packed_mode_multiplies_residency_under_same_budget() {
+        let dir = std::env::temp_dir().join("pawd_test_cache4");
+        let store = setup(&dir, 4).with_mode(ExecMode::Fused);
+        // A budget that fits exactly ONE dense variant holds the whole
+        // packed fleet with room to spare.
+        let one_dense = (ModelConfig::preset("tiny").unwrap().n_params() * 4) as u64;
+        let cache = VariantCache::new(store, one_dense);
+        for k in 0..4 {
+            let (w, _) = cache.get(&format!("v{k}")).unwrap();
+            assert!(w.is_packed());
+        }
+        assert_eq!(cache.resident().len(), 4);
+        assert_eq!(cache.stats().evictions, 0);
+        let r = cache.residency();
+        assert_eq!(r.variants, 4);
+        assert!(r.resident_bytes <= one_dense);
+        // Dense-equivalent accounting shows the capacity multiplier.
+        assert_eq!(r.dense_equiv_bytes, one_dense * 4);
+        assert!(
+            r.dense_equiv_bytes / r.resident_bytes.max(1) >= 8,
+            "expected ≥8x residency multiplier, got {}x",
+            r.dense_equiv_bytes / r.resident_bytes.max(1)
+        );
+    }
+
+    #[test]
     fn concurrent_gets_are_consistent() {
         let dir = std::env::temp_dir().join("pawd_test_cache3");
         let store = setup(&dir, 2);
@@ -226,8 +290,8 @@ mod tests {
                 s.spawn(move || {
                     for i in 0..20 {
                         let name = if (t + i) % 2 == 0 { "v0" } else { "v1" };
-                        let (p, _) = c.get(name).unwrap();
-                        assert!(!p.data.is_empty());
+                        let (w, _) = c.get(name).unwrap();
+                        assert!(!w.flat().data.is_empty());
                     }
                 });
             }

@@ -1,8 +1,9 @@
 //! Serving metrics: latency histograms per stage, throughput counters,
-//! cold-start accounting. Shared across dispatcher/workers via a mutex
-//! (recording is a few hundred ns; the engine dominates by orders of
-//! magnitude).
+//! cold-start accounting, and variant-cache residency gauges. Shared across
+//! dispatcher/workers via a mutex (recording is a few hundred ns; the
+//! engine dominates by orders of magnitude).
 
+use super::cache::Residency;
 use crate::util::stats::LatencyHistogram;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -18,6 +19,8 @@ struct Inner {
     errors: u64,
     batches: u64,
     batch_size_sum: u64,
+    swaps: u64,
+    residency: Residency,
     per_variant: BTreeMap<String, u64>,
     started: Option<Instant>,
 }
@@ -43,6 +46,17 @@ pub struct MetricsSnapshot {
     pub total_p99_us: u64,
     pub cold_starts: u64,
     pub cold_p50_us: u64,
+    /// Worker-observed variant switches (a swap is a worker changing which
+    /// variant it executes — with packed residency this is a pointer flip).
+    pub swaps: u64,
+    /// Variants resident in the cache (last observed).
+    pub resident_variants: usize,
+    /// Bytes charged against the cache budget (packed bytes in fused mode).
+    pub resident_bytes: u64,
+    /// What the resident set would cost fully materialized; the ratio
+    /// `dense_equiv / resident` is the capacity multiplier of the packed
+    /// cache.
+    pub resident_dense_equiv_bytes: u64,
     pub per_variant: BTreeMap<String, u64>,
 }
 
@@ -82,6 +96,16 @@ impl Metrics {
         self.inner.lock().unwrap().cold_start.record(d);
     }
 
+    /// A worker switched from one variant to another.
+    pub fn record_swap(&self) {
+        self.inner.lock().unwrap().swaps += 1;
+    }
+
+    /// Update the residency gauges (workers call this after cache access).
+    pub fn set_residency(&self, r: Residency) {
+        self.inner.lock().unwrap().residency = r;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let i = self.inner.lock().unwrap();
         let elapsed = i.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
@@ -103,6 +127,10 @@ impl Metrics {
             total_p99_us: i.total.quantile_us(0.99),
             cold_starts: i.cold_start.count(),
             cold_p50_us: i.cold_start.quantile_us(0.5),
+            swaps: i.swaps,
+            resident_variants: i.residency.variants,
+            resident_bytes: i.residency.resident_bytes,
+            resident_dense_equiv_bytes: i.residency.dense_equiv_bytes,
             per_variant: i.per_variant.clone(),
         }
     }
@@ -127,5 +155,22 @@ mod tests {
         assert_eq!(s.cold_starts, 1);
         assert_eq!(s.per_variant["a"], 1);
         assert!(s.total_p99_us >= s.total_p50_us);
+    }
+
+    #[test]
+    fn residency_and_swap_gauges() {
+        let m = Metrics::new();
+        m.record_swap();
+        m.record_swap();
+        m.set_residency(Residency {
+            variants: 5,
+            resident_bytes: 1000,
+            dense_equiv_bytes: 16000,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.swaps, 2);
+        assert_eq!(s.resident_variants, 5);
+        assert_eq!(s.resident_bytes, 1000);
+        assert_eq!(s.resident_dense_equiv_bytes, 16000);
     }
 }

@@ -3,12 +3,17 @@
 //! hot-swapped on cold start.
 //!
 //! * [`request`] — request/response types with per-stage timing.
-//! * [`store`] — on-disk variant registry + the single-read/single-apply
-//!   hot-swap loader (delta path) and FP16 full-checkpoint baseline.
-//! * [`cache`] — LRU cache of materialized variants under a byte budget.
+//! * [`store`] — on-disk variant registry + the single-read hot-swap loader
+//!   (packed in fused mode, materialized in dense mode) and the FP16
+//!   full-checkpoint baseline.
+//! * [`cache`] — LRU cache of resident variants under a byte budget,
+//!   charged in packed bytes when the store runs
+//!   [`ExecMode::Fused`](crate::exec::ExecMode).
 //! * [`server`] — dispatcher (per-variant queues, size/deadline batching)
-//!   and worker engines (native transformer or the PJRT runtime).
-//! * [`metrics`] — latency histograms, throughput, cold-start accounting.
+//!   and worker engines (native transformer over dense *or* packed weights,
+//!   or the PJRT runtime).
+//! * [`metrics`] — latency histograms, throughput, cold-start accounting,
+//!   residency gauges.
 
 pub mod cache;
 pub mod metrics;
@@ -16,7 +21,8 @@ pub mod request;
 pub mod server;
 pub mod store;
 
-pub use cache::VariantCache;
-pub use request::{Payload, RespBody, Response};
+pub use cache::{Residency, VariantCache};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{Payload, RespBody, Response, STATS_VARIANT};
 pub use server::{Client, Engine, Server, ServerConfig};
 pub use store::VariantStore;

@@ -1,7 +1,12 @@
 //! Request/response types for the multi-variant serving coordinator.
 
+use super::metrics::MetricsSnapshot;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
+
+/// Pseudo-variant name that routes a request to the stats endpoint instead
+/// of a model (see `Client::stats`).
+pub const STATS_VARIANT: &str = "__stats__";
 
 /// What a client asks of a variant.
 #[derive(Clone, Debug)]
@@ -11,12 +16,16 @@ pub enum Payload {
     Score { prompt: String, choices: Vec<String> },
     /// Per-token cross entropy of `text` (perplexity probes, health checks).
     Perplexity { text: String },
+    /// Server metrics + cache residency gauges (submit to
+    /// [`STATS_VARIANT`]; answered by a worker without touching an engine).
+    Stats,
 }
 
 #[derive(Clone, Debug)]
 pub enum RespBody {
     Score { choice: usize, scores: Vec<f64> },
     Perplexity { nats_per_token: f64 },
+    Stats { snapshot: MetricsSnapshot },
 }
 
 /// Timing breakdown a response carries back (drives the latency

@@ -13,10 +13,11 @@
 
 use super::cache::VariantCache;
 use super::metrics::Metrics;
-use super::request::{Payload, Request, RespBody, Response, Timing};
+use super::request::{Payload, Request, RespBody, Response, Timing, STATS_VARIANT};
 use super::store::VariantStore;
 use crate::data::corpus::encode;
-use crate::model::{FlatParams, Transformer};
+use crate::exec::{ExecMode, VariantWeights};
+use crate::model::Transformer;
 use crate::runtime::RuntimeHandle;
 use crate::tensor::ops::log_softmax_into;
 use crate::util::par;
@@ -43,6 +44,9 @@ pub struct ServerConfig {
     pub max_wait: Duration,
     pub n_workers: usize,
     pub cache_budget_bytes: u64,
+    /// Dense-vs-fused A/B switch: how delta variants are resident and
+    /// executed. The XLA engine forces `Dense` (it consumes flat buffers).
+    pub exec: ExecMode,
 }
 
 impl Default for ServerConfig {
@@ -52,6 +56,7 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(4),
             n_workers: 2,
             cache_budget_bytes: 1 << 30,
+            exec: ExecMode::Fused,
         }
     }
 }
@@ -107,11 +112,32 @@ impl Client {
             timing: Timing::default(),
         })
     }
+
+    /// Blocking convenience: fetch server metrics + residency gauges
+    /// through the request path (useful for remote/ops probes; in-process
+    /// callers can also read `Server::metrics` directly).
+    pub fn stats(&self) -> Result<super::metrics::MetricsSnapshot, String> {
+        let rx = self.submit(STATS_VARIANT, Payload::Stats);
+        match rx.recv() {
+            Ok(resp) => match resp.result {
+                Ok(RespBody::Stats { snapshot }) => Ok(snapshot),
+                Ok(other) => Err(format!("unexpected stats response {other:?}")),
+                Err(e) => Err(e),
+            },
+            Err(_) => Err("server terminated".into()),
+        }
+    }
 }
 
 impl Server {
-    pub fn start(store: VariantStore, engine: Engine, cfg: ServerConfig) -> Server {
+    pub fn start(mut store: VariantStore, engine: Engine, cfg: ServerConfig) -> Server {
         let metrics = Arc::new(Metrics::new());
+        // The XLA engine executes flat parameter buffers, so it cannot run
+        // packed variants; force dense residency there.
+        store.set_mode(match &engine {
+            Engine::Native => cfg.exec,
+            Engine::Xla { .. } => ExecMode::Dense,
+        });
         let cache = Arc::new(VariantCache::new(store, cfg.cache_budget_bytes));
         let (ingress_tx, ingress_rx) = mpsc::channel::<Ingress>();
         let (work_tx, work_rx) = mpsc::channel::<Batch>();
@@ -195,7 +221,11 @@ fn dispatcher_loop(
             while q.len() >= cfg.max_batch || (due && !q.is_empty()) || (!open && !q.is_empty()) {
                 let take = q.len().min(cfg.max_batch);
                 let requests: Vec<Request> = q.drain(..take).collect();
-                metrics.record_batch(requests.len());
+                if variant != STATS_VARIANT {
+                    // Stats probes skip the engine; keep them out of the
+                    // batching statistics.
+                    metrics.record_batch(requests.len());
+                }
                 if work.send(Batch { variant: variant.clone(), requests }).is_err() {
                     return; // workers gone
                 }
@@ -216,6 +246,9 @@ fn worker_loop(
 ) {
     // One Transformer per worker (RoPE tables etc.) for the native engine.
     let tf = Transformer::new(cache.base().cfg());
+    // Which variant this worker last executed — a change is a hot swap
+    // (with packed residency: an Arc clone, no materialize/revert pass).
+    let mut last_variant: Option<String> = None;
     loop {
         let batch = {
             let rx = work.lock().unwrap();
@@ -225,7 +258,32 @@ fn worker_loop(
             }
         };
         let batch_start = Instant::now();
-        let (params, cold) = match cache.get(&batch.variant) {
+        if batch.variant == STATS_VARIANT {
+            metrics.set_residency(cache.residency());
+            let snapshot = metrics.snapshot();
+            for req in batch.requests {
+                let timing = Timing {
+                    queue: batch_start.duration_since(req.submitted),
+                    total: req.submitted.elapsed(),
+                    ..Default::default()
+                };
+                // Only Payload::Stats is valid here: the name is reserved,
+                // so a Score/Perplexity sent to it is a caller bug — reject
+                // it instead of answering with a surprise body.
+                let result = match req.payload {
+                    Payload::Stats => Ok(RespBody::Stats { snapshot: snapshot.clone() }),
+                    _ => Err(format!("variant name '{STATS_VARIANT}' is reserved for stats probes")),
+                };
+                let _ = req.resp.send(Response {
+                    id: req.id,
+                    variant: req.variant.clone(),
+                    result,
+                    timing,
+                });
+            }
+            continue;
+        }
+        let (weights, cold) = match cache.get(&batch.variant) {
             Ok(x) => x,
             Err(e) => {
                 let msg = format!("variant load failed: {e}");
@@ -249,8 +307,15 @@ fn worker_loop(
         if let Some(c) = cold {
             metrics.record_cold_start(c);
         }
+        if last_variant.as_deref() != Some(batch.variant.as_str()) {
+            if last_variant.is_some() {
+                metrics.record_swap();
+            }
+            last_variant = Some(batch.variant.clone());
+        }
+        metrics.set_residency(cache.residency());
         let compute_start = Instant::now();
-        let results = score_batch(&engine, &tf, &params, &batch.requests);
+        let results = score_batch(&engine, &tf, &weights, &batch.requests);
         let compute = compute_start.elapsed();
         for (req, result) in batch.requests.into_iter().zip(results) {
             let queue = batch_start.duration_since(req.submitted);
@@ -267,11 +332,12 @@ fn worker_loop(
     }
 }
 
-/// Score every request in a batch against the materialized params.
+/// Score every request in a batch against the variant's weights (packed or
+/// dense — the native engine is generic over the source).
 fn score_batch(
     engine: &Engine,
     tf: &Transformer,
-    params: &Arc<FlatParams>,
+    weights: &VariantWeights,
     requests: &[Request],
 ) -> Vec<Result<RespBody, String>> {
     match engine {
@@ -279,15 +345,18 @@ fn score_batch(
             let out: Vec<Mutex<Option<Result<RespBody, String>>>> =
                 (0..requests.len()).map(|_| Mutex::new(None)).collect();
             par::parallel_items(requests.len(), 8, |i| {
-                let r = score_one_native(tf, params, &requests[i].payload);
+                let r = score_one_native(tf, weights, &requests[i].payload);
                 *out[i].lock().unwrap() = Some(r);
             });
             out.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
         }
         Engine::Xla { handle, config } => {
+            // The store runs Dense mode under this engine, so this is an Arc
+            // clone, not a materialization.
+            let params = weights.materialized();
             requests
                 .iter()
-                .map(|r| score_one_xla(handle, config, params, &r.payload))
+                .map(|r| score_one_xla(handle, config, &params, &r.payload))
                 .collect()
         }
     }
@@ -295,7 +364,7 @@ fn score_batch(
 
 fn score_one_native(
     tf: &Transformer,
-    params: &FlatParams,
+    weights: &VariantWeights,
     payload: &Payload,
 ) -> Result<RespBody, String> {
     match payload {
@@ -307,7 +376,7 @@ fn score_one_native(
                 // tokens (robust under prompt clamping).
                 let choice_len = encode(choice).len().min(full.len() - 1).max(1);
                 let start = full.len() - choice_len;
-                let s = tf.score_span(params, &full, start..full.len());
+                let s = tf.score_span(weights, &full, start..full.len());
                 scores.push(s / choice_len as f64);
             }
             let choice = argmax_f64(&scores);
@@ -318,15 +387,16 @@ fn score_one_native(
             if tokens.len() < 2 {
                 return Err("text too short".into());
             }
-            Ok(RespBody::Perplexity { nats_per_token: tf.cross_entropy(params, &tokens) })
+            Ok(RespBody::Perplexity { nats_per_token: tf.cross_entropy(weights, &tokens) })
         }
+        Payload::Stats => Err("stats requests must target the stats variant".into()),
     }
 }
 
 fn score_one_xla(
     handle: &RuntimeHandle,
     config: &str,
-    params: &FlatParams,
+    params: &crate::model::FlatParams,
     payload: &Payload,
 ) -> Result<RespBody, String> {
     match payload {
@@ -381,6 +451,7 @@ fn score_one_xla(
             }
             Ok(RespBody::Perplexity { nats_per_token: -total / (tokens.len() - 1) as f64 })
         }
+        Payload::Stats => Err("stats requests must target the stats variant".into()),
     }
 }
 

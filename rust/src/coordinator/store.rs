@@ -1,13 +1,22 @@
 //! Variant store: the on-disk registry of compressed deltas (and FP16 full
-//! checkpoints for the baseline path) plus the hot-swap materializer.
+//! checkpoints for the baseline path) plus the hot-swap loader.
 //!
-//! This is the paper's loader: a variant is materialized by **one
-//! sequential read** of its PAWD artifact and **one fused apply per
-//! module** onto a clone of the resident base — versus the baseline that
-//! reads a full FP16 checkpoint and decodes every weight.
+//! This is the paper's loader: a variant is loaded by **one sequential
+//! read** of its PAWD artifact. What happens next depends on the store's
+//! [`ExecMode`]:
+//!
+//! * [`ExecMode::Fused`] (default for native serving) — the packed delta is
+//!   validated against the resident base and kept packed; the returned
+//!   [`VariantWeights::Packed`] executes in place through
+//!   [`FusedDeltaLinear`](crate::exec::FusedDeltaLinear). No dense `Ŵ` is
+//!   ever built, so "materialization" cost is just parse + validate.
+//! * [`ExecMode::Dense`] — the classic path: clone the resident base and run
+//!   one fused apply per module (required by the XLA engine, and the
+//!   baseline side of the dense-vs-fused A/B).
 
 use crate::delta::apply::apply_deltas_inplace;
 use crate::delta::format::load_delta;
+use crate::exec::{ExecMode, PackedVariant, VariantWeights};
 use crate::model::checkpoint::load_fp16;
 use crate::model::FlatParams;
 use anyhow::{bail, Context, Result};
@@ -28,20 +37,45 @@ pub enum VariantSource {
 pub struct VariantStore {
     pub base: Arc<FlatParams>,
     dir: PathBuf,
+    mode: ExecMode,
 }
 
-/// A materialized variant plus its load-time accounting.
+/// A loaded variant plus its load-time accounting.
 pub struct LoadedVariant {
-    pub params: Arc<FlatParams>,
+    pub weights: VariantWeights,
     pub source: VariantSource,
     pub load_time: Duration,
     /// Bytes read from disk for this load.
     pub bytes_read: u64,
 }
 
+impl LoadedVariant {
+    /// Dense parameters, materializing a packed variant on demand (XLA
+    /// engine and ground-truth comparisons; the serving hot path never
+    /// calls this in fused mode).
+    pub fn params(&self) -> Arc<FlatParams> {
+        self.weights.materialized()
+    }
+}
+
 impl VariantStore {
+    /// A store that materializes deltas on load (the original behavior).
     pub fn new(base: Arc<FlatParams>, dir: &Path) -> VariantStore {
-        VariantStore { base, dir: dir.to_path_buf() }
+        VariantStore { base, dir: dir.to_path_buf(), mode: ExecMode::Dense }
+    }
+
+    /// Builder: choose how delta variants execute.
+    pub fn with_mode(mut self, mode: ExecMode) -> VariantStore {
+        self.mode = mode;
+        self
+    }
+
+    pub fn set_mode(&mut self, mode: ExecMode) {
+        self.mode = mode;
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
     }
 
     pub fn dir(&self) -> &Path {
@@ -62,11 +96,11 @@ impl VariantStore {
         bail!("variant '{name}' not found in {}", self.dir.display());
     }
 
-    /// Materialize a variant (the cold-start path under measurement).
+    /// Load a variant (the cold-start path under measurement).
     pub fn load(&self, name: &str) -> Result<LoadedVariant> {
         let source = self.locate(name)?;
         let t0 = Instant::now();
-        let (params, bytes_read) = match &source {
+        let (weights, bytes_read) = match &source {
             VariantSource::Delta(path) => {
                 let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
                 let delta = load_delta(path)
@@ -78,10 +112,24 @@ impl VariantStore {
                         self.base.cfg().name
                     );
                 }
-                // Clone the resident base, then one fused apply per module.
-                let mut p = (*self.base).clone();
-                apply_deltas_inplace(&mut p, &delta.modules);
-                (p, bytes)
+                let weights = match self.mode {
+                    ExecMode::Fused => {
+                        // Keep the delta packed: validate shapes, index
+                        // modules, share the base. No dense reconstruction.
+                        VariantWeights::Packed(PackedVariant::new(
+                            self.base.clone(),
+                            Arc::new(delta),
+                        )?)
+                    }
+                    ExecMode::Dense => {
+                        // Clone the resident base, then one fused apply per
+                        // module.
+                        let mut p = (*self.base).clone();
+                        apply_deltas_inplace(&mut p, &delta.modules);
+                        VariantWeights::Dense(Arc::new(p))
+                    }
+                };
+                (weights, bytes)
             }
             VariantSource::Fp16(path) => {
                 let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
@@ -89,15 +137,10 @@ impl VariantStore {
                 if p.cfg() != self.base.cfg() {
                     bail!("fp16 checkpoint '{name}' config mismatch");
                 }
-                (p, bytes)
+                (VariantWeights::Dense(Arc::new(p)), bytes)
             }
         };
-        Ok(LoadedVariant {
-            params: Arc::new(params),
-            source,
-            load_time: t0.elapsed(),
-            bytes_read,
-        })
+        Ok(LoadedVariant { weights, source, load_time: t0.elapsed(), bytes_read })
     }
 
     /// List variant names available on disk (deduped across formats).
@@ -150,12 +193,12 @@ mod tests {
         let va = store.load("va").unwrap();
         assert!(matches!(va.source, VariantSource::Delta(_)));
         assert!(va.bytes_read > 0);
-        assert_ne!(va.params.data, base.data);
+        assert_ne!(va.params().data, base.data);
 
         let vb = store.load("vb").unwrap();
         assert!(matches!(vb.source, VariantSource::Fp16(_)));
         // fp16 roundtrip of ft
-        for (a, b) in vb.params.data.iter().zip(&ft.data) {
+        for (a, b) in vb.params().data.iter().zip(&ft.data) {
             assert!((a - b).abs() <= 1e-3 * b.abs().max(1e-3));
         }
         assert!(store.load("nonexistent").is_err());
@@ -174,5 +217,26 @@ mod tests {
         assert!(delta_sz * 3 < fp16_sz, "delta {delta_sz} vs fp16 {fp16_sz}");
         let v = store.load("va").unwrap();
         assert!(v.load_time.as_nanos() > 0);
+    }
+
+    #[test]
+    fn fused_mode_loads_packed_and_matches_dense_mode() {
+        let dir = std::env::temp_dir().join("pawd_test_store3");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (base, _ft) = setup(&dir);
+        let dense_store = VariantStore::new(base.clone(), &dir);
+        let fused_store = VariantStore::new(base.clone(), &dir).with_mode(ExecMode::Fused);
+
+        let dense = dense_store.load("va").unwrap();
+        let fused = fused_store.load("va").unwrap();
+        assert!(!dense.weights.is_packed());
+        assert!(fused.weights.is_packed());
+        // Packed residency is a small fraction of the dense equivalent.
+        assert!(fused.weights.resident_bytes() * 4 < dense.weights.resident_bytes());
+        // Materializing the packed variant reproduces the dense load.
+        assert_eq!(fused.params().data, dense.params().data);
+        // FP16 checkpoints are always dense, whatever the mode.
+        let vb = fused_store.load("vb").unwrap();
+        assert!(!vb.weights.is_packed());
     }
 }

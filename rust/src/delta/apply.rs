@@ -3,7 +3,9 @@
 //! Materializes `Ŵ = W_b + v ⊙ B` for one module or a whole model. This is
 //! the Rust-native counterpart of the L1 Pallas `delta_apply` kernel (the
 //! runtime path exists for validation and the fused on-the-fly mode; hot
-//! swaps in the coordinator use this native path).
+//! swaps in the coordinator's *dense* exec mode use this native path —
+//! fused mode never materializes and executes the packed delta through
+//! [`crate::exec::FusedDeltaLinear`] instead).
 //!
 //! Performance notes (see EXPERIMENTS.md §Perf):
 //! * word-at-a-time bit expansion, branchless sign via IEEE bit tricks
@@ -52,11 +54,14 @@ pub fn apply_module_inplace(w: &mut [f32], m: &DeltaModule, negate: bool) {
     let sgn = if negate { -1.0f32 } else { 1.0 };
     match m.axis {
         Axis::Col => {
-            let scales: Vec<f32> = m.scales.iter().map(|&s| s * sgn).collect();
+            // Negation is a sign flip on every entry, and the sign already
+            // comes from the mask bit — so revert just XORs every mask word
+            // with all-ones instead of cloning the whole scales vector.
+            let flip: u32 = if negate { u32::MAX } else { 0 };
             par::parallel_rows_mut(w, d_out, d_in, 16, |row0, chunk| {
                 for (r, wrow) in chunk.chunks_mut(d_in).enumerate() {
                     let j = row0 + r;
-                    add_row_col(wrow, m.mask.row_words(j), &scales);
+                    add_row_col(wrow, m.mask.row_words(j), &m.scales, flip);
                 }
             });
         }
@@ -153,21 +158,27 @@ fn add_row_const(wrow: &mut [f32], words: &[u32], v: f32) {
     }
 }
 
+/// `flip == u32::MAX` inverts every mask bit, turning the add into the
+/// exact bitwise negation (used by the in-place revert path).
 #[inline]
-fn add_row_col(wrow: &mut [f32], words: &[u32], scales: &[f32]) {
+fn add_row_col(wrow: &mut [f32], words: &[u32], scales: &[f32], flip: u32) {
     let d_in = wrow.len();
     let full = d_in / 32;
     for wi in 0..full {
-        let w = words[wi];
+        let w = words[wi] ^ flip;
         let s32: &[f32; 32] = scales[wi * 32..wi * 32 + 32].try_into().unwrap();
         let o32: &mut [f32; 32] = (&mut wrow[wi * 32..wi * 32 + 32]).try_into().unwrap();
         for b in 0..32 {
             o32[b] += f32::from_bits(s32[b].to_bits() ^ ((((w >> b) & 1) ^ 1) << 31));
         }
     }
-    for b in 0..d_in - full * 32 {
-        let i = full * 32 + b;
-        wrow[i] += signed(scales[i], (words[full] >> b) & 1);
+    let rem = d_in - full * 32;
+    if rem > 0 {
+        let tail = words[full] ^ flip;
+        for b in 0..rem {
+            let i = full * 32 + b;
+            wrow[i] += signed(scales[i], (tail >> b) & 1);
+        }
     }
 }
 

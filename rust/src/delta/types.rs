@@ -96,6 +96,12 @@ impl DeltaModule {
     pub fn payload_bytes(&self) -> u64 {
         self.mask.n_bytes() + (self.scales.len() * 2) as u64
     }
+
+    /// In-memory bytes when served packed (mask words + f32 scales) — the
+    /// single source of truth for the exec layer's residency accounting.
+    pub fn resident_bytes(&self) -> u64 {
+        self.mask.n_bytes() + (self.scales.len() * 4) as u64
+    }
 }
 
 /// Whole-model compressed delta (one fine-tuned variant).

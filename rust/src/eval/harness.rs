@@ -8,7 +8,8 @@
 
 use crate::data::corpus::encode;
 use crate::data::tasks::{McItem, TaskFamily};
-use crate::model::{FlatParams, Transformer};
+use crate::exec::Weights;
+use crate::model::Transformer;
 use crate::util::par;
 use std::sync::Mutex;
 
@@ -55,8 +56,10 @@ impl SuiteResult {
     }
 }
 
-/// Score one MC item: returns the predicted choice index.
-pub fn predict(tf: &Transformer, params: &FlatParams, item: &McItem) -> usize {
+/// Score one MC item: returns the predicted choice index. Generic over the
+/// weight source, so the same harness evaluates dense parameters and packed
+/// variants (the dense-vs-fused A/B switch is just the `weights` argument).
+pub fn predict<W: Weights>(tf: &Transformer, weights: &W, item: &McItem) -> usize {
     let mut best = (f64::NEG_INFINITY, 0usize);
     for (ci, choice) in item.choices.iter().enumerate() {
         let full = encode(&format!("{}{}", item.prompt, choice));
@@ -65,7 +68,7 @@ pub fn predict(tf: &Transformer, params: &FlatParams, item: &McItem) -> usize {
         // (robust under prompt clamping). Length-normalized as lm-eval does.
         let choice_len = encode(choice).len().min(full.len() - 1).max(1);
         let start = full.len() - choice_len;
-        let score = tf.score_span(params, &full, start..full.len());
+        let score = tf.score_span(weights, &full, start..full.len());
         let s = score / choice_len as f64;
         if s > best.0 {
             best = (s, ci);
@@ -83,12 +86,12 @@ fn clamp_tokens(tokens: Vec<u8>, max: usize) -> Vec<u8> {
     }
 }
 
-/// Accuracy of `params` on a set of items (parallel over items).
-pub fn mc_accuracy(tf: &Transformer, params: &FlatParams, items: &[McItem]) -> FamilyResult {
+/// Accuracy of `weights` on a set of items (parallel over items).
+pub fn mc_accuracy<W: Weights>(tf: &Transformer, weights: &W, items: &[McItem]) -> FamilyResult {
     let family = items.first().map(|i| i.family).unwrap_or(TaskFamily::AttrEasy);
     let correct = Mutex::new(0usize);
     par::parallel_items(items.len(), 16, |i| {
-        if predict(tf, params, &items[i]) == items[i].correct {
+        if predict(tf, weights, &items[i]) == items[i].correct {
             *correct.lock().unwrap() += 1;
         }
     });
@@ -96,10 +99,10 @@ pub fn mc_accuracy(tf: &Transformer, params: &FlatParams, items: &[McItem]) -> F
 }
 
 /// Evaluate all five families, `n_per_family` items each.
-pub fn evaluate_suite(
+pub fn evaluate_suite<W: Weights>(
     label: &str,
     tf: &Transformer,
-    params: &FlatParams,
+    weights: &W,
     world: &crate::data::World,
     n_per_family: usize,
     seed: u64,
@@ -108,7 +111,7 @@ pub fn evaluate_suite(
         .iter()
         .map(|&fam| {
             let items = crate::data::tasks::eval_items(world, fam, n_per_family, seed);
-            mc_accuracy(tf, params, &items)
+            mc_accuracy(tf, weights, &items)
         })
         .collect();
     SuiteResult { label: label.to_string(), families }
@@ -120,6 +123,7 @@ mod tests {
     use crate::data::tasks::eval_items;
     use crate::data::World;
     use crate::model::config::ModelConfig;
+    use crate::model::FlatParams;
 
     #[test]
     fn random_model_is_near_chance() {

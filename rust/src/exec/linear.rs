@@ -1,0 +1,311 @@
+//! `LinearOp` backends: dense GEMM vs fused packed-delta GEMM.
+//!
+//! The fused backend is the paper's "maintain inference efficiency by
+//! avoiding dense reconstruction" claim made concrete: for a packed delta
+//! `Ŵ = W_b + v ⊙ B` the projection
+//!
+//! ```text
+//! y = x · Ŵᵀ = x · W_bᵀ + (v ⊙ B applied to x)
+//! ```
+//!
+//! is computed straight from the `PackedMask` bitplane, one mask word at a
+//! time, with the same branchless IEEE sign-injection trick the apply path
+//! uses (`±x` differ only in the sign bit). The dense `Ŵ` never exists:
+//!
+//! * Row/Scalar/Group axes: the scale is constant along a mask row, so the
+//!   delta term is `v_j · Σ_i sign(j,i)·x[t,i]` — one signed reduction of
+//!   the activation row per (token, output-row) pair.
+//! * Col axis: the scale varies along the row, so `z = v ⊙ x[t]` is formed
+//!   once per token and the delta term is `Σ_i sign(j,i)·z_i`.
+
+use crate::delta::types::{Axis, DeltaModule};
+use crate::tensor::{dot, Tensor2};
+use crate::util::par;
+
+/// A linear operator `y = x · Wᵀ` (`x: [n, d_in] → y: [n, d_out]`), abstract
+/// over how `W` is resident: dense f32 rows or base + packed 1-bit delta.
+pub trait LinearOp {
+    fn d_out(&self) -> usize;
+    fn d_in(&self) -> usize;
+
+    /// `y = x · Wᵀ` into a preallocated output.
+    fn forward_into(&self, x: &Tensor2, y: &mut Tensor2);
+
+    /// Allocating convenience wrapper around [`LinearOp::forward_into`].
+    fn forward(&self, x: &Tensor2) -> Tensor2 {
+        let mut y = Tensor2::zeros(x.rows, self.d_out());
+        self.forward_into(x, &mut y);
+        y
+    }
+
+    /// Bytes that must stay resident to execute this op, *excluding* any
+    /// storage shared with other ops (the base checkpoint is charged once by
+    /// the variant cache, not per module).
+    fn resident_bytes(&self) -> u64;
+}
+
+/// Dense backend: borrows a row-major `[d_out, d_in]` weight slice (a view
+/// into `FlatParams`) and runs the same row-parallel dot-product GEMM as
+/// `Tensor2::matmul_bt`, without copying the weights into a `Tensor2`.
+pub struct DenseLinear<'a> {
+    w: &'a [f32],
+    d_out: usize,
+    d_in: usize,
+}
+
+impl<'a> DenseLinear<'a> {
+    pub fn new(w: &'a [f32], d_out: usize, d_in: usize) -> DenseLinear<'a> {
+        assert_eq!(w.len(), d_out * d_in, "weight slice/shape mismatch");
+        DenseLinear { w, d_out, d_in }
+    }
+}
+
+impl LinearOp for DenseLinear<'_> {
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn forward_into(&self, x: &Tensor2, y: &mut Tensor2) {
+        assert_eq!(x.cols, self.d_in, "input dim mismatch");
+        assert_eq!((y.rows, y.cols), (x.rows, self.d_out), "output shape mismatch");
+        let (k, m) = (self.d_in, self.d_out);
+        let a = &x.data;
+        let w = self.w;
+        par::parallel_rows_mut(&mut y.data, x.rows, m, 8, |row0, chunk| {
+            for (ri, yrow) in chunk.chunks_mut(m).enumerate() {
+                let xrow = &a[(row0 + ri) * k..(row0 + ri + 1) * k];
+                for (j, o) in yrow.iter_mut().enumerate() {
+                    *o = dot(xrow, &w[j * k..(j + 1) * k]);
+                }
+            }
+        });
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        (self.w.len() * 4) as u64
+    }
+}
+
+/// Fused backend: executes `y = x·W_bᵀ + x·(v ⊙ B)ᵀ` directly from the
+/// packed bitplane — the base weights stay shared and the per-variant
+/// residency is just the mask words plus the scale vector.
+pub struct FusedDeltaLinear<'a> {
+    base: &'a [f32],
+    module: &'a DeltaModule,
+}
+
+impl<'a> FusedDeltaLinear<'a> {
+    pub fn new(base: &'a [f32], module: &'a DeltaModule) -> FusedDeltaLinear<'a> {
+        assert_eq!(
+            base.len(),
+            module.d_out() * module.d_in(),
+            "base slice/delta shape mismatch for {}",
+            module.id
+        );
+        FusedDeltaLinear { base, module }
+    }
+}
+
+impl LinearOp for FusedDeltaLinear<'_> {
+    fn d_out(&self) -> usize {
+        self.module.d_out()
+    }
+
+    fn d_in(&self) -> usize {
+        self.module.d_in()
+    }
+
+    fn forward_into(&self, x: &Tensor2, y: &mut Tensor2) {
+        let m = self.module;
+        let (d_out, d_in) = (m.d_out(), m.d_in());
+        assert_eq!(x.cols, d_in, "input dim mismatch");
+        assert_eq!((y.rows, y.cols), (x.rows, d_out), "output shape mismatch");
+        let base = self.base;
+        match m.axis {
+            Axis::Col => {
+                par::parallel_rows_mut(&mut y.data, x.rows, d_out, 8, |row0, chunk| {
+                    let mut z = vec![0f32; d_in]; // v ⊙ x, reused across rows
+                    for (ri, yrow) in chunk.chunks_mut(d_out).enumerate() {
+                        let xrow = x.row(row0 + ri);
+                        for ((zi, &xi), &vi) in z.iter_mut().zip(xrow).zip(&m.scales) {
+                            *zi = vi * xi;
+                        }
+                        for (j, o) in yrow.iter_mut().enumerate() {
+                            *o = dot(xrow, &base[j * d_in..(j + 1) * d_in])
+                                + signed_sum(&z, m.mask.row_words(j));
+                        }
+                    }
+                });
+            }
+            _ => {
+                // Row / Scalar / Group: scale constant within each mask row
+                // (scale_at ignores the column index for these axes).
+                par::parallel_rows_mut(&mut y.data, x.rows, d_out, 8, |row0, chunk| {
+                    for (ri, yrow) in chunk.chunks_mut(d_out).enumerate() {
+                        let xrow = x.row(row0 + ri);
+                        for (j, o) in yrow.iter_mut().enumerate() {
+                            *o = dot(xrow, &base[j * d_in..(j + 1) * d_in])
+                                + m.scale_at(j, 0) * signed_sum(xrow, m.mask.row_words(j));
+                        }
+                    }
+                });
+            }
+        }
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.module.resident_bytes()
+    }
+}
+
+/// `Σ_i sign_i · vals[i]` where `sign_i` is bit `i` of the packed row
+/// (1 → +1, 0 → −1). Word-at-a-time: full 32-bit words run a constant-bound
+/// inner loop over fixed-size chunks (vectorizes, same trick as
+/// `delta::apply`), the final partial word is handled separately.
+#[inline]
+fn signed_sum(vals: &[f32], words: &[u32]) -> f32 {
+    let d_in = vals.len();
+    let full = d_in / 32;
+    let mut acc = 0f32;
+    for wi in 0..full {
+        let w = words[wi];
+        let v32: &[f32; 32] = vals[wi * 32..wi * 32 + 32].try_into().unwrap();
+        let mut s = 0f32;
+        for b in 0..32 {
+            s += f32::from_bits(v32[b].to_bits() ^ ((((w >> b) & 1) ^ 1) << 31));
+        }
+        acc += s;
+    }
+    for b in 0..d_in - full * 32 {
+        let i = full * 32 + b;
+        acc += f32::from_bits(vals[i].to_bits() ^ ((((words[full] >> b) & 1) ^ 1) << 31));
+    }
+    acc
+}
+
+/// Closed enum over the two backends so call sites get static dispatch
+/// without naming lifetimes in trait objects.
+pub enum AnyLinear<'a> {
+    Dense(DenseLinear<'a>),
+    Fused(FusedDeltaLinear<'a>),
+}
+
+impl LinearOp for AnyLinear<'_> {
+    fn d_out(&self) -> usize {
+        match self {
+            AnyLinear::Dense(l) => l.d_out(),
+            AnyLinear::Fused(l) => l.d_out(),
+        }
+    }
+
+    fn d_in(&self) -> usize {
+        match self {
+            AnyLinear::Dense(l) => l.d_in(),
+            AnyLinear::Fused(l) => l.d_in(),
+        }
+    }
+
+    fn forward_into(&self, x: &Tensor2, y: &mut Tensor2) {
+        match self {
+            AnyLinear::Dense(l) => l.forward_into(x, y),
+            AnyLinear::Fused(l) => l.forward_into(x, y),
+        }
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        match self {
+            AnyLinear::Dense(l) => l.resident_bytes(),
+            AnyLinear::Fused(l) => l.resident_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::pack::PackedMask;
+    use crate::model::{ModuleId, ProjKind};
+    use crate::util::rng::Rng;
+
+    fn mk_module(d_out: usize, d_in: usize, axis: Axis, seed: u64) -> (Vec<f32>, DeltaModule) {
+        let mut r = Rng::new(seed);
+        let base: Vec<f32> = (0..d_out * d_in).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let delta: Vec<f32> = (0..d_out * d_in).map(|_| r.normal_f32(0.0, 0.1)).collect();
+        let mask = PackedMask::pack(&delta, d_out, d_in);
+        let scales: Vec<f32> =
+            (0..axis.n_scales(d_out, d_in)).map(|_| r.uniform_in(0.01, 0.2)).collect();
+        (base, DeltaModule { id: ModuleId { layer: 0, kind: ProjKind::Q }, mask, axis, scales })
+    }
+
+    fn rand_x(r: &mut Rng, n: usize, d_in: usize) -> Tensor2 {
+        let mut x = Tensor2::zeros(n, d_in);
+        r.fill_normal(&mut x.data, 1.0);
+        x
+    }
+
+    #[test]
+    fn dense_linear_matches_matmul_bt() {
+        let mut r = Rng::new(11);
+        for &(n, d_out, d_in) in &[(1, 1, 1), (3, 5, 33), (7, 16, 64), (4, 17, 100)] {
+            let w: Vec<f32> = (0..d_out * d_in).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let x = rand_x(&mut r, n, d_in);
+            let want = x.matmul_bt(&Tensor2::from_vec(d_out, d_in, w.clone()));
+            let got = DenseLinear::new(&w, d_out, d_in).forward(&x);
+            assert_eq!(got.data, want.data, "shape {n}x{d_out}x{d_in}");
+        }
+    }
+
+    #[test]
+    fn fused_matches_materialize_then_gemm_all_axes() {
+        for (k, axis) in
+            [Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(3)].into_iter().enumerate()
+        {
+            // Odd d_in values cover partial mask words (33, 100) alongside
+            // exact multiples (32, 64).
+            for &(n, d_out, d_in) in &[(1, 1, 1), (5, 7, 33), (3, 8, 32), (6, 13, 100), (2, 9, 64)]
+            {
+                let (base, m) = mk_module(d_out, d_in, axis, 31 + k as u64 * 7 + d_in as u64);
+                let mut r = Rng::new(900 + k as u64);
+                let x = rand_x(&mut r, n, d_in);
+                let mut dense = vec![0f32; base.len()];
+                crate::delta::apply::apply_module_into(&base, &mut dense, &m);
+                let want = x.matmul_bt(&Tensor2::from_vec(d_out, d_in, dense));
+                let got = FusedDeltaLinear::new(&base, &m).forward(&x);
+                for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+                    let tol = 1e-5 * (1.0 + w.abs());
+                    assert!(
+                        (g - w).abs() <= tol,
+                        "axis {axis:?} shape {n}x{d_out}x{d_in} idx {i}: {g} vs {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn signed_sum_matches_scalar_reference() {
+        let mut r = Rng::new(5);
+        for d_in in [1usize, 31, 32, 33, 64, 65, 100] {
+            let delta: Vec<f32> = (0..d_in).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let mask = PackedMask::pack(&delta, 1, d_in);
+            let vals: Vec<f32> = (0..d_in).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let want: f32 =
+                vals.iter().enumerate().map(|(i, &v)| v * mask.sign(0, i)).sum();
+            let got = signed_sum(&vals, mask.row_words(0));
+            assert!((got - want).abs() < 1e-4, "d_in {d_in}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn fused_residency_is_packed_not_dense() {
+        let (base, m) = mk_module(64, 256, Axis::Row, 1);
+        let fused = FusedDeltaLinear::new(&base, &m);
+        let dense_bytes = (base.len() * 4) as u64;
+        // 1 bit/entry + 64 f32 scales ≪ 4 bytes/entry.
+        assert!(fused.resident_bytes() * 8 < dense_bytes);
+    }
+}

@@ -1,0 +1,20 @@
+//! Execution backends: the `LinearOp` abstraction that lets every projection
+//! in the forward pass run either dense (materialized `Ŵ`) or fused straight
+//! from the packed 1-bit delta (`y = x·W_bᵀ + v ⊙ (x·Bᵀ)` without ever
+//! reconstructing `Ŵ`).
+//!
+//! * [`linear`] — [`LinearOp`] trait, [`DenseLinear`], [`FusedDeltaLinear`]
+//!   (word-at-a-time signed accumulation over the mask bitplane).
+//! * [`weights`] — [`Weights`] sources: [`FlatParams`](crate::model::FlatParams)
+//!   (dense), [`PackedVariant`] (base + packed delta), and the cache-facing
+//!   [`VariantWeights`] with packed-byte residency accounting.
+//!
+//! The serving coordinator picks a backend per [`ExecMode`]; `Fused` is the
+//! default and multiplies resident-variant capacity by the compression
+//! ratio, because a cached variant is only mask words + scales.
+
+pub mod linear;
+pub mod weights;
+
+pub use linear::{AnyLinear, DenseLinear, FusedDeltaLinear, LinearOp};
+pub use weights::{ExecMode, PackedVariant, VariantWeights, Weights};

@@ -1,0 +1,307 @@
+//! Variant weight sources: how a served variant's parameters are resident.
+//!
+//! [`Weights`] is what the transformer forward pass consumes: non-patchable
+//! parameters (embeddings, norms, LM head) as a [`FlatParams`] view plus one
+//! [`LinearOp`](super::LinearOp) per patchable projection. Two sources
+//! implement it:
+//!
+//! * [`FlatParams`] itself — every projection is a [`DenseLinear`] view
+//!   (materialized variants, full checkpoints, the base model).
+//! * [`PackedVariant`] — the shared base plus a packed [`DeltaModel`];
+//!   projections covered by the delta run [`FusedDeltaLinear`], the rest
+//!   fall back to dense views of the base. Nothing is ever materialized.
+
+use super::linear::{AnyLinear, DenseLinear, FusedDeltaLinear};
+use crate::delta::types::DeltaModel;
+use crate::model::{FlatParams, ModuleId};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// How the serving stack executes variants — the one-flag dense/fused A/B.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Materialize `Ŵ = W_b + v ⊙ B` on load and serve dense (the original
+    /// behavior; required by the XLA engine, which consumes flat buffers).
+    Dense,
+    /// Keep deltas packed and execute them in place through
+    /// [`FusedDeltaLinear`]; residency per variant is packed bytes.
+    Fused,
+}
+
+impl ExecMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecMode::Dense => "dense",
+            ExecMode::Fused => "fused",
+        }
+    }
+}
+
+/// Anything the transformer can run a forward pass against.
+pub trait Weights: Sync {
+    /// Non-patchable parameters (embeddings, norms, LM head) — and, for
+    /// dense sources, the projections too.
+    fn flat(&self) -> &FlatParams;
+
+    /// The linear operator for one patchable projection.
+    fn op(&self, id: ModuleId) -> AnyLinear<'_>;
+}
+
+impl Weights for FlatParams {
+    fn flat(&self) -> &FlatParams {
+        self
+    }
+
+    fn op(&self, id: ModuleId) -> AnyLinear<'_> {
+        let (rows, cols) = id.kind.shape(self.cfg());
+        AnyLinear::Dense(DenseLinear::new(self.module(id), rows, cols))
+    }
+}
+
+impl<W: Weights + ?Sized> Weights for &W {
+    fn flat(&self) -> &FlatParams {
+        (**self).flat()
+    }
+
+    fn op(&self, id: ModuleId) -> AnyLinear<'_> {
+        (**self).op(id)
+    }
+}
+
+impl<W: Weights + Send + ?Sized> Weights for Arc<W> {
+    fn flat(&self) -> &FlatParams {
+        (**self).flat()
+    }
+
+    fn op(&self, id: ModuleId) -> AnyLinear<'_> {
+        (**self).op(id)
+    }
+}
+
+/// A variant held as shared base + packed delta. Cheap to clone (three Arc
+/// bumps); the cache hands clones to workers, so a hot swap is a pointer
+/// flip with no materialize/revert pass.
+#[derive(Clone)]
+pub struct PackedVariant {
+    base: Arc<FlatParams>,
+    delta: Arc<DeltaModel>,
+    /// ModuleId → index into `delta.modules`.
+    by_id: Arc<HashMap<ModuleId, usize>>,
+}
+
+impl PackedVariant {
+    /// Validate the delta against the base (config name + per-module shapes)
+    /// and build the module index.
+    pub fn new(base: Arc<FlatParams>, delta: Arc<DeltaModel>) -> Result<PackedVariant> {
+        anyhow::ensure!(
+            delta.base_config == base.cfg().name,
+            "delta '{}' targets base '{}', got '{}'",
+            delta.variant,
+            delta.base_config,
+            base.cfg().name
+        );
+        let mut by_id = HashMap::with_capacity(delta.modules.len());
+        for (i, m) in delta.modules.iter().enumerate() {
+            let (rows, cols) = m.id.kind.shape(base.cfg());
+            anyhow::ensure!(
+                (rows, cols) == (m.d_out(), m.d_in()),
+                "delta/module shape mismatch for {}: {}x{} vs {}x{}",
+                m.id,
+                m.d_out(),
+                m.d_in(),
+                rows,
+                cols
+            );
+            // A short scale vector would silently truncate the fused Col
+            // zip (dropping tail-column deltas) where the dense path
+            // panics — reject it up front instead.
+            anyhow::ensure!(
+                m.scales.len() == m.axis.n_scales(rows, cols),
+                "delta {} has {} scales, axis {:?} needs {}",
+                m.id,
+                m.scales.len(),
+                m.axis,
+                m.axis.n_scales(rows, cols)
+            );
+            by_id.insert(m.id, i);
+        }
+        Ok(PackedVariant { base, delta, by_id: Arc::new(by_id) })
+    }
+
+    pub fn base(&self) -> &Arc<FlatParams> {
+        &self.base
+    }
+
+    pub fn delta(&self) -> &Arc<DeltaModel> {
+        &self.delta
+    }
+
+    /// Per-variant resident bytes: packed masks + in-memory f32 scales (the
+    /// shared base is charged once by the cache, not per variant).
+    pub fn resident_bytes(&self) -> u64 {
+        self.delta.modules.iter().map(|m| m.resident_bytes()).sum()
+    }
+
+    /// Materialize a dense copy (XLA engine path, ground-truth checks).
+    pub fn materialize(&self) -> FlatParams {
+        crate::delta::apply::materialize(&self.base, &self.delta.modules)
+    }
+}
+
+impl Weights for PackedVariant {
+    fn flat(&self) -> &FlatParams {
+        &self.base
+    }
+
+    fn op(&self, id: ModuleId) -> AnyLinear<'_> {
+        match self.by_id.get(&id) {
+            Some(&i) => {
+                AnyLinear::Fused(FusedDeltaLinear::new(self.base.module(id), &self.delta.modules[i]))
+            }
+            None => {
+                let (rows, cols) = id.kind.shape(self.base.cfg());
+                AnyLinear::Dense(DenseLinear::new(self.base.module(id), rows, cols))
+            }
+        }
+    }
+}
+
+/// What the variant cache stores and workers execute against.
+#[derive(Clone)]
+pub enum VariantWeights {
+    /// Fully materialized parameters (dense mode, FP16 checkpoints).
+    Dense(Arc<FlatParams>),
+    /// Shared base + packed delta (fused mode).
+    Packed(PackedVariant),
+}
+
+impl VariantWeights {
+    pub fn is_packed(&self) -> bool {
+        matches!(self, VariantWeights::Packed(_))
+    }
+
+    /// Bytes this variant charges against the cache budget.
+    pub fn resident_bytes(&self) -> u64 {
+        match self {
+            VariantWeights::Dense(p) => (p.data.len() * 4) as u64,
+            VariantWeights::Packed(pv) => pv.resident_bytes(),
+        }
+    }
+
+    /// Bytes the same variant would cost if held materialized — the
+    /// denominator of the residency-multiplier gauge.
+    pub fn dense_equiv_bytes(&self) -> u64 {
+        match self {
+            VariantWeights::Dense(p) => (p.data.len() * 4) as u64,
+            VariantWeights::Packed(pv) => (pv.base().data.len() * 4) as u64,
+        }
+    }
+
+    /// Dense parameters, materializing packed variants on demand (only the
+    /// XLA engine and ground-truth comparisons need this).
+    pub fn materialized(&self) -> Arc<FlatParams> {
+        match self {
+            VariantWeights::Dense(p) => p.clone(),
+            VariantWeights::Packed(pv) => Arc::new(pv.materialize()),
+        }
+    }
+}
+
+impl Weights for VariantWeights {
+    fn flat(&self) -> &FlatParams {
+        match self {
+            VariantWeights::Dense(p) => p,
+            VariantWeights::Packed(pv) => pv.flat(),
+        }
+    }
+
+    fn op(&self, id: ModuleId) -> AnyLinear<'_> {
+        match self {
+            VariantWeights::Dense(p) => p.op(id),
+            VariantWeights::Packed(pv) => pv.op(id),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::pack::PackedMask;
+    use crate::delta::types::{Axis, DeltaModule};
+    use crate::exec::LinearOp;
+    use crate::model::config::ModelConfig;
+    use crate::util::rng::Rng;
+
+    fn tiny_packed(n_modules: usize) -> (Arc<FlatParams>, PackedVariant) {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = Arc::new(FlatParams::init(&cfg, 3));
+        let ids = base.layout.patchable_modules();
+        let mut modules = Vec::new();
+        for (i, &id) in ids.iter().take(n_modules).enumerate() {
+            let (rows, cols) = id.kind.shape(&cfg);
+            let mut r = Rng::new(i as u64 + 1);
+            let delta: Vec<f32> = (0..rows * cols).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            modules.push(DeltaModule {
+                id,
+                mask: PackedMask::pack(&delta, rows, cols),
+                axis: Axis::Row,
+                scales: vec![0.05; rows],
+            });
+        }
+        let delta = Arc::new(DeltaModel {
+            variant: "t".into(),
+            base_config: cfg.name.clone(),
+            modules,
+        });
+        let pv = PackedVariant::new(base.clone(), delta).unwrap();
+        (base, pv)
+    }
+
+    #[test]
+    fn packed_op_matches_materialized_dense_op() {
+        let (base, pv) = tiny_packed(3);
+        let dense = Arc::new(pv.materialize());
+        let ids = base.layout.patchable_modules();
+        let mut r = Rng::new(77);
+        for &id in ids.iter().take(5) {
+            let (_, d_in) = id.kind.shape(base.cfg());
+            let mut x = crate::tensor::Tensor2::zeros(4, d_in);
+            r.fill_normal(&mut x.data, 1.0);
+            let want = dense.op(id).forward(&x);
+            let got = pv.op(id).forward(&x);
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert!((g - w).abs() <= 1e-5 * (1.0 + w.abs()), "{id}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn untouched_modules_fall_back_to_base_dense() {
+        let (base, pv) = tiny_packed(2);
+        let ids = base.layout.patchable_modules();
+        let last = *ids.last().unwrap();
+        // Beyond the 2 patched modules the op must be a dense view of base.
+        assert!(matches!(pv.op(last), AnyLinear::Dense(_)));
+        assert!(matches!(pv.op(ids[0]), AnyLinear::Fused(_)));
+    }
+
+    #[test]
+    fn packed_residency_is_fraction_of_dense() {
+        let (_, pv) = tiny_packed(7);
+        let w = VariantWeights::Packed(pv);
+        assert!(w.resident_bytes() * 8 < w.dense_equiv_bytes());
+        assert!(w.is_packed());
+    }
+
+    #[test]
+    fn rejects_wrong_base_config() {
+        let (base, pv) = tiny_packed(1);
+        let delta = DeltaModel {
+            variant: "x".into(),
+            base_config: "not-a-config".into(),
+            modules: pv.delta().modules.clone(),
+        };
+        assert!(PackedVariant::new(base, Arc::new(delta)).is_err());
+    }
+}

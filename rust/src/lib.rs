@@ -11,6 +11,14 @@
 //!   variant cache, hot-swap loader) plus the full delta compression
 //!   library and all substrates (tensor math, transformer, synthetic data,
 //!   eval harness).
+//!
+//! Within L3, the [`exec`] layer abstracts how projections execute: every
+//! forward pass routes through a [`exec::LinearOp`], either
+//! [`exec::DenseLinear`] (materialized weights) or [`exec::FusedDeltaLinear`]
+//! (base + packed 1-bit delta, executed in place via word-at-a-time signed
+//! accumulation — dense `Ŵ` is never reconstructed). The variant cache holds
+//! one shared base plus per-variant *packed* artifacts, so its byte budget
+//! is charged in packed bytes and hot-swapping a variant is a pointer flip.
 //! * **L2 (python/compile)** — JAX transformer fwd / fused-AdamW train step
 //!   / logit-matching grad, AOT-lowered to HLO text once at build time.
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the packed-sign
@@ -25,6 +33,7 @@ pub mod coordinator;
 pub mod data;
 pub mod delta;
 pub mod eval;
+pub mod exec;
 pub mod model;
 pub mod pipeline;
 pub mod runtime;

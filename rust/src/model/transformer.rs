@@ -5,9 +5,17 @@
 //! two roles: (1) the parity oracle for the AOT/XLA runtime (integration
 //! tests compare logits), and (2) a fallback engine so the serving stack and
 //! all accuracy experiments run even without artifacts built.
+//!
+//! Every projection routes through the [`exec::LinearOp`](crate::exec)
+//! abstraction: the forward pass is generic over a [`Weights`] source, so
+//! the same code serves dense parameters (`FlatParams`) and packed variants
+//! (`PackedVariant` — base + 1-bit delta executed in place, never
+//! materialized).
 
 use super::config::ModelConfig;
 use super::params::FlatParams;
+use crate::exec::{LinearOp, Weights};
+use crate::model::params::{ModuleId, ProjKind};
 use crate::tensor::ops::{log_softmax_into, rmsnorm_into, silu, softmax_inplace, RopeTable};
 use crate::tensor::{dot, Tensor2};
 use crate::util::par;
@@ -75,7 +83,7 @@ impl Transformer {
     /// `[seq, vocab]` tensors, one per batch element. Sequences may have
     /// different lengths (each is processed independently — the XLA path
     /// pads to bucket shapes instead).
-    pub fn forward_batch(&self, params: &FlatParams, tokens: &[Vec<u8>]) -> Vec<Tensor2> {
+    pub fn forward_batch<W: Weights>(&self, weights: &W, tokens: &[Vec<u8>]) -> Vec<Tensor2> {
         let mut out: Vec<Option<Tensor2>> = (0..tokens.len()).map(|_| None).collect();
         // Parallelism strategy: across batch if batch > 1, else the matmuls
         // inside the single sequence parallelize internally.
@@ -83,7 +91,7 @@ impl Transformer {
             let results: Vec<std::sync::Mutex<Option<Tensor2>>> =
                 (0..tokens.len()).map(|_| std::sync::Mutex::new(None)).collect();
             par::parallel_items(tokens.len(), 16, |i| {
-                let logits = self.forward_one(params, &tokens[i]);
+                let logits = self.forward_one(weights, &tokens[i]);
                 *results[i].lock().unwrap() = Some(logits);
             });
             for (o, r) in out.iter_mut().zip(results) {
@@ -91,34 +99,34 @@ impl Transformer {
             }
         } else {
             for (o, t) in out.iter_mut().zip(tokens) {
-                *o = Some(self.forward_one(params, t));
+                *o = Some(self.forward_one(weights, t));
             }
         }
         out.into_iter().map(|o| o.unwrap()).collect()
     }
 
     /// Forward one sequence: `[T] -> [T, vocab]` logits.
-    pub fn forward_one(&self, params: &FlatParams, tokens: &[u8]) -> Tensor2 {
-        self.forward_inner(params, tokens, None).0
+    pub fn forward_one<W: Weights>(&self, weights: &W, tokens: &[u8]) -> Tensor2 {
+        self.forward_inner(weights, tokens, None).0
     }
 
     /// Forward with activation taps at `tap_layer`: records, for each of the
     /// seven patchable projections of that layer, the module *input* and
     /// module *output* activations (the (X, Y) pairs of Algorithm 3 — the
     /// native equivalent of the paper's PyTorch forward hooks).
-    pub fn forward_one_tapped(
+    pub fn forward_one_tapped<W: Weights>(
         &self,
-        params: &FlatParams,
+        weights: &W,
         tokens: &[u8],
         tap_layer: usize,
     ) -> (Tensor2, LayerTaps) {
-        let (logits, taps) = self.forward_inner(params, tokens, Some(tap_layer));
+        let (logits, taps) = self.forward_inner(weights, tokens, Some(tap_layer));
         (logits, taps.expect("tap layer in range"))
     }
 
-    fn forward_inner(
+    fn forward_inner<W: Weights>(
         &self,
-        params: &FlatParams,
+        weights: &W,
         tokens: &[u8],
         tap_layer: Option<usize>,
     ) -> (Tensor2, Option<LayerTaps>) {
@@ -128,6 +136,7 @@ impl Transformer {
         let d = cfg.dim;
         let nh = cfg.n_heads;
         let hd = cfg.head_dim();
+        let params = weights.flat();
         let layout = &params.layout;
 
         // Embedding lookup -> x: [T, d]
@@ -149,13 +158,10 @@ impl Transformer {
                 let dst = normed.row_mut(nr);
                 rmsnorm_into(xr, norm_w, dst);
             }
-            let wq = weight_view(params, lo.wq, d, d);
-            let wk = weight_view(params, lo.wk, d, d);
-            let wv = weight_view(params, lo.wv, d, d);
-            let wo = weight_view(params, lo.wo, d, d);
-            let mut q = normed.matmul_bt(&wq); // [T, d]
-            let mut k = normed.matmul_bt(&wk);
-            let v = normed.matmul_bt(&wv);
+            let op = |kind| weights.op(ModuleId { layer: l, kind });
+            let mut q = op(ProjKind::Q).forward(&normed); // [T, d]
+            let mut k = op(ProjKind::K).forward(&normed);
+            let v = op(ProjKind::V).forward(&normed);
             if tapping {
                 let t = taps.get_or_insert_with(LayerTaps::default);
                 t.attn_in = normed.clone(); // input of q/k/v projections
@@ -192,7 +198,7 @@ impl Transformer {
                     }
                 }
             }
-            let proj = attn_out.matmul_bt(&wo); // [T, d]
+            let proj = op(ProjKind::O).forward(&attn_out); // [T, d]
             if tapping {
                 let t = taps.as_mut().unwrap();
                 t.o_in = attn_out.clone();
@@ -206,11 +212,8 @@ impl Transformer {
                 let src = x.row(pos).to_vec();
                 rmsnorm_into(&src, norm_w, normed.row_mut(pos));
             }
-            let w_gate = weight_view(params, lo.w_gate, cfg.ff, d);
-            let w_up = weight_view(params, lo.w_up, cfg.ff, d);
-            let w_down = weight_view(params, lo.w_down, d, cfg.ff);
-            let mut gate = normed.matmul_bt(&w_gate); // [T, ff]
-            let up = normed.matmul_bt(&w_up);
+            let mut gate = op(ProjKind::Gate).forward(&normed); // [T, ff]
+            let up = op(ProjKind::Up).forward(&normed);
             if tapping {
                 let t = taps.as_mut().unwrap();
                 t.mlp_in = normed.clone(); // input of gate/up projections
@@ -220,7 +223,7 @@ impl Transformer {
             for (g, &u) in gate.data.iter_mut().zip(&up.data) {
                 *g = silu(*g) * u;
             }
-            let down = gate.matmul_bt(&w_down); // [T, d]
+            let down = op(ProjKind::Down).forward(&gate); // [T, d]
             if tapping {
                 let t = taps.as_mut().unwrap();
                 t.down_in = gate.clone(); // silu(gate)·up, the down_proj input
@@ -235,16 +238,25 @@ impl Transformer {
             let src = x.row(pos).to_vec();
             rmsnorm_into(&src, fw, x.row_mut(pos));
         }
-        let lm = weight_view(params, layout.lm_head, cfg.vocab, d);
-        (x.matmul_bt(&lm), taps) // [T, vocab]
+        let lm = crate::exec::DenseLinear::new(
+            &params.data[layout.lm_head..layout.lm_head + cfg.vocab * d],
+            cfg.vocab,
+            d,
+        );
+        (lm.forward(&x), taps) // [T, vocab]
     }
 
     /// Sum of log p(token[i] | tokens[..i]) over `span` (used for MC
     /// scoring: rank answer choices by completion log-likelihood).
-    pub fn score_span(&self, params: &FlatParams, tokens: &[u8], span: std::ops::Range<usize>) -> f64 {
+    pub fn score_span<W: Weights>(
+        &self,
+        weights: &W,
+        tokens: &[u8],
+        span: std::ops::Range<usize>,
+    ) -> f64 {
         assert!(span.start >= 1, "cannot score position 0 (no context)");
         assert!(span.end <= tokens.len());
-        let logits = self.forward_one(params, tokens);
+        let logits = self.forward_one(weights, tokens);
         let mut lse_buf = vec![0f32; self.cfg.vocab];
         let mut total = 0f64;
         for pos in span {
@@ -256,21 +268,12 @@ impl Transformer {
 
     /// Per-token cross-entropy (nats) of `tokens` under the model; the
     /// perplexity metric is `exp` of this.
-    pub fn cross_entropy(&self, params: &FlatParams, tokens: &[u8]) -> f64 {
+    pub fn cross_entropy<W: Weights>(&self, weights: &W, tokens: &[u8]) -> f64 {
         if tokens.len() < 2 {
             return 0.0;
         }
-        -self.score_span(params, tokens, 1..tokens.len()) / (tokens.len() - 1) as f64
+        -self.score_span(weights, tokens, 1..tokens.len()) / (tokens.len() - 1) as f64
     }
-}
-
-/// Zero-copy weight view from the flat vector.
-///
-/// (Allocates only the header; the data is copied because `Tensor2` owns its
-/// buffer — kept simple, the copies are small relative to matmul cost. The
-/// perf-critical path avoids this via `matmul_bt_slice`.)
-fn weight_view(params: &FlatParams, off: usize, rows: usize, cols: usize) -> Tensor2 {
-    Tensor2::from_vec(rows, cols, params.data[off..off + rows * cols].to_vec())
 }
 
 #[cfg(test)]
@@ -384,6 +387,48 @@ mod tests {
         for (a, b) in want.data.iter().zip(&taps.down_out.data) {
             assert!((a - b).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn packed_weights_forward_matches_materialized() {
+        use crate::delta::pack::PackedMask;
+        use crate::delta::types::{Axis, DeltaModel, DeltaModule};
+        use crate::exec::PackedVariant;
+        use crate::util::rng::Rng;
+        use std::sync::Arc;
+
+        let (cfg, base, t) = tiny();
+        let base = Arc::new(base);
+        // Patch every module, cycling through all four axis modes.
+        let axes = [Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(3)];
+        let mut modules = Vec::new();
+        for (i, &id) in base.layout.patchable_modules().iter().enumerate() {
+            let (rows, cols) = id.kind.shape(&cfg);
+            let mut r = Rng::new(500 + i as u64);
+            let delta: Vec<f32> = (0..rows * cols).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let axis = axes[i % axes.len()];
+            let n = axis.n_scales(rows, cols);
+            modules.push(DeltaModule {
+                id,
+                mask: PackedMask::pack(&delta, rows, cols),
+                axis,
+                scales: (0..n).map(|_| r.uniform_in(0.005, 0.05)).collect(),
+            });
+        }
+        let delta =
+            DeltaModel { variant: "pv".into(), base_config: cfg.name.clone(), modules };
+        let pv = PackedVariant::new(base.clone(), Arc::new(delta)).unwrap();
+        let dense = pv.materialize();
+
+        let tokens: Vec<u8> = vec![7, 3, 9, 1, 4, 2, 8, 5];
+        let want = t.forward_one(&dense, &tokens);
+        let got = t.forward_one(&pv, &tokens);
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert!((g - w).abs() <= 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+        // And the packed variant must differ from the base (deltas applied).
+        let base_logits = t.forward_one(base.as_ref(), &tokens);
+        assert!(got.mse(&base_logits) > 0.0);
     }
 
     #[test]

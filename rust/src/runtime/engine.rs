@@ -8,7 +8,6 @@
 
 use super::manifest::{DType, Manifest, ProgramSpec};
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
 use std::path::Path;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -144,7 +143,29 @@ pub fn start(artifacts_dir: &Path) -> Result<RuntimeHandle> {
     Ok(RuntimeHandle { tx, manifest })
 }
 
+/// Without the `xla-runtime` feature the crate still links (the native
+/// engine covers every test and experiment); runtime jobs fail with a
+/// clear error instead of a missing PJRT symbol.
+#[cfg(not(feature = "xla-runtime"))]
+fn runtime_thread(_manifest: Arc<Manifest>, rx: mpsc::Receiver<Job>) {
+    let msg = "pawd was built without the `xla-runtime` feature; \
+               rebuild with `--features xla-runtime` to execute AOT artifacts";
+    for job in rx {
+        match job {
+            Job::Run { resp, .. } => {
+                let _ = resp.send(Err(anyhow!(msg)));
+            }
+            Job::Warm { resp, .. } => {
+                let _ = resp.send(Err(anyhow!(msg)));
+            }
+            Job::Shutdown => break,
+        }
+    }
+}
+
+#[cfg(feature = "xla-runtime")]
 fn runtime_thread(manifest: Arc<Manifest>, rx: mpsc::Receiver<Job>) {
+    use std::collections::HashMap;
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
         Err(e) => {
@@ -196,10 +217,11 @@ fn runtime_thread(manifest: Arc<Manifest>, rx: mpsc::Receiver<Job>) {
     }
 }
 
+#[cfg(feature = "xla-runtime")]
 fn ensure_compiled<'a>(
     client: &xla::PjRtClient,
     manifest: &Manifest,
-    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
+    cache: &'a mut std::collections::HashMap<String, xla::PjRtLoadedExecutable>,
     name: &str,
 ) -> Result<&'a xla::PjRtLoadedExecutable> {
     if !cache.contains_key(name) {
@@ -217,6 +239,7 @@ fn ensure_compiled<'a>(
     Ok(cache.get(name).unwrap())
 }
 
+#[cfg(feature = "xla-runtime")]
 fn to_literal(t: HostTensor) -> Result<xla::Literal> {
     let mk = |ty: xla::ElementType, shape: &[usize], bytes: &[u8]| {
         xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)
@@ -229,6 +252,7 @@ fn to_literal(t: HostTensor) -> Result<xla::Literal> {
     }
 }
 
+#[cfg(feature = "xla-runtime")]
 fn from_literal(l: xla::Literal) -> Result<HostTensor> {
     let shape = l.shape().map_err(|e| anyhow!("literal shape: {e}"))?;
     let arr = match shape {
@@ -250,6 +274,7 @@ fn from_literal(l: xla::Literal) -> Result<HostTensor> {
     }
 }
 
+#[cfg(feature = "xla-runtime")]
 fn bytes_of<T: Copy>(v: &[T]) -> &[u8] {
     // Plain-old-data reinterpretation for the FFI boundary.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }

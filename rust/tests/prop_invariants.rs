@@ -7,6 +7,7 @@ use pawd::delta::calibrate::{
 };
 use pawd::delta::pack::PackedMask;
 use pawd::delta::types::{Axis, DeltaModule};
+use pawd::exec::{FusedDeltaLinear, LinearOp};
 use pawd::model::{ModuleId, ProjKind};
 use pawd::tensor::Tensor2;
 use pawd::util::prop::{assert_close, check, Gen};
@@ -71,6 +72,33 @@ fn prop_apply_optimized_matches_reference() {
         let mut got = vec![0f32; base.len()];
         pawd::delta::apply::apply_module_into(&base, &mut got, &m);
         assert_close(&got, &want, 0.0, 0.0)
+    });
+}
+
+#[test]
+fn prop_fused_linear_matches_materialized_gemm() {
+    // The exec-layer invariant behind the packed-resident serving path:
+    // FusedDeltaLinear (never materializes Ŵ) must agree with
+    // materialize-then-GEMM within f32 accumulation noise, across all four
+    // axis modes and shapes where d_in is not a multiple of the 32-bit mask
+    // word (the size generator sweeps 1..=60).
+    check("fused-vs-materialized-gemm", 40, 60, |g| {
+        let d_out = g.dim();
+        let d_in = g.dim();
+        let n = 1 + g.rng.below(5);
+        let base = g.vec_normal(d_out * d_in, 1.0);
+        let delta = g.vec_normal(d_out * d_in, 0.2);
+        let mask = PackedMask::pack(&delta, d_out, d_in);
+        let axis = *g.rng.choice(&[Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(3)]);
+        let scales = g.vec_normal(axis.n_scales(d_out, d_in), 0.3);
+        let m = DeltaModule { id: ModuleId { layer: 0, kind: ProjKind::O }, mask, axis, scales };
+        // Reference: dense Ŵ = W_b + v ⊙ B, then a plain GEMM.
+        let mut dense = vec![0f32; base.len()];
+        pawd::delta::apply::apply_module_into(&base, &mut dense, &m);
+        let x = rand_tensor(g, n, d_in);
+        let want = x.matmul_bt(&Tensor2::from_vec(d_out, d_in, dense));
+        let got = FusedDeltaLinear::new(&base, &m).forward(&x);
+        assert_close(&got.data, &want.data, 1e-5, 1e-5)
     });
 }
 

@@ -1,10 +1,13 @@
 //! Multi-variant serving demo — the paper's systems scenario: many
 //! task-specialized fine-tunes of one base served from compact deltas,
-//! with hot-swap cold starts and an LRU variant cache.
+//! with hot-swap cold starts, an LRU variant cache, and **live updates**
+//! through the control plane (publish → query → rollback).
 //!
 //! Builds N variants on disk, starts the coordinator, replays a skewed
-//! request mix from several client threads, and reports throughput,
-//! latency percentiles, cache behaviour and cold-start times.
+//! request mix from several client threads, then — while traffic is still
+//! flowing — publishes a new version of the hot variant, verifies the alias
+//! flip, rolls it back, and reports throughput, latency percentiles, cache
+//! behaviour and lifecycle counters.
 //!
 //! ```bash
 //! cargo run --release --example serve_variants [n_variants] [n_requests]
@@ -42,6 +45,16 @@ fn main() -> anyhow::Result<()> {
         let bytes = save_delta(dir.join(format!("task{k}.pawd")), &delta)?;
         println!("  task{k}: {} on disk", pawd::util::benchkit::fmt_bytes(bytes));
     }
+    // A refreshed fine-tune of the hot variant, staged for live publication.
+    // (Staged outside the registry dir — files inside it get adopted.)
+    let staging = std::env::temp_dir().join("pawd_serve_variants_staging");
+    std::fs::create_dir_all(&staging)?;
+    let staged = staging.join("task0_v2.pawd");
+    {
+        let ft2 = synth_finetune(&base, &SynthDeltaSpec { seed: 9000, ..Default::default() });
+        let (delta2, _, _) = compress_model("task0", &base, &ft2, &calib, &opts);
+        save_delta(&staged, &delta2)?;
+    }
 
     // --- start the coordinator with a budget that holds ~half the fleet
     // if it were dense; in the default fused mode the same budget holds
@@ -60,7 +73,8 @@ fn main() -> anyhow::Result<()> {
         },
     );
 
-    // --- replay a zipf-ish request mix from 4 client threads ---
+    // --- replay a zipf-ish request mix from 4 client threads, and run the
+    // lifecycle demo from a 5th thread while traffic flows ---
     println!("replaying {n_requests} requests across 4 client threads ...");
     let t0 = Instant::now();
     std::thread::scope(|s| {
@@ -77,16 +91,47 @@ fn main() -> anyhow::Result<()> {
                     };
                     let rx = client.submit(
                         &format!("task{v}"),
-                        Payload::Score {
-                            prompt: format!("Q: request {i} from {tid}? A: "),
-                            choices: vec!["yes".into(), "no".into(), "maybe".into(), "never".into()],
-                        },
+                        Payload::score(
+                            &format!("Q: request {i} from {tid}? A: "),
+                            &["yes".into(), "no".into(), "maybe".into(), "never".into()],
+                        ),
                     );
                     let resp = rx.recv().expect("response");
                     assert!(resp.result.is_ok());
                 }
             });
         }
+        // --- the control-plane demo: publish task0 v2 mid-traffic, query
+        // both versions, then roll back ---
+        let admin = server.client();
+        let staged = &staged;
+        s.spawn(move || {
+            let probe = |label: &str| {
+                let r = admin.score("task0", "Q: lifecycle probe? A: ", &["yes".into(), "no".into()]);
+                println!(
+                    "  [{label}] task0 answered by version {:?} (ok={})",
+                    r.version,
+                    r.result.is_ok()
+                );
+                r.version
+            };
+            assert_eq!(probe("pre-publish "), Some(1));
+            let v2 = admin.publish("task0", staged).expect("publish");
+            println!("  published task0@{v2} (alias flipped, new version warmed)");
+            assert_eq!(probe("post-publish"), Some(v2));
+            let back = admin.rollback("task0", None).expect("rollback");
+            println!("  rolled task0 back to version {back}");
+            assert_eq!(probe("post-rollback"), Some(back));
+            for d in admin.variants().expect("list") {
+                if d.name == "task0" {
+                    println!(
+                        "  task0 history: active v{}, versions {:?}",
+                        d.active,
+                        d.versions.iter().map(|v| v.version).collect::<Vec<_>>()
+                    );
+                }
+            }
+        });
     });
     let wall = t0.elapsed();
 
@@ -106,16 +151,23 @@ fn main() -> anyhow::Result<()> {
         let s = pawd::util::stats::Summary::of(&cold);
         println!("cold-start (ms)      : mean {:.2}  p50 {:.2}  max {:.2}  (n={})", s.mean, s.p50, s.max, s.n);
     }
-    println!("resident variants    : {:?}", server.cache.resident());
     let res = server.cache.residency();
     println!(
-        "residency            : {} variants in {} packed ({} dense-equivalent, {:.1}x capacity)",
+        "resident versions    : {:?}",
+        res.per_version
+            .iter()
+            .map(|e| format!("{}@{}", e.variant, e.version))
+            .collect::<Vec<_>>()
+    );
+    println!(
+        "residency            : {} versions in {} packed ({} dense-equivalent, {:.1}x capacity)",
         res.variants,
         pawd::util::benchkit::fmt_bytes(res.resident_bytes),
         pawd::util::benchkit::fmt_bytes(res.dense_equiv_bytes),
         res.dense_equiv_bytes as f64 / res.resident_bytes.max(1) as f64
     );
     println!("hot swaps            : {}", snap.swaps);
+    println!("publishes/rollbacks  : {} / {}", snap.publishes, snap.rollbacks);
     server.shutdown();
     println!("serve_variants OK");
     Ok(())

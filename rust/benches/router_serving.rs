@@ -81,10 +81,10 @@ fn main() -> anyhow::Result<()> {
                                     if rng.chance(0.5) { 0 } else { rng.below(n_variants) };
                                 let rx = client.submit(
                                     &format!("v{v}"),
-                                    Payload::Score {
-                                        prompt: format!("Q: item {i}? A: "),
-                                        choices: vec!["yes".into(), "no".into()],
-                                    },
+                                    Payload::score(
+                                        &format!("Q: item {i}? A: "),
+                                        &["yes".into(), "no".into()],
+                                    ),
                                 );
                                 let _ = rx.recv();
                             }

@@ -1,15 +1,23 @@
-//! LRU cache of resident variants under a byte budget.
+//! LRU cache of resident variant **versions** under a byte budget.
 //!
 //! Serving many fine-tuned variants of one base means most variants are
 //! cold most of the time; the cache keeps the hot set resident and charges
 //! cold loads to the hot-swap loader (whose latency the paper's §3.2
 //! load-time experiment measures).
 //!
-//! Residency accounting follows the store's [`ExecMode`]: a dense entry
+//! Entries are keyed by `(variant, version)`: a `get("name")` first resolves
+//! the alias through the registry, so publishing version `N+1` simply makes
+//! new requests miss into a fresh key — the publish *warms* `N+1` while `N`
+//! ages out of the LRU under the byte budget, and in-flight requests keep
+//! executing the `Arc` of `N` they already hold. Rollback is the same
+//! mechanism in reverse (and usually a pure cache hit, since `N` is often
+//! still resident).
+//!
+//! Residency accounting follows the store's [`ExecMode`](crate::exec::ExecMode): a dense entry
 //! charges the full materialized parameter bytes, a packed entry charges
 //! only its mask + scale bytes (the shared base is owned by the store and
 //! charged to nobody). Under a fixed budget this multiplies the number of
-//! resident variants by the compression ratio, and a hot swap is an `Arc`
+//! resident versions by the compression ratio, and a hot swap is an `Arc`
 //! clone — no materialize/revert pass ever runs on the request path.
 
 use super::store::{LoadedVariant, VariantStore};
@@ -30,17 +38,28 @@ pub struct CacheStats {
     pub cold_start: Vec<Duration>,
 }
 
+/// Residency of one cached `(variant, version)` entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VersionResidency {
+    pub variant: String,
+    pub version: u32,
+    /// Bytes charged against the budget for this entry.
+    pub bytes: u64,
+}
+
 /// Point-in-time residency gauges (the satellite metrics surfaced through
 /// `Metrics::snapshot` and the server's stats responses).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct Residency {
-    /// Number of variants currently resident.
+    /// Number of variant versions currently resident.
     pub variants: usize,
     /// Bytes actually charged against the budget (packed bytes for fused
     /// entries, dense bytes otherwise).
     pub resident_bytes: u64,
     /// What the same resident set would cost fully materialized.
     pub dense_equiv_bytes: u64,
+    /// Per-entry breakdown, sorted by (variant, version).
+    pub per_version: Vec<VersionResidency>,
 }
 
 struct Entry {
@@ -51,17 +70,19 @@ struct Entry {
     last_used: u64,
 }
 
+type Key = (String, u32);
+
 struct Inner {
-    entries: HashMap<String, Entry>,
-    /// Variants currently being loaded by some thread (single-flight guard:
-    /// concurrent requests for the same cold variant wait instead of
+    entries: HashMap<Key, Entry>,
+    /// Versions currently being loaded by some thread (single-flight guard:
+    /// concurrent requests for the same cold version wait instead of
     /// duplicating the load).
-    loading: std::collections::HashSet<String>,
+    loading: std::collections::HashSet<Key>,
     clock: u64,
     used_bytes: u64,
     /// Running dense-equivalent total for the resident set, maintained
-    /// incrementally alongside `used_bytes` so `residency()` is O(1) (it
-    /// runs on the worker hot path).
+    /// incrementally alongside `used_bytes` so the totals are O(1) (they
+    /// run on the worker hot path).
     dense_equiv_bytes: u64,
     stats: CacheStats,
 }
@@ -95,9 +116,19 @@ impl VariantCache {
         self.store.base.clone()
     }
 
-    /// Fetch a variant, loading on miss. Returns the weights and the
-    /// cold-start duration if this call performed the load.
+    /// The store (and through it the registry) this cache loads from.
+    pub fn store(&self) -> &VariantStore {
+        &self.store
+    }
+
+    /// Fetch a variant by alias (or explicit `name@N`), loading on miss.
+    /// Returns the weights and the cold-start duration if this call
+    /// performed the load. The alias is resolved to a concrete version
+    /// *once*, up front: that exact version is keyed, loaded and returned
+    /// even if a publish flips the alias mid-load.
     pub fn get(&self, name: &str) -> Result<(VariantWeights, Option<Duration>)> {
+        let resolved = self.store.registry().resolve(name)?;
+        let key: Key = (resolved.name.clone(), resolved.version);
         // Fast path under the lock; on a cold miss, claim the single-flight
         // slot (or wait for whoever holds it).
         {
@@ -105,7 +136,7 @@ impl VariantCache {
             loop {
                 inner.clock += 1;
                 let clock = inner.clock;
-                let hit = if let Some(e) = inner.entries.get_mut(name) {
+                let hit = if let Some(e) = inner.entries.get_mut(&key) {
                     e.last_used = clock;
                     Some(e.weights.clone())
                 } else {
@@ -115,22 +146,22 @@ impl VariantCache {
                     inner.stats.hits += 1;
                     return Ok((weights, None));
                 }
-                if inner.loading.insert(name.to_string()) {
+                if inner.loading.insert(key.clone()) {
                     inner.stats.misses += 1;
                     break; // we own the load
                 }
-                // Someone else is loading this variant: wait, then re-check.
+                // Someone else is loading this version: wait, then re-check.
                 inner = self.loaded_cv.wait(inner).unwrap();
             }
         }
         // Load outside the lock (the expensive part). Ensure the loading
         // claim is released even on error.
-        let loaded: Result<LoadedVariant> = self.store.load(name);
+        let loaded: Result<LoadedVariant> = self.store.load_resolved(&resolved);
         let loaded: LoadedVariant = match loaded {
             Ok(l) => l,
             Err(e) => {
                 let mut inner = self.inner.lock().unwrap();
-                inner.loading.remove(name);
+                inner.loading.remove(&key);
                 drop(inner);
                 self.loaded_cv.notify_all();
                 return Err(e);
@@ -159,10 +190,10 @@ impl VariantCache {
         inner.used_bytes += bytes;
         inner.dense_equiv_bytes += dense_equiv;
         inner.entries.insert(
-            name.to_string(),
+            key.clone(),
             Entry { weights: loaded.weights.clone(), bytes, dense_equiv, last_used: clock },
         );
-        inner.loading.remove(name);
+        inner.loading.remove(&key);
         drop(inner);
         self.loaded_cv.notify_all();
         Ok((loaded.weights, Some(loaded.load_time)))
@@ -172,10 +203,18 @@ impl VariantCache {
         self.inner.lock().unwrap().stats.clone()
     }
 
-    pub fn resident(&self) -> Vec<String> {
+    /// Resident `(variant, version)` keys, sorted.
+    pub fn resident(&self) -> Vec<(String, u32)> {
         let inner = self.inner.lock().unwrap();
         let mut v: Vec<_> = inner.entries.keys().cloned().collect();
         v.sort();
+        v
+    }
+
+    /// Distinct resident variant names (any version), sorted.
+    pub fn resident_names(&self) -> Vec<String> {
+        let mut v = self.resident().into_iter().map(|(n, _)| n).collect::<Vec<_>>();
+        v.dedup();
         v
     }
 
@@ -183,13 +222,38 @@ impl VariantCache {
         self.inner.lock().unwrap().used_bytes
     }
 
-    /// Current residency gauges (O(1): totals are maintained incrementally).
-    pub fn residency(&self) -> Residency {
+    /// Residency totals only (`per_version` left empty) — O(1), safe on the
+    /// worker hot path. The full breakdown comes from [`residency`](Self::residency),
+    /// which the stats endpoint calls on demand.
+    pub fn residency_totals(&self) -> Residency {
         let inner = self.inner.lock().unwrap();
         Residency {
             variants: inner.entries.len(),
             resident_bytes: inner.used_bytes,
             dense_equiv_bytes: inner.dense_equiv_bytes,
+            per_version: Vec::new(),
+        }
+    }
+
+    /// Current residency gauges. Totals are O(1) (maintained incrementally);
+    /// the per-version breakdown is O(resident entries).
+    pub fn residency(&self) -> Residency {
+        let inner = self.inner.lock().unwrap();
+        let mut per_version: Vec<VersionResidency> = inner
+            .entries
+            .iter()
+            .map(|((name, version), e)| VersionResidency {
+                variant: name.clone(),
+                version: *version,
+                bytes: e.bytes,
+            })
+            .collect();
+        per_version.sort_by(|a, b| (&a.variant, a.version).cmp(&(&b.variant, b.version)));
+        Residency {
+            variants: inner.entries.len(),
+            resident_bytes: inner.used_bytes,
+            dense_equiv_bytes: inner.dense_equiv_bytes,
+            per_version,
         }
     }
 }
@@ -245,7 +309,7 @@ mod tests {
         cache.get("v1").unwrap();
         cache.get("v0").unwrap(); // refresh v0 -> v1 becomes LRU
         cache.get("v2").unwrap(); // must evict v1
-        let resident = cache.resident();
+        let resident = cache.resident_names();
         assert!(resident.contains(&"v0".to_string()));
         assert!(resident.contains(&"v2".to_string()));
         assert!(!resident.contains(&"v1".to_string()));
@@ -277,6 +341,34 @@ mod tests {
             "expected ≥8x residency multiplier, got {}x",
             r.dense_equiv_bytes / r.resident_bytes.max(1)
         );
+        // Per-version breakdown: all version 1, bytes sum to the total.
+        assert_eq!(r.per_version.len(), 4);
+        assert!(r.per_version.iter().all(|e| e.version == 1));
+        assert_eq!(r.per_version.iter().map(|e| e.bytes).sum::<u64>(), r.resident_bytes);
+    }
+
+    #[test]
+    fn publish_keys_a_fresh_version_and_old_one_ages_out() {
+        let dir = std::env::temp_dir().join("pawd_test_cache5");
+        let store = setup(&dir, 1).with_mode(ExecMode::Fused);
+        let registry = store.registry().clone();
+        let cache = VariantCache::new(store, u64::MAX);
+        let (w1, _) = cache.get("v0").unwrap();
+        assert_eq!(w1.version(), 1);
+        // Publish v2: the alias now misses into a new key; the old entry
+        // stays addressable as v0@1 (and still serves the clone w1 holds).
+        let m = crate::delta::format::load_delta(dir.join("v0.pawd")).unwrap();
+        assert_eq!(registry.publish("v0", m).unwrap(), 2);
+        let (w2, cold) = cache.get("v0").unwrap();
+        assert!(cold.is_some(), "new version must cold-load");
+        assert_eq!(w2.version(), 2);
+        assert_eq!(w1.version(), 1, "in-flight clone keeps executing the old version");
+        assert_eq!(cache.resident(), vec![("v0".into(), 1), ("v0".into(), 2)]);
+        // Rollback: the alias points at v1 again — a pure cache hit.
+        registry.rollback("v0", None).unwrap();
+        let (w1b, cold) = cache.get("v0").unwrap();
+        assert!(cold.is_none(), "rollback target was still resident");
+        assert_eq!(w1b.version(), 1);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! dispatcher/workers via a mutex (recording is a few hundred ns; the
 //! engine dominates by orders of magnitude).
 
-use super::cache::Residency;
+use super::cache::{Residency, VersionResidency};
 use crate::util::stats::LatencyHistogram;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -20,6 +20,8 @@ struct Inner {
     batches: u64,
     batch_size_sum: u64,
     swaps: u64,
+    publishes: u64,
+    rollbacks: u64,
     residency: Residency,
     per_variant: BTreeMap<String, u64>,
     started: Option<Instant>,
@@ -49,7 +51,11 @@ pub struct MetricsSnapshot {
     /// Worker-observed variant switches (a swap is a worker changing which
     /// variant it executes — with packed residency this is a pointer flip).
     pub swaps: u64,
-    /// Variants resident in the cache (last observed).
+    /// Control-plane publishes served (alias flips to a new version).
+    pub publishes: u64,
+    /// Control-plane rollbacks served (alias flips back).
+    pub rollbacks: u64,
+    /// Variant versions resident in the cache (last observed).
     pub resident_variants: usize,
     /// Bytes charged against the cache budget (packed bytes in fused mode).
     pub resident_bytes: u64,
@@ -57,6 +63,9 @@ pub struct MetricsSnapshot {
     /// `dense_equiv / resident` is the capacity multiplier of the packed
     /// cache.
     pub resident_dense_equiv_bytes: u64,
+    /// Per-`(variant, version)` residency breakdown (last observed) — shows
+    /// a publish warming `N+1` while `N` ages out.
+    pub resident_versions: Vec<VersionResidency>,
     pub per_variant: BTreeMap<String, u64>,
 }
 
@@ -101,6 +110,16 @@ impl Metrics {
         self.inner.lock().unwrap().swaps += 1;
     }
 
+    /// A publish flipped (or, for a pinned variant, recorded) a new version.
+    pub fn record_publish(&self) {
+        self.inner.lock().unwrap().publishes += 1;
+    }
+
+    /// A rollback flipped the alias back.
+    pub fn record_rollback(&self) {
+        self.inner.lock().unwrap().rollbacks += 1;
+    }
+
     /// Update the residency gauges (workers call this after cache access).
     pub fn set_residency(&self, r: Residency) {
         self.inner.lock().unwrap().residency = r;
@@ -108,31 +127,48 @@ impl Metrics {
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let i = self.inner.lock().unwrap();
-        let elapsed = i.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
-        MetricsSnapshot {
-            served: i.served,
-            errors: i.errors,
-            batches: i.batches,
-            mean_batch_size: if i.batches > 0 {
-                i.batch_size_sum as f64 / i.batches as f64
-            } else {
-                0.0
-            },
-            throughput_rps: if elapsed > 0.0 { i.served as f64 / elapsed } else { 0.0 },
-            queue_p50_us: i.queue.quantile_us(0.5),
-            queue_p99_us: i.queue.quantile_us(0.99),
-            compute_p50_us: i.compute.quantile_us(0.5),
-            compute_p99_us: i.compute.quantile_us(0.99),
-            total_p50_us: i.total.quantile_us(0.5),
-            total_p99_us: i.total.quantile_us(0.99),
-            cold_starts: i.cold_start.count(),
-            cold_p50_us: i.cold_start.quantile_us(0.5),
-            swaps: i.swaps,
-            resident_variants: i.residency.variants,
-            resident_bytes: i.residency.resident_bytes,
-            resident_dense_equiv_bytes: i.residency.dense_equiv_bytes,
-            per_variant: i.per_variant.clone(),
-        }
+        snapshot_inner(&i)
+    }
+
+    /// Install `r` as the residency gauge and snapshot under a single lock
+    /// acquisition — the stats endpoint uses this so a data worker's
+    /// concurrent totals-only gauge update can't blank `resident_versions`
+    /// between the two steps.
+    pub fn snapshot_with_residency(&self, r: Residency) -> MetricsSnapshot {
+        let mut i = self.inner.lock().unwrap();
+        i.residency = r;
+        snapshot_inner(&i)
+    }
+}
+
+fn snapshot_inner(i: &Inner) -> MetricsSnapshot {
+    let elapsed = i.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+    MetricsSnapshot {
+        served: i.served,
+        errors: i.errors,
+        batches: i.batches,
+        mean_batch_size: if i.batches > 0 {
+            i.batch_size_sum as f64 / i.batches as f64
+        } else {
+            0.0
+        },
+        throughput_rps: if elapsed > 0.0 { i.served as f64 / elapsed } else { 0.0 },
+        queue_p50_us: i.queue.quantile_us(0.5),
+        queue_p99_us: i.queue.quantile_us(0.99),
+        compute_p50_us: i.compute.quantile_us(0.5),
+        compute_p99_us: i.compute.quantile_us(0.99),
+        total_p50_us: i.total.quantile_us(0.5),
+        total_p99_us: i.total.quantile_us(0.99),
+        cold_starts: i.cold_start.count(),
+        cold_p50_us: i.cold_start.quantile_us(0.5),
+        swaps: i.swaps,
+        publishes: i.publishes,
+        rollbacks: i.rollbacks,
+        resident_variants: i.residency.variants,
+        resident_bytes: i.residency.resident_bytes,
+        resident_dense_equiv_bytes: i.residency.dense_equiv_bytes,
+        resident_versions: i.residency.per_version.clone(),
+        per_variant: i.per_variant.clone(),
     }
 }
 
@@ -162,15 +198,25 @@ mod tests {
         let m = Metrics::new();
         m.record_swap();
         m.record_swap();
+        m.record_publish();
+        m.record_rollback();
         m.set_residency(Residency {
             variants: 5,
             resident_bytes: 1000,
             dense_equiv_bytes: 16000,
+            per_version: vec![VersionResidency {
+                variant: "a".into(),
+                version: 2,
+                bytes: 1000,
+            }],
         });
         let s = m.snapshot();
         assert_eq!(s.swaps, 2);
+        assert_eq!((s.publishes, s.rollbacks), (1, 1));
         assert_eq!(s.resident_variants, 5);
         assert_eq!(s.resident_bytes, 1000);
         assert_eq!(s.resident_dense_equiv_bytes, 16000);
+        assert_eq!(s.resident_versions.len(), 1);
+        assert_eq!(s.resident_versions[0].version, 2);
     }
 }

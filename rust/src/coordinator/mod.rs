@@ -1,28 +1,39 @@
 //! L3 serving coordinator — the systems side of the paper: serve many
 //! fine-tuned variants of one shared base model, with compressed deltas
-//! hot-swapped on cold start.
+//! hot-swapped on cold start and **updated live** through a versioned
+//! lifecycle registry.
 //!
-//! * [`request`] — request/response types with per-stage timing.
-//! * [`store`] — on-disk variant registry + the single-read hot-swap loader
-//!   (packed in fused mode, materialized in dense mode) and the FP16
+//! * [`request`] — request/response types with per-stage timing, split into
+//!   a data plane ([`DataOp`](request::DataOp)) and a control plane
+//!   ([`AdminOp`](request::AdminOp)).
+//! * [`registry`] — the variant lifecycle: versioned artifacts
+//!   (`variant@N`), atomic publish/rollback alias flips, pin/retire, JSON
+//!   manifest persistence, adoption of pre-registry directories.
+//! * [`store`] — alias resolution + the single-read hot-swap loader (packed
+//!   in fused mode, materialized in dense mode) and the FP16
 //!   full-checkpoint baseline.
-//! * [`cache`] — LRU cache of resident variants under a byte budget,
-//!   charged in packed bytes when the store runs
-//!   [`ExecMode::Fused`](crate::exec::ExecMode).
-//! * [`server`] — dispatcher (per-variant queues, size/deadline batching)
-//!   and worker engines (native transformer over dense *or* packed weights,
-//!   or the PJRT runtime).
+//! * [`cache`] — LRU cache of resident `(variant, version)` entries under a
+//!   byte budget, charged in packed bytes when the store runs
+//!   [`ExecMode::Fused`](crate::exec::ExecMode); a publish warms the new
+//!   version while the old one ages out.
+//! * [`server`] — dispatcher (per-variant queues, size/deadline batching,
+//!   admin lane) and worker engines (native transformer over dense *or*
+//!   packed weights, or the PJRT runtime).
 //! * [`metrics`] — latency histograms, throughput, cold-start accounting,
-//!   residency gauges.
+//!   publish/rollback counters, per-version residency gauges.
 
 pub mod cache;
 pub mod metrics;
+pub mod registry;
 pub mod request;
 pub mod server;
 pub mod store;
 
-pub use cache::{Residency, VariantCache};
+pub use cache::{Residency, VariantCache, VersionResidency};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{Payload, RespBody, Response, STATS_VARIANT};
+pub use registry::{ArtifactKind, Resolved, VariantDesc, VariantRegistry, VersionRecord};
+pub use request::{
+    AdminOp, AdminResp, DataOp, Payload, RespBody, Response, ADMIN_VARIANT, STATS_VARIANT,
+};
 pub use server::{Client, Engine, Server, ServerConfig};
 pub use store::VariantStore;

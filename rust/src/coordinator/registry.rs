@@ -1,0 +1,765 @@
+//! Variant lifecycle registry: the control-plane source of truth mapping
+//! `variant` aliases to versioned artifacts (`variant@N`).
+//!
+//! The paper's premise is *frequently updated* fine-tunes; this is the piece
+//! that makes an update a first-class operation instead of a file rename:
+//!
+//! * **publish** — assign the next version number, stamp the artifact's
+//!   [`ArtifactMeta`] (version / parent / created_unix), write it as
+//!   `variant@N.pawd`, and atomically flip the alias so *new* requests
+//!   resolve to `N` while in-flight requests finish on the `Arc` of the old
+//!   version they already hold.
+//! * **rollback** — flip the alias back to the active version's parent (or
+//!   an explicit target).
+//! * **pin / unpin** — freeze the alias on one version; publishes still
+//!   record new versions but stop moving the alias until unpinned.
+//! * **retire** — mark an old version unservable (resolution of `name@N`
+//!   fails fast); the active version can never be retired.
+//!
+//! State is a JSON manifest (`registry.json`) in the artifact directory,
+//! rewritten atomically (temp file + rename) on every mutation, plus an
+//! in-memory index under a mutex. Directories that predate the registry are
+//! **adopted**: untracked delta files register under the version stamped in
+//! their header (bare pre-v2 files land at version 1), fp16 checkpoints
+//! under their `name[@N]` stem.
+//!
+//! **One process owns a registry directory at a time.** The in-memory index
+//! is authoritative between mutations and `persist` rewrites the manifest
+//! wholesale from it, so a second process (e.g. `pawd publish` against a
+//! live server's directory) would clobber the owner's state — route admin
+//! operations through the serving process's control plane
+//! ([`AdminOp`](super::request::AdminOp)) instead. Cross-process leases are
+//! a ROADMAP follow-up.
+
+use crate::delta::format::{load_delta, peek_meta, save_delta};
+use crate::delta::types::{ArtifactMeta, DeltaModel};
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Manifest file name inside the registry directory.
+pub const MANIFEST_FILE: &str = "registry.json";
+
+/// On-disk representation of one version's artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Packed PAWD delta applied onto the shared base.
+    Delta,
+    /// Full FP16 checkpoint (baseline path; only ever adopted, not published).
+    Fp16,
+}
+
+impl ArtifactKind {
+    fn label(&self) -> &'static str {
+        match self {
+            ArtifactKind::Delta => "delta",
+            ArtifactKind::Fp16 => "fp16",
+        }
+    }
+
+    fn from_label(s: &str) -> Result<ArtifactKind> {
+        Ok(match s {
+            "delta" => ArtifactKind::Delta,
+            "fp16" => ArtifactKind::Fp16,
+            other => bail!("unknown artifact kind '{other}' in manifest"),
+        })
+    }
+}
+
+/// One version in a variant's history.
+#[derive(Clone, Debug)]
+pub struct VersionRecord {
+    pub version: u32,
+    /// Version this one superseded at publish time (rollback target).
+    pub parent: Option<u32>,
+    /// Publish time, seconds since the Unix epoch (0 for adopted legacy files).
+    pub created_unix: u64,
+    /// Artifact file name, relative to the registry directory.
+    pub file: String,
+    pub kind: ArtifactKind,
+    /// Artifact size on disk.
+    pub bytes: u64,
+    /// Retired versions are unservable: `resolve("name@N")` fails fast.
+    pub retired: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+struct VariantState {
+    versions: BTreeMap<u32, VersionRecord>,
+    active: u32,
+    pinned: bool,
+    /// High-water mark of version numbers handed to in-flight publishes
+    /// (not persisted): lets a publish write its artifact outside the lock
+    /// without a concurrent publish taking the same number. A failed
+    /// publish leaves a harmless gap in the numbering.
+    reserved_max: u32,
+}
+
+/// Control-plane view of one variant (the `list` endpoint's row).
+#[derive(Clone, Debug)]
+pub struct VariantDesc {
+    pub name: String,
+    pub active: u32,
+    pub pinned: bool,
+    pub versions: Vec<VersionRecord>,
+}
+
+/// What an alias (or explicit `name@N`) resolves to.
+#[derive(Clone, Debug)]
+pub struct Resolved {
+    /// Canonical variant name (alias with any `@N` suffix stripped).
+    pub name: String,
+    pub version: u32,
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+}
+
+/// Thread-safe versioned variant registry over one artifact directory.
+pub struct VariantRegistry {
+    dir: PathBuf,
+    inner: Mutex<BTreeMap<String, VariantState>>,
+}
+
+impl VariantRegistry {
+    /// Open the registry for `dir`: load the manifest if present, then adopt
+    /// any artifact files the manifest doesn't know about. A missing
+    /// directory is an empty registry (publishing creates it).
+    pub fn open(dir: &Path) -> Result<VariantRegistry> {
+        let mut variants: BTreeMap<String, VariantState> = BTreeMap::new();
+        let manifest = dir.join(MANIFEST_FILE);
+        if manifest.exists() {
+            let text = std::fs::read_to_string(&manifest)
+                .with_context(|| format!("reading {}", manifest.display()))?;
+            variants = parse_manifest(&text)
+                .with_context(|| format!("parsing {}", manifest.display()))?;
+        }
+        // Only variants with recorded versions count as manifest-tracked;
+        // a persisted placeholder (failed publish) shouldn't pin the alias
+        // of files adopted later.
+        let tracked: std::collections::HashSet<String> = variants
+            .iter()
+            .filter(|(_, s)| !s.versions.is_empty())
+            .map(|(n, _)| n.clone())
+            .collect();
+        adopt_untracked(dir, &mut variants, &tracked)?;
+        Ok(VariantRegistry { dir: dir.to_path_buf(), inner: Mutex::new(variants) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Resolve an alias. `name` selects the variant's active version;
+    /// `name@N` selects version `N` explicitly (pinned experiments, cache
+    /// keys). Retired versions do not resolve.
+    pub fn resolve(&self, name: &str) -> Result<Resolved> {
+        let (base, explicit) = split_versioned_name(name)?;
+        let inner = self.inner.lock().unwrap();
+        let state = inner
+            .get(base)
+            .filter(|s| !s.versions.is_empty()) // placeholder from a failed publish
+            .ok_or_else(|| anyhow::anyhow!("variant '{base}' not found in {}", self.dir.display()))?;
+        let version = explicit.unwrap_or(state.active);
+        let rec = state.versions.get(&version).ok_or_else(|| {
+            anyhow::anyhow!("variant '{base}' has no version {version}")
+        })?;
+        if rec.retired {
+            bail!("variant '{base}@{version}' is retired");
+        }
+        Ok(Resolved {
+            name: base.to_string(),
+            version,
+            path: self.dir.join(&rec.file),
+            kind: rec.kind,
+        })
+    }
+
+    /// Publish `model` as the next version of `name`. Stamps the artifact
+    /// meta, writes `name@N.pawd`, records the version, and flips the alias
+    /// to `N` unless the variant is pinned. Returns the assigned version.
+    ///
+    /// The version number is *reserved* under the lock, the artifact is
+    /// serialized to a temp file and renamed into place with the lock
+    /// released (data-path resolves never wait on the multi-MB artifact
+    /// write; they can still briefly contend on the small manifest rewrite
+    /// in `persist`), and the index mutates only after the rename — a crash
+    /// mid-write leaves a stray `.tmp` file, never a live truncated version.
+    pub fn publish(&self, name: &str, mut model: DeltaModel) -> Result<u32> {
+        validate_name(name)?;
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating registry dir {}", self.dir.display()))?;
+        let (version, parent, file) = {
+            let mut inner = self.inner.lock().unwrap();
+            let state = inner.entry(name.to_string()).or_default();
+            let next = state
+                .versions
+                .keys()
+                .next_back()
+                .copied()
+                .unwrap_or(0)
+                .max(state.reserved_max)
+                + 1;
+            state.reserved_max = next;
+            // Pick a filename no existing record (e.g. an adopted mis-named
+            // copy sitting at `name@N.pawd`) and no stray disk file owns —
+            // the record, not the filename, is authoritative. Fallback names
+            // stay namespaced by the (unique, reserved) version, so two
+            // concurrent publishes can never converge on one filename.
+            let taken: std::collections::HashSet<&str> =
+                state.versions.values().map(|r| r.file.as_str()).collect();
+            let mut file = format!("{name}@{next}.pawd");
+            let mut bump = 0u32;
+            while taken.contains(file.as_str()) || self.dir.join(&file).exists() {
+                bump += 1;
+                file = format!("{name}@{next}-{bump}.pawd");
+            }
+            (next, Some(state.active).filter(|&a| a > 0), file)
+        };
+        let created_unix = unix_now();
+        model.variant = name.to_string();
+        model.meta = ArtifactMeta { version, parent, created_unix };
+        let tmp = self.dir.join(format!("{file}.tmp"));
+        let written = save_delta(&tmp, &model).and_then(|bytes| {
+            std::fs::rename(&tmp, self.dir.join(&file))
+                .with_context(|| format!("committing artifact {file}"))?;
+            Ok(bytes)
+        });
+        let bytes = match written {
+            Ok(b) => b,
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                // The `reserved_max` watermark survives, so later publishes
+                // never reuse this number. Empty placeholder entries are
+                // invisible to `resolve`/`list`/`names`.
+                return Err(e);
+            }
+        };
+        self.mutate(|index| {
+            let state = index.entry(name.to_string()).or_default();
+            state.versions.insert(
+                version,
+                VersionRecord {
+                    version,
+                    parent,
+                    created_unix,
+                    file,
+                    kind: ArtifactKind::Delta,
+                    bytes,
+                    retired: false,
+                },
+            );
+            // Concurrent publishes can commit out of order (B reserves v4
+            // and lands before A's v3): only ever move the alias forward.
+            if !state.pinned && version > state.active {
+                state.active = version;
+            }
+            Ok(version)
+        })
+    }
+
+    /// Publish an existing `.pawd` file as the next version of `name`
+    /// (loads, restamps the meta, re-serializes into the registry dir).
+    pub fn publish_file(&self, name: &str, src: &Path) -> Result<u32> {
+        let model = load_delta(src)
+            .with_context(|| format!("loading artifact to publish from {}", src.display()))?;
+        self.publish(name, model)
+    }
+
+    /// Flip the alias back: to `to` if given, else to the active version's
+    /// parent (falling back to the highest non-retired version below the
+    /// active one). Returns the version now active.
+    pub fn rollback(&self, name: &str, to: Option<u32>) -> Result<u32> {
+        self.mutate(|index| {
+            let state = state_mut(index, name)?;
+            let target = match to {
+                Some(v) => v,
+                None => {
+                    let active = state.active;
+                    let parent = state.versions.get(&active).and_then(|r| r.parent);
+                    let parent_ok = parent
+                        .and_then(|p| state.versions.get(&p))
+                        .filter(|r| !r.retired)
+                        .map(|r| r.version);
+                    match parent_ok.or_else(|| {
+                        state
+                            .versions
+                            .range(..active)
+                            .rev()
+                            .find(|(_, r)| !r.retired)
+                            .map(|(&v, _)| v)
+                    }) {
+                        Some(v) => v,
+                        None => bail!("variant '{name}' has no version to roll back to"),
+                    }
+                }
+            };
+            let rec = state
+                .versions
+                .get(&target)
+                .ok_or_else(|| anyhow::anyhow!("variant '{name}' has no version {target}"))?;
+            if rec.retired {
+                bail!("cannot roll '{name}' back to retired version {target}");
+            }
+            state.active = target;
+            Ok(target)
+        })
+    }
+
+    /// Freeze the alias on `version`: publishes keep recording new versions
+    /// but stop moving the alias until [`unpin`](Self::unpin).
+    pub fn pin(&self, name: &str, version: u32) -> Result<()> {
+        self.mutate(|index| {
+            let state = state_mut(index, name)?;
+            let rec = state
+                .versions
+                .get(&version)
+                .ok_or_else(|| anyhow::anyhow!("variant '{name}' has no version {version}"))?;
+            if rec.retired {
+                bail!("cannot pin '{name}' to retired version {version}");
+            }
+            state.active = version;
+            state.pinned = true;
+            Ok(())
+        })
+    }
+
+    /// Release a pin; the alias stays where it is and the next publish moves
+    /// it again.
+    pub fn unpin(&self, name: &str) -> Result<()> {
+        self.mutate(|index| {
+            state_mut(index, name)?.pinned = false;
+            Ok(())
+        })
+    }
+
+    /// Mark a version unservable. The active version cannot be retired —
+    /// roll back or publish first.
+    pub fn retire(&self, name: &str, version: u32) -> Result<()> {
+        self.mutate(|index| {
+            let state = state_mut(index, name)?;
+            if state.active == version {
+                bail!("refusing to retire the active version {version} of '{name}' (rollback or publish first)");
+            }
+            let rec = state
+                .versions
+                .get_mut(&version)
+                .ok_or_else(|| anyhow::anyhow!("variant '{name}' has no version {version}"))?;
+            rec.retired = true;
+            Ok(())
+        })
+    }
+
+    /// All variants with their full version histories, sorted by name.
+    /// Version-less placeholder entries (left by failed publishes to keep
+    /// their reservation watermark) are omitted.
+    pub fn list(&self) -> Vec<VariantDesc> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .iter()
+            .filter(|(_, s)| !s.versions.is_empty())
+            .map(|(name, s)| VariantDesc {
+                name: name.clone(),
+                active: s.active,
+                pinned: s.pinned,
+                versions: s.versions.values().cloned().collect(),
+            })
+            .collect()
+    }
+
+    /// Variant names only (the legacy `VariantStore::list` surface).
+    pub fn names(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .iter()
+            .filter(|(_, s)| !s.versions.is_empty())
+            .map(|(name, _)| name.clone())
+            .collect()
+    }
+
+    /// Write-ahead commit shared by every mutation: apply `f` to a copy of
+    /// the index, persist that copy, and only then swap it in. A failure in
+    /// `f` or in the manifest write leaves the live index (and therefore
+    /// what the server serves) exactly as the returned error implies, and a
+    /// restart reloads the same state.
+    fn mutate<R>(
+        &self,
+        f: impl FnOnce(&mut BTreeMap<String, VariantState>) -> Result<R>,
+    ) -> Result<R> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut next = inner.clone();
+        let out = f(&mut next)?;
+        self.persist(&next)?;
+        *inner = next;
+        Ok(out)
+    }
+
+    fn persist(&self, variants: &BTreeMap<String, VariantState>) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        let tmp = self.dir.join(format!("{MANIFEST_FILE}.tmp"));
+        std::fs::write(&tmp, render_manifest(variants).to_string())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, self.dir.join(MANIFEST_FILE))
+            .with_context(|| "committing registry manifest")?;
+        Ok(())
+    }
+}
+
+fn state_mut<'a>(
+    inner: &'a mut BTreeMap<String, VariantState>,
+    name: &str,
+) -> Result<&'a mut VariantState> {
+    inner
+        .get_mut(name)
+        .ok_or_else(|| anyhow::anyhow!("variant '{name}' not found in registry"))
+}
+
+fn validate_name(name: &str) -> Result<()> {
+    if name.is_empty() {
+        bail!("variant name must not be empty");
+    }
+    if name.contains('@') || name.contains('/') || name.starts_with("__") {
+        bail!("variant name '{name}' is invalid ('@', '/' and the '__' prefix are reserved)");
+    }
+    Ok(())
+}
+
+/// Split `name[@version]`. An explicit `@0` or non-numeric suffix is an error.
+fn split_versioned_name(name: &str) -> Result<(&str, Option<u32>)> {
+    match name.rsplit_once('@') {
+        None => Ok((name, None)),
+        Some((base, v)) => {
+            let version: u32 = v
+                .parse()
+                .ok()
+                .filter(|&v| v > 0)
+                .ok_or_else(|| anyhow::anyhow!("bad version suffix in '{name}'"))?;
+            Ok((base, Some(version)))
+        }
+    }
+}
+
+fn unix_now() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
+}
+
+/// Register artifact files the manifest doesn't cover. Delta files are
+/// adopted under the version **stamped in their header** (`peek_meta` — the
+/// filename is not trusted, so a mis-named copy cannot flip the alias to a
+/// version the loader would then refuse); fp16 checkpoints carry no meta
+/// and use their `name[@N]` stem (default 1). Never overwrites a manifest
+/// entry; `.pawd` wins over a co-named `.fp16` at the same version. For
+/// variants the manifest already `tracked`, adopted files are addressable
+/// (`name@N`) but never move the alias — a stray file must not override a
+/// persisted rollback or a crashed publish's manifest state.
+fn adopt_untracked(
+    dir: &Path,
+    variants: &mut BTreeMap<String, VariantState>,
+    tracked: &std::collections::HashSet<String>,
+) -> Result<()> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(()), // missing dir = empty registry
+    };
+    // Files the manifest already references are skipped by name, before any
+    // header peek — reopening a healthy registry stays one directory scan.
+    let tracked_files: std::collections::HashSet<String> = variants
+        .values()
+        .flat_map(|s| s.versions.values().map(|r| r.file.clone()))
+        .collect();
+    let mut files: Vec<(String, ArtifactKind, String, u64, PathBuf)> = Vec::new();
+    for entry in entries {
+        let p = entry?.path();
+        let kind = match p.extension().and_then(|e| e.to_str()) {
+            Some("pawd") => ArtifactKind::Delta,
+            Some("fp16") => ArtifactKind::Fp16,
+            _ => continue,
+        };
+        let Some(stem) = p.file_stem().and_then(|s| s.to_str()) else { continue };
+        let Some(file) = p.file_name().and_then(|s| s.to_str()) else { continue };
+        if tracked_files.contains(file) {
+            continue;
+        }
+        let bytes = std::fs::metadata(&p).map(|m| m.len()).unwrap_or(0);
+        files.push((stem.to_string(), kind, file.to_string(), bytes, p));
+    }
+    // Deltas first so a co-named fp16 can't claim the version slot.
+    files.sort_by_key(|(_, kind, ..)| matches!(kind, ArtifactKind::Fp16));
+    for (stem, kind, file, bytes, path) in files {
+        let (name, version) = match (kind, split_versioned_name(&stem)) {
+            (ArtifactKind::Delta, Ok((n, _))) => match peek_meta(&path) {
+                Ok(meta) => (n.to_string(), meta.version),
+                Err(_) => continue, // unreadable header: leave untracked
+            },
+            (ArtifactKind::Fp16, Ok((n, v))) => (n.to_string(), v.unwrap_or(1)),
+            // '@' is reserved for version suffixes: a stem like
+            // `model@final` can't be addressed through `resolve`, so
+            // adopting it would only create an unreachable entry. Leave the
+            // file untracked (rename it to drop the '@' to serve it).
+            (_, Err(_)) => continue,
+        };
+        let manifest_tracked = tracked.contains(&name);
+        let state = variants.entry(name).or_default();
+        if state.versions.contains_key(&version) {
+            continue; // manifest (or a delta) already owns this slot
+        }
+        state.versions.insert(
+            version,
+            VersionRecord {
+                version,
+                parent: None,
+                created_unix: 0,
+                file,
+                kind,
+                bytes,
+                retired: false,
+            },
+        );
+        if !manifest_tracked && (state.active == 0 || version > state.active) {
+            state.active = version;
+        }
+    }
+    Ok(())
+}
+
+// -- manifest (de)serialization -------------------------------------------
+
+fn render_manifest(variants: &BTreeMap<String, VariantState>) -> Json {
+    let vs = variants
+        .iter()
+        .map(|(name, s)| {
+            let versions = s
+                .versions
+                .values()
+                .map(|r| {
+                    json::obj(vec![
+                        ("version", json::n(r.version as f64)),
+                        ("parent", json::n(r.parent.unwrap_or(0) as f64)),
+                        ("created_unix", json::n(r.created_unix as f64)),
+                        ("file", json::s(&r.file)),
+                        ("kind", json::s(r.kind.label())),
+                        ("bytes", json::n(r.bytes as f64)),
+                        ("retired", Json::Bool(r.retired)),
+                    ])
+                })
+                .collect();
+            (
+                name.as_str(),
+                json::obj(vec![
+                    ("active", json::n(s.active as f64)),
+                    ("pinned", Json::Bool(s.pinned)),
+                    ("versions", json::arr(versions)),
+                ]),
+            )
+        })
+        .collect::<Vec<_>>();
+    json::obj(vec![("format", json::n(1.0)), ("variants", json::obj(vs))])
+}
+
+fn parse_manifest(text: &str) -> Result<BTreeMap<String, VariantState>> {
+    let j = Json::parse(text)?;
+    let format = j.req_usize("format")?;
+    if format != 1 {
+        bail!("unsupported registry manifest format {format}");
+    }
+    let mut out = BTreeMap::new();
+    for (name, v) in j.req("variants")?.as_obj().context("'variants' is not an object")? {
+        let mut state = VariantState {
+            versions: BTreeMap::new(),
+            active: v.req_usize("active")? as u32,
+            pinned: v.req("pinned")?.as_bool().context("'pinned' is not a bool")?,
+            reserved_max: 0,
+        };
+        for rv in v.req_arr("versions")? {
+            let version = rv.req_usize("version")? as u32;
+            let parent = rv.req_usize("parent")? as u32;
+            state.versions.insert(
+                version,
+                VersionRecord {
+                    version,
+                    parent: if parent == 0 { None } else { Some(parent) },
+                    created_unix: rv.req_usize("created_unix")? as u64,
+                    file: rv.req_str("file")?.to_string(),
+                    kind: ArtifactKind::from_label(rv.req_str("kind")?)?,
+                    bytes: rv.req_usize("bytes")? as u64,
+                    retired: rv.req("retired")?.as_bool().context("'retired' is not a bool")?,
+                },
+            );
+        }
+        if version_state_invalid(&state) {
+            bail!("manifest entry '{name}' is inconsistent (active version missing or retired)");
+        }
+        out.insert(name.clone(), state);
+    }
+    Ok(out)
+}
+
+fn version_state_invalid(s: &VariantState) -> bool {
+    match s.versions.get(&s.active) {
+        Some(rec) => rec.retired,
+        None => !s.versions.is_empty(), // empty histories get fixed by adoption
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::pack::PackedMask;
+    use crate::delta::types::{Axis, DeltaModule};
+    use crate::model::{ModuleId, ProjKind};
+
+    fn tiny_model(variant: &str) -> DeltaModel {
+        let d = vec![1.0f32; 8 * 8];
+        DeltaModel {
+            variant: variant.into(),
+            base_config: "tiny".into(),
+            meta: Default::default(),
+            modules: vec![DeltaModule {
+                id: ModuleId { layer: 0, kind: ProjKind::Q },
+                mask: PackedMask::pack(&d, 8, 8),
+                axis: Axis::Row,
+                scales: vec![0.1; 8],
+            }],
+        }
+    }
+
+    fn fresh_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn publish_assigns_versions_and_flips_alias() {
+        let dir = fresh_dir("pawd_test_reg1");
+        let reg = VariantRegistry::open(&dir).unwrap();
+        assert_eq!(reg.publish("ft", tiny_model("ft")).unwrap(), 1);
+        assert_eq!(reg.publish("ft", tiny_model("ft")).unwrap(), 2);
+        let r = reg.resolve("ft").unwrap();
+        assert_eq!((r.version, r.name.as_str()), (2, "ft"));
+        assert!(r.path.ends_with("ft@2.pawd"));
+        // Explicit addressing still reaches the old version.
+        assert_eq!(reg.resolve("ft@1").unwrap().version, 1);
+        // The published artifact carries its stamped lineage.
+        let m = load_delta(&r.path).unwrap();
+        assert_eq!(m.meta.version, 2);
+        assert_eq!(m.meta.parent, Some(1));
+        assert!(m.meta.created_unix > 0);
+    }
+
+    #[test]
+    fn rollback_restores_parent_and_retire_guards() {
+        let dir = fresh_dir("pawd_test_reg2");
+        let reg = VariantRegistry::open(&dir).unwrap();
+        reg.publish("ft", tiny_model("ft")).unwrap();
+        reg.publish("ft", tiny_model("ft")).unwrap();
+        assert!(reg.retire("ft", 2).is_err(), "active version must not retire");
+        assert_eq!(reg.rollback("ft", None).unwrap(), 1);
+        assert_eq!(reg.resolve("ft").unwrap().version, 1);
+        reg.retire("ft", 2).unwrap();
+        assert!(reg.resolve("ft@2").is_err(), "retired versions must not resolve");
+        assert!(reg.rollback("ft", Some(2)).is_err(), "cannot roll onto retired");
+        // Publishing after a rollback continues the numbering past the max.
+        assert_eq!(reg.publish("ft", tiny_model("ft")).unwrap(), 3);
+        assert_eq!(reg.resolve("ft").unwrap().version, 3);
+    }
+
+    #[test]
+    fn pin_freezes_alias_across_publish() {
+        let dir = fresh_dir("pawd_test_reg3");
+        let reg = VariantRegistry::open(&dir).unwrap();
+        reg.publish("ft", tiny_model("ft")).unwrap();
+        reg.pin("ft", 1).unwrap();
+        assert_eq!(reg.publish("ft", tiny_model("ft")).unwrap(), 2);
+        assert_eq!(reg.resolve("ft").unwrap().version, 1, "pinned alias must not move");
+        reg.unpin("ft").unwrap();
+        assert_eq!(reg.resolve("ft").unwrap().version, 1, "unpin alone does not move the alias");
+        assert_eq!(reg.publish("ft", tiny_model("ft")).unwrap(), 3);
+        assert_eq!(reg.resolve("ft").unwrap().version, 3);
+    }
+
+    #[test]
+    fn manifest_survives_reopen() {
+        let dir = fresh_dir("pawd_test_reg4");
+        {
+            let reg = VariantRegistry::open(&dir).unwrap();
+            reg.publish("a", tiny_model("a")).unwrap();
+            reg.publish("a", tiny_model("a")).unwrap();
+            reg.rollback("a", None).unwrap();
+            reg.publish("b", tiny_model("b")).unwrap();
+            reg.pin("b", 1).unwrap();
+        }
+        let reg = VariantRegistry::open(&dir).unwrap();
+        assert_eq!(reg.resolve("a").unwrap().version, 1);
+        assert_eq!(reg.resolve("a@2").unwrap().version, 2);
+        let descs = reg.list();
+        assert_eq!(descs.len(), 2);
+        assert!(descs[1].pinned);
+        assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn adopts_legacy_directory_layout() {
+        let dir = fresh_dir("pawd_test_reg5");
+        std::fs::create_dir_all(&dir).unwrap();
+        // A pre-registry directory: bare v1-style names, no manifest.
+        save_delta(dir.join("old.pawd"), &tiny_model("old")).unwrap();
+        std::fs::write(dir.join("ckpt.fp16"), b"not parsed during adoption").unwrap();
+        let reg = VariantRegistry::open(&dir).unwrap();
+        let r = reg.resolve("old").unwrap();
+        assert_eq!((r.version, r.kind), (1, ArtifactKind::Delta));
+        assert_eq!(reg.resolve("ckpt").unwrap().kind, ArtifactKind::Fp16);
+        // Publishing on top of an adopted variant continues at version 2.
+        assert_eq!(reg.publish("old", tiny_model("old")).unwrap(), 2);
+        assert_eq!(reg.resolve("old").unwrap().version, 2);
+    }
+
+    #[test]
+    fn adoption_trusts_embedded_version_over_filename() {
+        let dir = fresh_dir("pawd_test_reg8");
+        std::fs::create_dir_all(&dir).unwrap();
+        // A default-stamped artifact (meta.version = 1) mis-named as @3 —
+        // e.g. a hand-copied file. The filename must not win: the loader
+        // would refuse a version-3 resolution of a version-1 artifact.
+        save_delta(dir.join("ft@3.pawd"), &tiny_model("ft")).unwrap();
+        let reg = VariantRegistry::open(&dir).unwrap();
+        let r = reg.resolve("ft").unwrap();
+        assert_eq!(r.version, 1, "embedded meta version wins over the filename");
+        assert!(r.path.ends_with("ft@3.pawd"));
+        assert_eq!(load_delta(&r.path).unwrap().meta.version, 1);
+        // Publishing up to version 3 must not clobber the mis-named file
+        // that backs version 1: the filename picker detours around it.
+        assert_eq!(reg.publish("ft", tiny_model("ft")).unwrap(), 2);
+        assert_eq!(reg.publish("ft", tiny_model("ft")).unwrap(), 3);
+        let v3 = reg.resolve("ft@3").unwrap();
+        assert!(v3.path.ends_with("ft@3-1.pawd"), "got {}", v3.path.display());
+        assert_eq!(load_delta(&v3.path).unwrap().meta.version, 3);
+        // v1 still loads from the untouched original file.
+        let v1 = reg.resolve("ft@1").unwrap();
+        assert_eq!(load_delta(&v1.path).unwrap().meta.version, 1);
+    }
+
+    #[test]
+    fn bad_names_and_versions_rejected() {
+        let dir = fresh_dir("pawd_test_reg6");
+        let reg = VariantRegistry::open(&dir).unwrap();
+        assert!(reg.publish("has@at", tiny_model("x")).is_err());
+        assert!(reg.publish("__stats__", tiny_model("x")).is_err());
+        assert!(reg.publish("", tiny_model("x")).is_err());
+        reg.publish("ok", tiny_model("ok")).unwrap();
+        assert!(reg.resolve("ok@0").is_err());
+        assert!(reg.resolve("ok@nope").is_err());
+        assert!(reg.resolve("ok@9").is_err());
+        assert!(reg.resolve("ghost").is_err());
+    }
+
+    #[test]
+    fn corrupt_manifest_is_an_error() {
+        let dir = fresh_dir("pawd_test_reg7");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(MANIFEST_FILE), "{not json").unwrap();
+        assert!(VariantRegistry::open(&dir).is_err());
+    }
+}

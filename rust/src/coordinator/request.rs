@@ -1,31 +1,100 @@
 //! Request/response types for the multi-variant serving coordinator.
+//!
+//! The payload is split into two planes:
+//!
+//! * [`Payload::Data`] — inference work routed through the per-variant
+//!   queues, the batcher and a worker engine.
+//! * [`Payload::Admin`] — control-plane operations ([`AdminOp`]) answered by
+//!   a worker **without touching an engine**: stats, and the variant
+//!   lifecycle (publish / rollback / pin / retire / list) executed against
+//!   the registry behind the cache.
 
 use super::metrics::MetricsSnapshot;
+use super::registry::VariantDesc;
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-/// Pseudo-variant name that routes a request to the stats endpoint instead
-/// of a model (see `Client::stats`).
+/// Deprecated pseudo-variant name: before the admin plane existed, stats
+/// probes were smuggled through the data path by submitting to this name.
+/// Requests addressed to it are still answered (as [`AdminOp::Stats`]), but
+/// new code should use [`Payload::Admin`] / `Client::stats`.
 pub const STATS_VARIANT: &str = "__stats__";
+
+/// Pseudo-variant name admin requests are queued under (admin ops carry
+/// their target variant, if any, inside the op).
+pub const ADMIN_VARIANT: &str = "__admin__";
 
 /// What a client asks of a variant.
 #[derive(Clone, Debug)]
 pub enum Payload {
+    /// Inference against the request's variant (engine path).
+    Data(DataOp),
+    /// Control-plane operation (no engine; answered from registry/metrics).
+    Admin(AdminOp),
+}
+
+impl Payload {
+    /// Convenience constructor for a score request.
+    pub fn score(prompt: &str, choices: &[String]) -> Payload {
+        Payload::Data(DataOp::Score { prompt: prompt.to_string(), choices: choices.to_vec() })
+    }
+
+    /// Convenience constructor for a perplexity request.
+    pub fn perplexity(text: &str) -> Payload {
+        Payload::Data(DataOp::Perplexity { text: text.to_string() })
+    }
+}
+
+/// Inference operations (the engine path).
+#[derive(Clone, Debug)]
+pub enum DataOp {
     /// Rank `choices` as completions of `prompt` by log-likelihood
     /// (the zero-shot MC scoring primitive).
     Score { prompt: String, choices: Vec<String> },
     /// Per-token cross entropy of `text` (perplexity probes, health checks).
     Perplexity { text: String },
-    /// Server metrics + cache residency gauges (submit to
-    /// [`STATS_VARIANT`]; answered by a worker without touching an engine).
+}
+
+/// Control-plane operations (no engine involved).
+#[derive(Clone, Debug)]
+pub enum AdminOp {
+    /// Server metrics + cache residency gauges.
     Stats,
+    /// Publish the `.pawd` artifact at `artifact` as the next version of
+    /// `variant` and flip the alias (unless pinned). The new version is
+    /// warmed into the cache before the response is sent.
+    Publish { variant: String, artifact: PathBuf },
+    /// Flip the alias back to `to` (or the active version's parent).
+    Rollback { variant: String, to: Option<u32> },
+    /// Freeze the alias on `version` until unpinned.
+    Pin { variant: String, version: u32 },
+    /// Release a pin (the alias stays put until the next publish).
+    Unpin { variant: String },
+    /// Mark `version` unservable (must not be the active version).
+    Retire { variant: String, version: u32 },
+    /// List all variants with their version histories.
+    List,
 }
 
 #[derive(Clone, Debug)]
 pub enum RespBody {
     Score { choice: usize, scores: Vec<f64> },
     Perplexity { nats_per_token: f64 },
-    Stats { snapshot: MetricsSnapshot },
+    Admin(AdminResp),
+}
+
+/// Control-plane responses, mirroring [`AdminOp`].
+#[derive(Clone, Debug)]
+pub enum AdminResp {
+    /// Boxed: the snapshot dwarfs every other variant.
+    Stats { snapshot: Box<MetricsSnapshot> },
+    Published { variant: String, version: u32 },
+    RolledBack { variant: String, version: u32 },
+    Pinned { variant: String, version: u32 },
+    Unpinned { variant: String },
+    Retired { variant: String, version: u32 },
+    Variants { variants: Vec<VariantDesc> },
 }
 
 /// Timing breakdown a response carries back (drives the latency
@@ -55,6 +124,9 @@ pub struct Request {
 pub struct Response {
     pub id: u64,
     pub variant: String,
+    /// Registry version that served a data request (`None` for admin
+    /// responses and failures before version resolution).
+    pub version: Option<u32>,
     pub result: Result<RespBody, String>,
     pub timing: Timing,
 }

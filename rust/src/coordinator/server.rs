@@ -1,5 +1,7 @@
 //! The serving coordinator: ingress → per-variant queues → dynamic batcher
-//! → worker engines over the LRU variant cache.
+//! → worker engines over the LRU variant cache — plus the **admin lane**,
+//! which answers control-plane operations (stats, publish, rollback, pin,
+//! retire, list) without touching an engine.
 //!
 //! Thread topology (no async runtime available offline; this is plain
 //! threads + channels, which for a CPU-bound engine is also the faster
@@ -8,12 +10,21 @@
 //! ```text
 //! clients --mpsc--> dispatcher ----work queue----> worker 0..N-1
 //!                    (per-variant queues,           (variant cache get,
-//!                     size/deadline batching)        score batch, reply)
+//!                     size/deadline batching;        score batch, reply;
+//!                     admin ops bypass batching)     admin ops -> registry)
 //! ```
+//!
+//! Publishing through the admin lane is the live-update path: the registry
+//! flips the alias atomically, the publishing worker warms the new version
+//! into the cache, and data requests already holding the old version's `Arc`
+//! finish undisturbed while the old entry ages out of the LRU.
 
 use super::cache::VariantCache;
 use super::metrics::Metrics;
-use super::request::{Payload, Request, RespBody, Response, Timing, STATS_VARIANT};
+use super::request::{
+    AdminOp, AdminResp, DataOp, Payload, Request, RespBody, Response, Timing, ADMIN_VARIANT,
+    STATS_VARIANT,
+};
 use super::store::VariantStore;
 use crate::data::corpus::encode;
 use crate::exec::{ExecMode, VariantWeights};
@@ -24,6 +35,7 @@ use crate::util::par;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::collections::VecDeque;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -101,30 +113,66 @@ impl Client {
 
     /// Blocking convenience: score choices on a variant.
     pub fn score(&self, variant: &str, prompt: &str, choices: &[String]) -> Response {
-        let rx = self.submit(
-            variant,
-            Payload::Score { prompt: prompt.to_string(), choices: choices.to_vec() },
-        );
+        let rx = self.submit(variant, Payload::score(prompt, choices));
         rx.recv().unwrap_or(Response {
             id: 0,
             variant: variant.into(),
+            version: None,
             result: Err("server terminated".into()),
             timing: Timing::default(),
         })
+    }
+
+    /// Blocking convenience: run one control-plane operation.
+    pub fn admin(&self, op: AdminOp) -> Result<AdminResp, String> {
+        let rx = self.submit(ADMIN_VARIANT, Payload::Admin(op));
+        match rx.recv() {
+            Ok(resp) => match resp.result {
+                Ok(RespBody::Admin(a)) => Ok(a),
+                Ok(other) => Err(format!("unexpected admin response {other:?}")),
+                Err(e) => Err(e),
+            },
+            Err(_) => Err("server terminated".into()),
+        }
     }
 
     /// Blocking convenience: fetch server metrics + residency gauges
     /// through the request path (useful for remote/ops probes; in-process
     /// callers can also read `Server::metrics` directly).
     pub fn stats(&self) -> Result<super::metrics::MetricsSnapshot, String> {
-        let rx = self.submit(STATS_VARIANT, Payload::Stats);
-        match rx.recv() {
-            Ok(resp) => match resp.result {
-                Ok(RespBody::Stats { snapshot }) => Ok(snapshot),
-                Ok(other) => Err(format!("unexpected stats response {other:?}")),
-                Err(e) => Err(e),
-            },
-            Err(_) => Err("server terminated".into()),
+        match self.admin(AdminOp::Stats)? {
+            AdminResp::Stats { snapshot } => Ok(*snapshot),
+            other => Err(format!("unexpected stats response {other:?}")),
+        }
+    }
+
+    /// Publish `artifact` as the next version of `variant`; returns the
+    /// assigned version once the alias has flipped and the new version has
+    /// been warmed into the cache.
+    pub fn publish(&self, variant: &str, artifact: &Path) -> Result<u32, String> {
+        match self.admin(AdminOp::Publish {
+            variant: variant.to_string(),
+            artifact: artifact.to_path_buf(),
+        })? {
+            AdminResp::Published { version, .. } => Ok(version),
+            other => Err(format!("unexpected publish response {other:?}")),
+        }
+    }
+
+    /// Roll `variant` back to `to` (or its active version's parent);
+    /// returns the version now active.
+    pub fn rollback(&self, variant: &str, to: Option<u32>) -> Result<u32, String> {
+        match self.admin(AdminOp::Rollback { variant: variant.to_string(), to })? {
+            AdminResp::RolledBack { version, .. } => Ok(version),
+            other => Err(format!("unexpected rollback response {other:?}")),
+        }
+    }
+
+    /// List all variants with their version histories.
+    pub fn variants(&self) -> Result<Vec<super::registry::VariantDesc>, String> {
+        match self.admin(AdminOp::List)? {
+            AdminResp::Variants { variants } => Ok(variants),
+            other => Err(format!("unexpected list response {other:?}")),
         }
     }
 }
@@ -205,7 +253,23 @@ fn dispatcher_loop(
         // Pull with a small timeout so deadline flushes happen on time.
         match ingress.recv_timeout(Duration::from_micros(500)) {
             Ok(Ingress::Req(req)) => {
-                queues.entry(req.variant.clone()).or_default().push_back(req);
+                // Admin ops (and anything aimed at the deprecated stats
+                // pseudo-variant) bypass batching: they never touch an
+                // engine, so making them wait behind a batch deadline would
+                // only delay alias flips.
+                let admin = matches!(req.payload, Payload::Admin(_))
+                    || req.variant == STATS_VARIANT
+                    || req.variant == ADMIN_VARIANT;
+                if admin {
+                    if work
+                        .send(Batch { variant: ADMIN_VARIANT.into(), requests: vec![req] })
+                        .is_err()
+                    {
+                        return; // workers gone
+                    }
+                } else {
+                    queues.entry(req.variant.clone()).or_default().push_back(req);
+                }
             }
             Ok(Ingress::Shutdown) => open = false,
             Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -221,11 +285,7 @@ fn dispatcher_loop(
             while q.len() >= cfg.max_batch || (due && !q.is_empty()) || (!open && !q.is_empty()) {
                 let take = q.len().min(cfg.max_batch);
                 let requests: Vec<Request> = q.drain(..take).collect();
-                if variant != STATS_VARIANT {
-                    // Stats probes skip the engine; keep them out of the
-                    // batching statistics.
-                    metrics.record_batch(requests.len());
-                }
+                metrics.record_batch(requests.len());
                 if work.send(Batch { variant: variant.clone(), requests }).is_err() {
                     return; // workers gone
                 }
@@ -246,9 +306,9 @@ fn worker_loop(
 ) {
     // One Transformer per worker (RoPE tables etc.) for the native engine.
     let tf = Transformer::new(cache.base().cfg());
-    // Which variant this worker last executed — a change is a hot swap
-    // (with packed residency: an Arc clone, no materialize/revert pass).
-    let mut last_variant: Option<String> = None;
+    // Which variant version this worker last executed — a change is a hot
+    // swap (with packed residency: an Arc clone, no materialize/revert pass).
+    let mut last_variant: Option<(String, u32)> = None;
     loop {
         let batch = {
             let rx = work.lock().unwrap();
@@ -258,25 +318,27 @@ fn worker_loop(
             }
         };
         let batch_start = Instant::now();
-        if batch.variant == STATS_VARIANT {
-            metrics.set_residency(cache.residency());
-            let snapshot = metrics.snapshot();
+        if batch.variant == ADMIN_VARIANT {
             for req in batch.requests {
+                let result = match &req.payload {
+                    Payload::Admin(op) => run_admin(op, &cache, &metrics).map(RespBody::Admin),
+                    // Data ops can only land here via the deprecated
+                    // pseudo-variant names; reject them instead of answering
+                    // with a surprise body.
+                    Payload::Data(_) => Err(format!(
+                        "variant name '{}' is reserved for control-plane probes",
+                        req.variant
+                    )),
+                };
                 let timing = Timing {
                     queue: batch_start.duration_since(req.submitted),
                     total: req.submitted.elapsed(),
                     ..Default::default()
                 };
-                // Only Payload::Stats is valid here: the name is reserved,
-                // so a Score/Perplexity sent to it is a caller bug — reject
-                // it instead of answering with a surprise body.
-                let result = match req.payload {
-                    Payload::Stats => Ok(RespBody::Stats { snapshot: snapshot.clone() }),
-                    _ => Err(format!("variant name '{STATS_VARIANT}' is reserved for stats probes")),
-                };
                 let _ = req.resp.send(Response {
                     id: req.id,
                     variant: req.variant.clone(),
+                    version: None,
                     result,
                     timing,
                 });
@@ -297,6 +359,7 @@ fn worker_loop(
                     let _ = req.resp.send(Response {
                         id: req.id,
                         variant: req.variant.clone(),
+                        version: None,
                         result: Err(msg.clone()),
                         timing,
                     });
@@ -304,16 +367,23 @@ fn worker_loop(
                 continue;
             }
         };
+        let version = weights.version();
         if let Some(c) = cold {
             metrics.record_cold_start(c);
         }
-        if last_variant.as_deref() != Some(batch.variant.as_str()) {
+        let changed = match &last_variant {
+            Some((n, v)) => n != &batch.variant || *v != version,
+            None => true,
+        };
+        if changed {
             if last_variant.is_some() {
                 metrics.record_swap();
             }
-            last_variant = Some(batch.variant.clone());
+            last_variant = Some((batch.variant.clone(), version));
         }
-        metrics.set_residency(cache.residency());
+        // Per-batch gauge update sticks to the O(1) totals; the per-version
+        // breakdown is only materialized when a stats probe asks for it.
+        metrics.set_residency(cache.residency_totals());
         let compute_start = Instant::now();
         let results = score_batch(&engine, &tf, &weights, &batch.requests);
         let compute = compute_start.elapsed();
@@ -325,10 +395,72 @@ fn worker_loop(
             let _ = req.resp.send(Response {
                 id: req.id,
                 variant: req.variant.clone(),
+                version: Some(version),
                 result,
                 timing,
             });
         }
+    }
+}
+
+/// Execute one control-plane operation against the registry/cache/metrics —
+/// no engine, no variant queue.
+fn run_admin(
+    op: &AdminOp,
+    cache: &VariantCache,
+    metrics: &Metrics,
+) -> Result<AdminResp, String> {
+    let registry = cache.store().registry();
+    match op {
+        AdminOp::Stats => {
+            // One lock acquisition for gauge + snapshot, so a concurrent
+            // worker's totals-only update can't blank the per-version
+            // breakdown in the response.
+            let snapshot = metrics.snapshot_with_residency(cache.residency());
+            Ok(AdminResp::Stats { snapshot: Box::new(snapshot) })
+        }
+        AdminOp::Publish { variant, artifact } => {
+            let delta = Arc::new(
+                crate::delta::format::load_delta(artifact)
+                    .map_err(|e| format!("unreadable artifact: {e}"))?,
+            );
+            // Validate config + per-module shapes against the resident base
+            // BEFORE the alias flips — a wrong-base or mis-shaped delta must
+            // not brick the variant.
+            crate::exec::PackedVariant::new(cache.base(), delta.clone())
+                .map_err(|e| format!("artifact rejected: {e}"))?;
+            let delta = Arc::try_unwrap(delta).unwrap_or_else(|arc| (*arc).clone());
+            let version = registry.publish(variant, delta).map_err(|e| e.to_string())?;
+            metrics.record_publish();
+            // Warm the new version so the first data request after the flip
+            // hits a resident entry; its load time is charged as a cold
+            // start here, on the control plane.
+            match cache.get(&format!("{variant}@{version}")) {
+                Ok((_, Some(d))) => metrics.record_cold_start(d),
+                Ok((_, None)) => {}
+                Err(e) => return Err(format!("published v{version} but warming failed: {e}")),
+            }
+            metrics.set_residency(cache.residency());
+            Ok(AdminResp::Published { variant: variant.clone(), version })
+        }
+        AdminOp::Rollback { variant, to } => {
+            let version = registry.rollback(variant, *to).map_err(|e| e.to_string())?;
+            metrics.record_rollback();
+            Ok(AdminResp::RolledBack { variant: variant.clone(), version })
+        }
+        AdminOp::Pin { variant, version } => {
+            registry.pin(variant, *version).map_err(|e| e.to_string())?;
+            Ok(AdminResp::Pinned { variant: variant.clone(), version: *version })
+        }
+        AdminOp::Unpin { variant } => {
+            registry.unpin(variant).map_err(|e| e.to_string())?;
+            Ok(AdminResp::Unpinned { variant: variant.clone() })
+        }
+        AdminOp::Retire { variant, version } => {
+            registry.retire(variant, *version).map_err(|e| e.to_string())?;
+            Ok(AdminResp::Retired { variant: variant.clone(), version: *version })
+        }
+        AdminOp::List => Ok(AdminResp::Variants { variants: registry.list() }),
     }
 }
 
@@ -367,8 +499,12 @@ fn score_one_native(
     weights: &VariantWeights,
     payload: &Payload,
 ) -> Result<RespBody, String> {
-    match payload {
-        Payload::Score { prompt, choices } => {
+    let op = match payload {
+        Payload::Data(op) => op,
+        Payload::Admin(_) => return Err("admin requests must not reach an engine".into()),
+    };
+    match op {
+        DataOp::Score { prompt, choices } => {
             let mut scores = Vec::with_capacity(choices.len());
             for choice in choices {
                 let full = clamp(encode(&format!("{prompt}{choice}")), tf.cfg.max_seq);
@@ -382,14 +518,13 @@ fn score_one_native(
             let choice = argmax_f64(&scores);
             Ok(RespBody::Score { choice, scores })
         }
-        Payload::Perplexity { text } => {
+        DataOp::Perplexity { text } => {
             let tokens = clamp(encode(text), tf.cfg.max_seq);
             if tokens.len() < 2 {
                 return Err("text too short".into());
             }
             Ok(RespBody::Perplexity { nats_per_token: tf.cross_entropy(weights, &tokens) })
         }
-        Payload::Stats => Err("stats requests must target the stats variant".into()),
     }
 }
 
@@ -399,8 +534,12 @@ fn score_one_xla(
     params: &crate::model::FlatParams,
     payload: &Payload,
 ) -> Result<RespBody, String> {
-    match payload {
-        Payload::Score { prompt, choices } => {
+    let op = match payload {
+        Payload::Data(op) => op,
+        Payload::Admin(_) => return Err("admin requests must not reach an engine".into()),
+    };
+    match op {
+        DataOp::Score { prompt, choices } => {
             // One batched forward over all choice continuations.
             let max_seq = handle
                 .manifest()
@@ -429,7 +568,7 @@ fn score_one_xla(
             let choice = argmax_f64(&scores);
             Ok(RespBody::Score { choice, scores })
         }
-        Payload::Perplexity { text } => {
+        DataOp::Perplexity { text } => {
             let max_seq = handle
                 .manifest()
                 .fwd_buckets(config)
@@ -451,7 +590,6 @@ fn score_one_xla(
             }
             Ok(RespBody::Perplexity { nats_per_token: -total / (tokens.len() - 1) as f64 })
         }
-        Payload::Stats => Err("stats requests must target the stats variant".into()),
     }
 }
 

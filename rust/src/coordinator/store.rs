@@ -1,9 +1,8 @@
-//! Variant store: the on-disk registry of compressed deltas (and FP16 full
-//! checkpoints for the baseline path) plus the hot-swap loader.
+//! Variant store: the loader side of the versioned registry — resolve a
+//! variant alias (or explicit `name@N`) through [`VariantRegistry`], read the
+//! artifact with **one sequential read**, and produce executable weights.
 //!
-//! This is the paper's loader: a variant is loaded by **one sequential
-//! read** of its PAWD artifact. What happens next depends on the store's
-//! [`ExecMode`]:
+//! What happens after the read depends on the store's [`ExecMode`]:
 //!
 //! * [`ExecMode::Fused`] (default for native serving) — the packed delta is
 //!   validated against the resident base and kept packed; the returned
@@ -14,6 +13,7 @@
 //!   one fused apply per module (required by the XLA engine, and the
 //!   baseline side of the dense-vs-fused A/B).
 
+use super::registry::{ArtifactKind, Resolved, VariantRegistry};
 use crate::delta::apply::apply_deltas_inplace;
 use crate::delta::format::load_delta;
 use crate::exec::{ExecMode, PackedVariant, VariantWeights};
@@ -27,16 +27,16 @@ use std::time::{Duration, Instant};
 /// How a variant is stored on disk.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum VariantSource {
-    /// `<dir>/<name>.pawd` applied onto the shared base (the paper's path).
+    /// A PAWD delta artifact applied onto the shared base (the paper's path).
     Delta(PathBuf),
-    /// `<dir>/<name>.fp16` full checkpoint (baseline path).
+    /// A full FP16 checkpoint (baseline path).
     Fp16(PathBuf),
 }
 
 #[derive(Clone)]
 pub struct VariantStore {
     pub base: Arc<FlatParams>,
-    dir: PathBuf,
+    registry: Arc<VariantRegistry>,
     mode: ExecMode,
 }
 
@@ -44,6 +44,8 @@ pub struct VariantStore {
 pub struct LoadedVariant {
     pub weights: VariantWeights,
     pub source: VariantSource,
+    /// Version the alias resolved to (== `weights.version()`).
+    pub version: u32,
     pub load_time: Duration,
     /// Bytes read from disk for this load.
     pub bytes_read: u64,
@@ -59,9 +61,21 @@ impl LoadedVariant {
 }
 
 impl VariantStore {
-    /// A store that materializes deltas on load (the original behavior).
+    /// Open the registry for `dir` and build a store that materializes
+    /// deltas on load (dense mode — the original behavior).
+    pub fn open(base: Arc<FlatParams>, dir: &Path) -> Result<VariantStore> {
+        Ok(VariantStore {
+            base,
+            registry: Arc::new(VariantRegistry::open(dir)?),
+            mode: ExecMode::Dense,
+        })
+    }
+
+    /// [`open`](Self::open) that panics on a corrupt registry manifest —
+    /// kept because store construction predates the registry and most
+    /// callers (tests, benches, examples) have no error path to thread.
     pub fn new(base: Arc<FlatParams>, dir: &Path) -> VariantStore {
-        VariantStore { base, dir: dir.to_path_buf(), mode: ExecMode::Dense }
+        Self::open(base, dir).expect("opening variant registry")
     }
 
     /// Builder: choose how delta variants execute.
@@ -79,37 +93,47 @@ impl VariantStore {
     }
 
     pub fn dir(&self) -> &Path {
-        &self.dir
+        self.registry.dir()
     }
 
-    /// Locate a variant on disk: prefer the delta artifact, fall back to a
-    /// full FP16 checkpoint.
-    pub fn locate(&self, name: &str) -> Result<VariantSource> {
-        let delta = self.dir.join(format!("{name}.pawd"));
-        if delta.exists() {
-            return Ok(VariantSource::Delta(delta));
-        }
-        let fp16 = self.dir.join(format!("{name}.fp16"));
-        if fp16.exists() {
-            return Ok(VariantSource::Fp16(fp16));
-        }
-        bail!("variant '{name}' not found in {}", self.dir.display());
+    /// The lifecycle registry behind this store (publish/rollback/… live
+    /// there; the server's admin plane calls straight through).
+    pub fn registry(&self) -> &Arc<VariantRegistry> {
+        &self.registry
     }
 
-    /// Load a variant (the cold-start path under measurement).
+    /// Load a variant (the cold-start path under measurement). `name` may be
+    /// a bare alias (active version) or `name@N`.
     pub fn load(&self, name: &str) -> Result<LoadedVariant> {
-        let source = self.locate(name)?;
+        let resolved = self.registry.resolve(name)?;
+        self.load_resolved(&resolved)
+    }
+
+    /// Load an already-resolved version (the cache uses this so the version
+    /// it keyed on is exactly the one loaded, even if a publish lands in
+    /// between).
+    pub fn load_resolved(&self, resolved: &Resolved) -> Result<LoadedVariant> {
+        let name = &resolved.name;
         let t0 = Instant::now();
-        let (weights, bytes_read) = match &source {
-            VariantSource::Delta(path) => {
-                let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
-                let delta = load_delta(path)
-                    .with_context(|| format!("loading delta for '{name}'"))?;
+        let bytes_read = std::fs::metadata(&resolved.path).map(|m| m.len()).unwrap_or(0);
+        let (weights, source) = match resolved.kind {
+            ArtifactKind::Delta => {
+                let delta = load_delta(&resolved.path)
+                    .with_context(|| format!("loading delta for '{name}@{}'", resolved.version))?;
                 if delta.base_config != self.base.cfg().name {
                     bail!(
                         "delta '{name}' targets base '{}', store has '{}'",
                         delta.base_config,
                         self.base.cfg().name
+                    );
+                }
+                if delta.meta.version != resolved.version {
+                    bail!(
+                        "artifact {} carries version {} but the registry resolved '{name}@{}' \
+                         (manifest and file out of sync)",
+                        resolved.path.display(),
+                        delta.meta.version,
+                        resolved.version
                     );
                 }
                 let weights = match self.mode {
@@ -126,37 +150,35 @@ impl VariantStore {
                         // module.
                         let mut p = (*self.base).clone();
                         apply_deltas_inplace(&mut p, &delta.modules);
-                        VariantWeights::Dense(Arc::new(p))
+                        VariantWeights::Dense(Arc::new(p), resolved.version)
                     }
                 };
-                (weights, bytes)
+                (weights, VariantSource::Delta(resolved.path.clone()))
             }
-            VariantSource::Fp16(path) => {
-                let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
-                let p = load_fp16(path).with_context(|| format!("loading fp16 '{name}'"))?;
+            ArtifactKind::Fp16 => {
+                let p = load_fp16(&resolved.path)
+                    .with_context(|| format!("loading fp16 '{name}'"))?;
                 if p.cfg() != self.base.cfg() {
                     bail!("fp16 checkpoint '{name}' config mismatch");
                 }
-                (VariantWeights::Dense(Arc::new(p)), bytes)
+                (
+                    VariantWeights::Dense(Arc::new(p), resolved.version),
+                    VariantSource::Fp16(resolved.path.clone()),
+                )
             }
         };
-        Ok(LoadedVariant { weights, source, load_time: t0.elapsed(), bytes_read })
+        Ok(LoadedVariant {
+            weights,
+            source,
+            version: resolved.version,
+            load_time: t0.elapsed(),
+            bytes_read,
+        })
     }
 
-    /// List variant names available on disk (deduped across formats).
+    /// List variant names known to the registry.
     pub fn list(&self) -> Result<Vec<String>> {
-        let mut names = std::collections::BTreeSet::new();
-        for entry in std::fs::read_dir(&self.dir)? {
-            let p = entry?.path();
-            if let Some(ext) = p.extension().and_then(|e| e.to_str()) {
-                if ext == "pawd" || ext == "fp16" {
-                    if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
-                        names.insert(stem.to_string());
-                    }
-                }
-            }
-        }
-        Ok(names.into_iter().collect())
+        Ok(self.registry.names())
     }
 }
 
@@ -192,6 +214,8 @@ mod tests {
 
         let va = store.load("va").unwrap();
         assert!(matches!(va.source, VariantSource::Delta(_)));
+        assert_eq!(va.version, 1, "adopted legacy artifact is version 1");
+        assert_eq!(va.weights.version(), 1);
         assert!(va.bytes_read > 0);
         assert_ne!(va.params().data, base.data);
 
@@ -238,5 +262,26 @@ mod tests {
         // FP16 checkpoints are always dense, whatever the mode.
         let vb = fused_store.load("vb").unwrap();
         assert!(!vb.weights.is_packed());
+    }
+
+    #[test]
+    fn publish_flips_what_the_bare_alias_loads() {
+        let dir = std::env::temp_dir().join("pawd_test_store4");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (base, ft) = setup(&dir);
+        let store = VariantStore::new(base.clone(), &dir).with_mode(ExecMode::Fused);
+        assert_eq!(store.load("va").unwrap().version, 1);
+        // Publish a second version with different content.
+        let docs: Vec<Vec<u8>> = (0..3).map(|i| vec![(i + 50) as u8; 24]).collect();
+        let opts = CompressOptions { fit: FitMode::ClosedForm, ..Default::default() };
+        let (delta2, _, _) = compress_model("va", &base, &ft, &docs, &opts);
+        let v2 = store.registry().publish("va", delta2).unwrap();
+        assert_eq!(v2, 2);
+        let loaded = store.load("va").unwrap();
+        assert_eq!((loaded.version, loaded.weights.version()), (2, 2));
+        // Old version stays addressable; rollback restores it as the alias.
+        assert_eq!(store.load("va@1").unwrap().version, 1);
+        store.registry().rollback("va", None).unwrap();
+        assert_eq!(store.load("va").unwrap().version, 1);
     }
 }

@@ -187,7 +187,12 @@ pub fn compress_model(
         }
     }
     (
-        DeltaModel { variant: variant.to_string(), base_config: cfg.name.clone(), modules },
+        DeltaModel {
+            variant: variant.to_string(),
+            base_config: cfg.name.clone(),
+            meta: Default::default(),
+            modules,
+        },
         reports,
         student,
     )

@@ -8,50 +8,61 @@
 //! packed end-to-end; the dense `Ŵ` only ever exists in the destination
 //! buffer.
 //!
-//! Layout (little-endian):
+//! Format **v2** layout (little-endian):
 //! ```text
-//! magic "PAWDELTA" | version u32 | variant str | base_config str |
+//! magic "PAWDELTA" | format u32 (=2) | variant str | base_config str |
+//! version u32 | parent u32 (0 = none) | created_unix u64 |
 //! n_modules u32 |
 //!   per module: name str | d_out u32 | d_in u32 | axis u8 | group u32 |
 //!               n_scales u32 | scales (n_scales × f16) |
 //!               mask (d_out · ceil(d_in/32) × u32) | crc32 u32
+//! file_crc u32
 //! ```
-//! Strings are `u32 length + bytes`. Each record's crc covers its header
-//! and payload, so corruption is detected per module.
+//! Strings are `u32 length + bytes`. Each record's crc covers its header and
+//! payload, so corruption is localized to a module; `file_crc` covers every
+//! byte before it, so header tampering (e.g. a rewritten version field) is
+//! also detected.
+//!
+//! The `version / parent / created_unix` triple is the variant-lifecycle
+//! metadata consumed by the coordinator's
+//! [`VariantRegistry`](crate::coordinator::VariantRegistry): `version` is the
+//! artifact's position in its variant's history (`variant@version`), `parent`
+//! the version it superseded (the rollback target).
+//!
+//! **v1** artifacts (no meta triple, no file crc) are still read: the loader
+//! dispatches on the format word and fills the default [`ArtifactMeta`].
 
 use super::pack::PackedMask;
-use super::types::{Axis, DeltaModel, DeltaModule};
+use super::types::{ArtifactMeta, Axis, DeltaModel, DeltaModule};
 use crate::model::ModuleId;
+use crate::util::crc32;
 use crate::util::f16::{decode_f16_slice, encode_f16_slice};
 use anyhow::{bail, Context, Result};
 use std::io::Write;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"PAWDELTA";
-const VERSION: u32 = 1;
+/// Current writer format. Readers accept `1..=VERSION`.
+const VERSION: u32 = 2;
 
-/// Serialize a delta model. Returns the file size in bytes.
+/// Serialize a delta model (always format v2). Returns the file size in
+/// bytes. The model's [`ArtifactMeta`] is written verbatim — the registry
+/// stamps it before publishing; standalone saves keep the default.
 pub fn save_delta<P: AsRef<Path>>(path: P, model: &DeltaModel) -> Result<u64> {
     let mut buf: Vec<u8> = Vec::with_capacity(model.payload_bytes() as usize + 4096);
     buf.extend_from_slice(MAGIC);
     buf.extend_from_slice(&VERSION.to_le_bytes());
     put_str(&mut buf, &model.variant);
     put_str(&mut buf, &model.base_config);
+    buf.extend_from_slice(&model.meta.version.to_le_bytes());
+    buf.extend_from_slice(&model.meta.parent.unwrap_or(0).to_le_bytes());
+    buf.extend_from_slice(&model.meta.created_unix.to_le_bytes());
     buf.extend_from_slice(&(model.modules.len() as u32).to_le_bytes());
     for m in &model.modules {
-        let rec_start = buf.len();
-        put_str(&mut buf, &m.id.to_string());
-        buf.extend_from_slice(&(m.d_out() as u32).to_le_bytes());
-        buf.extend_from_slice(&(m.d_in() as u32).to_le_bytes());
-        buf.push(m.axis.code());
-        let group = if let Axis::Group(g) = m.axis { g } else { 0 };
-        buf.extend_from_slice(&group.to_le_bytes());
-        buf.extend_from_slice(&(m.scales.len() as u32).to_le_bytes());
-        buf.extend_from_slice(&encode_f16_slice(&m.scales));
-        buf.extend_from_slice(&m.mask.to_bytes());
-        let crc = crc32fast::hash(&buf[rec_start..]);
-        buf.extend_from_slice(&crc.to_le_bytes());
+        write_module_record(&mut buf, m);
     }
+    let file_crc = crc32::hash(&buf);
+    buf.extend_from_slice(&file_crc.to_le_bytes());
     let mut f = std::fs::File::create(&path)
         .with_context(|| format!("creating {}", path.as_ref().display()))?;
     f.write_all(&buf)?;
@@ -67,19 +78,10 @@ pub fn load_delta<P: AsRef<Path>>(path: P) -> Result<DeltaModel> {
 }
 
 /// Parse a delta model from an in-memory buffer (separated from `load_delta`
-/// so benches can isolate disk vs decode time).
+/// so benches can isolate disk vs decode time). Accepts formats v1 and v2.
 pub fn parse_delta(bytes: &[u8]) -> Result<DeltaModel> {
     let mut r = Reader { b: bytes, i: 0 };
-    let magic = r.take(8)?;
-    if magic != MAGIC {
-        bail!("bad magic: not a PAWDELTA artifact");
-    }
-    let version = r.u32()?;
-    if version != VERSION {
-        bail!("unsupported delta version {version}");
-    }
-    let variant = r.str()?;
-    let base_config = r.str()?;
+    let (variant, base_config, meta, format) = parse_header(&mut r)?;
     let n_modules = r.u32()? as usize;
     let mut modules = Vec::with_capacity(n_modules);
     for _ in 0..n_modules {
@@ -99,22 +101,106 @@ pub fn parse_delta(bytes: &[u8]) -> Result<DeltaModel> {
         let scales = decode_f16_slice(r.take(n_scales * 2)?);
         let mask_bytes = d_out * PackedMask::words_per_row_for(d_in) * 4;
         let mask = PackedMask::from_bytes(d_out, d_in, r.take(mask_bytes)?)?;
-        let crc_stored = {
-            let rec_end = r.i;
-            let crc = r.u32()?;
-            let computed = crc32fast::hash(&bytes[rec_start..rec_end]);
-            if crc != computed {
-                bail!("crc mismatch in module record '{name}' (corrupt artifact)");
-            }
-            crc
-        };
-        let _ = crc_stored;
+        let rec_end = r.i;
+        if r.u32()? != crc32::hash(&bytes[rec_start..rec_end]) {
+            bail!("crc mismatch in module record '{name}' (corrupt artifact)");
+        }
         modules.push(DeltaModule { id, mask, axis, scales });
+    }
+    if format >= 2 {
+        let body_end = r.i;
+        if r.u32()? != crc32::hash(&bytes[..body_end]) {
+            bail!("whole-artifact crc mismatch (corrupt or tampered header)");
+        }
     }
     if r.i != bytes.len() {
         bail!("trailing bytes after last module record");
     }
-    Ok(DeltaModel { variant, base_config, modules })
+    Ok(DeltaModel { variant, base_config, meta, modules })
+}
+
+/// Read just the artifact header of the file at `path` — magic, format,
+/// names, lifecycle meta — without decoding module records. The registry
+/// uses this to adopt untracked files under their *embedded* version (the
+/// filename is not trusted; a mis-named copy must not brick the alias).
+/// Only a bounded prefix is read from disk, so adopting a directory of
+/// multi-MB artifacts stays cheap.
+pub fn peek_meta<P: AsRef<Path>>(path: P) -> Result<ArtifactMeta> {
+    use std::io::Read;
+    // magic + format + two length-prefixed names + meta triple; 64 KiB is
+    // orders of magnitude beyond any real header.
+    const MAX_HEADER_BYTES: u64 = 64 * 1024;
+    let f = std::fs::File::open(&path)
+        .with_context(|| format!("reading delta artifact {}", path.as_ref().display()))?;
+    let mut bytes = Vec::with_capacity(4096);
+    f.take(MAX_HEADER_BYTES).read_to_end(&mut bytes)?;
+    let mut r = Reader { b: &bytes, i: 0 };
+    let (_, _, meta, _) = parse_header(&mut r)?;
+    Ok(meta)
+}
+
+/// Shared header parse: magic, format word, variant/base names, meta triple
+/// (defaulted for v1). Leaves the reader positioned at `n_modules`.
+fn parse_header(r: &mut Reader<'_>) -> Result<(String, String, ArtifactMeta, u32)> {
+    let magic = r.take(8)?;
+    if magic != MAGIC {
+        bail!("bad magic: not a PAWDELTA artifact");
+    }
+    let format = r.u32()?;
+    if format == 0 || format > VERSION {
+        bail!("unsupported delta format {format} (this build reads 1..={VERSION})");
+    }
+    let variant = r.str()?;
+    let base_config = r.str()?;
+    let meta = if format >= 2 {
+        let version = r.u32()?;
+        if version == 0 {
+            bail!("artifact version 0 is invalid (versions start at 1)");
+        }
+        let parent_raw = r.u32()?;
+        let created_unix = r.u64()?;
+        ArtifactMeta {
+            version,
+            parent: if parent_raw == 0 { None } else { Some(parent_raw) },
+            created_unix,
+        }
+    } else {
+        ArtifactMeta::default()
+    };
+    Ok((variant, base_config, meta, format))
+}
+
+/// Serialize `model` in the **v1** layout (no meta triple, no file crc)
+/// exactly as the PR-1 writer emitted it. Only used to produce back-compat
+/// fixtures for tests — the production writer always emits v2.
+pub fn save_delta_v1_bytes(model: &DeltaModel) -> Vec<u8> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&1u32.to_le_bytes());
+    put_str(&mut buf, &model.variant);
+    put_str(&mut buf, &model.base_config);
+    buf.extend_from_slice(&(model.modules.len() as u32).to_le_bytes());
+    for m in &model.modules {
+        write_module_record(&mut buf, m);
+    }
+    buf
+}
+
+/// One contiguous module record (header, f16 scales, packed mask, record
+/// crc) — byte-identical in formats v1 and v2.
+fn write_module_record(buf: &mut Vec<u8>, m: &DeltaModule) {
+    let rec_start = buf.len();
+    put_str(buf, &m.id.to_string());
+    buf.extend_from_slice(&(m.d_out() as u32).to_le_bytes());
+    buf.extend_from_slice(&(m.d_in() as u32).to_le_bytes());
+    buf.push(m.axis.code());
+    let group = if let Axis::Group(g) = m.axis { g } else { 0 };
+    buf.extend_from_slice(&group.to_le_bytes());
+    buf.extend_from_slice(&(m.scales.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&encode_f16_slice(&m.scales));
+    buf.extend_from_slice(&m.mask.to_bytes());
+    let crc = crc32::hash(&buf[rec_start..]);
+    buf.extend_from_slice(&crc.to_le_bytes());
 }
 
 fn put_str(buf: &mut Vec<u8>, s: &str) {
@@ -144,6 +230,11 @@ impl<'a> Reader<'a> {
     fn u32(&mut self) -> Result<u32> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
     fn str(&mut self) -> Result<String> {
@@ -177,7 +268,12 @@ mod tests {
             let scales: Vec<f32> = (0..n).map(|_| rng.uniform_in(0.01, 0.5)).collect();
             modules.push(DeltaModule { id: ModuleId { layer, kind }, mask, axis, scales });
         }
-        DeltaModel { variant: "ft-a".into(), base_config: "tiny".into(), modules }
+        DeltaModel {
+            variant: "ft-a".into(),
+            base_config: "tiny".into(),
+            meta: ArtifactMeta { version: 3, parent: Some(2), created_unix: 1_753_000_000 },
+            modules,
+        }
     }
 
     fn tmp(name: &str) -> std::path::PathBuf {
@@ -195,6 +291,7 @@ mod tests {
         let loaded = load_delta(&p).unwrap();
         assert_eq!(loaded.variant, model.variant);
         assert_eq!(loaded.base_config, model.base_config);
+        assert_eq!(loaded.meta, model.meta);
         assert_eq!(loaded.modules.len(), model.modules.len());
         for (a, b) in loaded.modules.iter().zip(&model.modules) {
             assert_eq!(a.id, b.id);
@@ -204,6 +301,54 @@ mod tests {
                 assert!((x - y).abs() <= 5e-4 * y.abs().max(1e-3), "{x} vs {y}");
             }
         }
+    }
+
+    #[test]
+    fn v1_artifacts_load_with_default_meta() {
+        // Golden v1 bytes: written by the historical layout, read by the v2
+        // loader. Module payloads must survive; meta defaults to version 1.
+        let model = sample_model();
+        let v1 = save_delta_v1_bytes(&model);
+        let loaded = parse_delta(&v1).unwrap();
+        assert_eq!(loaded.variant, model.variant);
+        assert_eq!(loaded.base_config, model.base_config);
+        assert_eq!(loaded.meta, ArtifactMeta::default());
+        assert_eq!(loaded.modules.len(), model.modules.len());
+        for (a, b) in loaded.modules.iter().zip(&model.modules) {
+            assert_eq!((a.id, a.axis, &a.mask), (b.id, b.axis, &b.mask));
+        }
+    }
+
+    #[test]
+    fn v1_fixed_golden_prefix_is_stable() {
+        // The bytes of a module-less v1 artifact are fully determined by the
+        // header fields; pin them so an accidental layout change to the
+        // legacy writer (and thus the compat reader) cannot slip through.
+        let model = DeltaModel {
+            variant: "v".into(),
+            base_config: "c".into(),
+            meta: ArtifactMeta::default(),
+            modules: vec![],
+        };
+        let bytes = save_delta_v1_bytes(&model);
+        let golden: &[u8] = &[
+            b'P', b'A', b'W', b'D', b'E', b'L', b'T', b'A', // magic
+            1, 0, 0, 0, // format = 1
+            1, 0, 0, 0, b'v', // variant
+            1, 0, 0, 0, b'c', // base_config
+            0, 0, 0, 0, // n_modules = 0
+        ];
+        assert_eq!(bytes, golden);
+        assert!(parse_delta(&bytes).is_ok());
+    }
+
+    #[test]
+    fn meta_parent_zero_roundtrips_as_none() {
+        let mut model = sample_model();
+        model.meta = ArtifactMeta { version: 1, parent: None, created_unix: 7 };
+        let p = tmp("meta_none.pawd");
+        save_delta(&p, &model).unwrap();
+        assert_eq!(load_delta(&p).unwrap().meta, model.meta);
     }
 
     #[test]
@@ -217,6 +362,20 @@ mod tests {
         bytes[mid] ^= 0x10;
         let err = parse_delta(&bytes).unwrap_err().to_string();
         assert!(err.contains("crc") || err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn header_tampering_is_detected_by_file_crc() {
+        let model = sample_model();
+        let p = tmp("tamper.pawd");
+        save_delta(&p, &model).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // The version field sits right after magic+format+strings; rewrite it
+        // (record crcs don't cover the header, the file crc must catch it).
+        let version_off = 8 + 4 + (4 + model.variant.len()) + (4 + model.base_config.len());
+        bytes[version_off] ^= 0x04;
+        let err = parse_delta(&bytes).unwrap_err().to_string();
+        assert!(err.contains("whole-artifact crc"), "{err}");
     }
 
     #[test]
@@ -250,5 +409,16 @@ mod tests {
     fn garbage_rejected() {
         assert!(parse_delta(b"garbage").is_err());
         assert!(parse_delta(b"").is_err());
+    }
+
+    #[test]
+    fn future_format_rejected() {
+        let model = sample_model();
+        let p = tmp("future.pawd");
+        save_delta(&p, &model).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[8] = 99; // format word
+        let err = parse_delta(&bytes).unwrap_err().to_string();
+        assert!(err.contains("unsupported delta format"), "{err}");
     }
 }

@@ -2,7 +2,7 @@
 //! (row/column) FP16 scales.
 //!
 //! * [`pack`] — sign extraction + bit packing (1 bit along the input axis).
-//! * [`types`] — [`Axis`], [`DeltaModule`], [`DeltaModel`].
+//! * [`types`] — [`Axis`], [`DeltaModule`], [`DeltaModel`], [`ArtifactMeta`].
 //! * [`calibrate`] — activation-aware scale fitting (AdamW per the paper,
 //!   plus exact closed-form — the objective is quadratic in `v`).
 //! * [`cache`] — calibration (X, Y) caches via forward taps (Alg. 3).
@@ -24,4 +24,4 @@ pub mod types;
 
 pub use compress::{compress_model, compress_module, CompressOptions, FitMode, ModuleReport};
 pub use pack::PackedMask;
-pub use types::{Axis, DeltaModel, DeltaModule};
+pub use types::{ArtifactMeta, Axis, DeltaModel, DeltaModule};

@@ -104,6 +104,28 @@ impl DeltaModule {
     }
 }
 
+/// Lifecycle metadata carried by format-v2 artifacts: where a delta sits in
+/// its variant's version history. V1 artifacts (and in-memory models built
+/// by the compressor before publication) use the `Default` value; the
+/// registry stamps real values at publish time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    /// Version of the variant this artifact is (`variant@version`). Versions
+    /// start at 1; the registry assigns them monotonically per variant.
+    pub version: u32,
+    /// Version this delta was published to supersede (rollback target).
+    pub parent: Option<u32>,
+    /// Publish wall-clock time, seconds since the Unix epoch (0 = unknown,
+    /// e.g. a v1 artifact adopted from a pre-registry directory).
+    pub created_unix: u64,
+}
+
+impl Default for ArtifactMeta {
+    fn default() -> ArtifactMeta {
+        ArtifactMeta { version: 1, parent: None, created_unix: 0 }
+    }
+}
+
 /// Whole-model compressed delta (one fine-tuned variant).
 #[derive(Clone, Debug)]
 pub struct DeltaModel {
@@ -111,6 +133,8 @@ pub struct DeltaModel {
     pub variant: String,
     /// Base model config name (the delta only applies on that base).
     pub base_config: String,
+    /// Version/lineage metadata (format v2; defaulted for v1 artifacts).
+    pub meta: ArtifactMeta,
     pub modules: Vec<DeltaModule>,
 }
 

@@ -167,12 +167,17 @@ impl Weights for PackedVariant {
     }
 }
 
-/// What the variant cache stores and workers execute against.
+/// What the variant cache stores and workers execute against. Every value
+/// carries its **version identity**: the registry version the weights were
+/// loaded as (`variant@version`), so a response can report which version
+/// served it and the cache can key residency per version.
 #[derive(Clone)]
 pub enum VariantWeights {
-    /// Fully materialized parameters (dense mode, FP16 checkpoints).
-    Dense(Arc<FlatParams>),
-    /// Shared base + packed delta (fused mode).
+    /// Fully materialized parameters (dense mode, FP16 checkpoints), tagged
+    /// with the registry version they were resolved as.
+    Dense(Arc<FlatParams>, u32),
+    /// Shared base + packed delta (fused mode); the version rides in the
+    /// delta's [`ArtifactMeta`](crate::delta::ArtifactMeta).
     Packed(PackedVariant),
 }
 
@@ -181,10 +186,18 @@ impl VariantWeights {
         matches!(self, VariantWeights::Packed(_))
     }
 
+    /// Registry version these weights are (`variant@version`).
+    pub fn version(&self) -> u32 {
+        match self {
+            VariantWeights::Dense(_, v) => *v,
+            VariantWeights::Packed(pv) => pv.delta().meta.version,
+        }
+    }
+
     /// Bytes this variant charges against the cache budget.
     pub fn resident_bytes(&self) -> u64 {
         match self {
-            VariantWeights::Dense(p) => (p.data.len() * 4) as u64,
+            VariantWeights::Dense(p, _) => (p.data.len() * 4) as u64,
             VariantWeights::Packed(pv) => pv.resident_bytes(),
         }
     }
@@ -193,7 +206,7 @@ impl VariantWeights {
     /// denominator of the residency-multiplier gauge.
     pub fn dense_equiv_bytes(&self) -> u64 {
         match self {
-            VariantWeights::Dense(p) => (p.data.len() * 4) as u64,
+            VariantWeights::Dense(p, _) => (p.data.len() * 4) as u64,
             VariantWeights::Packed(pv) => (pv.base().data.len() * 4) as u64,
         }
     }
@@ -202,7 +215,7 @@ impl VariantWeights {
     /// XLA engine and ground-truth comparisons need this).
     pub fn materialized(&self) -> Arc<FlatParams> {
         match self {
-            VariantWeights::Dense(p) => p.clone(),
+            VariantWeights::Dense(p, _) => p.clone(),
             VariantWeights::Packed(pv) => Arc::new(pv.materialize()),
         }
     }
@@ -211,14 +224,14 @@ impl VariantWeights {
 impl Weights for VariantWeights {
     fn flat(&self) -> &FlatParams {
         match self {
-            VariantWeights::Dense(p) => p,
+            VariantWeights::Dense(p, _) => p,
             VariantWeights::Packed(pv) => pv.flat(),
         }
     }
 
     fn op(&self, id: ModuleId) -> AnyLinear<'_> {
         match self {
-            VariantWeights::Dense(p) => p.op(id),
+            VariantWeights::Dense(p, _) => p.op(id),
             VariantWeights::Packed(pv) => pv.op(id),
         }
     }
@@ -252,6 +265,7 @@ mod tests {
         let delta = Arc::new(DeltaModel {
             variant: "t".into(),
             base_config: cfg.name.clone(),
+            meta: Default::default(),
             modules,
         });
         let pv = PackedVariant::new(base.clone(), delta).unwrap();
@@ -300,6 +314,7 @@ mod tests {
         let delta = DeltaModel {
             variant: "x".into(),
             base_config: "not-a-config".into(),
+            meta: Default::default(),
             modules: pv.delta().modules.clone(),
         };
         assert!(PackedVariant::new(base, Arc::new(delta)).is_err());

@@ -21,7 +21,14 @@ USAGE:
   pawd apply <base.fp16> <delta.pawd> <out.fp16> materialize a variant checkpoint
   pawd serve <base.fp16> <variant_dir>           start the serving coordinator (demo loop)
   pawd bench-load <base.fp16> <variant_dir> <n>  time cold loads of every variant n times
+  pawd publish <variant_dir> <name> <delta.pawd> publish the next version of a variant
+  pawd rollback <variant_dir> <name> [version]   flip a variant's alias back
+  pawd versions <variant_dir>                    list variants + version histories
   pawd presets                                   list model config presets
+
+publish/rollback/versions administer a variant directory OFFLINE — one
+process owns a registry dir at a time, so never point them at a directory a
+running `pawd serve` owns (use the server's admin client instead).
 
 Artifacts are built with `make artifacts`; examples/ and benches/ cover the
 paper's experiments (see DESIGN.md / EXPERIMENTS.md).";
@@ -34,6 +41,9 @@ fn main() -> Result<()> {
         Some("apply") => cmd_apply(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("bench-load") => cmd_bench_load(&args[1..]),
+        Some("publish") => cmd_publish(&args[1..]),
+        Some("rollback") => cmd_rollback(&args[1..]),
+        Some("versions") => cmd_versions(&args[1..]),
         Some("presets") => {
             for p in ["tiny", "llama-mini", "qwen-mini", "phi-mini", "base-110m"] {
                 let c = ModelConfig::preset(p).unwrap();
@@ -111,7 +121,7 @@ fn cmd_apply(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     let base = Arc::new(load_fp16(args.first().context("missing <base.fp16>")?)?);
     let dir = PathBuf::from(args.get(1).context("missing <variant_dir>")?);
-    let store = VariantStore::new(base, &dir);
+    let store = VariantStore::open(base, &dir)?;
     let names = store.list()?;
     println!("serving {} variants from {}: {:?}", names.len(), dir.display(), names);
     let server = Server::start(store, Engine::Native, ServerConfig::default());
@@ -128,11 +138,52 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_publish(args: &[String]) -> Result<()> {
+    let dir = PathBuf::from(args.first().context("missing <variant_dir>")?);
+    let name = args.get(1).context("missing <name>")?;
+    let artifact = PathBuf::from(args.get(2).context("missing <delta.pawd>")?);
+    let registry = pawd::coordinator::VariantRegistry::open(&dir)?;
+    let version = registry.publish_file(name, &artifact)?;
+    println!("published {name}@{version} into {}", dir.display());
+    Ok(())
+}
+
+fn cmd_rollback(args: &[String]) -> Result<()> {
+    let dir = PathBuf::from(args.first().context("missing <variant_dir>")?);
+    let name = args.get(1).context("missing <name>")?;
+    let to: Option<u32> = args.get(2).map(|s| s.parse()).transpose()?;
+    let registry = pawd::coordinator::VariantRegistry::open(&dir)?;
+    let version = registry.rollback(name, to)?;
+    println!("{name} now serves version {version}");
+    Ok(())
+}
+
+fn cmd_versions(args: &[String]) -> Result<()> {
+    let dir = PathBuf::from(args.first().context("missing <variant_dir>")?);
+    let registry = pawd::coordinator::VariantRegistry::open(&dir)?;
+    for d in registry.list() {
+        let pin = if d.pinned { " (pinned)" } else { "" };
+        println!("{}: active v{}{}", d.name, d.active, pin);
+        for v in &d.versions {
+            println!(
+                "  v{:<3} {:<22} {:>10}  parent {}  {}{}",
+                v.version,
+                v.file,
+                fmt_bytes(v.bytes),
+                v.parent.map_or("-".to_string(), |p| format!("v{p}")),
+                if v.created_unix > 0 { format!("t={}", v.created_unix) } else { "adopted".into() },
+                if v.retired { "  [retired]" } else { "" },
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_bench_load(args: &[String]) -> Result<()> {
     let base = Arc::new(load_fp16(args.first().context("missing <base.fp16>")?)?);
     let dir = PathBuf::from(args.get(1).context("missing <variant_dir>")?);
     let n: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(10);
-    let store = VariantStore::new(base, &dir);
+    let store = VariantStore::open(base, &dir)?;
     for name in store.list()? {
         let mut times = Vec::new();
         for _ in 0..n {

@@ -22,7 +22,7 @@ pub fn save_fp16<P: AsRef<Path>>(path: P, params: &FlatParams) -> Result<u64> {
     for &x in &params.data {
         payload.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
     }
-    let crc = crc32fast::hash(&payload);
+    let crc = crate::util::crc32::hash(&payload);
 
     let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
     f.write_all(MAGIC)?;
@@ -74,7 +74,7 @@ pub fn load_fp16<P: AsRef<Path>>(path: P) -> Result<FlatParams> {
     }
     let (payload, tail) = r.split_at(n * 2);
     let stored_crc = u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]]);
-    if crc32fast::hash(payload) != stored_crc {
+    if crate::util::crc32::hash(payload) != stored_crc {
         bail!("checkpoint crc mismatch (corrupt file)");
     }
     let mut params = FlatParams::zeros(&cfg);

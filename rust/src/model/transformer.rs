@@ -415,8 +415,12 @@ mod tests {
                 scales: (0..n).map(|_| r.uniform_in(0.005, 0.05)).collect(),
             });
         }
-        let delta =
-            DeltaModel { variant: "pv".into(), base_config: cfg.name.clone(), modules };
+        let delta = DeltaModel {
+            variant: "pv".into(),
+            base_config: cfg.name.clone(),
+            meta: Default::default(),
+            modules,
+        };
         let pv = PackedVariant::new(base.clone(), Arc::new(delta)).unwrap();
         let dense = pv.materialize();
 

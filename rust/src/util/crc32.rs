@@ -1,0 +1,55 @@
+//! CRC-32 (IEEE 802.3, reflected, init/xorout `0xFFFF_FFFF`) — the checksum
+//! used by zlib/gzip and the `crc32fast` crate, re-implemented because the
+//! build environment is offline. Table-driven, one byte per step; artifact
+//! files are read once at cold start, so this is nowhere near a hot path.
+
+const POLY: u32 = 0xEDB8_8320;
+
+const TABLE: [u32; 256] = build_table();
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut n = 0;
+    while n < 256 {
+        let mut c = n as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { POLY ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[n] = c;
+        n += 1;
+    }
+    table
+}
+
+/// CRC-32 of `bytes` (drop-in for `crc32fast::hash`).
+pub fn hash(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Reference values from the CRC-32/ISO-HDLC check suite.
+        assert_eq!(hash(b""), 0);
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn sensitive_to_single_bit_flips() {
+        let mut data = vec![0u8; 512];
+        data[37] = 0x55;
+        let a = hash(&data);
+        data[400] ^= 0x01;
+        assert_ne!(a, hash(&data));
+    }
+}

@@ -2,10 +2,11 @@
 //! stats/benchmarking, and the property-test harness.
 //!
 //! These exist because the build environment is offline (see DESIGN.md):
-//! `rand`, `half`, `serde_json`, `rayon`, `criterion` and `proptest` are
-//! re-implemented here at the scale this project needs.
+//! `rand`, `half`, `serde_json`, `rayon`, `criterion`, `proptest` and
+//! `crc32fast` are re-implemented here at the scale this project needs.
 
 pub mod benchkit;
+pub mod crc32;
 pub mod f16;
 pub mod json;
 pub mod par;

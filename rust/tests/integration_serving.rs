@@ -139,10 +139,7 @@ fn batches_form_and_cold_start_is_recorded() {
         .map(|i| {
             client.submit(
                 "var0",
-                Payload::Score {
-                    prompt: format!("Q: item {i}? A: "),
-                    choices: vec!["yes".into(), "no".into()],
-                },
+                Payload::score(&format!("Q: item {i}? A: "), &["yes".into(), "no".into()]),
             )
         })
         .collect();
@@ -210,7 +207,7 @@ fn perplexity_requests_work() {
     let (_base, store) = setup_store(&dir, 1);
     let server = Server::start(store, Engine::Native, ServerConfig::default());
     let client = server.client();
-    let rx = client.submit("var0", Payload::Perplexity { text: "the mill by the river turns all day.".into() });
+    let rx = client.submit("var0", Payload::perplexity("the mill by the river turns all day."));
     match rx.recv().unwrap().result {
         Ok(RespBody::Perplexity { nats_per_token }) => {
             assert!(nats_per_token > 0.0 && nats_per_token < 10.0);
@@ -281,7 +278,7 @@ fn fused_mode_holds_whole_fleet_in_one_dense_budget() {
     let stats = server.cache.stats();
     assert_eq!(stats.evictions, 0, "packed fleet must fit the dense-single budget");
     assert_eq!(stats.misses, 3, "each variant cold-loads exactly once");
-    assert_eq!(server.cache.resident().len(), 3);
+    assert_eq!(server.cache.resident_names().len(), 3);
     server.shutdown();
 }
 

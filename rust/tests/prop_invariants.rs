@@ -202,6 +202,7 @@ fn prop_format_roundtrip() {
         let model = pawd::delta::types::DeltaModel {
             variant: format!("v-{}", g.rng.below(1000)),
             base_config: "tiny".into(),
+            meta: Default::default(),
             modules,
         };
         let dir = std::env::temp_dir().join("pawd_prop_fmt");

@@ -1,0 +1,408 @@
+//! Variant-lifecycle integration: the versioned registry under random
+//! publish/rollback/pin/retire sequences, v1-artifact back-compat through
+//! the full serving stack, and the headline live-update scenario — a
+//! mid-flight publish that flips the alias without failing queued requests.
+
+use pawd::coordinator::{
+    Engine, Payload, Server, ServerConfig, VariantRegistry, VariantStore,
+};
+use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
+use pawd::delta::format::{save_delta, save_delta_v1_bytes};
+use pawd::delta::pack::PackedMask;
+use pawd::delta::types::{Axis, DeltaModel, DeltaModule};
+use pawd::exec::ExecMode;
+use pawd::model::config::ModelConfig;
+use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
+use pawd::model::{FlatParams, ModuleId, ProjKind};
+use pawd::util::prop::check;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn tiny_delta(variant: &str) -> DeltaModel {
+    let d = vec![1.0f32; 8 * 8];
+    DeltaModel {
+        variant: variant.into(),
+        base_config: "tiny".into(),
+        meta: Default::default(),
+        modules: vec![DeltaModule {
+            id: ModuleId { layer: 0, kind: ProjKind::Q },
+            mask: PackedMask::pack(&d, 8, 8),
+            axis: Axis::Row,
+            scales: vec![0.1; 8],
+        }],
+    }
+}
+
+fn compressed_variant(
+    name: &str,
+    base: &FlatParams,
+    seed: u64,
+) -> DeltaModel {
+    let ft = synth_finetune(base, &SynthDeltaSpec { seed, ..Default::default() });
+    let docs: Vec<Vec<u8>> =
+        (0..3).map(|i| (0..40).map(|t| ((t * 5 + i * 11) % 200 + 20) as u8).collect()).collect();
+    let opts = CompressOptions { fit: FitMode::ClosedForm, ..Default::default() };
+    let (delta, _, _) = compress_model(name, base, &ft, &docs, &opts);
+    delta
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+// ---------------------------------------------------------------------------
+// Property: random lifecycle sequences vs a shadow model
+// ---------------------------------------------------------------------------
+
+/// Shadow of one variant's registry state, evolved by the documented rules.
+#[derive(Default)]
+struct Shadow {
+    /// version -> (parent, retired)
+    versions: BTreeMap<u32, (Option<u32>, bool)>,
+    active: u32,
+    pinned: bool,
+}
+
+impl Shadow {
+    fn max_version(&self) -> u32 {
+        self.versions.keys().next_back().copied().unwrap_or(0)
+    }
+
+    fn rollback_target(&self) -> Option<u32> {
+        let parent = self.versions.get(&self.active).and_then(|(p, _)| *p);
+        parent
+            .filter(|p| matches!(self.versions.get(p), Some((_, false))))
+            .or_else(|| {
+                self.versions
+                    .range(..self.active)
+                    .rev()
+                    .find(|(_, (_, retired))| !retired)
+                    .map(|(&v, _)| v)
+            })
+    }
+}
+
+#[test]
+fn prop_lifecycle_sequences_never_resolve_retired_versions() {
+    let case = AtomicU64::new(0);
+    check("registry-lifecycle", 24, 10, |g| {
+        let dir = fresh_dir(&format!(
+            "pawd_prop_registry_{}",
+            case.fetch_add(1, Ordering::Relaxed)
+        ));
+        let reg = VariantRegistry::open(&dir).map_err(|e| e.to_string())?;
+        let mut shadow = Shadow::default();
+        let n_steps = 3 + g.size * 2;
+        for step in 0..n_steps {
+            match g.rng.below(6) {
+                // publish
+                0 | 1 => {
+                    let got = reg.publish("ft", tiny_delta("ft")).map_err(|e| e.to_string())?;
+                    let want = shadow.max_version() + 1;
+                    if got != want {
+                        return Err(format!("step {step}: publish gave v{got}, want v{want}"));
+                    }
+                    shadow.versions.insert(want, (Some(shadow.active).filter(|&a| a > 0), false));
+                    if !shadow.pinned {
+                        shadow.active = want;
+                    }
+                }
+                // rollback (implicit target)
+                2 => {
+                    let want = shadow.rollback_target();
+                    let got = reg.rollback("ft", None).ok();
+                    if got != want {
+                        return Err(format!("step {step}: rollback gave {got:?}, want {want:?}"));
+                    }
+                    if let Some(v) = want {
+                        shadow.active = v;
+                    }
+                }
+                // pin a random version in [1, max+1] (may not exist / be retired)
+                3 => {
+                    let v = 1 + g.rng.below(shadow.max_version() as usize + 1) as u32;
+                    let valid = matches!(shadow.versions.get(&v), Some((_, false)));
+                    let got = reg.pin("ft", v);
+                    if got.is_ok() != valid {
+                        return Err(format!("step {step}: pin v{v} ok={} want {valid}", got.is_ok()));
+                    }
+                    if valid {
+                        shadow.active = v;
+                        shadow.pinned = true;
+                    }
+                }
+                // retire a random version (must fail for active/unknown)
+                4 => {
+                    let v = 1 + g.rng.below(shadow.max_version() as usize + 1) as u32;
+                    let valid = shadow.versions.contains_key(&v) && v != shadow.active;
+                    let got = reg.retire("ft", v);
+                    if got.is_ok() != valid {
+                        return Err(format!(
+                            "step {step}: retire v{v} ok={} want {valid}",
+                            got.is_ok()
+                        ));
+                    }
+                    if valid {
+                        shadow.versions.get_mut(&v).unwrap().1 = true;
+                    }
+                }
+                // unpin
+                _ => {
+                    if shadow.max_version() > 0 {
+                        reg.unpin("ft").map_err(|e| e.to_string())?;
+                        shadow.pinned = false;
+                    }
+                }
+            }
+            // Invariants after every step.
+            if shadow.max_version() == 0 {
+                continue; // nothing published yet
+            }
+            let r = reg.resolve("ft").map_err(|e| format!("step {step}: resolve: {e}"))?;
+            if r.version != shadow.active {
+                return Err(format!(
+                    "step {step}: alias at v{}, shadow says v{}",
+                    r.version, shadow.active
+                ));
+            }
+            if shadow.versions[&r.version].1 {
+                return Err(format!("step {step}: alias resolved to RETIRED v{}", r.version));
+            }
+            for (&v, &(_, retired)) in &shadow.versions {
+                let got = reg.resolve(&format!("ft@{v}"));
+                if got.is_ok() == retired {
+                    return Err(format!(
+                        "step {step}: explicit ft@{v} resolvable={} retired={retired}",
+                        got.is_ok()
+                    ));
+                }
+            }
+        }
+        // The manifest must reconstruct the same state on reopen.
+        if shadow.max_version() > 0 {
+            let reopened = VariantRegistry::open(&dir).map_err(|e| e.to_string())?;
+            let r = reopened.resolve("ft").map_err(|e| e.to_string())?;
+            if r.version != shadow.active {
+                return Err(format!(
+                    "reopen: alias at v{}, shadow says v{}",
+                    r.version, shadow.active
+                ));
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// v1 back-compat through the whole stack
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v1_artifact_serves_through_registry_store_and_server() {
+    let dir = fresh_dir("pawd_itest_v1compat");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 77));
+    // Write the artifact in the *v1* byte layout, as a pre-registry
+    // directory would contain.
+    let delta = compressed_variant("legacy", &base, 500);
+    std::fs::write(dir.join("legacy.pawd"), save_delta_v1_bytes(&delta)).unwrap();
+
+    let store = VariantStore::new(base.clone(), &dir).with_mode(ExecMode::Fused);
+    let loaded = store.load("legacy").unwrap();
+    assert_eq!(loaded.version, 1, "adopted v1 artifact is version 1");
+    assert!(loaded.weights.is_packed());
+
+    let server = Server::start(store, Engine::Native, ServerConfig::default());
+    let client = server.client();
+    let resp = client.score("legacy", "Q: legacy probe? A: ", &["a".to_string(), "b".to_string()]);
+    assert!(resp.result.is_ok());
+    assert_eq!(resp.version, Some(1));
+    // Publishing v2 on top of the adopted v1 works and flips the alias.
+    // (Staged artifacts live outside the registry dir, as a build pipeline's
+    // output would — files inside it get adopted as variants.)
+    let staging = fresh_dir("pawd_itest_v1compat_staging");
+    std::fs::create_dir_all(&staging).unwrap();
+    let staged = staging.join("staged.pawd");
+    save_delta(&staged, &compressed_variant("legacy", &base, 501)).unwrap();
+    assert_eq!(client.publish("legacy", &staged), Ok(2));
+    let resp = client.score("legacy", "Q: legacy probe? A: ", &["a".to_string(), "b".to_string()]);
+    assert_eq!(resp.version, Some(2));
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// The headline scenario: publish mid-flight, no failed requests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mid_flight_publish_flips_alias_without_failing_requests() {
+    let dir = fresh_dir("pawd_itest_midflight");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 77));
+    save_delta(dir.join("var0.pawd"), &compressed_variant("var0", &base, 600)).unwrap();
+    let staging = fresh_dir("pawd_itest_midflight_staging");
+    std::fs::create_dir_all(&staging).unwrap();
+    let staged = staging.join("var0_v2.pawd");
+    save_delta(&staged, &compressed_variant("var0", &base, 601)).unwrap();
+
+    let store = VariantStore::new(base.clone(), &dir).with_mode(ExecMode::Fused);
+    let server = Server::start(
+        store,
+        Engine::Native,
+        ServerConfig { n_workers: 2, max_wait: Duration::from_millis(1), ..Default::default() },
+    );
+    let stop = AtomicBool::new(false);
+    let saw_v1 = AtomicU64::new(0);
+    let saw_v2 = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        // Background traffic: every request must succeed across the flip.
+        for t in 0..3u64 {
+            let client = server.client();
+            let (stop, saw_v1, saw_v2) = (&stop, &saw_v1, &saw_v2);
+            s.spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let resp = client.score(
+                        "var0",
+                        &format!("Q: traffic {t}/{i}? A: "),
+                        &["yes".to_string(), "no".to_string()],
+                    );
+                    assert!(
+                        resp.result.is_ok(),
+                        "request failed across the publish flip: {:?}",
+                        resp.result
+                    );
+                    match resp.version {
+                        Some(1) => {
+                            saw_v1.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Some(2) => {
+                            saw_v2.fetch_add(1, Ordering::Relaxed);
+                        }
+                        v => panic!("unexpected serving version {v:?}"),
+                    }
+                    i += 1;
+                }
+            });
+        }
+        let admin = server.client();
+        // Let some v1 traffic through, then publish mid-flight.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while saw_v1.load(Ordering::Relaxed) < 8 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(saw_v1.load(Ordering::Relaxed) >= 8, "no v1 traffic before publish");
+        let v2 = admin.publish("var0", &staged).expect("publish while serving");
+        assert_eq!(v2, 2);
+        // Every request *submitted* after the publish response resolves to
+        // v2 at execution time; the probe proves the flip.
+        let probe = admin.score("var0", "Q: post-publish probe? A: ", &["x".to_string(), "y".to_string()]);
+        assert_eq!(probe.version, Some(2), "alias did not flip to the published version");
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while saw_v2.load(Ordering::Relaxed) < 8 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(saw_v2.load(Ordering::Relaxed) >= 8, "traffic never moved to v2");
+        // Rollback restores v1 for subsequent requests — still no failures.
+        assert_eq!(admin.rollback("var0", None), Ok(1));
+        let probe = admin.score("var0", "Q: post-rollback probe? A: ", &["x".to_string(), "y".to_string()]);
+        assert_eq!(probe.version, Some(1), "rollback did not restore v1");
+        stop.store(true, Ordering::Relaxed);
+    });
+    // Both versions served traffic; nothing errored; both resided at once
+    // (the publish warmed v2 while v1 stayed resident).
+    assert!(saw_v1.load(Ordering::Relaxed) > 0 && saw_v2.load(Ordering::Relaxed) > 0);
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.errors, 0, "lifecycle flips must not fail requests");
+    assert_eq!((snap.publishes, snap.rollbacks), (1, 1));
+    let resident = server.cache.resident();
+    assert!(resident.contains(&("var0".to_string(), 1)));
+    assert!(resident.contains(&("var0".to_string(), 2)));
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Control-plane odds and ends through the request path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn admin_list_pin_and_retire_through_the_server() {
+    let dir = fresh_dir("pawd_itest_adminops");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 3));
+    save_delta(dir.join("a.pawd"), &compressed_variant("a", &base, 700)).unwrap();
+    let staging = fresh_dir("pawd_itest_adminops_staging");
+    std::fs::create_dir_all(&staging).unwrap();
+    let staged = staging.join("staged.pawd");
+    save_delta(&staged, &compressed_variant("a", &base, 701)).unwrap();
+
+    let store = VariantStore::new(base, &dir);
+    let server = Server::start(store, Engine::Native, ServerConfig::default());
+    let client = server.client();
+
+    use pawd::coordinator::{AdminOp, AdminResp};
+    // Pin v1, publish v2: the alias must not move.
+    match client.admin(AdminOp::Pin { variant: "a".into(), version: 1 }) {
+        Ok(AdminResp::Pinned { version: 1, .. }) => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(client.publish("a", &staged), Ok(2));
+    let resp = client.score("a", "Q: pinned? A: ", &["x".to_string(), "y".to_string()]);
+    assert_eq!(resp.version, Some(1), "pinned alias moved on publish");
+    // Retire the unused v2, list shows the full history.
+    match client.admin(AdminOp::Retire { variant: "a".into(), version: 2 }) {
+        Ok(AdminResp::Retired { version: 2, .. }) => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    let descs = client.variants().unwrap();
+    assert_eq!(descs.len(), 1);
+    assert_eq!((descs[0].active, descs[0].pinned), (1, true));
+    assert_eq!(descs[0].versions.len(), 2);
+    assert!(descs[0].versions[1].retired);
+    // Retired versions refuse data requests by explicit address.
+    let resp = client.score("a@2", "Q: retired? A: ", &["x".to_string(), "y".to_string()]);
+    assert!(resp.result.is_err());
+    // The lifecycle counters made it into the snapshot.
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.publishes, 1);
+    server.shutdown();
+}
+
+#[test]
+fn deprecated_stats_variant_still_answers() {
+    let dir = fresh_dir("pawd_itest_statscompat");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 3));
+    save_delta(dir.join("a.pawd"), &compressed_variant("a", &base, 800)).unwrap();
+    let server = Server::start(
+        VariantStore::new(base, &dir),
+        Engine::Native,
+        ServerConfig::default(),
+    );
+    let client = server.client();
+    let _ = client.score("a", "Q: warm? A: ", &["x".to_string(), "y".to_string()]);
+    // Old protocol: an admin payload aimed at the reserved pseudo-variant.
+    use pawd::coordinator::{AdminOp, RespBody, STATS_VARIANT};
+    let rx = client.submit(STATS_VARIANT, Payload::Admin(AdminOp::Stats));
+    match rx.recv().unwrap().result {
+        Ok(RespBody::Admin(pawd::coordinator::AdminResp::Stats { snapshot })) => {
+            assert!(snapshot.served >= 1);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    // A *data* op aimed at it is a caller bug and is rejected, as before.
+    let resp = client.score(STATS_VARIANT, "Q: ? A: ", &["x".to_string()]);
+    assert!(resp.result.is_err());
+    assert!(resp.result.unwrap_err().contains("reserved"));
+    server.shutdown();
+}

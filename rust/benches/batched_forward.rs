@@ -1,0 +1,169 @@
+//! **S3 — batched multi-variant forward**: the shared-base `BatchPlan` path
+//! against the per-request fused path, single-variant and mixed batches.
+//!
+//! The structural claim is asserted, not just timed: the op counter must
+//! show the batched path issuing **one base GEMM per module per batch**
+//! while the per-request path issues one per module per *sequence* — that
+//! is the whole win (base weights/activations stream once per window, each
+//! variant pays only its packed mask reduction on its own rows).
+//!
+//! Emits machine-readable metrics into `$PAWD_BENCH_JSON` (see
+//! `BenchReport`); CI's bench-smoke lane runs this in fast mode and gates
+//! throughput against `BENCH_baseline.json`.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
+use pawd::exec::{counters, BatchPlan, PackedVariant, Uniform, VariantWeights};
+use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
+use pawd::model::Transformer;
+use pawd::util::benchkit::{Bench, BenchReport, Table};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let (base, _) = bench_common::synth_pair("tiny", 17);
+    let base = Arc::new(base);
+    let cfg = base.cfg().clone();
+    let tf = Transformer::new(&cfg);
+    let docs = bench_common::calib_docs(4, 40);
+
+    // A small fleet of packed variants sharing the one base.
+    let n_variants = 4usize;
+    let variants: Vec<VariantWeights> = (0..n_variants)
+        .map(|k| {
+            let ft = synth_finetune(
+                &base,
+                &SynthDeltaSpec { seed: 900 + k as u64, ..Default::default() },
+            );
+            let (delta, _, _) = compress_model(
+                &format!("v{k}"),
+                &base,
+                &ft,
+                &docs,
+                &CompressOptions { fit: FitMode::ClosedForm, ..Default::default() },
+            );
+            VariantWeights::Packed(PackedVariant::new(base.clone(), Arc::new(delta)).unwrap())
+        })
+        .collect();
+
+    let batch = 8usize;
+    let seq_len = 24usize;
+    let mk_tokens = |i: usize| -> Vec<u8> {
+        (0..seq_len).map(|t| ((t * 13 + i * 41) % 200 + 20) as u8).collect()
+    };
+    // Mixed batch: requests round-robin across the variant fleet.
+    let mixed_weights: Vec<VariantWeights> =
+        (0..batch).map(|i| variants[i % n_variants].clone()).collect();
+    let plans = BatchPlan::group(&mixed_weights);
+    assert_eq!(plans.len(), 1, "packed variants of one base must share one plan");
+    let (plan, members) = &plans[0];
+    let seqs: Vec<(usize, Vec<u8>)> = (0..batch).map(|i| (i, mk_tokens(i))).collect();
+    let single_seqs: Vec<(usize, Vec<u8>)> = (0..batch).map(|i| (0, mk_tokens(i))).collect();
+    let tokens_per_batch = (batch * seq_len) as f64;
+
+    // --- correctness + op-count structure (assert before timing) ---------
+    let batched = tf.forward_plan(plan, &seqs);
+    for ((entry, tokens), got) in seqs.iter().zip(&batched) {
+        let want = tf.forward_one(&mixed_weights[members[*entry]], tokens);
+        assert_eq!(got.data, want.data, "batched forward must match the per-request path");
+    }
+    let gemms_per_forward = (cfg.n_layers * 7 + 1) as u64; // 7 projections + LM head
+    counters::reset();
+    let _ = tf.forward_plan(plan, &seqs);
+    let batched_gemms = counters::base_gemms();
+    assert_eq!(
+        batched_gemms, gemms_per_forward,
+        "shared-base path must issue ONE base GEMM per module per batch"
+    );
+    counters::reset();
+    for (entry, tokens) in &seqs {
+        let _ = tf.forward_one(&mixed_weights[members[*entry]], tokens);
+    }
+    let per_request_gemms = counters::base_gemms();
+    assert_eq!(
+        per_request_gemms,
+        gemms_per_forward * batch as u64,
+        "per-request path pays the base GEMM once per sequence"
+    );
+    println!(
+        "op counter: batched {batched_gemms} base GEMMs/batch vs per-request \
+         {per_request_gemms} (batch={batch}, {n_variants} variants)\n"
+    );
+
+    // --- throughput --------------------------------------------------------
+    let mut b = Bench::from_env();
+    let r_per_req_mixed = b
+        .run_items(&format!("per-request fused, mixed x{batch}"), tokens_per_batch, || {
+            for (entry, tokens) in &seqs {
+                std::hint::black_box(tf.forward_one(&mixed_weights[members[*entry]], tokens));
+            }
+        })
+        .clone();
+    let r_plan_mixed = b
+        .run_items(&format!("BatchPlan shared base, mixed x{batch}"), tokens_per_batch, || {
+            std::hint::black_box(tf.forward_plan(plan, &seqs));
+        })
+        .clone();
+    let r_per_req_single = b
+        .run_items(&format!("per-request fused, single x{batch}"), tokens_per_batch, || {
+            for (_, tokens) in &single_seqs {
+                std::hint::black_box(tf.forward_one(&mixed_weights[0], tokens));
+            }
+        })
+        .clone();
+    let r_uniform_single = b
+        .run_items(&format!("Uniform batched, single x{batch}"), tokens_per_batch, || {
+            std::hint::black_box(tf.forward_plan(&Uniform(&mixed_weights[0]), &single_seqs));
+        })
+        .clone();
+
+    let tok_per_s = |r: &pawd::util::benchkit::BenchResult| tokens_per_batch / r.mean_s();
+    let mut t = Table::new(&["scenario", "tok/s", "batch ms", "base GEMMs/batch"]);
+    for (name, r, gemms) in [
+        ("per-request, mixed", &r_per_req_mixed, per_request_gemms),
+        ("BatchPlan, mixed", &r_plan_mixed, batched_gemms),
+        ("per-request, single-variant", &r_per_req_single, per_request_gemms),
+        ("Uniform batched, single-variant", &r_uniform_single, gemms_per_forward),
+    ] {
+        t.row(&[
+            name.to_string(),
+            format!("{:.0}", tok_per_s(r)),
+            format!("{:.2}", r.mean_s() * 1e3),
+            gemms.to_string(),
+        ]);
+    }
+    t.print("Batched multi-variant forward: shared base GEMM vs per-request (tiny)");
+    println!(
+        "mixed-batch speedup: {:.2}x (shared-base BatchPlan over per-request fused)",
+        r_per_req_mixed.mean_s() / r_plan_mixed.mean_s()
+    );
+
+    let mut report = BenchReport::new();
+    report.add(
+        "batched_forward/mixed8_per_request",
+        &[("tok_per_s", tok_per_s(&r_per_req_mixed))],
+    );
+    report.add(
+        "batched_forward/mixed8_batch_plan",
+        &[("tok_per_s", tok_per_s(&r_plan_mixed))],
+    );
+    report.add(
+        "batched_forward/single8_per_request",
+        &[("tok_per_s", tok_per_s(&r_per_req_single))],
+    );
+    report.add(
+        "batched_forward/single8_uniform",
+        &[("tok_per_s", tok_per_s(&r_uniform_single))],
+    );
+    report.add(
+        "batched_forward/structure",
+        &[
+            ("batched_base_gemms", batched_gemms as f64),
+            ("per_request_base_gemms", per_request_gemms as f64),
+            ("mixed_speedup", r_per_req_mixed.mean_s() / r_plan_mixed.mean_s()),
+        ],
+    );
+    report.flush_env()?;
+    Ok(())
+}

@@ -14,7 +14,7 @@ mod bench_common;
 use pawd::coordinator::{Engine, Payload, Server, ServerConfig, VariantStore};
 use pawd::delta::format::save_delta;
 use pawd::exec::ExecMode;
-use pawd::util::benchkit::{fmt_bytes, Table};
+use pawd::util::benchkit::{fmt_bytes, BenchReport, Table};
 use pawd::util::rng::Rng;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
     let docs = bench_common::calib_docs(4, 40);
     let n_requests: usize = if std::env::var("PAWD_BENCH_FAST").is_ok() { 120 } else { 320 };
 
+    let mut report = BenchReport::new();
     let mut t = Table::new(&[
         "variants", "cache", "exec", "req/s", "p50 total", "p99 total", "resident", "res bytes",
         "cold starts", "evictions",
@@ -95,6 +96,15 @@ fn main() -> anyhow::Result<()> {
                 let snap = server.metrics.snapshot();
                 let cache = server.cache.stats();
                 let res = server.cache.residency();
+                report.add(
+                    &format!("router_serving/v{n_variants}_{cache_label}_{}", exec.label()),
+                    &[
+                        ("req_per_s", snap.served as f64 / wall),
+                        ("p50_us", snap.total_p50_us as f64),
+                        ("p99_us", snap.total_p99_us as f64),
+                        ("mean_batch", snap.mean_batch_size),
+                    ],
+                );
                 t.row(&[
                     n_variants.to_string(),
                     cache_label.into(),
@@ -116,7 +126,9 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "\n(`one` budget = a single dense variant: fused mode keeps every fleet size fully \
-         resident because packed variants cost ~1/30 of dense bytes)"
+         resident because packed variants cost ~1/30 of dense bytes; mixed-variant windows \
+         run as one shared-base BatchPlan — one base GEMM per module per window)"
     );
+    report.flush_env()?;
     Ok(())
 }

@@ -199,6 +199,31 @@ impl VariantCache {
         Ok((loaded.weights, Some(loaded.load_time)))
     }
 
+    /// Multi-get for a batch window: resolve and pin every name, returning
+    /// one entry per input (in order). Each `Ok` holds its own
+    /// [`VariantWeights`] clone, so the whole working set stays executable
+    /// for the batch even if the LRU evicts underneath; duplicate names
+    /// coalesce via the single-flight guard in [`get`](Self::get).
+    /// Per-name failures are per-entry — one unknown variant never fails
+    /// the rest of the window.
+    ///
+    /// Multi-name windows fetch concurrently (scoped threads), so a window
+    /// touching K cold variants pays ~one artifact load time, not the sum
+    /// of K; single-name windows skip the spawn overhead.
+    pub fn get_many(&self, names: &[String]) -> Vec<Result<(VariantWeights, Option<Duration>)>> {
+        if names.len() <= 1 {
+            return names.iter().map(|n| self.get(n)).collect();
+        }
+        let mut out: Vec<Option<Result<(VariantWeights, Option<Duration>)>>> =
+            names.iter().map(|_| None).collect();
+        std::thread::scope(|s| {
+            for (slot, name) in out.iter_mut().zip(names) {
+                s.spawn(move || *slot = Some(self.get(name)));
+            }
+        });
+        out.into_iter().map(|o| o.expect("scoped fetch completed")).collect()
+    }
+
     pub fn stats(&self) -> CacheStats {
         self.inner.lock().unwrap().stats.clone()
     }
@@ -369,6 +394,26 @@ mod tests {
         let (w1b, cold) = cache.get("v0").unwrap();
         assert!(cold.is_none(), "rollback target was still resident");
         assert_eq!(w1b.version(), 1);
+    }
+
+    #[test]
+    fn get_many_pins_the_working_set_and_reports_per_name_errors() {
+        let dir = std::env::temp_dir().join("pawd_test_cache6");
+        let store = setup(&dir, 2).with_mode(ExecMode::Fused);
+        let cache = VariantCache::new(store, u64::MAX);
+        let names: Vec<String> =
+            vec!["v0".into(), "ghost".into(), "v1".into(), "v0".into()];
+        let got = cache.get_many(&names);
+        assert_eq!(got.len(), 4);
+        assert!(got[0].is_ok() && got[2].is_ok());
+        assert!(got[1].is_err(), "unknown variant fails alone, not the batch");
+        // The duplicate resolves to the same resident entry (a hit).
+        let (w0, cold0) = got[0].as_ref().unwrap();
+        let (w3, cold3) = got[3].as_ref().unwrap();
+        assert!(cold0.is_some() && cold3.is_none());
+        assert_eq!(w0.version(), w3.version());
+        // Both variants resident after one multi-get.
+        assert_eq!(cache.resident_names(), vec!["v0".to_string(), "v1".to_string()]);
     }
 
     #[test]

@@ -48,8 +48,11 @@ pub struct MetricsSnapshot {
     pub total_p99_us: u64,
     pub cold_starts: u64,
     pub cold_p50_us: u64,
-    /// Worker-observed variant switches (a swap is a worker changing which
-    /// variant it executes — with packed residency this is a pointer flip).
+    /// Worker-observed variant-context switches: a swap is a worker's
+    /// batch window executing a `(variant, version)` that was not part of
+    /// its previous window (with packed residency this is a pointer flip).
+    /// Steady traffic over a fixed mixed set records zero swaps — the
+    /// shared-base batched path switches nothing.
     pub swaps: u64,
     /// Control-plane publishes served (alias flips to a new version).
     pub publishes: u64,
@@ -105,7 +108,8 @@ impl Metrics {
         self.inner.lock().unwrap().cold_start.record(d);
     }
 
-    /// A worker switched from one variant to another.
+    /// A worker entered a variant context that was not part of its
+    /// previous batch window.
     pub fn record_swap(&self) {
         self.inner.lock().unwrap().swaps += 1;
     }

@@ -16,9 +16,12 @@
 //!   byte budget, charged in packed bytes when the store runs
 //!   [`ExecMode::Fused`](crate::exec::ExecMode); a publish warms the new
 //!   version while the old one ages out.
-//! * [`server`] — dispatcher (per-variant queues, size/deadline batching,
-//!   admin lane) and worker engines (native transformer over dense *or*
-//!   packed weights, or the PJRT runtime).
+//! * [`server`] — dispatcher (one FIFO batch window, size/deadline flush,
+//!   grouped by variant; admin lane bypasses batching) and worker engines:
+//!   the native transformer runs each flushed window as a shared-base
+//!   [`BatchPlan`](crate::exec::BatchPlan) — one base GEMM per module for
+//!   the whole mixed-variant window — while the PJRT runtime scores per
+//!   group from flat buffers.
 //! * [`metrics`] — latency histograms, throughput, cold-start accounting,
 //!   publish/rollback counters, per-version residency gauges.
 
@@ -31,7 +34,7 @@ pub mod store;
 
 pub use cache::{Residency, VariantCache, VersionResidency};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use registry::{ArtifactKind, Resolved, VariantDesc, VariantRegistry, VersionRecord};
+pub use registry::{ArtifactKind, GcReport, Resolved, VariantDesc, VariantRegistry, VersionRecord};
 pub use request::{
     AdminOp, AdminResp, DataOp, Payload, RespBody, Response, ADMIN_VARIANT, STATS_VARIANT,
 };

@@ -15,6 +15,8 @@
 //!   record new versions but stop moving the alias until unpinned.
 //! * **retire** — mark an old version unservable (resolution of `name@N`
 //!   fails fast); the active version can never be retired.
+//! * **gc** — unlink retired versions' artifact files, leaving tombstone
+//!   records so version numbering stays monotone across restarts.
 //!
 //! State is a JSON manifest (`registry.json`) in the artifact directory,
 //! rewritten atomically (temp file + rename) on every mutation, plus an
@@ -105,6 +107,13 @@ pub struct VariantDesc {
     pub active: u32,
     pub pinned: bool,
     pub versions: Vec<VersionRecord>,
+}
+
+/// Outcome of a [`VariantRegistry::gc`] sweep.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcReport {
+    pub files_removed: usize,
+    pub bytes_freed: u64,
 }
 
 /// What an alias (or explicit `name@N`) resolves to.
@@ -350,6 +359,75 @@ impl VariantRegistry {
             rec.retired = true;
             Ok(())
         })
+    }
+
+    /// Garbage-collect retired versions' artifact files for `name` (or for
+    /// every variant when `None`). [`retire`](Self::retire) makes a version
+    /// unservable but leaves its artifact on disk forever; this sweep
+    /// unlinks those files while keeping each record as a **tombstone**
+    /// (`file` cleared, `bytes` zeroed), so version numbering stays
+    /// monotone across restarts and the history remains listable.
+    ///
+    /// The tombstones commit to the manifest *before* any file is unlinked
+    /// (write-ahead, like every other mutation): a crash mid-sweep can
+    /// leave orphaned-but-untracked files on disk (harmless — adoption
+    /// skips version slots a record already owns, and retired versions
+    /// never resolve), never a live record pointing at a deleted artifact.
+    /// In-flight requests still holding the version's `Arc` are unaffected
+    /// — the weights are resident, only the disk copy goes away.
+    pub fn gc(&self, name: Option<&str>) -> Result<GcReport> {
+        // Phase 1 (under the lock, write-ahead): tombstone matching records
+        // and collect the doomed paths.
+        let doomed: Vec<(PathBuf, u64)> = self.mutate(|index| {
+            if let Some(n) = name {
+                let known = index.get(n).map(|s| !s.versions.is_empty()).unwrap_or(false);
+                if !known {
+                    bail!("variant '{n}' not found in registry");
+                }
+            }
+            // Never unlink a file a live (non-retired) record still points
+            // at — publish guarantees unique filenames, this is belt and
+            // braces against hand-edited manifests.
+            let live: std::collections::HashSet<String> = index
+                .values()
+                .flat_map(|s| s.versions.values())
+                .filter(|r| !r.retired)
+                .map(|r| r.file.clone())
+                .collect();
+            let mut doomed = Vec::new();
+            for (vname, state) in index.iter_mut() {
+                if let Some(n) = name {
+                    if n != vname {
+                        continue;
+                    }
+                }
+                for rec in state.versions.values_mut() {
+                    if rec.retired && !rec.file.is_empty() && !live.contains(&rec.file) {
+                        doomed.push((self.dir.join(&rec.file), rec.bytes));
+                        rec.file = String::new();
+                        rec.bytes = 0;
+                    }
+                }
+            }
+            Ok(doomed)
+        })?;
+        // Phase 2 (outside the lock): unlink. Already-missing files count as
+        // collected — the record said retired either way.
+        let mut report = GcReport::default();
+        for (path, bytes) in doomed {
+            match std::fs::remove_file(&path) {
+                Ok(()) => {
+                    report.files_removed += 1;
+                    report.bytes_freed += bytes;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => {
+                    return Err(anyhow::Error::new(e)
+                        .context(format!("removing retired artifact {}", path.display())))
+                }
+            }
+        }
+        Ok(report)
     }
 
     /// All variants with their full version histories, sorted by name.
@@ -739,6 +817,44 @@ mod tests {
         // v1 still loads from the untouched original file.
         let v1 = reg.resolve("ft@1").unwrap();
         assert_eq!(load_delta(&v1.path).unwrap().meta.version, 1);
+    }
+
+    #[test]
+    fn gc_unlinks_retired_files_and_keeps_numbering_monotone() {
+        let dir = fresh_dir("pawd_test_reg_gc");
+        let reg = VariantRegistry::open(&dir).unwrap();
+        reg.publish("ft", tiny_model("ft")).unwrap();
+        reg.publish("ft", tiny_model("ft")).unwrap();
+        reg.publish("ft", tiny_model("ft")).unwrap();
+        reg.publish("other", tiny_model("other")).unwrap();
+        // Nothing retired yet: gc is a no-op.
+        assert_eq!(reg.gc(None).unwrap(), GcReport::default());
+        assert!(reg.gc(Some("ghost")).is_err(), "unknown variant must error");
+        reg.retire("ft", 1).unwrap();
+        reg.retire("ft", 2).unwrap();
+        let v1_file = dir.join("ft@1.pawd");
+        let v2_file = dir.join("ft@2.pawd");
+        assert!(v1_file.exists() && v2_file.exists());
+        let report = reg.gc(Some("ft")).unwrap();
+        assert_eq!(report.files_removed, 2);
+        assert!(report.bytes_freed > 0);
+        assert!(!v1_file.exists() && !v2_file.exists(), "retired artifacts must be unlinked");
+        assert!(dir.join("ft@3.pawd").exists(), "active artifact must survive");
+        assert!(dir.join("other@1.pawd").exists(), "other variants untouched by scoped gc");
+        // Tombstones: still listed, still retired, bytes zeroed.
+        let desc = &reg.list()[0];
+        assert_eq!(desc.name, "ft");
+        let v1 = &desc.versions[0];
+        assert!(v1.retired && v1.file.is_empty() && v1.bytes == 0);
+        assert!(reg.resolve("ft@1").is_err());
+        // A second sweep finds nothing.
+        assert_eq!(reg.gc(None).unwrap(), GcReport::default());
+        // Reopen: tombstones persisted, so the next version is 4, not a
+        // reuse of a collected number.
+        drop(reg);
+        let reg = VariantRegistry::open(&dir).unwrap();
+        assert_eq!(reg.resolve("ft").unwrap().version, 3);
+        assert_eq!(reg.publish("ft", tiny_model("ft")).unwrap(), 4);
     }
 
     #[test]

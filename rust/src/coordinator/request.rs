@@ -15,10 +15,8 @@ use std::path::PathBuf;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-/// Deprecated pseudo-variant name: before the admin plane existed, stats
-/// probes were smuggled through the data path by submitting to this name.
-/// Requests addressed to it are still answered (as [`AdminOp::Stats`]), but
-/// new code should use [`Payload::Admin`] / `Client::stats`.
+/// Reserved pseudo-variant name kept only for wire compatibility with
+/// pre-admin-plane clients; use [`Payload::Admin`] / `Client::stats`.
 pub const STATS_VARIANT: &str = "__stats__";
 
 /// Pseudo-variant name admin requests are queued under (admin ops carry
@@ -73,6 +71,10 @@ pub enum AdminOp {
     Unpin { variant: String },
     /// Mark `version` unservable (must not be the active version).
     Retire { variant: String, version: u32 },
+    /// Delete retired versions' artifact files from disk (all variants, or
+    /// just `variant`); the version records stay as tombstones so numbering
+    /// remains monotone.
+    Gc { variant: Option<String> },
     /// List all variants with their version histories.
     List,
 }
@@ -94,6 +96,7 @@ pub enum AdminResp {
     Pinned { variant: String, version: u32 },
     Unpinned { variant: String },
     Retired { variant: String, version: u32 },
+    Gced { files_removed: usize, bytes_freed: u64 },
     Variants { variants: Vec<VariantDesc> },
 }
 

@@ -1,7 +1,7 @@
-//! The serving coordinator: ingress → per-variant queues → dynamic batcher
+//! The serving coordinator: ingress → batch window → mixed-variant batcher
 //! → worker engines over the LRU variant cache — plus the **admin lane**,
 //! which answers control-plane operations (stats, publish, rollback, pin,
-//! retire, list) without touching an engine.
+//! retire, gc, list) without touching an engine.
 //!
 //! Thread topology (no async runtime available offline; this is plain
 //! threads + channels, which for a CPU-bound engine is also the faster
@@ -9,10 +9,24 @@
 //!
 //! ```text
 //! clients --mpsc--> dispatcher ----work queue----> worker 0..N-1
-//!                    (per-variant queues,           (variant cache get,
-//!                     size/deadline batching;        score batch, reply;
-//!                     admin ops bypass batching)     admin ops -> registry)
+//!                    (one FIFO batch window,        (cache multi-get,
+//!                     size/deadline flush,           BatchPlan per shared
+//!                     grouped by variant;            base: ONE base GEMM
+//!                     admin ops bypass batching)     per module per window;
+//!                                                    admin ops -> registry)
 //! ```
+//!
+//! **Batched multi-variant execution.** The dispatcher coalesces concurrent
+//! data requests — whatever variant they target — into one FIFO *batch
+//! window*, flushed when it reaches `max_batch` requests or its oldest
+//! entry has waited `max_wait`. A worker pins every `(variant, version)`
+//! the window needs with one cache multi-get, groups the window by shared
+//! base storage into [`BatchPlan`]s, and runs each plan as ONE stacked
+//! forward: the base GEMM executes once per module for the whole window and
+//! each variant pays only its packed mask reduction on its own rows.
+//! Fairness caveat: the window is strictly FIFO, so a variant that floods
+//! the ingress can fill whole windows; `max_wait` still bounds every
+//! request's batching delay, but there is no per-variant fair share.
 //!
 //! Publishing through the admin lane is the live-update path: the registry
 //! flips the alias atomically, the publishing worker warms the new version
@@ -27,11 +41,10 @@ use super::request::{
 };
 use super::store::VariantStore;
 use crate::data::corpus::encode;
-use crate::exec::{ExecMode, VariantWeights};
+use crate::exec::{BatchPlan, ExecMode, VariantWeights};
 use crate::model::Transformer;
 use crate::runtime::RuntimeHandle;
 use crate::tensor::ops::log_softmax_into;
-use crate::util::par;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::collections::VecDeque;
@@ -73,9 +86,21 @@ impl Default for ServerConfig {
     }
 }
 
-struct Batch {
+/// One variant's slice of a flushed batch window (requests in arrival
+/// order).
+struct VariantGroup {
     variant: String,
     requests: Vec<Request>,
+}
+
+/// One unit of worker work.
+enum WorkItem {
+    /// A single control-plane request (bypasses batching; may carry a
+    /// misdirected data payload aimed at a reserved pseudo-variant, which
+    /// the worker rejects).
+    Admin(Request),
+    /// A flushed batch window of data requests, grouped by variant.
+    Window(Vec<VariantGroup>),
 }
 
 /// Ingress message: a request or an explicit shutdown signal (needed
@@ -168,6 +193,15 @@ impl Client {
         }
     }
 
+    /// Garbage-collect retired versions' artifact files (all variants, or
+    /// just `variant`); returns `(files_removed, bytes_freed)`.
+    pub fn gc(&self, variant: Option<&str>) -> Result<(usize, u64), String> {
+        match self.admin(AdminOp::Gc { variant: variant.map(|s| s.to_string()) })? {
+            AdminResp::Gced { files_removed, bytes_freed } => Ok((files_removed, bytes_freed)),
+            other => Err(format!("unexpected gc response {other:?}")),
+        }
+    }
+
     /// List all variants with their version histories.
     pub fn variants(&self) -> Result<Vec<super::registry::VariantDesc>, String> {
         match self.admin(AdminOp::List)? {
@@ -188,7 +222,7 @@ impl Server {
         });
         let cache = Arc::new(VariantCache::new(store, cfg.cache_budget_bytes));
         let (ingress_tx, ingress_rx) = mpsc::channel::<Ingress>();
-        let (work_tx, work_rx) = mpsc::channel::<Batch>();
+        let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
         let work_rx = Arc::new(Mutex::new(work_rx));
 
         let mut workers = Vec::new();
@@ -242,18 +276,22 @@ impl Server {
 
 fn dispatcher_loop(
     ingress: mpsc::Receiver<Ingress>,
-    work: mpsc::Sender<Batch>,
+    work: mpsc::Sender<WorkItem>,
     cfg: ServerConfig,
     metrics: Arc<Metrics>,
 ) {
-    // Per-variant FIFO queues with the arrival time of their oldest entry.
-    let mut queues: HashMap<String, VecDeque<Request>> = HashMap::new();
+    // One FIFO batch window across ALL variants: concurrent data requests
+    // coalesce by arrival, then get grouped by variant at flush time so a
+    // worker can run the whole mixed window as one shared-base BatchPlan.
+    // (FIFO means no per-variant fair share — a flooding variant can fill
+    // windows — but `max_wait` still bounds every request's batching delay.)
+    let mut window: VecDeque<Request> = VecDeque::new();
     let mut open = true;
-    while open || queues.values().any(|q| !q.is_empty()) {
+    while open || !window.is_empty() {
         // Pull with a small timeout so deadline flushes happen on time.
         match ingress.recv_timeout(Duration::from_micros(500)) {
             Ok(Ingress::Req(req)) => {
-                // Admin ops (and anything aimed at the deprecated stats
+                // Admin ops (and anything aimed at the reserved stats
                 // pseudo-variant) bypass batching: they never touch an
                 // engine, so making them wait behind a batch deadline would
                 // only delay alias flips.
@@ -261,56 +299,67 @@ fn dispatcher_loop(
                     || req.variant == STATS_VARIANT
                     || req.variant == ADMIN_VARIANT;
                 if admin {
-                    if work
-                        .send(Batch { variant: ADMIN_VARIANT.into(), requests: vec![req] })
-                        .is_err()
-                    {
+                    if work.send(WorkItem::Admin(req)).is_err() {
                         return; // workers gone
                     }
                 } else {
-                    queues.entry(req.variant.clone()).or_default().push_back(req);
+                    window.push_back(req);
                 }
             }
             Ok(Ingress::Shutdown) => open = false,
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
         }
-        // Flush full or overdue queues.
+        // Flush full windows immediately; overdue (or closing) windows flush
+        // whatever is there.
         let now = Instant::now();
-        for (variant, q) in queues.iter_mut() {
-            let due = q
-                .front()
-                .map(|r| now.duration_since(r.submitted) >= cfg.max_wait)
-                .unwrap_or(false);
-            while q.len() >= cfg.max_batch || (due && !q.is_empty()) || (!open && !q.is_empty()) {
-                let take = q.len().min(cfg.max_batch);
-                let requests: Vec<Request> = q.drain(..take).collect();
-                metrics.record_batch(requests.len());
-                if work.send(Batch { variant: variant.clone(), requests }).is_err() {
-                    return; // workers gone
-                }
-                if q.len() < cfg.max_batch && open {
-                    break;
-                }
+        let due = window
+            .front()
+            .map(|r| now.duration_since(r.submitted) >= cfg.max_wait)
+            .unwrap_or(false);
+        while window.len() >= cfg.max_batch || ((due || !open) && !window.is_empty()) {
+            let take = window.len().min(cfg.max_batch);
+            let requests: Vec<Request> = window.drain(..take).collect();
+            metrics.record_batch(requests.len());
+            if work.send(WorkItem::Window(group_by_variant(requests))).is_err() {
+                return; // workers gone
             }
         }
     }
     // work sender drops here -> workers drain and exit.
 }
 
+/// Group a flushed window by variant, preserving arrival order both across
+/// groups (first appearance) and within each group.
+fn group_by_variant(requests: Vec<Request>) -> Vec<VariantGroup> {
+    let mut groups: Vec<VariantGroup> = Vec::new();
+    let mut index: HashMap<String, usize> = HashMap::new();
+    for req in requests {
+        match index.get(&req.variant) {
+            Some(&i) => groups[i].requests.push(req),
+            None => {
+                index.insert(req.variant.clone(), groups.len());
+                groups.push(VariantGroup { variant: req.variant.clone(), requests: vec![req] });
+            }
+        }
+    }
+    groups
+}
+
 fn worker_loop(
-    work: Arc<Mutex<mpsc::Receiver<Batch>>>,
+    work: Arc<Mutex<mpsc::Receiver<WorkItem>>>,
     cache: Arc<VariantCache>,
     metrics: Arc<Metrics>,
     engine: Engine,
 ) {
     // One Transformer per worker (RoPE tables etc.) for the native engine.
     let tf = Transformer::new(cache.base().cfg());
-    // Which variant version this worker last executed — a change is a hot
-    // swap (with packed residency: an Arc clone, no materialize/revert pass).
-    let mut last_variant: Option<(String, u32)> = None;
+    // The `(variant, version)` set this worker's previous window executed;
+    // entering a context that was not in it counts as a hot swap (with
+    // packed residency that is an Arc flip, no materialize/revert pass).
+    let mut last_set: Vec<(String, u32)> = Vec::new();
     loop {
-        let batch = {
+        let item = {
             let rx = work.lock().unwrap();
             match rx.recv() {
                 Ok(b) => b,
@@ -318,13 +367,13 @@ fn worker_loop(
             }
         };
         let batch_start = Instant::now();
-        if batch.variant == ADMIN_VARIANT {
-            for req in batch.requests {
+        match item {
+            WorkItem::Admin(req) => {
                 let result = match &req.payload {
                     Payload::Admin(op) => run_admin(op, &cache, &metrics).map(RespBody::Admin),
-                    // Data ops can only land here via the deprecated
-                    // pseudo-variant names; reject them instead of answering
-                    // with a surprise body.
+                    // Data ops can only land here via the reserved
+                    // pseudo-variant names; reject them instead of
+                    // answering with a surprise body.
                     Payload::Data(_) => Err(format!(
                         "variant name '{}' is reserved for control-plane probes",
                         req.variant
@@ -343,19 +392,56 @@ fn worker_loop(
                     timing,
                 });
             }
-            continue;
+            WorkItem::Window(groups) => {
+                run_window(groups, batch_start, &tf, &cache, &metrics, &engine, &mut last_set);
+            }
         }
-        let (weights, cold) = match cache.get(&batch.variant) {
-            Ok(x) => x,
+    }
+}
+
+/// Execute one flushed batch window: pin every needed `(variant, version)`
+/// with a cache multi-get, group the window into shared-base [`BatchPlan`]s,
+/// and run each plan as one stacked forward (native engine) or fall back to
+/// per-group scoring (XLA engine, which consumes flat buffers).
+fn run_window(
+    groups: Vec<VariantGroup>,
+    batch_start: Instant,
+    tf: &Transformer,
+    cache: &VariantCache,
+    metrics: &Metrics,
+    engine: &Engine,
+    last_set: &mut Vec<(String, u32)>,
+) {
+    // Pin the whole working set for the window in one multi-get: each group
+    // holds its weights' Arc until the responses are out, so an eviction
+    // mid-window never invalidates in-flight work.
+    let names: Vec<String> = groups.iter().map(|g| g.variant.clone()).collect();
+    let fetched = cache.get_many(&names);
+    let mut loaded: Vec<(VariantGroup, VariantWeights, u32, Option<Duration>)> = Vec::new();
+    for (group, res) in groups.into_iter().zip(fetched) {
+        match res {
+            Ok((weights, cold)) => {
+                if let Some(c) = cold {
+                    metrics.record_cold_start(c);
+                }
+                let version = weights.version();
+                loaded.push((group, weights, version, cold));
+            }
             Err(e) => {
                 let msg = format!("variant load failed: {e}");
-                for req in batch.requests {
+                for req in group.requests {
                     let timing = Timing {
                         queue: batch_start.duration_since(req.submitted),
                         total: req.submitted.elapsed(),
                         ..Default::default()
                     };
-                    metrics.record_request(&req.variant, timing.queue, Duration::ZERO, timing.total, true);
+                    metrics.record_request(
+                        &req.variant,
+                        timing.queue,
+                        Duration::ZERO,
+                        timing.total,
+                        true,
+                    );
                     let _ = req.resp.send(Response {
                         id: req.id,
                         variant: req.variant.clone(),
@@ -364,30 +450,80 @@ fn worker_loop(
                         timing,
                     });
                 }
-                continue;
             }
-        };
-        let version = weights.version();
-        if let Some(c) = cold {
-            metrics.record_cold_start(c);
         }
-        let changed = match &last_variant {
-            Some((n, v)) => n != &batch.variant || *v != version,
-            None => true,
-        };
-        if changed {
-            if last_variant.is_some() {
+    }
+    if loaded.is_empty() {
+        return;
+    }
+    // Swap accounting under batching: executing a whole mixed window is one
+    // shared-base pass, so a "swap" is entering a (variant, version)
+    // context that was not part of this worker's previous window — not
+    // every group-to-group transition inside the window (that would
+    // inflate the counter under steady mixed traffic where nothing is
+    // actually switched).
+    let mut set: Vec<(String, u32)> =
+        loaded.iter().map(|(g, _, v, _)| (g.variant.clone(), *v)).collect();
+    set.sort();
+    set.dedup();
+    if !last_set.is_empty() {
+        for key in &set {
+            if !last_set.contains(key) {
                 metrics.record_swap();
             }
-            last_variant = Some((batch.variant.clone(), version));
         }
-        // Per-batch gauge update sticks to the O(1) totals; the per-version
-        // breakdown is only materialized when a stats probe asks for it.
-        metrics.set_residency(cache.residency_totals());
-        let compute_start = Instant::now();
-        let results = score_batch(&engine, &tf, &weights, &batch.requests);
-        let compute = compute_start.elapsed();
-        for (req, result) in batch.requests.into_iter().zip(results) {
+    }
+    *last_set = set;
+    // Per-window gauge update sticks to the O(1) totals; the per-version
+    // breakdown is only materialized when a stats probe asks for it.
+    metrics.set_residency(cache.residency_totals());
+    let compute_start = Instant::now();
+    // Results aligned with `loaded`: per group, per request.
+    let results: Vec<Vec<Result<RespBody, String>>> = match engine {
+        Engine::Native => {
+            let weights: Vec<VariantWeights> =
+                loaded.iter().map(|(_, w, _, _)| w.clone()).collect();
+            let mut out: Vec<Vec<Option<Result<RespBody, String>>>> = loaded
+                .iter()
+                .map(|(g, ..)| (0..g.requests.len()).map(|_| None).collect())
+                .collect();
+            // Group by shared base: all packed variants of one store share
+            // one plan (ONE base GEMM per module for their whole slice of
+            // the window); dense variants plan per materialized Arc.
+            for (plan, members) in BatchPlan::group(&weights) {
+                let mut refs: Vec<(usize, usize, usize)> = Vec::new(); // (entry, group, req)
+                for (entry, &gi) in members.iter().enumerate() {
+                    for ri in 0..loaded[gi].0.requests.len() {
+                        refs.push((entry, gi, ri));
+                    }
+                }
+                let payloads: Vec<(usize, &Payload)> = refs
+                    .iter()
+                    .map(|&(entry, gi, ri)| (entry, &loaded[gi].0.requests[ri].payload))
+                    .collect();
+                let plan_results = score_plan_native(tf, &plan, &payloads);
+                for ((_, gi, ri), r) in refs.into_iter().zip(plan_results) {
+                    out[gi][ri] = Some(r);
+                }
+            }
+            out.into_iter().map(|g| g.into_iter().map(|o| o.unwrap()).collect()).collect()
+        }
+        Engine::Xla { handle, config } => loaded
+            .iter()
+            .map(|(g, w, _, _)| {
+                // The store runs Dense mode under this engine, so this is an
+                // Arc clone, not a materialization.
+                let params = w.materialized();
+                g.requests
+                    .iter()
+                    .map(|r| score_one_xla(handle, config, &params, &r.payload))
+                    .collect()
+            })
+            .collect(),
+    };
+    let compute = compute_start.elapsed();
+    for ((group, _, version, cold), group_results) in loaded.into_iter().zip(results) {
+        for (req, result) in group.requests.into_iter().zip(group_results) {
             let queue = batch_start.duration_since(req.submitted);
             let total = req.submitted.elapsed();
             metrics.record_request(&req.variant, queue, compute, total, result.is_err());
@@ -401,6 +537,82 @@ fn worker_loop(
             });
         }
     }
+}
+
+/// Score a mixed-variant set of payloads through one [`BatchPlan`]: expand
+/// every payload into its scored sequences, run ONE stacked forward for all
+/// of them (one shared base GEMM per module), then reduce each request's
+/// spans to scores. Numerically identical to the per-request path —
+/// batching regroups work across requests, never the arithmetic.
+fn score_plan_native(
+    tf: &Transformer,
+    plan: &BatchPlan,
+    payloads: &[(usize, &Payload)],
+) -> Vec<Result<RespBody, String>> {
+    enum Pending {
+        Failed(String),
+        /// (start, choice_len) per choice, sequences at `first_seq..`.
+        Score { first_seq: usize, spans: Vec<(usize, usize)> },
+        Ppl { seq: usize, n_tokens: usize },
+    }
+    let mut seqs: Vec<(usize, Vec<u8>)> = Vec::new();
+    let mut pending = Vec::with_capacity(payloads.len());
+    for &(entry, payload) in payloads {
+        let op = match payload {
+            Payload::Data(op) => op,
+            Payload::Admin(_) => {
+                pending.push(Pending::Failed("admin requests must not reach an engine".into()));
+                continue;
+            }
+        };
+        match op {
+            DataOp::Score { prompt, choices } => {
+                let first_seq = seqs.len();
+                let mut spans = Vec::with_capacity(choices.len());
+                for choice in choices {
+                    let full = clamp(encode(&format!("{prompt}{choice}")), tf.cfg.max_seq);
+                    // The choice is the tail of the sequence; score exactly
+                    // its tokens (robust under prompt clamping).
+                    let choice_len = encode(choice).len().min(full.len() - 1).max(1);
+                    spans.push((full.len() - choice_len, choice_len));
+                    seqs.push((entry, full));
+                }
+                pending.push(Pending::Score { first_seq, spans });
+            }
+            DataOp::Perplexity { text } => {
+                let tokens = clamp(encode(text), tf.cfg.max_seq);
+                if tokens.len() < 2 {
+                    pending.push(Pending::Failed("text too short".into()));
+                } else {
+                    pending.push(Pending::Ppl { seq: seqs.len(), n_tokens: tokens.len() });
+                    seqs.push((entry, tokens));
+                }
+            }
+        }
+    }
+    let logits = tf.forward_plan(plan, &seqs);
+    pending
+        .into_iter()
+        .map(|p| match p {
+            Pending::Failed(e) => Err(e),
+            Pending::Score { first_seq, spans } => {
+                let mut scores = Vec::with_capacity(spans.len());
+                for (i, (start, choice_len)) in spans.into_iter().enumerate() {
+                    let (_, tokens) = &seqs[first_seq + i];
+                    let s =
+                        tf.span_logprob(&logits[first_seq + i], tokens, start..tokens.len());
+                    scores.push(s / choice_len as f64);
+                }
+                let choice = argmax_f64(&scores);
+                Ok(RespBody::Score { choice, scores })
+            }
+            Pending::Ppl { seq, n_tokens } => {
+                let (_, tokens) = &seqs[seq];
+                let s = tf.span_logprob(&logits[seq], tokens, 1..n_tokens);
+                Ok(RespBody::Perplexity { nats_per_token: -s / (n_tokens - 1) as f64 })
+            }
+        })
+        .collect()
 }
 
 /// Execute one control-plane operation against the registry/cache/metrics —
@@ -460,71 +672,14 @@ fn run_admin(
             registry.retire(variant, *version).map_err(|e| e.to_string())?;
             Ok(AdminResp::Retired { variant: variant.clone(), version: *version })
         }
+        AdminOp::Gc { variant } => {
+            let report = registry.gc(variant.as_deref()).map_err(|e| e.to_string())?;
+            Ok(AdminResp::Gced {
+                files_removed: report.files_removed,
+                bytes_freed: report.bytes_freed,
+            })
+        }
         AdminOp::List => Ok(AdminResp::Variants { variants: registry.list() }),
-    }
-}
-
-/// Score every request in a batch against the variant's weights (packed or
-/// dense — the native engine is generic over the source).
-fn score_batch(
-    engine: &Engine,
-    tf: &Transformer,
-    weights: &VariantWeights,
-    requests: &[Request],
-) -> Vec<Result<RespBody, String>> {
-    match engine {
-        Engine::Native => {
-            let out: Vec<Mutex<Option<Result<RespBody, String>>>> =
-                (0..requests.len()).map(|_| Mutex::new(None)).collect();
-            par::parallel_items(requests.len(), 8, |i| {
-                let r = score_one_native(tf, weights, &requests[i].payload);
-                *out[i].lock().unwrap() = Some(r);
-            });
-            out.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
-        }
-        Engine::Xla { handle, config } => {
-            // The store runs Dense mode under this engine, so this is an Arc
-            // clone, not a materialization.
-            let params = weights.materialized();
-            requests
-                .iter()
-                .map(|r| score_one_xla(handle, config, &params, &r.payload))
-                .collect()
-        }
-    }
-}
-
-fn score_one_native(
-    tf: &Transformer,
-    weights: &VariantWeights,
-    payload: &Payload,
-) -> Result<RespBody, String> {
-    let op = match payload {
-        Payload::Data(op) => op,
-        Payload::Admin(_) => return Err("admin requests must not reach an engine".into()),
-    };
-    match op {
-        DataOp::Score { prompt, choices } => {
-            let mut scores = Vec::with_capacity(choices.len());
-            for choice in choices {
-                let full = clamp(encode(&format!("{prompt}{choice}")), tf.cfg.max_seq);
-                // The choice is the tail of the sequence; score exactly its
-                // tokens (robust under prompt clamping).
-                let choice_len = encode(choice).len().min(full.len() - 1).max(1);
-                let start = full.len() - choice_len;
-                let s = tf.score_span(weights, &full, start..full.len());
-                scores.push(s / choice_len as f64);
-            }
-            let choice = argmax_f64(&scores);
-            Ok(RespBody::Score { choice, scores })
-        }
-        DataOp::Perplexity { text } => {
-            let tokens = clamp(encode(text), tf.cfg.max_seq);
-            if tokens.len() < 2 {
-                return Err("text too short".into());
-            }
-            Ok(RespBody::Perplexity { nats_per_token: tf.cross_entropy(weights, &tokens) })
-        }
     }
 }
 

@@ -1,0 +1,289 @@
+//! Batched multi-variant execution: one shared base GEMM per module for a
+//! whole mixed-variant batch, plus per-variant packed mask reductions on
+//! row slices.
+//!
+//! The per-request fused path ([`FusedDeltaLinear`](super::FusedDeltaLinear))
+//! already avoids dense reconstruction, but a batch of B requests across V
+//! variants of one base still pays B base GEMMs per module — the base
+//! activations are read once *per request* even though the weights are
+//! shared. [`BatchPlan`] regroups that work: stack every request's
+//! activations into one `[ΣT, d]` tensor, run the base projection **once**,
+//! then add each variant's `v ⊙ (x·Bᵀ)` term only to the row slice that
+//! belongs to it (BitDelta and DeltaZip report the same structure as the
+//! key to multi-tenant serving wins — base compute and residency are
+//! shared, per-variant work is proportional to the packed delta only).
+//!
+//! Grouping key: the *base parameter `Arc`*. Packed variants loaded from
+//! one store all share the store's base and land in one plan; dense
+//! variants only group with other requests holding the same materialized
+//! `Arc` (same `(variant, version)` cache entry). The transformer consumes
+//! a plan through [`BatchSource`]: per-sequence results are bitwise
+//! identical to running each request through its own per-request path —
+//! batching regroups work, never the arithmetic.
+
+use super::linear::{add_delta_rows, DenseLinear, LinearOp};
+use super::weights::{PackedVariant, VariantWeights, Weights};
+use crate::model::{FlatParams, ModuleId};
+use crate::tensor::Tensor2;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Contiguous run of stacked activation rows belonging to one plan entry.
+#[derive(Clone, Debug)]
+pub struct RowSpan {
+    pub start: usize,
+    pub end: usize,
+    /// Index into the plan's entry list.
+    pub entry: usize,
+}
+
+/// A weights source the transformer can run a *stacked multi-request*
+/// forward against: shared non-patchable parameters plus a per-module
+/// batched projection where different row spans may execute different
+/// variants.
+pub trait BatchSource: Sync {
+    /// Shared (non-patchable) parameters: embeddings, norms, LM head.
+    fn flat(&self) -> &FlatParams;
+
+    /// Number of entries a [`RowSpan::entry`] may reference
+    /// (`usize::MAX` = any index is accepted).
+    fn entries(&self) -> usize;
+
+    /// `y = x·Ŵᵀ` for module `id`, where rows `spans[i]` of `x` belong to
+    /// entry `spans[i].entry`'s variant. Spans must be disjoint and cover
+    /// every row of `x`.
+    fn forward_module(&self, id: ModuleId, x: &Tensor2, spans: &[RowSpan], y: &mut Tensor2);
+}
+
+/// Run a whole stacked batch through one ordinary [`Weights`] source
+/// (single-variant batches, A/B baselines). Row spans are ignored — every
+/// row executes the same weights.
+pub struct Uniform<W>(pub W);
+
+impl<W: Weights> BatchSource for Uniform<W> {
+    fn flat(&self) -> &FlatParams {
+        self.0.flat()
+    }
+
+    fn entries(&self) -> usize {
+        usize::MAX
+    }
+
+    fn forward_module(&self, id: ModuleId, x: &Tensor2, _spans: &[RowSpan], y: &mut Tensor2) {
+        self.0.op(id).forward_into(x, y);
+    }
+}
+
+/// How one plan entry contributes to the batched forward.
+enum PlanEntry {
+    /// The entry *is* the shared base storage (dense weights, no delta).
+    Base,
+    /// Shared base + this packed delta.
+    Packed(PackedVariant),
+}
+
+/// Execution plan for one shared-base group of a mixed-variant batch: the
+/// base GEMM runs once per module for every row in the stacked batch, each
+/// entry's packed mask reduction runs only on its own rows.
+pub struct BatchPlan {
+    base: Arc<FlatParams>,
+    entries: Vec<PlanEntry>,
+}
+
+impl BatchPlan {
+    /// Group a mixed batch by shared base storage. Every [`VariantWeights`]
+    /// whose underlying parameter `Arc` is the same object lands in one
+    /// plan: packed variants of one base all do, dense variants only with
+    /// requests holding the same materialized `Arc`. Returns each plan with
+    /// the input indices it covers, in first-appearance order; plan entry
+    /// `j` executes the weights of input index `members[j]`.
+    pub fn group(weights: &[VariantWeights]) -> Vec<(BatchPlan, Vec<usize>)> {
+        let mut plans: Vec<(BatchPlan, Vec<usize>)> = Vec::new();
+        let mut by_base: HashMap<*const FlatParams, usize> = HashMap::new();
+        for (i, w) in weights.iter().enumerate() {
+            let (key, base, entry) = match w {
+                VariantWeights::Packed(pv) => (
+                    Arc::as_ptr(pv.base()),
+                    pv.base().clone(),
+                    PlanEntry::Packed(pv.clone()),
+                ),
+                VariantWeights::Dense(p, _) => (Arc::as_ptr(p), p.clone(), PlanEntry::Base),
+            };
+            let slot = match by_base.get(&key) {
+                Some(&s) => s,
+                None => {
+                    by_base.insert(key, plans.len());
+                    plans.push((BatchPlan { base, entries: Vec::new() }, Vec::new()));
+                    plans.len() - 1
+                }
+            };
+            plans[slot].0.entries.push(entry);
+            plans[slot].1.push(i);
+        }
+        plans
+    }
+
+    /// The shared base every entry of this plan executes against.
+    pub fn base(&self) -> &Arc<FlatParams> {
+        &self.base
+    }
+
+    /// How many of this plan's entries carry a packed delta (the rest are
+    /// pure base/dense rows).
+    pub fn packed_entries(&self) -> usize {
+        self.entries.iter().filter(|e| matches!(e, PlanEntry::Packed(_))).count()
+    }
+}
+
+impl BatchSource for BatchPlan {
+    fn flat(&self) -> &FlatParams {
+        &self.base
+    }
+
+    fn entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn forward_module(&self, id: ModuleId, x: &Tensor2, spans: &[RowSpan], y: &mut Tensor2) {
+        // ONE shared base GEMM for every row in the stacked batch…
+        let (rows, cols) = id.kind.shape(self.base.cfg());
+        DenseLinear::new(self.base.module(id), rows, cols).forward_into(x, y);
+        // …then each variant's packed mask reduction on its own rows only.
+        for s in spans {
+            if let PlanEntry::Packed(pv) = &self.entries[s.entry] {
+                if let Some(m) = pv.module(id) {
+                    add_delta_rows(m, x, y, s.start..s.end);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::pack::PackedMask;
+    use crate::delta::types::{Axis, DeltaModel, DeltaModule};
+    use crate::exec::FusedDeltaLinear;
+    use crate::model::config::ModelConfig;
+    use crate::util::rng::Rng;
+
+    fn packed_variant(base: &Arc<FlatParams>, seed: u64, n_modules: usize) -> PackedVariant {
+        let cfg = base.cfg();
+        let axes = [Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(3)];
+        let ids = base.layout.patchable_modules();
+        let mut modules = Vec::new();
+        for (i, &id) in ids.iter().take(n_modules).enumerate() {
+            let (rows, cols) = id.kind.shape(cfg);
+            let mut r = Rng::new(seed * 31 + i as u64);
+            let delta: Vec<f32> = (0..rows * cols).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let axis = axes[(seed as usize + i) % axes.len()];
+            modules.push(DeltaModule {
+                id,
+                mask: PackedMask::pack(&delta, rows, cols),
+                axis,
+                scales: (0..axis.n_scales(rows, cols)).map(|_| r.uniform_in(0.01, 0.1)).collect(),
+            });
+        }
+        let delta = DeltaModel {
+            variant: format!("s{seed}"),
+            base_config: cfg.name.clone(),
+            meta: Default::default(),
+            modules,
+        };
+        PackedVariant::new(base.clone(), Arc::new(delta)).unwrap()
+    }
+
+    #[test]
+    fn group_partitions_by_shared_base() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base_a = Arc::new(FlatParams::init(&cfg, 1));
+        let base_b = Arc::new(FlatParams::init(&cfg, 2));
+        let weights = vec![
+            VariantWeights::Packed(packed_variant(&base_a, 1, 2)),
+            VariantWeights::Packed(packed_variant(&base_b, 2, 2)),
+            VariantWeights::Packed(packed_variant(&base_a, 3, 2)),
+            VariantWeights::Dense(base_a.clone(), 1),
+        ];
+        let plans = BatchPlan::group(&weights);
+        // base_a packed variants + the dense Arc of base_a share one plan;
+        // base_b gets its own.
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].1, vec![0, 2, 3]);
+        assert_eq!(plans[0].0.entries(), 3);
+        assert_eq!(plans[0].0.packed_entries(), 2);
+        assert_eq!(plans[1].1, vec![1]);
+        assert!(Arc::ptr_eq(plans[0].0.base(), &base_a));
+        assert!(Arc::ptr_eq(plans[1].0.base(), &base_b));
+    }
+
+    #[test]
+    fn plan_module_forward_is_bitwise_equal_to_per_entry_ops() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = Arc::new(FlatParams::init(&cfg, 5));
+        let weights = vec![
+            VariantWeights::Packed(packed_variant(&base, 7, 3)),
+            VariantWeights::Dense(base.clone(), 1),
+            VariantWeights::Packed(packed_variant(&base, 8, 3)),
+        ];
+        let plans = BatchPlan::group(&weights);
+        assert_eq!(plans.len(), 1);
+        let plan = &plans[0].0;
+        let id = base.layout.patchable_modules()[0];
+        let (d_out, d_in) = id.kind.shape(&cfg);
+        // Stacked input: rows 0..3 entry 0, 3..4 entry 1, 4..7 entry 2.
+        let mut r = Rng::new(99);
+        let mut x = Tensor2::zeros(7, d_in);
+        r.fill_normal(&mut x.data, 1.0);
+        let spans = vec![
+            RowSpan { start: 0, end: 3, entry: 0 },
+            RowSpan { start: 3, end: 4, entry: 1 },
+            RowSpan { start: 4, end: 7, entry: 2 },
+        ];
+        let mut y = Tensor2::zeros(7, d_out);
+        plan.forward_module(id, &x, &spans, &mut y);
+        for s in &spans {
+            let sub = Tensor2::from_vec(
+                s.end - s.start,
+                d_in,
+                x.data[s.start * d_in..s.end * d_in].to_vec(),
+            );
+            let want = match &weights[plans[0].1[s.entry]] {
+                VariantWeights::Packed(pv) => {
+                    FusedDeltaLinear::new(base.module(id), pv.module(id).unwrap()).forward(&sub)
+                }
+                VariantWeights::Dense(p, _) => {
+                    DenseLinear::new(p.module(id), d_out, d_in).forward(&sub)
+                }
+            };
+            for (ri, row) in (s.start..s.end).enumerate() {
+                for j in 0..d_out {
+                    assert_eq!(
+                        y.at(row, j).to_bits(),
+                        want.at(ri, j).to_bits(),
+                        "entry {} row {row} col {j}",
+                        s.entry
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_source_runs_one_weights_for_all_rows() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = Arc::new(FlatParams::init(&cfg, 9));
+        let pv = packed_variant(&base, 4, 2);
+        let id = base.layout.patchable_modules()[0];
+        let (d_out, d_in) = id.kind.shape(&cfg);
+        let mut r = Rng::new(12);
+        let mut x = Tensor2::zeros(5, d_in);
+        r.fill_normal(&mut x.data, 1.0);
+        let src = Uniform(&pv);
+        let mut y = Tensor2::zeros(5, d_out);
+        // Spans are ignored by Uniform.
+        src.forward_module(id, &x, &[], &mut y);
+        let want = pv.op(id).forward(&x);
+        assert_eq!(y.data, want.data);
+    }
+}

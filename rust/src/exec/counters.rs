@@ -1,0 +1,51 @@
+//! Global execution counters for the serving hot path.
+//!
+//! The batched-execution benches assert the headline structural claim —
+//! "one base GEMM per module per batch, no matter how many variants or
+//! requests ride in it" — by reading these counters around a forward pass.
+//! A *base GEMM* is one pass of an activation tensor through a resident
+//! weight matrix: every [`DenseLinear`](super::DenseLinear) or
+//! [`FusedDeltaLinear`](super::FusedDeltaLinear) forward records one, and a
+//! [`BatchPlan`](super::BatchPlan) module forward records one for the whole
+//! stacked batch (its per-variant mask reductions are not GEMMs and are not
+//! counted).
+//!
+//! Relaxed atomics: the counters are a measurement aid, never
+//! synchronization. Absolute values are only meaningful when the caller
+//! controls all execution in the process (single-threaded benches); tests
+//! that may run concurrently should assert deltas with `>=` at most.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static BASE_GEMMS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one pass of activations through a resident base/dense weight
+/// matrix.
+pub(crate) fn record_base_gemm() {
+    BASE_GEMMS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Total base GEMMs since process start (or the last [`reset`]).
+pub fn base_gemms() -> u64 {
+    BASE_GEMMS.load(Ordering::Relaxed)
+}
+
+/// Reset all counters to zero (benches/tests only).
+pub fn reset() {
+    BASE_GEMMS.store(0, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        // Other tests run concurrently in this process, so only a relative
+        // lower bound is safe to assert.
+        let before = base_gemms();
+        record_base_gemm();
+        record_base_gemm();
+        assert!(base_gemms() >= before + 2);
+    }
+}

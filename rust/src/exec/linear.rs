@@ -18,6 +18,7 @@
 //! * Col axis: the scale varies along the row, so `z = v ⊙ x[t]` is formed
 //!   once per token and the delta term is `Σ_i sign(j,i)·z_i`.
 
+use super::counters;
 use crate::delta::types::{Axis, DeltaModule};
 use crate::tensor::{dot, Tensor2};
 use crate::util::par;
@@ -72,6 +73,7 @@ impl LinearOp for DenseLinear<'_> {
     fn forward_into(&self, x: &Tensor2, y: &mut Tensor2) {
         assert_eq!(x.cols, self.d_in, "input dim mismatch");
         assert_eq!((y.rows, y.cols), (x.rows, self.d_out), "output shape mismatch");
+        counters::record_base_gemm();
         let (k, m) = (self.d_in, self.d_out);
         let a = &x.data;
         let w = self.w;
@@ -124,6 +126,7 @@ impl LinearOp for FusedDeltaLinear<'_> {
         let (d_out, d_in) = (m.d_out(), m.d_in());
         assert_eq!(x.cols, d_in, "input dim mismatch");
         assert_eq!((y.rows, y.cols), (x.rows, d_out), "output shape mismatch");
+        counters::record_base_gemm();
         let base = self.base;
         match m.axis {
             Axis::Col => {
@@ -163,28 +166,132 @@ impl LinearOp for FusedDeltaLinear<'_> {
 }
 
 /// `Σ_i sign_i · vals[i]` where `sign_i` is bit `i` of the packed row
-/// (1 → +1, 0 → −1). Word-at-a-time: full 32-bit words run a constant-bound
-/// inner loop over fixed-size chunks (vectorizes, same trick as
-/// `delta::apply`), the final partial word is handled separately.
+/// (1 → +1, 0 → −1) — the per-row mask reduction at the heart of every
+/// fused delta path. The sign is injected by XOR-flipping the IEEE sign
+/// bit, so ±vals[i] never branches.
+///
+/// Dispatch: an AVX2 wide path when the CPU has it (runtime-detected, the
+/// check is a cached atomic load), otherwise the portable [`signed_sum_u64`]
+/// word path. Both consume the same u32 bitplane; within one process the
+/// same path always runs, so results are reproducible run-to-run.
 #[inline]
-fn signed_sum(vals: &[f32], words: &[u32]) -> f32 {
-    let d_in = vals.len();
-    let full = d_in / 32;
-    let mut acc = 0f32;
-    for wi in 0..full {
-        let w = words[wi];
-        let v32: &[f32; 32] = vals[wi * 32..wi * 32 + 32].try_into().unwrap();
-        let mut s = 0f32;
-        for b in 0..32 {
-            s += f32::from_bits(v32[b].to_bits() ^ ((((w >> b) & 1) ^ 1) << 31));
+pub fn signed_sum(vals: &[f32], words: &[u32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if vals.len() >= 32 && is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 presence was just checked at runtime.
+            return unsafe { signed_sum_avx2(vals, words) };
         }
-        acc += s;
     }
-    for b in 0..d_in - full * 32 {
-        let i = full * 32 + b;
-        acc += f32::from_bits(vals[i].to_bits() ^ ((((words[full] >> b) & 1) ^ 1) << 31));
+    signed_sum_u64(vals, words)
+}
+
+/// Portable word path: two u32 mask words fold into one `u64` bitplane word
+/// and a constant-bound 64-lane inner loop accumulates into eight partial
+/// sums, so the compiler can keep SIMD lanes busy on any target. The ragged
+/// tail past the last full u64 is handled bit by bit.
+pub fn signed_sum_u64(vals: &[f32], words: &[u32]) -> f32 {
+    debug_assert_eq!(words.len(), vals.len().div_ceil(32), "mask/values length mismatch");
+    let d_in = vals.len();
+    let full = d_in / 64;
+    let mut lanes = [0f32; 8];
+    for wi in 0..full {
+        let w = words[2 * wi] as u64 | (words[2 * wi + 1] as u64) << 32;
+        let v64: &[f32; 64] = vals[wi * 64..wi * 64 + 64].try_into().unwrap();
+        for c in 0..8 {
+            for l in 0..8 {
+                let b = c * 8 + l;
+                let flip = ((((w >> b) as u32) & 1) ^ 1) << 31;
+                lanes[l] += f32::from_bits(v64[b].to_bits() ^ flip);
+            }
+        }
+    }
+    let mut acc = lanes.iter().sum::<f32>();
+    for i in full * 64..d_in {
+        let w = words[i / 32];
+        acc += f32::from_bits(vals[i].to_bits() ^ ((((w >> (i % 32)) & 1) ^ 1) << 31));
     }
     acc
+}
+
+/// AVX2 wide path: for each u32 mask word, four 8-lane blocks derive their
+/// ±sign masks straight from the word (`srlv` by lane index, XOR against 1,
+/// shift into the sign bit) and XOR them onto the loaded values — eight
+/// signed accumulations per instruction, no unpacking to ±1.0 floats.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn signed_sum_avx2(vals: &[f32], words: &[u32]) -> f32 {
+    use std::arch::x86_64::*;
+    let d_in = vals.len();
+    let full = d_in / 32;
+    let lane_idx = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+    let one = _mm256_set1_epi32(1);
+    let mut acc = _mm256_setzero_ps();
+    for wi in 0..full {
+        let w = _mm256_set1_epi32(words[wi] as i32);
+        for c in 0..4 {
+            let sh = _mm256_add_epi32(lane_idx, _mm256_set1_epi32((c * 8) as i32));
+            let bit = _mm256_and_si256(_mm256_srlv_epi32(w, sh), one);
+            let flip = _mm256_slli_epi32(_mm256_xor_si256(bit, one), 31);
+            let v = _mm256_loadu_ps(vals.as_ptr().add(wi * 32 + c * 8));
+            acc = _mm256_add_ps(acc, _mm256_xor_ps(v, _mm256_castsi256_ps(flip)));
+        }
+    }
+    let mut buf = [0f32; 8];
+    _mm256_storeu_ps(buf.as_mut_ptr(), acc);
+    let mut s: f32 = buf.iter().sum();
+    for i in full * 32..d_in {
+        let w = words[i / 32];
+        s += f32::from_bits(vals[i].to_bits() ^ ((((w >> (i % 32)) & 1) ^ 1) << 31));
+    }
+    s
+}
+
+/// Add the packed-delta term `v ⊙ (x·Bᵀ)` of `m` for rows `rows` of `x`
+/// into the same rows of `y`, which already hold the base GEMM result —
+/// the per-variant half of a batched shared-base forward
+/// ([`BatchPlan`](super::BatchPlan)).
+///
+/// Each output element gets exactly one `+=` of the delta term, so
+/// `base + delta` lands with the same rounding as the single-expression
+/// fused path in [`FusedDeltaLinear`]; the batched property tests rely on
+/// that bitwise equality.
+pub fn add_delta_rows(m: &DeltaModule, x: &Tensor2, y: &mut Tensor2, rows: std::ops::Range<usize>) {
+    let (d_out, d_in) = (m.d_out(), m.d_in());
+    assert_eq!(x.cols, d_in, "input dim mismatch for {}", m.id);
+    assert_eq!(y.cols, d_out, "output dim mismatch for {}", m.id);
+    assert!(rows.end <= x.rows && x.rows == y.rows, "row slice out of range");
+    if rows.is_empty() {
+        return;
+    }
+    let n_rows = rows.end - rows.start;
+    let y_slice = &mut y.data[rows.start * d_out..rows.end * d_out];
+    match m.axis {
+        Axis::Col => {
+            par::parallel_rows_mut(y_slice, n_rows, d_out, 8, |row0, chunk| {
+                let mut z = vec![0f32; d_in]; // v ⊙ x, reused across rows
+                for (ri, yrow) in chunk.chunks_mut(d_out).enumerate() {
+                    let xrow = x.row(rows.start + row0 + ri);
+                    for ((zi, &xi), &vi) in z.iter_mut().zip(xrow).zip(&m.scales) {
+                        *zi = vi * xi;
+                    }
+                    for (j, o) in yrow.iter_mut().enumerate() {
+                        *o += signed_sum(&z, m.mask.row_words(j));
+                    }
+                }
+            });
+        }
+        _ => {
+            par::parallel_rows_mut(y_slice, n_rows, d_out, 8, |row0, chunk| {
+                for (ri, yrow) in chunk.chunks_mut(d_out).enumerate() {
+                    let xrow = x.row(rows.start + row0 + ri);
+                    for (j, o) in yrow.iter_mut().enumerate() {
+                        *o += m.scale_at(j, 0) * signed_sum(xrow, m.mask.row_words(j));
+                    }
+                }
+            });
+        }
+    }
 }
 
 /// Closed enum over the two backends so call sites get static dispatch
@@ -297,6 +404,57 @@ mod tests {
                 vals.iter().enumerate().map(|(i, &v)| v * mask.sign(0, i)).sum();
             let got = signed_sum(&vals, mask.row_words(0));
             assert!((got - want).abs() < 1e-4, "d_in {d_in}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn signed_sum_word_path_matches_reference_on_ragged_columns() {
+        // The u64 word path folds two mask words at a time; ragged
+        // (non-multiple-of-64) columns exercise every tail shape, including
+        // the one-full-u32-word-plus-bits case (96, 100) and sub-word rows.
+        let mut r = Rng::new(29);
+        for d_in in [1usize, 7, 31, 32, 33, 63, 64, 65, 96, 100, 127, 128, 129, 200] {
+            let delta: Vec<f32> = (0..d_in).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let mask = PackedMask::pack(&delta, 1, d_in);
+            let vals: Vec<f32> = (0..d_in).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let want: f32 = vals.iter().enumerate().map(|(i, &v)| v * mask.sign(0, i)).sum();
+            let tol = 1e-4 * (1.0 + want.abs());
+            let word = signed_sum_u64(&vals, mask.row_words(0));
+            assert!((word - want).abs() < tol, "u64 path d_in {d_in}: {word} vs {want}");
+            // The dispatched path (AVX2 where available) must agree with the
+            // portable word path to reassociation noise.
+            let disp = signed_sum(&vals, mask.row_words(0));
+            assert!((disp - word).abs() < tol, "dispatch d_in {d_in}: {disp} vs {word}");
+        }
+    }
+
+    #[test]
+    fn add_delta_rows_matches_fused_rows_bitwise() {
+        for (k, axis) in
+            [Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(3)].into_iter().enumerate()
+        {
+            let (d_out, d_in) = (9, 100); // ragged: partial mask words
+            let (base, m) = mk_module(d_out, d_in, axis, 61 + k as u64);
+            let mut r = Rng::new(700 + k as u64);
+            let x = rand_x(&mut r, 6, d_in);
+            // y starts as the base GEMM for every row; the delta term is then
+            // added only to rows 2..5.
+            let mut y = DenseLinear::new(&base, d_out, d_in).forward(&x);
+            let base_only = y.clone();
+            add_delta_rows(&m, &x, &mut y, 2..5);
+            let fused = FusedDeltaLinear::new(&base, &m).forward(&x);
+            for t in 0..6 {
+                for j in 0..d_out {
+                    let got = y.at(t, j);
+                    let want =
+                        if (2..5).contains(&t) { fused.at(t, j) } else { base_only.at(t, j) };
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "axis {axis:?} row {t} col {j}: {got} vs {want}"
+                    );
+                }
+            }
         }
     }
 

@@ -4,7 +4,13 @@
 //! reconstructing `Ŵ`).
 //!
 //! * [`linear`] — [`LinearOp`] trait, [`DenseLinear`], [`FusedDeltaLinear`]
-//!   (word-at-a-time signed accumulation over the mask bitplane).
+//!   (u64-word / AVX2 signed accumulation over the mask bitplane) and the
+//!   slice-wise [`linear::add_delta_rows`] mask reduction.
+//! * [`batch`] — [`BatchPlan`]: batched multi-variant execution, one shared
+//!   base GEMM per module for a whole mixed-variant batch with per-variant
+//!   mask reductions on row slices.
+//! * [`counters`] — global op counters (base GEMMs) the benches use to
+//!   assert the shared-base structure.
 //! * [`weights`] — [`Weights`] sources: [`FlatParams`](crate::model::FlatParams)
 //!   (dense), [`PackedVariant`] (base + packed delta), and the cache-facing
 //!   [`VariantWeights`] with packed-byte residency accounting.
@@ -13,8 +19,11 @@
 //! default and multiplies resident-variant capacity by the compression
 //! ratio, because a cached variant is only mask words + scales.
 
+pub mod batch;
+pub mod counters;
 pub mod linear;
 pub mod weights;
 
-pub use linear::{AnyLinear, DenseLinear, FusedDeltaLinear, LinearOp};
+pub use batch::{BatchPlan, BatchSource, RowSpan, Uniform};
+pub use linear::{signed_sum, AnyLinear, DenseLinear, FusedDeltaLinear, LinearOp};
 pub use weights::{ExecMode, PackedVariant, VariantWeights, Weights};

@@ -137,6 +137,12 @@ impl PackedVariant {
         &self.delta
     }
 
+    /// The packed delta module covering projection `id`, if any (`None`
+    /// means the projection executes the shared base unmodified).
+    pub fn module(&self, id: ModuleId) -> Option<&crate::delta::types::DeltaModule> {
+        self.by_id.get(&id).map(|&i| &self.delta.modules[i])
+    }
+
     /// Per-variant resident bytes: packed masks + in-memory f32 scales (the
     /// shared base is charged once by the cache, not per variant).
     pub fn resident_bytes(&self) -> u64 {
@@ -155,10 +161,8 @@ impl Weights for PackedVariant {
     }
 
     fn op(&self, id: ModuleId) -> AnyLinear<'_> {
-        match self.by_id.get(&id) {
-            Some(&i) => {
-                AnyLinear::Fused(FusedDeltaLinear::new(self.base.module(id), &self.delta.modules[i]))
-            }
+        match self.module(id) {
+            Some(m) => AnyLinear::Fused(FusedDeltaLinear::new(self.base.module(id), m)),
             None => {
                 let (rows, cols) = id.kind.shape(self.base.cfg());
                 AnyLinear::Dense(DenseLinear::new(self.base.module(id), rows, cols))

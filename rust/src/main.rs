@@ -24,9 +24,12 @@ USAGE:
   pawd publish <variant_dir> <name> <delta.pawd> publish the next version of a variant
   pawd rollback <variant_dir> <name> [version]   flip a variant's alias back
   pawd versions <variant_dir>                    list variants + version histories
+  pawd gc <variant_dir> [name]                   delete retired versions' artifact files
+  pawd bench-diff <baseline.json> <current.json> [--max-regression 0.20]
+                                                 diff two BENCH_*.json files (CI perf gate)
   pawd presets                                   list model config presets
 
-publish/rollback/versions administer a variant directory OFFLINE — one
+publish/rollback/versions/gc administer a variant directory OFFLINE — one
 process owns a registry dir at a time, so never point them at a directory a
 running `pawd serve` owns (use the server's admin client instead).
 
@@ -44,6 +47,8 @@ fn main() -> Result<()> {
         Some("publish") => cmd_publish(&args[1..]),
         Some("rollback") => cmd_rollback(&args[1..]),
         Some("versions") => cmd_versions(&args[1..]),
+        Some("gc") => cmd_gc(&args[1..]),
+        Some("bench-diff") => cmd_bench_diff(&args[1..]),
         Some("presets") => {
             for p in ["tiny", "llama-mini", "qwen-mini", "phi-mini", "base-110m"] {
                 let c = ModelConfig::preset(p).unwrap();
@@ -176,6 +181,93 @@ fn cmd_versions(args: &[String]) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+fn cmd_gc(args: &[String]) -> Result<()> {
+    let dir = PathBuf::from(args.first().context("missing <variant_dir>")?);
+    let name = args.get(1).map(|s| s.as_str());
+    let registry = pawd::coordinator::VariantRegistry::open(&dir)?;
+    let report = registry.gc(name)?;
+    println!(
+        "gc: removed {} retired artifact file(s), freed {}",
+        report.files_removed,
+        fmt_bytes(report.bytes_freed)
+    );
+    Ok(())
+}
+
+fn cmd_bench_diff(args: &[String]) -> Result<()> {
+    use pawd::util::benchkit::{diff_reports, BenchReport, Table};
+    let mut paths: Vec<&String> = Vec::new();
+    let mut max_regression = 0.20f64;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--max-regression" {
+            max_regression = args
+                .get(i + 1)
+                .context("--max-regression needs a value (e.g. 0.20)")?
+                .parse()?;
+            i += 2;
+        } else {
+            paths.push(&args[i]);
+            i += 1;
+        }
+    }
+    if paths.len() != 2 {
+        bail!("usage: pawd bench-diff <baseline.json> <current.json> [--max-regression 0.20]");
+    }
+    let (baseline_path, current_path) = (paths[0], paths[1]);
+    let baseline = BenchReport::load(baseline_path)?;
+    let current = BenchReport::load(current_path)?;
+    if current.scenarios.is_empty() {
+        bail!("{current_path}: no scenarios — the benches produced no JSON output");
+    }
+    let diff = diff_reports(&baseline, &current);
+    let mut t = Table::new(&["scenario", "metric", "baseline", "current", "change", "gate"]);
+    let mut regressions = 0usize;
+    for r in &diff.rows {
+        let verdict = if !r.gated {
+            "-"
+        } else if r.regressed(max_regression) {
+            regressions += 1;
+            "REGRESSED"
+        } else {
+            "ok"
+        };
+        t.row(&[
+            r.scenario.clone(),
+            r.metric.clone(),
+            format!("{:.3}", r.baseline),
+            format!("{:.3}", r.current),
+            format!("{:+.1}%", r.change * 100.0),
+            verdict.to_string(),
+        ]);
+    }
+    t.print(&format!(
+        "bench diff: {current_path} vs {baseline_path} (gate: throughput -{:.0}%)",
+        max_regression * 100.0
+    ));
+    for name in &diff.added {
+        println!("new scenario (no baseline yet): {name}");
+    }
+    for name in &diff.missing {
+        println!("MISSING scenario (present in baseline): {name}");
+    }
+    if baseline.provisional {
+        println!(
+            "baseline is PROVISIONAL — gate is report-only. Promote it by copying a trusted \
+             CI run's {current_path} over {baseline_path} and dropping \"provisional\"."
+        );
+        return Ok(());
+    }
+    if regressions > 0 || !diff.missing.is_empty() {
+        bail!(
+            "perf gate failed: {regressions} regressed metric(s), {} missing scenario(s)",
+            diff.missing.len()
+        );
+    }
+    println!("perf gate passed");
     Ok(())
 }
 

@@ -14,7 +14,7 @@
 
 use super::config::ModelConfig;
 use super::params::FlatParams;
-use crate::exec::{LinearOp, Weights};
+use crate::exec::{BatchSource, LinearOp, RowSpan, Weights};
 use crate::model::params::{ModuleId, ProjKind};
 use crate::tensor::ops::{log_softmax_into, rmsnorm_into, silu, softmax_inplace, RopeTable};
 use crate::tensor::{dot, Tensor2};
@@ -134,8 +134,6 @@ impl Transformer {
         let t_len = tokens.len();
         assert!(t_len > 0 && t_len <= cfg.max_seq, "seq len {} out of range", t_len);
         let d = cfg.dim;
-        let nh = cfg.n_heads;
-        let hd = cfg.head_dim();
         let params = weights.flat();
         let layout = &params.layout;
 
@@ -169,35 +167,10 @@ impl Transformer {
                 t.k_out = k.clone();
                 t.v_out = v.clone();
             }
-            // RoPE per head on q, k.
-            for pos in 0..t_len {
-                for h in 0..nh {
-                    self.rope.apply(&mut q.row_mut(pos)[h * hd..(h + 1) * hd], pos);
-                    self.rope.apply(&mut k.row_mut(pos)[h * hd..(h + 1) * hd], pos);
-                }
-            }
-            // Causal attention, head by head.
-            let scale = 1.0 / (hd as f32).sqrt();
+            // RoPE per head on q, k; causal attention head by head.
+            self.rope_rows(&mut q, &mut k, 0, t_len);
             let mut attn_out = Tensor2::zeros(t_len, d);
-            for h in 0..nh {
-                let hs = h * hd;
-                let mut scores = vec![0f32; t_len]; // reused row buffer
-                for qi in 0..t_len {
-                    let qrow = &q.row(qi)[hs..hs + hd];
-                    for ki in 0..=qi {
-                        scores[ki] = dot(qrow, &k.row(ki)[hs..hs + hd]) * scale;
-                    }
-                    softmax_inplace(&mut scores[..=qi]);
-                    let orow = &mut attn_out.row_mut(qi)[hs..hs + hd];
-                    for ki in 0..=qi {
-                        let w = scores[ki];
-                        let vrow = &v.row(ki)[hs..hs + hd];
-                        for (o, &vv) in orow.iter_mut().zip(vrow) {
-                            *o += w * vv;
-                        }
-                    }
-                }
-            }
+            self.attend_rows(&q, &k, &v, 0, t_len, &mut attn_out);
             let proj = op(ProjKind::O).forward(&attn_out); // [T, d]
             if tapping {
                 let t = taps.as_mut().unwrap();
@@ -246,6 +219,181 @@ impl Transformer {
         (lm.forward(&x), taps) // [T, vocab]
     }
 
+    /// RoPE per head for rows `row0..row0+len` of `q` and `k`, with
+    /// positions local to the slice (one sequence of a stacked batch).
+    fn rope_rows(&self, q: &mut Tensor2, k: &mut Tensor2, row0: usize, len: usize) {
+        let (nh, hd) = (self.cfg.n_heads, self.cfg.head_dim());
+        for pos in 0..len {
+            for h in 0..nh {
+                self.rope.apply(&mut q.row_mut(row0 + pos)[h * hd..(h + 1) * hd], pos);
+                self.rope.apply(&mut k.row_mut(row0 + pos)[h * hd..(h + 1) * hd], pos);
+            }
+        }
+    }
+
+    /// Causal attention over rows `row0..row0+len` of `q`/`k`/`v` (one
+    /// sequence of a stacked batch), accumulated into the same rows of
+    /// `out` (which must be zeroed).
+    fn attend_rows(
+        &self,
+        q: &Tensor2,
+        k: &Tensor2,
+        v: &Tensor2,
+        row0: usize,
+        len: usize,
+        out: &mut Tensor2,
+    ) {
+        let (nh, hd) = (self.cfg.n_heads, self.cfg.head_dim());
+        let scale = 1.0 / (hd as f32).sqrt();
+        for h in 0..nh {
+            let hs = h * hd;
+            let mut scores = vec![0f32; len]; // reused row buffer
+            for qi in 0..len {
+                let qrow = &q.row(row0 + qi)[hs..hs + hd];
+                for ki in 0..=qi {
+                    scores[ki] = dot(qrow, &k.row(row0 + ki)[hs..hs + hd]) * scale;
+                }
+                softmax_inplace(&mut scores[..=qi]);
+                let orow = &mut out.row_mut(row0 + qi)[hs..hs + hd];
+                for ki in 0..=qi {
+                    let w = scores[ki];
+                    let vrow = &v.row(row0 + ki)[hs..hs + hd];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Stacked multi-sequence forward against a [`BatchSource`]: every
+    /// sequence's token rows are concatenated into one activation tensor,
+    /// each linear projection runs **once** for the whole batch (one shared
+    /// base GEMM per module when `src` is a
+    /// [`BatchPlan`](crate::exec::BatchPlan)), and RoPE/attention stay
+    /// per-sequence on row slices. `seqs` pairs each token sequence with
+    /// the plan entry (variant) it executes.
+    ///
+    /// Per-sequence logits are bitwise identical to
+    /// [`forward_one`](Self::forward_one) against that sequence's own
+    /// weights: batching regroups work across requests, never the
+    /// arithmetic (the property tests assert exact equality).
+    pub fn forward_plan<S: BatchSource>(&self, src: &S, seqs: &[(usize, Vec<u8>)]) -> Vec<Tensor2> {
+        if seqs.is_empty() {
+            return Vec::new();
+        }
+        let cfg = &self.cfg;
+        let mut spans = Vec::with_capacity(seqs.len());
+        let mut total = 0usize;
+        for (entry, tokens) in seqs {
+            assert!(*entry < src.entries(), "plan entry {entry} out of range");
+            let t = tokens.len();
+            assert!(t > 0 && t <= cfg.max_seq, "seq len {t} out of range");
+            spans.push(RowSpan { start: total, end: total + t, entry: *entry });
+            total += t;
+        }
+        let d = cfg.dim;
+        let params = src.flat();
+        let layout = &params.layout;
+
+        // Embedding lookup -> x: [ΣT, d] (embeddings are shared parameters).
+        let mut x = Tensor2::zeros(total, d);
+        for (span, (_, tokens)) in spans.iter().zip(seqs) {
+            for (i, &tok) in tokens.iter().enumerate() {
+                let off = layout.embed + (tok as usize) * d;
+                x.row_mut(span.start + i).copy_from_slice(&params.data[off..off + d]);
+            }
+        }
+
+        let mut normed = Tensor2::zeros(total, d);
+        for l in 0..cfg.n_layers {
+            let lo = layout.layers[l].clone();
+            // One batched projection per module: the whole stacked batch in
+            // one call, with the per-variant row spans threaded through.
+            let fwd = |kind: ProjKind, input: &Tensor2| -> Tensor2 {
+                let (d_out, _) = kind.shape(cfg);
+                let mut y = Tensor2::zeros(total, d_out);
+                src.forward_module(ModuleId { layer: l, kind }, input, &spans, &mut y);
+                y
+            };
+            // --- attention block ---
+            let norm_w = &params.data[lo.attn_norm..lo.attn_norm + d];
+            for pos in 0..total {
+                rmsnorm_into(x.row(pos), norm_w, normed.row_mut(pos));
+            }
+            let mut q = fwd(ProjKind::Q, &normed); // [ΣT, d]
+            let mut k = fwd(ProjKind::K, &normed);
+            let v = fwd(ProjKind::V, &normed);
+            // RoPE + causal attention never cross sequence boundaries.
+            for s in &spans {
+                self.rope_rows(&mut q, &mut k, s.start, s.end - s.start);
+            }
+            let mut attn_out = Tensor2::zeros(total, d);
+            for s in &spans {
+                self.attend_rows(&q, &k, &v, s.start, s.end - s.start, &mut attn_out);
+            }
+            let proj = fwd(ProjKind::O, &attn_out); // [ΣT, d]
+            x.add_assign(&proj);
+
+            // --- MLP block ---
+            let norm_w = &params.data[lo.mlp_norm..lo.mlp_norm + d];
+            for pos in 0..total {
+                rmsnorm_into(x.row(pos), norm_w, normed.row_mut(pos));
+            }
+            let mut gate = fwd(ProjKind::Gate, &normed); // [ΣT, ff]
+            let up = fwd(ProjKind::Up, &normed);
+            for (g, &u) in gate.data.iter_mut().zip(&up.data) {
+                *g = silu(*g) * u;
+            }
+            let down = fwd(ProjKind::Down, &gate); // [ΣT, d]
+            x.add_assign(&down);
+        }
+
+        // Final norm + LM head (shared parameters), then split per sequence.
+        let fw = &params.data[layout.final_norm..layout.final_norm + d];
+        for pos in 0..total {
+            let src_row = x.row(pos).to_vec();
+            rmsnorm_into(&src_row, fw, x.row_mut(pos));
+        }
+        let lm = crate::exec::DenseLinear::new(
+            &params.data[layout.lm_head..layout.lm_head + cfg.vocab * d],
+            cfg.vocab,
+            d,
+        );
+        let logits = lm.forward(&x); // [ΣT, vocab]
+        spans
+            .iter()
+            .map(|s| {
+                Tensor2::from_vec(
+                    s.end - s.start,
+                    cfg.vocab,
+                    logits.data[s.start * cfg.vocab..s.end * cfg.vocab].to_vec(),
+                )
+            })
+            .collect()
+    }
+
+    /// Sum of log p(token[pos] | prefix) over `span`, from precomputed
+    /// logits for the full sequence ([`forward_one`](Self::forward_one)'s
+    /// output, or one sequence of a batched
+    /// [`forward_plan`](Self::forward_plan)).
+    pub fn span_logprob(
+        &self,
+        logits: &Tensor2,
+        tokens: &[u8],
+        span: std::ops::Range<usize>,
+    ) -> f64 {
+        assert!(span.start >= 1, "cannot score position 0 (no context)");
+        assert!(span.end <= tokens.len());
+        let mut lse_buf = vec![0f32; self.cfg.vocab];
+        let mut total = 0f64;
+        for pos in span {
+            log_softmax_into(logits.row(pos - 1), &mut lse_buf);
+            total += lse_buf[tokens[pos] as usize] as f64;
+        }
+        total
+    }
+
     /// Sum of log p(token[i] | tokens[..i]) over `span` (used for MC
     /// scoring: rank answer choices by completion log-likelihood).
     pub fn score_span<W: Weights>(
@@ -254,16 +402,8 @@ impl Transformer {
         tokens: &[u8],
         span: std::ops::Range<usize>,
     ) -> f64 {
-        assert!(span.start >= 1, "cannot score position 0 (no context)");
-        assert!(span.end <= tokens.len());
         let logits = self.forward_one(weights, tokens);
-        let mut lse_buf = vec![0f32; self.cfg.vocab];
-        let mut total = 0f64;
-        for pos in span {
-            log_softmax_into(logits.row(pos - 1), &mut lse_buf);
-            total += lse_buf[tokens[pos] as usize] as f64;
-        }
-        total
+        self.span_logprob(&logits, tokens, span)
     }
 
     /// Per-token cross-entropy (nats) of `tokens` under the model; the
@@ -433,6 +573,86 @@ mod tests {
         // And the packed variant must differ from the base (deltas applied).
         let base_logits = t.forward_one(base.as_ref(), &tokens);
         assert!(got.mse(&base_logits) > 0.0);
+    }
+
+    fn mk_packed(base: &std::sync::Arc<FlatParams>, seed: u64) -> crate::exec::PackedVariant {
+        use crate::delta::pack::PackedMask;
+        use crate::delta::types::{Axis, DeltaModel, DeltaModule};
+        use crate::util::rng::Rng;
+        let cfg = base.cfg();
+        let axes = [Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(3)];
+        let mut modules = Vec::new();
+        for (i, &id) in base.layout.patchable_modules().iter().enumerate() {
+            let (rows, cols) = id.kind.shape(cfg);
+            let mut r = Rng::new(seed * 131 + i as u64);
+            let delta: Vec<f32> = (0..rows * cols).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let axis = axes[(seed as usize + i) % axes.len()];
+            modules.push(DeltaModule {
+                id,
+                mask: PackedMask::pack(&delta, rows, cols),
+                axis,
+                scales: (0..axis.n_scales(rows, cols))
+                    .map(|_| r.uniform_in(0.005, 0.05))
+                    .collect(),
+            });
+        }
+        let delta = DeltaModel {
+            variant: format!("pv{seed}"),
+            base_config: cfg.name.clone(),
+            meta: Default::default(),
+            modules,
+        };
+        crate::exec::PackedVariant::new(base.clone(), std::sync::Arc::new(delta)).unwrap()
+    }
+
+    #[test]
+    fn forward_plan_mixed_variants_is_bitwise_equal_to_forward_one() {
+        use crate::exec::{BatchPlan, VariantWeights};
+        use std::sync::Arc;
+        let (_, base, t) = tiny();
+        let base = Arc::new(base);
+        let weights = vec![
+            VariantWeights::Packed(mk_packed(&base, 1)),
+            VariantWeights::Packed(mk_packed(&base, 2)),
+            VariantWeights::Dense(base.clone(), 1),
+            VariantWeights::Packed(mk_packed(&base, 3)),
+        ];
+        let plans = BatchPlan::group(&weights);
+        assert_eq!(plans.len(), 2, "packed trio shares the base; dense groups alone");
+        // Ragged mixed batch: entries interleaved, lengths 1..=8.
+        for (plan, members) in &plans {
+            let mut seqs: Vec<(usize, Vec<u8>)> = Vec::new();
+            for (entry, &wi) in members.iter().enumerate() {
+                for rep in 0..2u8 {
+                    let len = 1 + ((wi as u8 + rep) % 8) as usize;
+                    let tokens: Vec<u8> =
+                        (0..len).map(|p| (p as u8).wrapping_mul(37).wrapping_add(rep)).collect();
+                    seqs.push((entry, tokens));
+                }
+            }
+            let batched = t.forward_plan(plan, &seqs);
+            for ((entry, tokens), got) in seqs.iter().zip(&batched) {
+                let want = t.forward_one(&weights[members[*entry]], tokens);
+                assert_eq!(
+                    got.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    want.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "batched forward must be bitwise-equal to the per-request path"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forward_plan_uniform_matches_forward_one() {
+        use crate::exec::Uniform;
+        let (_, params, t) = tiny();
+        let seqs: Vec<(usize, Vec<u8>)> =
+            vec![(0, vec![1, 2, 3]), (0, vec![9, 8, 7, 6, 5]), (0, vec![42])];
+        let batched = t.forward_plan(&Uniform(&params), &seqs);
+        for ((_, tokens), got) in seqs.iter().zip(&batched) {
+            let want = t.forward_one(&params, tokens);
+            assert_eq!(got.data, want.data);
+        }
     }
 
     #[test]

@@ -4,8 +4,17 @@
 //! this module: warmup, repeated timed runs, and a stable one-line report
 //! (`name ... mean ± std  p50/p90  [iters]`), plus Markdown table helpers so
 //! bench output can be pasted into EXPERIMENTS.md verbatim.
+//!
+//! [`BenchReport`] is the machine-readable side: benches merge their
+//! scenario metrics into the JSON file named by `PAWD_BENCH_JSON` (CI
+//! writes `BENCH_pr.json` this way) and `pawd bench-diff` compares two such
+//! files — that pair is the CI perf-regression gate.
 
+use super::json::{self, Json};
 use super::stats::Summary;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark case.
@@ -176,6 +185,171 @@ impl Bench {
     }
 }
 
+/// Machine-readable bench output: a flat `scenario → {metric: value}` map.
+///
+/// File format (`BENCH_*.json`):
+///
+/// ```text
+/// { "format": 1,
+///   "provisional": false,
+///   "scenarios": { "bench/scenario": { "req_per_s": 123.0, "p50_us": 40.0 } } }
+/// ```
+///
+/// Metric naming is load-bearing for the gate: names ending in `per_s` are
+/// throughput (higher is better) and are the only ones gated; everything
+/// else (latency quantiles, ratios) is report-only, because absolute times
+/// on shared CI runners are too noisy to gate. `provisional: true` marks a
+/// baseline that has not yet been promoted from a real CI run — the diff is
+/// printed but never fails.
+#[derive(Clone, Debug, Default)]
+pub struct BenchReport {
+    pub provisional: bool,
+    pub scenarios: BTreeMap<String, BTreeMap<String, f64>>,
+}
+
+impl BenchReport {
+    pub fn new() -> BenchReport {
+        BenchReport::default()
+    }
+
+    /// Record one scenario's metrics (overwrites a same-named scenario).
+    pub fn add(&mut self, scenario: &str, metrics: &[(&str, f64)]) {
+        let m = metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        self.scenarios.insert(scenario.to_string(), m);
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<BenchReport> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench report {}", path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing bench report {}", path.display()))?;
+        let provisional = j.get("provisional").and_then(|v| v.as_bool()).unwrap_or(false);
+        let mut scenarios = BTreeMap::new();
+        if let Some(sc) = j.get("scenarios").and_then(|v| v.as_obj()) {
+            for (name, metrics) in sc {
+                let mut m = BTreeMap::new();
+                if let Some(mo) = metrics.as_obj() {
+                    for (k, v) in mo {
+                        if let Some(x) = v.as_f64() {
+                            m.insert(k.clone(), x);
+                        }
+                    }
+                }
+                scenarios.insert(name.clone(), m);
+            }
+        }
+        Ok(BenchReport { provisional, scenarios })
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let path = path.as_ref();
+        let scenarios: Vec<(&str, Json)> = self
+            .scenarios
+            .iter()
+            .map(|(name, m)| {
+                let metrics: Vec<(&str, Json)> =
+                    m.iter().map(|(k, v)| (k.as_str(), json::n(*v))).collect();
+                (name.as_str(), json::obj(metrics))
+            })
+            .collect();
+        let doc = json::obj(vec![
+            ("format", json::n(1.0)),
+            ("provisional", Json::Bool(self.provisional)),
+            ("scenarios", json::obj(scenarios)),
+        ]);
+        std::fs::write(path, doc.to_string())
+            .with_context(|| format!("writing bench report {}", path.display()))
+    }
+
+    /// Merge this report's scenarios into the JSON file at `path`,
+    /// creating it if needed (several bench binaries append into one
+    /// report file).
+    pub fn merge_into<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let path = path.as_ref();
+        let mut merged =
+            if path.exists() { BenchReport::load(path)? } else { BenchReport::new() };
+        for (k, v) in &self.scenarios {
+            merged.scenarios.insert(k.clone(), v.clone());
+        }
+        merged.save(path)
+    }
+
+    /// [`merge_into`](Self::merge_into) the file named by
+    /// `PAWD_BENCH_JSON`; a no-op when the variable is unset.
+    pub fn flush_env(&self) -> Result<()> {
+        match std::env::var("PAWD_BENCH_JSON") {
+            Ok(path) => self.merge_into(path),
+            Err(_) => Ok(()),
+        }
+    }
+}
+
+/// One metric comparison between two [`BenchReport`]s.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub scenario: String,
+    pub metric: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Relative change `(current - baseline) / baseline`.
+    pub change: f64,
+    /// Whether this metric participates in the regression gate
+    /// (throughput metrics only — see [`BenchReport`]).
+    pub gated: bool,
+}
+
+impl DiffRow {
+    /// A gated metric that dropped more than `max_regression` (e.g. `0.20`
+    /// = 20% throughput loss).
+    pub fn regressed(&self, max_regression: f64) -> bool {
+        self.gated && self.change < -max_regression
+    }
+}
+
+/// Result of comparing a current report against a baseline.
+#[derive(Clone, Debug, Default)]
+pub struct BenchDiff {
+    pub rows: Vec<DiffRow>,
+    /// Scenarios present in the baseline but missing from the current run
+    /// (bench coverage regressed — the gate fails on these).
+    pub missing: Vec<String>,
+    /// Scenarios the baseline does not know yet (report-only).
+    pub added: Vec<String>,
+}
+
+/// Compare `current` against `baseline`, metric by metric.
+pub fn diff_reports(baseline: &BenchReport, current: &BenchReport) -> BenchDiff {
+    let mut diff = BenchDiff::default();
+    for (name, bm) in &baseline.scenarios {
+        match current.scenarios.get(name) {
+            None => diff.missing.push(name.clone()),
+            Some(cm) => {
+                for (metric, &bv) in bm {
+                    if let Some(&cv) = cm.get(metric) {
+                        let change =
+                            if bv.abs() < f64::EPSILON { 0.0 } else { (cv - bv) / bv };
+                        diff.rows.push(DiffRow {
+                            scenario: name.clone(),
+                            metric: metric.clone(),
+                            baseline: bv,
+                            current: cv,
+                            change,
+                            gated: metric.ends_with("per_s"),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    for name in current.scenarios.keys() {
+        if !baseline.scenarios.contains_key(name) {
+            diff.added.push(name.clone());
+        }
+    }
+    diff
+}
+
 /// Markdown table printer for paper-style result tables.
 pub struct Table {
     headers: Vec<String>,
@@ -262,5 +436,43 @@ mod tests {
     fn table_arity_checked() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only-one".to_string()]);
+    }
+
+    #[test]
+    fn bench_report_roundtrips_and_merges() {
+        let path = std::env::temp_dir().join("pawd_test_bench_report.json");
+        let _ = std::fs::remove_file(&path);
+        let mut a = BenchReport::new();
+        a.add("s1/alpha", &[("req_per_s", 120.5), ("p50_us", 40.0)]);
+        a.save(&path).unwrap();
+        let mut b = BenchReport::new();
+        b.add("s1/beta", &[("req_per_s", 77.0)]);
+        // Merge the way the bench binaries do (flush_env is this plus an
+        // env lookup; mutating the environment from a parallel test binary
+        // is UB on glibc, so the seam is tested directly).
+        b.merge_into(&path).unwrap();
+        let merged = BenchReport::load(&path).unwrap();
+        assert!(!merged.provisional);
+        assert_eq!(merged.scenarios.len(), 2);
+        assert_eq!(merged.scenarios["s1/alpha"]["req_per_s"], 120.5);
+        assert_eq!(merged.scenarios["s1/beta"]["req_per_s"], 77.0);
+    }
+
+    #[test]
+    fn diff_gates_throughput_only_and_flags_missing() {
+        let mut base = BenchReport::new();
+        base.add("a", &[("req_per_s", 100.0), ("p99_us", 50.0)]);
+        base.add("gone", &[("req_per_s", 10.0)]);
+        let mut cur = BenchReport::new();
+        cur.add("a", &[("req_per_s", 70.0), ("p99_us", 500.0)]);
+        cur.add("fresh", &[("req_per_s", 5.0)]);
+        let diff = diff_reports(&base, &cur);
+        assert_eq!(diff.missing, vec!["gone".to_string()]);
+        assert_eq!(diff.added, vec!["fresh".to_string()]);
+        let tput = diff.rows.iter().find(|r| r.metric == "req_per_s").unwrap();
+        assert!(tput.gated && tput.regressed(0.2), "-30% throughput must gate");
+        assert!(!tput.regressed(0.5), "within a 50% budget it passes");
+        let lat = diff.rows.iter().find(|r| r.metric == "p99_us").unwrap();
+        assert!(!lat.gated && !lat.regressed(0.2), "latency is report-only");
     }
 }

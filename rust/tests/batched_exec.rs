@@ -1,0 +1,170 @@
+//! Batched multi-variant execution: the shared-base `BatchPlan` path must
+//! be *bitwise* equal to the per-request fused path, from the exec layer up
+//! through the serving coordinator's mixed batch windows.
+
+use pawd::coordinator::{Engine, Payload, RespBody, Server, ServerConfig, VariantStore};
+use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
+use pawd::delta::format::save_delta;
+use pawd::exec::{BatchPlan, ExecMode, VariantWeights};
+use pawd::model::config::ModelConfig;
+use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
+use pawd::model::{FlatParams, Transformer};
+use pawd::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn setup_store(dir: &PathBuf, n_variants: usize) -> (Arc<FlatParams>, VariantStore) {
+    let _ = std::fs::remove_dir_all(dir);
+    std::fs::create_dir_all(dir).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 123));
+    let docs: Vec<Vec<u8>> = (0..3)
+        .map(|i| (0..40).map(|t| ((t * 5 + i * 11) % 200 + 20) as u8).collect())
+        .collect();
+    let opts = CompressOptions { fit: FitMode::ClosedForm, ..Default::default() };
+    for k in 0..n_variants {
+        let ft = synth_finetune(
+            &base,
+            &SynthDeltaSpec { seed: 4000 + k as u64, ..Default::default() },
+        );
+        let (delta, _, _) = compress_model(&format!("var{k}"), &base, &ft, &docs, &opts);
+        save_delta(dir.join(format!("var{k}.pawd")), &delta).unwrap();
+    }
+    let store = VariantStore::new(base.clone(), dir).with_mode(ExecMode::Fused);
+    (base, store)
+}
+
+/// Property: over random mixed batches (variant assignment, sequence count
+/// and lengths), a `BatchPlan` forward is bitwise-equal to running every
+/// sequence through the per-request `FusedDeltaLinear` path.
+#[test]
+fn prop_mixed_batch_plan_forward_is_bitwise_equal_to_per_request() {
+    let dir = std::env::temp_dir().join("pawd_itest_batched_prop");
+    let (base, store) = setup_store(&dir, 3);
+    let tf = Transformer::new(base.cfg());
+    let weights: Vec<VariantWeights> =
+        (0..3).map(|k| store.load(&format!("var{k}")).unwrap().weights).collect();
+    assert!(weights.iter().all(|w| w.is_packed()));
+
+    let mut rng = Rng::new(777);
+    for case in 0..12 {
+        let n_seqs = 1 + rng.below(6);
+        let batch_weights: Vec<VariantWeights> =
+            (0..n_seqs).map(|_| weights[rng.below(3)].clone()).collect();
+        let plans = BatchPlan::group(&batch_weights);
+        assert_eq!(plans.len(), 1, "packed variants of one base share one plan");
+        let (plan, members) = &plans[0];
+        let seqs: Vec<(usize, Vec<u8>)> = (0..n_seqs)
+            .map(|entry| {
+                let len = 1 + rng.below(base.cfg().max_seq);
+                (entry, (0..len).map(|_| rng.below(256) as u8).collect())
+            })
+            .collect();
+        let batched = tf.forward_plan(plan, &seqs);
+        for ((entry, tokens), got) in seqs.iter().zip(&batched) {
+            let want = tf.forward_one(&batch_weights[members[*entry]], tokens);
+            assert_eq!(
+                got.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "case {case}: batched forward diverged from the per-request path"
+            );
+        }
+    }
+}
+
+/// The serving coordinator forms mixed-variant windows under concurrent
+/// load and its batched scores must equal the direct per-request
+/// computation exactly.
+#[test]
+fn server_mixed_windows_score_identically_to_direct_eval() {
+    let dir = std::env::temp_dir().join("pawd_itest_batched_serve");
+    let (base, store) = setup_store(&dir, 3);
+    let tf = Transformer::new(base.cfg());
+    // Direct per-request ground truth against the same packed weights.
+    let direct_store = VariantStore::new(base.clone(), &dir).with_mode(ExecMode::Fused);
+    let direct: Vec<VariantWeights> =
+        (0..3).map(|k| direct_store.load(&format!("var{k}")).unwrap().weights).collect();
+
+    let server = Server::start(
+        store,
+        Engine::Native,
+        ServerConfig { max_batch: 6, max_wait: Duration::from_millis(10), ..Default::default() },
+    );
+    // Burst concurrent requests across all three variants so the dispatcher
+    // coalesces mixed windows.
+    let client = server.client();
+    let items: Vec<(usize, String, Vec<String>)> = (0..18)
+        .map(|i| {
+            (
+                i % 3,
+                format!("Q: mixed batch item {i}? A: "),
+                vec!["alpha".to_string(), "beta".to_string(), "gamma".to_string()],
+            )
+        })
+        .collect();
+    let rxs: Vec<_> = items
+        .iter()
+        .map(|(k, prompt, choices)| {
+            (client.submit(&format!("var{k}"), Payload::score(prompt, choices)), k, prompt, choices)
+        })
+        .collect();
+    for (rx, k, prompt, choices) in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.version, Some(1));
+        let scores = match resp.result {
+            Ok(RespBody::Score { scores, .. }) => scores,
+            other => panic!("unexpected {other:?}"),
+        };
+        // Recompute through the per-request path: same encode/clamp/span
+        // logic as the server, then bitwise-identical forwards.
+        for (choice, got) in choices.iter().zip(&scores) {
+            let full = pawd::data::corpus::encode(&format!("{prompt}{choice}"));
+            assert!(full.len() <= tf.cfg.max_seq, "test item unexpectedly clamped");
+            let choice_len =
+                pawd::data::corpus::encode(choice).len().min(full.len() - 1).max(1);
+            let start = full.len() - choice_len;
+            let want = tf.score_span(&direct[*k], &full, start..full.len()) / choice_len as f64;
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "batched server score diverged from direct eval: {got} vs {want}"
+            );
+        }
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.served, 18);
+    assert_eq!(snap.errors, 0);
+    assert!(
+        snap.mean_batch_size > 1.0,
+        "burst must coalesce into windows, got {}",
+        snap.mean_batch_size
+    );
+    server.shutdown();
+}
+
+/// Perplexity requests ride the same batched path.
+#[test]
+fn server_batched_perplexity_matches_direct() {
+    let dir = std::env::temp_dir().join("pawd_itest_batched_ppl");
+    let (base, store) = setup_store(&dir, 2);
+    let tf = Transformer::new(base.cfg());
+    let direct_store = VariantStore::new(base.clone(), &dir).with_mode(ExecMode::Fused);
+    let w0 = direct_store.load("var0").unwrap().weights;
+
+    let server = Server::start(store, Engine::Native, ServerConfig::default());
+    let client = server.client();
+    let text = "the mill by the river turns all day.";
+    let rx = client.submit("var0", Payload::perplexity(text));
+    let got = match rx.recv().unwrap().result {
+        Ok(RespBody::Perplexity { nats_per_token }) => nats_per_token,
+        other => panic!("unexpected {other:?}"),
+    };
+    let tokens = pawd::data::corpus::encode(text);
+    let want = tf.cross_entropy(&w0, &tokens);
+    assert_eq!(got.to_bits(), want.to_bits(), "{got} vs {want}");
+    // Degenerate input still errors per-request, not per-window.
+    let rx = client.submit("var1", Payload::perplexity("x"));
+    assert!(rx.recv().unwrap().result.is_err());
+    server.shutdown();
+}

@@ -378,6 +378,50 @@ fn admin_list_pin_and_retire_through_the_server() {
 }
 
 #[test]
+fn gc_through_the_server_frees_retired_artifacts_mid_traffic() {
+    let dir = fresh_dir("pawd_itest_admingc");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 3));
+    save_delta(dir.join("a.pawd"), &compressed_variant("a", &base, 710)).unwrap();
+    let staging = fresh_dir("pawd_itest_admingc_staging");
+    std::fs::create_dir_all(&staging).unwrap();
+    let staged = staging.join("staged.pawd");
+    save_delta(&staged, &compressed_variant("a", &base, 711)).unwrap();
+
+    let store = VariantStore::new(base, &dir).with_mode(ExecMode::Fused);
+    let server = Server::start(store, Engine::Native, ServerConfig::default());
+    let client = server.client();
+
+    // v1 is resident (serve it once), then superseded and retired.
+    let r1 = client.score("a", "Q: v1? A: ", &["x".to_string(), "y".to_string()]);
+    assert_eq!(r1.version, Some(1));
+    assert_eq!(client.publish("a", &staged), Ok(2));
+    use pawd::coordinator::{AdminOp, AdminResp};
+    match client.admin(AdminOp::Retire { variant: "a".into(), version: 1 }) {
+        Ok(AdminResp::Retired { version: 1, .. }) => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    let v1_file = dir.join("a.pawd"); // adopted legacy artifact backs v1
+    assert!(v1_file.exists());
+    let (files, bytes) = client.gc(Some("a")).unwrap();
+    assert_eq!(files, 1);
+    assert!(bytes > 0);
+    assert!(!v1_file.exists(), "retired artifact must be unlinked");
+    // The active version is untouched and still serves.
+    let r2 = client.score("a", "Q: v2? A: ", &["x".to_string(), "y".to_string()]);
+    assert_eq!(r2.version, Some(2));
+    assert!(r2.result.is_ok());
+    // History still lists v1 as a retired tombstone.
+    let descs = client.variants().unwrap();
+    assert_eq!(descs[0].versions.len(), 2);
+    assert!(descs[0].versions[0].retired && descs[0].versions[0].file.is_empty());
+    // A second sweep has nothing to do.
+    assert_eq!(client.gc(None), Ok((0, 0)));
+    server.shutdown();
+}
+
+#[test]
 fn deprecated_stats_variant_still_answers() {
     let dir = fresh_dir("pawd_itest_statscompat");
     std::fs::create_dir_all(&dir).unwrap();

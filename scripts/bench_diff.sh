@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Diff two BENCH_*.json files and fail on gated regressions (>20% throughput
+# drop by default). Thin wrapper over `pawd bench-diff` so CI and local runs
+# share one implementation.
+#
+#   scripts/bench_diff.sh BENCH_baseline.json BENCH_pr.json [--max-regression 0.20]
+#
+# Paths are resolved relative to the caller's working directory.
+set -euo pipefail
+repo="$(cd "$(dirname "$0")/.." && pwd)"
+exec cargo run --manifest-path "$repo/rust/Cargo.toml" --release --quiet --bin pawd -- bench-diff "$@"

@@ -1,0 +1,205 @@
+//! **Incremental publish**: bytes shipped and publish→first-token latency
+//! for a patch publish (~5% of modules changed) vs a full-artifact publish
+//! of the same model.
+//!
+//! Structural claims are asserted, not just timed:
+//!
+//! * the patch artifact ships **<15%** of the full-artifact bytes;
+//! * warming the new version with the parent resident reads only the patch
+//!   (loader byte counter <15% of full, every unchanged module inherited
+//!   as the parent's `Arc` — zero re-reads).
+//!
+//! Emits machine-readable metrics into `$PAWD_BENCH_JSON` (see
+//! `BenchReport`); CI's bench-smoke lane runs this in fast mode.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use pawd::coordinator::{VariantCache, VariantStore};
+use pawd::delta::pack::PackedMask;
+use pawd::delta::types::{Axis, DeltaModel, DeltaModule};
+use pawd::exec::{counters, ExecMode};
+use pawd::model::config::ModelConfig;
+use pawd::model::{FlatParams, Transformer};
+use pawd::util::benchkit::{fmt_bytes, fmt_dur, BenchReport, Table};
+use pawd::util::rng::Rng;
+use pawd::util::stats::Summary;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A full delta covering every patchable module, content seeded.
+fn seeded_full(base: &FlatParams, seed: u64) -> DeltaModel {
+    let cfg = base.cfg();
+    let modules: Vec<DeltaModule> = base
+        .layout
+        .patchable_modules()
+        .iter()
+        .enumerate()
+        .map(|(i, &id)| {
+            let (rows, cols) = id.kind.shape(cfg);
+            let mut r = Rng::new(seed.wrapping_mul(977).wrapping_add(i as u64));
+            let delta: Vec<f32> = (0..rows * cols).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            DeltaModule {
+                id,
+                mask: PackedMask::pack(&delta, rows, cols),
+                axis: Axis::Row,
+                scales: (0..rows).map(|_| r.uniform_in(0.005, 0.05)).collect(),
+            }
+        })
+        .collect();
+    DeltaModel::new("ft", cfg.name.clone(), modules)
+}
+
+/// Replace `n_changed` modules of `model` (spread across small and large
+/// projections) with freshly seeded content.
+fn perturb(model: &DeltaModel, base: &FlatParams, n_changed: usize, seed: u64) -> DeltaModel {
+    let mut out = model.clone();
+    let n = out.modules.len();
+    let fresh = seeded_full(base, seed);
+    for j in 0..n_changed {
+        let k = (j * n) / n_changed + (seed as usize % (n / n_changed.max(1)).max(1));
+        let k = k % n;
+        out.modules[k] = fresh.modules[k].clone();
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("PAWD_BENCH_FAST").is_ok();
+    let cfg = ModelConfig::preset("llama-mini")?;
+    let base = Arc::new(FlatParams::init(&cfg, 17));
+    let tf = Transformer::new(&cfg);
+    let n_modules = base.layout.patchable_modules().len();
+    // ~5% of modules changed per publish (at least 1).
+    let n_changed = (n_modules as f64 * 0.05).ceil() as usize;
+    let dir = bench_common::tmp_dir("incremental_publish");
+    let store = VariantStore::new(base.clone(), &dir).with_mode(ExecMode::Fused);
+    let registry = store.registry().clone();
+    let cache = VariantCache::new(store.clone(), u64::MAX);
+    let probe: Vec<u8> = (0..24u8).map(|t| t.wrapping_mul(13) % 200 + 20).collect();
+
+    // --- bytes shipped: full vs ~5%-changed patch -------------------------
+    let v1 = seeded_full(&base, 1);
+    let full = registry.publish_incremental("ft", v1.clone(), None)?;
+    assert!(!full.patch, "first publish has no parent and must be full");
+    cache.get("ft")?; // v1 resident (the serving steady state)
+    let child = perturb(&v1, &base, n_changed, 2);
+    let patched = registry.publish_incremental("ft", child.clone(), None)?;
+    assert!(patched.patch, "a {n_changed}/{n_modules}-module change must ship as a patch");
+    let fraction = patched.bytes as f64 / full.bytes as f64;
+    println!(
+        "bytes shipped: full {} vs patch {} ({n_changed}/{n_modules} modules changed, {:.1}%)",
+        fmt_bytes(full.bytes),
+        fmt_bytes(patched.bytes),
+        fraction * 100.0
+    );
+    assert!(
+        fraction < 0.15,
+        "patch must ship <15% of the full artifact, got {:.1}%",
+        fraction * 100.0
+    );
+
+    // --- warm-up cost: the cache composes onto the resident parent --------
+    counters::reset();
+    let (w2, cold) = cache.get("ft")?;
+    assert!(cold.is_some(), "the new version must cold-load");
+    assert_eq!(w2.version(), patched.version);
+    let warm_bytes = counters::loader_bytes();
+    let warm_reads = counters::module_reads();
+    let inherited = counters::modules_inherited();
+    println!(
+        "warm-up: read {} in {warm_reads} module record(s), inherited {inherited} \
+         module(s) from the resident parent",
+        fmt_bytes(warm_bytes)
+    );
+    assert!(
+        (warm_bytes as f64) < 0.15 * full.bytes as f64,
+        "warming must not re-read unchanged modules ({warm_bytes}B vs full {}B)",
+        full.bytes
+    );
+    assert_eq!(warm_reads as usize, n_changed, "only the changed modules are read");
+    assert_eq!(
+        inherited as usize,
+        n_modules - n_changed,
+        "every unchanged module must be inherited, not re-read"
+    );
+
+    // --- publish→first-token latency: patch vs full -----------------------
+    // Each round publishes a fresh ~5%-changed child, warms it and scores
+    // one probe. The chain is consolidated between rounds (outside the
+    // timed region) so patch depth stays constant.
+    let rounds = if fast { 3 } else { 8 };
+    let mut patch_times = Vec::with_capacity(rounds);
+    let mut effective = child;
+    for round in 0..rounds {
+        registry.consolidate("ft", None)?;
+        effective = perturb(&effective, &base, n_changed, 100 + round as u64);
+        let t0 = Instant::now();
+        let out = registry.publish_incremental("ft", effective.clone(), None)?;
+        let (w, _) = cache.get("ft")?;
+        assert_eq!(w.version(), out.version);
+        let logits = tf.forward_one(&w, &probe);
+        std::hint::black_box(&logits);
+        patch_times.push(t0.elapsed().as_secs_f64());
+        assert!(out.patch);
+    }
+    let mut full_times = Vec::with_capacity(rounds);
+    for round in 0..rounds {
+        effective = perturb(&effective, &base, n_changed, 500 + round as u64);
+        // A fresh cache models a worker that does not have the parent
+        // resident — the full-artifact cold path.
+        let cold_cache = VariantCache::new(store.clone(), u64::MAX);
+        let t0 = Instant::now();
+        let version = registry.publish("ft", effective.clone())?;
+        let (w, _) = cold_cache.get(&format!("ft@{version}"))?;
+        let logits = tf.forward_one(&w, &probe);
+        std::hint::black_box(&logits);
+        full_times.push(t0.elapsed().as_secs_f64());
+    }
+    let sp = Summary::of(&patch_times);
+    let sf = Summary::of(&full_times);
+    let mut t = Table::new(&["publish path", "publish→token p50", "mean", "bytes shipped"]);
+    t.row(&[
+        format!("patch ({n_changed}/{n_modules} modules)"),
+        fmt_dur(sp.p50),
+        fmt_dur(sp.mean),
+        fmt_bytes(patched.bytes),
+    ]);
+    t.row(&[
+        "full artifact".to_string(),
+        fmt_dur(sf.p50),
+        fmt_dur(sf.mean),
+        fmt_bytes(full.bytes),
+    ]);
+    t.print(&format!(
+        "Incremental publish: bytes shipped + publish→first-token (llama-mini, {rounds} rounds)"
+    ));
+
+    let mut report = BenchReport::new();
+    report.add(
+        "incremental_publish/bytes_shipped",
+        &[
+            ("full_bytes", full.bytes as f64),
+            ("patch_bytes", patched.bytes as f64),
+            ("patch_fraction", fraction),
+        ],
+    );
+    report.add(
+        "incremental_publish/warm",
+        &[
+            ("bytes_read", warm_bytes as f64),
+            ("modules_read", warm_reads as f64),
+            ("modules_inherited", inherited as f64),
+        ],
+    );
+    report.add(
+        "incremental_publish/publish_to_token",
+        &[
+            ("patch_p50_ms", sp.p50 * 1e3),
+            ("full_p50_ms", sf.p50 * 1e3),
+            ("speedup", sf.p50 / sp.p50.max(1e-12)),
+        ],
+    );
+    report.flush_env()?;
+    Ok(())
+}

@@ -19,8 +19,17 @@
 //! charged to nobody). Under a fixed budget this multiplies the number of
 //! resident versions by the compression ratio, and a hot swap is an `Arc`
 //! clone — no materialize/revert pass ever runs on the request path.
+//!
+//! **Per-module sharing across versions.** Packed entries are charged per
+//! `Arc<DeltaModule>`, refcounted across all resident entries: when
+//! `variant@N+1` loads as a patch it inherits `@N`'s module Arcs for every
+//! unchanged module (the cache passes the resident parent as a composition
+//! hint to the store), so holding both versions costs the budget one copy
+//! of the shared modules plus the changed ones — a publish warms the new
+//! version at a marginal cost proportional to what actually changed.
 
 use super::store::{LoadedVariant, VariantStore};
+use crate::delta::types::DeltaModel;
 use crate::exec::VariantWeights;
 use crate::model::FlatParams;
 use anyhow::Result;
@@ -43,7 +52,10 @@ pub struct CacheStats {
 pub struct VersionResidency {
     pub variant: String,
     pub version: u32,
-    /// Bytes charged against the budget for this entry.
+    /// Standalone bytes of this entry (what it would cost resident alone).
+    /// Modules shared with other resident versions are charged against the
+    /// budget only once, so the budget total can be less than the sum of
+    /// these.
     pub bytes: u64,
 }
 
@@ -64,6 +76,7 @@ pub struct Residency {
 
 struct Entry {
     weights: VariantWeights,
+    /// Standalone bytes (shared modules included) — reported per version.
     bytes: u64,
     dense_equiv: u64,
     /// Monotone counter for LRU ordering.
@@ -78,6 +91,11 @@ struct Inner {
     /// concurrent requests for the same cold version wait instead of
     /// duplicating the load).
     loading: std::collections::HashSet<Key>,
+    /// Budget charge per distinct `Arc<DeltaModule>` (keyed by pointer
+    /// identity): `(bytes, refcount across resident entries)`. A module
+    /// shared by several resident versions is charged once; its bytes are
+    /// released only when the last holder is evicted.
+    module_refs: HashMap<usize, (u64, usize)>,
     clock: u64,
     used_bytes: u64,
     /// Running dense-equivalent total for the resident set, maintained
@@ -85,6 +103,79 @@ struct Inner {
     /// run on the worker hot path).
     dense_equiv_bytes: u64,
     stats: CacheStats,
+}
+
+impl Inner {
+    /// Bytes inserting `weights` would add to the budget right now (zero
+    /// for modules some resident entry already holds).
+    fn preview_charge(&self, weights: &VariantWeights) -> u64 {
+        match weights {
+            VariantWeights::Packed(pv) => pv
+                .module_arcs()
+                .iter()
+                .filter(|m| !self.module_refs.contains_key(&(Arc::as_ptr(m) as usize)))
+                .map(|m| m.resident_bytes())
+                .sum(),
+            dense => dense.resident_bytes(),
+        }
+    }
+
+    /// Charge `weights` against the budget, refcounting packed modules.
+    fn charge(&mut self, weights: &VariantWeights) {
+        match weights {
+            VariantWeights::Packed(pv) => {
+                for m in pv.module_arcs() {
+                    let slot = self
+                        .module_refs
+                        .entry(Arc::as_ptr(m) as usize)
+                        .or_insert((m.resident_bytes(), 0));
+                    if slot.1 == 0 {
+                        self.used_bytes += slot.0;
+                    }
+                    slot.1 += 1;
+                }
+            }
+            dense => self.used_bytes += dense.resident_bytes(),
+        }
+    }
+
+    /// Release `weights`' charge; module bytes come back only when the last
+    /// resident holder lets go.
+    fn release(&mut self, weights: &VariantWeights) {
+        match weights {
+            VariantWeights::Packed(pv) => {
+                for m in pv.module_arcs() {
+                    let key = Arc::as_ptr(m) as usize;
+                    if let Some(slot) = self.module_refs.get_mut(&key) {
+                        slot.1 -= 1;
+                        if slot.1 == 0 {
+                            self.used_bytes -= slot.0;
+                            self.module_refs.remove(&key);
+                        }
+                    }
+                }
+            }
+            dense => self.used_bytes -= dense.resident_bytes(),
+        }
+    }
+
+    /// Evict the least-recently-used entry, returning whether one existed.
+    fn evict_lru(&mut self) -> bool {
+        let Some(lru) = self
+            .entries
+            .iter()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| k.clone())
+        else {
+            return false;
+        };
+        if let Some(e) = self.entries.remove(&lru) {
+            self.release(&e.weights);
+            self.dense_equiv_bytes -= e.dense_equiv;
+            self.stats.evictions += 1;
+        }
+        true
+    }
 }
 
 /// Thread-safe LRU variant cache with single-flight cold loads.
@@ -103,6 +194,7 @@ impl VariantCache {
             inner: Mutex::new(Inner {
                 entries: HashMap::new(),
                 loading: std::collections::HashSet::new(),
+                module_refs: HashMap::new(),
                 clock: 0,
                 used_bytes: 0,
                 dense_equiv_bytes: 0,
@@ -154,9 +246,24 @@ impl VariantCache {
                 inner = self.loaded_cv.wait(inner).unwrap();
             }
         }
+        // For a patch version, pass the resident direct parent (if any) as a
+        // composition hint: the store then reads only the patch file and
+        // inherits every unchanged module's Arc — the warm-publish path.
+        let parent_hint: Option<Arc<DeltaModel>> = if resolved.patch {
+            resolved.parent.and_then(|pv| {
+                let inner = self.inner.lock().unwrap();
+                inner.entries.get(&(resolved.name.clone(), pv)).and_then(|e| match &e.weights {
+                    VariantWeights::Packed(p) => Some(p.delta().clone()),
+                    VariantWeights::Dense(..) => None,
+                })
+            })
+        } else {
+            None
+        };
         // Load outside the lock (the expensive part). Ensure the loading
         // claim is released even on error.
-        let loaded: Result<LoadedVariant> = self.store.load_resolved(&resolved);
+        let loaded: Result<LoadedVariant> =
+            self.store.load_resolved_hinted(&resolved, parent_hint);
         let loaded: LoadedVariant = match loaded {
             Ok(l) => l,
             Err(e) => {
@@ -173,21 +280,19 @@ impl VariantCache {
         inner.clock += 1;
         let clock = inner.clock;
         inner.stats.cold_start.push(loaded.load_time);
-        // Evict LRU until the new entry fits.
-        while inner.used_bytes + bytes > self.budget_bytes && !inner.entries.is_empty() {
-            let lru = inner
-                .entries
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone())
-                .unwrap();
-            if let Some(e) = inner.entries.remove(&lru) {
-                inner.used_bytes -= e.bytes;
-                inner.dense_equiv_bytes -= e.dense_equiv;
-                inner.stats.evictions += 1;
+        // Evict LRU until the new entry's *marginal* charge fits — modules
+        // shared with resident versions cost nothing extra, but evictions
+        // can strip sharers away, so the preview is recomputed per round.
+        loop {
+            let marginal = inner.preview_charge(&loaded.weights);
+            if inner.used_bytes + marginal <= self.budget_bytes || inner.entries.is_empty() {
+                break;
+            }
+            if !inner.evict_lru() {
+                break;
             }
         }
-        inner.used_bytes += bytes;
+        inner.charge(&loaded.weights);
         inner.dense_equiv_bytes += dense_equiv;
         inner.entries.insert(
             key.clone(),
@@ -414,6 +519,91 @@ mod tests {
         assert_eq!(w0.version(), w3.version());
         // Both variants resident after one multi-get.
         assert_eq!(cache.resident_names(), vec!["v0".to_string(), "v1".to_string()]);
+    }
+
+    #[test]
+    fn patch_versions_share_module_arcs_and_charge_the_budget_once() {
+        let dir = std::env::temp_dir().join("pawd_test_cache7");
+        let store = setup(&dir, 1).with_mode(ExecMode::Fused);
+        let registry = store.registry().clone();
+        let cache = VariantCache::new(store, u64::MAX);
+        let (w1, _) = cache.get("v0").unwrap();
+        // Publish v2 as a patch: one module's scales doubled (f16-exact).
+        let mut v2 = registry.effective_model("v0", 1).unwrap();
+        {
+            let m = std::sync::Arc::make_mut(&mut v2.modules[0]);
+            for s in &mut m.scales {
+                *s *= 2.0;
+            }
+        }
+        let out = registry.publish_incremental("v0", v2, None).unwrap();
+        assert!(out.patch);
+        let used_before = cache.used_bytes();
+        let (w2, cold) = cache.get("v0").unwrap();
+        assert!(cold.is_some());
+        assert_eq!(w2.version(), out.version);
+        // The new entry inherited the parent's module Arcs for everything
+        // unchanged, so the *marginal* budget charge is just the changed
+        // module — not another full packed variant.
+        let (a, b) = match (&w1, &w2) {
+            (VariantWeights::Packed(a), VariantWeights::Packed(b)) => (a, b),
+            _ => panic!("expected packed entries"),
+        };
+        let shared = b
+            .module_arcs()
+            .iter()
+            .filter(|m| a.module_arcs().iter().any(|p| std::sync::Arc::ptr_eq(p, m)))
+            .count();
+        assert_eq!(shared, b.module_arcs().len() - 1, "all but the changed module shared");
+        let changed_bytes: u64 = b
+            .module_arcs()
+            .iter()
+            .filter(|m| !a.module_arcs().iter().any(|p| std::sync::Arc::ptr_eq(p, m)))
+            .map(|m| m.resident_bytes())
+            .sum();
+        assert_eq!(
+            cache.used_bytes() - used_before,
+            changed_bytes,
+            "marginal charge must be the changed module only"
+        );
+        // Standalone per-version bytes now sum to more than the shared
+        // budget charge — the sharing is visible in the residency gauges.
+        let r = cache.residency();
+        assert_eq!(r.variants, 2);
+        assert!(r.per_version.iter().map(|e| e.bytes).sum::<u64>() > r.resident_bytes);
+    }
+
+    #[test]
+    fn get_many_keeps_window_working_set_executable_beyond_the_budget() {
+        // Satellite invariant: a batch window's pinned working set must
+        // stay executable for the whole batch even when it exceeds the soft
+        // byte budget — eviction may drop entries from the *cache*, but
+        // every `Ok` the window holds keeps its own `VariantWeights` clone.
+        let dir = std::env::temp_dir().join("pawd_test_cache8");
+        let store = setup(&dir, 3).with_mode(ExecMode::Fused);
+        let one_packed = store.load("v0").unwrap().weights.resident_bytes();
+        // Budget fits one variant (plus slack), window needs three.
+        let cache = VariantCache::new(store, one_packed + one_packed / 2);
+        let names: Vec<String> = vec!["v0".into(), "v1".into(), "v2".into()];
+        let got = cache.get_many(&names);
+        assert_eq!(got.len(), 3);
+        for (name, res) in names.iter().zip(&got) {
+            let (w, _) = res.as_ref().unwrap_or_else(|e| panic!("{name} failed: {e}"));
+            assert!(w.is_packed());
+            assert_eq!(w.version(), 1);
+            assert!(!w.flat().data.is_empty(), "{name} must stay executable");
+        }
+        let s = cache.stats();
+        assert!(s.evictions >= 1, "the budget must actually have been under pressure");
+        assert!(
+            cache.resident().len() < 3,
+            "the cache itself respects the budget after the window"
+        );
+        // The cache stays usable afterwards: a re-get of an evicted variant
+        // cold-loads cleanly.
+        for name in &names {
+            assert!(cache.get(name).is_ok());
+        }
     }
 
     #[test]

@@ -16,8 +16,9 @@
 //!   byte budget, charged in packed bytes when the store runs
 //!   [`ExecMode::Fused`](crate::exec::ExecMode); a publish warms the new
 //!   version while the old one ages out.
-//! * [`server`] — dispatcher (one FIFO batch window, size/deadline flush,
-//!   grouped by variant; admin lane bypasses batching) and worker engines:
+//! * [`server`] — dispatcher (one batch window, size/deadline flush,
+//!   **fair-share round-robin across variants** at flush time; admin lane
+//!   bypasses batching) and worker engines:
 //!   the native transformer runs each flushed window as a shared-base
 //!   [`BatchPlan`](crate::exec::BatchPlan) — one base GEMM per module for
 //!   the whole mixed-variant window — while the PJRT runtime scores per
@@ -34,9 +35,10 @@ pub mod store;
 
 pub use cache::{Residency, VariantCache, VersionResidency};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use registry::{ArtifactKind, GcReport, Resolved, VariantDesc, VariantRegistry, VersionRecord};
-pub use request::{
-    AdminOp, AdminResp, DataOp, Payload, RespBody, Response, ADMIN_VARIANT, STATS_VARIANT,
+pub use registry::{
+    ArtifactKind, ConsolidateOutcome, GcReport, PublishOutcome, Resolved, VariantDesc,
+    VariantRegistry, VersionRecord,
 };
+pub use request::{AdminOp, AdminResp, DataOp, Payload, RespBody, Response, ADMIN_VARIANT};
 pub use server::{Client, Engine, Server, ServerConfig};
 pub use store::VariantStore;

@@ -9,14 +9,27 @@
 //!   `variant@N.pawd`, and atomically flip the alias so *new* requests
 //!   resolve to `N` while in-flight requests finish on the `Arc` of the old
 //!   version they already hold.
+//! * **publish_incremental** — diff the new effective model against a parent
+//!   version and ship a **patch artifact** carrying only the changed
+//!   modules (falling back to a full publish when there is no usable parent
+//!   or the diff is inexpressible). Loads of a patch version compose the
+//!   parent chain ([`chain`](crate::delta::chain)).
+//! * **consolidate** — rebase a version's patch chain into a single full
+//!   artifact in place (same version number; the record's file is swapped),
+//!   bounding chain depth and freeing the lineage for retirement.
 //! * **rollback** — flip the alias back to the active version's parent (or
 //!   an explicit target).
 //! * **pin / unpin** — freeze the alias on one version; publishes still
 //!   record new versions but stop moving the alias until unpinned.
 //! * **retire** — mark an old version unservable (resolution of `name@N`
-//!   fails fast); the active version can never be retired.
+//!   fails fast); the active version can never be retired, and neither can
+//!   the chain parent of a live patch version (consolidate the child
+//!   first).
 //! * **gc** — unlink retired versions' artifact files, leaving tombstone
-//!   records so version numbering stays monotone across restarts.
+//!   records so version numbering stays monotone across restarts. The
+//!   sweep is chain-aware: a retired version whose file still backs a live
+//!   patch chain is pinned on disk until the dependents consolidate or
+//!   retire.
 //!
 //! State is a JSON manifest (`registry.json`) in the artifact directory,
 //! rewritten atomically (temp file + rename) on every mutation, plus an
@@ -33,6 +46,7 @@
 //! ([`AdminOp`](super::request::AdminOp)) instead. Cross-process leases are
 //! a ROADMAP follow-up.
 
+use crate::delta::chain::{self, ChainLink, MAX_CHAIN_DEPTH};
 use crate::delta::format::{load_delta, peek_meta, save_delta};
 use crate::delta::types::{ArtifactMeta, DeltaModel};
 use crate::util::json::{self, Json};
@@ -75,7 +89,8 @@ impl ArtifactKind {
 #[derive(Clone, Debug)]
 pub struct VersionRecord {
     pub version: u32,
-    /// Version this one superseded at publish time (rollback target).
+    /// Version this one superseded at publish time (rollback target; for
+    /// patch versions, also the chain parent the patch composes onto).
     pub parent: Option<u32>,
     /// Publish time, seconds since the Unix epoch (0 for adopted legacy files).
     pub created_unix: u64,
@@ -86,6 +101,9 @@ pub struct VersionRecord {
     pub bytes: u64,
     /// Retired versions are unservable: `resolve("name@N")` fails fast.
     pub retired: bool,
+    /// The artifact is a patch: it carries only the modules changed vs
+    /// `parent`; loading it composes the parent chain.
+    pub patch: bool,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -116,6 +134,31 @@ pub struct GcReport {
     pub bytes_freed: u64,
 }
 
+/// Outcome of a [`VariantRegistry::publish_incremental`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PublishOutcome {
+    /// Version assigned to the publish.
+    pub version: u32,
+    /// `true` when a patch artifact shipped; `false` when the publish fell
+    /// back to a full artifact (no parent, inexpressible diff, chain at the
+    /// depth bound, or an fp16 parent).
+    pub patch: bool,
+    /// Bytes written to disk for this publish — the "bytes shipped" a patch
+    /// is supposed to shrink.
+    pub bytes: u64,
+}
+
+/// Outcome of a [`VariantRegistry::consolidate`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConsolidateOutcome {
+    pub version: u32,
+    /// Size of the artifact now backing the version.
+    pub bytes: u64,
+    /// Chain links rebased into the full artifact (0 = the version was
+    /// already full and nothing changed).
+    pub rebased_links: usize,
+}
+
 /// What an alias (or explicit `name@N`) resolves to.
 #[derive(Clone, Debug)]
 pub struct Resolved {
@@ -124,6 +167,11 @@ pub struct Resolved {
     pub version: u32,
     pub path: PathBuf,
     pub kind: ArtifactKind,
+    /// Lineage parent (chain parent when `patch` is set).
+    pub parent: Option<u32>,
+    /// The artifact is a patch; loading it requires composing the parent
+    /// chain ([`chain_links`](VariantRegistry::chain_links)).
+    pub patch: bool,
 }
 
 /// Thread-safe versioned variant registry over one artifact directory.
@@ -183,12 +231,196 @@ impl VariantRegistry {
             version,
             path: self.dir.join(&rec.file),
             kind: rec.kind,
+            parent: rec.parent,
+            patch: rec.patch,
         })
     }
 
-    /// Publish `model` as the next version of `name`. Stamps the artifact
-    /// meta, writes `name@N.pawd`, records the version, and flips the alias
-    /// to `N` unless the variant is pinned. Returns the assigned version.
+    /// The artifact chain backing `name@version`, base-most full artifact
+    /// first. A full version is a one-link chain. Chain *parents* are
+    /// allowed to be retired (retirement makes a version unservable, not
+    /// unreadable) but must not have been garbage-collected — the gc sweep
+    /// keeps files of live chains on disk, so a broken chain here means a
+    /// hand-edited manifest.
+    ///
+    /// Length is only checked against the corruption backstop
+    /// ([`chain::HARD_CHAIN_BOUND`]), not the [`MAX_CHAIN_DEPTH`] policy
+    /// bound: publishes refuse to *grow* a chain past the policy bound, but
+    /// an adopted directory may already exceed it and `consolidate` must
+    /// still be able to walk and rebase such a chain.
+    pub fn chain_links(&self, name: &str, version: u32) -> Result<Vec<ChainLink>> {
+        let inner = self.inner.lock().unwrap();
+        let state = inner
+            .get(name)
+            .filter(|s| !s.versions.is_empty())
+            .ok_or_else(|| anyhow::anyhow!("variant '{name}' not found in {}", self.dir.display()))?;
+        let mut links = Vec::new();
+        let mut v = version;
+        loop {
+            let rec = state.versions.get(&v).ok_or_else(|| {
+                anyhow::anyhow!("variant '{name}' has no version {v} (chain broken)")
+            })?;
+            if rec.kind != ArtifactKind::Delta {
+                bail!("chain of '{name}@{version}' passes through non-delta version {v}");
+            }
+            if rec.file.is_empty() {
+                bail!(
+                    "'{name}@{v}' was garbage-collected but still backs the chain of \
+                     '{name}@{version}'"
+                );
+            }
+            links.push(ChainLink {
+                version: v,
+                path: self.dir.join(&rec.file),
+                is_patch: rec.patch,
+            });
+            if !rec.patch {
+                break;
+            }
+            let parent = rec.parent.ok_or_else(|| {
+                anyhow::anyhow!("patch '{name}@{v}' has no recorded parent version")
+            })?;
+            // Versions are assigned monotonically, so a well-formed lineage
+            // always steps downward; enforcing that here makes parent
+            // cycles (hand-edited manifests) impossible by construction.
+            if parent >= v {
+                bail!(
+                    "patch '{name}@{v}' records parent v{parent} — lineage must be \
+                     strictly decreasing (corrupt manifest)"
+                );
+            }
+            v = parent;
+            if links.len() > chain::HARD_CHAIN_BOUND {
+                bail!(
+                    "chain of '{name}@{version}' exceeds the corruption backstop {}",
+                    chain::HARD_CHAIN_BOUND
+                );
+            }
+        }
+        links.reverse();
+        Ok(links)
+    }
+
+    /// The effective (fully composed) model of `name@version`, read from
+    /// disk. Patch chains are composed; full versions load directly.
+    pub fn effective_model(&self, name: &str, version: u32) -> Result<DeltaModel> {
+        let links = self.chain_links(name, version)?;
+        Ok(chain::load_effective(&links, None)?.0)
+    }
+
+    /// Publish `model` as the next **full** version of `name`. Stamps the
+    /// artifact meta, writes `name@N.pawd`, records the version, and flips
+    /// the alias to `N` unless the variant is pinned. Returns the assigned
+    /// version. `model` must be an effective (non-patch) model — use
+    /// [`publish_incremental`](Self::publish_incremental) to ship only what
+    /// changed.
+    pub fn publish(&self, name: &str, model: DeltaModel) -> Result<u32> {
+        Ok(self.publish_full(name, model)?.version)
+    }
+
+    /// [`publish`](Self::publish) returning the full [`PublishOutcome`]
+    /// (version + bytes written), for callers that report artifact sizes.
+    pub fn publish_full(&self, name: &str, model: DeltaModel) -> Result<PublishOutcome> {
+        if model.meta.is_patch {
+            bail!(
+                "model for '{name}' is a patch (partial module set); publish it through \
+                 publish_incremental or compose it first"
+            );
+        }
+        let (version, bytes) = self.publish_model(name, model, None, false)?;
+        Ok(PublishOutcome { version, patch: false, bytes })
+    }
+
+    /// Publish `child` (an effective, fully-composed model) as the next
+    /// version of `name`, shipping a **patch artifact** that carries only
+    /// the modules whose packed content changed relative to `parent`
+    /// (default: the active version). Falls back to a full publish when
+    /// there is no usable parent, the diff cannot be expressed (module
+    /// removal), the parent chain already sits at [`MAX_CHAIN_DEPTH`], or
+    /// nothing would be saved (every module changed).
+    pub fn publish_incremental(
+        &self,
+        name: &str,
+        child: DeltaModel,
+        parent: Option<u32>,
+    ) -> Result<PublishOutcome> {
+        validate_name(name)?;
+        if child.meta.is_patch {
+            bail!("publish_incremental takes the child's *effective* model, not a patch");
+        }
+        // Pick the diff base under the lock; usability checks (delta kind,
+        // not gc'd) fail fast here instead of mid-chain-load. An *explicit*
+        // parent that is unusable is an error — silently diffing against
+        // something else would ship a patch the caller did not ask for —
+        // while an unusable *implicit* (active) parent just means "publish
+        // full".
+        let parent_v: Option<u32> = {
+            let inner = self.inner.lock().unwrap();
+            match inner.get(name).filter(|s| !s.versions.is_empty()) {
+                None => {
+                    if let Some(p) = parent {
+                        bail!("variant '{name}' has no version {p} to patch against");
+                    }
+                    None
+                }
+                Some(state) => match parent {
+                    Some(p) => {
+                        let rec = state.versions.get(&p).ok_or_else(|| {
+                            anyhow::anyhow!("variant '{name}' has no version {p}")
+                        })?;
+                        if rec.retired {
+                            bail!("cannot patch against retired version {p} of '{name}'");
+                        }
+                        if rec.kind != ArtifactKind::Delta {
+                            bail!("cannot patch against fp16 version {p} of '{name}'");
+                        }
+                        if rec.file.is_empty() {
+                            bail!(
+                                "cannot patch against garbage-collected version {p} of '{name}'"
+                            );
+                        }
+                        Some(p)
+                    }
+                    None => Some(state.active)
+                        .filter(|&a| a > 0)
+                        .and_then(|a| state.versions.get(&a))
+                        .filter(|r| r.kind == ArtifactKind::Delta && !r.file.is_empty())
+                        .map(|r| r.version),
+                },
+            }
+        };
+        let Some(parent_v) = parent_v else {
+            let (version, bytes) = self.publish_model(name, child, None, false)?;
+            return Ok(PublishOutcome { version, patch: false, bytes });
+        };
+        // A patch on a maximal chain would exceed the depth bound at load
+        // time; rebase with a full publish instead.
+        let links = self.chain_links(name, parent_v)?;
+        if links.len() >= MAX_CHAIN_DEPTH {
+            let (version, bytes) = self.publish_model(name, child, Some(parent_v), false)?;
+            return Ok(PublishOutcome { version, patch: false, bytes });
+        }
+        let parent_eff = chain::load_effective(&links, None)
+            .with_context(|| format!("composing parent '{name}@{parent_v}'"))?
+            .0;
+        match chain::diff(&parent_eff, &child) {
+            Ok(patch) if patch.modules.len() < child.modules.len() => {
+                let (version, bytes) = self.publish_model(name, patch, Some(parent_v), true)?;
+                Ok(PublishOutcome { version, patch: true, bytes })
+            }
+            // Everything changed (or removal made the diff inexpressible):
+            // a patch would be pure overhead — ship the full artifact.
+            _ => {
+                let (version, bytes) = self.publish_model(name, child, Some(parent_v), false)?;
+                Ok(PublishOutcome { version, patch: false, bytes })
+            }
+        }
+    }
+
+    /// Shared publish machinery. Stamps the meta (version reserved under
+    /// the lock, `forced_parent` — the diff base for patches — overriding
+    /// the default "active version" lineage), writes the artifact and
+    /// commits the record. Returns `(version, bytes_written)`.
     ///
     /// The version number is *reserved* under the lock, the artifact is
     /// serialized to a temp file and renamed into place with the lock
@@ -196,7 +428,13 @@ impl VariantRegistry {
     /// write; they can still briefly contend on the small manifest rewrite
     /// in `persist`), and the index mutates only after the rename — a crash
     /// mid-write leaves a stray `.tmp` file, never a live truncated version.
-    pub fn publish(&self, name: &str, mut model: DeltaModel) -> Result<u32> {
+    fn publish_model(
+        &self,
+        name: &str,
+        mut model: DeltaModel,
+        forced_parent: Option<u32>,
+        patch: bool,
+    ) -> Result<(u32, u64)> {
         validate_name(name)?;
         std::fs::create_dir_all(&self.dir)
             .with_context(|| format!("creating registry dir {}", self.dir.display()))?;
@@ -225,11 +463,15 @@ impl VariantRegistry {
                 bump += 1;
                 file = format!("{name}@{next}-{bump}.pawd");
             }
-            (next, Some(state.active).filter(|&a| a > 0), file)
+            let parent = forced_parent.or_else(|| Some(state.active).filter(|&a| a > 0));
+            (next, parent, file)
         };
+        if patch && parent.is_none() {
+            bail!("patch publish of '{name}' has no parent version");
+        }
         let created_unix = unix_now();
         model.variant = name.to_string();
-        model.meta = ArtifactMeta { version, parent, created_unix };
+        model.meta = ArtifactMeta { version, parent, created_unix, is_patch: patch };
         let tmp = self.dir.join(format!("{file}.tmp"));
         let written = save_delta(&tmp, &model).and_then(|bytes| {
             std::fs::rename(&tmp, self.dir.join(&file))
@@ -258,6 +500,7 @@ impl VariantRegistry {
                     kind: ArtifactKind::Delta,
                     bytes,
                     retired: false,
+                    patch,
                 },
             );
             // Concurrent publishes can commit out of order (B reserves v4
@@ -267,14 +510,106 @@ impl VariantRegistry {
             }
             Ok(version)
         })
+        .map(|v| (v, bytes))
     }
 
-    /// Publish an existing `.pawd` file as the next version of `name`
+    /// Publish an existing `.pawd` file as the next full version of `name`
     /// (loads, restamps the meta, re-serializes into the registry dir).
+    /// Patch artifacts are refused — their module set is partial and only
+    /// meaningful against their original parent chain.
     pub fn publish_file(&self, name: &str, src: &Path) -> Result<u32> {
         let model = load_delta(src)
             .with_context(|| format!("loading artifact to publish from {}", src.display()))?;
+        if model.meta.is_patch {
+            bail!(
+                "{} is a patch artifact; publish the variant's effective model instead",
+                src.display()
+            );
+        }
         self.publish(name, model)
+    }
+
+    /// Rebase the patch chain of `name@version` (default: the active
+    /// version) into a single full artifact **in place**: the version keeps
+    /// its number and lineage, only the backing file changes, so resolved
+    /// caches keyed by `(variant, version)` stay valid. The superseded
+    /// patch file is unlinked once the manifest commit lands.
+    pub fn consolidate(&self, name: &str, version: Option<u32>) -> Result<ConsolidateOutcome> {
+        let (target, old_file) = {
+            let inner = self.inner.lock().unwrap();
+            let state = inner
+                .get(name)
+                .filter(|s| !s.versions.is_empty())
+                .ok_or_else(|| anyhow::anyhow!("variant '{name}' not found in registry"))?;
+            let target = version.unwrap_or(state.active);
+            let rec = state.versions.get(&target).ok_or_else(|| {
+                anyhow::anyhow!("variant '{name}' has no version {target}")
+            })?;
+            if rec.file.is_empty() {
+                bail!("'{name}@{target}' was garbage-collected; nothing to consolidate");
+            }
+            if !rec.patch {
+                return Ok(ConsolidateOutcome {
+                    version: target,
+                    bytes: rec.bytes,
+                    rebased_links: 0,
+                });
+            }
+            (target, rec.file.clone())
+        };
+        let links = self.chain_links(name, target)?;
+        let (effective, _) = chain::load_effective(&links, None)
+            .with_context(|| format!("composing '{name}@{target}' for consolidation"))?;
+        // Unique filename (records + disk), namespaced by the version.
+        let file = {
+            let inner = self.inner.lock().unwrap();
+            let taken: std::collections::HashSet<String> = inner
+                .values()
+                .flat_map(|s| s.versions.values().map(|r| r.file.clone()))
+                .collect();
+            let mut bump = 0u32;
+            let mut file = format!("{name}@{target}-full.pawd");
+            while taken.contains(&file) || self.dir.join(&file).exists() {
+                bump += 1;
+                file = format!("{name}@{target}-full-{bump}.pawd");
+            }
+            file
+        };
+        let tmp = self.dir.join(format!("{file}.tmp"));
+        let bytes = match save_delta(&tmp, &effective).and_then(|b| {
+            std::fs::rename(&tmp, self.dir.join(&file))
+                .with_context(|| format!("committing consolidated artifact {file}"))?;
+            Ok(b)
+        }) {
+            Ok(b) => b,
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                return Err(e);
+            }
+        };
+        let commit = self.mutate(|index| {
+            let state = state_mut(index, name)?;
+            let rec = state.versions.get_mut(&target).ok_or_else(|| {
+                anyhow::anyhow!("variant '{name}' lost version {target} mid-consolidation")
+            })?;
+            if rec.file != old_file {
+                bail!("'{name}@{target}' changed files mid-consolidation (concurrent admin op)");
+            }
+            rec.file = file.clone();
+            rec.bytes = bytes;
+            rec.patch = false;
+            Ok(())
+        });
+        if let Err(e) = commit {
+            let _ = std::fs::remove_file(self.dir.join(&file));
+            return Err(e);
+        }
+        // The old patch file is no longer referenced by any record (publish
+        // keeps filenames unique); a crash before this unlink only leaves an
+        // orphaned file, which adoption skips because its version slot is
+        // owned.
+        let _ = std::fs::remove_file(self.dir.join(&old_file));
+        Ok(ConsolidateOutcome { version: target, bytes, rebased_links: links.len() })
     }
 
     /// Flip the alias back: to `to` if given, else to the active version's
@@ -345,12 +680,28 @@ impl VariantRegistry {
     }
 
     /// Mark a version unservable. The active version cannot be retired —
-    /// roll back or publish first.
+    /// roll back or publish first. Neither can the chain parent of a live
+    /// patch version: the dependent's loads compose through it, so
+    /// consolidate (or retire) the dependent first. (Retiring only blocks
+    /// *serving*; a retired version's file stays on disk while live chains
+    /// need it — see [`gc`](Self::gc).)
     pub fn retire(&self, name: &str, version: u32) -> Result<()> {
         self.mutate(|index| {
             let state = state_mut(index, name)?;
             if state.active == version {
                 bail!("refusing to retire the active version {version} of '{name}' (rollback or publish first)");
+            }
+            if let Some(dep) = state
+                .versions
+                .values()
+                .find(|r| !r.retired && r.patch && r.parent == Some(version))
+            {
+                bail!(
+                    "version {version} of '{name}' is the chain parent of live patch version \
+                     {} — consolidate or retire '{name}@{}' first",
+                    dep.version,
+                    dep.version
+                );
             }
             let rec = state
                 .versions
@@ -387,13 +738,27 @@ impl VariantRegistry {
             }
             // Never unlink a file a live (non-retired) record still points
             // at — publish guarantees unique filenames, this is belt and
-            // braces against hand-edited manifests.
-            let live: std::collections::HashSet<String> = index
-                .values()
-                .flat_map(|s| s.versions.values())
-                .filter(|r| !r.retired)
-                .map(|r| r.file.clone())
-                .collect();
+            // braces against hand-edited manifests. Chain-awareness: a live
+            // patch version composes through its ancestors at load time, so
+            // every ancestor file on a live chain is pinned on disk even if
+            // the ancestor version itself is retired (the retire guard
+            // normally prevents that state, but adopted directories and
+            // races must not turn it into an unloadable variant).
+            let mut live: std::collections::HashSet<String> = std::collections::HashSet::new();
+            for state in index.values() {
+                for rec in state.versions.values().filter(|r| !r.retired) {
+                    live.insert(rec.file.clone());
+                    let mut cur = rec;
+                    let mut depth = 0;
+                    while cur.patch && depth <= chain::HARD_CHAIN_BOUND {
+                        let Some(p) = cur.parent else { break };
+                        let Some(prec) = state.versions.get(&p) else { break };
+                        live.insert(prec.file.clone());
+                        cur = prec;
+                        depth += 1;
+                    }
+                }
+            }
             let mut doomed = Vec::new();
             for (vname, state) in index.iter_mut() {
                 if let Some(n) = name {
@@ -566,12 +931,12 @@ fn adopt_untracked(
     // Deltas first so a co-named fp16 can't claim the version slot.
     files.sort_by_key(|(_, kind, ..)| matches!(kind, ArtifactKind::Fp16));
     for (stem, kind, file, bytes, path) in files {
-        let (name, version) = match (kind, split_versioned_name(&stem)) {
+        let (name, version, meta) = match (kind, split_versioned_name(&stem)) {
             (ArtifactKind::Delta, Ok((n, _))) => match peek_meta(&path) {
-                Ok(meta) => (n.to_string(), meta.version),
+                Ok(meta) => (n.to_string(), meta.version, Some(meta)),
                 Err(_) => continue, // unreadable header: leave untracked
             },
-            (ArtifactKind::Fp16, Ok((n, v))) => (n.to_string(), v.unwrap_or(1)),
+            (ArtifactKind::Fp16, Ok((n, v))) => (n.to_string(), v.unwrap_or(1), None),
             // '@' is reserved for version suffixes: a stem like
             // `model@final` can't be addressed through `resolve`, so
             // adopting it would only create an unreachable entry. Leave the
@@ -583,16 +948,21 @@ fn adopt_untracked(
         if state.versions.contains_key(&version) {
             continue; // manifest (or a delta) already owns this slot
         }
+        // Adopted patch artifacts keep their embedded lineage so chain
+        // loading can find the parent (which must have been adopted or
+        // tracked under its own version for the patch to resolve).
+        let (parent, patch) = meta.map(|m| (m.parent, m.is_patch)).unwrap_or((None, false));
         state.versions.insert(
             version,
             VersionRecord {
                 version,
-                parent: None,
+                parent,
                 created_unix: 0,
                 file,
                 kind,
                 bytes,
                 retired: false,
+                patch,
             },
         );
         if !manifest_tracked && (state.active == 0 || version > state.active) {
@@ -620,6 +990,7 @@ fn render_manifest(variants: &BTreeMap<String, VariantState>) -> Json {
                         ("kind", json::s(r.kind.label())),
                         ("bytes", json::n(r.bytes as f64)),
                         ("retired", Json::Bool(r.retired)),
+                        ("patch", Json::Bool(r.patch)),
                     ])
                 })
                 .collect();
@@ -663,6 +1034,9 @@ fn parse_manifest(text: &str) -> Result<BTreeMap<String, VariantState>> {
                     kind: ArtifactKind::from_label(rv.req_str("kind")?)?,
                     bytes: rv.req_usize("bytes")? as u64,
                     retired: rv.req("retired")?.as_bool().context("'retired' is not a bool")?,
+                    // Manifests written before incremental publish landed
+                    // have no 'patch' key; those versions are all full.
+                    patch: rv.get("patch").and_then(|v| v.as_bool()).unwrap_or(false),
                 },
             );
         }
@@ -690,17 +1064,38 @@ mod tests {
 
     fn tiny_model(variant: &str) -> DeltaModel {
         let d = vec![1.0f32; 8 * 8];
-        DeltaModel {
-            variant: variant.into(),
-            base_config: "tiny".into(),
-            meta: Default::default(),
-            modules: vec![DeltaModule {
+        DeltaModel::new(
+            variant,
+            "tiny",
+            vec![DeltaModule {
                 id: ModuleId { layer: 0, kind: ProjKind::Q },
                 mask: PackedMask::pack(&d, 8, 8),
                 axis: Axis::Row,
                 scales: vec![0.1; 8],
             }],
-        }
+        )
+    }
+
+    /// A multi-module model whose per-module content is seeded, so tests
+    /// can change a controlled subset between "versions".
+    fn seeded_model(variant: &str, seeds: &[u64]) -> DeltaModel {
+        use crate::util::rng::Rng;
+        let kinds = [ProjKind::Q, ProjKind::K, ProjKind::V, ProjKind::O];
+        let modules = seeds
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| {
+                let mut r = Rng::new(s);
+                let d: Vec<f32> = (0..16 * 16).map(|_| r.normal_f32(0.0, 1.0)).collect();
+                DeltaModule {
+                    id: ModuleId { layer: i / kinds.len(), kind: kinds[i % kinds.len()] },
+                    mask: PackedMask::pack(&d, 16, 16),
+                    axis: Axis::Row,
+                    scales: (0..16).map(|_| r.uniform_in(0.01, 0.2)).collect(),
+                }
+            })
+            .collect();
+        DeltaModel::new(variant, "tiny", modules)
     }
 
     fn fresh_dir(name: &str) -> PathBuf {
@@ -855,6 +1250,149 @@ mod tests {
         let reg = VariantRegistry::open(&dir).unwrap();
         assert_eq!(reg.resolve("ft").unwrap().version, 3);
         assert_eq!(reg.publish("ft", tiny_model("ft")).unwrap(), 4);
+    }
+
+    #[test]
+    fn incremental_publish_ships_a_patch_and_resolves_through_the_chain() {
+        let dir = fresh_dir("pawd_test_reg_inc");
+        let reg = VariantRegistry::open(&dir).unwrap();
+        // First incremental publish has no parent: falls back to full.
+        let v1 = seeded_model("ft", &[1, 2, 3, 4, 5, 6, 7, 8]);
+        let out1 = reg.publish_incremental("ft", v1.clone(), None).unwrap();
+        assert_eq!((out1.version, out1.patch), (1, false));
+        // Change one of eight modules; the patch must ship a fraction.
+        let mut v2 = seeded_model("ft", &[1, 2, 3, 4, 5, 6, 7, 8]);
+        v2.modules[3] = seeded_model("ft", &[99]).modules[0].clone();
+        let mut m3 = (*v2.modules[3]).clone();
+        m3.id = v1.modules[3].id; // same slot, new content
+        v2.modules[3] = std::sync::Arc::new(m3);
+        let out2 = reg.publish_incremental("ft", v2.clone(), None).unwrap();
+        assert_eq!((out2.version, out2.patch), (2, true));
+        assert!(
+            out2.bytes * 4 < out1.bytes,
+            "patch ({}B) should be a fraction of full ({}B)",
+            out2.bytes,
+            out1.bytes
+        );
+        let r = reg.resolve("ft").unwrap();
+        assert_eq!((r.version, r.patch, r.parent), (2, true, Some(1)));
+        // The chain resolves and composes to the child's effective model.
+        let links = reg.chain_links("ft", 2).unwrap();
+        assert_eq!(links.len(), 2);
+        assert!(!links[0].is_patch && links[1].is_patch);
+        let eff = reg.effective_model("ft", 2).unwrap();
+        assert_eq!(eff.modules.len(), 8);
+        for (a, b) in eff.modules.iter().zip(&v2.modules) {
+            assert!(a.content_eq(b), "module {} must match the published child", a.id);
+        }
+        // An identical republish produces an empty (tiny) patch.
+        let out3 = reg.publish_incremental("ft", v2.clone(), None).unwrap();
+        assert!(out3.patch);
+        assert!(out3.bytes < 256, "empty patch should be header-sized, got {}", out3.bytes);
+        // Explicit parent: diff against v1 again.
+        let out4 = reg.publish_incremental("ft", v2, Some(1)).unwrap();
+        assert!(out4.patch);
+        assert_eq!(reg.chain_links("ft", out4.version).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn consolidate_rebases_a_chain_in_place() {
+        let dir = fresh_dir("pawd_test_reg_consol");
+        let reg = VariantRegistry::open(&dir).unwrap();
+        let v1 = seeded_model("ft", &[1, 2, 3, 4]);
+        reg.publish_incremental("ft", v1, None).unwrap();
+        let mut v2 = seeded_model("ft", &[1, 2, 3, 4]);
+        let mut changed = (*seeded_model("ft", &[50]).modules[0]).clone();
+        changed.id = v2.modules[2].id;
+        v2.modules[2] = std::sync::Arc::new(changed);
+        let out = reg.publish_incremental("ft", v2.clone(), None).unwrap();
+        assert!(out.patch);
+        let eff_before = reg.effective_model("ft", 2).unwrap();
+        let old_patch_file = {
+            let r = reg.resolve("ft@2").unwrap();
+            r.path.clone()
+        };
+        let c = reg.consolidate("ft", None).unwrap();
+        assert_eq!((c.version, c.rebased_links), (2, 2));
+        // Same version, now full; the old patch file is gone.
+        let r = reg.resolve("ft").unwrap();
+        assert_eq!((r.version, r.patch), (2, false));
+        assert_eq!(reg.chain_links("ft", 2).unwrap().len(), 1);
+        assert!(!old_patch_file.exists(), "superseded patch file must be unlinked");
+        // Content identical to the pre-consolidation composition, and the
+        // consolidated artifact is self-contained on disk.
+        let eff_after = load_delta(&r.path).unwrap();
+        assert_eq!(eff_after.meta.version, 2);
+        assert_eq!(eff_after.modules.len(), eff_before.modules.len());
+        for (a, b) in eff_after.modules.iter().zip(&eff_before.modules) {
+            assert!(a.content_eq(b), "consolidation must not change {}", a.id);
+        }
+        // Consolidating a full version is a no-op.
+        let again = reg.consolidate("ft", Some(2)).unwrap();
+        assert_eq!(again.rebased_links, 0);
+        // Survives reopen.
+        drop(reg);
+        let reg = VariantRegistry::open(&dir).unwrap();
+        assert!(!reg.resolve("ft").unwrap().patch);
+    }
+
+    #[test]
+    fn retire_guards_chain_parents_and_gc_pins_live_chains() {
+        let dir = fresh_dir("pawd_test_reg_chainguard");
+        let reg = VariantRegistry::open(&dir).unwrap();
+        let v1 = seeded_model("ft", &[1, 2, 3]);
+        reg.publish_incremental("ft", v1, None).unwrap();
+        let mut v2 = seeded_model("ft", &[1, 2, 3]);
+        let mut changed = (*seeded_model("ft", &[70]).modules[0]).clone();
+        changed.id = v2.modules[0].id;
+        v2.modules[0] = std::sync::Arc::new(changed);
+        assert!(reg.publish_incremental("ft", v2.clone(), None).unwrap().patch);
+        // v1 is the chain parent of live patch v2: retire must refuse.
+        let err = reg.retire("ft", 1).unwrap_err().to_string();
+        assert!(err.contains("chain parent"), "{err}");
+        // Consolidating v2 severs the dependency; then v1 can retire + gc.
+        reg.consolidate("ft", Some(2)).unwrap();
+        reg.retire("ft", 1).unwrap();
+        let v1_file = dir.join("ft@1.pawd");
+        assert!(v1_file.exists());
+        let report = reg.gc(Some("ft")).unwrap();
+        assert_eq!(report.files_removed, 1);
+        assert!(!v1_file.exists());
+        // v2 still loads (it is self-contained now).
+        assert!(reg.effective_model("ft", 2).is_ok());
+    }
+
+    #[test]
+    fn publish_rejects_patch_models_on_the_full_path() {
+        let dir = fresh_dir("pawd_test_reg_patchguard");
+        let reg = VariantRegistry::open(&dir).unwrap();
+        let mut m = tiny_model("ft");
+        m.meta.is_patch = true;
+        m.meta.parent = Some(1);
+        assert!(reg.publish("ft", m).is_err(), "publish must refuse partial module sets");
+    }
+
+    #[test]
+    fn adoption_restores_patch_lineage_from_headers() {
+        let dir = fresh_dir("pawd_test_reg_adopt_patch");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Write a full v1 and a patch v2 directly (as a synced-in registry
+        // dir would contain), no manifest.
+        let mut v1 = seeded_model("ft", &[1, 2, 3]);
+        v1.meta = ArtifactMeta { version: 1, parent: None, created_unix: 0, is_patch: false };
+        save_delta(dir.join("ft@1.pawd"), &v1).unwrap();
+        let mut patch = seeded_model("ft", &[40]);
+        let mut m0 = (*patch.modules[0]).clone();
+        m0.id = v1.modules[1].id;
+        patch.modules = vec![std::sync::Arc::new(m0)];
+        patch.meta = ArtifactMeta { version: 2, parent: Some(1), created_unix: 0, is_patch: true };
+        save_delta(dir.join("ft@2.pawd"), &patch).unwrap();
+        let reg = VariantRegistry::open(&dir).unwrap();
+        let r = reg.resolve("ft").unwrap();
+        assert_eq!((r.version, r.patch, r.parent), (2, true, Some(1)));
+        let eff = reg.effective_model("ft", 2).unwrap();
+        assert_eq!(eff.modules.len(), 3);
+        assert!(eff.modules[1].content_eq(&patch.modules[0]));
     }
 
     #[test]

@@ -15,12 +15,10 @@ use std::path::PathBuf;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-/// Reserved pseudo-variant name kept only for wire compatibility with
-/// pre-admin-plane clients; use [`Payload::Admin`] / `Client::stats`.
-pub const STATS_VARIANT: &str = "__stats__";
-
 /// Pseudo-variant name admin requests are queued under (admin ops carry
-/// their target variant, if any, inside the op).
+/// their target variant, if any, inside the op). The pre-admin-plane
+/// `"__stats__"` alias was removed after its deprecation window; admin
+/// routing is by payload type, not variant name.
 pub const ADMIN_VARIANT: &str = "__admin__";
 
 /// What a client asks of a variant.
@@ -59,10 +57,20 @@ pub enum DataOp {
 pub enum AdminOp {
     /// Server metrics + cache residency gauges.
     Stats,
-    /// Publish the `.pawd` artifact at `artifact` as the next version of
-    /// `variant` and flip the alias (unless pinned). The new version is
-    /// warmed into the cache before the response is sent.
+    /// Publish the `.pawd` artifact at `artifact` as the next **full**
+    /// version of `variant` and flip the alias (unless pinned). The new
+    /// version is warmed into the cache before the response is sent.
     Publish { variant: String, artifact: PathBuf },
+    /// Publish the effective model in `artifact` as the next version of
+    /// `variant`, shipping a **patch artifact** with only the modules that
+    /// changed vs `parent` (default: the active version); falls back to a
+    /// full publish when no patch is expressible. Warming the new version
+    /// composes onto the resident parent, so the cache cost is also
+    /// proportional to what changed.
+    PublishIncremental { variant: String, artifact: PathBuf, parent: Option<u32> },
+    /// Rebase the patch chain of `variant@version` (default: the active
+    /// version) into a single full artifact in place.
+    Consolidate { variant: String, version: Option<u32> },
     /// Flip the alias back to `to` (or the active version's parent).
     Rollback { variant: String, to: Option<u32> },
     /// Freeze the alias on `version` until unpinned.
@@ -91,7 +99,10 @@ pub enum RespBody {
 pub enum AdminResp {
     /// Boxed: the snapshot dwarfs every other variant.
     Stats { snapshot: Box<MetricsSnapshot> },
-    Published { variant: String, version: u32 },
+    /// `patch` reports whether a patch artifact shipped (always `false` for
+    /// plain `Publish`); `bytes` is the artifact size written.
+    Published { variant: String, version: u32, patch: bool, bytes: u64 },
+    Consolidated { variant: String, version: u32, bytes: u64, rebased_links: usize },
     RolledBack { variant: String, version: u32 },
     Pinned { variant: String, version: u32 },
     Unpinned { variant: String },

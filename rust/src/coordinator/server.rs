@@ -9,24 +9,29 @@
 //!
 //! ```text
 //! clients --mpsc--> dispatcher ----work queue----> worker 0..N-1
-//!                    (one FIFO batch window,        (cache multi-get,
+//!                    (one batch window,             (cache multi-get,
 //!                     size/deadline flush,           BatchPlan per shared
-//!                     grouped by variant;            base: ONE base GEMM
-//!                     admin ops bypass batching)     per module per window;
-//!                                                    admin ops -> registry)
+//!                     FAIR-SHARE round-robin         base: ONE base GEMM
+//!                     across variants at flush;      per module per window;
+//!                     admin ops bypass batching)     admin ops -> registry)
 //! ```
 //!
 //! **Batched multi-variant execution.** The dispatcher coalesces concurrent
-//! data requests — whatever variant they target — into one FIFO *batch
-//! window*, flushed when it reaches `max_batch` requests or its oldest
-//! entry has waited `max_wait`. A worker pins every `(variant, version)`
-//! the window needs with one cache multi-get, groups the window by shared
-//! base storage into [`BatchPlan`]s, and runs each plan as ONE stacked
-//! forward: the base GEMM executes once per module for the whole window and
-//! each variant pays only its packed mask reduction on its own rows.
-//! Fairness caveat: the window is strictly FIFO, so a variant that floods
-//! the ingress can fill whole windows; `max_wait` still bounds every
-//! request's batching delay, but there is no per-variant fair share.
+//! data requests — whatever variant they target — into one *batch window*,
+//! flushed when it reaches `max_batch` requests or its oldest entry has
+//! waited `max_wait`. A worker pins every `(variant, version)` the window
+//! needs with one cache multi-get, groups the window by shared base storage
+//! into [`BatchPlan`]s, and runs each plan as ONE stacked forward: the base
+//! GEMM executes once per module for the whole window and each variant pays
+//! only its packed mask reduction on its own rows.
+//!
+//! **Fair share.** A flush picks requests **round-robin across the
+//! variants present in the window** (per-variant FIFO within each), so a
+//! variant that floods the ingress cannot fill whole windows and starve a
+//! cold variant's single request: any variant waiting in the window is
+//! guaranteed a slot in the next flush as long as `max_batch` ≥ the number
+//! of distinct variants waiting. Requests a flush leaves behind keep their
+//! arrival order and age toward the `max_wait` deadline as before.
 //!
 //! Publishing through the admin lane is the live-update path: the registry
 //! flips the alias atomically, the publishing worker warms the new version
@@ -37,7 +42,6 @@ use super::cache::VariantCache;
 use super::metrics::Metrics;
 use super::request::{
     AdminOp, AdminResp, DataOp, Payload, Request, RespBody, Response, Timing, ADMIN_VARIANT,
-    STATS_VARIANT,
 };
 use super::store::VariantStore;
 use crate::data::corpus::encode;
@@ -171,9 +175,9 @@ impl Client {
         }
     }
 
-    /// Publish `artifact` as the next version of `variant`; returns the
-    /// assigned version once the alias has flipped and the new version has
-    /// been warmed into the cache.
+    /// Publish `artifact` as the next full version of `variant`; returns
+    /// the assigned version once the alias has flipped and the new version
+    /// has been warmed into the cache.
     pub fn publish(&self, variant: &str, artifact: &Path) -> Result<u32, String> {
         match self.admin(AdminOp::Publish {
             variant: variant.to_string(),
@@ -181,6 +185,35 @@ impl Client {
         })? {
             AdminResp::Published { version, .. } => Ok(version),
             other => Err(format!("unexpected publish response {other:?}")),
+        }
+    }
+
+    /// Publish the effective model in `artifact` incrementally: ship a
+    /// patch with only the modules changed vs `parent` (default: active
+    /// version) when possible. Returns `(version, shipped_as_patch,
+    /// bytes_written)`.
+    pub fn publish_incremental(
+        &self,
+        variant: &str,
+        artifact: &Path,
+        parent: Option<u32>,
+    ) -> Result<(u32, bool, u64), String> {
+        match self.admin(AdminOp::PublishIncremental {
+            variant: variant.to_string(),
+            artifact: artifact.to_path_buf(),
+            parent,
+        })? {
+            AdminResp::Published { version, patch, bytes, .. } => Ok((version, patch, bytes)),
+            other => Err(format!("unexpected publish response {other:?}")),
+        }
+    }
+
+    /// Rebase the patch chain of `variant@version` (default: active) into a
+    /// full artifact in place; returns the consolidated version.
+    pub fn consolidate(&self, variant: &str, version: Option<u32>) -> Result<u32, String> {
+        match self.admin(AdminOp::Consolidate { variant: variant.to_string(), version })? {
+            AdminResp::Consolidated { version, .. } => Ok(version),
+            other => Err(format!("unexpected consolidate response {other:?}")),
         }
     }
 
@@ -280,23 +313,21 @@ fn dispatcher_loop(
     cfg: ServerConfig,
     metrics: Arc<Metrics>,
 ) {
-    // One FIFO batch window across ALL variants: concurrent data requests
-    // coalesce by arrival, then get grouped by variant at flush time so a
-    // worker can run the whole mixed window as one shared-base BatchPlan.
-    // (FIFO means no per-variant fair share — a flooding variant can fill
-    // windows — but `max_wait` still bounds every request's batching delay.)
+    // One batch window across ALL variants: concurrent data requests
+    // coalesce by arrival; a flush picks round-robin across the variants
+    // present (`fair_take`), then groups by variant so a worker can run the
+    // whole mixed window as one shared-base BatchPlan.
     let mut window: VecDeque<Request> = VecDeque::new();
     let mut open = true;
     while open || !window.is_empty() {
         // Pull with a small timeout so deadline flushes happen on time.
         match ingress.recv_timeout(Duration::from_micros(500)) {
             Ok(Ingress::Req(req)) => {
-                // Admin ops (and anything aimed at the reserved stats
+                // Admin ops (and anything aimed at the reserved admin
                 // pseudo-variant) bypass batching: they never touch an
                 // engine, so making them wait behind a batch deadline would
                 // only delay alias flips.
                 let admin = matches!(req.payload, Payload::Admin(_))
-                    || req.variant == STATS_VARIANT
                     || req.variant == ADMIN_VARIANT;
                 if admin {
                     if work.send(WorkItem::Admin(req)).is_err() {
@@ -318,8 +349,7 @@ fn dispatcher_loop(
             .map(|r| now.duration_since(r.submitted) >= cfg.max_wait)
             .unwrap_or(false);
         while window.len() >= cfg.max_batch || ((due || !open) && !window.is_empty()) {
-            let take = window.len().min(cfg.max_batch);
-            let requests: Vec<Request> = window.drain(..take).collect();
+            let requests = fair_take(&mut window, cfg.max_batch);
             metrics.record_batch(requests.len());
             if work.send(WorkItem::Window(group_by_variant(requests))).is_err() {
                 return; // workers gone
@@ -327,6 +357,59 @@ fn dispatcher_loop(
         }
     }
     // work sender drops here -> workers drain and exit.
+}
+
+/// Pick up to `max` requests from the window **round-robin across
+/// variants** (variants ordered by first appearance, per-variant FIFO
+/// preserved), so a variant flooding the ingress cannot fill whole windows
+/// and starve a cold variant's lone request. The window's overall oldest
+/// request is always picked (its variant leads the rotation), so the
+/// deadline check on `window.front()` keeps working; unpicked requests stay
+/// in arrival order.
+fn fair_take(window: &mut VecDeque<Request>, max: usize) -> Vec<Request> {
+    if window.len() <= max {
+        return window.drain(..).collect();
+    }
+    // Bucket indices by variant, first-appearance order.
+    let mut order: Vec<&str> = Vec::new();
+    let mut buckets: HashMap<&str, VecDeque<usize>> = HashMap::new();
+    for (i, req) in window.iter().enumerate() {
+        let entry = buckets.entry(req.variant.as_str()).or_default();
+        if entry.is_empty() && !order.contains(&req.variant.as_str()) {
+            order.push(req.variant.as_str());
+        }
+        entry.push_back(i);
+    }
+    let mut picked = vec![false; window.len()];
+    let mut n = 0usize;
+    'rounds: loop {
+        let mut any = false;
+        for v in &order {
+            if let Some(i) = buckets.get_mut(v).and_then(|b| b.pop_front()) {
+                picked[i] = true;
+                n += 1;
+                any = true;
+                if n == max {
+                    break 'rounds;
+                }
+            }
+        }
+        if !any {
+            break;
+        }
+    }
+    // Drain picked indices preserving arrival order on both sides.
+    let mut taken = Vec::with_capacity(n);
+    let mut rest = VecDeque::with_capacity(window.len() - n);
+    for (i, req) in window.drain(..).enumerate() {
+        if picked[i] {
+            taken.push(req);
+        } else {
+            rest.push_back(req);
+        }
+    }
+    *window = rest;
+    taken
 }
 
 /// Group a flushed window by variant, preserving arrival order both across
@@ -632,28 +715,43 @@ fn run_admin(
             Ok(AdminResp::Stats { snapshot: Box::new(snapshot) })
         }
         AdminOp::Publish { variant, artifact } => {
-            let delta = Arc::new(
-                crate::delta::format::load_delta(artifact)
-                    .map_err(|e| format!("unreadable artifact: {e}"))?,
-            );
-            // Validate config + per-module shapes against the resident base
-            // BEFORE the alias flips — a wrong-base or mis-shaped delta must
-            // not brick the variant.
-            crate::exec::PackedVariant::new(cache.base(), delta.clone())
-                .map_err(|e| format!("artifact rejected: {e}"))?;
-            let delta = Arc::try_unwrap(delta).unwrap_or_else(|arc| (*arc).clone());
-            let version = registry.publish(variant, delta).map_err(|e| e.to_string())?;
+            let delta = load_validated_artifact(artifact, cache)?;
+            let outcome = registry.publish_full(variant, delta).map_err(|e| e.to_string())?;
             metrics.record_publish();
-            // Warm the new version so the first data request after the flip
-            // hits a resident entry; its load time is charged as a cold
-            // start here, on the control plane.
-            match cache.get(&format!("{variant}@{version}")) {
-                Ok((_, Some(d))) => metrics.record_cold_start(d),
-                Ok((_, None)) => {}
-                Err(e) => return Err(format!("published v{version} but warming failed: {e}")),
-            }
-            metrics.set_residency(cache.residency());
-            Ok(AdminResp::Published { variant: variant.clone(), version })
+            warm_published(variant, outcome.version, cache, metrics)?;
+            Ok(AdminResp::Published {
+                variant: variant.clone(),
+                version: outcome.version,
+                patch: false,
+                bytes: outcome.bytes,
+            })
+        }
+        AdminOp::PublishIncremental { variant, artifact, parent } => {
+            let delta = load_validated_artifact(artifact, cache)?;
+            let outcome = registry
+                .publish_incremental(variant, delta, *parent)
+                .map_err(|e| e.to_string())?;
+            metrics.record_publish();
+            // Warming a patch version composes onto the resident parent, so
+            // the cold start charged here is proportional to the changed
+            // modules, not the whole artifact.
+            warm_published(variant, outcome.version, cache, metrics)?;
+            Ok(AdminResp::Published {
+                variant: variant.clone(),
+                version: outcome.version,
+                patch: outcome.patch,
+                bytes: outcome.bytes,
+            })
+        }
+        AdminOp::Consolidate { variant, version } => {
+            let outcome =
+                registry.consolidate(variant, *version).map_err(|e| e.to_string())?;
+            Ok(AdminResp::Consolidated {
+                variant: variant.clone(),
+                version: outcome.version,
+                bytes: outcome.bytes,
+                rebased_links: outcome.rebased_links,
+            })
         }
         AdminOp::Rollback { variant, to } => {
             let version = registry.rollback(variant, *to).map_err(|e| e.to_string())?;
@@ -681,6 +779,40 @@ fn run_admin(
         }
         AdminOp::List => Ok(AdminResp::Variants { variants: registry.list() }),
     }
+}
+
+/// Load a `.pawd` artifact and validate config + per-module shapes against
+/// the resident base BEFORE any alias flips — a wrong-base or mis-shaped
+/// delta must not brick the variant.
+fn load_validated_artifact(
+    artifact: &Path,
+    cache: &VariantCache,
+) -> Result<crate::delta::DeltaModel, String> {
+    let delta = Arc::new(
+        crate::delta::format::load_delta(artifact)
+            .map_err(|e| format!("unreadable artifact: {e}"))?,
+    );
+    crate::exec::PackedVariant::new(cache.base(), delta.clone())
+        .map_err(|e| format!("artifact rejected: {e}"))?;
+    Ok(Arc::try_unwrap(delta).unwrap_or_else(|arc| (*arc).clone()))
+}
+
+/// Warm a freshly published version so the first data request after the
+/// flip hits a resident entry; its load time is charged as a cold start
+/// here, on the control plane.
+fn warm_published(
+    variant: &str,
+    version: u32,
+    cache: &VariantCache,
+    metrics: &Metrics,
+) -> Result<(), String> {
+    match cache.get(&format!("{variant}@{version}")) {
+        Ok((_, Some(d))) => metrics.record_cold_start(d),
+        Ok((_, None)) => {}
+        Err(e) => return Err(format!("published v{version} but warming failed: {e}")),
+    }
+    metrics.set_residency(cache.residency());
+    Ok(())
 }
 
 fn score_one_xla(
@@ -764,4 +896,57 @@ fn argmax_f64(xs: &[f64]) -> usize {
         }
     }
     best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(variant: &str) -> Request {
+        Request::new(0, variant, Payload::perplexity("probe text")).0
+    }
+
+    #[test]
+    fn fair_take_round_robins_so_a_hot_variant_cannot_starve_a_cold_one() {
+        // Six "hot" requests arrive before two "cold" ones; a 4-slot flush
+        // under strict FIFO would be all hot. Fair share must seat the cold
+        // variant's requests in the same window.
+        let mut window: VecDeque<Request> = VecDeque::new();
+        for _ in 0..6 {
+            window.push_back(req("hot"));
+        }
+        window.push_back(req("cold"));
+        window.push_back(req("cold"));
+        let taken = fair_take(&mut window, 4);
+        assert_eq!(taken.len(), 4);
+        let cold_taken = taken.iter().filter(|r| r.variant == "cold").count();
+        assert_eq!(cold_taken, 2, "the hot variant must not starve the cold one");
+        assert_eq!(taken[0].variant, "hot", "the overall oldest request always flushes");
+        // Leftovers keep arrival order so the deadline check stays valid.
+        assert_eq!(window.len(), 4);
+        assert!(window.iter().all(|r| r.variant == "hot"));
+        // A window that fits entirely drains in arrival order.
+        let taken = fair_take(&mut window, 8);
+        assert_eq!(taken.len(), 4);
+        assert!(window.is_empty());
+    }
+
+    #[test]
+    fn fair_take_covers_every_variant_when_slots_allow() {
+        let mut window: VecDeque<Request> = VecDeque::new();
+        for _ in 0..5 {
+            window.push_back(req("a"));
+        }
+        window.push_back(req("b"));
+        window.push_back(req("c"));
+        window.push_back(req("d"));
+        let taken = fair_take(&mut window, 4);
+        let variants: std::collections::HashSet<&str> =
+            taken.iter().map(|r| r.variant.as_str()).collect();
+        assert_eq!(
+            variants.len(),
+            4,
+            "with max_batch >= distinct variants, every waiting variant gets a slot"
+        );
+    }
 }

@@ -15,7 +15,9 @@
 
 use super::registry::{ArtifactKind, Resolved, VariantRegistry};
 use crate::delta::apply::apply_deltas_inplace;
+use crate::delta::chain;
 use crate::delta::format::load_delta;
+use crate::delta::types::DeltaModel;
 use crate::exec::{ExecMode, PackedVariant, VariantWeights};
 use crate::model::checkpoint::load_fp16;
 use crate::model::FlatParams;
@@ -113,13 +115,49 @@ impl VariantStore {
     /// it keyed on is exactly the one loaded, even if a publish lands in
     /// between).
     pub fn load_resolved(&self, resolved: &Resolved) -> Result<LoadedVariant> {
+        self.load_resolved_hinted(resolved, None)
+    }
+
+    /// [`load_resolved`](Self::load_resolved) with an optional **resident
+    /// parent hint**: when `resolved` is a patch version and `parent_hint`
+    /// is its direct parent's effective model (the cache passes the
+    /// already-resident entry), only the patch file is read and every
+    /// unchanged module is inherited as the parent's own `Arc` — the warm
+    /// half of "a publish costs what actually changed".
+    pub fn load_resolved_hinted(
+        &self,
+        resolved: &Resolved,
+        parent_hint: Option<Arc<DeltaModel>>,
+    ) -> Result<LoadedVariant> {
         let name = &resolved.name;
         let t0 = Instant::now();
-        let bytes_read = std::fs::metadata(&resolved.path).map(|m| m.len()).unwrap_or(0);
+        let mut bytes_read = std::fs::metadata(&resolved.path).map(|m| m.len()).unwrap_or(0);
         let (weights, source) = match resolved.kind {
             ArtifactKind::Delta => {
-                let delta = load_delta(&resolved.path)
-                    .with_context(|| format!("loading delta for '{name}@{}'", resolved.version))?;
+                let delta = if resolved.patch {
+                    let links = self.registry.chain_links(name, resolved.version)?;
+                    let first = chain::load_effective(&links, parent_hint.as_deref());
+                    let (model, stats) = match first {
+                        Ok(ok) => ok,
+                        Err(_) => {
+                            // A concurrent `consolidate` may have swapped
+                            // the version's backing file (and unlinked the
+                            // patch) between our chain walk and the reads.
+                            // Re-resolve the chain once — post-consolidation
+                            // it is a single full link — before giving up.
+                            let links = self.registry.chain_links(name, resolved.version)?;
+                            chain::load_effective(&links, parent_hint.as_deref()).with_context(
+                                || format!("composing chain for '{name}@{}'", resolved.version),
+                            )?
+                        }
+                    };
+                    bytes_read = stats.bytes_read;
+                    model
+                } else {
+                    load_delta(&resolved.path).with_context(|| {
+                        format!("loading delta for '{name}@{}'", resolved.version)
+                    })?
+                };
                 if delta.base_config != self.base.cfg().name {
                     bail!(
                         "delta '{name}' targets base '{}', store has '{}'",
@@ -262,6 +300,41 @@ mod tests {
         // FP16 checkpoints are always dense, whatever the mode.
         let vb = fused_store.load("vb").unwrap();
         assert!(!vb.weights.is_packed());
+    }
+
+    #[test]
+    fn patch_versions_load_through_the_chain_in_both_modes() {
+        let dir = std::env::temp_dir().join("pawd_test_store5");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (base, _ft) = setup(&dir);
+        let fused = VariantStore::new(base.clone(), &dir).with_mode(ExecMode::Fused);
+        let registry = fused.registry().clone();
+        // Child effective model: v1 with one module's scales doubled
+        // (doubling an f16-exact value stays f16-exact, so on-disk content
+        // roundtrips bitwise).
+        let mut v2 = registry.effective_model("va", 1).unwrap();
+        {
+            let m = Arc::make_mut(&mut v2.modules[0]);
+            for s in &mut m.scales {
+                *s *= 2.0;
+            }
+        }
+        let out = registry.publish_incremental("va", v2.clone(), None).unwrap();
+        assert!(out.patch, "single-module change must ship as a patch");
+
+        let loaded = fused.load("va").unwrap();
+        assert_eq!((loaded.version, loaded.weights.version()), (out.version, out.version));
+        assert!(loaded.weights.is_packed());
+        assert!(loaded.bytes_read > 0);
+        let want = crate::delta::apply::materialize(&base, &v2.modules);
+        assert_eq!(loaded.params().data, want.data, "fused chain load must compose the child");
+        // Dense mode composes the same chain, then materializes. (A fresh
+        // store reopens the manifest, exercising patch-record persistence.)
+        drop(fused);
+        let dense = VariantStore::new(base.clone(), &dir);
+        let dl = dense.load("va").unwrap();
+        assert!(!dl.weights.is_packed());
+        assert_eq!(dl.params().data, want.data, "dense chain load must compose the child");
     }
 
     #[test]

@@ -184,9 +184,15 @@ fn add_row_col(wrow: &mut [f32], words: &[u32], scales: &[f32], flip: u32) {
 
 /// Apply a list of module deltas onto base params *in place* (the hot-swap
 /// loader path: one apply per module, paper §1 "single operation per
-/// module").
-pub fn apply_deltas_inplace(params: &mut FlatParams, modules: &[DeltaModule]) {
+/// module"). Generic over the module holder so both plain slices and the
+/// `Arc<DeltaModule>` slices a [`DeltaModel`](super::DeltaModel) carries
+/// apply without cloning.
+pub fn apply_deltas_inplace<M: std::borrow::Borrow<DeltaModule>>(
+    params: &mut FlatParams,
+    modules: &[M],
+) {
     for m in modules {
+        let m = m.borrow();
         let (rows, cols) = m.id.kind.shape(params.cfg());
         assert_eq!((rows, cols), (m.d_out(), m.d_in()), "delta/module shape mismatch for {}", m.id);
         apply_module_inplace(params.module_mut(m.id), m, false);
@@ -195,15 +201,22 @@ pub fn apply_deltas_inplace(params: &mut FlatParams, modules: &[DeltaModule]) {
 
 /// Revert previously applied deltas (in-place variant swap without
 /// re-reading the base checkpoint).
-pub fn revert_deltas_inplace(params: &mut FlatParams, modules: &[DeltaModule]) {
+pub fn revert_deltas_inplace<M: std::borrow::Borrow<DeltaModule>>(
+    params: &mut FlatParams,
+    modules: &[M],
+) {
     for m in modules {
+        let m = m.borrow();
         apply_module_inplace(params.module_mut(m.id), m, true);
     }
 }
 
 /// Materialize a fine-tuned variant: clone base then apply (the cache-fill
 /// path; the clone is the unavoidable cost of keeping the base pristine).
-pub fn materialize(base: &FlatParams, modules: &[DeltaModule]) -> FlatParams {
+pub fn materialize<M: std::borrow::Borrow<DeltaModule>>(
+    base: &FlatParams,
+    modules: &[M],
+) -> FlatParams {
     let mut out = base.clone();
     apply_deltas_inplace(&mut out, modules);
     out

@@ -1,0 +1,567 @@
+//! Version-chain resolution: compose a parent chain of patch artifacts into
+//! the **effective model** of a version, diff two effective models into a
+//! patch, and consolidate a chain back into a full artifact.
+//!
+//! The paper's premise is *frequent* updates, and between two adjacent
+//! fine-tune checkpoints most modules' packed bitplane/scales do not move.
+//! A v3 **patch artifact** therefore ships only the changed modules
+//! (DeltaZip and BitDelta make the same observation for multi-tenant
+//! serving: structure *between* checkpoints is where the storage and
+//! cold-start wins live). The effective model of `variant@N` is recovered
+//! by walking `N`'s parent chain down to the nearest full artifact and
+//! overlaying each patch in order.
+//!
+//! Composition is **Arc-sharing**: modules the patch does not carry are the
+//! *same* `Arc<DeltaModule>` as the parent's, so when the parent's effective
+//! model is already resident, loading `@N+1` allocates and reads only what
+//! actually changed. The cold path (no resident ancestor) uses the v3
+//! section table to read each record **once** from the newest link that
+//! carries it — a module rewritten by three successive patches is read from
+//! the newest patch only.
+//!
+//! Chains are bounded by [`MAX_CHAIN_DEPTH`]; the registry's `consolidate`
+//! op rebases a deep chain into a single full artifact
+//! ([`VariantRegistry::consolidate`](crate::coordinator::VariantRegistry::consolidate)).
+//!
+//! Determinism: composition preserves the base artifact's module order and
+//! appends genuinely new modules in (link, record) order, so composing a
+//! chain and loading a consolidated full artifact of the same version yield
+//! bitwise-identical models (packed mask words, f16 scale bits and
+//! therefore eval logits) — the invariant the `incremental_chain`
+//! integration tests pin.
+
+use super::format::{load_delta, load_modules, read_index};
+use super::types::{ArtifactMeta, DeltaModel, DeltaModule};
+use crate::exec::counters;
+use crate::model::ModuleId;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Policy bound on chain length (full artifact + patches): the registry
+/// refuses to *grow* a chain past this — `publish_incremental` falls back
+/// to a full artifact instead. Keeps worst-case cold-load fan-out and
+/// patch-lineage fragility bounded.
+pub const MAX_CHAIN_DEPTH: usize = 8;
+
+/// Hard backstop on chain length for the loaders. Deliberately far above
+/// [`MAX_CHAIN_DEPTH`]: registry-built chains never get near it, but an
+/// adopted or hand-synced directory may exceed the policy bound, and
+/// `consolidate` must still be able to *load* such a chain to rebase it —
+/// the remedy has to work on the disease. Only a cyclic or absurdly deep
+/// lineage (corruption) trips this.
+pub const HARD_CHAIN_BOUND: usize = 64;
+
+/// One link of a version chain, base-most first: the artifact file backing
+/// one version of a variant.
+#[derive(Clone, Debug)]
+pub struct ChainLink {
+    pub version: u32,
+    pub path: PathBuf,
+    /// Whether the artifact is a patch (carries only changed modules).
+    pub is_patch: bool,
+}
+
+/// Accounting for one effective-model load — what the chain loader actually
+/// touched, so callers (cache, benches) can assert that warming a patch
+/// version costs proportionally to what changed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LoadStats {
+    /// Artifact bytes read from disk (headers, section tables, records).
+    pub bytes_read: u64,
+    /// Module records decoded from disk.
+    pub modules_read: usize,
+    /// Modules reused from a resident parent's `Arc` without any disk read.
+    pub modules_inherited: usize,
+}
+
+/// Overlay `patch` onto the `parent` **effective** model: modules the patch
+/// carries replace the parent's in place (or append, for modules the parent
+/// never covered); everything else is inherited as the parent's own `Arc`.
+/// The result is the child's effective (full) model.
+pub fn compose(parent: &DeltaModel, patch: &DeltaModel) -> Result<DeltaModel> {
+    anyhow::ensure!(patch.meta.is_patch, "compose: '{}' is not a patch", patch.variant);
+    anyhow::ensure!(
+        !parent.meta.is_patch,
+        "compose: parent '{}' must be an effective (full) model",
+        parent.variant
+    );
+    anyhow::ensure!(
+        patch.meta.parent == Some(parent.meta.version),
+        "compose: patch of '{}' targets parent v{:?}, got v{}",
+        patch.variant,
+        patch.meta.parent,
+        parent.meta.version
+    );
+    anyhow::ensure!(
+        patch.base_config == parent.base_config,
+        "compose: base config mismatch ('{}' vs '{}')",
+        patch.base_config,
+        parent.base_config
+    );
+    let mut modules = parent.modules.clone();
+    let by_id: HashMap<ModuleId, usize> =
+        modules.iter().enumerate().map(|(i, m)| (m.id, i)).collect();
+    for pm in &patch.modules {
+        match by_id.get(&pm.id) {
+            Some(&i) => modules[i] = pm.clone(),
+            None => modules.push(pm.clone()),
+        }
+    }
+    Ok(DeltaModel {
+        variant: patch.variant.clone(),
+        base_config: patch.base_config.clone(),
+        meta: ArtifactMeta { is_patch: false, ..patch.meta },
+        modules,
+    })
+}
+
+/// Diff two effective models into the patch that turns `parent` into
+/// `child`: the child modules whose on-disk content
+/// ([`DeltaModule::content_eq`]) differs from the parent's, plus any module
+/// the parent never covered. Returns an error when `child` drops a module
+/// the parent has — the patch format cannot express removal, so such a
+/// publish must ship a full artifact instead.
+pub fn diff(parent: &DeltaModel, child: &DeltaModel) -> Result<DeltaModel> {
+    anyhow::ensure!(
+        !parent.meta.is_patch && !child.meta.is_patch,
+        "diff operates on effective (full) models"
+    );
+    anyhow::ensure!(
+        parent.base_config == child.base_config,
+        "diff: base config mismatch ('{}' vs '{}')",
+        parent.base_config,
+        child.base_config
+    );
+    let child_ids: HashMap<ModuleId, &Arc<DeltaModule>> =
+        child.modules.iter().map(|m| (m.id, m)).collect();
+    for pm in &parent.modules {
+        if !child_ids.contains_key(&pm.id) {
+            bail!(
+                "child drops module {} — patches cannot express removal, publish a full artifact",
+                pm.id
+            );
+        }
+    }
+    let parent_ids: HashMap<ModuleId, &Arc<DeltaModule>> =
+        parent.modules.iter().map(|m| (m.id, m)).collect();
+    let modules: Vec<Arc<DeltaModule>> = child
+        .modules
+        .iter()
+        .filter(|cm| match parent_ids.get(&cm.id) {
+            Some(pm) => !pm.content_eq(cm),
+            None => true,
+        })
+        .cloned()
+        .collect();
+    Ok(DeltaModel {
+        variant: child.variant.clone(),
+        base_config: child.base_config.clone(),
+        meta: ArtifactMeta {
+            version: child.meta.version,
+            parent: Some(parent.meta.version),
+            created_unix: child.meta.created_unix,
+            is_patch: true,
+        },
+        modules,
+    })
+}
+
+/// Load the effective model of the **last** link of `chain` (base-most
+/// first).
+///
+/// * With a `resident_parent` whose version is the direct parent link, only
+///   the final patch file is read and composed on — the hot path behind a
+///   publish, where `@N` is still resident when `@N+1` warms.
+/// * Cold, the v3 section tables let every module record be read exactly
+///   once, from the newest link that carries it.
+///
+/// Returns the composed model plus the [`LoadStats`] of what was actually
+/// read vs inherited.
+pub fn load_effective(
+    chain: &[ChainLink],
+    resident_parent: Option<&DeltaModel>,
+) -> Result<(DeltaModel, LoadStats)> {
+    anyhow::ensure!(!chain.is_empty(), "empty version chain");
+    anyhow::ensure!(
+        chain.len() <= HARD_CHAIN_BOUND,
+        "version chain depth {} exceeds the corruption backstop {HARD_CHAIN_BOUND}",
+        chain.len()
+    );
+    anyhow::ensure!(!chain[0].is_patch, "chain must start at a full artifact");
+    for link in &chain[1..] {
+        anyhow::ensure!(
+            link.is_patch,
+            "non-patch artifact v{} in the middle of a chain",
+            link.version
+        );
+    }
+    let last = chain.last().unwrap();
+    if chain.len() == 1 {
+        let model = load_delta(&last.path)?;
+        let stats = LoadStats {
+            bytes_read: std::fs::metadata(&last.path).map(|m| m.len()).unwrap_or(0),
+            modules_read: model.modules.len(),
+            modules_inherited: 0,
+        };
+        return Ok((model, stats));
+    }
+    // Hot path: the direct parent's effective model is already resident —
+    // read only the final patch and compose onto it.
+    if let Some(parent) = resident_parent {
+        let direct_parent = chain[chain.len() - 2].version;
+        if !parent.meta.is_patch && parent.meta.version == direct_parent {
+            let patch = load_delta(&last.path)
+                .with_context(|| format!("loading patch {}", last.path.display()))?;
+            let patch_modules = patch.modules.len();
+            let model = compose(parent, &patch)?;
+            let inherited = model.modules.len() - patch_modules;
+            counters::record_modules_inherited(inherited as u64);
+            let stats = LoadStats {
+                bytes_read: std::fs::metadata(&last.path).map(|m| m.len()).unwrap_or(0),
+                modules_read: patch_modules,
+                modules_inherited: inherited,
+            };
+            return Ok((model, stats));
+        }
+    }
+    // Cold path: index every link, then read each module record once, from
+    // the newest link that carries it.
+    let mut stats = LoadStats::default();
+    let mut indexes = Vec::with_capacity(chain.len());
+    for link in chain {
+        // v1/v2 artifacts predate the section table; they can only be the
+        // base of a chain (patches are v3-only) and are loaded in full.
+        let index = read_index(&link.path)
+            .with_context(|| format!("indexing chain link {}", link.path.display()))?;
+        anyhow::ensure!(
+            index.meta.version == link.version,
+            "chain link {} carries version {} but the registry expected v{}",
+            link.path.display(),
+            index.meta.version,
+            link.version
+        );
+        anyhow::ensure!(
+            index.meta.is_patch == link.is_patch,
+            "chain link {} patch flag disagrees with the registry record",
+            link.path.display()
+        );
+        stats.bytes_read += index_bytes(&index);
+        indexes.push(index);
+    }
+    for w in indexes.windows(2) {
+        anyhow::ensure!(
+            w[0].base_config == w[1].base_config,
+            "base config changes mid-chain ('{}' vs '{}')",
+            w[0].base_config,
+            w[1].base_config
+        );
+    }
+    // Winner per module name: the newest link carrying it. (v1/v2 links —
+    // only ever the base — have no section table; their names resolve via
+    // the full-load fallback below.)
+    let mut winner: HashMap<&str, (usize, usize)> = HashMap::new(); // name -> (link, section)
+    for (li, index) in indexes.iter().enumerate() {
+        for (si, sec) in index.sections.iter().enumerate() {
+            winner.insert(sec.name.as_str(), (li, si)); // later links overwrite
+        }
+    }
+    // Load each link's winning records (selectively where the table allows).
+    let mut loaded: Vec<HashMap<String, Arc<DeltaModule>>> = Vec::with_capacity(chain.len());
+    let mut base_full: Option<DeltaModel> = None;
+    for (li, (link, index)) in chain.iter().zip(&indexes).enumerate() {
+        if index.format < 3 {
+            // v1/v2 base artifact (patches are v3-only): full sequential
+            // read, modules addressed by name in the assembly below.
+            let model = load_delta(&link.path)?;
+            stats.bytes_read += std::fs::metadata(&link.path).map(|m| m.len()).unwrap_or(0);
+            stats.modules_read += model.modules.len();
+            loaded.push(model.modules.iter().map(|m| (m.id.to_string(), m.clone())).collect());
+            base_full = Some(model);
+            continue;
+        }
+        let wanted: Vec<usize> = index
+            .sections
+            .iter()
+            .enumerate()
+            .filter(|(si, sec)| winner.get(sec.name.as_str()) == Some(&(li, *si)))
+            .map(|(si, _)| si)
+            .collect();
+        let modules = load_modules(&link.path, index, &wanted)?;
+        stats.bytes_read += wanted.iter().map(|&si| index.sections[si].len).sum::<u64>();
+        stats.modules_read += modules.len();
+        loaded.push(
+            wanted
+                .iter()
+                .zip(&modules)
+                .map(|(&si, m)| (index.sections[si].name.clone(), m.clone()))
+                .collect(),
+        );
+    }
+    // Assemble in composition order: the base artifact's record order with
+    // winners substituted in place, then each patch's genuinely new names in
+    // (link, record) order — exactly what iterated `compose` would produce.
+    let mut order: Vec<String> = Vec::new();
+    let mut seen: std::collections::HashSet<String> = std::collections::HashSet::new();
+    match &base_full {
+        Some(model) => {
+            for m in &model.modules {
+                let name = m.id.to_string();
+                if seen.insert(name.clone()) {
+                    order.push(name);
+                }
+            }
+        }
+        None => {
+            for sec in &indexes[0].sections {
+                if seen.insert(sec.name.clone()) {
+                    order.push(sec.name.clone());
+                }
+            }
+        }
+    }
+    for index in &indexes[1..] {
+        for sec in &index.sections {
+            if seen.insert(sec.name.clone()) {
+                order.push(sec.name.clone());
+            }
+        }
+    }
+    let mut modules = Vec::with_capacity(order.len());
+    for name in &order {
+        // Names absent from the winner map can only come from a v1/v2 base
+        // (it has no section table, so it never entered the map) — take
+        // them from its full load.
+        let li = winner.get(name.as_str()).map(|&(li, _)| li).unwrap_or(0);
+        let m = loaded[li]
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("module '{name}' missing from chain link {li}"))?;
+        modules.push(m.clone());
+    }
+    let last_index = indexes.last().unwrap();
+    Ok((
+        DeltaModel {
+            variant: last_index.variant.clone(),
+            base_config: last_index.base_config.clone(),
+            meta: ArtifactMeta { is_patch: false, ..last_index.meta },
+            modules,
+        },
+        stats,
+    ))
+}
+
+/// Approximate on-disk size of an artifact's header + section table (what
+/// [`read_index`](super::format::read_index) consumes).
+fn index_bytes(index: &super::format::ArtifactIndex) -> u64 {
+    let header = 8 + 4 + (4 + index.variant.len()) + (4 + index.base_config.len()) + 17 + 4;
+    let table: usize = index.sections.iter().map(|s| 4 + s.name.len() + 8 + 8).sum();
+    (header + table) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::format::save_delta;
+    use crate::delta::pack::PackedMask;
+    use crate::delta::types::Axis;
+    use crate::model::{ModuleId, ProjKind};
+    use crate::util::rng::Rng;
+
+    fn mk_module(layer: usize, kind: ProjKind, seed: u64) -> DeltaModule {
+        let (d_out, d_in) = (16, 48);
+        let mut r = Rng::new(seed);
+        let delta: Vec<f32> = (0..d_out * d_in).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        DeltaModule {
+            id: ModuleId { layer, kind },
+            mask: PackedMask::pack(&delta, d_out, d_in),
+            axis: Axis::Row,
+            scales: (0..d_out).map(|_| r.uniform_in(0.01, 0.2)).collect(),
+        }
+    }
+
+    fn full_model(version: u32, seeds: &[u64]) -> DeltaModel {
+        let kinds = [ProjKind::Q, ProjKind::K, ProjKind::V, ProjKind::O];
+        let modules: Vec<DeltaModule> = seeds
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| mk_module(i / kinds.len(), kinds[i % kinds.len()], s))
+            .collect();
+        let mut m = DeltaModel::new("ft", "tiny", modules);
+        m.meta.version = version;
+        m
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("pawd_test_chain").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn diff_then_compose_roundtrips_and_shares_arcs() {
+        let parent = full_model(1, &[1, 2, 3, 4]);
+        let mut child = full_model(2, &[1, 2, 3, 4]);
+        // Change exactly one module's content.
+        child.modules[2] = Arc::new(mk_module(0, ProjKind::V, 99));
+        child.meta.parent = Some(1);
+
+        let patch = diff(&parent, &child).unwrap();
+        assert!(patch.meta.is_patch);
+        assert_eq!(patch.meta.parent, Some(1));
+        assert_eq!(patch.modules.len(), 1, "only the changed module ships");
+
+        let composed = compose(&parent, &patch).unwrap();
+        assert!(!composed.meta.is_patch);
+        assert_eq!(composed.meta.version, 2);
+        assert_eq!(composed.modules.len(), 4);
+        for (i, (cm, pm)) in composed.modules.iter().zip(&parent.modules).enumerate() {
+            if i == 2 {
+                assert!(!cm.content_eq(pm));
+            } else {
+                // Inherited modules are the SAME Arc, not a copy.
+                assert!(Arc::ptr_eq(cm, pm), "module {i} must be shared");
+            }
+        }
+    }
+
+    #[test]
+    fn diff_of_identical_models_is_empty() {
+        let parent = full_model(1, &[5, 6, 7]);
+        let mut child = parent.clone();
+        child.meta.version = 2;
+        let patch = diff(&parent, &child).unwrap();
+        assert!(patch.modules.is_empty(), "identical content must produce an empty patch");
+    }
+
+    #[test]
+    fn diff_refuses_module_removal() {
+        let parent = full_model(1, &[5, 6, 7]);
+        let mut child = parent.clone();
+        child.meta.version = 2;
+        child.modules.pop();
+        let err = diff(&parent, &child).unwrap_err().to_string();
+        assert!(err.contains("removal"), "{err}");
+    }
+
+    #[test]
+    fn compose_rejects_wrong_parent() {
+        let parent = full_model(3, &[1, 2]);
+        let mut child = full_model(4, &[1, 9]);
+        child.meta.parent = Some(3);
+        let patch = diff(&parent, &child).unwrap();
+        let mut wrong = parent.clone();
+        wrong.meta.version = 2;
+        assert!(compose(&wrong, &patch).is_err());
+    }
+
+    #[test]
+    fn load_effective_matches_iterated_compose_cold_and_hot() {
+        let dir = tmp_dir("chain_eq");
+        let v1 = full_model(1, &[10, 11, 12, 13, 14, 15]);
+        save_delta(dir.join("v1.pawd"), &v1).unwrap();
+        // v2 patches modules 1 and 4; v3 patches modules 1 (again) and 5.
+        let mut eff2 = v1.clone();
+        eff2.meta = ArtifactMeta { version: 2, parent: Some(1), created_unix: 5, is_patch: false };
+        eff2.modules[1] = Arc::new(mk_module(0, ProjKind::K, 100));
+        eff2.modules[4] = Arc::new(mk_module(1, ProjKind::Q, 101));
+        let p2 = diff(&v1, &eff2).unwrap();
+        assert_eq!(p2.modules.len(), 2);
+        save_delta(dir.join("v2.pawd"), &p2).unwrap();
+        let mut eff3 = eff2.clone();
+        eff3.meta = ArtifactMeta { version: 3, parent: Some(2), created_unix: 6, is_patch: false };
+        eff3.modules[1] = Arc::new(mk_module(0, ProjKind::K, 102));
+        eff3.modules[5] = Arc::new(mk_module(1, ProjKind::K, 103));
+        let p3 = diff(&eff2, &eff3).unwrap();
+        save_delta(dir.join("v3.pawd"), &p3).unwrap();
+
+        let chain = vec![
+            ChainLink { version: 1, path: dir.join("v1.pawd"), is_patch: false },
+            ChainLink { version: 2, path: dir.join("v2.pawd"), is_patch: true },
+            ChainLink { version: 3, path: dir.join("v3.pawd"), is_patch: true },
+        ];
+        // Cold load (no resident ancestor).
+        let (cold, cold_stats) = load_effective(&chain, None).unwrap();
+        assert_eq!(cold.meta.version, 3);
+        assert_eq!(cold.modules.len(), 6);
+        // Module 1 was patched twice: only the newest record is read, so the
+        // cold path reads 6 winners, not 6 + 2 + 2 records.
+        assert_eq!(cold_stats.modules_read, 6);
+        // Reference: iterated compose from full loads.
+        let r1 = load_delta(dir.join("v1.pawd")).unwrap();
+        let r2 = compose(&r1, &load_delta(dir.join("v2.pawd")).unwrap()).unwrap();
+        let r3 = compose(&r2, &load_delta(dir.join("v3.pawd")).unwrap()).unwrap();
+        assert_model_bitwise_eq(&cold, &r3);
+        // Hot load: the parent's effective model is resident.
+        let (hot, hot_stats) = load_effective(&chain, Some(&r2)).unwrap();
+        assert_model_bitwise_eq(&hot, &r3);
+        assert_eq!(hot_stats.modules_read, 2, "only the final patch is read");
+        assert_eq!(hot_stats.modules_inherited, 4);
+        assert!(hot_stats.bytes_read < cold_stats.bytes_read);
+        // Inherited modules are the parent's own Arcs.
+        for (i, m) in hot.modules.iter().enumerate() {
+            if ![1usize, 5].contains(&i) {
+                assert!(Arc::ptr_eq(m, &r2.modules[i]), "module {i} must be inherited");
+            }
+        }
+    }
+
+    #[test]
+    fn chains_compose_over_a_v2_base_artifact() {
+        // A pre-v3 base has no section table: the cold path must fall back
+        // to a full read of the base and still compose correctly.
+        let dir = tmp_dir("chain_v2base");
+        let v1 = full_model(1, &[20, 21, 22]);
+        std::fs::write(
+            dir.join("v1.pawd"),
+            crate::delta::format::save_delta_v2_bytes(&v1),
+        )
+        .unwrap();
+        let mut eff2 = v1.clone();
+        eff2.meta = ArtifactMeta { version: 2, parent: Some(1), created_unix: 0, is_patch: false };
+        eff2.modules[0] = Arc::new(mk_module(0, ProjKind::Q, 200));
+        let p2 = diff(&v1, &eff2).unwrap();
+        save_delta(dir.join("v2.pawd"), &p2).unwrap();
+        let chain = vec![
+            ChainLink { version: 1, path: dir.join("v1.pawd"), is_patch: false },
+            ChainLink { version: 2, path: dir.join("v2.pawd"), is_patch: true },
+        ];
+        let (cold, stats) = load_effective(&chain, None).unwrap();
+        assert_eq!(cold.modules.len(), 3);
+        // The v2 base cannot be read selectively: all 3 base records load,
+        // plus the 1 patch record.
+        assert_eq!(stats.modules_read, 4);
+        let r1 = load_delta(dir.join("v1.pawd")).unwrap();
+        let r2 = compose(&r1, &load_delta(dir.join("v2.pawd")).unwrap()).unwrap();
+        assert_model_bitwise_eq(&cold, &r2);
+    }
+
+    #[test]
+    fn chain_depth_backstop_rejects_absurd_chains() {
+        let links: Vec<ChainLink> = (0..HARD_CHAIN_BOUND + 1)
+            .map(|i| ChainLink {
+                version: i as u32 + 1,
+                path: PathBuf::from("/nonexistent"),
+                is_patch: i > 0,
+            })
+            .collect();
+        let err = load_effective(&links, None).unwrap_err().to_string();
+        assert!(err.contains("backstop"), "{err}");
+    }
+
+    fn assert_model_bitwise_eq(a: &DeltaModel, b: &DeltaModel) {
+        assert_eq!(a.modules.len(), b.modules.len());
+        for (x, y) in a.modules.iter().zip(&b.modules) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.axis, y.axis);
+            assert_eq!(x.mask, y.mask);
+            assert_eq!(
+                crate::util::f16::encode_f16_slice(&x.scales),
+                crate::util::f16::encode_f16_slice(&y.scales),
+                "scale bits of {}",
+                x.id
+            );
+        }
+    }
+}

@@ -186,16 +186,7 @@ pub fn compress_model(
             reports.push(rep);
         }
     }
-    (
-        DeltaModel {
-            variant: variant.to_string(),
-            base_config: cfg.name.clone(),
-            meta: Default::default(),
-            modules,
-        },
-        reports,
-        student,
-    )
+    (DeltaModel::new(variant, cfg.name.clone(), modules), reports, student)
 }
 
 #[cfg(test)]

@@ -8,11 +8,13 @@
 //! packed end-to-end; the dense `Ŵ` only ever exists in the destination
 //! buffer.
 //!
-//! Format **v2** layout (little-endian):
+//! Format **v3** layout (little-endian):
 //! ```text
-//! magic "PAWDELTA" | format u32 (=2) | variant str | base_config str |
+//! magic "PAWDELTA" | format u32 (=3) | variant str | base_config str |
 //! version u32 | parent u32 (0 = none) | created_unix u64 |
+//! kind u8 (0 = full, 1 = patch) |
 //! n_modules u32 |
+//!   section table, per module: name str | offset u64 | len u64 |
 //!   per module: name str | d_out u32 | d_in u32 | axis u8 | group u32 |
 //!               n_scales u32 | scales (n_scales × f16) |
 //!               mask (d_out · ceil(d_in/32) × u32) | crc32 u32
@@ -23,46 +25,54 @@
 //! byte before it, so header tampering (e.g. a rewritten version field) is
 //! also detected.
 //!
+//! The **section table** maps each module name to its record's absolute
+//! `offset`/`len`, so a chain-aware loader can read *only* the records it
+//! needs ([`read_index`] + [`load_modules`]) instead of the whole file.
+//! Partial loads verify per-record crcs; the whole-file crc is only checked
+//! on full sequential reads.
+//!
+//! **Patch artifacts** (`kind = 1`) carry only the modules whose packed
+//! content changed relative to the `parent` version; every other module is
+//! inherited by composing the parent chain
+//! ([`chain`](super::chain)). A patch without a parent is malformed.
+//!
 //! The `version / parent / created_unix` triple is the variant-lifecycle
 //! metadata consumed by the coordinator's
 //! [`VariantRegistry`](crate::coordinator::VariantRegistry): `version` is the
 //! artifact's position in its variant's history (`variant@version`), `parent`
-//! the version it superseded (the rollback target).
+//! the version it superseded (the rollback target, and for patches the
+//! composition base).
 //!
-//! **v1** artifacts (no meta triple, no file crc) are still read: the loader
-//! dispatches on the format word and fills the default [`ArtifactMeta`].
+//! **v1** artifacts (no meta triple, no file crc) and **v2** artifacts (meta
+//! triple + file crc, no kind byte, no section table) are still read: the
+//! loader dispatches on the format word; v1 fills the default
+//! [`ArtifactMeta`], v2 reads as a full artifact.
+//!
+//! Every read path reports bytes/records touched to
+//! [`exec::counters`](crate::exec::counters) so benches can assert that
+//! warming a patch version does not re-read unchanged modules.
 
 use super::pack::PackedMask;
 use super::types::{ArtifactMeta, Axis, DeltaModel, DeltaModule};
+use crate::exec::counters;
 use crate::model::ModuleId;
 use crate::util::crc32;
 use crate::util::f16::{decode_f16_slice, encode_f16_slice};
 use anyhow::{bail, Context, Result};
 use std::io::Write;
 use std::path::Path;
+use std::sync::Arc;
 
 const MAGIC: &[u8; 8] = b"PAWDELTA";
 /// Current writer format. Readers accept `1..=VERSION`.
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
-/// Serialize a delta model (always format v2). Returns the file size in
+/// Serialize a delta model (always format v3). Returns the file size in
 /// bytes. The model's [`ArtifactMeta`] is written verbatim — the registry
-/// stamps it before publishing; standalone saves keep the default.
+/// stamps it before publishing; standalone saves keep the default. A patch
+/// model (`meta.is_patch`) must carry a parent version.
 pub fn save_delta<P: AsRef<Path>>(path: P, model: &DeltaModel) -> Result<u64> {
-    let mut buf: Vec<u8> = Vec::with_capacity(model.payload_bytes() as usize + 4096);
-    buf.extend_from_slice(MAGIC);
-    buf.extend_from_slice(&VERSION.to_le_bytes());
-    put_str(&mut buf, &model.variant);
-    put_str(&mut buf, &model.base_config);
-    buf.extend_from_slice(&model.meta.version.to_le_bytes());
-    buf.extend_from_slice(&model.meta.parent.unwrap_or(0).to_le_bytes());
-    buf.extend_from_slice(&model.meta.created_unix.to_le_bytes());
-    buf.extend_from_slice(&(model.modules.len() as u32).to_le_bytes());
-    for m in &model.modules {
-        write_module_record(&mut buf, m);
-    }
-    let file_crc = crc32::hash(&buf);
-    buf.extend_from_slice(&file_crc.to_le_bytes());
+    let buf = save_delta_bytes(model)?;
     let mut f = std::fs::File::create(&path)
         .with_context(|| format!("creating {}", path.as_ref().display()))?;
     f.write_all(&buf)?;
@@ -70,42 +80,94 @@ pub fn save_delta<P: AsRef<Path>>(path: P, model: &DeltaModel) -> Result<u64> {
     Ok(buf.len() as u64)
 }
 
+/// Serialize a delta model to the v3 byte layout (the in-memory half of
+/// [`save_delta`], split out so patch size can be measured without a file).
+pub fn save_delta_bytes(model: &DeltaModel) -> Result<Vec<u8>> {
+    if model.meta.is_patch && model.meta.parent.is_none() {
+        bail!("patch artifact '{}' has no parent version", model.variant);
+    }
+    // Serialize every record first so the section table can carry real
+    // offsets/lengths in one pass.
+    let mut records: Vec<Vec<u8>> = Vec::with_capacity(model.modules.len());
+    for m in &model.modules {
+        let mut rec = Vec::with_capacity(m.payload_bytes() as usize + 64);
+        write_module_record(&mut rec, m);
+        records.push(rec);
+    }
+    let mut buf: Vec<u8> = Vec::with_capacity(
+        records.iter().map(|r| r.len()).sum::<usize>() + 4096,
+    );
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    put_str(&mut buf, &model.variant);
+    put_str(&mut buf, &model.base_config);
+    buf.extend_from_slice(&model.meta.version.to_le_bytes());
+    buf.extend_from_slice(&model.meta.parent.unwrap_or(0).to_le_bytes());
+    buf.extend_from_slice(&model.meta.created_unix.to_le_bytes());
+    buf.push(model.meta.is_patch as u8);
+    buf.extend_from_slice(&(model.modules.len() as u32).to_le_bytes());
+    // The table's own size depends only on the (known) name lengths.
+    let table_bytes: usize = model
+        .modules
+        .iter()
+        .map(|m| 4 + m.id.to_string().len() + 8 + 8)
+        .sum();
+    let mut offset = buf.len() + table_bytes;
+    for (m, rec) in model.modules.iter().zip(&records) {
+        put_str(&mut buf, &m.id.to_string());
+        buf.extend_from_slice(&(offset as u64).to_le_bytes());
+        buf.extend_from_slice(&(rec.len() as u64).to_le_bytes());
+        offset += rec.len();
+    }
+    for rec in &records {
+        buf.extend_from_slice(rec);
+    }
+    let file_crc = crc32::hash(&buf);
+    buf.extend_from_slice(&file_crc.to_le_bytes());
+    Ok(buf)
+}
+
 /// Load a delta model: one sequential read, then zero-copy record parsing.
 pub fn load_delta<P: AsRef<Path>>(path: P) -> Result<DeltaModel> {
     let bytes = std::fs::read(&path)
         .with_context(|| format!("reading delta artifact {}", path.as_ref().display()))?;
-    parse_delta(&bytes)
+    counters::record_loader_bytes(bytes.len() as u64);
+    let model = parse_delta(&bytes)?;
+    counters::record_module_reads(model.modules.len() as u64);
+    Ok(model)
 }
 
 /// Parse a delta model from an in-memory buffer (separated from `load_delta`
-/// so benches can isolate disk vs decode time). Accepts formats v1 and v2.
+/// so benches can isolate disk vs decode time). Accepts formats v1..v3.
 pub fn parse_delta(bytes: &[u8]) -> Result<DeltaModel> {
     let mut r = Reader { b: bytes, i: 0 };
     let (variant, base_config, meta, format) = parse_header(&mut r)?;
     let n_modules = r.u32()? as usize;
+    // v3: skip over the section table (records are parsed sequentially on a
+    // full read; the table is for selective loads), but keep the offsets to
+    // sanity-check table/record agreement.
+    let sections = if format >= 3 { Some(parse_section_table(&mut r, n_modules)?) } else { None };
     let mut modules = Vec::with_capacity(n_modules);
-    for _ in 0..n_modules {
+    for k in 0..n_modules {
         let rec_start = r.i;
-        let name = r.str()?;
-        let id = ModuleId::parse(&name)
-            .ok_or_else(|| anyhow::anyhow!("bad module name '{name}'"))?;
-        let d_out = r.u32()? as usize;
-        let d_in = r.u32()? as usize;
-        let axis_code = r.u8()?;
-        let group = r.u32()?;
-        let axis = Axis::from_code(axis_code, group)?;
-        let n_scales = r.u32()? as usize;
-        if n_scales != axis.n_scales(d_out, d_in) {
-            bail!("scale count {n_scales} inconsistent with axis {axis:?} and shape {d_out}x{d_in}");
+        if let Some(secs) = &sections {
+            if secs[k].offset != rec_start as u64 {
+                bail!(
+                    "section table offset {} disagrees with record position {rec_start} \
+                     for module '{}'",
+                    secs[k].offset,
+                    secs[k].name
+                );
+            }
         }
-        let scales = decode_f16_slice(r.take(n_scales * 2)?);
-        let mask_bytes = d_out * PackedMask::words_per_row_for(d_in) * 4;
-        let mask = PackedMask::from_bytes(d_out, d_in, r.take(mask_bytes)?)?;
-        let rec_end = r.i;
-        if r.u32()? != crc32::hash(&bytes[rec_start..rec_end]) {
-            bail!("crc mismatch in module record '{name}' (corrupt artifact)");
+        let (module, consumed) = parse_module_record(&bytes[rec_start..])?;
+        if let Some(secs) = &sections {
+            if secs[k].len != consumed as u64 {
+                bail!("section table length mismatch for module '{}'", secs[k].name);
+            }
         }
-        modules.push(DeltaModule { id, mask, axis, scales });
+        r.i += consumed;
+        modules.push(Arc::new(module));
     }
     if format >= 2 {
         let body_end = r.i;
@@ -119,6 +181,122 @@ pub fn parse_delta(bytes: &[u8]) -> Result<DeltaModel> {
     Ok(DeltaModel { variant, base_config, meta, modules })
 }
 
+/// One entry of a v3 artifact's section table: the absolute byte range of a
+/// module record.
+#[derive(Clone, Debug)]
+pub struct SectionEntry {
+    pub name: String,
+    pub offset: u64,
+    pub len: u64,
+}
+
+/// Parsed artifact header + section table (no module payloads decoded).
+/// For v1/v2 artifacts `sections` is empty — they predate the table and can
+/// only be read in full.
+#[derive(Clone, Debug)]
+pub struct ArtifactIndex {
+    pub variant: String,
+    pub base_config: String,
+    pub meta: ArtifactMeta,
+    pub format: u32,
+    pub sections: Vec<SectionEntry>,
+}
+
+impl ArtifactIndex {
+    /// Whether the artifact supports selective section reads.
+    pub fn has_sections(&self) -> bool {
+        !self.sections.is_empty() || self.format >= 3
+    }
+}
+
+/// Read just the artifact header and (for v3) the section table of the file
+/// at `path` — a bounded prefix read, so indexing a directory of multi-MB
+/// artifacts stays cheap. The chain loader uses this to decide which
+/// records each link must contribute before reading any payload bytes.
+pub fn read_index<P: AsRef<Path>>(path: P) -> Result<ArtifactIndex> {
+    use std::io::Read;
+    // Header + table: ~30 bytes per module; 1 MiB covers tens of thousands
+    // of modules, orders of magnitude beyond any real model.
+    const MAX_INDEX_BYTES: u64 = 1 << 20;
+    let f = std::fs::File::open(&path)
+        .with_context(|| format!("reading delta artifact {}", path.as_ref().display()))?;
+    let mut bytes = Vec::with_capacity(8192);
+    f.take(MAX_INDEX_BYTES).read_to_end(&mut bytes)?;
+    let mut r = Reader { b: &bytes, i: 0 };
+    let (variant, base_config, meta, format) = parse_header(&mut r)
+        .with_context(|| format!("indexing {}", path.as_ref().display()))?;
+    let sections = if format >= 3 {
+        let n_modules = r.u32()? as usize;
+        parse_section_table(&mut r, n_modules)
+            .with_context(|| format!("section table of {}", path.as_ref().display()))?
+    } else {
+        Vec::new()
+    };
+    counters::record_loader_bytes(r.i as u64);
+    Ok(ArtifactIndex { variant, base_config, meta, format, sections })
+}
+
+/// Selectively load the module records at `wanted` (indices into
+/// `index.sections`) from a v3 artifact: one bounded read per record,
+/// per-record crc verified. The indices are visited in ascending file
+/// offset so the reads stay sequential on disk; the returned modules are in
+/// `wanted` order.
+pub fn load_modules<P: AsRef<Path>>(
+    path: P,
+    index: &ArtifactIndex,
+    wanted: &[usize],
+) -> Result<Vec<Arc<DeltaModule>>> {
+    use std::io::{Read, Seek, SeekFrom};
+    if wanted.is_empty() {
+        return Ok(Vec::new());
+    }
+    anyhow::ensure!(
+        index.format >= 3,
+        "artifact {} (format v{}) has no section table; use load_delta",
+        path.as_ref().display(),
+        index.format
+    );
+    let mut by_offset: Vec<usize> = wanted.to_vec();
+    by_offset.sort_by_key(|&k| index.sections[k].offset);
+    let mut f = std::fs::File::open(&path)
+        .with_context(|| format!("reading delta artifact {}", path.as_ref().display()))?;
+    // Bound every section against the real file size before allocating —
+    // a corrupt table must fail cleanly, not balloon memory.
+    let file_len = f.metadata().map(|m| m.len()).unwrap_or(0);
+    let mut out: Vec<(usize, Arc<DeltaModule>)> = Vec::with_capacity(wanted.len());
+    let mut buf = Vec::new();
+    for &k in &by_offset {
+        let sec = &index.sections[k];
+        let fits = matches!(sec.offset.checked_add(sec.len), Some(end) if end <= file_len);
+        if !fits {
+            bail!("section '{}' extends past the end of the artifact", sec.name);
+        }
+        buf.clear();
+        buf.resize(sec.len as usize, 0);
+        f.seek(SeekFrom::Start(sec.offset))?;
+        f.read_exact(&mut buf)
+            .with_context(|| format!("reading section '{}'", sec.name))?;
+        let (module, consumed) = parse_module_record(&buf)
+            .with_context(|| format!("decoding section '{}'", sec.name))?;
+        if consumed != buf.len() {
+            bail!("section '{}' has trailing bytes", sec.name);
+        }
+        if module.id.to_string() != sec.name {
+            bail!("section '{}' holds record for '{}'", sec.name, module.id);
+        }
+        counters::record_loader_bytes(sec.len);
+        out.push((k, Arc::new(module)));
+    }
+    counters::record_module_reads(wanted.len() as u64);
+    // Restore the caller's order.
+    let mut result = vec![None; wanted.len()];
+    for (k, m) in out {
+        let pos = wanted.iter().position(|&w| w == k).expect("wanted index");
+        result[pos] = Some(m);
+    }
+    Ok(result.into_iter().map(|m| m.expect("all sections loaded")).collect())
+}
+
 /// Read just the artifact header of the file at `path` — magic, format,
 /// names, lifecycle meta — without decoding module records. The registry
 /// uses this to adopt untracked files under their *embedded* version (the
@@ -127,8 +305,8 @@ pub fn parse_delta(bytes: &[u8]) -> Result<DeltaModel> {
 /// multi-MB artifacts stays cheap.
 pub fn peek_meta<P: AsRef<Path>>(path: P) -> Result<ArtifactMeta> {
     use std::io::Read;
-    // magic + format + two length-prefixed names + meta triple; 64 KiB is
-    // orders of magnitude beyond any real header.
+    // magic + format + two length-prefixed names + meta triple + kind; 64
+    // KiB is orders of magnitude beyond any real header.
     const MAX_HEADER_BYTES: u64 = 64 * 1024;
     let f = std::fs::File::open(&path)
         .with_context(|| format!("reading delta artifact {}", path.as_ref().display()))?;
@@ -140,7 +318,8 @@ pub fn peek_meta<P: AsRef<Path>>(path: P) -> Result<ArtifactMeta> {
 }
 
 /// Shared header parse: magic, format word, variant/base names, meta triple
-/// (defaulted for v1). Leaves the reader positioned at `n_modules`.
+/// (defaulted for v1), patch kind byte (v3+). Leaves the reader positioned
+/// at `n_modules`.
 fn parse_header(r: &mut Reader<'_>) -> Result<(String, String, ArtifactMeta, u32)> {
     let magic = r.take(8)?;
     if magic != MAGIC {
@@ -159,10 +338,23 @@ fn parse_header(r: &mut Reader<'_>) -> Result<(String, String, ArtifactMeta, u32
         }
         let parent_raw = r.u32()?;
         let created_unix = r.u64()?;
+        let is_patch = if format >= 3 {
+            match r.u8()? {
+                0 => false,
+                1 => true,
+                other => bail!("unknown artifact kind byte {other}"),
+            }
+        } else {
+            false
+        };
+        if is_patch && parent_raw == 0 {
+            bail!("patch artifact has no parent version");
+        }
         ArtifactMeta {
             version,
             parent: if parent_raw == 0 { None } else { Some(parent_raw) },
             created_unix,
+            is_patch,
         }
     } else {
         ArtifactMeta::default()
@@ -170,9 +362,48 @@ fn parse_header(r: &mut Reader<'_>) -> Result<(String, String, ArtifactMeta, u32
     Ok((variant, base_config, meta, format))
 }
 
+fn parse_section_table(r: &mut Reader<'_>, n_modules: usize) -> Result<Vec<SectionEntry>> {
+    let mut sections = Vec::with_capacity(n_modules);
+    for _ in 0..n_modules {
+        let name = r.str()?;
+        let offset = r.u64()?;
+        let len = r.u64()?;
+        sections.push(SectionEntry { name, offset, len });
+    }
+    Ok(sections)
+}
+
+/// Parse one contiguous module record (header, f16 scales, packed mask,
+/// trailing crc) from the start of `bytes`; returns the module and the
+/// total bytes consumed including the crc. Shared by the sequential parser
+/// and the selective section reader.
+fn parse_module_record(bytes: &[u8]) -> Result<(DeltaModule, usize)> {
+    let mut r = Reader { b: bytes, i: 0 };
+    let name = r.str()?;
+    let id = ModuleId::parse(&name)
+        .ok_or_else(|| anyhow::anyhow!("bad module name '{name}'"))?;
+    let d_out = r.u32()? as usize;
+    let d_in = r.u32()? as usize;
+    let axis_code = r.u8()?;
+    let group = r.u32()?;
+    let axis = Axis::from_code(axis_code, group)?;
+    let n_scales = r.u32()? as usize;
+    if n_scales != axis.n_scales(d_out, d_in) {
+        bail!("scale count {n_scales} inconsistent with axis {axis:?} and shape {d_out}x{d_in}");
+    }
+    let scales = decode_f16_slice(r.take(n_scales * 2)?);
+    let mask_bytes = d_out * PackedMask::words_per_row_for(d_in) * 4;
+    let mask = PackedMask::from_bytes(d_out, d_in, r.take(mask_bytes)?)?;
+    let rec_end = r.i;
+    if r.u32()? != crc32::hash(&bytes[..rec_end]) {
+        bail!("crc mismatch in module record '{name}' (corrupt artifact)");
+    }
+    Ok((DeltaModule { id, mask, axis, scales }, r.i))
+}
+
 /// Serialize `model` in the **v1** layout (no meta triple, no file crc)
 /// exactly as the PR-1 writer emitted it. Only used to produce back-compat
-/// fixtures for tests — the production writer always emits v2.
+/// fixtures for tests — the production writer always emits v3.
 pub fn save_delta_v1_bytes(model: &DeltaModel) -> Vec<u8> {
     let mut buf: Vec<u8> = Vec::new();
     buf.extend_from_slice(MAGIC);
@@ -186,8 +417,29 @@ pub fn save_delta_v1_bytes(model: &DeltaModel) -> Vec<u8> {
     buf
 }
 
+/// Serialize `model` in the **v2** layout (meta triple + whole-file crc, no
+/// kind byte, no section table) exactly as the PR-2 writer emitted it.
+/// Back-compat fixtures only.
+pub fn save_delta_v2_bytes(model: &DeltaModel) -> Vec<u8> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&2u32.to_le_bytes());
+    put_str(&mut buf, &model.variant);
+    put_str(&mut buf, &model.base_config);
+    buf.extend_from_slice(&model.meta.version.to_le_bytes());
+    buf.extend_from_slice(&model.meta.parent.unwrap_or(0).to_le_bytes());
+    buf.extend_from_slice(&model.meta.created_unix.to_le_bytes());
+    buf.extend_from_slice(&(model.modules.len() as u32).to_le_bytes());
+    for m in &model.modules {
+        write_module_record(&mut buf, m);
+    }
+    let file_crc = crc32::hash(&buf);
+    buf.extend_from_slice(&file_crc.to_le_bytes());
+    buf
+}
+
 /// One contiguous module record (header, f16 scales, packed mask, record
-/// crc) — byte-identical in formats v1 and v2.
+/// crc) — byte-identical in formats v1 through v3.
 fn write_module_record(buf: &mut Vec<u8>, m: &DeltaModule) {
     let rec_start = buf.len();
     put_str(buf, &m.id.to_string());
@@ -268,12 +520,14 @@ mod tests {
             let scales: Vec<f32> = (0..n).map(|_| rng.uniform_in(0.01, 0.5)).collect();
             modules.push(DeltaModule { id: ModuleId { layer, kind }, mask, axis, scales });
         }
-        DeltaModel {
-            variant: "ft-a".into(),
-            base_config: "tiny".into(),
-            meta: ArtifactMeta { version: 3, parent: Some(2), created_unix: 1_753_000_000 },
-            modules,
-        }
+        let mut model = DeltaModel::new("ft-a", "tiny", modules);
+        model.meta = ArtifactMeta {
+            version: 3,
+            parent: Some(2),
+            created_unix: 1_753_000_000,
+            is_patch: false,
+        };
+        model
     }
 
     fn tmp(name: &str) -> std::path::PathBuf {
@@ -304,8 +558,74 @@ mod tests {
     }
 
     #[test]
+    fn patch_artifacts_roundtrip_with_parent() {
+        let mut model = sample_model();
+        model.meta = ArtifactMeta {
+            version: 4,
+            parent: Some(3),
+            created_unix: 9,
+            is_patch: true,
+        };
+        model.modules.truncate(1); // a patch carries only changed modules
+        let p = tmp("patch.pawd");
+        save_delta(&p, &model).unwrap();
+        let loaded = load_delta(&p).unwrap();
+        assert!(loaded.meta.is_patch);
+        assert_eq!(loaded.meta.parent, Some(3));
+        assert_eq!(loaded.modules.len(), 1);
+        // peek sees the patch flag without decoding payloads.
+        assert!(peek_meta(&p).unwrap().is_patch);
+    }
+
+    #[test]
+    fn patch_without_parent_rejected_by_writer_and_reader() {
+        let mut model = sample_model();
+        model.meta = ArtifactMeta { version: 2, parent: None, created_unix: 0, is_patch: true };
+        assert!(save_delta_bytes(&model).is_err(), "writer must refuse an orphan patch");
+        // Hand-craft the same corruption: write as full, flip the kind byte.
+        model.meta.is_patch = false;
+        let mut bytes = save_delta_bytes(&model).unwrap();
+        let kind_off = 8 + 4 + (4 + model.variant.len()) + (4 + model.base_config.len()) + 16;
+        assert_eq!(bytes[kind_off], 0);
+        bytes[kind_off] = 1;
+        let err = parse_delta(&bytes).unwrap_err().to_string();
+        assert!(err.contains("no parent"), "{err}");
+    }
+
+    #[test]
+    fn section_table_supports_selective_reads() {
+        let model = sample_model();
+        let p = tmp("sections.pawd");
+        save_delta(&p, &model).unwrap();
+        let index = read_index(&p).unwrap();
+        assert_eq!(index.meta, model.meta);
+        assert_eq!(index.sections.len(), model.modules.len());
+        for (sec, m) in index.sections.iter().zip(&model.modules) {
+            assert_eq!(sec.name, m.id.to_string());
+        }
+        // Read two records (out of file order) and compare against the full
+        // load. (Counters are global and other tests run concurrently, so
+        // only a lower bound is safe here; the strict "reads exactly the
+        // wanted sections" equality is asserted by the single-process
+        // incremental_publish bench.)
+        let before = crate::exec::counters::loader_bytes();
+        let got = load_modules(&p, &index, &[2, 0]).unwrap();
+        let read = crate::exec::counters::loader_bytes() - before;
+        let expected = index.sections[2].len + index.sections[0].len;
+        assert!(read >= expected, "selective read recorded {read} < section bytes {expected}");
+        let full = load_delta(&p).unwrap();
+        assert_eq!(got[0].id, full.modules[2].id);
+        assert_eq!(got[0].mask, full.modules[2].mask);
+        assert_eq!(got[1].id, full.modules[0].id);
+        assert_eq!(
+            encode_f16_slice(&got[1].scales),
+            encode_f16_slice(&full.modules[0].scales)
+        );
+    }
+
+    #[test]
     fn v1_artifacts_load_with_default_meta() {
-        // Golden v1 bytes: written by the historical layout, read by the v2
+        // Golden v1 bytes: written by the historical layout, read by the v3
         // loader. Module payloads must survive; meta defaults to version 1.
         let model = sample_model();
         let v1 = save_delta_v1_bytes(&model);
@@ -320,16 +640,29 @@ mod tests {
     }
 
     #[test]
+    fn v2_artifacts_load_with_meta_and_no_patch_flag() {
+        // Golden v2 bytes: the PR-2 layout (meta triple + file crc, no kind
+        // byte, no section table) must keep loading through the v3 reader.
+        let model = sample_model();
+        let v2 = save_delta_v2_bytes(&model);
+        let loaded = parse_delta(&v2).unwrap();
+        assert_eq!(loaded.variant, model.variant);
+        assert_eq!(loaded.meta.version, model.meta.version);
+        assert_eq!(loaded.meta.parent, model.meta.parent);
+        assert_eq!(loaded.meta.created_unix, model.meta.created_unix);
+        assert!(!loaded.meta.is_patch, "v2 artifacts are always full");
+        assert_eq!(loaded.modules.len(), model.modules.len());
+        for (a, b) in loaded.modules.iter().zip(&model.modules) {
+            assert_eq!((a.id, a.axis, &a.mask), (b.id, b.axis, &b.mask));
+        }
+    }
+
+    #[test]
     fn v1_fixed_golden_prefix_is_stable() {
         // The bytes of a module-less v1 artifact are fully determined by the
         // header fields; pin them so an accidental layout change to the
         // legacy writer (and thus the compat reader) cannot slip through.
-        let model = DeltaModel {
-            variant: "v".into(),
-            base_config: "c".into(),
-            meta: ArtifactMeta::default(),
-            modules: vec![],
-        };
+        let model = DeltaModel::new("v", "c", vec![]);
         let bytes = save_delta_v1_bytes(&model);
         let golden: &[u8] = &[
             b'P', b'A', b'W', b'D', b'E', b'L', b'T', b'A', // magic
@@ -343,9 +676,30 @@ mod tests {
     }
 
     #[test]
+    fn v2_fixed_golden_prefix_is_stable() {
+        // Same pin for the v2 legacy writer: header fields + file crc.
+        let model = DeltaModel::new("v", "c", vec![]);
+        let bytes = save_delta_v2_bytes(&model);
+        let mut golden: Vec<u8> = vec![
+            b'P', b'A', b'W', b'D', b'E', b'L', b'T', b'A', // magic
+            2, 0, 0, 0, // format = 2
+            1, 0, 0, 0, b'v', // variant
+            1, 0, 0, 0, b'c', // base_config
+            1, 0, 0, 0, // version = 1
+            0, 0, 0, 0, // parent = none
+            0, 0, 0, 0, 0, 0, 0, 0, // created_unix = 0
+            0, 0, 0, 0, // n_modules = 0
+        ];
+        let crc = crc32::hash(&golden);
+        golden.extend_from_slice(&crc.to_le_bytes());
+        assert_eq!(bytes, golden);
+        assert!(parse_delta(&bytes).is_ok());
+    }
+
+    #[test]
     fn meta_parent_zero_roundtrips_as_none() {
         let mut model = sample_model();
-        model.meta = ArtifactMeta { version: 1, parent: None, created_unix: 7 };
+        model.meta = ArtifactMeta { version: 1, parent: None, created_unix: 7, is_patch: false };
         let p = tmp("meta_none.pawd");
         save_delta(&p, &model).unwrap();
         assert_eq!(load_delta(&p).unwrap().meta, model.meta);

@@ -10,18 +10,23 @@
 //!   layer-by-layer model sweep (Alg. 1).
 //! * [`apply`] — the serving hot path: `Ŵ = W_b + v ⊙ B` materialization,
 //!   in-place swap/revert.
-//! * [`format`] — PAWD on-disk artifact + single-read loader.
+//! * [`format`] — PAWD on-disk artifact (v3: section table + patch
+//!   artifacts) + single-read and selective-section loaders.
+//! * [`chain`] — version-chain resolution: compose patch chains into
+//!   effective models, diff effective models into patches, bounded depth.
 //! * [`stats`] — delta anisotropy statistics (§4 limitation study).
 
 pub mod apply;
 pub mod cache;
 pub mod calibrate;
+pub mod chain;
 pub mod compress;
 pub mod format;
 pub mod pack;
 pub mod stats;
 pub mod types;
 
+pub use chain::{ChainLink, LoadStats, MAX_CHAIN_DEPTH};
 pub use compress::{compress_model, compress_module, CompressOptions, FitMode, ModuleReport};
 pub use pack::PackedMask;
 pub use types::{ArtifactMeta, Axis, DeltaModel, DeltaModule};

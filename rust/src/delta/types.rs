@@ -1,7 +1,16 @@
 //! Core delta types: scaling axis, per-module delta, whole-model delta.
+//!
+//! Modules inside a [`DeltaModel`] are held behind `Arc` so a *resolved*
+//! version is a cheap composition: loading `variant@N+1` as a patch on
+//! `variant@N` reuses the already-resident module Arcs of `@N` for every
+//! module the patch does not carry (see [`chain`](super::chain)), and the
+//! variant cache charges the bytes of a shared module only once no matter
+//! how many resident versions hold it.
 
 use super::pack::PackedMask;
 use crate::model::{ModuleId, ProjKind};
+use crate::util::f16::encode_f16_slice;
+use std::sync::Arc;
 
 /// Scale parameterization for the 1-bit delta of one weight matrix
 /// `[d_out, d_in]`.
@@ -102,9 +111,22 @@ impl DeltaModule {
     pub fn resident_bytes(&self) -> u64 {
         self.mask.n_bytes() + (self.scales.len() * 4) as u64
     }
+
+    /// On-disk content equality: same module, axis, mask bits and the same
+    /// *FP16* scale bits. This is what the incremental publisher diffs on —
+    /// two modules that serialize to identical record payloads are "the
+    /// same" even when their in-memory f32 scales differ below f16
+    /// precision, so a republish of unchanged weights produces an empty
+    /// patch instead of spuriously shipping every module.
+    pub fn content_eq(&self, other: &DeltaModule) -> bool {
+        self.id == other.id
+            && self.axis == other.axis
+            && self.mask == other.mask
+            && encode_f16_slice(&self.scales) == encode_f16_slice(&other.scales)
+    }
 }
 
-/// Lifecycle metadata carried by format-v2 artifacts: where a delta sits in
+/// Lifecycle metadata carried by format-v2+ artifacts: where a delta sits in
 /// its variant's version history. V1 artifacts (and in-memory models built
 /// by the compressor before publication) use the `Default` value; the
 /// registry stamps real values at publish time.
@@ -113,32 +135,63 @@ pub struct ArtifactMeta {
     /// Version of the variant this artifact is (`variant@version`). Versions
     /// start at 1; the registry assigns them monotonically per variant.
     pub version: u32,
-    /// Version this delta was published to supersede (rollback target).
+    /// Version this delta was published to supersede (rollback target; for
+    /// patch artifacts, also the version the patch composes onto).
     pub parent: Option<u32>,
     /// Publish wall-clock time, seconds since the Unix epoch (0 = unknown,
     /// e.g. a v1 artifact adopted from a pre-registry directory).
     pub created_unix: u64,
+    /// Format-v3 **patch** artifacts carry only the modules whose packed
+    /// content changed relative to `parent`; every other module is inherited
+    /// from the parent's effective model at load time
+    /// ([`chain::compose`](super::chain::compose)). `false` for full
+    /// artifacts and for every v1/v2 artifact.
+    pub is_patch: bool,
 }
 
 impl Default for ArtifactMeta {
     fn default() -> ArtifactMeta {
-        ArtifactMeta { version: 1, parent: None, created_unix: 0 }
+        ArtifactMeta { version: 1, parent: None, created_unix: 0, is_patch: false }
     }
 }
 
-/// Whole-model compressed delta (one fine-tuned variant).
+/// Whole-model compressed delta (one fine-tuned variant). For a **patch**
+/// model (`meta.is_patch`), `modules` holds only the changed modules; the
+/// effective model is recovered by composing onto the parent version.
 #[derive(Clone, Debug)]
 pub struct DeltaModel {
     /// Name of the fine-tuned variant this delta reconstructs.
     pub variant: String,
     /// Base model config name (the delta only applies on that base).
     pub base_config: String,
-    /// Version/lineage metadata (format v2; defaulted for v1 artifacts).
+    /// Version/lineage metadata (format v2+; defaulted for v1 artifacts).
     pub meta: ArtifactMeta,
-    pub modules: Vec<DeltaModule>,
+    /// Per-module deltas behind `Arc` so chain composition and the variant
+    /// cache can share unchanged modules across versions without copying.
+    pub modules: Vec<Arc<DeltaModule>>,
 }
 
 impl DeltaModel {
+    /// Build a full (non-patch) model with default lifecycle meta, wrapping
+    /// each module in its sharing `Arc`.
+    pub fn new(
+        variant: impl Into<String>,
+        base_config: impl Into<String>,
+        modules: Vec<DeltaModule>,
+    ) -> DeltaModel {
+        DeltaModel {
+            variant: variant.into(),
+            base_config: base_config.into(),
+            meta: ArtifactMeta::default(),
+            modules: modules.into_iter().map(Arc::new).collect(),
+        }
+    }
+
+    /// The module covering `id`, if any.
+    pub fn module(&self, id: ModuleId) -> Option<&Arc<DeltaModule>> {
+        self.modules.iter().find(|m| m.id == id)
+    }
+
     /// Total payload bytes across modules.
     pub fn payload_bytes(&self) -> u64 {
         self.modules.iter().map(|m| m.payload_bytes()).sum()

@@ -185,12 +185,7 @@ mod tests {
                 scales: (0..axis.n_scales(rows, cols)).map(|_| r.uniform_in(0.01, 0.1)).collect(),
             });
         }
-        let delta = DeltaModel {
-            variant: format!("s{seed}"),
-            base_config: cfg.name.clone(),
-            meta: Default::default(),
-            modules,
-        };
+        let delta = DeltaModel::new(format!("s{seed}"), cfg.name.clone(), modules);
         PackedVariant::new(base.clone(), Arc::new(delta)).unwrap()
     }
 

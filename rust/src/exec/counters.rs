@@ -18,6 +18,9 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 static BASE_GEMMS: AtomicU64 = AtomicU64::new(0);
+static LOADER_BYTES: AtomicU64 = AtomicU64::new(0);
+static MODULE_READS: AtomicU64 = AtomicU64::new(0);
+static MODULES_INHERITED: AtomicU64 = AtomicU64::new(0);
 
 /// Record one pass of activations through a resident base/dense weight
 /// matrix.
@@ -25,14 +28,52 @@ pub(crate) fn record_base_gemm() {
     BASE_GEMMS.fetch_add(1, Ordering::Relaxed);
 }
 
+/// Record `n` artifact bytes read from disk by the delta loader (full
+/// reads, header/index peeks and selective section reads all count).
+pub(crate) fn record_loader_bytes(n: u64) {
+    LOADER_BYTES.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Record `n` module records decoded from disk.
+pub(crate) fn record_module_reads(n: u64) {
+    MODULE_READS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Record `n` modules inherited from an already-resident parent version
+/// (chain composition reused the `Arc` instead of touching disk).
+pub(crate) fn record_modules_inherited(n: u64) {
+    MODULES_INHERITED.fetch_add(n, Ordering::Relaxed);
+}
+
 /// Total base GEMMs since process start (or the last [`reset`]).
 pub fn base_gemms() -> u64 {
     BASE_GEMMS.load(Ordering::Relaxed)
 }
 
+/// Total artifact bytes the delta loader read from disk — the
+/// incremental-publish bench asserts a patch warm-up reads a small fraction
+/// of the full-artifact bytes through this counter.
+pub fn loader_bytes() -> u64 {
+    LOADER_BYTES.load(Ordering::Relaxed)
+}
+
+/// Total module records decoded from disk.
+pub fn module_reads() -> u64 {
+    MODULE_READS.load(Ordering::Relaxed)
+}
+
+/// Total modules inherited from resident parent versions without a disk
+/// read.
+pub fn modules_inherited() -> u64 {
+    MODULES_INHERITED.load(Ordering::Relaxed)
+}
+
 /// Reset all counters to zero (benches/tests only).
 pub fn reset() {
     BASE_GEMMS.store(0, Ordering::Relaxed);
+    LOADER_BYTES.store(0, Ordering::Relaxed);
+    MODULE_READS.store(0, Ordering::Relaxed);
+    MODULES_INHERITED.store(0, Ordering::Relaxed);
 }
 
 #[cfg(test)]

@@ -140,7 +140,14 @@ impl PackedVariant {
     /// The packed delta module covering projection `id`, if any (`None`
     /// means the projection executes the shared base unmodified).
     pub fn module(&self, id: ModuleId) -> Option<&crate::delta::types::DeltaModule> {
-        self.by_id.get(&id).map(|&i| &self.delta.modules[i])
+        self.by_id.get(&id).map(|&i| self.delta.modules[i].as_ref())
+    }
+
+    /// The delta's module `Arc`s — the sharing unit the variant cache
+    /// charges residency on (a module shared with a resident parent version
+    /// is charged once, not per version).
+    pub fn module_arcs(&self) -> &[Arc<crate::delta::types::DeltaModule>] {
+        &self.delta.modules
     }
 
     /// Per-variant resident bytes: packed masks + in-memory f32 scales (the
@@ -266,12 +273,7 @@ mod tests {
                 scales: vec![0.05; rows],
             });
         }
-        let delta = Arc::new(DeltaModel {
-            variant: "t".into(),
-            base_config: cfg.name.clone(),
-            meta: Default::default(),
-            modules,
-        });
+        let delta = Arc::new(DeltaModel::new("t", cfg.name.clone(), modules));
         let pv = PackedVariant::new(base.clone(), delta).unwrap();
         (base, pv)
     }

@@ -21,17 +21,27 @@ USAGE:
   pawd apply <base.fp16> <delta.pawd> <out.fp16> materialize a variant checkpoint
   pawd serve <base.fp16> <variant_dir>           start the serving coordinator (demo loop)
   pawd bench-load <base.fp16> <variant_dir> <n>  time cold loads of every variant n times
-  pawd publish <variant_dir> <name> <delta.pawd> publish the next version of a variant
+  pawd publish <variant_dir> <name> <delta.pawd> [--parent [N]]
+                                                 publish the next version of a variant;
+                                                 with --parent, ship an incremental patch
+                                                 carrying only the modules changed vs N
+                                                 (default: the active version)
+  pawd consolidate <variant_dir> <name> [version]
+                                                 rebase a version's patch chain into a
+                                                 single full artifact in place
   pawd rollback <variant_dir> <name> [version]   flip a variant's alias back
   pawd versions <variant_dir>                    list variants + version histories
   pawd gc <variant_dir> [name]                   delete retired versions' artifact files
-  pawd bench-diff <baseline.json> <current.json> [--max-regression 0.20]
-                                                 diff two BENCH_*.json files (CI perf gate)
+  pawd bench-diff <baseline.json> <current.json> [--max-regression 0.20] [--promote]
+                                                 diff two BENCH_*.json files (CI perf
+                                                 gate); --promote overwrites the baseline
+                                                 with the current report from a trusted run
   pawd presets                                   list model config presets
 
-publish/rollback/versions/gc administer a variant directory OFFLINE — one
-process owns a registry dir at a time, so never point them at a directory a
-running `pawd serve` owns (use the server's admin client instead).
+publish/consolidate/rollback/versions/gc administer a variant directory
+OFFLINE — one process owns a registry dir at a time, so never point them at
+a directory a running `pawd serve` owns (use the server's admin client
+instead).
 
 Artifacts are built with `make artifacts`; examples/ and benches/ cover the
 paper's experiments (see DESIGN.md / EXPERIMENTS.md).";
@@ -45,6 +55,7 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args[1..]),
         Some("bench-load") => cmd_bench_load(&args[1..]),
         Some("publish") => cmd_publish(&args[1..]),
+        Some("consolidate") => cmd_consolidate(&args[1..]),
         Some("rollback") => cmd_rollback(&args[1..]),
         Some("versions") => cmd_versions(&args[1..]),
         Some("gc") => cmd_gc(&args[1..]),
@@ -144,12 +155,65 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 }
 
 fn cmd_publish(args: &[String]) -> Result<()> {
+    // Positional args first, then the optional `--parent [N]` flag.
+    let mut positional: Vec<&String> = Vec::new();
+    let mut incremental = false;
+    let mut parent: Option<u32> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--parent" {
+            incremental = true;
+            if let Some(v) = args.get(i + 1).and_then(|s| s.parse::<u32>().ok()) {
+                parent = Some(v);
+                i += 2;
+            } else {
+                i += 1;
+            }
+        } else {
+            positional.push(&args[i]);
+            i += 1;
+        }
+    }
+    let dir = PathBuf::from(positional.first().copied().context("missing <variant_dir>")?);
+    let name = positional.get(1).copied().context("missing <name>")?;
+    let artifact = PathBuf::from(positional.get(2).copied().context("missing <delta.pawd>")?);
+    let registry = pawd::coordinator::VariantRegistry::open(&dir)?;
+    if incremental {
+        let model = load_delta(&artifact)?;
+        if model.meta.is_patch {
+            bail!("{} is already a patch artifact; pass the effective model", artifact.display());
+        }
+        let out = registry.publish_incremental(name, model, parent)?;
+        println!(
+            "published {name}@{} into {} as {} ({})",
+            out.version,
+            dir.display(),
+            if out.patch { "an incremental patch" } else { "a full artifact (no usable diff)" },
+            fmt_bytes(out.bytes)
+        );
+    } else {
+        let version = registry.publish_file(name, &artifact)?;
+        println!("published {name}@{version} into {}", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_consolidate(args: &[String]) -> Result<()> {
     let dir = PathBuf::from(args.first().context("missing <variant_dir>")?);
     let name = args.get(1).context("missing <name>")?;
-    let artifact = PathBuf::from(args.get(2).context("missing <delta.pawd>")?);
+    let version: Option<u32> = args.get(2).map(|s| s.parse()).transpose()?;
     let registry = pawd::coordinator::VariantRegistry::open(&dir)?;
-    let version = registry.publish_file(name, &artifact)?;
-    println!("published {name}@{version} into {}", dir.display());
+    let out = registry.consolidate(name, version)?;
+    if out.rebased_links == 0 {
+        println!("{name}@{} is already a full artifact ({})", out.version, fmt_bytes(out.bytes));
+    } else {
+        println!(
+            "consolidated {name}@{}: {} chain links rebased into one full artifact ({})",
+            out.version,
+            out.rebased_links,
+            fmt_bytes(out.bytes)
+        );
+    }
     Ok(())
 }
 
@@ -171,12 +235,13 @@ fn cmd_versions(args: &[String]) -> Result<()> {
         println!("{}: active v{}{}", d.name, d.active, pin);
         for v in &d.versions {
             println!(
-                "  v{:<3} {:<22} {:>10}  parent {}  {}{}",
+                "  v{:<3} {:<22} {:>10}  parent {}  {}{}{}",
                 v.version,
                 v.file,
                 fmt_bytes(v.bytes),
                 v.parent.map_or("-".to_string(), |p| format!("v{p}")),
                 if v.created_unix > 0 { format!("t={}", v.created_unix) } else { "adopted".into() },
+                if v.patch { "  [patch]" } else { "" },
                 if v.retired { "  [retired]" } else { "" },
             );
         }
@@ -201,6 +266,7 @@ fn cmd_bench_diff(args: &[String]) -> Result<()> {
     use pawd::util::benchkit::{diff_reports, BenchReport, Table};
     let mut paths: Vec<&String> = Vec::new();
     let mut max_regression = 0.20f64;
+    let mut promote = false;
     let mut i = 0;
     while i < args.len() {
         if args[i] == "--max-regression" {
@@ -209,13 +275,19 @@ fn cmd_bench_diff(args: &[String]) -> Result<()> {
                 .context("--max-regression needs a value (e.g. 0.20)")?
                 .parse()?;
             i += 2;
+        } else if args[i] == "--promote" {
+            promote = true;
+            i += 1;
         } else {
             paths.push(&args[i]);
             i += 1;
         }
     }
     if paths.len() != 2 {
-        bail!("usage: pawd bench-diff <baseline.json> <current.json> [--max-regression 0.20]");
+        bail!(
+            "usage: pawd bench-diff <baseline.json> <current.json> \
+             [--max-regression 0.20] [--promote]"
+        );
     }
     let (baseline_path, current_path) = (paths[0], paths[1]);
     let baseline = BenchReport::load(baseline_path)?;
@@ -254,10 +326,26 @@ fn cmd_bench_diff(args: &[String]) -> Result<()> {
     for name in &diff.missing {
         println!("MISSING scenario (present in baseline): {name}");
     }
+    // Promote: overwrite the baseline with the current report (provisional
+    // flag dropped) so the next diff gates against this trusted run. A run
+    // that fails the armed gate must not become the new baseline.
+    let do_promote = || -> Result<()> {
+        if !promote {
+            return Ok(());
+        }
+        let mut promoted = current.clone();
+        promoted.provisional = false;
+        promoted.save(baseline_path)?;
+        println!("promoted {current_path} over {baseline_path} (gate is now armed)");
+        Ok(())
+    };
     if baseline.provisional {
+        if promote {
+            return do_promote();
+        }
         println!(
-            "baseline is PROVISIONAL — gate is report-only. Promote it by copying a trusted \
-             CI run's {current_path} over {baseline_path} and dropping \"provisional\"."
+            "baseline is PROVISIONAL — gate is report-only. Promote a trusted run with \
+             `pawd bench-diff {baseline_path} {current_path} --promote`."
         );
         return Ok(());
     }
@@ -268,7 +356,7 @@ fn cmd_bench_diff(args: &[String]) -> Result<()> {
         );
     }
     println!("perf gate passed");
-    Ok(())
+    do_promote()
 }
 
 fn cmd_bench_load(args: &[String]) -> Result<()> {

@@ -555,12 +555,7 @@ mod tests {
                 scales: (0..n).map(|_| r.uniform_in(0.005, 0.05)).collect(),
             });
         }
-        let delta = DeltaModel {
-            variant: "pv".into(),
-            base_config: cfg.name.clone(),
-            meta: Default::default(),
-            modules,
-        };
+        let delta = DeltaModel::new("pv", cfg.name.clone(), modules);
         let pv = PackedVariant::new(base.clone(), Arc::new(delta)).unwrap();
         let dense = pv.materialize();
 
@@ -596,12 +591,7 @@ mod tests {
                     .collect(),
             });
         }
-        let delta = DeltaModel {
-            variant: format!("pv{seed}"),
-            base_config: cfg.name.clone(),
-            meta: Default::default(),
-            modules,
-        };
+        let delta = DeltaModel::new(format!("pv{seed}"), cfg.name.clone(), modules);
         crate::exec::PackedVariant::new(base.clone(), std::sync::Arc::new(delta)).unwrap()
     }
 

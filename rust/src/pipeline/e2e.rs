@@ -77,7 +77,10 @@ pub fn e2e_train(
     for _epoch in 0..epochs {
         for (batch, tl) in batches.iter().zip(&teacher_logits) {
             // Write current scales back into the modules and materialize.
+            // `make_mut` clones a module only if its Arc is shared (it never
+            // is here: the compressor's output is freshly built).
             for (m, &off) in delta.modules.iter_mut().zip(&offsets) {
+                let m = std::sync::Arc::make_mut(m);
                 let n = m.scales.len();
                 m.scales.copy_from_slice(&theta[off..off + n]);
             }
@@ -133,6 +136,7 @@ pub fn e2e_train(
     }
     // Final write-back.
     for (m, &off) in delta.modules.iter_mut().zip(&offsets) {
+        let m = std::sync::Arc::make_mut(m);
         let n = m.scales.len();
         m.scales.copy_from_slice(&theta[off..off + n]);
     }

@@ -1,0 +1,215 @@
+//! Incremental-publish integration: chain-composed loads are bitwise-equal
+//! to consolidated full artifacts (packed bytes AND eval logits), patch
+//! warming composes from the resident parent, and pre-v3 artifacts still
+//! serve through the v3 reader.
+
+use pawd::coordinator::{VariantCache, VariantRegistry, VariantStore};
+use pawd::delta::format::{load_delta, save_delta_v2_bytes};
+use pawd::delta::pack::PackedMask;
+use pawd::delta::types::{ArtifactMeta, Axis, DeltaModel, DeltaModule};
+use pawd::exec::{ExecMode, PackedVariant, VariantWeights};
+use pawd::model::config::ModelConfig;
+use pawd::model::{FlatParams, Transformer};
+use pawd::util::f16::encode_f16_slice;
+use pawd::util::prop::check;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A full delta over every patchable module of `base`, content seeded.
+fn seeded_full(base: &FlatParams, seed: u64) -> DeltaModel {
+    use pawd::util::rng::Rng;
+    let cfg = base.cfg();
+    let axes = [Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(3)];
+    let modules: Vec<DeltaModule> = base
+        .layout
+        .patchable_modules()
+        .iter()
+        .enumerate()
+        .map(|(i, &id)| {
+            let (rows, cols) = id.kind.shape(cfg);
+            let mut r = Rng::new(seed.wrapping_mul(131).wrapping_add(i as u64));
+            let delta: Vec<f32> = (0..rows * cols).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let axis = axes[(seed as usize + i) % axes.len()];
+            DeltaModule {
+                id,
+                mask: PackedMask::pack(&delta, rows, cols),
+                axis,
+                scales: (0..axis.n_scales(rows, cols))
+                    .map(|_| r.uniform_in(0.005, 0.05))
+                    .collect(),
+            }
+        })
+        .collect();
+    DeltaModel::new("ft", cfg.name.clone(), modules)
+}
+
+fn assert_packed_bytes_eq(a: &DeltaModel, b: &DeltaModel, ctx: &str) -> Result<(), String> {
+    if a.modules.len() != b.modules.len() {
+        return Err(format!("{ctx}: module count {} vs {}", a.modules.len(), b.modules.len()));
+    }
+    for (x, y) in a.modules.iter().zip(&b.modules) {
+        if x.id != y.id || x.axis != y.axis {
+            return Err(format!("{ctx}: module header mismatch at {}", x.id));
+        }
+        if x.mask != y.mask {
+            return Err(format!("{ctx}: mask bytes differ at {}", x.id));
+        }
+        if encode_f16_slice(&x.scales) != encode_f16_slice(&y.scales) {
+            return Err(format!("{ctx}: scale bits differ at {}", x.id));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_chain_composed_load_is_bitwise_equal_to_consolidated_artifact() {
+    let case = AtomicU64::new(0);
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let tf = Transformer::new(&cfg);
+    check("chain-vs-consolidated", 8, 8, |g| {
+        let dir = fresh_dir(&format!(
+            "pawd_prop_chain_{}",
+            case.fetch_add(1, Ordering::Relaxed)
+        ));
+        let base = Arc::new(FlatParams::init(&cfg, 7 + g.size as u64));
+        let registry = VariantRegistry::open(&dir).map_err(|e| e.to_string())?;
+        // v1: full publish.
+        let mut effective = seeded_full(&base, 1000 + g.size as u64);
+        registry
+            .publish_incremental("ft", effective.clone(), None)
+            .map_err(|e| e.to_string())?;
+        // 1..=3 patch steps, each changing a random non-empty module subset.
+        let steps = 1 + g.rng.below(3);
+        let mut final_version = 1;
+        for step in 0..steps {
+            let n = effective.modules.len();
+            let n_changed = 1 + g.rng.below(n.min(4));
+            let fresh = seeded_full(&base, 5000 + step as u64 * 97 + g.size as u64);
+            for _ in 0..n_changed {
+                let k = g.rng.below(n);
+                effective.modules[k] = fresh.modules[k].clone();
+            }
+            let out = registry
+                .publish_incremental("ft", effective.clone(), None)
+                .map_err(|e| e.to_string())?;
+            if !out.patch {
+                return Err(format!("step {step}: expected a patch publish"));
+            }
+            final_version = out.version;
+        }
+        // Chain-composed load (cold, straight from disk).
+        let composed = registry
+            .effective_model("ft", final_version)
+            .map_err(|e| e.to_string())?;
+        // Consolidate in place, reload the now-full artifact.
+        let c = registry.consolidate("ft", Some(final_version)).map_err(|e| e.to_string())?;
+        if c.rebased_links < 2 {
+            return Err("consolidation should have rebased a multi-link chain".into());
+        }
+        let resolved = registry
+            .resolve(&format!("ft@{final_version}"))
+            .map_err(|e| e.to_string())?;
+        if resolved.patch {
+            return Err("consolidated version must resolve as full".into());
+        }
+        let full = load_delta(&resolved.path).map_err(|e| e.to_string())?;
+        // Packed bytes: bitwise identical.
+        assert_packed_bytes_eq(&composed, &full, "composed vs consolidated")?;
+        // Eval logits: bitwise identical forwards through the fused path.
+        let pv_a = PackedVariant::new(base.clone(), Arc::new(composed)).map_err(|e| e.to_string())?;
+        let pv_b = PackedVariant::new(base.clone(), Arc::new(full)).map_err(|e| e.to_string())?;
+        let tokens: Vec<u8> =
+            (0..10u8).map(|t| t.wrapping_mul(23).wrapping_add(g.size as u8) % 200 + 10).collect();
+        let la = tf.forward_one(&pv_a, &tokens);
+        let lb = tf.forward_one(&pv_b, &tokens);
+        for (x, y) in la.data.iter().zip(&lb.data) {
+            if x.to_bits() != y.to_bits() {
+                return Err("eval logits differ between composed and consolidated".into());
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+#[test]
+fn patch_warming_inherits_resident_parent_modules() {
+    let dir = fresh_dir("pawd_itest_chain_warm");
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 3));
+    let store = VariantStore::new(base.clone(), &dir).with_mode(ExecMode::Fused);
+    let registry = store.registry().clone();
+    let v1 = seeded_full(&base, 42);
+    registry.publish_incremental("ft", v1, None).unwrap();
+    let cache = VariantCache::new(store, u64::MAX);
+    let (w1, _) = cache.get("ft").unwrap();
+    // Publish v2 changing one module.
+    let mut v2 = registry.effective_model("ft", 1).unwrap();
+    {
+        let m = Arc::make_mut(&mut v2.modules[3]);
+        for s in &mut m.scales {
+            *s *= 2.0;
+        }
+    }
+    let out = registry.publish_incremental("ft", v2, None).unwrap();
+    assert!(out.patch);
+    let (w2, cold) = cache.get("ft").unwrap();
+    assert!(cold.is_some());
+    let (a, b) = match (&w1, &w2) {
+        (VariantWeights::Packed(a), VariantWeights::Packed(b)) => (a, b),
+        _ => panic!("expected packed weights"),
+    };
+    // All but the changed module are the parent's own Arcs: warming read
+    // only the patch.
+    let shared = b
+        .module_arcs()
+        .iter()
+        .filter(|m| a.module_arcs().iter().any(|p| Arc::ptr_eq(p, m)))
+        .count();
+    assert_eq!(shared, b.module_arcs().len() - 1);
+    // Both serve: spot-check a forward through each.
+    let tf = Transformer::new(&cfg);
+    let tokens: Vec<u8> = vec![5, 9, 13, 17, 21];
+    let l1 = tf.forward_one(&w1, &tokens);
+    let l2 = tf.forward_one(&w2, &tokens);
+    assert_ne!(
+        l1.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        l2.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "the changed module must change the logits"
+    );
+}
+
+#[test]
+fn v2_artifacts_serve_through_the_v3_stack() {
+    let dir = fresh_dir("pawd_itest_v2compat");
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 5));
+    let mut model = seeded_full(&base, 77);
+    model.variant = "legacy2".into();
+    model.meta = ArtifactMeta { version: 4, parent: Some(3), created_unix: 123, is_patch: false };
+    std::fs::write(dir.join("legacy2.pawd"), save_delta_v2_bytes(&model)).unwrap();
+
+    let store = VariantStore::new(base.clone(), &dir).with_mode(ExecMode::Fused);
+    let loaded = store.load("legacy2").unwrap();
+    assert_eq!(loaded.version, 4, "adoption honors the v2 embedded version");
+    assert!(loaded.weights.is_packed());
+    // Content survives the v2 reader bit-for-bit.
+    match &loaded.weights {
+        VariantWeights::Packed(pv) => {
+            assert_packed_bytes_eq(pv.delta().as_ref(), &model, "v2 through stack").unwrap();
+        }
+        _ => panic!("expected packed"),
+    }
+    // And a consolidation no-op doesn't disturb it.
+    let out = store.registry().consolidate("legacy2", None).unwrap();
+    assert_eq!((out.version, out.rebased_links), (4, 0));
+    assert!(store.load("legacy2").is_ok());
+}

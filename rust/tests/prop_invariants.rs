@@ -199,12 +199,11 @@ fn prop_format_roundtrip() {
                 scales: g.vec_normal(axis.n_scales(d_out, d_in), 0.1),
             });
         }
-        let model = pawd::delta::types::DeltaModel {
-            variant: format!("v-{}", g.rng.below(1000)),
-            base_config: "tiny".into(),
-            meta: Default::default(),
+        let model = pawd::delta::types::DeltaModel::new(
+            format!("v-{}", g.rng.below(1000)),
+            "tiny",
             modules,
-        };
+        );
         let dir = std::env::temp_dir().join("pawd_prop_fmt");
         std::fs::create_dir_all(&dir).ok();
         let path = dir.join("prop.pawd");

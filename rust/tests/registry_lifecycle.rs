@@ -23,17 +23,16 @@ use std::time::{Duration, Instant};
 
 fn tiny_delta(variant: &str) -> DeltaModel {
     let d = vec![1.0f32; 8 * 8];
-    DeltaModel {
-        variant: variant.into(),
-        base_config: "tiny".into(),
-        meta: Default::default(),
-        modules: vec![DeltaModule {
+    DeltaModel::new(
+        variant,
+        "tiny",
+        vec![DeltaModule {
             id: ModuleId { layer: 0, kind: ProjKind::Q },
             mask: PackedMask::pack(&d, 8, 8),
             axis: Axis::Row,
             scales: vec![0.1; 8],
         }],
-    }
+    )
 }
 
 fn compressed_variant(
@@ -422,8 +421,11 @@ fn gc_through_the_server_frees_retired_artifacts_mid_traffic() {
 }
 
 #[test]
-fn deprecated_stats_variant_still_answers() {
-    let dir = fresh_dir("pawd_itest_statscompat");
+fn admin_ops_route_by_payload_not_variant_name() {
+    // The deprecated `__stats__` pseudo-variant alias is gone: admin
+    // routing is by payload type alone, and the `__admin__` pseudo-variant
+    // still rejects misdirected data ops.
+    let dir = fresh_dir("pawd_itest_adminroute");
     std::fs::create_dir_all(&dir).unwrap();
     let cfg = ModelConfig::preset("tiny").unwrap();
     let base = Arc::new(FlatParams::init(&cfg, 3));
@@ -435,18 +437,74 @@ fn deprecated_stats_variant_still_answers() {
     );
     let client = server.client();
     let _ = client.score("a", "Q: warm? A: ", &["x".to_string(), "y".to_string()]);
-    // Old protocol: an admin payload aimed at the reserved pseudo-variant.
-    use pawd::coordinator::{AdminOp, RespBody, STATS_VARIANT};
-    let rx = client.submit(STATS_VARIANT, Payload::Admin(AdminOp::Stats));
+    // An Admin payload routes to the control plane regardless of the
+    // variant string it rides under — even a data variant's name.
+    use pawd::coordinator::{AdminOp, RespBody, ADMIN_VARIANT};
+    let rx = client.submit("a", Payload::Admin(AdminOp::Stats));
     match rx.recv().unwrap().result {
         Ok(RespBody::Admin(pawd::coordinator::AdminResp::Stats { snapshot })) => {
             assert!(snapshot.served >= 1);
         }
         other => panic!("unexpected {other:?}"),
     }
-    // A *data* op aimed at it is a caller bug and is rejected, as before.
-    let resp = client.score(STATS_VARIANT, "Q: ? A: ", &["x".to_string()]);
+    // The typed client helper is the supported surface.
+    assert!(client.stats().unwrap().served >= 1);
+    // A *data* op aimed at the reserved admin pseudo-variant is rejected.
+    let resp = client.score(ADMIN_VARIANT, "Q: ? A: ", &["x".to_string()]);
     assert!(resp.result.is_err());
     assert!(resp.result.unwrap_err().contains("reserved"));
+    // The retired `__stats__` name is now just an unknown (unpublishable)
+    // variant: a data op against it fails variant resolution.
+    let resp = client.score("__stats__", "Q: ? A: ", &["x".to_string()]);
+    assert!(resp.result.is_err());
+    server.shutdown();
+}
+
+#[test]
+fn incremental_publish_through_the_server_warms_from_the_resident_parent() {
+    let dir = fresh_dir("pawd_itest_incpublish");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 11));
+    save_delta(dir.join("a.pawd"), &compressed_variant("a", &base, 900)).unwrap();
+    let staging = fresh_dir("pawd_itest_incpublish_staging");
+    std::fs::create_dir_all(&staging).unwrap();
+
+    let store = VariantStore::new(base.clone(), &dir).with_mode(ExecMode::Fused);
+    let server = Server::start(store, Engine::Native, ServerConfig::default());
+    let client = server.client();
+    // Warm v1, then stage a child model that differs in a single module.
+    let r1 = client.score("a", "Q: v1? A: ", &["x".to_string(), "y".to_string()]);
+    assert_eq!(r1.version, Some(1));
+    let mut child = pawd::delta::format::load_delta(dir.join("a.pawd")).unwrap();
+    {
+        let m = Arc::make_mut(&mut child.modules[0]);
+        for s in &mut m.scales {
+            *s *= 2.0;
+        }
+    }
+    let staged = staging.join("child.pawd");
+    save_delta(&staged, &child).unwrap();
+    let full_bytes = std::fs::metadata(&staged).unwrap().len();
+    let (version, patch, bytes) = client.publish_incremental("a", &staged, None).unwrap();
+    assert_eq!(version, 2);
+    assert!(patch, "single-module change must ship as a patch");
+    assert!(
+        bytes * 2 < full_bytes,
+        "patch bytes {bytes} should be well under the full artifact {full_bytes}"
+    );
+    // The flip is live and serves the composed chain.
+    let r2 = client.score("a", "Q: v2? A: ", &["x".to_string(), "y".to_string()]);
+    assert_eq!(r2.version, Some(2));
+    assert!(r2.result.is_ok());
+    // Both versions resident; consolidation through the admin plane keeps
+    // the version serving and collapses its chain.
+    let resident = server.cache.resident();
+    assert!(resident.contains(&("a".to_string(), 1)));
+    assert!(resident.contains(&("a".to_string(), 2)));
+    assert_eq!(client.consolidate("a", None), Ok(2));
+    let r3 = client.score("a", "Q: post-consolidate? A: ", &["x".to_string(), "y".to_string()]);
+    assert_eq!(r3.version, Some(2));
+    assert!(r3.result.is_ok());
     server.shutdown();
 }

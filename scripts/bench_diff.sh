@@ -3,7 +3,7 @@
 # drop by default). Thin wrapper over `pawd bench-diff` so CI and local runs
 # share one implementation.
 #
-#   scripts/bench_diff.sh BENCH_baseline.json BENCH_pr.json [--max-regression 0.20]
+#   scripts/bench_diff.sh BENCH_baseline.json BENCH_pr.json [--max-regression 0.20] [--promote]
 #
 # Paths are resolved relative to the caller's working directory.
 set -euo pipefail

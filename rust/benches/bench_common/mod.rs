@@ -2,11 +2,17 @@
 //! variants on disk, and calibration docs — everything deterministic so
 //! bench output is reproducible run-to-run.
 
+// Each bench binary includes this module via `#[path]` and uses only the
+// helpers it needs; the rest must not trip `-D warnings` as dead code.
+#![allow(dead_code)]
+
 use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
-use pawd::delta::types::DeltaModel;
+use pawd::delta::pack::PackedMask;
+use pawd::delta::types::{Axis, DeltaModel, DeltaModule};
 use pawd::model::config::ModelConfig;
 use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
 use pawd::model::FlatParams;
+use pawd::util::rng::Rng;
 use std::path::PathBuf;
 
 pub fn calib_docs(n: usize, len: usize) -> Vec<Vec<u8>> {
@@ -38,6 +44,44 @@ pub fn synth_pair(preset: &str, seed: u64) -> (FlatParams, FlatParams) {
 pub fn compress_vector(base: &FlatParams, ft: &FlatParams, docs: &[Vec<u8>]) -> DeltaModel {
     let opts = CompressOptions { fit: FitMode::ClosedForm, ..Default::default() };
     compress_model("bench", base, ft, docs, &opts).0
+}
+
+/// A full delta covering every patchable module of `base` (variant "ft"),
+/// content seeded — shared by the incremental-publish and replication
+/// benches so both measure identical artifacts.
+pub fn seeded_full(base: &FlatParams, seed: u64) -> DeltaModel {
+    let cfg = base.cfg();
+    let modules: Vec<DeltaModule> = base
+        .layout
+        .patchable_modules()
+        .iter()
+        .enumerate()
+        .map(|(i, &id)| {
+            let (rows, cols) = id.kind.shape(cfg);
+            let mut r = Rng::new(seed.wrapping_mul(977).wrapping_add(i as u64));
+            let delta: Vec<f32> = (0..rows * cols).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            DeltaModule {
+                id,
+                mask: PackedMask::pack(&delta, rows, cols),
+                axis: Axis::Row,
+                scales: (0..rows).map(|_| r.uniform_in(0.005, 0.05)).collect(),
+            }
+        })
+        .collect();
+    DeltaModel::new("ft", cfg.name.clone(), modules)
+}
+
+/// Replace `n_changed` modules of `model` (spread across small and large
+/// projections) with freshly seeded content.
+pub fn perturb(model: &DeltaModel, base: &FlatParams, n_changed: usize, seed: u64) -> DeltaModel {
+    let mut out = model.clone();
+    let n = out.modules.len();
+    let fresh = seeded_full(base, seed);
+    for j in 0..n_changed {
+        let k = (j * n) / n_changed + (seed as usize % (n / n_changed.max(1)).max(1));
+        out.modules[k % n] = fresh.modules[k % n].clone();
+    }
+    out
 }
 
 pub fn tmp_dir(name: &str) -> PathBuf {

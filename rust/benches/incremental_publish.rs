@@ -15,54 +15,15 @@
 #[path = "bench_common/mod.rs"]
 mod bench_common;
 
+use bench_common::{perturb, seeded_full};
 use pawd::coordinator::{VariantCache, VariantStore};
-use pawd::delta::pack::PackedMask;
-use pawd::delta::types::{Axis, DeltaModel, DeltaModule};
 use pawd::exec::{counters, ExecMode};
 use pawd::model::config::ModelConfig;
 use pawd::model::{FlatParams, Transformer};
 use pawd::util::benchkit::{fmt_bytes, fmt_dur, BenchReport, Table};
-use pawd::util::rng::Rng;
 use pawd::util::stats::Summary;
 use std::sync::Arc;
 use std::time::Instant;
-
-/// A full delta covering every patchable module, content seeded.
-fn seeded_full(base: &FlatParams, seed: u64) -> DeltaModel {
-    let cfg = base.cfg();
-    let modules: Vec<DeltaModule> = base
-        .layout
-        .patchable_modules()
-        .iter()
-        .enumerate()
-        .map(|(i, &id)| {
-            let (rows, cols) = id.kind.shape(cfg);
-            let mut r = Rng::new(seed.wrapping_mul(977).wrapping_add(i as u64));
-            let delta: Vec<f32> = (0..rows * cols).map(|_| r.normal_f32(0.0, 1.0)).collect();
-            DeltaModule {
-                id,
-                mask: PackedMask::pack(&delta, rows, cols),
-                axis: Axis::Row,
-                scales: (0..rows).map(|_| r.uniform_in(0.005, 0.05)).collect(),
-            }
-        })
-        .collect();
-    DeltaModel::new("ft", cfg.name.clone(), modules)
-}
-
-/// Replace `n_changed` modules of `model` (spread across small and large
-/// projections) with freshly seeded content.
-fn perturb(model: &DeltaModel, base: &FlatParams, n_changed: usize, seed: u64) -> DeltaModel {
-    let mut out = model.clone();
-    let n = out.modules.len();
-    let fresh = seeded_full(base, seed);
-    for j in 0..n_changed {
-        let k = (j * n) / n_changed + (seed as usize % (n / n_changed.max(1)).max(1));
-        let k = k % n;
-        out.modules[k] = fresh.modules[k].clone();
-    }
-    out
-}
 
 fn main() -> anyhow::Result<()> {
     let fast = std::env::var("PAWD_BENCH_FAST").is_ok();

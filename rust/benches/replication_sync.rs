@@ -1,0 +1,181 @@
+//! **Replication sync**: wire bytes and sync latency for a follower
+//! mirroring a leader's registry over the filesystem transport.
+//!
+//! Structural claims are asserted through the `exec::counters` wire gauges,
+//! not just timed:
+//!
+//! * a follower syncing a ~5%-changed publish (leader ships a patch, the
+//!   follower already holds the chain parent) moves **<15%** of the
+//!   consolidated artifact bytes over the wire;
+//! * an up-to-date follower polling the leader moves only manifest bytes —
+//!   zero artifact files;
+//! * post-sync eval logits are bitwise-equal between leader and follower.
+//!
+//! Emits machine-readable metrics into `$PAWD_BENCH_JSON` (see
+//! `BenchReport`); CI's bench-smoke lane runs this in fast mode.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use bench_common::{perturb, seeded_full};
+use pawd::coordinator::{FsTransport, Replicator, VariantRegistry};
+use pawd::exec::counters;
+use pawd::model::config::ModelConfig;
+use pawd::model::{FlatParams, Transformer};
+use pawd::util::benchkit::{fmt_bytes, fmt_dur, BenchReport, Table};
+use pawd::util::stats::Summary;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn bitwise_logits(base: &Arc<FlatParams>, tf: &Transformer, dir: &Path, probe: &[u8]) -> Vec<u32> {
+    use pawd::coordinator::VariantStore;
+    use pawd::exec::ExecMode;
+    let store = VariantStore::new(base.clone(), dir).with_mode(ExecMode::Fused);
+    let w = store.load("ft").unwrap().weights;
+    tf.forward_one(&w, probe).data.iter().map(|x| x.to_bits()).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("PAWD_BENCH_FAST").is_ok();
+    let cfg = ModelConfig::preset("llama-mini")?;
+    let base = Arc::new(FlatParams::init(&cfg, 19));
+    let tf = Transformer::new(&cfg);
+    let n_modules = base.layout.patchable_modules().len();
+    // ~5% of modules changed per publish (at least 1).
+    let n_changed = (n_modules as f64 * 0.05).ceil() as usize;
+    let leader_dir = bench_common::tmp_dir("replication_sync_leader");
+    let follower_dir = bench_common::tmp_dir("replication_sync_follower");
+    let leader = VariantRegistry::open(&leader_dir)?;
+    let follower = Arc::new(VariantRegistry::open(&follower_dir)?);
+    let replicator = Replicator::new(follower.clone(), Box::new(FsTransport::new(&leader_dir)));
+    let probe: Vec<u8> = (0..24u8).map(|t| t.wrapping_mul(13) % 200 + 20).collect();
+
+    // --- cold sync: the whole consolidated artifact moves ------------------
+    let v1 = seeded_full(&base, 1);
+    let full = leader.publish_incremental("ft", v1.clone(), None)?;
+    assert!(!full.patch);
+    counters::reset();
+    let t0 = Instant::now();
+    let cold_report = replicator.sync_once(None)?;
+    let cold_time = t0.elapsed().as_secs_f64();
+    let cold_wire = counters::wire_bytes();
+    assert_eq!(cold_report.files_fetched, 1);
+    assert_eq!(cold_report.artifact_bytes, full.bytes, "cold sync ships the full artifact");
+    assert_eq!(
+        cold_wire,
+        full.bytes + cold_report.manifest_bytes,
+        "wire counter must equal artifact + manifest bytes"
+    );
+
+    // --- warm sync: a ~5%-changed publish moves only the patch -------------
+    let child = perturb(&v1, &base, n_changed, 2);
+    let patched = leader.publish_incremental("ft", child, None)?;
+    assert!(patched.patch, "a {n_changed}/{n_modules}-module change must ship as a patch");
+    counters::reset();
+    let t0 = Instant::now();
+    let warm_report = replicator.sync_once(None)?;
+    let warm_time = t0.elapsed().as_secs_f64();
+    let warm_wire = counters::wire_bytes();
+    let warm_files = counters::wire_files();
+    assert_eq!(warm_files, 1, "warm sync must fetch exactly the patch file");
+    assert_eq!(warm_report.patch_files_fetched, 1);
+    let fraction = warm_report.artifact_bytes as f64 / full.bytes as f64;
+    println!(
+        "wire bytes: cold {} vs warm {} ({n_changed}/{n_modules} modules changed, {:.1}% of \
+         consolidated)",
+        fmt_bytes(cold_report.artifact_bytes),
+        fmt_bytes(warm_report.artifact_bytes),
+        fraction * 100.0
+    );
+    assert!(
+        fraction < 0.15,
+        "a ~5%-changed publish must replicate in <15% of the consolidated bytes, got {:.1}%",
+        fraction * 100.0
+    );
+    // Including the manifest overhead the total still stays under the gate.
+    let total_fraction = warm_wire as f64 / full.bytes as f64;
+    assert!(
+        total_fraction < 0.15,
+        "total wire traffic (artifact + manifest) must stay <15%, got {:.1}%",
+        total_fraction * 100.0
+    );
+
+    // --- fidelity: leader and follower serve bitwise-identical logits ------
+    let ll = bitwise_logits(&base, &tf, &leader_dir, &probe);
+    let fl = bitwise_logits(&base, &tf, &follower_dir, &probe);
+    assert_eq!(ll, fl, "post-sync eval logits must be bitwise-equal");
+
+    // --- steady state: polling an unchanged leader moves manifest bytes only
+    counters::reset();
+    let idle_report = replicator.sync_once(None)?;
+    assert!(idle_report.up_to_date);
+    assert_eq!(counters::wire_files(), 0);
+    let idle_wire = counters::wire_bytes();
+    assert_eq!(idle_wire, idle_report.manifest_bytes);
+
+    // --- sync latency over repeated ~5%-changed publishes ------------------
+    let rounds = if fast { 3 } else { 8 };
+    let mut effective = leader.effective_model("ft", patched.version)?;
+    let mut sync_times = Vec::with_capacity(rounds);
+    let mut sync_bytes = Vec::with_capacity(rounds);
+    for round in 0..rounds {
+        // Consolidate between rounds (outside the timed region) so patch
+        // depth stays constant; the follower mirrors the consolidation swap
+        // before the next patch round.
+        leader.consolidate("ft", None)?;
+        replicator.sync_once(None)?;
+        effective = perturb(&effective, &base, n_changed, 100 + round as u64);
+        let out = leader.publish_incremental("ft", effective.clone(), None)?;
+        assert!(out.patch);
+        let t0 = Instant::now();
+        let r = replicator.sync_once(None)?;
+        sync_times.push(t0.elapsed().as_secs_f64());
+        sync_bytes.push(r.artifact_bytes as f64);
+        assert_eq!(r.patch_files_fetched, 1);
+    }
+    let st = Summary::of(&sync_times);
+    let sb = Summary::of(&sync_bytes);
+    let mut t = Table::new(&["sync", "latency", "wire bytes", "files"]);
+    t.row(&[
+        "cold (consolidated)".into(),
+        fmt_dur(cold_time),
+        fmt_bytes(cold_report.artifact_bytes),
+        "1".into(),
+    ]);
+    t.row(&[
+        format!("warm (patch, {n_changed}/{n_modules} modules)"),
+        fmt_dur(warm_time),
+        fmt_bytes(warm_report.artifact_bytes),
+        "1".into(),
+    ]);
+    t.row(&[
+        format!("steady warm p50 over {rounds} rounds"),
+        fmt_dur(st.p50),
+        fmt_bytes(sb.p50 as u64),
+        "1".into(),
+    ]);
+    t.row(&["idle poll".into(), "-".into(), fmt_bytes(idle_wire), "0".into()]);
+    t.print("Replication sync: patch-aware transfer (llama-mini, fs transport)");
+
+    let mut report = BenchReport::new();
+    report.add(
+        "replication_sync/wire_bytes",
+        &[
+            ("cold_bytes", cold_report.artifact_bytes as f64),
+            ("warm_patch_bytes", warm_report.artifact_bytes as f64),
+            ("warm_fraction", fraction),
+            ("idle_poll_bytes", idle_wire as f64),
+        ],
+    );
+    report.add(
+        "replication_sync/latency",
+        &[
+            ("cold_ms", cold_time * 1e3),
+            ("warm_ms", warm_time * 1e3),
+            ("steady_p50_ms", st.p50 * 1e3),
+        ],
+    );
+    report.flush_env()?;
+    Ok(())
+}

@@ -250,13 +250,7 @@ impl VariantCache {
         // composition hint: the store then reads only the patch file and
         // inherits every unchanged module's Arc — the warm-publish path.
         let parent_hint: Option<Arc<DeltaModel>> = if resolved.patch {
-            resolved.parent.and_then(|pv| {
-                let inner = self.inner.lock().unwrap();
-                inner.entries.get(&(resolved.name.clone(), pv)).and_then(|e| match &e.weights {
-                    VariantWeights::Packed(p) => Some(p.delta().clone()),
-                    VariantWeights::Dense(..) => None,
-                })
-            })
+            resolved.parent.and_then(|pv| self.resident_delta(&resolved.name, pv))
         } else {
             None
         };
@@ -327,6 +321,19 @@ impl VariantCache {
             }
         });
         out.into_iter().map(|o| o.expect("scoped fetch completed")).collect()
+    }
+
+    /// The resident *packed* delta of `(variant, version)`, if any — the
+    /// chain-composition hint: `get` passes the resident direct parent to
+    /// the store so warming a patch version reads only the patch file, and
+    /// the replicator passes it to patch verification so a steady-state
+    /// sync does not re-read the parent chain from disk.
+    pub fn resident_delta(&self, variant: &str, version: u32) -> Option<Arc<DeltaModel>> {
+        let inner = self.inner.lock().unwrap();
+        inner.entries.get(&(variant.to_string(), version)).and_then(|e| match &e.weights {
+            VariantWeights::Packed(p) => Some(p.delta().clone()),
+            VariantWeights::Dense(..) => None,
+        })
     }
 
     pub fn stats(&self) -> CacheStats {

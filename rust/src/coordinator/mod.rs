@@ -25,10 +25,15 @@
 //!   group from flat buffers.
 //! * [`metrics`] — latency histograms, throughput, cold-start accounting,
 //!   publish/rollback counters, per-version residency gauges.
+//! * [`replicate`] — patch-aware multi-node replication: a follower pulls a
+//!   leader's manifest through a [`SyncTransport`](replicate::SyncTransport),
+//!   fetches only missing artifacts (patches when the chain parent is
+//!   already held), crc-verifies them, and commits the mirrored records.
 
 pub mod cache;
 pub mod metrics;
 pub mod registry;
+pub mod replicate;
 pub mod request;
 pub mod server;
 pub mod store;
@@ -36,9 +41,10 @@ pub mod store;
 pub use cache::{Residency, VariantCache, VersionResidency};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{
-    ArtifactKind, ConsolidateOutcome, GcReport, PublishOutcome, Resolved, VariantDesc,
-    VariantRegistry, VersionRecord,
+    ArtifactKind, ConsolidateOutcome, GcReport, ManifestView, PublishOutcome, Resolved,
+    VariantDesc, VariantRegistry, VersionRecord,
 };
+pub use replicate::{FsTransport, Replicator, SyncReport, SyncTransport};
 pub use request::{AdminOp, AdminResp, DataOp, Payload, RespBody, Response, ADMIN_VARIANT};
 pub use server::{Client, Engine, Server, ServerConfig};
 pub use store::VariantStore;

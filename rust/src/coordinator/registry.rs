@@ -53,6 +53,7 @@ use crate::util::json::{self, Json};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{SystemTime, UNIX_EPOCH};
 
@@ -178,6 +179,10 @@ pub struct Resolved {
 pub struct VariantRegistry {
     dir: PathBuf,
     inner: Mutex<BTreeMap<String, VariantState>>,
+    /// Monotonic manifest sequence number, bumped on every persisted
+    /// mutation. Replication followers poll it to detect leader changes
+    /// without re-diffing an unchanged manifest.
+    seq: AtomicU64,
 }
 
 impl VariantRegistry {
@@ -186,12 +191,15 @@ impl VariantRegistry {
     /// directory is an empty registry (publishing creates it).
     pub fn open(dir: &Path) -> Result<VariantRegistry> {
         let mut variants: BTreeMap<String, VariantState> = BTreeMap::new();
+        let mut seq = 0u64;
         let manifest = dir.join(MANIFEST_FILE);
         if manifest.exists() {
             let text = std::fs::read_to_string(&manifest)
                 .with_context(|| format!("reading {}", manifest.display()))?;
-            variants = parse_manifest(&text)
+            let parsed = parse_manifest(&text)
                 .with_context(|| format!("parsing {}", manifest.display()))?;
+            variants = parsed.0;
+            seq = parsed.1;
         }
         // Only variants with recorded versions count as manifest-tracked;
         // a persisted placeholder (failed publish) shouldn't pin the alias
@@ -202,11 +210,22 @@ impl VariantRegistry {
             .map(|(n, _)| n.clone())
             .collect();
         adopt_untracked(dir, &mut variants, &tracked)?;
-        Ok(VariantRegistry { dir: dir.to_path_buf(), inner: Mutex::new(variants) })
+        Ok(VariantRegistry {
+            dir: dir.to_path_buf(),
+            inner: Mutex::new(variants),
+            seq: AtomicU64::new(seq),
+        })
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Current manifest sequence number: 0 for a registry that has never
+    /// persisted, monotonically increasing across mutations (and restarts —
+    /// the value is stored in the manifest).
+    pub fn manifest_seq(&self) -> u64 {
+        self.seq.load(Ordering::SeqCst)
     }
 
     /// Resolve an alias. `name` selects the variant's active version;
@@ -344,6 +363,23 @@ impl VariantRegistry {
         child: DeltaModel,
         parent: Option<u32>,
     ) -> Result<PublishOutcome> {
+        self.publish_incremental_hinted(name, child, parent, |_| None)
+    }
+
+    /// [`publish_incremental`](Self::publish_incremental) with a **resident
+    /// parent lookup**: `resident` maps a version number to that version's
+    /// already-composed effective model when one is held in memory (the
+    /// server passes the variant cache's entries). With a hit, diffing the
+    /// child reads only the final patch file at most — publish cost stays
+    /// proportional to what changed instead of re-reading the consolidated
+    /// parent from disk.
+    pub fn publish_incremental_hinted(
+        &self,
+        name: &str,
+        child: DeltaModel,
+        parent: Option<u32>,
+        resident: impl Fn(u32) -> Option<std::sync::Arc<DeltaModel>>,
+    ) -> Result<PublishOutcome> {
         validate_name(name)?;
         if child.meta.is_patch {
             bail!("publish_incremental takes the child's *effective* model, not a patch");
@@ -400,9 +436,18 @@ impl VariantRegistry {
             let (version, bytes) = self.publish_model(name, child, Some(parent_v), false)?;
             return Ok(PublishOutcome { version, patch: false, bytes });
         }
-        let parent_eff = chain::load_effective(&links, None)
-            .with_context(|| format!("composing parent '{name}@{parent_v}'"))?
-            .0;
+        // The resident hint short-circuits the whole chain read when it IS
+        // the parent's effective model; otherwise load_effective validates
+        // and falls back to the cold per-record path on its own.
+        let hint = resident(parent_v).filter(|m| !m.meta.is_patch && m.meta.version == parent_v);
+        let parent_eff = match hint {
+            Some(m) => (*m).clone(),
+            None => {
+                chain::load_effective(&links, None)
+                    .with_context(|| format!("composing parent '{name}@{parent_v}'"))?
+                    .0
+            }
+        };
         match chain::diff(&parent_eff, &child) {
             Ok(patch) if patch.modules.len() < child.modules.len() => {
                 let (version, bytes) = self.publish_model(name, patch, Some(parent_v), true)?;
@@ -746,16 +791,11 @@ impl VariantRegistry {
             // races must not turn it into an unloadable variant).
             let mut live: std::collections::HashSet<String> = std::collections::HashSet::new();
             for state in index.values() {
-                for rec in state.versions.values().filter(|r| !r.retired) {
-                    live.insert(rec.file.clone());
-                    let mut cur = rec;
-                    let mut depth = 0;
-                    while cur.patch && depth <= chain::HARD_CHAIN_BOUND {
-                        let Some(p) = cur.parent else { break };
-                        let Some(prec) = state.versions.get(&p) else { break };
-                        live.insert(prec.file.clone());
-                        cur = prec;
-                        depth += 1;
+                let pinned =
+                    live_file_versions(state.versions.values(), |p| state.versions.get(&p));
+                for v in pinned {
+                    if let Some(rec) = state.versions.get(&v) {
+                        live.insert(rec.file.clone());
                     }
                 }
             }
@@ -841,13 +881,158 @@ impl VariantRegistry {
 
     fn persist(&self, variants: &BTreeMap<String, VariantState>) -> Result<()> {
         std::fs::create_dir_all(&self.dir)?;
+        // Reserve the next sequence number up front: a failed write leaves a
+        // gap, never a reused number (followers only need monotonicity).
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst) + 1;
         let tmp = self.dir.join(format!("{MANIFEST_FILE}.tmp"));
-        std::fs::write(&tmp, render_manifest(variants).to_string())
+        std::fs::write(&tmp, render_manifest(variants, seq).to_string())
             .with_context(|| format!("writing {}", tmp.display()))?;
         std::fs::rename(&tmp, self.dir.join(MANIFEST_FILE))
             .with_context(|| "committing registry manifest")?;
         Ok(())
     }
+
+    /// Mirror one variant's replicated state from a leader manifest: insert
+    /// missing version records, apply leader-side `retired` flags and
+    /// consolidation file swaps, and move the alias to the leader's active
+    /// version — all in a single write-ahead manifest commit. Artifact files
+    /// the records point at must already sit in the registry directory (the
+    /// replicator fetches and crc-verifies them first).
+    ///
+    /// Merge rules against an existing local record of the same version:
+    /// * identical file → no-op (sync is idempotent);
+    /// * leader tombstone (`file` empty) → only the `retired` flag is
+    ///   mirrored; the local artifact file is kept until a *local* gc;
+    /// * local patch vs leader full of the same version → the leader
+    ///   consolidated: the record is swapped to the full file and the
+    ///   superseded local patch file is returned for unlinking;
+    /// * any other file disagreement → the follower has diverged (e.g. a
+    ///   local publish raced the leader's) and the sync fails — follower
+    ///   directories must not take local publishes.
+    ///
+    /// Returns the superseded local files (already unlinked).
+    pub fn apply_replica(
+        &self,
+        name: &str,
+        records: &[VersionRecord],
+        active: u32,
+        pinned: bool,
+    ) -> Result<Vec<String>> {
+        validate_name(name)?;
+        let superseded = self.mutate(|index| {
+            let state = index.entry(name.to_string()).or_default();
+            let mut superseded = Vec::new();
+            for rec in records {
+                if !state.versions.contains_key(&rec.version) {
+                    if rec.patch {
+                        let Some(p) = rec.parent else {
+                            bail!("replica patch '{name}@{}' has no parent", rec.version);
+                        };
+                        let known_parent = state.versions.contains_key(&p)
+                            || records.iter().any(|r| r.version == p);
+                        if !known_parent {
+                            bail!(
+                                "replica patch '{name}@{}' arrived without its chain \
+                                 parent v{p}",
+                                rec.version
+                            );
+                        }
+                    }
+                    state.versions.insert(rec.version, rec.clone());
+                    continue;
+                }
+                let existing = state.versions.get_mut(&rec.version).expect("checked above");
+                if rec.file.is_empty() || existing.file == rec.file {
+                    // Tombstone or identical artifact: mirror flags only.
+                    existing.retired = existing.retired || rec.retired;
+                } else if existing.patch && !rec.patch {
+                    // The leader consolidated this version in place.
+                    superseded.push(existing.file.clone());
+                    existing.file = rec.file.clone();
+                    existing.bytes = rec.bytes;
+                    existing.patch = false;
+                    existing.retired = existing.retired || rec.retired;
+                } else {
+                    bail!(
+                        "follower diverged from leader: '{name}@{}' is backed by \
+                         '{}' locally but '{}' on the leader",
+                        rec.version,
+                        existing.file,
+                        rec.file
+                    );
+                }
+            }
+            let target = state.versions.get(&active).ok_or_else(|| {
+                anyhow::anyhow!("leader alias '{name}'@{active} is not among the replica records")
+            })?;
+            if target.retired {
+                bail!("leader alias '{name}'@{active} points at a retired version");
+            }
+            state.active = active;
+            state.pinned = pinned;
+            Ok(superseded)
+        })?;
+        for file in &superseded {
+            let _ = std::fs::remove_file(self.dir.join(file));
+        }
+        Ok(superseded)
+    }
+}
+
+/// Parsed read-only view of a registry manifest — what a replication
+/// follower diffs against its own [`VariantRegistry`] after fetching the
+/// leader's `registry.json` through a
+/// [`SyncTransport`](super::replicate::SyncTransport).
+#[derive(Clone, Debug)]
+pub struct ManifestView {
+    /// The leader's monotonic manifest sequence number (0 for manifests
+    /// written before replication landed).
+    pub manifest_seq: u64,
+    pub variants: Vec<VariantDesc>,
+}
+
+/// Parse manifest JSON text (the bytes of a `registry.json`) into a
+/// [`ManifestView`]. Used by the replicator on fetched leader manifests;
+/// local state goes through [`VariantRegistry::open`] instead.
+pub fn parse_manifest_view(text: &str) -> Result<ManifestView> {
+    let (variants, manifest_seq) = parse_manifest(text)?;
+    let variants = variants
+        .into_iter()
+        .filter(|(_, s)| !s.versions.is_empty())
+        .map(|(name, s)| VariantDesc {
+            name,
+            active: s.active,
+            pinned: s.pinned,
+            versions: s.versions.into_values().collect(),
+        })
+        .collect();
+    Ok(ManifestView { manifest_seq, variants })
+}
+
+/// Versions whose artifact files must stay readable for one variant: every
+/// non-retired version, plus each chain ancestor a live patch composes
+/// through (an ancestor may itself be retired — retirement blocks serving,
+/// not reading). Shared by the gc sweep (which pins these files on disk)
+/// and the replication follower (which fetches exactly these files);
+/// `lookup` resolves a version number to its record within the variant.
+pub(crate) fn live_file_versions<'a>(
+    records: impl Iterator<Item = &'a VersionRecord>,
+    lookup: impl Fn(u32) -> Option<&'a VersionRecord>,
+) -> std::collections::HashSet<u32> {
+    let mut live = std::collections::HashSet::new();
+    for rec in records.filter(|r| !r.retired) {
+        live.insert(rec.version);
+        let mut cur = rec;
+        let mut depth = 0usize;
+        while cur.patch && depth <= chain::HARD_CHAIN_BOUND {
+            let Some(p) = cur.parent else { break };
+            live.insert(p);
+            let Some(prec) = lookup(p) else { break };
+            cur = prec;
+            depth += 1;
+        }
+    }
+    live
 }
 
 fn state_mut<'a>(
@@ -974,7 +1159,7 @@ fn adopt_untracked(
 
 // -- manifest (de)serialization -------------------------------------------
 
-fn render_manifest(variants: &BTreeMap<String, VariantState>) -> Json {
+fn render_manifest(variants: &BTreeMap<String, VariantState>, seq: u64) -> Json {
     let vs = variants
         .iter()
         .map(|(name, s)| {
@@ -1004,15 +1189,21 @@ fn render_manifest(variants: &BTreeMap<String, VariantState>) -> Json {
             )
         })
         .collect::<Vec<_>>();
-    json::obj(vec![("format", json::n(1.0)), ("variants", json::obj(vs))])
+    json::obj(vec![
+        ("format", json::n(1.0)),
+        ("manifest_seq", json::n(seq as f64)),
+        ("variants", json::obj(vs)),
+    ])
 }
 
-fn parse_manifest(text: &str) -> Result<BTreeMap<String, VariantState>> {
+fn parse_manifest(text: &str) -> Result<(BTreeMap<String, VariantState>, u64)> {
     let j = Json::parse(text)?;
     let format = j.req_usize("format")?;
     if format != 1 {
         bail!("unsupported registry manifest format {format}");
     }
+    // Manifests written before replication landed carry no sequence number.
+    let seq = j.get("manifest_seq").and_then(|v| v.as_usize()).unwrap_or(0) as u64;
     let mut out = BTreeMap::new();
     for (name, v) in j.req("variants")?.as_obj().context("'variants' is not an object")? {
         let mut state = VariantState {
@@ -1045,7 +1236,7 @@ fn parse_manifest(text: &str) -> Result<BTreeMap<String, VariantState>> {
         }
         out.insert(name.clone(), state);
     }
-    Ok(out)
+    Ok((out, seq))
 }
 
 fn version_state_invalid(s: &VariantState) -> bool {
@@ -1415,5 +1606,76 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join(MANIFEST_FILE), "{not json").unwrap();
         assert!(VariantRegistry::open(&dir).is_err());
+    }
+
+    #[test]
+    fn manifest_seq_is_monotone_and_survives_reopen() {
+        let dir = fresh_dir("pawd_test_reg_seq");
+        let reg = VariantRegistry::open(&dir).unwrap();
+        assert_eq!(reg.manifest_seq(), 0, "never-persisted registry starts at 0");
+        reg.publish("ft", tiny_model("ft")).unwrap();
+        let s1 = reg.manifest_seq();
+        assert!(s1 >= 1);
+        reg.publish("ft", tiny_model("ft")).unwrap();
+        reg.rollback("ft", None).unwrap();
+        let s2 = reg.manifest_seq();
+        assert!(s2 > s1, "every mutation bumps the sequence");
+        drop(reg);
+        let reg = VariantRegistry::open(&dir).unwrap();
+        assert_eq!(reg.manifest_seq(), s2, "sequence persists across reopen");
+        reg.pin("ft", 1).unwrap();
+        assert!(reg.manifest_seq() > s2);
+        // The on-disk manifest parses into the follower-facing view.
+        let text = std::fs::read_to_string(dir.join(MANIFEST_FILE)).unwrap();
+        let view = parse_manifest_view(&text).unwrap();
+        assert_eq!(view.manifest_seq, reg.manifest_seq());
+        assert_eq!(view.variants.len(), 1);
+        assert_eq!(view.variants[0].name, "ft");
+        assert_eq!(view.variants[0].active, 1);
+        assert!(view.variants[0].pinned);
+        assert_eq!(view.variants[0].versions.len(), 2);
+    }
+
+    #[test]
+    fn apply_replica_installs_records_and_moves_the_alias() {
+        // A "leader" registry publishes; its records are mirrored by hand
+        // into a follower directory holding copies of the artifact files.
+        let leader_dir = fresh_dir("pawd_test_reg_replica_l");
+        let leader = VariantRegistry::open(&leader_dir).unwrap();
+        leader.publish("ft", tiny_model("ft")).unwrap();
+        leader.publish("ft", tiny_model("ft")).unwrap();
+        let records = leader.list()[0].versions.clone();
+
+        let follower_dir = fresh_dir("pawd_test_reg_replica_f");
+        std::fs::create_dir_all(&follower_dir).unwrap();
+        for r in &records {
+            std::fs::copy(leader_dir.join(&r.file), follower_dir.join(&r.file)).unwrap();
+        }
+        let follower = VariantRegistry::open(&follower_dir).unwrap();
+        // The copied files were adopted; apply_replica must be idempotent
+        // over them and install the leader's alias.
+        follower.apply_replica("ft", &records, 2, false).unwrap();
+        assert_eq!(follower.resolve("ft").unwrap().version, 2);
+        assert_eq!(follower.list()[0].versions.len(), 2);
+        // Re-applying the same state is a no-op.
+        follower.apply_replica("ft", &records, 2, false).unwrap();
+        assert_eq!(follower.list()[0].versions.len(), 2);
+        // A leader rollback converges the follower without new records.
+        follower.apply_replica("ft", &records, 1, false).unwrap();
+        assert_eq!(follower.resolve("ft").unwrap().version, 1);
+        // A patch record arriving without its parent is rejected.
+        let orphan = VersionRecord {
+            version: 9,
+            parent: Some(7),
+            created_unix: 1,
+            file: "ft@9.pawd".into(),
+            kind: ArtifactKind::Delta,
+            bytes: 10,
+            retired: false,
+            patch: true,
+        };
+        let err =
+            follower.apply_replica("ft", &[orphan], 1, false).unwrap_err().to_string();
+        assert!(err.contains("chain parent"), "{err}");
     }
 }

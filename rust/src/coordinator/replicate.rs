@@ -1,0 +1,506 @@
+//! Patch-aware artifact replication between nodes — the seed of a serving
+//! fleet.
+//!
+//! A **follower** node mirrors a **leader**'s registry: it pulls the
+//! leader's JSON manifest (stamped with a monotonic `manifest_seq`), diffs
+//! it against its local [`VariantRegistry`], and fetches only the artifact
+//! files it is missing. Because the registry ships format-v3 **patch
+//! artifacts** (PR 4), a follower that already holds a variant's chain
+//! parent moves only the patch over the wire — BitDelta/DeltaZip's ~1/16
+//! compression applied *between* versions, so steady-state replication of a
+//! ~5%-changed publish costs a few percent of the consolidated bytes. Cold
+//! variants fall back to fetching their consolidated chain (the base full
+//! artifact plus any patches the leader still serves through).
+//!
+//! Safety: every fetched delta artifact is decoded and **whole-file
+//! crc-verified** before anything is committed, fetched patches must
+//! **compose** through [`chain::load_effective`] over their (local or
+//! just-fetched) parent chain, and the manifest commit
+//! ([`VariantRegistry::apply_replica`]) runs strictly after all of a
+//! variant's files are verified and in place. In-flight downloads live
+//! under a `.sync.tmp` suffix that neither the loader nor directory
+//! adoption will touch, so a crash mid-sync leaves either ignorable temp
+//! files or fully verified artifacts — never a manifest record pointing at
+//! a partial file.
+//!
+//! Transport is abstracted behind [`SyncTransport`]; [`FsTransport`] covers
+//! shared-filesystem and single-host multi-process topologies (and the
+//! tests/bench) without a network stack. Wire traffic is recorded in
+//! [`exec::counters`](crate::exec::counters) (`wire_bytes`/`wire_files`) so
+//! the replication bench can assert the patch-aware transfer structure.
+//!
+//! Followers are replicas: their registry directory must not take local
+//! publishes (a same-version disagreement with the leader fails the sync as
+//! "diverged"). Local *reads* — serving, cache warms, local gc of versions
+//! the leader retired — are all fine.
+
+use super::cache::VariantCache;
+use super::registry::{
+    live_file_versions, parse_manifest_view, ArtifactKind, ManifestView, VariantDesc,
+    VariantRegistry, VersionRecord, MANIFEST_FILE,
+};
+use crate::delta::chain::{self, ChainLink};
+use crate::delta::format::load_delta;
+use crate::delta::types::DeltaModel;
+use crate::exec::counters;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// How a follower reaches a leader's registry. Implementations move opaque
+/// bytes; all verification (crc, chain composition, manifest consistency)
+/// happens in the [`Replicator`] regardless of transport.
+pub trait SyncTransport: Send + Sync {
+    /// Human-readable peer description for logs/status.
+    fn describe(&self) -> String;
+
+    /// Fetch the leader's current manifest (`registry.json`) bytes.
+    fn fetch_manifest(&self) -> Result<Vec<u8>>;
+
+    /// Fetch the artifact file named `file` (a bare file name inside the
+    /// leader's registry directory) into `dest`. Returns the bytes moved.
+    fn fetch_file(&self, file: &str, dest: &Path) -> Result<u64>;
+}
+
+/// Filesystem/loopback transport: the leader's registry directory is
+/// directly readable (same host, NFS, or a synced mount). This is also what
+/// single-host multi-process setups and the tests use.
+pub struct FsTransport {
+    root: PathBuf,
+}
+
+impl FsTransport {
+    pub fn new(root: &Path) -> FsTransport {
+        FsTransport { root: root.to_path_buf() }
+    }
+}
+
+impl SyncTransport for FsTransport {
+    fn describe(&self) -> String {
+        format!("fs:{}", self.root.display())
+    }
+
+    fn fetch_manifest(&self) -> Result<Vec<u8>> {
+        let path = self.root.join(MANIFEST_FILE);
+        std::fs::read(&path).with_context(|| format!("fetching leader manifest {}", path.display()))
+    }
+
+    fn fetch_file(&self, file: &str, dest: &Path) -> Result<u64> {
+        let src = self.root.join(file);
+        // fs::copy streams (no whole-artifact buffer) and returns the bytes
+        // moved — cold syncs ship multi-MB consolidated artifacts.
+        std::fs::copy(&src, dest)
+            .with_context(|| format!("fetching artifact {}", src.display()))
+    }
+}
+
+/// Outcome of one [`Replicator::sync_once`] pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SyncReport {
+    /// The leader's manifest sequence number this pass observed.
+    pub leader_seq: u64,
+    /// `true` when the leader manifest carried nothing new (fast path when
+    /// the sequence number is unchanged since the last successful sync).
+    pub up_to_date: bool,
+    /// Variants whose local state changed (records installed, retired flags
+    /// mirrored, or alias moved).
+    pub variants_synced: usize,
+    /// Version records newly installed locally.
+    pub versions_installed: usize,
+    /// Artifact files fetched over the transport.
+    pub files_fetched: usize,
+    /// Of those, how many were patch artifacts (the headline metric: warm
+    /// followers should fetch *only* patches).
+    pub patch_files_fetched: usize,
+    /// Artifact bytes moved over the transport (manifest excluded).
+    pub artifact_bytes: u64,
+    /// Manifest bytes moved over the transport.
+    pub manifest_bytes: u64,
+    /// Synced variants whose cache warm-up failed. Warming is best-effort —
+    /// the records are committed either way and the variant simply
+    /// cold-loads on its first request — so a warm failure must not abort
+    /// the pass (the next sync would see the variant identical to the
+    /// leader and never retry the warm).
+    pub warm_failures: usize,
+}
+
+/// A follower's replication engine over one local registry and one
+/// transport to a leader. Stateless between passes except for the last
+/// successfully applied leader sequence number (the cheap "anything new?"
+/// check `--follow` mode polls on).
+pub struct Replicator {
+    registry: Arc<VariantRegistry>,
+    transport: Box<dyn SyncTransport>,
+    /// Last leader `manifest_seq` fully applied; `u64::MAX` = never synced.
+    last_applied_seq: AtomicU64,
+}
+
+impl Replicator {
+    pub fn new(registry: Arc<VariantRegistry>, transport: Box<dyn SyncTransport>) -> Replicator {
+        Replicator { registry, transport, last_applied_seq: AtomicU64::new(u64::MAX) }
+    }
+
+    /// The peer this replicator pulls from.
+    pub fn peer(&self) -> String {
+        self.transport.describe()
+    }
+
+    /// Seed the "anything new?" fast path with a leader sequence number a
+    /// previous (possibly dropped) Replicator already applied in full — the
+    /// server's admin plane builds a fresh Replicator per `PullFrom` and
+    /// carries the sequence across calls so no-op polls stay cheap.
+    pub fn resume_from(&self, applied_seq: u64) {
+        self.last_applied_seq.store(applied_seq, Ordering::SeqCst);
+    }
+
+    /// Pull the leader manifest, diff, fetch what is missing, verify and
+    /// commit. With `cache`, freshly synced variants are warmed on arrival —
+    /// a patch version composes onto the resident parent, so the follower's
+    /// first request after a sync hits resident weights whose marginal cost
+    /// was only what changed.
+    pub fn sync_once(&self, cache: Option<&VariantCache>) -> Result<SyncReport> {
+        let manifest_bytes = self.transport.fetch_manifest()?;
+        counters::record_wire_bytes(manifest_bytes.len() as u64);
+        let text = std::str::from_utf8(&manifest_bytes)
+            .context("leader manifest is not valid UTF-8")?;
+        let view: ManifestView = parse_manifest_view(text)
+            .with_context(|| format!("parsing leader manifest from {}", self.transport.describe()))?;
+        let mut report = SyncReport {
+            leader_seq: view.manifest_seq,
+            manifest_bytes: manifest_bytes.len() as u64,
+            ..Default::default()
+        };
+        // Sequence fast path: a leader manifest we already applied in full
+        // needs no diff. Sequence 0 (pre-replication manifest) always diffs.
+        if view.manifest_seq > 0
+            && self.last_applied_seq.load(Ordering::SeqCst) == view.manifest_seq
+        {
+            report.up_to_date = true;
+            return Ok(report);
+        }
+        let local: HashMap<String, VariantDesc> =
+            self.registry.list().into_iter().map(|d| (d.name.clone(), d)).collect();
+        let mut any_changed = false;
+        for leader in &view.variants {
+            let local_desc = local.get(&leader.name);
+            if !variant_differs(leader, local_desc) {
+                continue;
+            }
+            let (installed, fetched, patch_fetched, bytes) =
+                self.sync_variant(leader, local_desc, cache)?;
+            report.variants_synced += 1;
+            report.versions_installed += installed;
+            report.files_fetched += fetched;
+            report.patch_files_fetched += patch_fetched;
+            report.artifact_bytes += bytes;
+            any_changed = true;
+            // Warm-on-arrival, immediately after this variant's commit (not
+            // after the whole pass: a later variant's failed fetch must not
+            // leave an already-committed one cold — the next sync would see
+            // it identical to the leader and never warm it). Best-effort:
+            // the commit already landed, so a warm failure is reported, not
+            // fatal (the variant cold-loads on its first request). The
+            // version-addressed get composes a patch version onto the
+            // resident parent, so only the patch is read.
+            if let Some(cache) = cache {
+                if cache.get(&format!("{}@{}", leader.name, leader.active)).is_err() {
+                    report.warm_failures += 1;
+                }
+            }
+        }
+        report.up_to_date = !any_changed;
+        self.last_applied_seq.store(view.manifest_seq, Ordering::SeqCst);
+        Ok(report)
+    }
+
+    /// Sync one variant: fetch + verify every missing artifact file
+    /// (ascending version order, so chain parents always land before their
+    /// patches), then commit the leader's records and alias in one manifest
+    /// write. Returns `(records_installed, files_fetched, patch_files,
+    /// artifact_bytes)`.
+    fn sync_variant(
+        &self,
+        leader: &VariantDesc,
+        local: Option<&VariantDesc>,
+        cache: Option<&VariantCache>,
+    ) -> Result<(usize, usize, usize, u64)> {
+        let name = &leader.name;
+        let dir = self.registry.dir().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating follower registry dir {}", dir.display()))?;
+        let local_by_version: HashMap<u32, &VersionRecord> = local
+            .map(|d| d.versions.iter().map(|r| (r.version, r)).collect())
+            .unwrap_or_default();
+        // Planned post-sync record set (local ∪ leader), for chain walks
+        // over versions whose records are not committed yet.
+        let planned: HashMap<u32, &VersionRecord> = {
+            let mut m: HashMap<u32, &VersionRecord> = local_by_version.clone();
+            for rec in &leader.versions {
+                m.insert(rec.version, rec);
+            }
+            m
+        };
+        // Versions whose files must be on disk to serve: every non-retired
+        // version, plus every chain ancestor a live patch composes through
+        // (shared with the gc sweep, which pins the same set). Retired
+        // versions outside any live chain replicate as records only: their
+        // files would never be servable, a local gc would delete them
+        // immediately, and fetching them races leader-side gc unlinking the
+        // very same files.
+        let file_needed =
+            live_file_versions(leader.versions.iter(), |p| planned.get(&p).copied());
+        let mut installed = 0usize;
+        let mut fetched = 0usize;
+        let mut patch_fetched = 0usize;
+        let mut bytes = 0u64;
+        for rec in &leader.versions {
+            let need_file = !rec.file.is_empty() && file_needed.contains(&rec.version);
+            let need_fetch = match local_by_version.get(&rec.version) {
+                None => {
+                    installed += 1;
+                    need_file // tombstones/dead retired versions: record only
+                }
+                // The leader consolidated this version in place: the full
+                // file replaces the local patch.
+                Some(existing) => {
+                    need_file && existing.patch && !rec.patch && existing.file != rec.file
+                }
+            };
+            if !need_fetch {
+                continue;
+            }
+            ensure_bare_file_name(&rec.file)?;
+            // Resident direct parent as a composition hint: verifying a
+            // fetched patch then reads only the patch, not the whole parent
+            // chain from disk (the steady-state sync path).
+            let parent_hint: Option<Arc<DeltaModel>> = match (cache, rec.patch, rec.parent) {
+                (Some(c), true, Some(p)) => c.resident_delta(name, p),
+                _ => None,
+            };
+            let final_path = dir.join(&rec.file);
+            if final_path.exists() {
+                // Left by an interrupted sync (verified before rename) or a
+                // shared filesystem. Never commit it blind: re-verify in
+                // place, and fall through to a fresh fetch (atomic rename
+                // over it) if the verification fails.
+                if verify_fetched(&final_path, rec, name, &planned, &dir, parent_hint.as_deref())
+                    .is_ok()
+                {
+                    continue;
+                }
+            }
+            let tmp = dir.join(format!("{}.sync.tmp", rec.file));
+            let n = match self.transport.fetch_file(&rec.file, &tmp) {
+                Ok(n) => n,
+                Err(e) => {
+                    let _ = std::fs::remove_file(&tmp);
+                    return Err(e.context(format!("fetching '{name}@{}'", rec.version)));
+                }
+            };
+            counters::record_wire_bytes(n);
+            counters::record_wire_file();
+            if let Err(e) =
+                verify_fetched(&tmp, rec, name, &planned, &dir, parent_hint.as_deref())
+            {
+                let _ = std::fs::remove_file(&tmp);
+                return Err(e);
+            }
+            std::fs::rename(&tmp, &final_path)
+                .with_context(|| format!("installing fetched artifact {}", rec.file))?;
+            fetched += 1;
+            bytes += n;
+            if rec.patch {
+                patch_fetched += 1;
+            }
+        }
+        self.registry
+            .apply_replica(name, &leader.versions, leader.active, leader.pinned)
+            .with_context(|| format!("committing replicated state of '{name}'"))?;
+        Ok((installed, fetched, patch_fetched, bytes))
+    }
+}
+
+/// Whether the leader's view of a variant differs from the local one in any
+/// replicated dimension (record set, files, patch/retired flags, alias).
+fn variant_differs(leader: &VariantDesc, local: Option<&VariantDesc>) -> bool {
+    let Some(local) = local else { return true };
+    if leader.active != local.active || leader.pinned != local.pinned {
+        return true;
+    }
+    let local_by_version: HashMap<u32, &VersionRecord> =
+        local.versions.iter().map(|r| (r.version, r)).collect();
+    leader.versions.iter().any(|rec| match local_by_version.get(&rec.version) {
+        None => true,
+        Some(e) => {
+            // A leader tombstone only matters while the local record is
+            // still serving (retired flag mismatch); file presence is a
+            // local gc decision.
+            (!rec.file.is_empty() && e.file != rec.file)
+                || e.patch != rec.patch && !rec.file.is_empty()
+                || (rec.retired && !e.retired)
+        }
+    })
+}
+
+/// Verify a fetched artifact before it is renamed into the registry
+/// directory: decode + whole-file crc (delta artifacts), meta agreement
+/// with the leader record, and — for patches — composition through the
+/// planned parent chain (`resident_parent`, when it is the direct parent's
+/// effective model, keeps that composition to a single patch read).
+fn verify_fetched(
+    tmp: &Path,
+    rec: &VersionRecord,
+    name: &str,
+    planned: &HashMap<u32, &VersionRecord>,
+    dir: &Path,
+    resident_parent: Option<&DeltaModel>,
+) -> Result<()> {
+    match rec.kind {
+        ArtifactKind::Fp16 => {
+            let len = std::fs::metadata(tmp).map(|m| m.len()).unwrap_or(0);
+            if len == 0 || (rec.bytes > 0 && len != rec.bytes) {
+                bail!(
+                    "fetched fp16 '{name}@{}' is {len} bytes, leader manifest says {}",
+                    rec.version,
+                    rec.bytes
+                );
+            }
+            Ok(())
+        }
+        ArtifactKind::Delta => {
+            let model = load_delta(tmp)
+                .with_context(|| format!("verifying fetched '{name}@{}'", rec.version))?;
+            if model.meta.version != rec.version {
+                bail!(
+                    "fetched artifact for '{name}@{}' carries embedded version {} \
+                     (leader manifest and file out of sync)",
+                    rec.version,
+                    model.meta.version
+                );
+            }
+            if model.meta.is_patch != rec.patch {
+                bail!(
+                    "fetched artifact for '{name}@{}' patch flag disagrees with the \
+                     leader manifest",
+                    rec.version
+                );
+            }
+            if !rec.patch {
+                return Ok(());
+            }
+            // Compose the planned chain ending at this patch: the final
+            // link reads from the temp file, ancestors from the registry
+            // dir (committed earlier or installed earlier in this pass).
+            let mut links = vec![ChainLink {
+                version: rec.version,
+                path: tmp.to_path_buf(),
+                is_patch: true,
+            }];
+            let mut v = rec.parent;
+            while let Some(pv) = v {
+                let prec = planned.get(&pv).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "patch '{name}@{}' composes through v{pv}, which neither the \
+                         follower nor the leader manifest records",
+                        rec.version
+                    )
+                })?;
+                if prec.file.is_empty() {
+                    bail!(
+                        "patch '{name}@{}' composes through v{pv}, which was \
+                         garbage-collected on the leader",
+                        rec.version
+                    );
+                }
+                links.push(ChainLink {
+                    version: pv,
+                    path: dir.join(&prec.file),
+                    is_patch: prec.patch,
+                });
+                v = if prec.patch { prec.parent } else { None };
+                if links.len() > chain::HARD_CHAIN_BOUND {
+                    bail!("replicated chain of '{name}@{}' exceeds the backstop", rec.version);
+                }
+            }
+            links.reverse();
+            chain::load_effective(&links, resident_parent)
+                .with_context(|| {
+                    format!("composing fetched patch '{name}@{}' over its chain", rec.version)
+                })
+                .map(|_| ())
+        }
+    }
+}
+
+/// Reject artifact file names that could escape the registry directory.
+fn ensure_bare_file_name(file: &str) -> Result<()> {
+    if file.is_empty()
+        || file.contains('/')
+        || file.contains('\\')
+        || file.contains("..")
+        || file.starts_with('.')
+    {
+        bail!("leader manifest names unsafe artifact file '{file}'");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_file_names_enforced() {
+        assert!(ensure_bare_file_name("ft@1.pawd").is_ok());
+        assert!(ensure_bare_file_name("ft@2-full.pawd").is_ok());
+        for bad in ["", "../x.pawd", "a/b.pawd", "..", ".hidden", "c\\d.pawd"] {
+            assert!(ensure_bare_file_name(bad).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn variant_differs_detects_each_dimension() {
+        let rec = |version: u32, file: &str, patch: bool, retired: bool| VersionRecord {
+            version,
+            parent: None,
+            created_unix: 0,
+            file: file.to_string(),
+            kind: ArtifactKind::Delta,
+            bytes: 1,
+            retired,
+            patch,
+        };
+        let leader = VariantDesc {
+            name: "ft".into(),
+            active: 2,
+            pinned: false,
+            versions: vec![rec(1, "ft@1.pawd", false, false), rec(2, "ft@2.pawd", true, false)],
+        };
+        assert!(variant_differs(&leader, None), "unknown variant always syncs");
+        let synced = leader.clone();
+        assert!(!variant_differs(&leader, Some(&synced)), "identical state skips");
+        let mut rolled = synced.clone();
+        rolled.active = 1;
+        assert!(variant_differs(&leader, Some(&rolled)), "alias move syncs");
+        let mut missing = synced.clone();
+        missing.versions.pop();
+        assert!(variant_differs(&leader, Some(&missing)), "missing version syncs");
+        let mut retired_leader = leader.clone();
+        retired_leader.versions[0].retired = true;
+        retired_leader.active = 2;
+        assert!(
+            variant_differs(&retired_leader, Some(&synced)),
+            "leader-side retire syncs"
+        );
+        // A leader tombstone of a version the follower retired already does
+        // not force a pointless sync.
+        let mut tomb_leader = leader.clone();
+        tomb_leader.versions[0].file = String::new();
+        tomb_leader.versions[0].retired = true;
+        let mut tomb_local = synced.clone();
+        tomb_local.versions[0].retired = true;
+        assert!(!variant_differs(&tomb_leader, Some(&tomb_local)));
+    }
+}

@@ -85,6 +85,15 @@ pub enum AdminOp {
     Gc { variant: Option<String> },
     /// List all variants with their version histories.
     List,
+    /// Replication probe: the local registry's monotonic `manifest_seq` and
+    /// record counts (what a leader exposes, what a follower has applied).
+    SyncStatus,
+    /// Pull-replicate from a leader's registry directory (filesystem
+    /// transport): diff the leader manifest against the local registry,
+    /// fetch + verify missing artifacts (patches preferred when the chain
+    /// parent is already held), commit, and warm the synced versions into
+    /// the cache.
+    PullFrom { dir: PathBuf },
 }
 
 #[derive(Clone, Debug)]
@@ -109,6 +118,11 @@ pub enum AdminResp {
     Retired { variant: String, version: u32 },
     Gced { files_removed: usize, bytes_freed: u64 },
     Variants { variants: Vec<VariantDesc> },
+    /// Local replication state: manifest sequence number plus variant and
+    /// version record counts.
+    SyncStatus { manifest_seq: u64, variants: usize, versions: usize },
+    /// One pull-replication pass completed against `peer`.
+    Synced { peer: String, report: super::replicate::SyncReport },
 }
 
 /// Timing breakdown a response carries back (drives the latency

@@ -242,6 +242,25 @@ impl Client {
             other => Err(format!("unexpected list response {other:?}")),
         }
     }
+
+    /// Local replication state: `(manifest_seq, variants, version records)`.
+    pub fn sync_status(&self) -> Result<(u64, usize, usize), String> {
+        match self.admin(AdminOp::SyncStatus)? {
+            AdminResp::SyncStatus { manifest_seq, variants, versions } => {
+                Ok((manifest_seq, variants, versions))
+            }
+            other => Err(format!("unexpected sync-status response {other:?}")),
+        }
+    }
+
+    /// Pull-replicate once from a leader registry directory; synced
+    /// versions are warmed into the cache before this returns.
+    pub fn pull_from(&self, dir: &Path) -> Result<super::replicate::SyncReport, String> {
+        match self.admin(AdminOp::PullFrom { dir: dir.to_path_buf() })? {
+            AdminResp::Synced { report, .. } => Ok(report),
+            other => Err(format!("unexpected pull response {other:?}")),
+        }
+    }
 }
 
 impl Server {
@@ -258,16 +277,18 @@ impl Server {
         let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
         let work_rx = Arc::new(Mutex::new(work_rx));
 
+        let sync_seqs: Arc<SyncSeqs> = Arc::new(Mutex::new(HashMap::new()));
         let mut workers = Vec::new();
         for wid in 0..cfg.n_workers.max(1) {
             let work_rx = work_rx.clone();
             let cache = cache.clone();
             let metrics = metrics.clone();
             let engine = engine.clone();
+            let sync_seqs = sync_seqs.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("pawd-worker-{wid}"))
-                    .spawn(move || worker_loop(work_rx, cache, metrics, engine))
+                    .spawn(move || worker_loop(work_rx, cache, metrics, engine, sync_seqs))
                     .expect("spawn worker"),
             );
         }
@@ -434,6 +455,7 @@ fn worker_loop(
     cache: Arc<VariantCache>,
     metrics: Arc<Metrics>,
     engine: Engine,
+    sync_seqs: Arc<SyncSeqs>,
 ) {
     // One Transformer per worker (RoPE tables etc.) for the native engine.
     let tf = Transformer::new(cache.base().cfg());
@@ -453,7 +475,9 @@ fn worker_loop(
         match item {
             WorkItem::Admin(req) => {
                 let result = match &req.payload {
-                    Payload::Admin(op) => run_admin(op, &cache, &metrics).map(RespBody::Admin),
+                    Payload::Admin(op) => {
+                        run_admin(op, &cache, &metrics, &sync_seqs).map(RespBody::Admin)
+                    }
                     // Data ops can only land here via the reserved
                     // pseudo-variant names; reject them instead of
                     // answering with a surprise body.
@@ -698,12 +722,18 @@ fn score_plan_native(
         .collect()
 }
 
+/// Last applied leader `manifest_seq` per leader directory — shared across
+/// workers so repeated `PullFrom` polls of an unchanged leader take the
+/// cheap fast path.
+type SyncSeqs = Mutex<HashMap<std::path::PathBuf, u64>>;
+
 /// Execute one control-plane operation against the registry/cache/metrics —
 /// no engine, no variant queue.
 fn run_admin(
     op: &AdminOp,
     cache: &VariantCache,
     metrics: &Metrics,
+    sync_seqs: &SyncSeqs,
 ) -> Result<AdminResp, String> {
     let registry = cache.store().registry();
     match op {
@@ -728,8 +758,13 @@ fn run_admin(
         }
         AdminOp::PublishIncremental { variant, artifact, parent } => {
             let delta = load_validated_artifact(artifact, cache)?;
+            // Resident-parent hint: diffing against an already-composed
+            // cache entry skips re-reading the consolidated parent chain
+            // from disk — publish cost stays proportional to the change.
             let outcome = registry
-                .publish_incremental(variant, delta, *parent)
+                .publish_incremental_hinted(variant, delta, *parent, |v| {
+                    cache.resident_delta(variant, v)
+                })
                 .map_err(|e| e.to_string())?;
             metrics.record_publish();
             // Warming a patch version composes onto the resident parent, so
@@ -778,6 +813,31 @@ fn run_admin(
             })
         }
         AdminOp::List => Ok(AdminResp::Variants { variants: registry.list() }),
+        AdminOp::SyncStatus => {
+            let descs = registry.list();
+            Ok(AdminResp::SyncStatus {
+                manifest_seq: registry.manifest_seq(),
+                variants: descs.len(),
+                versions: descs.iter().map(|d| d.versions.len()).sum(),
+            })
+        }
+        AdminOp::PullFrom { dir } => {
+            use super::replicate::{FsTransport, Replicator};
+            let replicator =
+                Replicator::new(registry.clone(), Box::new(FsTransport::new(dir)));
+            // The replicator is per-call, so carry the last applied leader
+            // sequence across calls: repeated polls of an unchanged leader
+            // take the manifest_seq fast path instead of re-diffing the
+            // whole registry every time.
+            if let Some(seq) = sync_seqs.lock().unwrap().get(dir).copied() {
+                replicator.resume_from(seq);
+            }
+            let report =
+                replicator.sync_once(Some(cache)).map_err(|e| format!("{e:#}"))?;
+            sync_seqs.lock().unwrap().insert(dir.clone(), report.leader_seq);
+            metrics.set_residency(cache.residency());
+            Ok(AdminResp::Synced { peer: replicator.peer(), report })
+        }
     }
 }
 

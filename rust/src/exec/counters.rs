@@ -21,6 +21,8 @@ static BASE_GEMMS: AtomicU64 = AtomicU64::new(0);
 static LOADER_BYTES: AtomicU64 = AtomicU64::new(0);
 static MODULE_READS: AtomicU64 = AtomicU64::new(0);
 static MODULES_INHERITED: AtomicU64 = AtomicU64::new(0);
+static WIRE_BYTES: AtomicU64 = AtomicU64::new(0);
+static WIRE_FILES: AtomicU64 = AtomicU64::new(0);
 
 /// Record one pass of activations through a resident base/dense weight
 /// matrix.
@@ -43,6 +45,19 @@ pub(crate) fn record_module_reads(n: u64) {
 /// (chain composition reused the `Arc` instead of touching disk).
 pub(crate) fn record_modules_inherited(n: u64) {
     MODULES_INHERITED.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Record `n` bytes moved over a replication transport (manifest fetches
+/// and artifact fetches both count — the replication bench asserts a
+/// patch-aware sync ships a small fraction of the consolidated bytes
+/// through this counter).
+pub(crate) fn record_wire_bytes(n: u64) {
+    WIRE_BYTES.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Record one artifact file fetched over a replication transport.
+pub(crate) fn record_wire_file() {
+    WIRE_FILES.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Total base GEMMs since process start (or the last [`reset`]).
@@ -68,12 +83,24 @@ pub fn modules_inherited() -> u64 {
     MODULES_INHERITED.load(Ordering::Relaxed)
 }
 
+/// Total bytes moved over replication transports (manifests + artifacts).
+pub fn wire_bytes() -> u64 {
+    WIRE_BYTES.load(Ordering::Relaxed)
+}
+
+/// Total artifact files fetched over replication transports.
+pub fn wire_files() -> u64 {
+    WIRE_FILES.load(Ordering::Relaxed)
+}
+
 /// Reset all counters to zero (benches/tests only).
 pub fn reset() {
     BASE_GEMMS.store(0, Ordering::Relaxed);
     LOADER_BYTES.store(0, Ordering::Relaxed);
     MODULE_READS.store(0, Ordering::Relaxed);
     MODULES_INHERITED.store(0, Ordering::Relaxed);
+    WIRE_BYTES.store(0, Ordering::Relaxed);
+    WIRE_FILES.store(0, Ordering::Relaxed);
 }
 
 #[cfg(test)]

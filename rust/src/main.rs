@@ -32,6 +32,13 @@ USAGE:
   pawd rollback <variant_dir> <name> [version]   flip a variant's alias back
   pawd versions <variant_dir>                    list variants + version histories
   pawd gc <variant_dir> [name]                   delete retired versions' artifact files
+  pawd replicate <variant_dir> --from <leader_dir> [--follow] [--interval-ms N]
+                                                 pull-replicate a leader registry into
+                                                 <variant_dir>: fetch only missing
+                                                 artifacts (patches when the chain parent
+                                                 is already held), verify crcs, commit;
+                                                 --follow polls the leader's manifest_seq
+                                                 (default every 500ms) until interrupted
   pawd bench-diff <baseline.json> <current.json> [--max-regression 0.20] [--promote]
                                                  diff two BENCH_*.json files (CI perf
                                                  gate); --promote overwrites the baseline
@@ -59,6 +66,7 @@ fn main() -> Result<()> {
         Some("rollback") => cmd_rollback(&args[1..]),
         Some("versions") => cmd_versions(&args[1..]),
         Some("gc") => cmd_gc(&args[1..]),
+        Some("replicate") => cmd_replicate(&args[1..]),
         Some("bench-diff") => cmd_bench_diff(&args[1..]),
         Some("presets") => {
             for p in ["tiny", "llama-mini", "qwen-mini", "phi-mini", "base-110m"] {
@@ -260,6 +268,89 @@ fn cmd_gc(args: &[String]) -> Result<()> {
         fmt_bytes(report.bytes_freed)
     );
     Ok(())
+}
+
+fn cmd_replicate(args: &[String]) -> Result<()> {
+    use pawd::coordinator::{FsTransport, Replicator, VariantRegistry};
+    let mut positional: Vec<&String> = Vec::new();
+    let mut from: Option<PathBuf> = None;
+    let mut follow = false;
+    let mut interval_ms: u64 = 500;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--from" => {
+                from = Some(PathBuf::from(
+                    args.get(i + 1).context("--from needs a leader directory")?,
+                ));
+                i += 2;
+            }
+            "--follow" => {
+                follow = true;
+                i += 1;
+            }
+            "--interval-ms" => {
+                interval_ms = args
+                    .get(i + 1)
+                    .context("--interval-ms needs a value")?
+                    .parse()
+                    .context("bad --interval-ms value")?;
+                i += 2;
+            }
+            _ => {
+                positional.push(&args[i]);
+                i += 1;
+            }
+        }
+    }
+    let dir = PathBuf::from(positional.first().copied().context("missing <variant_dir>")?);
+    let from = from.context("missing --from <leader_dir>")?;
+    if from == dir {
+        bail!("leader and follower directories must differ");
+    }
+    let registry = Arc::new(VariantRegistry::open(&dir)?);
+    let replicator = Replicator::new(registry.clone(), Box::new(FsTransport::new(&from)));
+    // This CLI administers an *offline* follower directory (same rule as
+    // publish/gc): no server, so there is no cache to warm.
+    loop {
+        // In follow mode a transient failure (leader gc racing a fetch, a
+        // shared-fs blip) must not kill the daemon — report and retry at
+        // the next tick; completed variants stay committed either way.
+        let report = match replicator.sync_once(None) {
+            Ok(r) => r,
+            Err(e) if follow => {
+                eprintln!("sync from {} failed (will retry): {e:#}", replicator.peer());
+                std::thread::sleep(std::time::Duration::from_millis(interval_ms.max(10)));
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        if report.up_to_date {
+            if !follow {
+                println!(
+                    "up to date with {} (leader manifest_seq {})",
+                    replicator.peer(),
+                    report.leader_seq
+                );
+            }
+        } else {
+            println!(
+                "synced {} variant(s) from {}: {} version(s) installed, {} file(s) / {} \
+                 fetched ({} patch artifact(s)); local manifest_seq {}",
+                report.variants_synced,
+                replicator.peer(),
+                report.versions_installed,
+                report.files_fetched,
+                fmt_bytes(report.artifact_bytes),
+                report.patch_files_fetched,
+                registry.manifest_seq(),
+            );
+        }
+        if !follow {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval_ms.max(10)));
+    }
 }
 
 fn cmd_bench_diff(args: &[String]) -> Result<()> {

@@ -2,8 +2,48 @@
 //! bucketing, the AOT train step, and the logit-matching gradient program.
 
 use super::engine::{HostTensor, RuntimeHandle};
+use super::manifest::ProgramSpec;
 use crate::tensor::Tensor2;
 use anyhow::{anyhow, bail, Result};
+
+/// Typed errors for manifest/program-spec problems the runtime wrappers can
+/// hit. These used to be `unwrap()` panics on the engine thread — a manifest
+/// entry missing its `batch`/`seq` bucket dims must fail the *request*, not
+/// kill the worker.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RuntimeError {
+    /// A program spec is missing the `batch`/`seq` bucket metadata its kind
+    /// requires (hand-edited or truncated `manifest.json`).
+    MissingBucketDims { program: String },
+    /// A program spec's declared inputs don't match what its kind requires.
+    MalformedSpec { program: String, what: String },
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::MissingBucketDims { program } => write!(
+                f,
+                "program '{program}' has no batch/seq bucket dims in the manifest \
+                 (corrupt or hand-edited manifest.json)"
+            ),
+            RuntimeError::MalformedSpec { program, what } => {
+                write!(f, "program '{program}' has a malformed spec: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// The `batch`/`seq` bucket dims of a spec, as a typed error instead of a
+/// panic when the manifest entry lacks them.
+fn bucket_dims(spec: &ProgramSpec) -> Result<(usize, usize)> {
+    match (spec.batch, spec.seq) {
+        (Some(b), Some(t)) => Ok((b, t)),
+        _ => Err(RuntimeError::MissingBucketDims { program: spec.name.clone() }.into()),
+    }
+}
 
 /// Run a batch of variable-length sequences through the smallest AOT
 /// forward bucket that fits; returns per-sequence `[len, vocab]` logits.
@@ -28,7 +68,7 @@ pub fn forward_logits(
             anyhow!("no forward bucket for config '{config}' batch {} seq {max_len}", seqs.len())
         })?
         .clone();
-    let (b, t) = (spec.batch.unwrap(), spec.seq.unwrap());
+    let (b, t) = bucket_dims(&spec)?;
     let mut tokens = vec![0i32; b * t];
     for (i, s) in seqs.iter().enumerate() {
         for (j, &tok) in s.iter().enumerate() {
@@ -93,7 +133,10 @@ pub fn train_step(
         .find_kind("train_step", config)
         .ok_or_else(|| anyhow!("no train_step program for '{config}'"))?
         .clone();
-    let (b, t1) = (spec.batch.unwrap(), spec.seq.unwrap() + 1);
+    let (b, t1) = {
+        let (b, t) = bucket_dims(&spec)?;
+        (b, t + 1)
+    };
     if windows.len() != b {
         bail!("train bucket batch {b} != {} windows", windows.len());
     }
@@ -152,11 +195,19 @@ pub fn lmgrad(
         .find_kind("lmgrad", config)
         .ok_or_else(|| anyhow!("no lmgrad program for '{config}'"))?
         .clone();
-    let (b, t) = (spec.batch.unwrap(), spec.seq.unwrap());
+    let (b, t) = bucket_dims(&spec)?;
     if seqs.len() != b {
         bail!("lmgrad bucket batch {b} != {} seqs", seqs.len());
     }
-    let vocab = spec.inputs[2].shape[2];
+    let vocab = spec
+        .inputs
+        .get(2)
+        .and_then(|t| t.shape.get(2))
+        .copied()
+        .ok_or_else(|| RuntimeError::MalformedSpec {
+            program: spec.name.clone(),
+            what: "teacher-logits input must be rank-3 [B, T, V]".into(),
+        })?;
     if teacher_logits.len() != b * t * vocab {
         bail!("teacher logits len {} != {}", teacher_logits.len(), b * t * vocab);
     }
@@ -214,6 +265,39 @@ pub fn delta_apply_xla(
         .ok_or_else(|| anyhow!("no output"))?
         .into_f32()?;
     Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(batch: Option<usize>, seq: Option<usize>) -> ProgramSpec {
+        ProgramSpec {
+            name: "fwd_test".into(),
+            file: std::path::PathBuf::from("fwd_test.hlo.txt"),
+            inputs: vec![],
+            outputs: vec![],
+            kind: "forward".into(),
+            config: Some("tiny".into()),
+            batch,
+            seq,
+            axis: None,
+        }
+    }
+
+    #[test]
+    fn missing_bucket_dims_is_a_typed_error_not_a_panic() {
+        assert_eq!(bucket_dims(&spec(Some(4), Some(64))).unwrap(), (4, 64));
+        for (b, t) in [(None, Some(64)), (Some(4), None), (None, None)] {
+            let err = bucket_dims(&spec(b, t)).unwrap_err();
+            let typed = err.downcast_ref::<RuntimeError>().expect("typed RuntimeError");
+            assert_eq!(
+                *typed,
+                RuntimeError::MissingBucketDims { program: "fwd_test".into() }
+            );
+            assert!(err.to_string().contains("batch/seq"), "{err}");
+        }
+    }
 }
 
 /// Fused delta-GEMM through the AOT kernel artifact.

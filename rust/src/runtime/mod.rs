@@ -10,6 +10,6 @@ pub mod api;
 pub mod engine;
 pub mod manifest;
 
-pub use api::{forward_logits, lmgrad, train_step, TrainState};
+pub use api::{forward_logits, lmgrad, train_step, RuntimeError, TrainState};
 pub use engine::{start, HostTensor, RuntimeHandle};
 pub use manifest::Manifest;

@@ -45,14 +45,34 @@ impl Summary {
         let n = samples.len();
         let mean = samples.iter().sum::<f64>() / n as f64;
         let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
-        let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // A NaN that sneaks into a metrics sample (e.g. a 0/0 rate) must not
+        // panic the percentile sort — and must not displace the finite order
+        // statistics either (total_cmp alone would sort sign-bit NaNs, the
+        // kind x86 0/0 actually produces, to the FRONT, shifting min/p50).
+        // Order statistics are computed over the non-NaN samples; mean/std
+        // keep the full sample and go NaN-poisoned, which is the visible
+        // "something upstream is broken" signal.
+        let mut sorted: Vec<f64> =
+            samples.iter().copied().filter(|x| !x.is_nan()).collect();
+        sorted.sort_by(f64::total_cmp);
+        if sorted.is_empty() {
+            return Summary {
+                n,
+                mean,
+                std: var.sqrt(),
+                min: f64::NAN,
+                max: f64::NAN,
+                p50: f64::NAN,
+                p90: f64::NAN,
+                p99: f64::NAN,
+            };
+        }
         Summary {
             n,
             mean,
             std: var.sqrt(),
             min: sorted[0],
-            max: sorted[n - 1],
+            max: sorted[sorted.len() - 1],
             p50: percentile_sorted(&sorted, 0.50),
             p90: percentile_sorted(&sorted, 0.90),
             p99: percentile_sorted(&sorted, 0.99),
@@ -219,5 +239,24 @@ mod tests {
     fn empty_summary_is_safe() {
         let s = Summary::of(&[]);
         assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_the_percentile_sort() {
+        // NaN latencies (e.g. a 0/0 rate upstream) must degrade gracefully:
+        // order statistics come from the finite samples regardless of the
+        // NaN's sign bit (x86 0/0 produces a *negative* NaN, which
+        // total_cmp alone would sort to the front), while mean goes
+        // NaN-poisoned as the upstream-breakage signal.
+        let s = Summary::of(&[3.0, f64::NAN, 1.0, -f64::NAN, 2.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0, "negative NaN must not displace the finite minimum");
+        assert_eq!(s.max, 3.0, "positive NaN must not displace the finite maximum");
+        assert_eq!(s.p50, 2.0, "median of the finite samples [1, 2, 3]");
+        assert!(s.mean.is_nan(), "mean keeps the poison as the visible signal");
+        // All-NaN input is also panic-free.
+        let all_nan = Summary::of(&[f64::NAN, f64::NAN]);
+        assert_eq!(all_nan.n, 2);
+        assert!(all_nan.p50.is_nan() && all_nan.min.is_nan());
     }
 }

@@ -1,0 +1,47 @@
+//! Shared helpers for the integration tests. Each test target pulls this in
+//! with `mod common;` (cargo only builds top-level `tests/*.rs` as targets,
+//! so this directory is plain shared code, like `benches/bench_common`).
+
+#![allow(dead_code)]
+
+use pawd::delta::pack::PackedMask;
+use pawd::delta::types::{Axis, DeltaModel, DeltaModule};
+use pawd::model::FlatParams;
+use pawd::util::rng::Rng;
+use std::path::PathBuf;
+
+pub fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A full delta over every patchable module of `base`, content seeded.
+/// `axes` rotates per (seed, module): pass a single axis for deterministic
+/// single-axis layouts (replication tests) or several for mixed-axis
+/// coverage (chain tests).
+pub fn seeded_full(base: &FlatParams, variant: &str, seed: u64, axes: &[Axis]) -> DeltaModel {
+    let cfg = base.cfg();
+    let modules: Vec<DeltaModule> = base
+        .layout
+        .patchable_modules()
+        .iter()
+        .enumerate()
+        .map(|(i, &id)| {
+            let (rows, cols) = id.kind.shape(cfg);
+            let mut r = Rng::new(seed.wrapping_mul(613).wrapping_add(i as u64));
+            let delta: Vec<f32> = (0..rows * cols).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let axis = axes[(seed as usize + i) % axes.len()];
+            DeltaModule {
+                id,
+                mask: PackedMask::pack(&delta, rows, cols),
+                axis,
+                scales: (0..axis.n_scales(rows, cols))
+                    .map(|_| r.uniform_in(0.005, 0.05))
+                    .collect(),
+            }
+        })
+        .collect();
+    DeltaModel::new(variant, cfg.name.clone(), modules)
+}

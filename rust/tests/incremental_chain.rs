@@ -3,52 +3,24 @@
 //! warming composes from the resident parent, and pre-v3 artifacts still
 //! serve through the v3 reader.
 
+mod common;
+
+use common::fresh_dir;
 use pawd::coordinator::{VariantCache, VariantRegistry, VariantStore};
 use pawd::delta::format::{load_delta, save_delta_v2_bytes};
-use pawd::delta::pack::PackedMask;
-use pawd::delta::types::{ArtifactMeta, Axis, DeltaModel, DeltaModule};
+use pawd::delta::types::{ArtifactMeta, Axis, DeltaModel};
 use pawd::exec::{ExecMode, PackedVariant, VariantWeights};
 use pawd::model::config::ModelConfig;
 use pawd::model::{FlatParams, Transformer};
 use pawd::util::f16::encode_f16_slice;
 use pawd::util::prop::check;
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-fn fresh_dir(name: &str) -> PathBuf {
-    let dir = std::env::temp_dir().join(name);
-    let _ = std::fs::remove_dir_all(&dir);
-    std::fs::create_dir_all(&dir).unwrap();
-    dir
-}
-
-/// A full delta over every patchable module of `base`, content seeded.
+/// Mixed-axis seeded delta (axis coverage across Row/Col/Scalar/Group).
 fn seeded_full(base: &FlatParams, seed: u64) -> DeltaModel {
-    use pawd::util::rng::Rng;
-    let cfg = base.cfg();
     let axes = [Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(3)];
-    let modules: Vec<DeltaModule> = base
-        .layout
-        .patchable_modules()
-        .iter()
-        .enumerate()
-        .map(|(i, &id)| {
-            let (rows, cols) = id.kind.shape(cfg);
-            let mut r = Rng::new(seed.wrapping_mul(131).wrapping_add(i as u64));
-            let delta: Vec<f32> = (0..rows * cols).map(|_| r.normal_f32(0.0, 1.0)).collect();
-            let axis = axes[(seed as usize + i) % axes.len()];
-            DeltaModule {
-                id,
-                mask: PackedMask::pack(&delta, rows, cols),
-                axis,
-                scales: (0..axis.n_scales(rows, cols))
-                    .map(|_| r.uniform_in(0.005, 0.05))
-                    .collect(),
-            }
-        })
-        .collect();
-    DeltaModel::new("ft", cfg.name.clone(), modules)
+    common::seeded_full(base, "ft", seed, &axes)
 }
 
 fn assert_packed_bytes_eq(a: &DeltaModel, b: &DeltaModel, ctx: &str) -> Result<(), String> {

@@ -1,0 +1,356 @@
+//! Multi-node replication integration: follower cold-sync (consolidated
+//! fetch), warm-sync (patch-only fetch with the parent resident), crash
+//! mid-sync (a partial file is never committed to the manifest), leader
+//! rollback/retire convergence, and the server admin plane's `PullFrom`
+//! warming synced versions into the cache.
+//!
+//! Wire accounting is asserted through each pass's [`SyncReport`] (per-call,
+//! race-free); the `replication_sync` bench asserts the same structure
+//! through the global `exec::counters` wire gauges in a single process.
+
+mod common;
+
+use common::fresh_dir;
+use pawd::coordinator::{
+    AdminOp, Engine, FsTransport, Replicator, Server, ServerConfig, SyncTransport,
+    VariantRegistry, VariantStore,
+};
+use pawd::delta::types::{Axis, DeltaModel};
+use pawd::exec::ExecMode;
+use pawd::model::config::ModelConfig;
+use pawd::model::{FlatParams, Transformer};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Row-axis seeded delta (deterministic single-axis layout).
+fn seeded_full(base: &FlatParams, variant: &str, seed: u64) -> DeltaModel {
+    common::seeded_full(base, variant, seed, &[Axis::Row])
+}
+
+/// `model` with module `k` replaced by freshly seeded content.
+fn perturb_one(model: &DeltaModel, base: &FlatParams, k: usize, seed: u64) -> DeltaModel {
+    let mut out = model.clone();
+    let fresh = seeded_full(base, &model.variant, seed);
+    out.modules[k] = fresh.modules[k].clone();
+    out
+}
+
+/// Bitwise logits of `name` (active version) served fused from `dir`.
+fn logits_of(base: &Arc<FlatParams>, dir: &Path, name: &str, tokens: &[u8]) -> Vec<u32> {
+    let store = VariantStore::new(base.clone(), dir).with_mode(ExecMode::Fused);
+    let tf = Transformer::new(base.cfg());
+    let loaded = store.load(name).unwrap();
+    tf.forward_one(&loaded.weights, tokens).data.iter().map(|x| x.to_bits()).collect()
+}
+
+fn file_size(path: &Path) -> u64 {
+    std::fs::metadata(path).map(|m| m.len()).unwrap_or(0)
+}
+
+#[test]
+fn cold_sync_replicates_chains_and_logits_match_bitwise() {
+    let leader_dir = fresh_dir("pawd_itest_repl_cold_leader");
+    let follower_dir = fresh_dir("pawd_itest_repl_cold_follower");
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 11));
+    let leader = VariantRegistry::open(&leader_dir).unwrap();
+    // "ft": full v1 + patch v2 (a live chain); "other": a lone full v1.
+    let v1 = seeded_full(&base, "ft", 1);
+    leader.publish_incremental("ft", v1.clone(), None).unwrap();
+    let v2 = perturb_one(&v1, &base, 2, 99);
+    let out2 = leader.publish_incremental("ft", v2, None).unwrap();
+    assert!(out2.patch, "single-module change must ship as a patch");
+    leader.publish("other", seeded_full(&base, "other", 7)).unwrap();
+
+    let follower = Arc::new(VariantRegistry::open(&follower_dir).unwrap());
+    let repl = Replicator::new(follower.clone(), Box::new(FsTransport::new(&leader_dir)));
+    let report = repl.sync_once(None).unwrap();
+    assert!(!report.up_to_date);
+    assert_eq!(report.variants_synced, 2);
+    assert_eq!(report.versions_installed, 3);
+    assert_eq!(report.files_fetched, 3, "cold sync fetches the whole chain");
+    assert_eq!(report.patch_files_fetched, 1);
+    assert!(report.artifact_bytes > 0 && report.manifest_bytes > 0);
+    assert_eq!(report.leader_seq, leader.manifest_seq());
+
+    // The follower resolves the same state the leader serves.
+    let r = follower.resolve("ft").unwrap();
+    assert_eq!((r.version, r.patch, r.parent), (2, true, Some(1)));
+    assert_eq!(follower.resolve("other").unwrap().version, 1);
+    // Post-sync eval logits are bitwise-equal for every replicated variant.
+    let tokens: Vec<u8> = (0..12u8).map(|t| t.wrapping_mul(19) % 200 + 10).collect();
+    for name in ["ft", "ft@1", "ft@2", "other"] {
+        assert_eq!(
+            logits_of(&base, &leader_dir, name, &tokens),
+            logits_of(&base, &follower_dir, name, &tokens),
+            "leader and follower must serve bitwise-identical logits for '{name}'"
+        );
+    }
+    // A second pass is a pure no-op (manifest_seq fast path).
+    let again = repl.sync_once(None).unwrap();
+    assert!(again.up_to_date);
+    assert_eq!(again.files_fetched, 0);
+    assert_eq!(again.artifact_bytes, 0);
+}
+
+#[test]
+fn warm_sync_fetches_only_the_patch() {
+    let leader_dir = fresh_dir("pawd_itest_repl_warm_leader");
+    let follower_dir = fresh_dir("pawd_itest_repl_warm_follower");
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 13));
+    let leader = VariantRegistry::open(&leader_dir).unwrap();
+    let v1 = seeded_full(&base, "ft", 21);
+    let full = leader.publish_incremental("ft", v1.clone(), None).unwrap();
+
+    let follower = Arc::new(VariantRegistry::open(&follower_dir).unwrap());
+    let repl = Replicator::new(follower.clone(), Box::new(FsTransport::new(&leader_dir)));
+    repl.sync_once(None).unwrap();
+    assert_eq!(follower.resolve("ft").unwrap().version, 1);
+
+    // Leader ships a patch; the follower holds the chain parent, so the
+    // second sync moves ONLY the patch bytes.
+    let v2 = perturb_one(&v1, &base, 1, 555);
+    let out = leader.publish_incremental("ft", v2, None).unwrap();
+    assert!(out.patch);
+    let report = repl.sync_once(None).unwrap();
+    assert_eq!(report.files_fetched, 1, "warm sync must fetch the patch only");
+    assert_eq!(report.patch_files_fetched, 1);
+    assert_eq!(
+        report.artifact_bytes, out.bytes,
+        "wire bytes must equal the patch artifact exactly"
+    );
+    assert!(
+        report.artifact_bytes < full.bytes / 2,
+        "patch transfer ({}) must be a fraction of the consolidated artifact ({})",
+        report.artifact_bytes,
+        full.bytes
+    );
+    let r = follower.resolve("ft").unwrap();
+    assert_eq!((r.version, r.patch), (2, true));
+    let tokens: Vec<u8> = (0..10u8).map(|t| t.wrapping_mul(31) % 200 + 10).collect();
+    assert_eq!(
+        logits_of(&base, &leader_dir, "ft", &tokens),
+        logits_of(&base, &follower_dir, "ft", &tokens),
+    );
+
+    // Leader consolidates v2 in place: the follower swaps to the full file
+    // and drops its superseded patch copy.
+    let patch_file = follower_dir.join(&follower.list()[0].versions[1].file);
+    leader.consolidate("ft", Some(2)).unwrap();
+    let report = repl.sync_once(None).unwrap();
+    assert_eq!(report.files_fetched, 1);
+    assert_eq!(report.patch_files_fetched, 0);
+    let r = follower.resolve("ft").unwrap();
+    assert_eq!((r.version, r.patch), (2, false));
+    assert!(!patch_file.exists(), "superseded patch file must be unlinked");
+    assert_eq!(
+        logits_of(&base, &leader_dir, "ft", &tokens),
+        logits_of(&base, &follower_dir, "ft", &tokens),
+    );
+}
+
+/// Transport that truncates artifact payloads mid-file (a dropped
+/// connection) or flips a bit (corruption in flight).
+struct FaultyTransport {
+    inner: FsTransport,
+    mode: FaultMode,
+}
+
+enum FaultMode {
+    TruncateArtifacts,
+    CorruptArtifacts,
+}
+
+impl SyncTransport for FaultyTransport {
+    fn describe(&self) -> String {
+        format!("faulty({})", self.inner.describe())
+    }
+
+    fn fetch_manifest(&self) -> anyhow::Result<Vec<u8>> {
+        self.inner.fetch_manifest()
+    }
+
+    fn fetch_file(&self, file: &str, dest: &Path) -> anyhow::Result<u64> {
+        let n = self.inner.fetch_file(file, dest)?;
+        let mut bytes = std::fs::read(dest)?;
+        match self.mode {
+            FaultMode::TruncateArtifacts => {
+                bytes.truncate(bytes.len() / 2);
+                std::fs::write(dest, &bytes)?;
+                anyhow::bail!("connection reset mid-transfer of '{file}'");
+            }
+            FaultMode::CorruptArtifacts => {
+                let mid = bytes.len() / 2;
+                bytes[mid] ^= 0x40;
+                std::fs::write(dest, &bytes)?;
+                Ok(n)
+            }
+        }
+    }
+}
+
+#[test]
+fn crash_mid_sync_never_commits_a_partial_file() {
+    let leader_dir = fresh_dir("pawd_itest_repl_crash_leader");
+    let follower_dir = fresh_dir("pawd_itest_repl_crash_follower");
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 17));
+    let leader = VariantRegistry::open(&leader_dir).unwrap();
+    leader.publish("ft", seeded_full(&base, "ft", 31)).unwrap();
+
+    for mode in [FaultMode::TruncateArtifacts, FaultMode::CorruptArtifacts] {
+        let follower = Arc::new(VariantRegistry::open(&follower_dir).unwrap());
+        let repl = Replicator::new(
+            follower.clone(),
+            Box::new(FaultyTransport { inner: FsTransport::new(&leader_dir), mode }),
+        );
+        let err = repl.sync_once(None).unwrap_err().to_string();
+        assert!(!err.is_empty());
+        // Nothing committed: the variant does not resolve, no artifact file
+        // and no temp debris were left in the follower directory.
+        assert!(follower.resolve("ft").is_err(), "partial sync must not commit");
+        let leftovers: Vec<String> = std::fs::read_dir(&follower_dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .map(|e| e.file_name().to_string_lossy().into_owned())
+                    .filter(|n| n != "registry.json")
+                    .collect()
+            })
+            .unwrap_or_default();
+        assert!(leftovers.is_empty(), "crashed sync left {leftovers:?}");
+        // A restart sees the same clean state (the manifest, if one was
+        // written at all, records no versions).
+        let reopened = VariantRegistry::open(&follower_dir).unwrap();
+        assert!(reopened.resolve("ft").is_err());
+    }
+
+    // The retry over a healthy transport succeeds from the same state.
+    let follower = Arc::new(VariantRegistry::open(&follower_dir).unwrap());
+    let repl = Replicator::new(follower.clone(), Box::new(FsTransport::new(&leader_dir)));
+    let report = repl.sync_once(None).unwrap();
+    assert_eq!(report.files_fetched, 1);
+    assert_eq!(follower.resolve("ft").unwrap().version, 1);
+}
+
+#[test]
+fn leader_rollback_and_retire_converge_without_refetching() {
+    let leader_dir = fresh_dir("pawd_itest_repl_rb_leader");
+    let follower_dir = fresh_dir("pawd_itest_repl_rb_follower");
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 23));
+    let leader = VariantRegistry::open(&leader_dir).unwrap();
+    leader.publish("ft", seeded_full(&base, "ft", 41)).unwrap();
+    leader.publish("ft", seeded_full(&base, "ft", 42)).unwrap();
+
+    let follower = Arc::new(VariantRegistry::open(&follower_dir).unwrap());
+    let repl = Replicator::new(follower.clone(), Box::new(FsTransport::new(&leader_dir)));
+    repl.sync_once(None).unwrap();
+    assert_eq!(follower.resolve("ft").unwrap().version, 2);
+
+    // Rollback on the leader: the follower converges by moving its alias —
+    // zero artifact bytes over the wire (both versions are already held).
+    leader.rollback("ft", None).unwrap();
+    let report = repl.sync_once(None).unwrap();
+    assert!(!report.up_to_date);
+    assert_eq!(report.files_fetched, 0, "rollback must not refetch artifacts");
+    assert_eq!(report.artifact_bytes, 0);
+    assert_eq!(follower.resolve("ft").unwrap().version, 1);
+    let tokens: Vec<u8> = (0..8u8).map(|t| t.wrapping_mul(37) % 200 + 10).collect();
+    assert_eq!(
+        logits_of(&base, &leader_dir, "ft", &tokens),
+        logits_of(&base, &follower_dir, "ft", &tokens),
+    );
+
+    // Retire on the leader: mirrored; the retired version stops resolving
+    // on the follower too, again with no transfer.
+    leader.retire("ft", 2).unwrap();
+    let report = repl.sync_once(None).unwrap();
+    assert_eq!(report.artifact_bytes, 0);
+    assert!(follower.resolve("ft@2").is_err(), "retired versions must not resolve");
+    assert_eq!(follower.resolve("ft").unwrap().version, 1);
+
+    // Leader-side gc tombstones replicate as records only; the follower
+    // keeps its local file until a local gc unlinks it.
+    leader.gc(Some("ft")).unwrap();
+    let follower_v2_file = follower_dir.join(&follower.list()[0].versions[1].file);
+    assert!(follower_v2_file.exists());
+    let report = repl.sync_once(None).unwrap();
+    assert_eq!(report.artifact_bytes, 0);
+    assert!(follower_v2_file.exists(), "a leader gc must not delete follower files");
+    let local_gc = follower.gc(Some("ft")).unwrap();
+    assert_eq!(local_gc.files_removed, 1);
+    assert!(!follower_v2_file.exists());
+}
+
+#[test]
+fn server_admin_pull_from_syncs_and_warms_the_cache() {
+    let leader_dir = fresh_dir("pawd_itest_repl_srv_leader");
+    let follower_dir = fresh_dir("pawd_itest_repl_srv_follower");
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 29));
+    let leader = VariantRegistry::open(&leader_dir).unwrap();
+    let v1 = seeded_full(&base, "ft", 61);
+    leader.publish_incremental("ft", v1.clone(), None).unwrap();
+
+    let store = VariantStore::new(base.clone(), &follower_dir).with_mode(ExecMode::Fused);
+    let server = Server::start(store, Engine::Native, ServerConfig::default());
+    let client = server.client();
+    let (seq0, variants0, _) = client.sync_status().unwrap();
+    assert_eq!((seq0, variants0), (0, 0), "fresh follower starts empty");
+
+    let report = client.pull_from(&leader_dir).unwrap();
+    assert_eq!(report.files_fetched, 1);
+    // PullFrom warms on arrival: the first data request is a cache hit.
+    let resp = client.score("ft", "Q: probe? A: ", &["ok".into(), "bad".into()]);
+    assert!(resp.result.is_ok(), "{:?}", resp.result);
+    assert_eq!(resp.version, Some(1));
+    assert!(resp.timing.cold_start.is_none(), "synced variant must be warm");
+    let (seq1, variants1, versions1) = client.sync_status().unwrap();
+    assert!(seq1 > 0);
+    assert_eq!((variants1, versions1), (1, 1));
+
+    // A patch publish on the leader replicates warm: only the patch moves,
+    // and the follower keeps serving through the flip.
+    let v2 = perturb_one(&v1, &base, 0, 777);
+    let out = leader.publish_incremental("ft", v2, None).unwrap();
+    assert!(out.patch);
+    let report = client.pull_from(&leader_dir).unwrap();
+    assert_eq!((report.files_fetched, report.patch_files_fetched), (1, 1));
+    assert_eq!(report.artifact_bytes, out.bytes);
+    let resp = client.score("ft", "Q: probe? A: ", &["ok".into(), "bad".into()]);
+    assert!(resp.result.is_ok());
+    assert_eq!(resp.version, Some(2), "follower serves the replicated version");
+    assert!(resp.timing.cold_start.is_none(), "warm-on-arrival composed the patch");
+
+    // Misdirected PullFrom at a bogus dir fails cleanly, server stays up.
+    let err = client
+        .admin(AdminOp::PullFrom { dir: follower_dir.join("nonexistent") })
+        .unwrap_err();
+    assert!(!err.is_empty());
+    assert!(client.score("ft", "Q: again? A: ", &["ok".into(), "bad".into()]).result.is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn file_sizes_reported_by_sync_match_disk() {
+    // Cross-check SyncReport byte accounting against the actual files — the
+    // bench's wire-counter gate builds on this equivalence.
+    let leader_dir = fresh_dir("pawd_itest_repl_bytes_leader");
+    let follower_dir = fresh_dir("pawd_itest_repl_bytes_follower");
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 37));
+    let leader = VariantRegistry::open(&leader_dir).unwrap();
+    leader.publish("ft", seeded_full(&base, "ft", 71)).unwrap();
+    let on_disk: u64 = leader
+        .list()
+        .iter()
+        .flat_map(|d| d.versions.iter())
+        .map(|v| file_size(&leader_dir.join(&v.file)))
+        .sum();
+    let follower = Arc::new(VariantRegistry::open(&follower_dir).unwrap());
+    let repl = Replicator::new(follower, Box::new(FsTransport::new(&leader_dir)));
+    let report = repl.sync_once(None).unwrap();
+    assert_eq!(report.artifact_bytes, on_disk);
+    assert_eq!(report.manifest_bytes, file_size(&leader_dir.join("registry.json")));
+}

@@ -14,12 +14,16 @@
 #[path = "bench_common/mod.rs"]
 mod bench_common;
 
+use pawd::coordinator::{Engine, Payload, Server, ServerConfig, VariantStore};
 use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
-use pawd::exec::{counters, BatchPlan, PackedVariant, Uniform, VariantWeights};
+use pawd::delta::format::save_delta;
+use pawd::exec::{counters, pool, BatchPlan, ExecMode, PackedVariant, Uniform, VariantWeights};
 use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
 use pawd::model::Transformer;
 use pawd::util::benchkit::{Bench, BenchReport, Table};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
     let (base, _) = bench_common::synth_pair("tiny", 17);
@@ -28,7 +32,10 @@ fn main() -> anyhow::Result<()> {
     let tf = Transformer::new(&cfg);
     let docs = bench_common::calib_docs(4, 40);
 
-    // A small fleet of packed variants sharing the one base.
+    // A small fleet of packed variants sharing the one base; each artifact
+    // also lands on disk so the churn scenario can serve it through the
+    // full engine stack.
+    let churn_dir = bench_common::tmp_dir("engine_churn");
     let n_variants = 4usize;
     let variants: Vec<VariantWeights> = (0..n_variants)
         .map(|k| {
@@ -43,6 +50,7 @@ fn main() -> anyhow::Result<()> {
                 &docs,
                 &CompressOptions { fit: FitMode::ClosedForm, ..Default::default() },
             );
+            save_delta(churn_dir.join(format!("v{k}.pawd")), &delta).unwrap();
             VariantWeights::Packed(PackedVariant::new(base.clone(), Arc::new(delta)).unwrap())
         })
         .collect();
@@ -88,7 +96,28 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "op counter: batched {batched_gemms} base GEMMs/batch vs per-request \
-         {per_request_gemms} (batch={batch}, {n_variants} variants)\n"
+         {per_request_gemms} (batch={batch}, {n_variants} variants)"
+    );
+    // Single-pass structure: the fused per-request kernel computes base dot
+    // + mask signed-sum in ONE traversal per (activation row, output row);
+    // the batched path's base-GEMM-then-delta is two traversals. This bench
+    // owns its process, so strict counter comparison is safe here.
+    counters::reset();
+    for (entry, tokens) in &seqs {
+        let _ = tf.forward_one(&mixed_weights[members[*entry]], tokens);
+    }
+    let fused_act_reads = counters::activation_row_reads();
+    counters::reset();
+    let _ = tf.forward_plan(plan, &seqs);
+    let two_pass_act_reads = counters::activation_row_reads();
+    assert!(
+        fused_act_reads < two_pass_act_reads,
+        "single-pass fused kernel must read fewer activation rows \
+         ({fused_act_reads}) than base-then-delta ({two_pass_act_reads})"
+    );
+    println!(
+        "op counter: fused single-pass {fused_act_reads} activation-row reads \
+         vs two-pass {two_pass_act_reads}\n"
     );
 
     // --- throughput --------------------------------------------------------
@@ -117,6 +146,109 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(tf.forward_plan(&Uniform(&mixed_weights[0]), &single_seqs));
         })
         .clone();
+    // Intra-host compute pool: the same mixed window at a forced serial
+    // width vs 4 pool threads (results are bitwise-identical; only the
+    // wall clock moves).
+    let r_pool1 = b
+        .run_items(&format!("BatchPlan mixed x{batch}, 1 thread"), tokens_per_batch, || {
+            pool::with_thread_limit(1, || {
+                std::hint::black_box(tf.forward_plan(plan, &seqs));
+            });
+        })
+        .clone();
+    let r_pool4 = b
+        .run_items(&format!("BatchPlan mixed x{batch}, 4 threads"), tokens_per_batch, || {
+            pool::with_thread_limit(4, || {
+                std::hint::black_box(tf.forward_plan(plan, &seqs));
+            });
+        })
+        .clone();
+    let r_single_pool4 = b
+        .run_items(&format!("Uniform single x{batch}, 4 threads"), tokens_per_batch, || {
+            pool::with_thread_limit(4, || {
+                std::hint::black_box(tf.forward_plan(&Uniform(&mixed_weights[0]), &single_seqs));
+            });
+        })
+        .clone();
+    let pool4_speedup = r_pool1.mean_s() / r_pool4.mean_s();
+    println!("pool speedup: {pool4_speedup:.2}x (mixed window, 4 threads over serial)");
+    if std::env::var("PAWD_BENCH_STRICT").is_ok() {
+        assert!(
+            pool4_speedup >= 2.0,
+            "strict mode: 4-thread mixed-window throughput must be >= 2x serial, \
+             got {pool4_speedup:.2}x"
+        );
+    }
+
+    // --- serving under publish churn ---------------------------------------
+    // The continuous engine overlaps publish warms with serving: measure
+    // end-to-end request throughput on stable variants while a background
+    // admin client storms `publish_incremental` on another.
+    let store = VariantStore::new(base.clone(), &churn_dir).with_mode(ExecMode::Fused);
+    let server = Server::start(
+        store,
+        Engine::Native,
+        ServerConfig { n_workers: 2, ..Default::default() },
+    );
+    let client = server.client();
+    let choices = vec!["alpha".to_string(), "beta".to_string(), "gamma".to_string()];
+    for k in 0..n_variants {
+        let warm = client.score(&format!("v{k}"), "Q: warm? A: ", &choices);
+        assert!(warm.result.is_ok(), "churn warmup failed: {:?}", warm.result);
+    }
+    let stop = AtomicBool::new(false);
+    let n_publishes = AtomicU64::new(0);
+    let mut r_churn = None;
+    std::thread::scope(|s| {
+        let publisher = server.client();
+        let (stop_ref, pubs) = (&stop, &n_publishes);
+        let staging = bench_common::tmp_dir("engine_churn_staging");
+        let src = churn_dir.join("v0.pawd");
+        s.spawn(move || {
+            let mut model = pawd::delta::format::load_delta(&src).unwrap();
+            let mut i = 0u64;
+            while !stop_ref.load(Ordering::Relaxed) {
+                {
+                    let m = Arc::make_mut(&mut model.modules[0]);
+                    for sc in &mut m.scales {
+                        *sc *= 1.0001;
+                    }
+                }
+                let staged = staging.join(format!("c{i}.pawd"));
+                save_delta(&staged, &model).unwrap();
+                if publisher.publish_incremental("v0", &staged, None).is_ok() {
+                    pubs.fetch_add(1, Ordering::Relaxed);
+                }
+                let _ = std::fs::remove_file(&staged);
+                i += 1;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
+        let r = b
+            .run_items(&format!("serve mixed x{batch} under publish churn"), batch as f64, || {
+                let rxs: Vec<_> = (0..batch)
+                    .map(|i| {
+                        client.submit(
+                            &format!("v{}", 1 + i % (n_variants - 1)),
+                            Payload::score(&format!("Q: churn {i}? A: "), &choices),
+                        )
+                    })
+                    .collect();
+                for rx in rxs {
+                    let resp = rx.recv().unwrap();
+                    assert!(resp.result.is_ok(), "request failed under churn: {:?}", resp.result);
+                }
+            })
+            .clone();
+        stop.store(true, Ordering::Relaxed);
+        r_churn = Some(r);
+    });
+    let r_churn = r_churn.unwrap();
+    let churn_publishes = n_publishes.load(Ordering::Relaxed);
+    println!(
+        "publish churn: {churn_publishes} incremental publishes overlapped with serving"
+    );
+    server.shutdown();
 
     let tok_per_s = |r: &pawd::util::benchkit::BenchResult| tokens_per_batch / r.mean_s();
     let mut t = Table::new(&["scenario", "tok/s", "batch ms", "base GEMMs/batch"]);
@@ -125,6 +257,9 @@ fn main() -> anyhow::Result<()> {
         ("BatchPlan, mixed", &r_plan_mixed, batched_gemms),
         ("per-request, single-variant", &r_per_req_single, per_request_gemms),
         ("Uniform batched, single-variant", &r_uniform_single, gemms_per_forward),
+        ("BatchPlan mixed, pool x1", &r_pool1, batched_gemms),
+        ("BatchPlan mixed, pool x4", &r_pool4, batched_gemms),
+        ("Uniform single, pool x4", &r_single_pool4, gemms_per_forward),
     ] {
         t.row(&[
             name.to_string(),
@@ -156,12 +291,28 @@ fn main() -> anyhow::Result<()> {
         "batched_forward/single8_uniform",
         &[("tok_per_s", tok_per_s(&r_uniform_single))],
     );
+    report.add("batched_forward/mixed8_pool1", &[("tok_per_s", tok_per_s(&r_pool1))]);
+    report.add("batched_forward/mixed8_pool4", &[("tok_per_s", tok_per_s(&r_pool4))]);
+    report.add(
+        "batched_forward/single8_pool4",
+        &[("tok_per_s", tok_per_s(&r_single_pool4))],
+    );
+    report.add(
+        "batched_forward/churn",
+        &[
+            ("req_per_s", batch as f64 / r_churn.mean_s()),
+            ("publishes_overlapped", churn_publishes as f64),
+        ],
+    );
     report.add(
         "batched_forward/structure",
         &[
             ("batched_base_gemms", batched_gemms as f64),
             ("per_request_base_gemms", per_request_gemms as f64),
             ("mixed_speedup", r_per_req_mixed.mean_s() / r_plan_mixed.mean_s()),
+            ("fused_act_row_reads", fused_act_reads as f64),
+            ("two_pass_act_row_reads", two_pass_act_reads as f64),
+            ("pool4_speedup", pool4_speedup),
         ],
     );
     report.flush_env()?;

@@ -69,6 +69,7 @@ fn main() -> anyhow::Result<()> {
                         n_workers: 2,
                         cache_budget_bytes: budget,
                         exec,
+                        ..Default::default()
                     },
                 );
                 let t0 = Instant::now();

@@ -1,0 +1,426 @@
+//! The continuously-stepping serving engine.
+//!
+//! Replaces the stop-and-go window dispatcher: instead of holding a batch
+//! window until it is full or its oldest request has aged `max_wait`, the
+//! engine *steps* whenever anything changes — a request arrives, an abort
+//! lands, or a worker finishes an item. Each step admits a fair-share
+//! window (`fair_take`) onto every idle worker slot immediately, so:
+//!
+//! * an idle host serves a lone request at compute latency, never a
+//!   deadline wait (the old dispatcher's idle-latency bug);
+//! * a hot window never blocks behind `max_wait` — new requests are
+//!   admitted into the in-flight batch at the next step boundary;
+//! * publish / `PullFrom` warms ride the same slots as data windows and
+//!   overlap with serving instead of stalling it.
+//!
+//! [`EngineCore`] holds the pure admission state (pending queue, in-flight
+//! slot count) and is directly unit-testable; `engine_loop` wires it to
+//! the ingress and work channels on the `pawd-engine` thread.
+
+use super::metrics::Metrics;
+use super::request::{Payload, Request, Response, Timing, ADMIN_VARIANT};
+use super::server::ServerConfig;
+use crate::exec::counters;
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One variant's slice of an admitted window (requests in arrival order).
+pub struct VariantGroup {
+    pub variant: String,
+    pub requests: Vec<Request>,
+}
+
+/// One unit of worker work.
+pub(crate) enum WorkItem {
+    /// A single control-plane request (bypasses batching; may carry a
+    /// misdirected data payload aimed at a reserved pseudo-variant, which
+    /// the worker rejects).
+    Admin(Request),
+    /// An admitted window of data requests, grouped by variant.
+    Window(Vec<VariantGroup>),
+}
+
+/// Ingress message driving the engine loop. Every variant is a *step
+/// signal*: the loop re-evaluates admission after each one.
+pub(crate) enum Ingress {
+    /// A new request (data or admin).
+    Req(Request),
+    /// Abort a pending request by id. In-flight requests complete normally
+    /// — only requests still waiting for admission are dropped.
+    Abort(u64),
+    /// A worker finished one `WorkItem`, freeing a slot.
+    StepDone,
+    /// Explicit shutdown (live `Client` clones keep the channel open).
+    Shutdown,
+}
+
+/// Pure admission state of the continuous-batching engine: what is waiting
+/// and how many worker slots are occupied. All channel I/O lives in
+/// `engine_loop`, so this core is deterministic and unit-testable.
+pub struct EngineCore {
+    pending: VecDeque<Request>,
+    in_flight: usize,
+    capacity: usize,
+    max_batch: usize,
+}
+
+impl EngineCore {
+    /// `capacity` is the number of worker slots (≥ 1); `max_batch` caps the
+    /// requests admitted per step.
+    pub fn new(capacity: usize, max_batch: usize) -> EngineCore {
+        EngineCore {
+            pending: VecDeque::new(),
+            in_flight: 0,
+            capacity: capacity.max(1),
+            max_batch: max_batch.max(1),
+        }
+    }
+
+    /// Queue a data request for admission at the next step boundary.
+    pub fn add_request(&mut self, req: Request) {
+        self.pending.push_back(req);
+    }
+
+    /// Remove and return a still-pending request by id (`None` if it was
+    /// already admitted or never existed).
+    pub fn abort(&mut self, id: u64) -> Option<Request> {
+        let i = self.pending.iter().position(|r| r.id == id)?;
+        self.pending.remove(i)
+    }
+
+    /// Account an item handed to the workers outside [`step`](Self::step)
+    /// (the admin fast lane).
+    pub fn begin_work(&mut self) {
+        self.in_flight += 1;
+    }
+
+    /// A worker finished one item, freeing a slot.
+    pub fn work_done(&mut self) {
+        self.in_flight = self.in_flight.saturating_sub(1);
+    }
+
+    /// Requests waiting for admission.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Worker slots currently occupied.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// One step: if a worker slot is idle and requests are waiting, admit a
+    /// fair-share window immediately (no deadline) and occupy the slot.
+    /// Returns `None` when saturated or idle — callers loop until then.
+    pub fn step(&mut self) -> Option<Vec<VariantGroup>> {
+        if self.pending.is_empty() || self.in_flight >= self.capacity {
+            return None;
+        }
+        let requests = fair_take(&mut self.pending, self.max_batch);
+        self.in_flight += 1;
+        Some(group_by_variant(requests))
+    }
+
+    /// Flush a window regardless of slot occupancy (shutdown drain).
+    pub fn drain(&mut self) -> Option<Vec<VariantGroup>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        Some(group_by_variant(fair_take(&mut self.pending, self.max_batch)))
+    }
+}
+
+/// The engine thread: blocks for one ingress message, drains the burst
+/// behind it, then steps until every idle worker slot is fed. On shutdown
+/// the remaining queue is flushed as final windows (the work sender drops
+/// on return, so workers drain and exit).
+pub(crate) fn engine_loop(
+    ingress: mpsc::Receiver<Ingress>,
+    work: mpsc::Sender<WorkItem>,
+    cfg: ServerConfig,
+    metrics: Arc<Metrics>,
+) {
+    let mut core = EngineCore::new(cfg.n_workers.max(1), cfg.max_batch);
+    let mut open = true;
+    while open {
+        let first = match ingress.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        if !process(&mut core, &work, &metrics, first) {
+            open = false;
+        }
+        // Drain the burst so one step sees every request already queued —
+        // concurrent submitters coalesce into mixed windows exactly like
+        // the old deadline flush, minus the waiting.
+        loop {
+            match ingress.try_recv() {
+                Ok(m) => {
+                    if !process(&mut core, &work, &metrics, m) {
+                        open = false;
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        while let Some(groups) = core.step() {
+            if send_window(&work, &metrics, groups).is_err() {
+                return; // workers gone
+            }
+        }
+    }
+    // Shutdown drain: flush everything still pending (responses must not
+    // be dropped); the queued items complete before workers see the
+    // channel close.
+    while let Some(groups) = core.drain() {
+        if send_window(&work, &metrics, groups).is_err() {
+            return;
+        }
+    }
+}
+
+/// Apply one ingress message to the core; returns `false` on shutdown.
+fn process(
+    core: &mut EngineCore,
+    work: &mpsc::Sender<WorkItem>,
+    metrics: &Metrics,
+    msg: Ingress,
+) -> bool {
+    match msg {
+        Ingress::Req(req) => {
+            // Admin ops (and anything aimed at the reserved admin
+            // pseudo-variant) take the fast lane: they never touch an
+            // engine, so queuing them behind data admission would only
+            // delay alias flips. They still occupy a worker slot so
+            // control-plane storms cannot pile unbounded windows into the
+            // work channel.
+            let admin =
+                matches!(req.payload, Payload::Admin(_)) || req.variant == ADMIN_VARIANT;
+            if admin {
+                core.begin_work();
+                let _ = work.send(WorkItem::Admin(req));
+            } else {
+                core.add_request(req);
+            }
+        }
+        Ingress::Abort(id) => {
+            if let Some(req) = core.abort(id) {
+                let total = req.submitted.elapsed();
+                metrics.record_request(&req.variant, total, Duration::ZERO, total, true);
+                let _ = req.resp.send(Response {
+                    id: req.id,
+                    variant: req.variant.clone(),
+                    version: None,
+                    result: Err("aborted before dispatch".into()),
+                    timing: Timing { queue: total, total, ..Default::default() },
+                });
+            }
+        }
+        Ingress::StepDone => core.work_done(),
+        Ingress::Shutdown => return false,
+    }
+    true
+}
+
+fn send_window(
+    work: &mpsc::Sender<WorkItem>,
+    metrics: &Metrics,
+    groups: Vec<VariantGroup>,
+) -> Result<(), ()> {
+    let size: usize = groups.iter().map(|g| g.requests.len()).sum();
+    metrics.record_batch(size);
+    counters::record_engine_step();
+    work.send(WorkItem::Window(groups)).map_err(|_| ())
+}
+
+/// Pick up to `max` requests from the queue **round-robin across
+/// variants** (variants ordered by first appearance, per-variant FIFO
+/// preserved), so a variant flooding the ingress cannot fill whole windows
+/// and starve a cold variant's lone request. The overall oldest request is
+/// always picked (its variant leads the rotation); unpicked requests stay
+/// in arrival order.
+pub(crate) fn fair_take(window: &mut VecDeque<Request>, max: usize) -> Vec<Request> {
+    if window.len() <= max {
+        return window.drain(..).collect();
+    }
+    // Bucket indices by variant, first-appearance order.
+    let mut order: Vec<&str> = Vec::new();
+    let mut buckets: HashMap<&str, VecDeque<usize>> = HashMap::new();
+    for (i, req) in window.iter().enumerate() {
+        let entry = buckets.entry(req.variant.as_str()).or_default();
+        if entry.is_empty() && !order.contains(&req.variant.as_str()) {
+            order.push(req.variant.as_str());
+        }
+        entry.push_back(i);
+    }
+    let mut picked = vec![false; window.len()];
+    let mut n = 0usize;
+    'rounds: loop {
+        let mut any = false;
+        for v in &order {
+            if let Some(i) = buckets.get_mut(v).and_then(|b| b.pop_front()) {
+                picked[i] = true;
+                n += 1;
+                any = true;
+                if n == max {
+                    break 'rounds;
+                }
+            }
+        }
+        if !any {
+            break;
+        }
+    }
+    // Drain picked indices preserving arrival order on both sides.
+    let mut taken = Vec::with_capacity(n);
+    let mut rest = VecDeque::with_capacity(window.len() - n);
+    for (i, req) in window.drain(..).enumerate() {
+        if picked[i] {
+            taken.push(req);
+        } else {
+            rest.push_back(req);
+        }
+    }
+    *window = rest;
+    taken
+}
+
+/// Group an admitted window by variant, preserving arrival order both
+/// across groups (first appearance) and within each group.
+pub(crate) fn group_by_variant(requests: Vec<Request>) -> Vec<VariantGroup> {
+    let mut groups: Vec<VariantGroup> = Vec::new();
+    let mut index: HashMap<String, usize> = HashMap::new();
+    for req in requests {
+        match index.get(&req.variant) {
+            Some(&i) => groups[i].requests.push(req),
+            None => {
+                index.insert(req.variant.clone(), groups.len());
+                groups.push(VariantGroup { variant: req.variant.clone(), requests: vec![req] });
+            }
+        }
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(variant: &str) -> Request {
+        Request::new(0, variant, Payload::perplexity("probe text")).0
+    }
+
+    fn req_id(id: u64, variant: &str) -> (Request, mpsc::Receiver<Response>) {
+        Request::new(id, variant, Payload::perplexity("probe text"))
+    }
+
+    #[test]
+    fn step_admits_immediately_when_a_slot_is_idle() {
+        // The old dispatcher would hold this lone request for `max_wait`;
+        // the engine admits it on the very next step.
+        let mut core = EngineCore::new(2, 8);
+        core.add_request(req("a"));
+        let groups = core.step().expect("idle slot must admit immediately");
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].requests.len(), 1);
+        assert_eq!(core.in_flight(), 1);
+        assert_eq!(core.pending_len(), 0);
+        assert!(core.step().is_none(), "nothing left to admit");
+    }
+
+    #[test]
+    fn step_respects_capacity_until_work_done() {
+        let mut core = EngineCore::new(1, 2);
+        for _ in 0..5 {
+            core.add_request(req("a"));
+        }
+        assert!(core.step().is_some(), "first window takes the only slot");
+        assert!(core.step().is_none(), "saturated: no admission");
+        assert_eq!(core.pending_len(), 3);
+        core.work_done();
+        let g = core.step().expect("freed slot admits the next window");
+        assert_eq!(g[0].requests.len(), 2);
+        assert_eq!(core.pending_len(), 1);
+    }
+
+    #[test]
+    fn abort_removes_pending_but_not_admitted() {
+        let mut core = EngineCore::new(1, 8);
+        let (r1, _rx1) = req_id(1, "a");
+        let (r2, _rx2) = req_id(2, "a");
+        core.add_request(r1);
+        core.add_request(r2);
+        assert!(core.step().is_some(), "both admitted in one window");
+        assert!(core.abort(1).is_none(), "admitted requests cannot be aborted");
+        let (r3, _rx3) = req_id(3, "b");
+        core.add_request(r3);
+        let aborted = core.abort(3).expect("pending request aborts");
+        assert_eq!(aborted.id, 3);
+        assert_eq!(core.pending_len(), 0);
+    }
+
+    #[test]
+    fn drain_flushes_ignoring_slots() {
+        let mut core = EngineCore::new(1, 4);
+        for _ in 0..6 {
+            core.add_request(req("a"));
+        }
+        assert!(core.step().is_some());
+        assert!(core.step().is_none(), "saturated");
+        let d1 = core.drain().expect("drain ignores slot occupancy");
+        assert_eq!(d1[0].requests.len(), 4);
+        let d2 = core.drain().expect("second drain window");
+        assert_eq!(d2[0].requests.len(), 1);
+        assert!(core.drain().is_none());
+    }
+
+    #[test]
+    fn fair_take_round_robins_so_a_hot_variant_cannot_starve_a_cold_one() {
+        // Six "hot" requests arrive before two "cold" ones; a 4-slot flush
+        // under strict FIFO would be all hot. Fair share must seat the cold
+        // variant's requests in the same window.
+        let mut window: VecDeque<Request> = VecDeque::new();
+        for _ in 0..6 {
+            window.push_back(req("hot"));
+        }
+        window.push_back(req("cold"));
+        window.push_back(req("cold"));
+        let taken = fair_take(&mut window, 4);
+        assert_eq!(taken.len(), 4);
+        let cold_taken = taken.iter().filter(|r| r.variant == "cold").count();
+        assert_eq!(cold_taken, 2, "the hot variant must not starve the cold one");
+        assert_eq!(taken[0].variant, "hot", "the overall oldest request always flushes");
+        // Leftovers keep arrival order so admission order stays FIFO-fair.
+        assert_eq!(window.len(), 4);
+        assert!(window.iter().all(|r| r.variant == "hot"));
+        // A window that fits entirely drains in arrival order.
+        let taken = fair_take(&mut window, 8);
+        assert_eq!(taken.len(), 4);
+        assert!(window.is_empty());
+    }
+
+    #[test]
+    fn fair_take_covers_every_variant_when_slots_allow() {
+        let mut window: VecDeque<Request> = VecDeque::new();
+        for _ in 0..5 {
+            window.push_back(req("a"));
+        }
+        window.push_back(req("b"));
+        window.push_back(req("c"));
+        window.push_back(req("d"));
+        let taken = fair_take(&mut window, 4);
+        let variants: std::collections::HashSet<&str> =
+            taken.iter().map(|r| r.variant.as_str()).collect();
+        assert_eq!(
+            variants.len(),
+            4,
+            "with max_batch >= distinct variants, every waiting variant gets a slot"
+        );
+    }
+}

@@ -70,6 +70,15 @@ pub struct MetricsSnapshot {
     /// a publish warming `N+1` while `N` ages out.
     pub resident_versions: Vec<VersionResidency>,
     pub per_variant: BTreeMap<String, u64>,
+    /// Compute-pool chunks executed (process-wide, from
+    /// [`exec::counters`](crate::exec::counters)). Zero means every kernel
+    /// ran on its caller thread (serial widths / tiny inputs).
+    pub pool_tasks: u64,
+    /// Nanoseconds pool workers spent parked waiting for work — the
+    /// idle/steal budget the continuous engine is meant to shrink.
+    pub pool_steal_or_idle_ns: u64,
+    /// Engine step boundaries that flushed a window to a worker.
+    pub engine_steps: u64,
 }
 
 impl Metrics {
@@ -173,6 +182,9 @@ fn snapshot_inner(i: &Inner) -> MetricsSnapshot {
         resident_dense_equiv_bytes: i.residency.dense_equiv_bytes,
         resident_versions: i.residency.per_version.clone(),
         per_variant: i.per_variant.clone(),
+        pool_tasks: crate::exec::counters::pool_tasks(),
+        pool_steal_or_idle_ns: crate::exec::counters::pool_steal_or_idle_ns(),
+        engine_steps: crate::exec::counters::engine_steps(),
     }
 }
 

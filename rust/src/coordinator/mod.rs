@@ -16,13 +16,19 @@
 //!   byte budget, charged in packed bytes when the store runs
 //!   [`ExecMode::Fused`](crate::exec::ExecMode); a publish warms the new
 //!   version while the old one ages out.
-//! * [`server`] — dispatcher (one batch window, size/deadline flush,
-//!   **fair-share round-robin across variants** at flush time; admin lane
-//!   bypasses batching) and worker engines:
-//!   the native transformer runs each flushed window as a shared-base
+//! * [`engine`] — the continuous-batching step loop
+//!   ([`EngineCore`](engine::EngineCore)): `add_request`/`step`/`abort`
+//!   semantics, fair-share admission into the in-flight batch at every step
+//!   boundary, immediate flush onto idle workers (no `max_wait` stall), and
+//!   publish/pull warms overlapping data-plane serving.
+//! * [`server`] — wiring around the engine loop: spawns the engine thread
+//!   and worker engines, routes admin requests down the fast lane, and runs
+//!   each admitted window as a shared-base
 //!   [`BatchPlan`](crate::exec::BatchPlan) — one base GEMM per module for
 //!   the whole mixed-variant window — while the PJRT runtime scores per
-//!   group from flat buffers.
+//!   group from flat buffers. Workers parallelize intra-host over the
+//!   [`exec::pool`](crate::exec::pool) compute pool
+//!   (`ServerConfig::n_compute_threads`).
 //! * [`metrics`] — latency histograms, throughput, cold-start accounting,
 //!   publish/rollback counters, per-version residency gauges.
 //! * [`replicate`] — patch-aware multi-node replication: a follower pulls a
@@ -31,6 +37,7 @@
 //!   already held), crc-verifies them, and commits the mirrored records.
 
 pub mod cache;
+pub mod engine;
 pub mod metrics;
 pub mod registry;
 pub mod replicate;
@@ -39,6 +46,7 @@ pub mod server;
 pub mod store;
 
 pub use cache::{Residency, VariantCache, VersionResidency};
+pub use engine::EngineCore;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{
     ArtifactKind, ConsolidateOutcome, GcReport, ManifestView, PublishOutcome, Resolved,

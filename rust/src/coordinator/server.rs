@@ -1,6 +1,6 @@
-//! The serving coordinator: ingress → batch window → mixed-variant batcher
-//! → worker engines over the LRU variant cache — plus the **admin lane**,
-//! which answers control-plane operations (stats, publish, rollback, pin,
+//! The serving coordinator: ingress → continuous-batching engine → worker
+//! engines over the LRU variant cache — plus the **admin lane**, which
+//! answers control-plane operations (stats, publish, rollback, pin,
 //! retire, gc, list) without touching an engine.
 //!
 //! Thread topology (no async runtime available offline; this is plain
@@ -8,50 +8,56 @@
 //! choice):
 //!
 //! ```text
-//! clients --mpsc--> dispatcher ----work queue----> worker 0..N-1
-//!                    (one batch window,             (cache multi-get,
-//!                     size/deadline flush,           BatchPlan per shared
-//!                     FAIR-SHARE round-robin         base: ONE base GEMM
-//!                     across variants at flush;      per module per window;
-//!                     admin ops bypass batching)     admin ops -> registry)
+//! clients --mpsc--> engine loop ----work queue----> worker 0..N-1
+//!                    (steps on every arrival /       (cache multi-get,
+//!                     abort / worker StepDone;        BatchPlan per shared
+//!                     FAIR-SHARE round-robin          base: ONE base GEMM
+//!                     admission onto idle slots,      per module per window;
+//!                     no deadline waits; admin        admin ops -> registry;
+//!                     ops take the fast lane)         StepDone -> engine)
 //! ```
 //!
-//! **Batched multi-variant execution.** The dispatcher coalesces concurrent
-//! data requests — whatever variant they target — into one *batch window*,
-//! flushed when it reaches `max_batch` requests or its oldest entry has
-//! waited `max_wait`. A worker pins every `(variant, version)` the window
+//! **Continuous batching.** The [`engine`](super::engine) loop admits a
+//! fair-share window onto every idle worker slot the moment one exists:
+//! concurrent data requests — whatever variant they target — coalesce into
+//! mixed windows while all workers are busy, and a lone request on an idle
+//! host dispatches immediately (the legacy `max_wait` deadline no longer
+//! delays anything). A worker pins every `(variant, version)` the window
 //! needs with one cache multi-get, groups the window by shared base storage
 //! into [`BatchPlan`]s, and runs each plan as ONE stacked forward: the base
 //! GEMM executes once per module for the whole window and each variant pays
-//! only its packed mask reduction on its own rows.
+//! only its packed mask reduction on its own rows. Within a window the
+//! compute layer fans out across the intra-host pool
+//! ([`exec::pool`](crate::exec::pool), width `n_compute_threads`).
 //!
-//! **Fair share.** A flush picks requests **round-robin across the
-//! variants present in the window** (per-variant FIFO within each), so a
-//! variant that floods the ingress cannot fill whole windows and starve a
-//! cold variant's single request: any variant waiting in the window is
-//! guaranteed a slot in the next flush as long as `max_batch` ≥ the number
-//! of distinct variants waiting. Requests a flush leaves behind keep their
-//! arrival order and age toward the `max_wait` deadline as before.
+//! **Fair share.** Admission picks requests **round-robin across the
+//! variants waiting** (per-variant FIFO within each), so a variant that
+//! floods the ingress cannot fill whole windows and starve a cold
+//! variant's single request: any variant waiting is guaranteed a slot in
+//! the next admitted window as long as `max_batch` ≥ the number of
+//! distinct variants waiting.
 //!
 //! Publishing through the admin lane is the live-update path: the registry
 //! flips the alias atomically, the publishing worker warms the new version
 //! into the cache, and data requests already holding the old version's `Arc`
-//! finish undisturbed while the old entry ages out of the LRU.
+//! finish undisturbed while the old entry ages out of the LRU. Because
+//! admin items ride their own worker slot, a `publish_incremental` storm
+//! overlaps with serving instead of stalling it.
 
 use super::cache::VariantCache;
+use super::engine::{engine_loop, Ingress, VariantGroup, WorkItem};
 use super::metrics::Metrics;
 use super::request::{
     AdminOp, AdminResp, DataOp, Payload, Request, RespBody, Response, Timing, ADMIN_VARIANT,
 };
 use super::store::VariantStore;
 use crate::data::corpus::encode;
-use crate::exec::{BatchPlan, ExecMode, VariantWeights};
+use crate::exec::{pool, BatchPlan, ExecMode, VariantWeights};
 use crate::model::Transformer;
 use crate::runtime::RuntimeHandle;
 use crate::tensor::ops::log_softmax_into;
 use anyhow::Result;
 use std::collections::HashMap;
-use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -70,12 +76,21 @@ pub enum Engine {
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub max_batch: usize,
+    /// Legacy window deadline. The continuous-batching engine admits on
+    /// idle capacity instead of waiting, so this no longer delays
+    /// dispatch; the field is kept so existing configs deserialize/compile
+    /// unchanged.
     pub max_wait: Duration,
     pub n_workers: usize,
     pub cache_budget_bytes: u64,
     /// Dense-vs-fused A/B switch: how delta variants are resident and
     /// executed. The XLA engine forces `Dense` (it consumes flat buffers).
     pub exec: ExecMode,
+    /// Intra-host compute width each worker uses for the pooled GEMM /
+    /// mask-reduction / attention fan-out. `0` = auto: the
+    /// `PAWD_COMPUTE_THREADS` env override when set, else the machine
+    /// parallelism. Results are bitwise-identical at any width.
+    pub n_compute_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -86,32 +101,9 @@ impl Default for ServerConfig {
             n_workers: 2,
             cache_budget_bytes: 1 << 30,
             exec: ExecMode::Fused,
+            n_compute_threads: 0,
         }
     }
-}
-
-/// One variant's slice of a flushed batch window (requests in arrival
-/// order).
-struct VariantGroup {
-    variant: String,
-    requests: Vec<Request>,
-}
-
-/// One unit of worker work.
-enum WorkItem {
-    /// A single control-plane request (bypasses batching; may carry a
-    /// misdirected data payload aimed at a reserved pseudo-variant, which
-    /// the worker rejects).
-    Admin(Request),
-    /// A flushed batch window of data requests, grouped by variant.
-    Window(Vec<VariantGroup>),
-}
-
-/// Ingress message: a request or an explicit shutdown signal (needed
-/// because live `Client` clones keep the channel open).
-enum Ingress {
-    Req(Request),
-    Shutdown,
 }
 
 pub struct Server {
@@ -119,7 +111,7 @@ pub struct Server {
     next_id: Arc<AtomicU64>,
     pub metrics: Arc<Metrics>,
     pub cache: Arc<VariantCache>,
-    dispatcher: Option<std::thread::JoinHandle<()>>,
+    engine_thread: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -133,11 +125,29 @@ pub struct Client {
 impl Client {
     /// Submit without blocking; returns the response receiver.
     pub fn submit(&self, variant: &str, payload: Payload) -> mpsc::Receiver<Response> {
+        self.submit_tracked(variant, payload).1
+    }
+
+    /// Submit without blocking, returning the request id alongside the
+    /// response receiver so the caller can [`abort`](Self::abort) it while
+    /// it is still waiting for admission.
+    pub fn submit_tracked(
+        &self,
+        variant: &str,
+        payload: Payload,
+    ) -> (u64, mpsc::Receiver<Response>) {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (req, rx) = Request::new(id, variant, payload);
         // If the server is gone the receiver errors on recv — fine.
         let _ = self.tx.send(Ingress::Req(req));
-        rx
+        (id, rx)
+    }
+
+    /// Abort a request by id. Best-effort: only requests still pending
+    /// admission are dropped (they answer with an error response);
+    /// admitted requests complete normally, and unknown ids are a no-op.
+    pub fn abort(&self, id: u64) {
+        let _ = self.tx.send(Ingress::Abort(id));
     }
 
     /// Blocking convenience: score choices on a variant.
@@ -285,26 +295,30 @@ impl Server {
             let metrics = metrics.clone();
             let engine = engine.clone();
             let sync_seqs = sync_seqs.clone();
+            let notify = ingress_tx.clone();
+            let n_compute = cfg.n_compute_threads;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("pawd-worker-{wid}"))
-                    .spawn(move || worker_loop(work_rx, cache, metrics, engine, sync_seqs))
+                    .spawn(move || {
+                        worker_loop(work_rx, cache, metrics, engine, sync_seqs, notify, n_compute)
+                    })
                     .expect("spawn worker"),
             );
         }
-        let dcfg = cfg.clone();
-        let dmetrics = metrics.clone();
-        let dispatcher = std::thread::Builder::new()
-            .name("pawd-dispatcher".into())
-            .spawn(move || dispatcher_loop(ingress_rx, work_tx, dcfg, dmetrics))
-            .expect("spawn dispatcher");
+        let ecfg = cfg.clone();
+        let emetrics = metrics.clone();
+        let engine_thread = std::thread::Builder::new()
+            .name("pawd-engine".into())
+            .spawn(move || engine_loop(ingress_rx, work_tx, ecfg, emetrics))
+            .expect("spawn engine");
 
         Server {
             ingress: ingress_tx,
             next_id: Arc::new(AtomicU64::new(1)),
             metrics,
             cache,
-            dispatcher: Some(dispatcher),
+            engine_thread: Some(engine_thread),
             workers,
         }
     }
@@ -313,14 +327,14 @@ impl Server {
         Client { tx: self.ingress.clone(), next_id: self.next_id.clone() }
     }
 
-    /// Graceful shutdown: signal the dispatcher (live Client clones keep
+    /// Graceful shutdown: signal the engine loop (live Client clones keep
     /// the channel open, so dropping our sender is not enough), drain,
     /// join threads.
     pub fn shutdown(mut self) {
         let _ = self.ingress.send(Ingress::Shutdown);
         drop(self.ingress);
-        if let Some(d) = self.dispatcher.take() {
-            let _ = d.join();
+        if let Some(e) = self.engine_thread.take() {
+            let _ = e.join();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -328,135 +342,19 @@ impl Server {
     }
 }
 
-fn dispatcher_loop(
-    ingress: mpsc::Receiver<Ingress>,
-    work: mpsc::Sender<WorkItem>,
-    cfg: ServerConfig,
-    metrics: Arc<Metrics>,
-) {
-    // One batch window across ALL variants: concurrent data requests
-    // coalesce by arrival; a flush picks round-robin across the variants
-    // present (`fair_take`), then groups by variant so a worker can run the
-    // whole mixed window as one shared-base BatchPlan.
-    let mut window: VecDeque<Request> = VecDeque::new();
-    let mut open = true;
-    while open || !window.is_empty() {
-        // Pull with a small timeout so deadline flushes happen on time.
-        match ingress.recv_timeout(Duration::from_micros(500)) {
-            Ok(Ingress::Req(req)) => {
-                // Admin ops (and anything aimed at the reserved admin
-                // pseudo-variant) bypass batching: they never touch an
-                // engine, so making them wait behind a batch deadline would
-                // only delay alias flips.
-                let admin = matches!(req.payload, Payload::Admin(_))
-                    || req.variant == ADMIN_VARIANT;
-                if admin {
-                    if work.send(WorkItem::Admin(req)).is_err() {
-                        return; // workers gone
-                    }
-                } else {
-                    window.push_back(req);
-                }
-            }
-            Ok(Ingress::Shutdown) => open = false,
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
-        }
-        // Flush full windows immediately; overdue (or closing) windows flush
-        // whatever is there.
-        let now = Instant::now();
-        let due = window
-            .front()
-            .map(|r| now.duration_since(r.submitted) >= cfg.max_wait)
-            .unwrap_or(false);
-        while window.len() >= cfg.max_batch || ((due || !open) && !window.is_empty()) {
-            let requests = fair_take(&mut window, cfg.max_batch);
-            metrics.record_batch(requests.len());
-            if work.send(WorkItem::Window(group_by_variant(requests))).is_err() {
-                return; // workers gone
-            }
-        }
-    }
-    // work sender drops here -> workers drain and exit.
-}
-
-/// Pick up to `max` requests from the window **round-robin across
-/// variants** (variants ordered by first appearance, per-variant FIFO
-/// preserved), so a variant flooding the ingress cannot fill whole windows
-/// and starve a cold variant's lone request. The window's overall oldest
-/// request is always picked (its variant leads the rotation), so the
-/// deadline check on `window.front()` keeps working; unpicked requests stay
-/// in arrival order.
-fn fair_take(window: &mut VecDeque<Request>, max: usize) -> Vec<Request> {
-    if window.len() <= max {
-        return window.drain(..).collect();
-    }
-    // Bucket indices by variant, first-appearance order.
-    let mut order: Vec<&str> = Vec::new();
-    let mut buckets: HashMap<&str, VecDeque<usize>> = HashMap::new();
-    for (i, req) in window.iter().enumerate() {
-        let entry = buckets.entry(req.variant.as_str()).or_default();
-        if entry.is_empty() && !order.contains(&req.variant.as_str()) {
-            order.push(req.variant.as_str());
-        }
-        entry.push_back(i);
-    }
-    let mut picked = vec![false; window.len()];
-    let mut n = 0usize;
-    'rounds: loop {
-        let mut any = false;
-        for v in &order {
-            if let Some(i) = buckets.get_mut(v).and_then(|b| b.pop_front()) {
-                picked[i] = true;
-                n += 1;
-                any = true;
-                if n == max {
-                    break 'rounds;
-                }
-            }
-        }
-        if !any {
-            break;
-        }
-    }
-    // Drain picked indices preserving arrival order on both sides.
-    let mut taken = Vec::with_capacity(n);
-    let mut rest = VecDeque::with_capacity(window.len() - n);
-    for (i, req) in window.drain(..).enumerate() {
-        if picked[i] {
-            taken.push(req);
-        } else {
-            rest.push_back(req);
-        }
-    }
-    *window = rest;
-    taken
-}
-
-/// Group a flushed window by variant, preserving arrival order both across
-/// groups (first appearance) and within each group.
-fn group_by_variant(requests: Vec<Request>) -> Vec<VariantGroup> {
-    let mut groups: Vec<VariantGroup> = Vec::new();
-    let mut index: HashMap<String, usize> = HashMap::new();
-    for req in requests {
-        match index.get(&req.variant) {
-            Some(&i) => groups[i].requests.push(req),
-            None => {
-                index.insert(req.variant.clone(), groups.len());
-                groups.push(VariantGroup { variant: req.variant.clone(), requests: vec![req] });
-            }
-        }
-    }
-    groups
-}
-
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     work: Arc<Mutex<mpsc::Receiver<WorkItem>>>,
     cache: Arc<VariantCache>,
     metrics: Arc<Metrics>,
     engine: Engine,
     sync_seqs: Arc<SyncSeqs>,
+    notify: mpsc::Sender<Ingress>,
+    n_compute_threads: usize,
 ) {
+    // Apply the configured intra-host compute width to everything this
+    // worker executes (0 = pool default).
+    pool::set_thread_limit(n_compute_threads);
     // One Transformer per worker (RoPE tables etc.) for the native engine.
     let tf = Transformer::new(cache.base().cfg());
     // The `(variant, version)` set this worker's previous window executed;
@@ -503,6 +401,9 @@ fn worker_loop(
                 run_window(groups, batch_start, &tf, &cache, &metrics, &engine, &mut last_set);
             }
         }
+        // Free this worker's slot so the engine can step again (ignore
+        // send failure: the engine is gone during shutdown drain).
+        let _ = notify.send(Ingress::StepDone);
     }
 }
 
@@ -958,55 +859,3 @@ fn argmax_f64(xs: &[f64]) -> usize {
     best.1
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn req(variant: &str) -> Request {
-        Request::new(0, variant, Payload::perplexity("probe text")).0
-    }
-
-    #[test]
-    fn fair_take_round_robins_so_a_hot_variant_cannot_starve_a_cold_one() {
-        // Six "hot" requests arrive before two "cold" ones; a 4-slot flush
-        // under strict FIFO would be all hot. Fair share must seat the cold
-        // variant's requests in the same window.
-        let mut window: VecDeque<Request> = VecDeque::new();
-        for _ in 0..6 {
-            window.push_back(req("hot"));
-        }
-        window.push_back(req("cold"));
-        window.push_back(req("cold"));
-        let taken = fair_take(&mut window, 4);
-        assert_eq!(taken.len(), 4);
-        let cold_taken = taken.iter().filter(|r| r.variant == "cold").count();
-        assert_eq!(cold_taken, 2, "the hot variant must not starve the cold one");
-        assert_eq!(taken[0].variant, "hot", "the overall oldest request always flushes");
-        // Leftovers keep arrival order so the deadline check stays valid.
-        assert_eq!(window.len(), 4);
-        assert!(window.iter().all(|r| r.variant == "hot"));
-        // A window that fits entirely drains in arrival order.
-        let taken = fair_take(&mut window, 8);
-        assert_eq!(taken.len(), 4);
-        assert!(window.is_empty());
-    }
-
-    #[test]
-    fn fair_take_covers_every_variant_when_slots_allow() {
-        let mut window: VecDeque<Request> = VecDeque::new();
-        for _ in 0..5 {
-            window.push_back(req("a"));
-        }
-        window.push_back(req("b"));
-        window.push_back(req("c"));
-        window.push_back(req("d"));
-        let taken = fair_take(&mut window, 4);
-        let variants: std::collections::HashSet<&str> =
-            taken.iter().map(|r| r.variant.as_str()).collect();
-        assert_eq!(
-            variants.len(),
-            4,
-            "with max_batch >= distinct variants, every waiting variant gets a slot"
-        );
-    }
-}

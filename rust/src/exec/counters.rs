@@ -23,6 +23,10 @@ static MODULE_READS: AtomicU64 = AtomicU64::new(0);
 static MODULES_INHERITED: AtomicU64 = AtomicU64::new(0);
 static WIRE_BYTES: AtomicU64 = AtomicU64::new(0);
 static WIRE_FILES: AtomicU64 = AtomicU64::new(0);
+static POOL_TASKS: AtomicU64 = AtomicU64::new(0);
+static POOL_IDLE_NS: AtomicU64 = AtomicU64::new(0);
+static ENGINE_STEPS: AtomicU64 = AtomicU64::new(0);
+static ACT_ROW_READS: AtomicU64 = AtomicU64::new(0);
 
 /// Record one pass of activations through a resident base/dense weight
 /// matrix.
@@ -60,6 +64,31 @@ pub(crate) fn record_wire_file() {
     WIRE_FILES.fetch_add(1, Ordering::Relaxed);
 }
 
+/// Record one chunk claimed and executed by the compute pool.
+pub(crate) fn record_pool_task() {
+    POOL_TASKS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record `n` nanoseconds a pool worker spent parked waiting for work
+/// (steal-or-idle time: the gap between jobs, a saturation signal).
+pub(crate) fn record_pool_idle_ns(n: u64) {
+    POOL_IDLE_NS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Record one engine step: one fair-share window admitted onto an idle
+/// worker slot by the continuous-batching loop.
+pub(crate) fn record_engine_step() {
+    ENGINE_STEPS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record `n` activation-row reads: one per (activation row × output row)
+/// traversal of a resident weight matrix. The single-pass fused kernel
+/// halves this against the two-pass base-then-delta path, and the bench
+/// asserts that through this counter.
+pub(crate) fn record_act_row_reads(n: u64) {
+    ACT_ROW_READS.fetch_add(n, Ordering::Relaxed);
+}
+
 /// Total base GEMMs since process start (or the last [`reset`]).
 pub fn base_gemms() -> u64 {
     BASE_GEMMS.load(Ordering::Relaxed)
@@ -93,6 +122,26 @@ pub fn wire_files() -> u64 {
     WIRE_FILES.load(Ordering::Relaxed)
 }
 
+/// Total chunks executed by the compute pool.
+pub fn pool_tasks() -> u64 {
+    POOL_TASKS.load(Ordering::Relaxed)
+}
+
+/// Total nanoseconds pool workers spent parked between jobs.
+pub fn pool_steal_or_idle_ns() -> u64 {
+    POOL_IDLE_NS.load(Ordering::Relaxed)
+}
+
+/// Total engine steps (windows admitted by the continuous-batching loop).
+pub fn engine_steps() -> u64 {
+    ENGINE_STEPS.load(Ordering::Relaxed)
+}
+
+/// Total activation-row reads through resident weight matrices.
+pub fn activation_row_reads() -> u64 {
+    ACT_ROW_READS.load(Ordering::Relaxed)
+}
+
 /// Reset all counters to zero (benches/tests only).
 pub fn reset() {
     BASE_GEMMS.store(0, Ordering::Relaxed);
@@ -101,6 +150,10 @@ pub fn reset() {
     MODULES_INHERITED.store(0, Ordering::Relaxed);
     WIRE_BYTES.store(0, Ordering::Relaxed);
     WIRE_FILES.store(0, Ordering::Relaxed);
+    POOL_TASKS.store(0, Ordering::Relaxed);
+    POOL_IDLE_NS.store(0, Ordering::Relaxed);
+    ENGINE_STEPS.store(0, Ordering::Relaxed);
+    ACT_ROW_READS.store(0, Ordering::Relaxed);
 }
 
 #[cfg(test)]

@@ -17,11 +17,18 @@
 //!   the activation row per (token, output-row) pair.
 //! * Col axis: the scale varies along the row, so `z = v ⊙ x[t]` is formed
 //!   once per token and the delta term is `Σ_i sign(j,i)·z_i`.
+//!
+//! Both terms come out of a *single* traversal of the activation row
+//! (`fused_dot_ssum`): the base dot lanes and the signed-sum lanes
+//! interleave over the same 8-element groups, so the fused path reads each
+//! activation row once per output row where base-then-delta reads it twice
+//! — bitwise-equal to the two-pass result by construction.
 
 use super::counters;
 use crate::delta::types::{Axis, DeltaModule};
 use crate::tensor::{dot, Tensor2};
 use crate::util::par;
+use std::sync::OnceLock;
 
 /// A linear operator `y = x · Wᵀ` (`x: [n, d_in] → y: [n, d_out]`), abstract
 /// over how `W` is resident: dense f32 rows or base + packed 1-bit delta.
@@ -74,6 +81,7 @@ impl LinearOp for DenseLinear<'_> {
         assert_eq!(x.cols, self.d_in, "input dim mismatch");
         assert_eq!((y.rows, y.cols), (x.rows, self.d_out), "output shape mismatch");
         counters::record_base_gemm();
+        counters::record_act_row_reads((x.rows * self.d_out) as u64);
         let (k, m) = (self.d_in, self.d_out);
         let a = &x.data;
         let w = self.w;
@@ -127,6 +135,10 @@ impl LinearOp for FusedDeltaLinear<'_> {
         assert_eq!(x.cols, d_in, "input dim mismatch");
         assert_eq!((y.rows, y.cols), (x.rows, d_out), "output shape mismatch");
         counters::record_base_gemm();
+        // Single traversal per (activation row, output row): the fused
+        // kernel reads the activation row once where base-then-delta would
+        // read it twice.
+        counters::record_act_row_reads((x.rows * d_out) as u64);
         let base = self.base;
         match m.axis {
             Axis::Col => {
@@ -138,8 +150,13 @@ impl LinearOp for FusedDeltaLinear<'_> {
                             *zi = vi * xi;
                         }
                         for (j, o) in yrow.iter_mut().enumerate() {
-                            *o = dot(xrow, &base[j * d_in..(j + 1) * d_in])
-                                + signed_sum(&z, m.mask.row_words(j));
+                            let (d, s) = fused_dot_ssum(
+                                xrow,
+                                &base[j * d_in..(j + 1) * d_in],
+                                &z,
+                                m.mask.row_words(j),
+                            );
+                            *o = d + s;
                         }
                     }
                 });
@@ -151,8 +168,13 @@ impl LinearOp for FusedDeltaLinear<'_> {
                     for (ri, yrow) in chunk.chunks_mut(d_out).enumerate() {
                         let xrow = x.row(row0 + ri);
                         for (j, o) in yrow.iter_mut().enumerate() {
-                            *o = dot(xrow, &base[j * d_in..(j + 1) * d_in])
-                                + m.scale_at(j, 0) * signed_sum(xrow, m.mask.row_words(j));
+                            let (d, s) = fused_dot_ssum(
+                                xrow,
+                                &base[j * d_in..(j + 1) * d_in],
+                                xrow,
+                                m.mask.row_words(j),
+                            );
+                            *o = d + m.scale_at(j, 0) * s;
                         }
                     }
                 });
@@ -170,20 +192,131 @@ impl LinearOp for FusedDeltaLinear<'_> {
 /// fused delta path. The sign is injected by XOR-flipping the IEEE sign
 /// bit, so ±vals[i] never branches.
 ///
-/// Dispatch: an AVX2 wide path when the CPU has it (runtime-detected, the
-/// check is a cached atomic load), otherwise the portable [`signed_sum_u64`]
-/// word path. Both consume the same u32 bitplane; within one process the
-/// same path always runs, so results are reproducible run-to-run.
+/// Dispatch: resolved once per process into a cached `OnceLock` function
+/// pointer — an AVX2 entry when the CPU has it, otherwise the portable
+/// [`signed_sum_u64`] word path — so the hot loop pays one relaxed load
+/// instead of a feature probe per invocation. Both paths consume the same
+/// u32 bitplane; within one process the same path always runs, so results
+/// are reproducible run-to-run.
 #[inline]
 pub fn signed_sum(vals: &[f32], words: &[u32]) -> f32 {
+    static IMPL: OnceLock<fn(&[f32], &[u32]) -> f32> = OnceLock::new();
+    let f = *IMPL.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("avx2") {
+            return signed_sum_dispatch_avx2;
+        }
+        signed_sum_u64
+    });
+    f(vals, words)
+}
+
+/// The AVX2-capable entry installed by [`signed_sum`]'s cached dispatch:
+/// rows too short for a full 32-lane word fall back to the portable path
+/// (same cutoff the uncached dispatch used, so numerics are unchanged).
+#[cfg(target_arch = "x86_64")]
+fn signed_sum_dispatch_avx2(vals: &[f32], words: &[u32]) -> f32 {
+    if vals.len() >= 32 {
+        // SAFETY: this entry is only installed after AVX2 was detected.
+        unsafe { signed_sum_avx2(vals, words) }
+    } else {
+        signed_sum_u64(vals, words)
+    }
+}
+
+/// Whether the dispatched [`signed_sum`] takes the AVX2 wide path for rows
+/// of `len` values. The fused single-pass kernel keys off this to mirror
+/// the *exact* accumulation structure (lane assignment, horizontal-sum
+/// order, tail handling) of whichever two-pass reduction would have run,
+/// keeping fused output bitwise-equal to `dot(..) + signed_sum(..)`.
+#[inline]
+fn ssum_wide_path(len: usize) -> bool {
     #[cfg(target_arch = "x86_64")]
     {
-        if vals.len() >= 32 && is_x86_feature_detected!("avx2") {
-            // SAFETY: AVX2 presence was just checked at runtime.
-            return unsafe { signed_sum_avx2(vals, words) };
+        static AVX2: OnceLock<bool> = OnceLock::new();
+        len >= 32 && *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = len;
+        false
+    }
+}
+
+/// Single-traversal fused kernel: one pass over an activation row computes
+/// both the base dot product and the packed-mask signed sum, returning
+/// `(dot, ssum)` with bits identical to `(dot(x, w), signed_sum(s_src,
+/// words))`. `x` drives the dot against the base row `w`; `s_src` drives
+/// the signed reduction (`x` itself for row-constant scale axes, `v ⊙ x`
+/// for the Col axis). Halving the activation-row reads is the win on the
+/// single-request path, where the row is streamed from memory per output
+/// row.
+///
+/// Bitwise equality holds because each partial accumulator replicates its
+/// two-pass counterpart exactly: dot lanes follow [`dot`]'s eight-lane
+/// 8-block structure and final reduction tree; ssum lanes follow whichever
+/// structure the dispatched [`signed_sum`] would use for this row length —
+/// the AVX2 32-lane word grouping (whose per-lane adds are IEEE-identical
+/// to this scalar emulation) or the portable 64-lane u64 grouping — then
+/// the same horizontal sum and bitwise tail.
+fn fused_dot_ssum(x: &[f32], w: &[f32], s_src: &[f32], words: &[u32]) -> (f32, f32) {
+    debug_assert_eq!(x.len(), w.len());
+    debug_assert_eq!(x.len(), s_src.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let mut d = [0f32; 8];
+    let mut lanes = [0f32; 8];
+    // Fused section: full sign-word blocks, interleaving dot lanes and
+    // ssum lanes over the same 8-element groups.
+    let (done8, ssum_tail) = if ssum_wide_path(n) {
+        let full32 = n / 32;
+        for wi in 0..full32 {
+            let wrd = words[wi];
+            for c in 0..4 {
+                let o = wi * 32 + c * 8;
+                for l in 0..8 {
+                    d[l] += x[o + l] * w[o + l];
+                    let flip = (((wrd >> (c * 8 + l)) & 1) ^ 1) << 31;
+                    lanes[l] += f32::from_bits(s_src[o + l].to_bits() ^ flip);
+                }
+            }
+        }
+        (full32 * 4, full32 * 32)
+    } else {
+        let full64 = n / 64;
+        for wi in 0..full64 {
+            let wrd = words[2 * wi] as u64 | (words[2 * wi + 1] as u64) << 32;
+            for c in 0..8 {
+                let o = wi * 64 + c * 8;
+                for l in 0..8 {
+                    d[l] += x[o + l] * w[o + l];
+                    let flip = ((((wrd >> (c * 8 + l)) as u32) & 1) ^ 1) << 31;
+                    lanes[l] += f32::from_bits(s_src[o + l].to_bits() ^ flip);
+                }
+            }
+        }
+        (full64 * 8, full64 * 64)
+    };
+    // Dot remainder: the full 8-blocks past the fused section, then the
+    // scalar tail — same order of operations as `dot`.
+    for ci in done8..chunks {
+        let o = ci * 8;
+        for l in 0..8 {
+            d[l] += x[o + l] * w[o + l];
         }
     }
-    signed_sum_u64(vals, words)
+    let mut dacc = (d[0] + d[1]) + (d[2] + d[3]) + ((d[4] + d[5]) + (d[6] + d[7]));
+    for i in chunks * 8..n {
+        dacc += x[i] * w[i];
+    }
+    // Ssum horizontal sum + bitwise tail — same order as the dispatched
+    // signed_sum path.
+    let mut sacc = lanes.iter().sum::<f32>();
+    for i in ssum_tail..n {
+        let wrd = words[i / 32];
+        sacc += f32::from_bits(s_src[i].to_bits() ^ ((((wrd >> (i % 32)) & 1) ^ 1) << 31));
+    }
+    (dacc, sacc)
 }
 
 /// Portable word path: two u32 mask words fold into one `u64` bitplane word
@@ -265,6 +398,9 @@ pub fn add_delta_rows(m: &DeltaModule, x: &Tensor2, y: &mut Tensor2, rows: std::
         return;
     }
     let n_rows = rows.end - rows.start;
+    // Second traversal of the activation rows (the base GEMM already read
+    // them once) — the per-variant half of the two-pass batched path.
+    counters::record_act_row_reads((n_rows * d_out) as u64);
     let y_slice = &mut y.data[rows.start * d_out..rows.end * d_out];
     match m.axis {
         Axis::Col => {
@@ -426,6 +562,55 @@ mod tests {
             let disp = signed_sum(&vals, mask.row_words(0));
             assert!((disp - word).abs() < tol, "dispatch d_in {d_in}: {disp} vs {word}");
         }
+    }
+
+    #[test]
+    fn fused_kernel_is_bitwise_equal_to_two_pass_reductions() {
+        // Every tail shape: sub-8, sub-32 (u64/AVX2 cutoff), one-u32-word,
+        // ragged u64 folds, and exact multiples.
+        let mut r = Rng::new(41);
+        for d_in in [1usize, 7, 8, 31, 32, 33, 63, 64, 65, 96, 100, 127, 128, 129, 200] {
+            let delta: Vec<f32> = (0..d_in).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let mask = PackedMask::pack(&delta, 1, d_in);
+            let x: Vec<f32> = (0..d_in).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let w: Vec<f32> = (0..d_in).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let z: Vec<f32> = x.iter().map(|&v| 0.13 * v).collect();
+            // Row-constant axes: signed sum over the activation row itself.
+            let (df, sf) = fused_dot_ssum(&x, &w, &x, mask.row_words(0));
+            assert_eq!(df.to_bits(), dot(&x, &w).to_bits(), "dot d_in {d_in}");
+            assert_eq!(
+                sf.to_bits(),
+                signed_sum(&x, mask.row_words(0)).to_bits(),
+                "ssum d_in {d_in}"
+            );
+            // Col axis: signed sum over a separately scaled source.
+            let (dz, sz) = fused_dot_ssum(&x, &w, &z, mask.row_words(0));
+            assert_eq!(dz.to_bits(), dot(&x, &w).to_bits(), "dot/z d_in {d_in}");
+            assert_eq!(
+                sz.to_bits(),
+                signed_sum(&z, mask.row_words(0)).to_bits(),
+                "ssum/z d_in {d_in}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_forward_reads_activation_rows_once_not_twice() {
+        let (d_out, d_in) = (9, 100);
+        let (base, m) = mk_module(d_out, d_in, Axis::Row, 77);
+        let mut r = Rng::new(78);
+        let x = rand_x(&mut r, 4, d_in);
+        // Counters are process-global and tests run concurrently, so assert
+        // deltas as lower bounds only (the bench does the strict single-pass
+        // < two-pass comparison in a process it controls).
+        let t0 = counters::activation_row_reads();
+        let _ = FusedDeltaLinear::new(&base, &m).forward(&x);
+        let t1 = counters::activation_row_reads();
+        assert!(t1 - t0 >= (4 * d_out) as u64, "fused pass must record row reads");
+        let mut y = DenseLinear::new(&base, d_out, d_in).forward(&x);
+        add_delta_rows(&m, &x, &mut y, 0..4);
+        let t2 = counters::activation_row_reads();
+        assert!(t2 - t1 >= (2 * 4 * d_out) as u64, "two-pass path must record both passes");
     }
 
     #[test]

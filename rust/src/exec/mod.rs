@@ -9,8 +9,13 @@
 //! * [`batch`] — [`BatchPlan`]: batched multi-variant execution, one shared
 //!   base GEMM per module for a whole mixed-variant batch with per-variant
 //!   mask reductions on row slices.
-//! * [`counters`] — global op counters (base GEMMs) the benches use to
-//!   assert the shared-base structure.
+//! * [`counters`] — global op counters (base GEMMs, pool tasks,
+//!   activation-row reads, engine steps) the benches use to assert the
+//!   shared-base and single-pass structure.
+//! * [`pool`] — the persistent intra-host compute pool behind
+//!   [`par`](crate::util::par): dynamic chunk claiming over parked workers,
+//!   width set by `PAWD_COMPUTE_THREADS` / `ServerConfig::n_compute_threads`
+//!   and scoped per thread via [`pool::with_thread_limit`].
 //! * [`weights`] — [`Weights`] sources: [`FlatParams`](crate::model::FlatParams)
 //!   (dense), [`PackedVariant`] (base + packed delta), and the cache-facing
 //!   [`VariantWeights`] with packed-byte residency accounting.
@@ -22,6 +27,7 @@
 pub mod batch;
 pub mod counters;
 pub mod linear;
+pub mod pool;
 pub mod weights;
 
 pub use batch::{BatchPlan, BatchSource, RowSpan, Uniform};

@@ -1,0 +1,349 @@
+//! Persistent intra-host compute pool for the serving hot path.
+//!
+//! The data-parallel helpers in [`par`](crate::util::par) used to spawn
+//! scoped threads per call; at serving granularity (one GEMM per module per
+//! window) that spawn cost is paid hundreds of times per request. This
+//! module keeps one process-wide set of workers parked on a condvar and
+//! hands them *jobs*: a chunked range `0..n` claimed dynamically through an
+//! atomic cursor, so uneven chunks load-balance without any per-call thread
+//! creation.
+//!
+//! **Determinism contract.** The pool only changes *who* executes a chunk,
+//! never what a chunk computes: callers must keep every reduction inside a
+//! single chunk-invocation (parallelize across output rows / row slices /
+//! sequences, never across the elements of one accumulation). Under that
+//! contract parallel output is bitwise-equal to serial output at any thread
+//! count — the property tests in `tests/engine_parallel.rs` assert it.
+//!
+//! **Thread knobs.** The default width comes from `PAWD_COMPUTE_THREADS`
+//! (falling back to the machine parallelism); [`set_thread_limit`] /
+//! [`with_thread_limit`] override it per thread (the serving workers apply
+//! `ServerConfig::n_compute_threads` this way). A limit of 1 bypasses the
+//! pool entirely — the chunk closure runs inline on the caller.
+
+use super::counters;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+/// One published unit of pool work: `f` over the chunked range `0..n`.
+///
+/// The closure pointer is lifetime-erased so the job can be shared with
+/// long-lived workers; soundness is the claim protocol below — `f` is only
+/// ever dereferenced for a chunk index below `n_chunks`, and the publishing
+/// caller does not return (and so does not drop `f`) until `pending` hits
+/// zero, after which every later claim falls off the end of the range.
+struct Job {
+    f: *const (dyn Fn(usize, usize) + Sync),
+    n: usize,
+    chunk: usize,
+    n_chunks: usize,
+    /// Next chunk index to claim.
+    next: AtomicUsize,
+    /// Chunks claimed but not yet completed + chunks never claimed.
+    pending: AtomicUsize,
+    /// Max threads that may execute this job, *including* the caller.
+    max_workers: usize,
+    /// Pool workers that have joined this job.
+    joined: AtomicUsize,
+    done_m: Mutex<()>,
+    done_cv: Condvar,
+}
+
+// SAFETY: the raw closure pointer is only dereferenced under the claim
+// protocol documented on `Job`; everything else in the struct is Sync.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct State {
+    job: Option<Arc<Job>>,
+    /// Bumped on every publish so parked workers can tell a new job from
+    /// the one they already consumed.
+    generation: u64,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A persistent worker pool. Most callers want the process-wide
+/// [`global`] pool; constructing one directly is for tests.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn a pool with `capacity` parked worker threads (callers always
+    /// participate too, so peak parallelism is `capacity + 1`).
+    pub fn new(capacity: usize) -> Pool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { job: None, generation: 0 }),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..capacity)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("pawd-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool { shared, workers }
+    }
+
+    /// Run `f(lo, hi)` over disjoint chunks covering `0..n`, on up to
+    /// `threads` threads (caller included), each chunk at least
+    /// `min_per_chunk` items when the range allows. Blocks until every
+    /// chunk has completed. `threads <= 1` (or a single chunk) runs inline.
+    pub fn run<F>(&self, n: usize, threads: usize, min_per_chunk: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        // Over-chunk by 4x relative to the thread budget so uneven chunk
+        // costs load-balance through the shared cursor.
+        let chunk = min_per_chunk.max(n.div_ceil(threads.max(1) * 4)).max(1);
+        let n_chunks = n.div_ceil(chunk);
+        if threads <= 1 || n_chunks <= 1 {
+            f(0, n);
+            return;
+        }
+        let fobj: &(dyn Fn(usize, usize) + Sync) = &f;
+        // SAFETY: lifetime erasure only; see the claim protocol on `Job`.
+        let fptr: *const (dyn Fn(usize, usize) + Sync) = unsafe { std::mem::transmute(fobj) };
+        let job = Arc::new(Job {
+            f: fptr,
+            n,
+            chunk,
+            n_chunks,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n_chunks),
+            max_workers: threads,
+            joined: AtomicUsize::new(0),
+            done_m: Mutex::new(()),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(job.clone());
+            st.generation += 1;
+            self.shared.work_cv.notify_all();
+        }
+        // The caller always participates, so the job completes even when
+        // every pool worker is busy elsewhere (this is also what makes
+        // nested `run` calls deadlock-free).
+        work_on(&job);
+        let mut g = job.done_m.lock().unwrap();
+        while job.pending.load(Ordering::Acquire) != 0 {
+            g = job.done_cv.wait(g).unwrap();
+        }
+        drop(g);
+        // Retract the slot if no newer job replaced it, so parked workers
+        // do not keep the finished job's Arc alive.
+        let mut st = self.shared.state.lock().unwrap();
+        if st.job.as_ref().is_some_and(|cur| Arc::ptr_eq(cur, &job)) {
+            st.job = None;
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        {
+            let _st = self.shared.state.lock().unwrap();
+            self.shared.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                if st.generation != seen {
+                    seen = st.generation;
+                    if let Some(j) = &st.job {
+                        break j.clone();
+                    }
+                    continue;
+                }
+                let parked = Instant::now();
+                st = shared.work_cv.wait(st).unwrap();
+                counters::record_pool_idle_ns(parked.elapsed().as_nanos() as u64);
+            }
+        };
+        // Honor the job's thread budget: late workers beyond it skip the
+        // job (their generation is already consumed, so they re-park).
+        if job.joined.fetch_add(1, Ordering::Relaxed) + 1 < job.max_workers {
+            work_on(&job);
+        }
+    }
+}
+
+/// Claim and execute chunks of `job` until the cursor runs off the end.
+fn work_on(job: &Job) {
+    loop {
+        let c = job.next.fetch_add(1, Ordering::Relaxed);
+        if c >= job.n_chunks {
+            return;
+        }
+        let lo = c * job.chunk;
+        let hi = ((c + 1) * job.chunk).min(job.n);
+        counters::record_pool_task();
+        // SAFETY: `c < n_chunks`, so the publishing caller is still inside
+        // `run` and `f` is alive (it cannot observe `pending == 0` before
+        // this chunk's decrement below).
+        unsafe { (*job.f)(lo, hi) };
+        if job.pending.fetch_sub(1, Ordering::Release) == 1 {
+            let _g = job.done_m.lock().unwrap();
+            job.done_cv.notify_all();
+        }
+    }
+}
+
+/// The process-wide pool. Sized at `max(default_threads(), 4)` workers so
+/// thread-limit property tests can exercise 4-way parallelism even on
+/// small machines; idle workers cost only a parked thread each.
+pub fn global() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool::new(default_threads().max(4)))
+}
+
+/// Default compute width: `PAWD_COMPUTE_THREADS` if set (> 0), else the
+/// machine parallelism. Read once per process.
+pub fn default_threads() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("PAWD_COMPUTE_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    })
+}
+
+thread_local! {
+    /// Per-thread override of the compute width; 0 = use the default.
+    static LIMIT: Cell<usize> = const { Cell::new(0) };
+}
+
+/// The compute width in effect on this thread.
+pub fn current_threads() -> usize {
+    let l = LIMIT.with(|c| c.get());
+    if l > 0 {
+        l
+    } else {
+        default_threads()
+    }
+}
+
+/// Set this thread's compute width (0 restores the default). The serving
+/// workers call this with `ServerConfig::n_compute_threads` at startup.
+pub fn set_thread_limit(n: usize) {
+    LIMIT.with(|c| c.set(n));
+}
+
+/// Run `f` with this thread's compute width set to `n`, restoring the
+/// previous limit afterwards (panic-safe).
+pub fn with_thread_limit<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LIMIT.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(LIMIT.with(|c| c.get()));
+    LIMIT.with(|c| c.set(n));
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_covers_range_exactly_once() {
+        let pool = Pool::new(3);
+        let sum = AtomicU64::new(0);
+        pool.run(1000, 4, 1, |lo, hi| {
+            let mut local = 0u64;
+            for i in lo..hi {
+                local += i as u64;
+            }
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn serial_threshold_runs_inline() {
+        let pool = Pool::new(2);
+        let calls = AtomicU64::new(0);
+        pool.run(10, 1, 1, |lo, hi| {
+            assert_eq!((lo, hi), (0, 10));
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn nested_runs_complete() {
+        let pool = Pool::new(2);
+        let sum = AtomicU64::new(0);
+        pool.run(8, 3, 1, |lo, hi| {
+            for _ in lo..hi {
+                // Nested job on the same pool: the inner caller
+                // participates, so this cannot deadlock even with every
+                // worker busy on the outer job.
+                pool.run(16, 3, 1, |a, b| {
+                    sum.fetch_add((b - a) as u64, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 8 * 16);
+    }
+
+    #[test]
+    fn zero_items_is_a_no_op() {
+        let pool = Pool::new(1);
+        pool.run(0, 4, 1, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn thread_limit_scopes_and_restores() {
+        let before = current_threads();
+        let inside = with_thread_limit(3, current_threads);
+        assert_eq!(inside, 3);
+        assert_eq!(current_threads(), before);
+        let nested = with_thread_limit(2, || with_thread_limit(5, current_threads));
+        assert_eq!(nested, 5);
+        assert_eq!(current_threads(), before);
+    }
+
+    #[test]
+    fn global_pool_accepts_work() {
+        let hits = AtomicU64::new(0);
+        global().run(64, 4, 1, |lo, hi| {
+            hits.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 64);
+    }
+}

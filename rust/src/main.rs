@@ -157,7 +157,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         println!("  {name}: ok={:?} in {:?}", resp.result.is_ok(), resp.timing.total);
     }
     let snap = server.metrics.snapshot();
-    println!("served {} requests, {} cold starts", snap.served, snap.cold_starts);
+    println!(
+        "served {} requests, {} cold starts, {} engine steps, {} pool tasks",
+        snap.served, snap.cold_starts, snap.engine_steps, snap.pool_tasks
+    );
     server.shutdown();
     Ok(())
 }

@@ -222,11 +222,25 @@ impl Transformer {
     /// RoPE per head for rows `row0..row0+len` of `q` and `k`, with
     /// positions local to the slice (one sequence of a stacked batch).
     fn rope_rows(&self, q: &mut Tensor2, k: &mut Tensor2, row0: usize, len: usize) {
+        let d = self.cfg.dim;
+        self.rope_span(
+            &mut q.data[row0 * d..(row0 + len) * d],
+            &mut k.data[row0 * d..(row0 + len) * d],
+            len,
+        );
+    }
+
+    /// RoPE over one sequence's contiguous `[len, dim]` row slices of the
+    /// stacked q/k buffers — the slice-level core of
+    /// [`rope_rows`](Self::rope_rows), so a batched forward can hand
+    /// disjoint sequences to different pool workers.
+    fn rope_span(&self, q_rows: &mut [f32], k_rows: &mut [f32], len: usize) {
         let (nh, hd) = (self.cfg.n_heads, self.cfg.head_dim());
+        let d = self.cfg.dim;
         for pos in 0..len {
             for h in 0..nh {
-                self.rope.apply(&mut q.row_mut(row0 + pos)[h * hd..(h + 1) * hd], pos);
-                self.rope.apply(&mut k.row_mut(row0 + pos)[h * hd..(h + 1) * hd], pos);
+                self.rope.apply(&mut q_rows[pos * d + h * hd..pos * d + (h + 1) * hd], pos);
+                self.rope.apply(&mut k_rows[pos * d + h * hd..pos * d + (h + 1) * hd], pos);
             }
         }
     }
@@ -243,7 +257,24 @@ impl Transformer {
         len: usize,
         out: &mut Tensor2,
     ) {
+        let d = self.cfg.dim;
+        self.attend_span(q, k, v, row0, len, &mut out.data[row0 * d..(row0 + len) * d]);
+    }
+
+    /// Attention core writing one sequence's `[len, dim]` output slice —
+    /// reads of q/k/v are confined to rows `row0..row0+len`, so disjoint
+    /// sequences of a stacked batch can run on different pool workers.
+    fn attend_span(
+        &self,
+        q: &Tensor2,
+        k: &Tensor2,
+        v: &Tensor2,
+        row0: usize,
+        len: usize,
+        out_rows: &mut [f32],
+    ) {
         let (nh, hd) = (self.cfg.n_heads, self.cfg.head_dim());
+        let d = self.cfg.dim;
         let scale = 1.0 / (hd as f32).sqrt();
         for h in 0..nh {
             let hs = h * hd;
@@ -254,7 +285,7 @@ impl Transformer {
                     scores[ki] = dot(qrow, &k.row(row0 + ki)[hs..hs + hd]) * scale;
                 }
                 softmax_inplace(&mut scores[..=qi]);
-                let orow = &mut out.row_mut(row0 + qi)[hs..hs + hd];
+                let orow = &mut out_rows[qi * d + hs..qi * d + hs + hd];
                 for ki in 0..=qi {
                     let w = scores[ki];
                     let vrow = &v.row(row0 + ki)[hs..hs + hd];
@@ -324,13 +355,42 @@ impl Transformer {
             let mut q = fwd(ProjKind::Q, &normed); // [ΣT, d]
             let mut k = fwd(ProjKind::K, &normed);
             let v = fwd(ProjKind::V, &normed);
-            // RoPE + causal attention never cross sequence boundaries.
-            for s in &spans {
-                self.rope_rows(&mut q, &mut k, s.start, s.end - s.start);
+            // RoPE + causal attention never cross sequence boundaries, so
+            // the spans fan out across the pool; per-sequence arithmetic is
+            // untouched, keeping batched output bitwise-equal to the
+            // per-request path at any thread count.
+            {
+                let qp = par::SendMutPtr(q.data.as_mut_ptr());
+                let kp = par::SendMutPtr(k.data.as_mut_ptr());
+                let spans_ref = &spans;
+                par::parallel_items(spans_ref.len(), spans_ref.len(), |i| {
+                    let s = &spans_ref[i];
+                    let len = s.end - s.start;
+                    // SAFETY: spans are disjoint contiguous row ranges of
+                    // the stacked batch, and the buffers outlive this call.
+                    let (qrows, krows) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(qp.0.add(s.start * d), len * d),
+                            std::slice::from_raw_parts_mut(kp.0.add(s.start * d), len * d),
+                        )
+                    };
+                    self.rope_span(qrows, krows, len);
+                });
             }
             let mut attn_out = Tensor2::zeros(total, d);
-            for s in &spans {
-                self.attend_rows(&q, &k, &v, s.start, s.end - s.start, &mut attn_out);
+            {
+                let op = par::SendMutPtr(attn_out.data.as_mut_ptr());
+                let (qr, kr, vr) = (&q, &k, &v);
+                let spans_ref = &spans;
+                par::parallel_items(spans_ref.len(), spans_ref.len(), |i| {
+                    let s = &spans_ref[i];
+                    let len = s.end - s.start;
+                    // SAFETY: as above — each span writes only its own rows.
+                    let orows = unsafe {
+                        std::slice::from_raw_parts_mut(op.0.add(s.start * d), len * d)
+                    };
+                    self.attend_span(qr, kr, vr, s.start, len, orows);
+                });
             }
             let proj = fwd(ProjKind::O, &attn_out); // [ΣT, d]
             x.add_assign(&proj);

@@ -1,19 +1,27 @@
-//! Data-parallel helpers built on `std::thread::scope`.
+//! Data-parallel helpers over the persistent compute pool.
 //!
 //! `rayon` is unavailable offline. The hot paths in this codebase (delta
-//! apply, matmul, calibration solves) are all chunked loops over row ranges,
-//! so a scoped fork-join over contiguous ranges is both simple and fast.
-//! Thread count defaults to the machine parallelism, clamped by work size so
-//! tiny inputs stay single-threaded (spawn overhead ~10s of µs).
+//! apply, matmul, calibration solves, batched forwards) are all chunked
+//! loops over row ranges, so a fork-join over contiguous ranges is both
+//! simple and fast. Work now runs on the process-wide
+//! [`pool`](crate::exec::pool) instead of per-call scoped threads: at
+//! serving granularity (one GEMM per module per window) the old spawn cost
+//! (~10s of µs per call) dominated small matrices.
+//!
+//! Thread count defaults to the pool's configured width
+//! (`PAWD_COMPUTE_THREADS` or the machine parallelism, clamped per thread
+//! by [`pool::with_thread_limit`]), and is further clamped by work size so
+//! tiny inputs stay single-threaded. Chunks never split a single
+//! reduction, so parallel results stay bitwise-equal to serial ones.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::exec::pool;
 
 /// Number of worker threads to use for `n_items` of work where each item is
 /// worth roughly `min_per_thread` items of sequential throughput.
 pub fn thread_count(n_items: usize, min_per_thread: usize) -> usize {
-    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cap = pool::current_threads();
     let by_work = n_items / min_per_thread.max(1);
-    hw.min(by_work.max(1))
+    cap.min(by_work.max(1))
 }
 
 /// Run `f(start, end)` over disjoint contiguous subranges of `0..n` in
@@ -30,23 +38,24 @@ where
         f(0, n);
         return;
     }
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|s| {
-        for t in 0..threads {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let fref = &f;
-            s.spawn(move || fref(lo, hi));
-        }
-    });
+    pool::global().run(n, threads, min_per_thread, f);
 }
+
+/// A `Send + Sync` wrapper for a raw mutable pointer, for parallel loops
+/// that hand disjoint sub-slices of one buffer to different threads.
+/// Callers are responsible for disjointness of the ranges they touch.
+#[derive(Clone, Copy)]
+pub struct SendMutPtr<T>(pub *mut T);
+
+// SAFETY: the wrapper only moves the pointer across threads; callers must
+// only dereference disjoint ranges (the same contract `split_at_mut`
+// enforces statically).
+unsafe impl<T: Send> Send for SendMutPtr<T> {}
+unsafe impl<T: Send> Sync for SendMutPtr<T> {}
 
 /// Parallel for over mutable row-chunks of a flat buffer: splits `data`
 /// (logically `n_rows` rows of `row_len`) into contiguous row ranges and
-/// hands each thread its disjoint `&mut [f32]` slice.
+/// hands each thread its disjoint `&mut [T]` slice.
 pub fn parallel_rows_mut<T: Send, F>(
     data: &mut [T],
     n_rows: usize,
@@ -62,25 +71,21 @@ pub fn parallel_rows_mut<T: Send, F>(
         f(0, data);
         return;
     }
-    let rows_per = n_rows.div_ceil(threads);
-    std::thread::scope(|s| {
-        let mut rest = data;
-        let mut row0 = 0usize;
-        while row0 < n_rows {
-            let take_rows = rows_per.min(n_rows - row0);
-            let (head, tail) = rest.split_at_mut(take_rows * row_len);
-            rest = tail;
-            let fref = &f;
-            let r0 = row0;
-            s.spawn(move || fref(r0, head));
-            row0 += take_rows;
-        }
+    let ptr = SendMutPtr(data.as_mut_ptr());
+    pool::global().run(n_rows, threads, min_rows_per_thread, move |row0, row1| {
+        // SAFETY: chunks from the pool cover disjoint row ranges of
+        // `0..n_rows`, so the reconstructed slices never alias, and the
+        // buffer outlives the call (`run` blocks until all chunks finish).
+        let chunk = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0.add(row0 * row_len), (row1 - row0) * row_len)
+        };
+        f(row0, chunk);
     });
 }
 
-/// Dynamic work distribution: threads pull item indices from a shared atomic
-/// counter. Use when per-item cost is highly variable (e.g. per-module
-/// calibration where module shapes differ).
+/// Dynamic work distribution: threads pull item indices from a shared
+/// cursor. Use when per-item cost is highly variable (e.g. per-module
+/// calibration where module shapes differ, or per-sequence attention).
 pub fn parallel_items<F>(n: usize, max_threads: usize, f: F)
 where
     F: Fn(usize) + Sync,
@@ -92,18 +97,9 @@ where
         }
         return;
     }
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            let fref = &f;
-            let nref = &next;
-            s.spawn(move || loop {
-                let i = nref.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                fref(i);
-            });
+    pool::global().run(n, threads, 1, |lo, hi| {
+        for i in lo..hi {
+            f(i);
         }
     });
 }
@@ -111,7 +107,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
     fn ranges_cover_exactly() {
@@ -150,6 +146,27 @@ mod tests {
         for r in 0..n_rows {
             for c in 0..row_len {
                 assert_eq!(data[r * row_len + c], r as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn rows_mut_respects_forced_width() {
+        let n_rows = 64;
+        let row_len = 5;
+        let mut data = vec![0f32; n_rows * row_len];
+        pool::with_thread_limit(4, || {
+            parallel_rows_mut(&mut data, n_rows, row_len, 1, |row0, chunk| {
+                for (r, row) in chunk.chunks_mut(row_len).enumerate() {
+                    for x in row.iter_mut() {
+                        *x += (row0 + r) as f32 + 1.0;
+                    }
+                }
+            });
+        });
+        for r in 0..n_rows {
+            for c in 0..row_len {
+                assert_eq!(data[r * row_len + c], r as f32 + 1.0, "row {r} col {c}");
             }
         }
     }

@@ -1,0 +1,240 @@
+//! Continuous-batching engine + intra-host compute pool, end to end:
+//! pooled forwards must be *bitwise* equal to serial ones at any thread
+//! width, the engine must keep admitting mid-flight requests during a
+//! publish storm without ever serving a stale alias, and an idle host must
+//! answer a lone request immediately (no `max_wait` stall).
+
+use pawd::coordinator::{Engine, Payload, RespBody, Server, ServerConfig, VariantStore};
+use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
+use pawd::delta::format::save_delta;
+use pawd::exec::{pool, BatchPlan, ExecMode, VariantWeights};
+use pawd::model::config::ModelConfig;
+use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
+use pawd::model::{FlatParams, Transformer};
+use pawd::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn setup_store(dir: &PathBuf, n_variants: usize) -> (Arc<FlatParams>, VariantStore) {
+    let _ = std::fs::remove_dir_all(dir);
+    std::fs::create_dir_all(dir).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let base = Arc::new(FlatParams::init(&cfg, 123));
+    let docs: Vec<Vec<u8>> = (0..3)
+        .map(|i| (0..40).map(|t| ((t * 5 + i * 11) % 200 + 20) as u8).collect())
+        .collect();
+    let opts = CompressOptions { fit: FitMode::ClosedForm, ..Default::default() };
+    for k in 0..n_variants {
+        let ft = synth_finetune(
+            &base,
+            &SynthDeltaSpec { seed: 6000 + k as u64, ..Default::default() },
+        );
+        let (delta, _, _) = compress_model(&format!("var{k}"), &base, &ft, &docs, &opts);
+        save_delta(dir.join(format!("var{k}.pawd")), &delta).unwrap();
+    }
+    let store = VariantStore::new(base.clone(), dir).with_mode(ExecMode::Fused);
+    (base, store)
+}
+
+/// Property: the pooled compute path (4 threads) produces bitwise-identical
+/// logits to the serial path (1 thread) for both the per-request forward
+/// and the shared-base `BatchPlan` forward, over random mixed batches.
+/// Parallelism splits work across output rows and sequences, never inside
+/// one floating-point reduction, so this must hold exactly.
+#[test]
+fn prop_pooled_forward_is_bitwise_equal_to_serial() {
+    let dir = std::env::temp_dir().join("pawd_itest_pool_bitwise");
+    let (base, store) = setup_store(&dir, 3);
+    let tf = Transformer::new(base.cfg());
+    let weights: Vec<VariantWeights> =
+        (0..3).map(|k| store.load(&format!("var{k}")).unwrap().weights).collect();
+
+    let mut rng = Rng::new(991);
+    for case in 0..8 {
+        let n_seqs = 1 + rng.below(5);
+        let batch_weights: Vec<VariantWeights> =
+            (0..n_seqs).map(|_| weights[rng.below(3)].clone()).collect();
+        let plans = BatchPlan::group(&batch_weights);
+        let (plan, _) = &plans[0];
+        let seqs: Vec<(usize, Vec<u8>)> = (0..n_seqs)
+            .map(|entry| {
+                let len = 1 + rng.below(base.cfg().max_seq);
+                (entry, (0..len).map(|_| rng.below(256) as u8).collect())
+            })
+            .collect();
+        let serial = pool::with_thread_limit(1, || tf.forward_plan(plan, &seqs));
+        let pooled = pool::with_thread_limit(4, || tf.forward_plan(plan, &seqs));
+        for (s, p) in serial.iter().zip(&pooled) {
+            assert_eq!(
+                s.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                p.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "case {case}: pooled forward_plan diverged from serial"
+            );
+        }
+        // The per-request path fans out the same way.
+        let (_, tokens) = &seqs[0];
+        let s1 = pool::with_thread_limit(1, || tf.forward_one(&batch_weights[0], tokens));
+        let s4 = pool::with_thread_limit(4, || tf.forward_one(&batch_weights[0], tokens));
+        assert_eq!(
+            s1.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            s4.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "case {case}: pooled forward_one diverged from serial"
+        );
+    }
+}
+
+/// The engine keeps admitting data requests *while* a `publish_incremental`
+/// storm rides the admin fast lane, and after each publish returns the new
+/// alias is immediately live: a fresh score never sees a stale version.
+#[test]
+fn engine_admits_during_publish_storm_without_serving_stale_alias() {
+    let dir = std::env::temp_dir().join("pawd_itest_publish_storm");
+    let (base, store) = setup_store(&dir, 2);
+    let staging = std::env::temp_dir().join("pawd_itest_publish_storm_staging");
+    let _ = std::fs::remove_dir_all(&staging);
+    std::fs::create_dir_all(&staging).unwrap();
+
+    let server = Server::start(
+        store,
+        Engine::Native,
+        ServerConfig { n_workers: 2, ..Default::default() },
+    );
+    let stop = AtomicBool::new(false);
+    let background_ok = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        // Background traffic on a *stable* variant must keep flowing
+        // error-free through the storm (publishes overlap with serving
+        // instead of stalling it).
+        let bg = server.client();
+        let (stop_ref, ok_ref) = (&stop, &background_ok);
+        s.spawn(move || {
+            let mut i = 0u64;
+            while !stop_ref.load(Ordering::Relaxed) {
+                let resp = bg.score(
+                    "var1",
+                    &format!("Q: steady {i}? A: "),
+                    &["yes".to_string(), "no".to_string()],
+                );
+                assert!(resp.result.is_ok(), "background request failed: {:?}", resp.result);
+                ok_ref.fetch_add(1, Ordering::Relaxed);
+                i += 1;
+            }
+        });
+
+        let admin = server.client();
+        // Warm v1 so each incremental publish diffs a resident parent.
+        let r1 = admin.score("var0", "Q: warm? A: ", &["x".to_string(), "y".to_string()]);
+        assert_eq!(r1.version, Some(1));
+        // Storm: publish a chain of single-module changes; after each one
+        // returns, the very next score must serve the new version.
+        let mut model = pawd::delta::format::load_delta(dir.join("var0.pawd")).unwrap();
+        for step in 0..5u32 {
+            {
+                let m = Arc::make_mut(&mut model.modules[0]);
+                for sc in &mut m.scales {
+                    *sc *= 1.25;
+                }
+            }
+            let staged = staging.join(format!("v{}.pawd", step + 2));
+            save_delta(&staged, &model).unwrap();
+            let (version, _, _) = admin.publish_incremental("var0", &staged, None).unwrap();
+            assert_eq!(version, step + 2);
+            let probe =
+                admin.score("var0", "Q: fresh? A: ", &["x".to_string(), "y".to_string()]);
+            assert!(probe.result.is_ok());
+            assert_eq!(
+                probe.version,
+                Some(version),
+                "score submitted after publish v{version} served a stale alias"
+            );
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    assert!(background_ok.load(Ordering::Relaxed) > 0, "no background traffic during storm");
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.errors, 0, "publish storm must not fail data requests");
+    assert_eq!(snap.publishes, 5);
+    assert!(snap.engine_steps > 0, "data windows must flow through engine steps");
+    server.shutdown();
+}
+
+/// Regression for the dispatcher idle-latency bug: the old loop held a
+/// window open for `max_wait` even with every worker idle. The engine
+/// flushes on idle capacity, so a lone request under a 2 s deadline must
+/// complete at compute latency.
+#[test]
+fn lone_request_on_idle_host_is_not_held_for_max_wait() {
+    let dir = std::env::temp_dir().join("pawd_itest_idle_latency");
+    let (_base, store) = setup_store(&dir, 1);
+    let server = Server::start(
+        store,
+        Engine::Native,
+        ServerConfig { max_wait: Duration::from_secs(2), ..Default::default() },
+    );
+    let client = server.client();
+    // Warm the variant so the timed request measures dispatch + compute,
+    // not artifact load.
+    let warm = client.score("var0", "Q: warm? A: ", &["x".to_string(), "y".to_string()]);
+    assert!(warm.result.is_ok());
+    let start = Instant::now();
+    let rx = client.submit("var0", Payload::perplexity("the mill by the river turns."));
+    let resp = rx.recv().unwrap();
+    let elapsed = start.elapsed();
+    assert!(matches!(resp.result, Ok(RespBody::Perplexity { .. })), "{:?}", resp.result);
+    assert!(
+        elapsed < Duration::from_secs(1),
+        "idle host held a lone request for {elapsed:?} (max_wait leak)"
+    );
+    // The queue stage itself must be far under the deadline too.
+    assert!(
+        resp.timing.queue < Duration::from_millis(500),
+        "queue stage {:?} looks like a deadline wait",
+        resp.timing.queue
+    );
+    server.shutdown();
+}
+
+/// `submit_tracked` + `abort`: a request aborted while the queue is
+/// saturated answers with an error instead of executing; unknown ids and
+/// already-completed requests are no-ops.
+#[test]
+fn abort_drops_pending_requests_and_ignores_unknown_ids() {
+    let dir = std::env::temp_dir().join("pawd_itest_abort");
+    let (_base, store) = setup_store(&dir, 1);
+    // One worker and tiny windows so a burst keeps requests pending long
+    // enough to abort some.
+    let server = Server::start(
+        store,
+        Engine::Native,
+        ServerConfig { n_workers: 1, max_batch: 1, ..Default::default() },
+    );
+    let client = server.client();
+    let warm = client.score("var0", "Q: warm? A: ", &["x".to_string(), "y".to_string()]);
+    assert!(warm.result.is_ok());
+    let submitted: Vec<(u64, std::sync::mpsc::Receiver<pawd::coordinator::Response>)> = (0..12)
+        .map(|i| {
+            client.submit_tracked("var0", Payload::perplexity(&format!("probe text {i} runs on")))
+        })
+        .collect();
+    // Abort the tail of the queue while the head is executing.
+    for (id, _) in submitted.iter().rev().take(6) {
+        client.abort(*id);
+    }
+    client.abort(u64::MAX); // unknown id: no-op
+    let mut aborted = 0;
+    let mut served = 0;
+    for (_, rx) in submitted {
+        let resp = rx.recv().unwrap();
+        match resp.result {
+            Err(e) if e.contains("aborted") => aborted += 1,
+            Ok(_) => served += 1,
+            Err(e) => panic!("unexpected failure: {e}"),
+        }
+    }
+    assert_eq!(aborted + served, 12);
+    assert!(served >= 6, "aborts must never cancel admitted work");
+    assert!(aborted >= 1, "tail aborts should catch still-pending requests");
+    server.shutdown();
+}

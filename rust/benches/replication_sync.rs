@@ -9,7 +9,10 @@
 //!   consolidated artifact bytes over the wire;
 //! * an up-to-date follower polling the leader moves only manifest bytes —
 //!   zero artifact files;
-//! * post-sync eval logits are bitwise-equal between leader and follower.
+//! * post-sync eval logits are bitwise-equal between leader and follower;
+//! * the same structure holds over the HTTP transport (loopback
+//!   `HttpFrontend` + `HttpTransport`), where an idle long-poll costs only
+//!   header bytes (the 304 path).
 //!
 //! Emits machine-readable metrics into `$PAWD_BENCH_JSON` (see
 //! `BenchReport`); CI's bench-smoke lane runs this in fast mode.
@@ -22,11 +25,12 @@ use pawd::coordinator::{FsTransport, Replicator, VariantRegistry};
 use pawd::exec::counters;
 use pawd::model::config::ModelConfig;
 use pawd::model::{FlatParams, Transformer};
+use pawd::net::{FrontConfig, HttpFrontend, HttpTransport};
 use pawd::util::benchkit::{fmt_bytes, fmt_dur, BenchReport, Table};
 use pawd::util::stats::Summary;
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn bitwise_logits(base: &Arc<FlatParams>, tf: &Transformer, dir: &Path, probe: &[u8]) -> Vec<u32> {
     use pawd::coordinator::VariantStore;
@@ -134,6 +138,62 @@ fn main() -> anyhow::Result<()> {
         sync_bytes.push(r.artifact_bytes as f64);
         assert_eq!(r.patch_files_fetched, 1);
     }
+    // --- HTTP transport: same structure over the network plane -------------
+    // A sync-only frontend serves the leader registry; the follower pulls
+    // through HttpTransport on loopback. Wire gauges include HTTP header
+    // overhead, so the <15% gate exercises the real on-the-wire cost.
+    let http_leader_dir = bench_common::tmp_dir("replication_sync_http_leader");
+    let http_follower_dir = bench_common::tmp_dir("replication_sync_http_follower");
+    let http_leader = Arc::new(VariantRegistry::open(&http_leader_dir)?);
+    let frontend =
+        HttpFrontend::start("127.0.0.1:0", None, http_leader.clone(), FrontConfig::default())?;
+    let http_follower = Arc::new(VariantRegistry::open(&http_follower_dir)?);
+    let http_repl = Replicator::new(
+        http_follower.clone(),
+        Box::new(HttpTransport::new(&frontend.url())?),
+    );
+
+    let hv1 = seeded_full(&base, 31);
+    let hfull = http_leader.publish_incremental("ft", hv1.clone(), None)?;
+    counters::reset();
+    let t0 = Instant::now();
+    let http_cold = http_repl.sync_once(None)?;
+    let http_cold_time = t0.elapsed().as_secs_f64();
+    assert_eq!(http_cold.files_fetched, 1);
+    assert_eq!(
+        bitwise_logits(&base, &tf, &http_leader_dir, &probe),
+        bitwise_logits(&base, &tf, &http_follower_dir, &probe),
+        "HTTP-synced follower must serve bitwise-equal logits"
+    );
+
+    let hchild = perturb(&hv1, &base, n_changed, 32);
+    let hpatched = http_leader.publish_incremental("ft", hchild, None)?;
+    assert!(hpatched.patch);
+    counters::reset();
+    let t0 = Instant::now();
+    let http_warm = http_repl.sync_once(None)?;
+    let http_warm_time = t0.elapsed().as_secs_f64();
+    assert_eq!(counters::wire_files(), 1);
+    let http_fraction = counters::wire_bytes() as f64 / hfull.bytes as f64;
+    assert!(
+        http_fraction < 0.15,
+        "a ~5%-changed publish over HTTP must replicate in <15% of the consolidated \
+         bytes (headers included), got {:.1}%",
+        http_fraction * 100.0
+    );
+
+    // Idle long-poll: the whole pass is one 304 — zero files, header bytes.
+    counters::reset();
+    let http_idle = http_repl.sync_wait(None, Duration::from_millis(200))?;
+    assert!(http_idle.up_to_date);
+    assert_eq!(counters::wire_files(), 0);
+    let http_idle_wire = counters::wire_bytes();
+    assert!(
+        http_idle_wire > 0 && http_idle_wire < 1024,
+        "an idle long-poll must move only header bytes, got {http_idle_wire}"
+    );
+    assert!(counters::http_long_polls() >= 1, "the idle pass must ride the long-poll path");
+
     let st = Summary::of(&sync_times);
     let sb = Summary::of(&sync_bytes);
     let mut t = Table::new(&["sync", "latency", "wire bytes", "files"]);
@@ -156,7 +216,20 @@ fn main() -> anyhow::Result<()> {
         "1".into(),
     ]);
     t.row(&["idle poll".into(), "-".into(), fmt_bytes(idle_wire), "0".into()]);
-    t.print("Replication sync: patch-aware transfer (llama-mini, fs transport)");
+    t.row(&[
+        "http cold (consolidated)".into(),
+        fmt_dur(http_cold_time),
+        fmt_bytes(http_cold.artifact_bytes),
+        "1".into(),
+    ]);
+    t.row(&[
+        "http warm (patch)".into(),
+        fmt_dur(http_warm_time),
+        fmt_bytes(http_warm.artifact_bytes),
+        "1".into(),
+    ]);
+    t.row(&["http idle long-poll (304)".into(), "-".into(), fmt_bytes(http_idle_wire), "0".into()]);
+    t.print("Replication sync: patch-aware transfer (llama-mini, fs + http transports)");
 
     let mut report = BenchReport::new();
     report.add(
@@ -166,6 +239,15 @@ fn main() -> anyhow::Result<()> {
             ("warm_patch_bytes", warm_report.artifact_bytes as f64),
             ("warm_fraction", fraction),
             ("idle_poll_bytes", idle_wire as f64),
+        ],
+    );
+    report.add(
+        "replication_sync/http",
+        &[
+            ("cold_ms", http_cold_time * 1e3),
+            ("warm_ms", http_warm_time * 1e3),
+            ("warm_fraction", http_fraction),
+            ("idle_poll_bytes", http_idle_wire as f64),
         ],
     );
     report.add(

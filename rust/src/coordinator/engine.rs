@@ -13,6 +13,10 @@
 //! * publish / `PullFrom` warms ride the same slots as data windows and
 //!   overlap with serving instead of stalling it.
 //!
+//! [`ServerConfig::max_wait`](super::server::ServerConfig::max_wait)
+//! survives only as a vestigial config field: nothing here reads it —
+//! flush-on-idle-slot *is* the deadline policy.
+//!
 //! [`EngineCore`] holds the pure admission state (pending queue, in-flight
 //! slot count) and is directly unit-testable; `engine_loop` wires it to
 //! the ingress and work channels on the `pawd-engine` thread.

@@ -79,6 +79,11 @@ pub struct MetricsSnapshot {
     pub pool_steal_or_idle_ns: u64,
     /// Engine step boundaries that flushed a window to a worker.
     pub engine_steps: u64,
+    /// HTTP requests served by the network plane (0 when no front-end is
+    /// attached to this process).
+    pub http_requests: u64,
+    /// Manifest long-polls that parked waiting for a registry change.
+    pub http_long_polls: u64,
 }
 
 impl Metrics {
@@ -185,6 +190,8 @@ fn snapshot_inner(i: &Inner) -> MetricsSnapshot {
         pool_tasks: crate::exec::counters::pool_tasks(),
         pool_steal_or_idle_ns: crate::exec::counters::pool_steal_or_idle_ns(),
         engine_steps: crate::exec::counters::engine_steps(),
+        http_requests: crate::exec::counters::http_requests(),
+        http_long_polls: crate::exec::counters::http_long_polls(),
     }
 }
 

@@ -35,6 +35,9 @@
 //!   leader's manifest through a [`SyncTransport`](replicate::SyncTransport),
 //!   fetches only missing artifacts (patches when the chain parent is
 //!   already held), crc-verifies them, and commits the mirrored records.
+//!   Transports: filesystem here, HTTP long-poll in
+//!   [`net`](crate::net) (the coordinator never depends on the network
+//!   plane — `net` bridges *into* these seams).
 
 pub mod cache;
 pub mod engine;
@@ -52,7 +55,7 @@ pub use registry::{
     ArtifactKind, ConsolidateOutcome, GcReport, ManifestView, PublishOutcome, Resolved,
     VariantDesc, VariantRegistry, VersionRecord,
 };
-pub use replicate::{FsTransport, Replicator, SyncReport, SyncTransport};
+pub use replicate::{FsTransport, ManifestFetch, Replicator, SyncReport, SyncTransport};
 pub use request::{AdminOp, AdminResp, DataOp, Payload, RespBody, Response, ADMIN_VARIANT};
 pub use server::{Client, Engine, Server, ServerConfig};
 pub use store::VariantStore;

@@ -54,8 +54,8 @@ use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-use std::time::{SystemTime, UNIX_EPOCH};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 /// Manifest file name inside the registry directory.
 pub const MANIFEST_FILE: &str = "registry.json";
@@ -70,14 +70,15 @@ pub enum ArtifactKind {
 }
 
 impl ArtifactKind {
-    fn label(&self) -> &'static str {
+    /// Stable wire/manifest label (shared with the HTTP wire codecs).
+    pub(crate) fn label(&self) -> &'static str {
         match self {
             ArtifactKind::Delta => "delta",
             ArtifactKind::Fp16 => "fp16",
         }
     }
 
-    fn from_label(s: &str) -> Result<ArtifactKind> {
+    pub(crate) fn from_label(s: &str) -> Result<ArtifactKind> {
         Ok(match s {
             "delta" => ArtifactKind::Delta,
             "fp16" => ArtifactKind::Fp16,
@@ -183,6 +184,11 @@ pub struct VariantRegistry {
     /// mutation. Replication followers poll it to detect leader changes
     /// without re-diffing an unchanged manifest.
     seq: AtomicU64,
+    /// Pairs with `watch_cv`: manifest-change watchers (the HTTP long-poll
+    /// endpoint) park here; [`mutate`](Self::mutate) notifies after every
+    /// committed mutation.
+    watch_lock: Mutex<()>,
+    watch_cv: Condvar,
 }
 
 impl VariantRegistry {
@@ -214,6 +220,8 @@ impl VariantRegistry {
             dir: dir.to_path_buf(),
             inner: Mutex::new(variants),
             seq: AtomicU64::new(seq),
+            watch_lock: Mutex::new(()),
+            watch_cv: Condvar::new(),
         })
     }
 
@@ -226,6 +234,35 @@ impl VariantRegistry {
     /// the value is stored in the manifest).
     pub fn manifest_seq(&self) -> u64 {
         self.seq.load(Ordering::SeqCst)
+    }
+
+    /// Block until the manifest sequence number differs from `known_seq` or
+    /// `timeout` elapses; returns the sequence number observed on wake.
+    /// This is what makes HTTP long-poll replication push-shaped: a
+    /// follower's manifest request parks here instead of interval-polling,
+    /// and every committed mutation (including
+    /// [`apply_replica`](Self::apply_replica) on a follower serving as a
+    /// sub-leader in a fan-out tree) wakes the watchers.
+    ///
+    /// The check-then-park runs under `watch_lock`, the same lock `mutate`
+    /// notifies under, so a bump landing between the seq read and the park
+    /// cannot be missed.
+    pub fn wait_manifest_change(&self, known_seq: u64, timeout: Duration) -> u64 {
+        let deadline = Instant::now() + timeout;
+        let mut guard = self.watch_lock.lock().unwrap();
+        loop {
+            let seq = self.manifest_seq();
+            if seq != known_seq {
+                return seq;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return seq;
+            }
+            let (g, _timed_out) =
+                self.watch_cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        }
     }
 
     /// Resolve an alias. `name` selects the variant's active version;
@@ -876,6 +913,14 @@ impl VariantRegistry {
         let out = f(&mut next)?;
         self.persist(&next)?;
         *inner = next;
+        // Wake manifest watchers only after the new state is committed and
+        // swapped in. Taking `watch_lock` here pairs with the check-then-park
+        // in `wait_manifest_change`; watchers never take `inner`, so lock
+        // order cannot deadlock.
+        {
+            let _g = self.watch_lock.lock().unwrap();
+            self.watch_cv.notify_all();
+        }
         Ok(out)
     }
 

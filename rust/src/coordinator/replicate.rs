@@ -25,9 +25,13 @@
 //!
 //! Transport is abstracted behind [`SyncTransport`]; [`FsTransport`] covers
 //! shared-filesystem and single-host multi-process topologies (and the
-//! tests/bench) without a network stack. Wire traffic is recorded in
-//! [`exec::counters`](crate::exec::counters) (`wire_bytes`/`wire_files`) so
-//! the replication bench can assert the patch-aware transfer structure.
+//! tests/bench) without a network stack, and
+//! [`HttpTransport`](crate::net::HttpTransport) pulls the same manifest and
+//! files over HTTP/1.1 with long-poll manifest waits
+//! ([`Replicator::sync_wait`]) instead of interval polling. Wire traffic is
+//! recorded in [`exec::counters`](crate::exec::counters)
+//! (`wire_bytes`/`wire_files`) so the replication bench can assert the
+//! patch-aware transfer structure.
 //!
 //! Followers are replicas: their registry directory must not take local
 //! publishes (a same-version disagreement with the leader fails the sync as
@@ -48,6 +52,17 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Result of a change-aware manifest fetch
+/// ([`SyncTransport::fetch_manifest_wait`]).
+pub enum ManifestFetch {
+    /// The leader manifest bytes (the sequence number is inside them).
+    Full(Vec<u8>),
+    /// The leader's manifest still sits at the follower's `known_seq`; only
+    /// `wire_bytes` bytes of headers moved to learn that (an HTTP 304).
+    Unchanged { seq: u64, wire_bytes: u64 },
+}
 
 /// How a follower reaches a leader's registry. Implementations move opaque
 /// bytes; all verification (crc, chain composition, manifest consistency)
@@ -58,6 +73,21 @@ pub trait SyncTransport: Send + Sync {
 
     /// Fetch the leader's current manifest (`registry.json`) bytes.
     fn fetch_manifest(&self) -> Result<Vec<u8>>;
+
+    /// Change-aware manifest fetch: block up to `timeout` while the leader's
+    /// manifest sequence number still equals `known_seq`, then return either
+    /// the new manifest or [`ManifestFetch::Unchanged`]. The default
+    /// implementation cannot wait (a plain filesystem has no change
+    /// notification worth blocking on) and just fetches; transports with a
+    /// server on the other end (HTTP long-poll) override it.
+    fn fetch_manifest_wait(
+        &self,
+        known_seq: Option<u64>,
+        timeout: Duration,
+    ) -> Result<ManifestFetch> {
+        let _ = (known_seq, timeout);
+        Ok(ManifestFetch::Full(self.fetch_manifest()?))
+    }
 
     /// Fetch the artifact file named `file` (a bare file name inside the
     /// leader's registry directory) into `dest`. Returns the bytes moved.
@@ -155,6 +185,16 @@ impl Replicator {
         self.last_applied_seq.store(applied_seq, Ordering::SeqCst);
     }
 
+    /// The last leader sequence number applied in full, if any pass has
+    /// completed (the value [`sync_wait`](Self::sync_wait) hands the leader
+    /// as its `known_seq`).
+    pub fn last_applied_seq(&self) -> Option<u64> {
+        match self.last_applied_seq.load(Ordering::SeqCst) {
+            u64::MAX => None,
+            seq => Some(seq),
+        }
+    }
+
     /// Pull the leader manifest, diff, fetch what is missing, verify and
     /// commit. With `cache`, freshly synced variants are warmed on arrival —
     /// a patch version composes onto the resident parent, so the follower's
@@ -162,6 +202,43 @@ impl Replicator {
     /// was only what changed.
     pub fn sync_once(&self, cache: Option<&VariantCache>) -> Result<SyncReport> {
         let manifest_bytes = self.transport.fetch_manifest()?;
+        self.apply_manifest(manifest_bytes, cache)
+    }
+
+    /// [`sync_once`](Self::sync_once), but change-aware: hand the transport
+    /// the last fully-applied leader sequence number and let it block up to
+    /// `timeout` for a change ([`SyncTransport::fetch_manifest_wait`]). Over
+    /// HTTP this is a long-poll — an idle follower's pass moves only the
+    /// request/304 headers and returns `up_to_date`, and a leader publish
+    /// wakes the waiting request immediately instead of on the next poll
+    /// tick. Transports without a waiting side (filesystem) degrade to a
+    /// plain fetch, so `--follow` loops can call this unconditionally.
+    pub fn sync_wait(
+        &self,
+        cache: Option<&VariantCache>,
+        timeout: Duration,
+    ) -> Result<SyncReport> {
+        match self.transport.fetch_manifest_wait(self.last_applied_seq(), timeout)? {
+            ManifestFetch::Full(bytes) => self.apply_manifest(bytes, cache),
+            ManifestFetch::Unchanged { seq, wire_bytes } => {
+                counters::record_wire_bytes(wire_bytes);
+                Ok(SyncReport {
+                    leader_seq: seq,
+                    up_to_date: true,
+                    manifest_bytes: wire_bytes,
+                    ..Default::default()
+                })
+            }
+        }
+    }
+
+    /// Diff + fetch + verify + commit against already-fetched leader
+    /// manifest bytes (the tail of both sync entry points).
+    fn apply_manifest(
+        &self,
+        manifest_bytes: Vec<u8>,
+        cache: Option<&VariantCache>,
+    ) -> Result<SyncReport> {
         counters::record_wire_bytes(manifest_bytes.len() as u64);
         let text = std::str::from_utf8(&manifest_bytes)
             .context("leader manifest is not valid UTF-8")?;
@@ -435,7 +512,9 @@ fn verify_fetched(
 }
 
 /// Reject artifact file names that could escape the registry directory.
-fn ensure_bare_file_name(file: &str) -> Result<()> {
+/// Shared with the HTTP file route, which applies the same rule to
+/// client-supplied names before touching the filesystem.
+pub(crate) fn ensure_bare_file_name(file: &str) -> Result<()> {
     if file.is_empty()
         || file.contains('/')
         || file.contains('\\')

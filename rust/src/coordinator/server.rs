@@ -76,10 +76,14 @@ pub enum Engine {
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub max_batch: usize,
-    /// Legacy window deadline. The continuous-batching engine admits on
-    /// idle capacity instead of waiting, so this no longer delays
-    /// dispatch; the field is kept so existing configs deserialize/compile
-    /// unchanged.
+    /// **Deprecated — dead since the continuous-batching engine.** The old
+    /// stop-and-go dispatcher held a partial window open up to `max_wait`;
+    /// the [`engine`](super::engine) loop instead flushes a fair-share
+    /// window onto a worker the moment an idle slot exists, so this value
+    /// is read by nothing and delays nothing. The field is kept (not
+    /// `#[deprecated]`-attributed, which would fail the deny-warnings lint
+    /// lane at every construction site) purely so existing configs compile
+    /// unchanged; it will be removed with the next config-breaking change.
     pub max_wait: Duration,
     pub n_workers: usize,
     pub cache_budget_bytes: u64,

@@ -27,6 +27,8 @@ static POOL_TASKS: AtomicU64 = AtomicU64::new(0);
 static POOL_IDLE_NS: AtomicU64 = AtomicU64::new(0);
 static ENGINE_STEPS: AtomicU64 = AtomicU64::new(0);
 static ACT_ROW_READS: AtomicU64 = AtomicU64::new(0);
+static HTTP_REQUESTS: AtomicU64 = AtomicU64::new(0);
+static HTTP_LONG_POLLS: AtomicU64 = AtomicU64::new(0);
 
 /// Record one pass of activations through a resident base/dense weight
 /// matrix.
@@ -89,6 +91,20 @@ pub(crate) fn record_act_row_reads(n: u64) {
     ACT_ROW_READS.fetch_add(n, Ordering::Relaxed);
 }
 
+/// Record one HTTP request parsed and dispatched by the network plane
+/// (data, admin, and sync routes all count; rejected frames that never
+/// parse do not).
+pub(crate) fn record_http_request() {
+    HTTP_REQUESTS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one manifest long-poll that actually parked (the follower's
+/// `known_seq` matched the current manifest, so the request waited for a
+/// change or timed out instead of answering immediately).
+pub(crate) fn record_http_long_poll() {
+    HTTP_LONG_POLLS.fetch_add(1, Ordering::Relaxed);
+}
+
 /// Total base GEMMs since process start (or the last [`reset`]).
 pub fn base_gemms() -> u64 {
     BASE_GEMMS.load(Ordering::Relaxed)
@@ -142,6 +158,16 @@ pub fn activation_row_reads() -> u64 {
     ACT_ROW_READS.load(Ordering::Relaxed)
 }
 
+/// Total HTTP requests served by the network plane.
+pub fn http_requests() -> u64 {
+    HTTP_REQUESTS.load(Ordering::Relaxed)
+}
+
+/// Total manifest long-polls that parked waiting for a registry change.
+pub fn http_long_polls() -> u64 {
+    HTTP_LONG_POLLS.load(Ordering::Relaxed)
+}
+
 /// Reset all counters to zero (benches/tests only).
 pub fn reset() {
     BASE_GEMMS.store(0, Ordering::Relaxed);
@@ -154,6 +180,8 @@ pub fn reset() {
     POOL_IDLE_NS.store(0, Ordering::Relaxed);
     ENGINE_STEPS.store(0, Ordering::Relaxed);
     ACT_ROW_READS.store(0, Ordering::Relaxed);
+    HTTP_REQUESTS.store(0, Ordering::Relaxed);
+    HTTP_LONG_POLLS.store(0, Ordering::Relaxed);
 }
 
 #[cfg(test)]

@@ -19,6 +19,9 @@
 //! accumulation — dense `Ŵ` is never reconstructed). The variant cache holds
 //! one shared base plus per-variant *packed* artifacts, so its byte budget
 //! is charged in packed bytes and hot-swapping a variant is a pointer flip.
+//! The [`net`] plane exposes the coordinator over dependency-free HTTP/1.1
+//! — data/admin JSON routes plus a long-poll replication transport — so
+//! followers on other hosts can track a leader's publishes.
 //! * **L2 (python/compile)** — JAX transformer fwd / fused-AdamW train step
 //!   / logit-matching grad, AOT-lowered to HLO text once at build time.
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the packed-sign
@@ -35,6 +38,7 @@ pub mod delta;
 pub mod eval;
 pub mod exec;
 pub mod model;
+pub mod net;
 pub mod pipeline;
 pub mod runtime;
 pub mod tensor;

@@ -19,7 +19,14 @@ USAGE:
   pawd pipeline <config> <out_dir> [--full]      train pair + compress + eval (needs artifacts)
   pawd inspect <file.pawd>                       describe a delta artifact
   pawd apply <base.fp16> <delta.pawd> <out.fp16> materialize a variant checkpoint
-  pawd serve <base.fp16> <variant_dir>           start the serving coordinator (demo loop)
+  pawd serve <base.fp16> <variant_dir> [--http <addr>]
+                                                 start the serving coordinator; without
+                                                 --http, run a demo probe loop and exit;
+                                                 with --http (e.g. 127.0.0.1:7421), serve
+                                                 the network plane until interrupted:
+                                                 POST /v1/query, POST /v1/admin/<op>,
+                                                 GET /v1/sync/manifest (long-poll),
+                                                 GET /v1/sync/file/<name>
   pawd bench-load <base.fp16> <variant_dir> <n>  time cold loads of every variant n times
   pawd publish <variant_dir> <name> <delta.pawd> [--parent [N]]
                                                  publish the next version of a variant;
@@ -32,13 +39,17 @@ USAGE:
   pawd rollback <variant_dir> <name> [version]   flip a variant's alias back
   pawd versions <variant_dir>                    list variants + version histories
   pawd gc <variant_dir> [name]                   delete retired versions' artifact files
-  pawd replicate <variant_dir> --from <leader_dir> [--follow] [--interval-ms N]
+  pawd replicate <variant_dir> --from <leader> [--follow] [--interval-ms N]
                                                  pull-replicate a leader registry into
                                                  <variant_dir>: fetch only missing
                                                  artifacts (patches when the chain parent
-                                                 is already held), verify crcs, commit;
-                                                 --follow polls the leader's manifest_seq
-                                                 (default every 500ms) until interrupted
+                                                 is already held), verify crcs, commit.
+                                                 <leader> is a directory, or an
+                                                 http://host:port of a `serve --http`
+                                                 frontend; --follow keeps tracking the
+                                                 leader's manifest_seq until interrupted
+                                                 (fs: poll every N ms, default 500;
+                                                 http: long-poll, header bytes when idle)
   pawd bench-diff <baseline.json> <current.json> [--max-regression 0.20] [--promote]
                                                  diff two BENCH_*.json files (CI perf
                                                  gate); --promote overwrites the baseline
@@ -143,23 +154,68 @@ fn cmd_apply(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
-    let base = Arc::new(load_fp16(args.first().context("missing <base.fp16>")?)?);
-    let dir = PathBuf::from(args.get(1).context("missing <variant_dir>")?);
+    let mut positional: Vec<&String> = Vec::new();
+    let mut http: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--http" {
+            let addr = args.get(i + 1).context("--http needs an address (e.g. 127.0.0.1:7421)")?;
+            http = Some(addr.clone());
+            i += 2;
+        } else {
+            positional.push(&args[i]);
+            i += 1;
+        }
+    }
+    let base = Arc::new(load_fp16(positional.first().copied().context("missing <base.fp16>")?)?);
+    let dir = PathBuf::from(positional.get(1).copied().context("missing <variant_dir>")?);
     let store = VariantStore::open(base, &dir)?;
     let names = store.list()?;
     println!("serving {} variants from {}: {:?}", names.len(), dir.display(), names);
     let server = Server::start(store, Engine::Native, ServerConfig::default());
     let client = server.client();
-    // Demo loop: probe each variant once, print metrics, exit. (A network
-    // front-end would sit on `Server::client()`.)
+    if let Some(addr) = http {
+        let registry = server.cache.store().registry().clone();
+        let frontend = pawd::net::HttpFrontend::start(
+            &addr,
+            Some(server.client()),
+            registry,
+            pawd::net::FrontConfig::default(),
+        )
+        .with_context(|| format!("binding http frontend on {addr}"))?;
+        println!(
+            "http plane on {} — POST /v1/query, POST /v1/admin/<op>, \
+             GET /v1/sync/manifest (long-poll), GET /v1/sync/file/<name>",
+            frontend.url()
+        );
+        // Serve until killed; a periodic summary keeps the console honest.
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(30));
+            let snap = server.metrics.snapshot();
+            println!(
+                "served {} requests ({} http requests, {} manifest long-polls), \
+                 {} cold starts, {} engine steps",
+                snap.served, snap.http_requests, snap.http_long_polls, snap.cold_starts,
+                snap.engine_steps
+            );
+        }
+    }
+    // Demo loop: probe each variant once, print metrics, exit. (`--http`
+    // is the network front-end over this same `Server::client()`.)
     for name in &names {
         let resp = client.score(name, "Q: health probe? A: ", &["ok".into(), "bad".into()]);
         println!("  {name}: ok={:?} in {:?}", resp.result.is_ok(), resp.timing.total);
     }
     let snap = server.metrics.snapshot();
     println!(
-        "served {} requests, {} cold starts, {} engine steps, {} pool tasks",
-        snap.served, snap.cold_starts, snap.engine_steps, snap.pool_tasks
+        "served {} requests ({} http requests, {} manifest long-polls), {} cold starts, \
+         {} engine steps, {} pool tasks",
+        snap.served,
+        snap.http_requests,
+        snap.http_long_polls,
+        snap.cold_starts,
+        snap.engine_steps,
+        snap.pool_tasks
     );
     server.shutdown();
     Ok(())
@@ -274,18 +330,20 @@ fn cmd_gc(args: &[String]) -> Result<()> {
 }
 
 fn cmd_replicate(args: &[String]) -> Result<()> {
-    use pawd::coordinator::{FsTransport, Replicator, VariantRegistry};
+    use pawd::coordinator::{FsTransport, Replicator, SyncTransport, VariantRegistry};
     let mut positional: Vec<&String> = Vec::new();
-    let mut from: Option<PathBuf> = None;
+    let mut from: Option<String> = None;
     let mut follow = false;
     let mut interval_ms: u64 = 500;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
             "--from" => {
-                from = Some(PathBuf::from(
-                    args.get(i + 1).context("--from needs a leader directory")?,
-                ));
+                from = Some(
+                    args.get(i + 1)
+                        .context("--from needs a leader directory or http://host:port")?
+                        .clone(),
+                );
                 i += 2;
             }
             "--follow" => {
@@ -307,19 +365,34 @@ fn cmd_replicate(args: &[String]) -> Result<()> {
         }
     }
     let dir = PathBuf::from(positional.first().copied().context("missing <variant_dir>")?);
-    let from = from.context("missing --from <leader_dir>")?;
-    if from == dir {
-        bail!("leader and follower directories must differ");
-    }
+    let from = from.context("missing --from <leader_dir | http://host:port>")?;
+    let over_http = from.starts_with("http://");
+    let transport: Box<dyn SyncTransport> = if over_http {
+        Box::new(pawd::net::HttpTransport::new(&from)?)
+    } else {
+        let from_dir = PathBuf::from(&from);
+        if from_dir == dir {
+            bail!("leader and follower directories must differ");
+        }
+        Box::new(FsTransport::new(&from_dir))
+    };
     let registry = Arc::new(VariantRegistry::open(&dir)?);
-    let replicator = Replicator::new(registry.clone(), Box::new(FsTransport::new(&from)));
+    let replicator = Replicator::new(registry.clone(), transport);
+    // One long-poll window per follow pass over HTTP; idle passes cost
+    // header bytes only, and a publish on the leader wakes the poll early.
+    let poll_window = std::time::Duration::from_millis(interval_ms.max(10).max(5_000));
     // This CLI administers an *offline* follower directory (same rule as
     // publish/gc): no server, so there is no cache to warm.
     loop {
         // In follow mode a transient failure (leader gc racing a fetch, a
         // shared-fs blip) must not kill the daemon — report and retry at
         // the next tick; completed variants stay committed either way.
-        let report = match replicator.sync_once(None) {
+        let pass = if follow && over_http {
+            replicator.sync_wait(None, poll_window)
+        } else {
+            replicator.sync_once(None)
+        };
+        let report = match pass {
             Ok(r) => r,
             Err(e) if follow => {
                 eprintln!("sync from {} failed (will retry): {e:#}", replicator.peer());
@@ -352,7 +425,10 @@ fn cmd_replicate(args: &[String]) -> Result<()> {
         if !follow {
             return Ok(());
         }
-        std::thread::sleep(std::time::Duration::from_millis(interval_ms.max(10)));
+        if !over_http {
+            // Filesystem leaders have no change notification; poll.
+            std::thread::sleep(std::time::Duration::from_millis(interval_ms.max(10)));
+        }
     }
 }
 

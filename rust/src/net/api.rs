@@ -1,0 +1,134 @@
+//! Typed HTTP client for the data/admin planes — the network mirror of the
+//! in-process [`Client`](crate::coordinator::Client).
+//!
+//! Scores travel as shortest-roundtrip `f64` JSON (see
+//! [`util::json`](crate::util::json)), so a score fetched through here is
+//! bitwise-equal to one answered in-process. Engine-level rejections
+//! (unknown variant, retired version…) come back as `422` and surface as
+//! `Err` with the engine's own message, exactly like the local client's
+//! `Result<_, String>` lane.
+
+use super::client::{http_request, ClientConfig, HttpPeer};
+use super::http::Method;
+use super::wire;
+use crate::coordinator::{AdminOp, AdminResp, DataOp, MetricsSnapshot, RespBody};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// One data-plane answer: which version actually served, and the body.
+#[derive(Debug)]
+pub struct QueryReply {
+    pub variant: String,
+    pub version: Option<u32>,
+    pub body: RespBody,
+}
+
+/// Remote coordinator handle speaking the `/v1/query` + `/v1/admin/:op`
+/// planes of a [`HttpFrontend`](super::front::HttpFrontend).
+pub struct HttpApiClient {
+    peer: HttpPeer,
+    cfg: ClientConfig,
+}
+
+impl HttpApiClient {
+    pub fn new(url: &str) -> Result<HttpApiClient> {
+        HttpApiClient::with_config(url, ClientConfig::default())
+    }
+
+    pub fn with_config(url: &str, cfg: ClientConfig) -> Result<HttpApiClient> {
+        Ok(HttpApiClient { peer: HttpPeer::parse(url)?, cfg })
+    }
+
+    /// Multiple-choice score over HTTP; same contract as
+    /// [`Client::score`](crate::coordinator::Client::score).
+    pub fn score(&self, variant: &str, prompt: &str, choices: &[String]) -> Result<QueryReply> {
+        self.query(
+            variant,
+            &DataOp::Score { prompt: prompt.to_string(), choices: choices.to_vec() },
+        )
+    }
+
+    pub fn perplexity(&self, variant: &str, text: &str) -> Result<QueryReply> {
+        self.query(variant, &DataOp::Perplexity { text: text.to_string() })
+    }
+
+    fn query(&self, variant: &str, op: &DataOp) -> Result<QueryReply> {
+        let body = wire::query_to_json(variant, op).to_string().into_bytes();
+        let reply = http_request(
+            &self.peer,
+            Method::Post,
+            "/v1/query",
+            Some(("application/json", &body)),
+            &self.cfg,
+        )
+        .with_context(|| format!("querying {}", self.peer.base()))?;
+        if reply.status != 200 {
+            bail!("query got HTTP {}: {}", reply.status, error_text(&reply.body));
+        }
+        let j = parse_body(&reply.body).context("parsing query reply")?;
+        let body = j.get("body").context("query reply missing 'body'")?;
+        Ok(QueryReply {
+            variant: j.req_str("variant").context("query reply")?.to_string(),
+            version: j.get("version").and_then(Json::as_usize).map(|v| v as u32),
+            body: wire::data_body_from_json(body)?,
+        })
+    }
+
+    /// Control-plane op over HTTP; same contract as
+    /// [`Client::admin`](crate::coordinator::Client::admin).
+    pub fn admin(&self, op: &AdminOp) -> Result<AdminResp> {
+        let (route, body_json) = wire::admin_op_to_route(op);
+        let body = body_json.to_string().into_bytes();
+        let reply = http_request(
+            &self.peer,
+            Method::Post,
+            &format!("/v1/admin/{route}"),
+            Some(("application/json", &body)),
+            &self.cfg,
+        )
+        .with_context(|| format!("admin '{route}' against {}", self.peer.base()))?;
+        if reply.status != 200 {
+            bail!("admin '{route}' got HTTP {}: {}", reply.status, error_text(&reply.body));
+        }
+        wire::admin_resp_from_json(&parse_body(&reply.body)?)
+            .with_context(|| format!("parsing admin '{route}' reply"))
+    }
+
+    pub fn stats(&self) -> Result<MetricsSnapshot> {
+        match self.admin(&AdminOp::Stats)? {
+            AdminResp::Stats { snapshot } => Ok(*snapshot),
+            other => bail!("unexpected stats response {other:?}"),
+        }
+    }
+
+    /// `GET /v1/healthz` — `Ok` when the frontend answers 200.
+    pub fn health(&self) -> Result<()> {
+        let reply = http_request(&self.peer, Method::Get, "/v1/healthz", None, &self.cfg)?;
+        if reply.status != 200 {
+            bail!("health check got HTTP {}", reply.status);
+        }
+        Ok(())
+    }
+}
+
+fn parse_body(body: &[u8]) -> Result<Json> {
+    let text = std::str::from_utf8(body).context("reply body is not UTF-8")?;
+    Json::parse(text).context("reply body is not JSON")
+}
+
+/// Pull the `{"error": …}` message out of an error reply, falling back to
+/// the raw (truncated) body.
+fn error_text(body: &[u8]) -> String {
+    if let Ok(j) = parse_body(body) {
+        if let Some(msg) = j.get("error").and_then(Json::as_str) {
+            return msg.to_string();
+        }
+    }
+    let text = String::from_utf8_lossy(body);
+    let text = text.trim();
+    let mut end = text.len().min(200);
+    while !text.is_char_boundary(end) {
+        end -= 1;
+    }
+    text[..end].to_string()
+}

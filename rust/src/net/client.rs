@@ -1,0 +1,514 @@
+//! Minimal HTTP/1.1 client over std `TcpStream`: one connection per
+//! request (`Connection: close`), buffered replies for the JSON planes,
+//! and a streaming, crc-verified, range-resuming download path for
+//! artifact files. Counts wire bytes (head + body, both directions'
+//! received side) so replication accounting reflects real traffic.
+
+use super::http::{fill_until, read_head, HttpError, Method};
+use crate::util::crc32;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// A `http://host:port` peer address.
+#[derive(Clone, Debug)]
+pub struct HttpPeer {
+    host: String,
+    port: u16,
+}
+
+impl HttpPeer {
+    /// Parse `http://host:port` (a lone trailing `/` is tolerated; a path,
+    /// userinfo, or `https` is not).
+    pub fn parse(url: &str) -> Result<HttpPeer> {
+        let rest = url
+            .strip_prefix("http://")
+            .ok_or_else(|| anyhow::anyhow!("peer url '{url}' must start with http://"))?;
+        let rest = rest.strip_suffix('/').unwrap_or(rest);
+        if rest.contains('/') || rest.contains('@') {
+            bail!("peer url '{url}' must be bare http://host:port");
+        }
+        let (host, port) = rest
+            .rsplit_once(':')
+            .ok_or_else(|| anyhow::anyhow!("peer url '{url}' needs an explicit :port"))?;
+        if host.is_empty() {
+            bail!("peer url '{url}' has an empty host");
+        }
+        let port: u16 = port.parse().with_context(|| format!("bad port in '{url}'"))?;
+        Ok(HttpPeer { host: host.to_string(), port })
+    }
+
+    /// Canonical `http://host:port` form.
+    pub fn base(&self) -> String {
+        format!("http://{}:{}", self.host, self.port)
+    }
+
+    fn connect(&self, cfg: &ClientConfig) -> Result<TcpStream> {
+        use std::net::ToSocketAddrs;
+        let addrs: Vec<_> = (self.host.as_str(), self.port)
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {}", self.base()))?
+            .collect();
+        let mut last = None;
+        for addr in addrs {
+            match TcpStream::connect_timeout(&addr, cfg.connect_timeout) {
+                Ok(s) => {
+                    s.set_nodelay(true).ok();
+                    // Socket-level poll granularity; overall deadlines are
+                    // enforced by the read loops on top.
+                    s.set_read_timeout(Some(Duration::from_millis(250)))
+                        .context("setting read timeout")?;
+                    return Ok(s);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        match last {
+            Some(e) => Err(anyhow::Error::new(e).context(format!("connecting to {}", self.base()))),
+            None => bail!("{} resolved to no addresses", self.base()),
+        }
+    }
+}
+
+/// Client-side time/size bounds.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientConfig {
+    pub connect_timeout: Duration,
+    /// Budget for the reply head, and the *stall* budget for bodies: a
+    /// download fails only after this long with zero forward progress, so
+    /// big artifacts are bounded by throughput, not an absolute cap.
+    pub read_timeout: Duration,
+    /// Cap on buffered reply bodies (manifests, JSON). Streamed file
+    /// downloads are not subject to it.
+    pub max_body_bytes: u64,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(30),
+            max_body_bytes: 64 << 20,
+        }
+    }
+}
+
+/// One buffered reply.
+#[derive(Debug)]
+pub struct HttpReply {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Bytes received off the wire for this reply (head + body).
+    pub wire_bytes: u64,
+}
+
+impl HttpReply {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// The reply body as a short diagnostic string (for error messages).
+    pub fn body_text(&self) -> String {
+        let text = String::from_utf8_lossy(&self.body);
+        let text = text.trim();
+        let mut end = text.len().min(200);
+        while !text.is_char_boundary(end) {
+            end -= 1;
+        }
+        text[..end].to_string()
+    }
+}
+
+/// Issue one request and buffer the whole reply.
+pub fn http_request(
+    peer: &HttpPeer,
+    method: Method,
+    path_and_query: &str,
+    body: Option<(&str, &[u8])>,
+    cfg: &ClientConfig,
+) -> Result<HttpReply> {
+    let mut stream = peer.connect(cfg)?;
+    write_request(&mut stream, peer, method, path_and_query, &[], body)
+        .with_context(|| format!("sending {} {}", method.as_str(), path_and_query))?;
+    let deadline = Instant::now() + cfg.read_timeout;
+    let (status, headers, mut rest, head_wire) = read_reply_head(&mut stream, deadline)
+        .with_context(|| format!("reading reply to {} {}", method.as_str(), path_and_query))?;
+    let declared = content_length(&headers)?;
+    let body = match declared {
+        Some(len) => {
+            if len > cfg.max_body_bytes {
+                bail!(
+                    "reply body of {len} bytes exceeds the {}-byte client cap",
+                    cfg.max_body_bytes
+                );
+            }
+            let len = len as usize;
+            if rest.len() < len {
+                fill_until(&mut stream, &mut rest, len, Instant::now() + cfg.read_timeout)
+                    .map_err(anyhow::Error::new)
+                    .with_context(|| format!("reading {len}-byte reply body"))?;
+            }
+            rest.truncate(len);
+            rest
+        }
+        None => {
+            // No Content-Length: body runs to connection close.
+            read_to_end_capped(&mut stream, &mut rest, cfg)?;
+            rest
+        }
+    };
+    Ok(HttpReply {
+        status,
+        headers,
+        wire_bytes: head_wire + body.len() as u64,
+        body,
+    })
+}
+
+/// Outcome of a [`http_fetch_file`] download.
+#[derive(Clone, Copy, Debug)]
+pub struct FileFetchOutcome {
+    /// Bytes of the assembled file on disk.
+    pub file_bytes: u64,
+    /// Bytes received off the wire across every attempt (heads + bodies —
+    /// more than `file_bytes` only by header overhead and any resumed
+    /// overlap).
+    pub wire_bytes: u64,
+}
+
+/// Download `path` into `dest`, streaming to disk. Mid-stream drops resume
+/// with `Range: bytes=N-` (up to a few attempts, as long as each made
+/// progress); the assembled file is verified against the server's
+/// whole-file `X-Content-Crc32` before returning.
+pub fn http_fetch_file(
+    peer: &HttpPeer,
+    path: &str,
+    dest: &Path,
+    cfg: &ClientConfig,
+) -> Result<FileFetchOutcome> {
+    const MAX_ATTEMPTS: usize = 5;
+    let mut out = File::create(dest)
+        .with_context(|| format!("creating download target {}", dest.display()))?;
+    let mut st = FetchState::default();
+    let mut attempt = 0;
+    loop {
+        attempt += 1;
+        let before = st.written;
+        match fetch_attempt(&mut out, peer, path, cfg, &mut st) {
+            Ok(()) => break,
+            Err(e) => {
+                let progressed = st.written > before;
+                if attempt >= MAX_ATTEMPTS || !progressed || !st.resumable {
+                    return Err(e.context(format!(
+                        "downloading {path} from {} (attempt {attempt})",
+                        peer.base()
+                    )));
+                }
+            }
+        }
+    }
+    out.flush().ok();
+    drop(out);
+    if let Some(total) = st.total {
+        if st.written != total {
+            bail!("download of {path} ended at {} of {total} bytes", st.written);
+        }
+    }
+    if let Some(expect) = st.crc {
+        let data =
+            std::fs::read(dest).with_context(|| format!("re-reading {}", dest.display()))?;
+        let got = crc32::hash(&data);
+        if got != expect {
+            bail!(
+                "crc mismatch on {path} from {}: file {got:08x}, server declared {expect:08x}",
+                peer.base()
+            );
+        }
+    }
+    Ok(FileFetchOutcome { file_bytes: st.written, wire_bytes: st.wire })
+}
+
+#[derive(Default)]
+struct FetchState {
+    /// File bytes written so far (== resume offset).
+    written: u64,
+    /// Wire bytes received across attempts.
+    wire: u64,
+    /// Full file length, once a reply declared it.
+    total: Option<u64>,
+    /// Server-declared whole-file crc, once a reply carried it.
+    crc: Option<u32>,
+    /// Whether a retry makes sense (false before the first reply head —
+    /// connect/404 failures should not be retried blind).
+    resumable: bool,
+}
+
+fn fetch_attempt(
+    out: &mut File,
+    peer: &HttpPeer,
+    path: &str,
+    cfg: &ClientConfig,
+    st: &mut FetchState,
+) -> Result<()> {
+    let mut stream = peer.connect(cfg)?;
+    let range_header = format!("bytes={}-", st.written);
+    let mut extra: Vec<(&str, &str)> = Vec::new();
+    if st.written > 0 {
+        extra.push(("Range", range_header.as_str()));
+    }
+    write_request(&mut stream, peer, Method::Get, path, &extra, None)
+        .with_context(|| format!("sending GET {path}"))?;
+    let deadline = Instant::now() + cfg.read_timeout;
+    let (status, headers, mut leftover, head_wire) = read_reply_head(&mut stream, deadline)?;
+    st.wire += head_wire;
+    match status {
+        200 => {
+            if st.written > 0 {
+                // Peer ignored the Range: start the file over.
+                out.set_len(0).context("truncating for full re-download")?;
+                out.seek(SeekFrom::Start(0))?;
+                st.written = 0;
+            }
+        }
+        206 => {
+            let start = headers
+                .iter()
+                .find(|(n, _)| n == "content-range")
+                .and_then(|(_, v)| parse_content_range(v))
+                .ok_or_else(|| anyhow::anyhow!("206 reply without a parsable Content-Range"))?;
+            if start.0 != st.written {
+                bail!("206 resumed at byte {} but {} were requested", start.0, st.written);
+            }
+            match (st.total, start.1) {
+                (Some(a), b) if a != b => {
+                    bail!("file length changed mid-download ({a} → {b})")
+                }
+                _ => st.total = Some(start.1),
+            }
+        }
+        other => {
+            // Small diagnostic body; not resumable.
+            let _ = fill_until(
+                &mut stream,
+                &mut leftover,
+                leftover.len().max(256).min(4096),
+                Instant::now() + Duration::from_millis(500),
+            );
+            bail!(
+                "GET {path} answered {other}: {}",
+                String::from_utf8_lossy(&leftover[..leftover.len().min(200)]).trim()
+            );
+        }
+    }
+    if let Some(hex) = headers.iter().find(|(n, _)| n == "x-content-crc32").map(|(_, v)| v) {
+        let parsed = u32::from_str_radix(hex.trim(), 16)
+            .with_context(|| format!("bad X-Content-Crc32 '{hex}'"))?;
+        match st.crc {
+            Some(c) if c != parsed => bail!("file crc changed mid-download"),
+            _ => st.crc = Some(parsed),
+        }
+    }
+    let body_len = content_length(&headers)?
+        .ok_or_else(|| anyhow::anyhow!("file reply without Content-Length"))?;
+    if status == 200 {
+        match st.total {
+            Some(t) if t != body_len => {
+                bail!("file length changed mid-download ({t} → {body_len})")
+            }
+            _ => st.total = Some(body_len),
+        }
+    }
+    st.resumable = true;
+    // Stream the body to disk: leftover first, then socket chunks. The
+    // deadline is a *stall* deadline — it resets on every byte of progress.
+    let mut consumed: u64 = 0;
+    let keep = leftover.len().min(usize::try_from(body_len).unwrap_or(usize::MAX));
+    leftover.truncate(keep);
+    if !leftover.is_empty() {
+        out.write_all(&leftover).context("writing download chunk")?;
+        consumed += leftover.len() as u64;
+        st.written += leftover.len() as u64;
+        st.wire += leftover.len() as u64;
+    }
+    let mut stall_deadline = Instant::now() + cfg.read_timeout;
+    let mut chunk = [0u8; 64 * 1024];
+    while consumed < body_len {
+        if Instant::now() >= stall_deadline {
+            bail!("download stalled after {consumed} of {body_len} bytes");
+        }
+        let want = (body_len - consumed).min(chunk.len() as u64) as usize;
+        match stream.read(&mut chunk[..want]) {
+            Ok(0) => bail!("peer closed after {consumed} of {body_len} body bytes"),
+            Ok(n) => {
+                out.write_all(&chunk[..n]).context("writing download chunk")?;
+                consumed += n as u64;
+                st.written += n as u64;
+                st.wire += n as u64;
+                stall_deadline = Instant::now() + cfg.read_timeout;
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(anyhow::Error::new(e).context("reading download body")),
+        }
+    }
+    Ok(())
+}
+
+fn write_request(
+    stream: &mut TcpStream,
+    peer: &HttpPeer,
+    method: Method,
+    path_and_query: &str,
+    extra_headers: &[(&str, &str)],
+    body: Option<(&str, &[u8])>,
+) -> Result<()> {
+    let mut head = format!(
+        "{} {} HTTP/1.1\r\nHost: {}:{}\r\nConnection: close\r\n",
+        method.as_str(),
+        path_and_query,
+        peer.host,
+        peer.port
+    );
+    for (name, value) in extra_headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    match body {
+        Some((content_type, bytes)) => {
+            head.push_str(&format!(
+                "Content-Type: {content_type}\r\nContent-Length: {}\r\n\r\n",
+                bytes.len()
+            ));
+            stream.write_all(head.as_bytes())?;
+            stream.write_all(bytes)?;
+        }
+        None => {
+            head.push_str("\r\n");
+            stream.write_all(head.as_bytes())?;
+        }
+    }
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read a reply's status line + headers. Returns `(status, headers,
+/// over-read body bytes, wire bytes consumed so far)`.
+fn read_reply_head(
+    stream: &mut TcpStream,
+    deadline: Instant,
+) -> Result<(u16, Vec<(String, String)>, Vec<u8>, u64)> {
+    const MAX_REPLY_HEAD: usize = 16 * 1024;
+    let parsed = read_head(stream, Vec::new(), MAX_REPLY_HEAD, deadline)
+        .map_err(anyhow::Error::new)?
+        .ok_or_else(|| anyhow::anyhow!("peer closed before sending a reply"))?;
+    let (head, rest) = parsed;
+    let wire = head.len() as u64 + 4 + rest.len() as u64;
+    let head = std::str::from_utf8(&head).context("reply head is not valid UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let mut parts = status_line.splitn(3, ' ');
+    let status: u16 = match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/1.") => code
+            .parse()
+            .with_context(|| format!("bad status in reply line '{status_line}'"))?,
+        _ => bail!("bad reply line '{status_line}'"),
+    };
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("reply header line without ':'"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    Ok((status, headers, rest, wire))
+}
+
+fn content_length(headers: &[(String, String)]) -> Result<Option<u64>> {
+    match headers.iter().find(|(n, _)| n == "content-length") {
+        None => Ok(None),
+        Some((_, v)) => Ok(Some(
+            v.parse().with_context(|| format!("bad reply Content-Length '{v}'"))?,
+        )),
+    }
+}
+
+/// Parse `Content-Range: bytes START-END/TOTAL` → `(START, TOTAL)`.
+fn parse_content_range(v: &str) -> Option<(u64, u64)> {
+    let rest = v.trim().strip_prefix("bytes ")?;
+    let (range, total) = rest.split_once('/')?;
+    let (start, _end) = range.split_once('-')?;
+    Some((start.parse().ok()?, total.parse().ok()?))
+}
+
+fn read_to_end_capped(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    cfg: &ClientConfig,
+) -> Result<()> {
+    let deadline = Instant::now() + cfg.read_timeout;
+    let mut chunk = [0u8; 8192];
+    loop {
+        if buf.len() as u64 > cfg.max_body_bytes {
+            bail!("reply body exceeds the {}-byte client cap", cfg.max_body_bytes);
+        }
+        if Instant::now() >= deadline {
+            bail!("reply body did not complete within the read timeout");
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return Ok(()),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(anyhow::Error::new(e).context("reading reply body")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peer_parsing() {
+        let p = HttpPeer::parse("http://127.0.0.1:8080").unwrap();
+        assert_eq!(p.base(), "http://127.0.0.1:8080");
+        assert_eq!(HttpPeer::parse("http://localhost:9/").unwrap().base(), "http://localhost:9");
+        for bad in [
+            "https://x:1",
+            "http://x",
+            "http://:8080",
+            "http://x:notaport",
+            "http://a:1/path",
+            "http://u@h:1",
+            "fs:/some/dir",
+        ] {
+            assert!(HttpPeer::parse(bad).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn content_range_parsing() {
+        assert_eq!(parse_content_range("bytes 100-499/500"), Some((100, 500)));
+        assert_eq!(parse_content_range(" bytes 0-0/1"), Some((0, 1)));
+        assert_eq!(parse_content_range("bytes */500"), None);
+        assert_eq!(parse_content_range("items 1-2/3"), None);
+    }
+}

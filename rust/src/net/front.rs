@@ -1,0 +1,409 @@
+//! The serving front-end: one `TcpListener`, thread-per-connection, and a
+//! `routes!` table bridging HTTP onto the
+//! coordinator's existing seams.
+//!
+//! Three planes share the listener:
+//!
+//! * **data** — `POST /v1/query` submits a
+//!   [`DataOp`](crate::coordinator::DataOp) through the same
+//!   [`Client`] channel the in-process path uses, so an HTTP score is
+//!   bitwise-identical to a local one (scores ride the shortest-roundtrip
+//!   `f64` JSON encoding).
+//! * **admin** — `POST /v1/admin/:op` maps kebab-case op names onto
+//!   [`AdminOp`](crate::coordinator::AdminOp) via [`super::wire`].
+//! * **sync** — `GET /v1/sync/manifest` (long-poll on `known_seq`) and
+//!   `GET /v1/sync/file/:name` (crc-tagged, range-resumable) feed
+//!   [`HttpTransport`](super::transport::HttpTransport) followers. A
+//!   frontend started without a [`Client`] serves *only* this plane —
+//!   useful for pure replication sources.
+//!
+//! No auth, no TLS: the plane trusts its network (loopback / lab LAN).
+
+use super::http::{HttpConn, HttpError, HttpLimits, HttpRequest, HttpResponse};
+use super::router::{routes, RouteParams, Router};
+use super::wire;
+use crate::coordinator::registry::{parse_manifest_view, VariantRegistry, MANIFEST_FILE};
+use crate::coordinator::replicate::ensure_bare_file_name;
+use crate::coordinator::{Client, Payload};
+use crate::exec::counters;
+use crate::util::crc32;
+use crate::util::json::{n, obj, s, Json};
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Tuning knobs for one frontend. `Default` is sized for tests and
+/// single-host serving.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontConfig {
+    /// Per-message parse bounds (head/body size and deadlines).
+    pub limits: HttpLimits,
+    /// Concurrent connections beyond which new peers get an immediate 503.
+    pub max_conns: usize,
+    /// Keep-alive requests served per connection before a polite close.
+    pub max_requests_per_conn: u32,
+    /// Ceiling on one manifest long-poll, whatever `timeout_ms` asks for.
+    pub long_poll_cap: Duration,
+}
+
+impl Default for FrontConfig {
+    fn default() -> Self {
+        FrontConfig {
+            limits: HttpLimits::default(),
+            max_conns: 64,
+            max_requests_per_conn: 1000,
+            long_poll_cap: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Shared handler state. Cloned per connection thread (the [`Client`]
+/// sender is `Send`, and per-thread clones sidestep any `Sync` question).
+#[derive(Clone)]
+struct FrontState {
+    /// `None` runs the frontend sync-only: query/admin answer 503.
+    client: Option<Client>,
+    registry: Arc<VariantRegistry>,
+    cfg: FrontConfig,
+    shutdown: Arc<AtomicBool>,
+}
+
+/// A running HTTP frontend. Dropping it (or calling [`shutdown`]) stops the
+/// accept loop; in-flight connections notice the flag within one poll slice.
+///
+/// [`shutdown`]: HttpFrontend::shutdown
+pub struct HttpFrontend {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpFrontend {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start serving. `client`
+    /// attaches the data/admin planes; `registry` feeds the sync plane.
+    pub fn start(
+        addr: &str,
+        client: Option<Client>,
+        registry: Arc<VariantRegistry>,
+        cfg: FrontConfig,
+    ) -> io::Result<HttpFrontend> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let state = FrontState { client, registry, cfg, shutdown: shutdown.clone() };
+        let accept = std::thread::Builder::new()
+            .name("pawd-http-accept".into())
+            .spawn(move || accept_loop(listener, state))?;
+        Ok(HttpFrontend { addr: local, shutdown, accept: Some(accept) })
+    }
+
+    /// The bound address (real port even when started on `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// `http://host:port` form of [`addr`](Self::addr), ready for
+    /// [`HttpTransport::new`](super::transport::HttpTransport::new).
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    /// Stop accepting and join the accept thread. Connection threads see
+    /// the flag at their next read slice and drain on their own.
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // The accept loop blocks in accept(); a throwaway self-connect
+        // wakes it so it can observe the flag.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(500));
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for HttpFrontend {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: FrontState) {
+    let active = Arc::new(AtomicUsize::new(0));
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if state.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if state.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        if active.load(Ordering::SeqCst) >= state.cfg.max_conns {
+            let mut stream = stream;
+            let reject = HttpResponse::error(503, "connection limit reached");
+            let _ = reject.write_to(&mut stream, false);
+            continue;
+        }
+        active.fetch_add(1, Ordering::SeqCst);
+        let state = state.clone();
+        let active = active.clone();
+        let spawned = std::thread::Builder::new().name("pawd-http-conn".into()).spawn(move || {
+            handle_conn(&state, stream);
+            active.fetch_sub(1, Ordering::SeqCst);
+        });
+        if spawned.is_err() {
+            active.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Serve one connection: keep-alive loop, typed-error close, per-request
+/// counter. Any write failure just drops the connection — the peer is gone.
+fn handle_conn(state: &FrontState, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    // Short socket timeout so blocked reads re-check deadlines (and the
+    // shutdown flag between requests) instead of hanging on a silent peer.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let router = route_table();
+    let mut conn = HttpConn::new(stream);
+    let mut served: u32 = 0;
+    loop {
+        if state.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match conn.read_request(&state.cfg.limits) {
+            Ok(None) => return,
+            Ok(Some(req)) => {
+                counters::record_http_request();
+                served += 1;
+                let keep_alive = !req.wants_close && served < state.cfg.max_requests_per_conn;
+                let resp = router.dispatch(state, &req);
+                if resp.write_to(conn.get_mut(), keep_alive).is_err() || !keep_alive {
+                    return;
+                }
+            }
+            Err(err) => {
+                respond_to_error(&mut conn, &err);
+                return;
+            }
+        }
+    }
+}
+
+/// Best-effort status line for a parse failure whose [`HttpError::status`]
+/// says the peer is still worth answering.
+fn respond_to_error(conn: &mut HttpConn<TcpStream>, err: &HttpError) {
+    if let Some(status) = err.status() {
+        let _ = HttpResponse::error(status, &err.to_string()).write_to(conn.get_mut(), false);
+    }
+}
+
+fn route_table() -> Router<FrontState> {
+    routes! {
+        GET  "/v1/healthz"         => health,
+        POST "/v1/query"           => query,
+        POST "/v1/admin/:op"       => admin,
+        GET  "/v1/sync/manifest"   => sync_manifest,
+        GET  "/v1/sync/file/:name" => sync_file,
+    }
+}
+
+fn health(state: &FrontState, _req: &HttpRequest, _params: &RouteParams) -> HttpResponse {
+    let role = if state.client.is_some() { "serve" } else { "sync-only" };
+    HttpResponse::json(200, &obj(vec![("ok", Json::Bool(true)), ("role", s(role))]))
+}
+
+/// `POST /v1/query` — body `{"variant", "op", …}` per [`wire::query_from_json`].
+fn query(state: &FrontState, req: &HttpRequest, _params: &RouteParams) -> HttpResponse {
+    let Some(client) = &state.client else {
+        return HttpResponse::error(503, "serving plane not attached (sync-only frontend)");
+    };
+    let parsed = std::str::from_utf8(&req.body)
+        .map_err(|_| "body is not UTF-8".to_string())
+        .and_then(|text| Json::parse(text).map_err(|e| e.to_string()))
+        .and_then(|j| wire::query_from_json(&j).map_err(|e| e.to_string()));
+    let (variant, op) = match parsed {
+        Ok(pair) => pair,
+        Err(msg) => return HttpResponse::error(400, &format!("bad query body: {msg}")),
+    };
+    let rx = client.submit(&variant, Payload::Data(op));
+    let resp = match rx.recv() {
+        Ok(resp) => resp,
+        Err(_) => return HttpResponse::error(503, "engine unavailable"),
+    };
+    match resp.result {
+        Ok(body) => match wire::data_body_to_json(&body) {
+            Ok(body_json) => {
+                let mut fields = vec![("variant", s(&resp.variant))];
+                if let Some(v) = resp.version {
+                    fields.push(("version", n(v as f64)));
+                }
+                fields.push(("body", body_json));
+                fields.push(("timing", wire::timing_to_json(&resp.timing)));
+                HttpResponse::json(200, &obj(fields))
+            }
+            Err(e) => HttpResponse::error(500, &format!("unencodable response: {e}")),
+        },
+        Err(msg) => HttpResponse::error(422, &msg),
+    }
+}
+
+/// `POST /v1/admin/:op` — kebab-case op routes per [`wire::admin_op_from_route`].
+fn admin(state: &FrontState, req: &HttpRequest, params: &RouteParams) -> HttpResponse {
+    let Some(client) = &state.client else {
+        return HttpResponse::error(503, "admin plane not attached (sync-only frontend)");
+    };
+    let body_json = if req.body.is_empty() {
+        Ok(obj(Vec::new()))
+    } else {
+        std::str::from_utf8(&req.body)
+            .map_err(|_| "body is not UTF-8".to_string())
+            .and_then(|text| Json::parse(text).map_err(|e| e.to_string()))
+    };
+    let op = body_json.and_then(|j| {
+        wire::admin_op_from_route(params.get(0), &j).map_err(|e| e.to_string())
+    });
+    let op = match op {
+        Ok(op) => op,
+        Err(msg) => return HttpResponse::error(400, &format!("bad admin request: {msg}")),
+    };
+    match client.admin(op) {
+        Ok(resp) => HttpResponse::json(200, &wire::admin_resp_to_json(&resp)),
+        Err(msg) => HttpResponse::error(422, &msg),
+    }
+}
+
+/// `GET /v1/sync/manifest[?known_seq=N&timeout_ms=M]`.
+///
+/// With `known_seq` matching the current sequence and a positive
+/// `timeout_ms`, the handler parks on the registry's manifest watch
+/// (counted in `http_long_polls`) until a publish bumps the sequence or
+/// the timeout lapses. The answer is always taken from the manifest
+/// *file* — its embedded `manifest_seq` is what a follower will replay,
+/// and the in-memory atomic ticks before the file lands. `304` +
+/// `X-Manifest-Seq` means "nothing newer than what you hold", and costs
+/// only header bytes on the wire.
+fn sync_manifest(state: &FrontState, req: &HttpRequest, _params: &RouteParams) -> HttpResponse {
+    let known_seq = match req.query_param("known_seq").map(str::parse::<u64>) {
+        None => None,
+        Some(Ok(v)) => Some(v),
+        Some(Err(_)) => return HttpResponse::error(400, "known_seq must be a non-negative integer"),
+    };
+    let timeout_ms = match req.query_param("timeout_ms").map(str::parse::<u64>) {
+        None => 0,
+        Some(Ok(v)) => v,
+        Some(Err(_)) => {
+            return HttpResponse::error(400, "timeout_ms must be a non-negative integer");
+        }
+    };
+    if let Some(known) = known_seq {
+        let wait = Duration::from_millis(timeout_ms).min(state.cfg.long_poll_cap);
+        if !wait.is_zero() && state.registry.manifest_seq() == known {
+            counters::record_http_long_poll();
+            // Park in short slices so a shutdown can't strand the poller
+            // for the whole window.
+            let deadline = Instant::now() + wait;
+            loop {
+                if state.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let slice = (deadline - now).min(Duration::from_millis(250));
+                if state.registry.wait_manifest_change(known, slice) != known {
+                    break;
+                }
+            }
+        }
+    }
+    let manifest_path = state.registry.dir().join(MANIFEST_FILE);
+    let bytes = match std::fs::read(&manifest_path) {
+        Ok(bytes) => bytes,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {
+            return HttpResponse::error(404, "manifest not yet persisted");
+        }
+        Err(e) => return HttpResponse::error(500, &format!("manifest read failed: {e}")),
+    };
+    let file_seq = match std::str::from_utf8(&bytes).ok().and_then(|t| parse_manifest_view(t).ok())
+    {
+        Some(view) => view.manifest_seq,
+        None => return HttpResponse::error(500, "manifest file is unreadable"),
+    };
+    let seq_header = file_seq.to_string();
+    if known_seq == Some(file_seq) {
+        return HttpResponse::empty(304).with_header("X-Manifest-Seq", &seq_header);
+    }
+    HttpResponse::bytes(200, "application/json", bytes).with_header("X-Manifest-Seq", &seq_header)
+}
+
+/// `GET /v1/sync/file/:name` — one artifact out of the registry directory.
+///
+/// `X-Content-Crc32` always describes the *whole* file (hex), so a client
+/// resuming with `Range: bytes=N-` can verify the assembled result. Names
+/// pass [`ensure_bare_file_name`] — the same gate the replicator applies —
+/// so the route can never walk out of the registry directory.
+fn sync_file(state: &FrontState, req: &HttpRequest, params: &RouteParams) -> HttpResponse {
+    let name = params.get(0);
+    if let Err(e) = ensure_bare_file_name(name) {
+        return HttpResponse::error(400, &format!("bad file name: {e}"));
+    }
+    let data = match std::fs::read(state.registry.dir().join(name)) {
+        Ok(data) => data,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {
+            return HttpResponse::error(404, &format!("no such artifact '{name}'"));
+        }
+        Err(e) => return HttpResponse::error(500, &format!("artifact read failed: {e}")),
+    };
+    let total = data.len() as u64;
+    let crc = format!("{:08x}", crc32::hash(&data));
+    let offset = req.header("range").and_then(parse_range_start).unwrap_or(0);
+    if offset > 0 {
+        if offset >= total {
+            return HttpResponse::error(416, "range start beyond end of file")
+                .with_header("Content-Range", &format!("bytes */{total}"))
+                .with_header("X-Content-Crc32", &crc);
+        }
+        let content_range = format!("bytes {offset}-{}/{total}", total - 1);
+        let tail = data[offset as usize..].to_vec();
+        return HttpResponse::bytes(206, "application/octet-stream", tail)
+            .with_header("Content-Range", &content_range)
+            .with_header("Accept-Ranges", "bytes")
+            .with_header("X-Content-Crc32", &crc);
+    }
+    HttpResponse::bytes(200, "application/octet-stream", data)
+        .with_header("Accept-Ranges", "bytes")
+        .with_header("X-Content-Crc32", &crc)
+}
+
+/// Parse `bytes=N-` (open-ended resume form). Anything else — multi-range,
+/// suffix ranges, other units — is ignored and served as a full `200`,
+/// which the resuming client treats as "start over".
+fn parse_range_start(value: &str) -> Option<u64> {
+    let spec = value.trim().strip_prefix("bytes=")?;
+    let start = spec.strip_suffix('-')?;
+    start.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_start_parsing() {
+        assert_eq!(parse_range_start("bytes=0-"), Some(0));
+        assert_eq!(parse_range_start("bytes=1234-"), Some(1234));
+        assert_eq!(parse_range_start(" bytes=7- "), Some(7));
+        assert_eq!(parse_range_start("bytes=1-5"), None, "closed ranges unsupported");
+        assert_eq!(parse_range_start("bytes=-5"), None, "suffix ranges unsupported");
+        assert_eq!(parse_range_start("items=3-"), None);
+        assert_eq!(parse_range_start("bytes=x-"), None);
+    }
+}

@@ -1,0 +1,571 @@
+//! Vendored HTTP/1.1 message layer over any `Read`/`Write` pair.
+//!
+//! Deliberately tiny: `Content-Length` bodies only (chunked transfer
+//! encoding is refused with `501`), two methods, no compression, no TLS.
+//! What it *is* careful about is hostile input — every parse failure is a
+//! typed [`HttpError`] that maps to a status code and a clean connection
+//! drop, and all reads are bounded in both bytes ([`HttpLimits`]) and time
+//! (deadlines enforced through the socket's `read_timeout`, so a slow-loris
+//! peer trickling one byte per poll still hits the head/body deadline).
+//!
+//! [`HttpConn`] owns the read side of one connection and carries pipelined
+//! leftover bytes between requests, so keep-alive costs nothing extra.
+
+use crate::util::json::Json;
+use std::io::{ErrorKind, Read, Write};
+use std::time::{Duration, Instant};
+
+/// Request methods the plane serves. Anything else parses into a typed
+/// [`HttpError::Unsupported`] (a `501`, not a panic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Get,
+    Post,
+}
+
+impl Method {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Method::Get => "GET",
+            Method::Post => "POST",
+        }
+    }
+}
+
+/// Byte/time bounds for reading one message off a connection.
+#[derive(Clone, Copy, Debug)]
+pub struct HttpLimits {
+    /// Cap on request-line + headers bytes (431 beyond it).
+    pub max_head_bytes: usize,
+    /// Cap on declared `Content-Length` (413 beyond it).
+    pub max_body_bytes: u64,
+    /// Wall-clock budget to receive the full head (408 beyond it).
+    pub head_deadline: Duration,
+    /// Wall-clock budget to receive the full body (408 beyond it).
+    pub body_deadline: Duration,
+}
+
+impl Default for HttpLimits {
+    fn default() -> Self {
+        HttpLimits {
+            max_head_bytes: 8 * 1024,
+            max_body_bytes: 1 << 20,
+            head_deadline: Duration::from_secs(5),
+            body_deadline: Duration::from_secs(15),
+        }
+    }
+}
+
+/// Every way reading a message can fail. `status` says what (if anything)
+/// is worth telling the peer before dropping the connection.
+#[derive(Debug)]
+pub enum HttpError {
+    /// The peer closed mid-message.
+    Truncated,
+    /// A head/body deadline expired before the message completed.
+    Timeout,
+    /// Head grew past [`HttpLimits::max_head_bytes`].
+    HeadTooLarge { limit: usize },
+    /// Declared body exceeds [`HttpLimits::max_body_bytes`].
+    BodyTooLarge { declared: u64, limit: u64 },
+    /// Anything structurally wrong: bad request line, bad header, bad
+    /// escape, non-UTF-8 head, traversal path…
+    Malformed(String),
+    /// Structurally valid HTTP the plane chooses not to speak (chunked
+    /// bodies, exotic methods, HTTP/2 preludes).
+    Unsupported(&'static str),
+    /// Transport-level I/O failure.
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    /// Status code worth answering with before the drop; `None` means the
+    /// peer is gone (or never spoke HTTP) and writing is pointless.
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            HttpError::Truncated | HttpError::Io(_) => None,
+            HttpError::Timeout => Some(408),
+            HttpError::HeadTooLarge { .. } => Some(431),
+            HttpError::BodyTooLarge { .. } => Some(413),
+            HttpError::Malformed(_) => Some(400),
+            HttpError::Unsupported(_) => Some(501),
+        }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Truncated => write!(f, "connection closed mid-message"),
+            HttpError::Timeout => write!(f, "message did not complete within the deadline"),
+            HttpError::HeadTooLarge { limit } => {
+                write!(f, "request head exceeds {limit} bytes")
+            }
+            HttpError::BodyTooLarge { declared, limit } => {
+                write!(f, "declared body of {declared} bytes exceeds the {limit}-byte cap")
+            }
+            HttpError::Malformed(m) => write!(f, "malformed message: {m}"),
+            HttpError::Unsupported(what) => write!(f, "unsupported: {what}"),
+            HttpError::Io(e) => write!(f, "i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// One parsed request. `path` and query parts are percent-decoded; header
+/// names are lowercased at parse time so lookups are case-insensitive.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: Method,
+    pub path: String,
+    pub query: Vec<(String, String)>,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Peer asked to close after this response (`Connection: close` or
+    /// HTTP/1.0 without keep-alive).
+    pub wants_close: bool,
+}
+
+impl HttpRequest {
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// First query parameter with this name.
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// The read side of one connection, carrying pipelined leftovers between
+/// messages.
+pub struct HttpConn<R> {
+    inner: R,
+    carry: Vec<u8>,
+}
+
+impl<R: Read> HttpConn<R> {
+    pub fn new(inner: R) -> HttpConn<R> {
+        HttpConn { inner, carry: Vec::new() }
+    }
+
+    pub fn get_mut(&mut self) -> &mut R {
+        &mut self.inner
+    }
+
+    /// Read and parse one request. `Ok(None)` is a clean close between
+    /// requests (keep-alive peer going away); every other shortfall is a
+    /// typed error.
+    pub fn read_request(&mut self, limits: &HttpLimits) -> Result<Option<HttpRequest>, HttpError> {
+        let carry = std::mem::take(&mut self.carry);
+        let deadline = Instant::now() + limits.head_deadline;
+        let Some((head, mut rest)) =
+            read_head(&mut self.inner, carry, limits.max_head_bytes, deadline)?
+        else {
+            return Ok(None);
+        };
+        let head = std::str::from_utf8(&head)
+            .map_err(|_| HttpError::Malformed("head is not valid UTF-8".into()))?;
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split(' ');
+        let first_four = (parts.next(), parts.next(), parts.next(), parts.next());
+        let (method, target, version) = match first_four {
+            (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+            _ => {
+                return Err(HttpError::Malformed(format!(
+                    "bad request line '{}'",
+                    truncate_for_log(request_line)
+                )))
+            }
+        };
+        let method = match method {
+            "GET" => Method::Get,
+            "POST" => Method::Post,
+            _ => return Err(HttpError::Unsupported("method")),
+        };
+        if version != "HTTP/1.1" && version != "HTTP/1.0" {
+            return Err(HttpError::Unsupported("http version"));
+        }
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let Some((name, value)) = line.split_once(':') else {
+                return Err(HttpError::Malformed(format!(
+                    "header line without ':' ('{}')",
+                    truncate_for_log(line)
+                )));
+            };
+            let name = name.trim();
+            if name.is_empty() || !name.bytes().all(is_token_byte) {
+                return Err(HttpError::Malformed("bad header name".into()));
+            }
+            headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+        }
+        let (path, query) = parse_target(target)?;
+        if headers.iter().any(|(n, _)| n == "transfer-encoding") {
+            return Err(HttpError::Unsupported("transfer-encoding"));
+        }
+        let declared: u64 = match headers.iter().find(|(n, _)| n == "content-length") {
+            None => 0,
+            Some((_, v)) => v
+                .parse()
+                .map_err(|_| HttpError::Malformed(format!("bad content-length '{v}'")))?,
+        };
+        if declared > limits.max_body_bytes {
+            return Err(HttpError::BodyTooLarge {
+                declared,
+                limit: limits.max_body_bytes,
+            });
+        }
+        let declared = declared as usize;
+        let mut body;
+        if rest.len() >= declared {
+            body = rest;
+            self.carry = body.split_off(declared);
+        } else {
+            let body_deadline = Instant::now() + limits.body_deadline;
+            fill_until(&mut self.inner, &mut rest, declared, body_deadline)?;
+            body = rest;
+            self.carry = body.split_off(declared);
+        }
+        let wants_close = match headers.iter().find(|(n, _)| n == "connection") {
+            Some((_, v)) => v.eq_ignore_ascii_case("close"),
+            None => version == "HTTP/1.0",
+        };
+        Ok(Some(HttpRequest { method, path, query, headers, body, wants_close }))
+    }
+}
+
+/// Accumulate bytes until the `\r\n\r\n` head terminator. Returns the head
+/// (terminator stripped) and any over-read bytes, or `None` on a clean
+/// close before the first byte.
+pub(crate) fn read_head<R: Read>(
+    r: &mut R,
+    mut buf: Vec<u8>,
+    max_head: usize,
+    deadline: Instant,
+) -> Result<Option<(Vec<u8>, Vec<u8>)>, HttpError> {
+    loop {
+        if let Some(pos) = find_terminator(&buf) {
+            if pos > max_head {
+                return Err(HttpError::HeadTooLarge { limit: max_head });
+            }
+            let rest = buf.split_off(pos + 4);
+            buf.truncate(pos);
+            return Ok(Some((buf, rest)));
+        }
+        // Without a terminator in L buffered bytes the head is ≥ L-3 bytes
+        // (the terminator could straddle the buffer end), so past this point
+        // it is over the cap no matter what arrives next. The buffer may
+        // legitimately exceed the head cap when a pipelined peer's next body
+        // rides in the carry — that is why the found-terminator branch
+        // checks `pos`, not the buffer length.
+        if buf.len() > max_head + 3 {
+            return Err(HttpError::HeadTooLarge { limit: max_head });
+        }
+        if Instant::now() >= deadline {
+            return Err(HttpError::Timeout);
+        }
+        let mut chunk = [0u8; 2048];
+        match r.read(&mut chunk) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(HttpError::Truncated);
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    }
+}
+
+/// Read until `buf` holds at least `want` bytes or the deadline expires.
+pub(crate) fn fill_until<R: Read>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    want: usize,
+    deadline: Instant,
+) -> Result<(), HttpError> {
+    while buf.len() < want {
+        if Instant::now() >= deadline {
+            return Err(HttpError::Timeout);
+        }
+        let mut chunk = [0u8; 8192];
+        match r.read(&mut chunk) {
+            Ok(0) => return Err(HttpError::Truncated),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+fn find_terminator(buf: &[u8]) -> Option<usize> {
+    if buf.len() < 4 {
+        return None;
+    }
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn is_token_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b"!#$%&'*+-.^_`|~".contains(&b)
+}
+
+/// Split and percent-decode `path[?query]`. Decoded paths must stay inside
+/// the route namespace: absolute, no `..` segment, no NUL.
+fn parse_target(target: &str) -> Result<(String, Vec<(String, String)>), HttpError> {
+    let (raw_path, raw_query) = match target.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (target, None),
+    };
+    let path = percent_decode(raw_path, false)?;
+    if !path.starts_with('/') || path.contains('\0') {
+        return Err(HttpError::Malformed(format!("bad path '{}'", truncate_for_log(&path))));
+    }
+    if path.split('/').any(|seg| seg == "..") {
+        return Err(HttpError::Malformed("path traversal ('..') rejected".into()));
+    }
+    let mut query = Vec::new();
+    if let Some(q) = raw_query {
+        for pair in q.split('&').filter(|p| !p.is_empty()) {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            query.push((percent_decode(k, true)?, percent_decode(v, true)?));
+        }
+    }
+    Ok((path, query))
+}
+
+/// Percent-decode one component. In query position `+` means space.
+fn percent_decode(s: &str, plus_is_space: bool) -> Result<String, HttpError> {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' => {
+                let hex = bytes
+                    .get(i + 1..i + 3)
+                    .and_then(|h| std::str::from_utf8(h).ok())
+                    .and_then(|h| u8::from_str_radix(h, 16).ok());
+                match hex {
+                    Some(b) => {
+                        out.push(b);
+                        i += 3;
+                    }
+                    None => return Err(HttpError::Malformed("bad percent-escape".into())),
+                }
+            }
+            b'+' if plus_is_space => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8(out)
+        .map_err(|_| HttpError::Malformed("decoded component is not valid UTF-8".into()))
+}
+
+fn truncate_for_log(s: &str) -> String {
+    const CAP: usize = 80;
+    if s.len() <= CAP {
+        s.to_string()
+    } else {
+        let mut end = CAP;
+        while !s.is_char_boundary(end) {
+            end -= 1;
+        }
+        format!("{}…", &s[..end])
+    }
+}
+
+/// One response to serialize. Bodies are in-memory (`Vec<u8>`); artifact
+/// files are small enough (MBs) that the file route reads them once — it
+/// needs the whole file for the crc header anyway.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn empty(status: u16) -> HttpResponse {
+        HttpResponse { status, headers: Vec::new(), body: Vec::new() }
+    }
+
+    pub fn json(status: u16, body: &Json) -> HttpResponse {
+        HttpResponse::bytes(status, "application/json", body.to_string().into_bytes())
+    }
+
+    pub fn bytes(status: u16, content_type: &str, body: Vec<u8>) -> HttpResponse {
+        HttpResponse {
+            status,
+            headers: vec![("Content-Type".into(), content_type.into())],
+            body,
+        }
+    }
+
+    /// `{"error": msg}` with the given status.
+    pub fn error(status: u16, msg: &str) -> HttpResponse {
+        use crate::util::json::{obj, s};
+        HttpResponse::json(status, &obj(vec![("error", s(msg))]))
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> HttpResponse {
+        self.headers.push((name.into(), value.into()));
+        self
+    }
+
+    /// Serialize onto the wire. Returns bytes written (head + body).
+    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> std::io::Result<u64> {
+        let mut head = format!("HTTP/1.1 {} {}\r\n", self.status, status_reason(self.status));
+        for (name, value) in &self.headers {
+            head.push_str(name);
+            head.push_str(": ");
+            head.push_str(value);
+            head.push_str("\r\n");
+        }
+        head.push_str(&format!("Content-Length: {}\r\n", self.body.len()));
+        head.push_str(if keep_alive {
+            "Connection: keep-alive\r\n\r\n"
+        } else {
+            "Connection: close\r\n\r\n"
+        });
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()?;
+        Ok((head.len() + self.body.len()) as u64)
+    }
+}
+
+pub(crate) fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        204 => "No Content",
+        206 => "Partial Content",
+        304 => "Not Modified",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        416 => "Range Not Satisfiable",
+        422 => "Unprocessable Entity",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Status",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &[u8]) -> Result<Option<HttpRequest>, HttpError> {
+        HttpConn::new(Cursor::new(raw.to_vec())).read_request(&HttpLimits::default())
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let raw: &[u8] = b"GET /v1/sync/manifest?known_seq=7&timeout_ms=100 HTTP/1.1\r\n\
+                           Host: x\r\n\r\n";
+        let req = parse(raw).unwrap().unwrap();
+        assert_eq!(req.method, Method::Get);
+        assert_eq!(req.path, "/v1/sync/manifest");
+        assert_eq!(req.query_param("known_seq"), Some("7"));
+        assert_eq!(req.query_param("timeout_ms"), Some("100"));
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert!(!req.wants_close);
+    }
+
+    #[test]
+    fn parses_post_with_body_and_pipelined_leftover() {
+        let raw = b"POST /v1/query HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcdGET / HTTP/1.1\r\n\r\n";
+        let mut conn = HttpConn::new(Cursor::new(raw.to_vec()));
+        let limits = HttpLimits::default();
+        let first = conn.read_request(&limits).unwrap().unwrap();
+        assert_eq!(first.body, b"abcd");
+        let second = conn.read_request(&limits).unwrap().unwrap();
+        assert_eq!(second.method, Method::Get);
+        assert_eq!(second.path, "/");
+        assert!(conn.read_request(&limits).unwrap().is_none(), "clean close after pipeline");
+    }
+
+    #[test]
+    fn percent_decoding_and_plus() {
+        let req =
+            parse(b"GET /v1/sync/file/ft%401.pawd?q=a+b%21 HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert_eq!(req.path, "/v1/sync/file/ft@1.pawd");
+        assert_eq!(req.query_param("q"), Some("a b!"));
+    }
+
+    #[test]
+    fn typed_rejections() {
+        assert!(matches!(parse(b"BREW /pot HTTP/1.1\r\n\r\n"), Err(HttpError::Unsupported(_))));
+        assert!(matches!(parse(b"GET / HTTP/2.0\r\n\r\n"), Err(HttpError::Unsupported(_))));
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(HttpError::Unsupported(_))
+        ));
+        assert!(matches!(parse(b"GET /../etc HTTP/1.1\r\n\r\n"), Err(HttpError::Malformed(_))));
+        assert!(matches!(
+            parse(b"GET /%2e%2e/etc HTTP/1.1\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n"),
+            Err(HttpError::BodyTooLarge { .. })
+        ));
+        assert!(matches!(parse(b"GET / HTT"), Err(HttpError::Truncated)));
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"),
+            Err(HttpError::Truncated)
+        ));
+        assert!(parse(b"").unwrap().is_none(), "clean close");
+    }
+
+    #[test]
+    fn head_size_cap() {
+        let mut raw = b"GET / HTTP/1.1\r\nX-Filler: ".to_vec();
+        raw.resize(raw.len() + 10_000, b'a');
+        raw.extend_from_slice(b"\r\n\r\n");
+        assert!(matches!(parse(&raw), Err(HttpError::HeadTooLarge { .. })));
+    }
+
+    #[test]
+    fn response_roundtrip_shape() {
+        let resp = HttpResponse::json(200, &crate::util::json::obj(vec![("ok", Json::Bool(true))]))
+            .with_header("X-Manifest-Seq", "9");
+        let mut out = Vec::new();
+        let n = resp.write_to(&mut out, true).unwrap();
+        assert_eq!(n as usize, out.len());
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("X-Manifest-Seq: 9\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("{\"ok\":true}"));
+    }
+}

@@ -1,0 +1,46 @@
+//! L4 network plane — dependency-free HTTP/1.1 over `std::net`, bridging
+//! the coordinator's request and replication seams onto the wire.
+//!
+//! The paper's serving story assumes many hosts tracking one leader's
+//! frequent per-axis delta publishes; this module is the transport that
+//! makes "many hosts" literal without pulling in an async runtime or an
+//! HTTP crate:
+//!
+//! * [`http`] — vendored HTTP/1.1 message layer: `Content-Length` bodies
+//!   only, typed [`HttpError`](http::HttpError)s, byte *and* time bounds on
+//!   every read (slow-loris peers hit deadlines, oversized heads hit caps).
+//! * [`router`] — tiny typed route table (`routes!` macro, `:param`
+//!   captures, 404/405 distinction).
+//! * [`front`] — [`HttpFrontend`]: thread-per-connection server exposing
+//!   the data plane (`POST /v1/query`), the admin plane
+//!   (`POST /v1/admin/:op`), and the sync plane
+//!   (`GET /v1/sync/manifest` long-poll + `GET /v1/sync/file/:name`
+//!   crc-tagged, range-resumable artifact streaming).
+//! * [`client`] — blocking HTTP client primitives: one-shot requests and
+//!   resumable, crc-verified file downloads.
+//! * [`transport`] — [`HttpTransport`]: a
+//!   [`SyncTransport`](crate::coordinator::SyncTransport) over the sync
+//!   plane; idle followers long-poll and pay header bytes only.
+//! * [`api`] — [`HttpApiClient`]: typed remote twin of the in-process
+//!   [`Client`](crate::coordinator::Client); scores round-trip bitwise.
+//! * [`wire`] — JSON codecs mapping [`DataOp`](crate::coordinator::DataOp)
+//!   / [`AdminOp`](crate::coordinator::AdminOp) / responses onto the wire
+//!   (shortest-roundtrip `f64`s keep score transport exact).
+//!
+//! Security posture: no auth, no TLS — the plane is for loopback and
+//! trusted lab networks; hostile *input* is handled (typed rejections,
+//! bounded reads), hostile *peers* are not.
+
+pub mod api;
+pub mod client;
+pub mod front;
+pub mod http;
+pub mod router;
+pub mod transport;
+pub mod wire;
+
+pub use api::{HttpApiClient, QueryReply};
+pub use client::{ClientConfig, HttpPeer};
+pub use front::{FrontConfig, HttpFrontend};
+pub use http::{HttpError, HttpLimits};
+pub use transport::HttpTransport;

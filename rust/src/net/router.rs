@@ -1,0 +1,183 @@
+//! Tiny typed route table: literal and `:param` segments, fn-pointer
+//! handlers over a shared state `S`, declared through the `routes!` macro
+//! so the whole surface of the plane reads as one table.
+//!
+//! ```ignore
+//! let router: Router<FrontState> = routes! {
+//!     GET  "/v1/healthz"           => health,
+//!     POST "/v1/query"             => query,
+//!     POST "/v1/admin/:op"         => admin,
+//!     GET  "/v1/sync/manifest"     => sync_manifest,
+//!     GET  "/v1/sync/file/:name"   => sync_file,
+//! };
+//! ```
+//!
+//! Dispatch is linear over the table — the plane has a handful of routes,
+//! and a `Vec` scan beats a map for that size while keeping registration
+//! order as the tiebreak.
+
+use super::http::{HttpRequest, HttpResponse, Method};
+
+/// Positional `:param` captures for one matched route, in pattern order.
+pub struct RouteParams(Vec<String>);
+
+impl RouteParams {
+    /// The `i`-th capture. Panics on out-of-range — a handler asking for a
+    /// capture its own pattern doesn't declare is a programming error, not
+    /// input-dependent.
+    pub fn get(&self, i: usize) -> &str {
+        &self.0[i]
+    }
+}
+
+/// Handler signature: shared state, parsed request, captures.
+pub type Handler<S> = fn(&S, &HttpRequest, &RouteParams) -> HttpResponse;
+
+enum Seg {
+    Lit(String),
+    Param,
+}
+
+struct Route<S> {
+    method: Method,
+    segs: Vec<Seg>,
+    handler: Handler<S>,
+}
+
+pub struct Router<S> {
+    routes: Vec<Route<S>>,
+}
+
+impl<S> Default for Router<S> {
+    fn default() -> Self {
+        Router::new()
+    }
+}
+
+impl<S> Router<S> {
+    pub fn new() -> Router<S> {
+        Router { routes: Vec::new() }
+    }
+
+    /// Register `pattern` (absolute, `/`-separated; `:name` segments
+    /// capture). Panics on a malformed pattern — patterns are literals in
+    /// the route table, so this fires at construction, never per-request.
+    pub fn on(&mut self, method: Method, pattern: &str, handler: Handler<S>) {
+        assert!(pattern.starts_with('/'), "route pattern '{pattern}' must start with '/'");
+        let segs = pattern[1..]
+            .split('/')
+            .map(|s| {
+                if let Some(name) = s.strip_prefix(':') {
+                    assert!(!name.is_empty(), "empty ':param' in route pattern '{pattern}'");
+                    Seg::Param
+                } else {
+                    Seg::Lit(s.to_string())
+                }
+            })
+            .collect();
+        self.routes.push(Route { method, segs, handler });
+    }
+
+    /// Match and invoke. Unknown path → 404; known path, wrong method →
+    /// 405 (so probing tools see the distinction).
+    pub fn dispatch(&self, state: &S, req: &HttpRequest) -> HttpResponse {
+        let segments: Vec<&str> = req.path[1..].split('/').collect();
+        let mut path_matched = false;
+        for route in &self.routes {
+            let Some(params) = match_segs(&route.segs, &segments) else { continue };
+            path_matched = true;
+            if route.method != req.method {
+                continue;
+            }
+            return (route.handler)(state, req, &RouteParams(params));
+        }
+        if path_matched {
+            HttpResponse::error(405, "method not allowed for this path")
+        } else {
+            HttpResponse::error(404, &format!("no route for '{}'", req.path))
+        }
+    }
+}
+
+fn match_segs(pattern: &[Seg], path: &[&str]) -> Option<Vec<String>> {
+    if pattern.len() != path.len() {
+        return None;
+    }
+    let mut params = Vec::new();
+    for (seg, part) in pattern.iter().zip(path) {
+        match seg {
+            Seg::Lit(lit) if lit == part => {}
+            Seg::Lit(_) => return None,
+            Seg::Param => {
+                // An empty capture ("/v1/sync/file/") is a miss, not a
+                // handler's problem.
+                if part.is_empty() {
+                    return None;
+                }
+                params.push(part.to_string());
+            }
+        }
+    }
+    Some(params)
+}
+
+/// Declare a [`Router`] as a table of `METHOD "pattern" => handler` rows.
+macro_rules! routes {
+    ($($method:ident $pattern:literal => $handler:expr),+ $(,)?) => {{
+        let mut router = $crate::net::router::Router::new();
+        $(router.on($crate::net::router::method_token(stringify!($method)), $pattern, $handler);)+
+        router
+    }};
+}
+pub(crate) use routes;
+
+/// Resolve the macro's bare `GET`/`POST` tokens. Panics on anything else —
+/// again a table-construction error, not request-driven.
+pub fn method_token(token: &str) -> Method {
+    match token {
+        "GET" => Method::Get,
+        "POST" => Method::Post,
+        other => panic!("routes! supports GET/POST, got '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::http::Method;
+
+    fn req(method: Method, path: &str) -> HttpRequest {
+        HttpRequest {
+            method,
+            path: path.to_string(),
+            query: Vec::new(),
+            headers: Vec::new(),
+            body: Vec::new(),
+            wants_close: false,
+        }
+    }
+
+    fn table() -> Router<()> {
+        routes! {
+            GET  "/v1/healthz"         => |_, _, _| HttpResponse::empty(200),
+            POST "/v1/admin/:op"       => |_, _, p| HttpResponse::error(422, p.get(0)),
+            GET  "/v1/sync/file/:name" => |_, _, p| HttpResponse::error(410, p.get(0)),
+        }
+    }
+
+    #[test]
+    fn literal_param_404_405() {
+        let r = table();
+        assert_eq!(r.dispatch(&(), &req(Method::Get, "/v1/healthz")).status, 200);
+        let resp = r.dispatch(&(), &req(Method::Post, "/v1/admin/publish"));
+        assert_eq!(resp.status, 422);
+        assert!(String::from_utf8(resp.body).unwrap().contains("publish"));
+        let resp = r.dispatch(&(), &req(Method::Get, "/v1/sync/file/ft@1.pawd"));
+        assert_eq!(resp.status, 410);
+        assert!(String::from_utf8(resp.body).unwrap().contains("ft@1.pawd"));
+        assert_eq!(r.dispatch(&(), &req(Method::Get, "/nope")).status, 404);
+        assert_eq!(r.dispatch(&(), &req(Method::Post, "/v1/healthz")).status, 405);
+        assert_eq!(r.dispatch(&(), &req(Method::Get, "/v1/sync/file/")).status, 404);
+        assert_eq!(r.dispatch(&(), &req(Method::Get, "/v1/sync/file/a/b")).status, 404);
+    }
+}

@@ -1,0 +1,146 @@
+//! [`SyncTransport`] over the HTTP sync plane — the network twin of
+//! [`FsTransport`](crate::coordinator::FsTransport).
+//!
+//! `fetch_manifest_wait` rides the server's long-poll: an idle follower
+//! parks one `GET /v1/sync/manifest?known_seq=N&timeout_ms=M` per window
+//! and pays only header bytes (the `304` path) until a publish bumps the
+//! sequence. Artifact fetches stream to disk with crc verification and
+//! `Range` resume via [`http_fetch_file`](super::client::http_fetch_file).
+//!
+//! Wire accounting matches the replicator's conventions: the replicator
+//! books manifest *bodies* and whatever `fetch_file` returns, so this
+//! transport returns true wire bytes from downloads and books the
+//! manifest header overhead itself — `wire_bytes` counters stay honest
+//! across transports.
+
+use super::client::{http_fetch_file, http_request, ClientConfig, HttpPeer};
+use super::http::Method;
+use crate::coordinator::{ManifestFetch, SyncTransport};
+use crate::exec::counters;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::time::Duration;
+
+/// HTTP client side of replication. Construct with the leader frontend's
+/// `http://host:port` base URL and hand to
+/// [`Replicator::new`](crate::coordinator::Replicator).
+pub struct HttpTransport {
+    peer: HttpPeer,
+    cfg: ClientConfig,
+}
+
+impl HttpTransport {
+    pub fn new(url: &str) -> Result<HttpTransport> {
+        HttpTransport::with_config(url, ClientConfig::default())
+    }
+
+    pub fn with_config(url: &str, cfg: ClientConfig) -> Result<HttpTransport> {
+        Ok(HttpTransport { peer: HttpPeer::parse(url)?, cfg })
+    }
+}
+
+impl SyncTransport for HttpTransport {
+    fn describe(&self) -> String {
+        self.peer.base()
+    }
+
+    fn fetch_manifest(&self) -> Result<Vec<u8>> {
+        let reply =
+            http_request(&self.peer, Method::Get, "/v1/sync/manifest", None, &self.cfg)
+                .with_context(|| format!("fetching manifest from {}", self.peer.base()))?;
+        if reply.status != 200 {
+            bail!(
+                "manifest fetch from {} got HTTP {}: {}",
+                self.peer.base(),
+                reply.status,
+                reply.body_text()
+            );
+        }
+        // The replicator books the manifest body; the header overhead on
+        // this reply is the transport's to record.
+        counters::record_wire_bytes(reply.wire_bytes.saturating_sub(reply.body.len() as u64));
+        Ok(reply.body)
+    }
+
+    fn fetch_manifest_wait(
+        &self,
+        known_seq: Option<u64>,
+        timeout: Duration,
+    ) -> Result<ManifestFetch> {
+        // No baseline to long-poll against — a cold follower wants the
+        // manifest now, not after a change.
+        let Some(known) = known_seq else {
+            return Ok(ManifestFetch::Full(self.fetch_manifest()?));
+        };
+        let path = format!(
+            "/v1/sync/manifest?known_seq={known}&timeout_ms={}",
+            timeout.as_millis()
+        );
+        // The server may hold this reply open for the whole poll window;
+        // budget the head read accordingly.
+        let mut cfg = self.cfg;
+        cfg.read_timeout = self.cfg.read_timeout.saturating_add(timeout);
+        let reply = http_request(&self.peer, Method::Get, &path, None, &cfg)
+            .with_context(|| format!("long-polling manifest from {}", self.peer.base()))?;
+        match reply.status {
+            304 => {
+                let seq = reply
+                    .header("x-manifest-seq")
+                    .and_then(|v| v.parse().ok())
+                    .context("304 manifest reply without a parseable X-Manifest-Seq")?;
+                Ok(ManifestFetch::Unchanged { seq, wire_bytes: reply.wire_bytes })
+            }
+            200 => {
+                counters::record_wire_bytes(
+                    reply.wire_bytes.saturating_sub(reply.body.len() as u64),
+                );
+                Ok(ManifestFetch::Full(reply.body))
+            }
+            status => bail!(
+                "manifest long-poll against {} got HTTP {status}: {}",
+                self.peer.base(),
+                reply.body_text()
+            ),
+        }
+    }
+
+    fn fetch_file(&self, file: &str, dest: &Path) -> Result<u64> {
+        let path = format!("/v1/sync/file/{}", encode_path_segment(file));
+        let outcome = http_fetch_file(&self.peer, &path, dest, &self.cfg)
+            .with_context(|| format!("fetching artifact '{file}' from {}", self.peer.base()))?;
+        // Report true wire traffic (headers + any resumed overlap), which
+        // the replicator books verbatim — same contract as FsTransport's
+        // bytes-moved.
+        Ok(outcome.wire_bytes)
+    }
+}
+
+/// Percent-encode one path segment. Artifact names are bare file names
+/// (`ft@3.pawd-patch`), but nothing stops a variant name from carrying a
+/// byte the request line can't — encode everything outside the unreserved
+/// set plus `@`.
+fn encode_path_segment(seg: &str) -> String {
+    let mut out = String::with_capacity(seg.len());
+    for b in seg.bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'-' | b'.' | b'_' | b'~' | b'@' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_segment_encoding() {
+        assert_eq!(encode_path_segment("ft@3.pawd-patch"), "ft@3.pawd-patch");
+        assert_eq!(encode_path_segment("a b"), "a%20b");
+        assert_eq!(encode_path_segment("q?x=1"), "q%3Fx%3D1");
+        assert_eq!(encode_path_segment("naïve"), "na%C3%AFve");
+    }
+}

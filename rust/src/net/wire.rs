@@ -1,0 +1,612 @@
+//! JSON wire codecs for the data/admin planes — both directions, so the
+//! front-end and the typed [`HttpApiClient`](super::api::HttpApiClient)
+//! speak the exact same shapes and a round-trip is testable in-process.
+//!
+//! Fidelity note: [`Json`] prints `f64` through Rust's shortest-roundtrip
+//! `Display`, so scores cross the wire bitwise-exact — the loopback test
+//! asserts `POST /v1/query` answers equal the in-process `Client` path to
+//! the bit.
+
+use crate::coordinator::cache::VersionResidency;
+use crate::coordinator::registry::{ArtifactKind, VersionRecord};
+use crate::coordinator::request::Timing;
+use crate::coordinator::{
+    AdminOp, AdminResp, DataOp, MetricsSnapshot, RespBody, SyncReport, VariantDesc,
+};
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+// -- data plane ------------------------------------------------------------
+
+/// `POST /v1/query` request body: `{"variant": …, "op": …, …op fields}`.
+pub fn query_to_json(variant: &str, op: &DataOp) -> Json {
+    let mut pairs = vec![("variant", json::s(variant))];
+    match op {
+        DataOp::Score { prompt, choices } => {
+            pairs.push(("op", json::s("score")));
+            pairs.push(("prompt", json::s(prompt)));
+            pairs.push(("choices", json::arr(choices.iter().map(|c| json::s(c)).collect())));
+        }
+        DataOp::Perplexity { text } => {
+            pairs.push(("op", json::s("perplexity")));
+            pairs.push(("text", json::s(text)));
+        }
+    }
+    json::obj(pairs)
+}
+
+pub fn query_from_json(j: &Json) -> Result<(String, DataOp)> {
+    let variant = j.req_str("variant")?.to_string();
+    let op = match j.req_str("op")? {
+        "score" => DataOp::Score {
+            prompt: j.req_str("prompt")?.to_string(),
+            choices: j
+                .req_arr("choices")?
+                .iter()
+                .map(|c| {
+                    c.as_str()
+                        .map(str::to_string)
+                        .context("'choices' entries must be strings")
+                })
+                .collect::<Result<Vec<_>>>()?,
+        },
+        "perplexity" => DataOp::Perplexity { text: j.req_str("text")?.to_string() },
+        other => bail!("unknown data op '{other}'"),
+    };
+    Ok((variant, op))
+}
+
+/// Data-plane result body. Admin results never ride this codec — they have
+/// their own routes — so hitting one here is a server-side wiring bug.
+pub fn data_body_to_json(body: &RespBody) -> Result<Json> {
+    Ok(match body {
+        RespBody::Score { choice, scores } => json::obj(vec![
+            ("kind", json::s("score")),
+            ("choice", json::n(*choice as f64)),
+            ("scores", json::arr(scores.iter().map(|&v| json::n(v)).collect())),
+        ]),
+        RespBody::Perplexity { nats_per_token } => json::obj(vec![
+            ("kind", json::s("perplexity")),
+            ("nats_per_token", json::n(*nats_per_token)),
+        ]),
+        RespBody::Admin(_) => bail!("admin result on the data-plane codec"),
+    })
+}
+
+pub fn data_body_from_json(j: &Json) -> Result<RespBody> {
+    Ok(match j.req_str("kind")? {
+        "score" => RespBody::Score {
+            choice: j.req_usize("choice")?,
+            scores: j
+                .req_arr("scores")?
+                .iter()
+                .map(|v| v.as_f64().context("'scores' entries must be numbers"))
+                .collect::<Result<Vec<_>>>()?,
+        },
+        "perplexity" => RespBody::Perplexity {
+            nats_per_token: j
+                .req("nats_per_token")?
+                .as_f64()
+                .context("'nats_per_token' is not a number")?,
+        },
+        other => bail!("unknown data result kind '{other}'"),
+    })
+}
+
+/// Response timing in integer microseconds (diagnostic — not meant to
+/// round-trip [`Timing`]'s `Duration`s exactly).
+pub fn timing_to_json(t: &Timing) -> Json {
+    let mut pairs = vec![
+        ("queue_us", json::n(t.queue.as_micros() as f64)),
+        ("compute_us", json::n(t.compute.as_micros() as f64)),
+        ("total_us", json::n(t.total.as_micros() as f64)),
+    ];
+    if let Some(cold) = t.cold_start {
+        pairs.push(("cold_start_us", json::n(cold.as_micros() as f64)));
+    }
+    json::obj(pairs)
+}
+
+// -- admin plane -----------------------------------------------------------
+
+/// The `POST /v1/admin/<route>` suffix for an op, plus its body.
+pub fn admin_op_to_route(op: &AdminOp) -> (&'static str, Json) {
+    match op {
+        AdminOp::Stats => ("stats", json::obj(vec![])),
+        AdminOp::Publish { variant, artifact } => (
+            "publish",
+            json::obj(vec![
+                ("variant", json::s(variant)),
+                ("artifact", path_json(artifact)),
+            ]),
+        ),
+        AdminOp::PublishIncremental { variant, artifact, parent } => (
+            "publish-incremental",
+            json::obj(opt_u32(
+                vec![("variant", json::s(variant)), ("artifact", path_json(artifact))],
+                "parent",
+                *parent,
+            )),
+        ),
+        AdminOp::Consolidate { variant, version } => (
+            "consolidate",
+            json::obj(opt_u32(vec![("variant", json::s(variant))], "version", *version)),
+        ),
+        AdminOp::Rollback { variant, to } => (
+            "rollback",
+            json::obj(opt_u32(vec![("variant", json::s(variant))], "to", *to)),
+        ),
+        AdminOp::Pin { variant, version } => (
+            "pin",
+            json::obj(vec![("variant", json::s(variant)), ("version", json::n(*version as f64))]),
+        ),
+        AdminOp::Unpin { variant } => ("unpin", json::obj(vec![("variant", json::s(variant))])),
+        AdminOp::Retire { variant, version } => (
+            "retire",
+            json::obj(vec![("variant", json::s(variant)), ("version", json::n(*version as f64))]),
+        ),
+        AdminOp::Gc { variant } => (
+            "gc",
+            match variant {
+                Some(v) => json::obj(vec![("variant", json::s(v))]),
+                None => json::obj(vec![]),
+            },
+        ),
+        AdminOp::List => ("list", json::obj(vec![])),
+        AdminOp::SyncStatus => ("sync-status", json::obj(vec![])),
+        AdminOp::PullFrom { dir } => ("pull-from", json::obj(vec![("dir", path_json(dir))])),
+    }
+}
+
+/// Inverse of [`admin_op_to_route`]: the route segment names the op, the
+/// body carries its fields (an empty body parses as `{}`).
+pub fn admin_op_from_route(route: &str, j: &Json) -> Result<AdminOp> {
+    Ok(match route {
+        "stats" => AdminOp::Stats,
+        "publish" => AdminOp::Publish {
+            variant: j.req_str("variant")?.to_string(),
+            artifact: PathBuf::from(j.req_str("artifact")?),
+        },
+        "publish-incremental" => AdminOp::PublishIncremental {
+            variant: j.req_str("variant")?.to_string(),
+            artifact: PathBuf::from(j.req_str("artifact")?),
+            parent: get_u32(j, "parent")?,
+        },
+        "consolidate" => AdminOp::Consolidate {
+            variant: j.req_str("variant")?.to_string(),
+            version: get_u32(j, "version")?,
+        },
+        "rollback" => AdminOp::Rollback {
+            variant: j.req_str("variant")?.to_string(),
+            to: get_u32(j, "to")?,
+        },
+        "pin" => AdminOp::Pin {
+            variant: j.req_str("variant")?.to_string(),
+            version: j.req_usize("version")? as u32,
+        },
+        "unpin" => AdminOp::Unpin { variant: j.req_str("variant")?.to_string() },
+        "retire" => AdminOp::Retire {
+            variant: j.req_str("variant")?.to_string(),
+            version: j.req_usize("version")? as u32,
+        },
+        "gc" => AdminOp::Gc {
+            variant: j.get("variant").and_then(|v| v.as_str()).map(str::to_string),
+        },
+        "list" => AdminOp::List,
+        "sync-status" => AdminOp::SyncStatus,
+        "pull-from" => AdminOp::PullFrom { dir: PathBuf::from(j.req_str("dir")?) },
+        other => bail!("unknown admin route '{other}'"),
+    })
+}
+
+pub fn admin_resp_to_json(resp: &AdminResp) -> Json {
+    match resp {
+        AdminResp::Stats { snapshot } => json::obj(vec![
+            ("kind", json::s("stats")),
+            ("snapshot", snapshot_to_json(snapshot)),
+        ]),
+        AdminResp::Published { variant, version, patch, bytes } => json::obj(vec![
+            ("kind", json::s("published")),
+            ("variant", json::s(variant)),
+            ("version", json::n(*version as f64)),
+            ("patch", Json::Bool(*patch)),
+            ("bytes", json::n(*bytes as f64)),
+        ]),
+        AdminResp::Consolidated { variant, version, bytes, rebased_links } => json::obj(vec![
+            ("kind", json::s("consolidated")),
+            ("variant", json::s(variant)),
+            ("version", json::n(*version as f64)),
+            ("bytes", json::n(*bytes as f64)),
+            ("rebased_links", json::n(*rebased_links as f64)),
+        ]),
+        AdminResp::RolledBack { variant, version } => json::obj(vec![
+            ("kind", json::s("rolled-back")),
+            ("variant", json::s(variant)),
+            ("version", json::n(*version as f64)),
+        ]),
+        AdminResp::Pinned { variant, version } => json::obj(vec![
+            ("kind", json::s("pinned")),
+            ("variant", json::s(variant)),
+            ("version", json::n(*version as f64)),
+        ]),
+        AdminResp::Unpinned { variant } => json::obj(vec![
+            ("kind", json::s("unpinned")),
+            ("variant", json::s(variant)),
+        ]),
+        AdminResp::Retired { variant, version } => json::obj(vec![
+            ("kind", json::s("retired")),
+            ("variant", json::s(variant)),
+            ("version", json::n(*version as f64)),
+        ]),
+        AdminResp::Gced { files_removed, bytes_freed } => json::obj(vec![
+            ("kind", json::s("gced")),
+            ("files_removed", json::n(*files_removed as f64)),
+            ("bytes_freed", json::n(*bytes_freed as f64)),
+        ]),
+        AdminResp::Variants { variants } => json::obj(vec![
+            ("kind", json::s("variants")),
+            ("variants", json::arr(variants.iter().map(variant_desc_to_json).collect())),
+        ]),
+        AdminResp::SyncStatus { manifest_seq, variants, versions } => json::obj(vec![
+            ("kind", json::s("sync-status")),
+            ("manifest_seq", json::n(*manifest_seq as f64)),
+            ("variants", json::n(*variants as f64)),
+            ("versions", json::n(*versions as f64)),
+        ]),
+        AdminResp::Synced { peer, report } => json::obj(vec![
+            ("kind", json::s("synced")),
+            ("peer", json::s(peer)),
+            ("report", sync_report_to_json(report)),
+        ]),
+    }
+}
+
+pub fn admin_resp_from_json(j: &Json) -> Result<AdminResp> {
+    Ok(match j.req_str("kind")? {
+        "stats" => AdminResp::Stats {
+            snapshot: Box::new(snapshot_from_json(j.req("snapshot")?)?),
+        },
+        "published" => AdminResp::Published {
+            variant: j.req_str("variant")?.to_string(),
+            version: j.req_usize("version")? as u32,
+            patch: j.req("patch")?.as_bool().context("'patch' is not a bool")?,
+            bytes: j.req_usize("bytes")? as u64,
+        },
+        "consolidated" => AdminResp::Consolidated {
+            variant: j.req_str("variant")?.to_string(),
+            version: j.req_usize("version")? as u32,
+            bytes: j.req_usize("bytes")? as u64,
+            rebased_links: j.req_usize("rebased_links")?,
+        },
+        "rolled-back" => AdminResp::RolledBack {
+            variant: j.req_str("variant")?.to_string(),
+            version: j.req_usize("version")? as u32,
+        },
+        "pinned" => AdminResp::Pinned {
+            variant: j.req_str("variant")?.to_string(),
+            version: j.req_usize("version")? as u32,
+        },
+        "unpinned" => AdminResp::Unpinned { variant: j.req_str("variant")?.to_string() },
+        "retired" => AdminResp::Retired {
+            variant: j.req_str("variant")?.to_string(),
+            version: j.req_usize("version")? as u32,
+        },
+        "gced" => AdminResp::Gced {
+            files_removed: j.req_usize("files_removed")?,
+            bytes_freed: j.req_usize("bytes_freed")? as u64,
+        },
+        "variants" => AdminResp::Variants {
+            variants: j
+                .req_arr("variants")?
+                .iter()
+                .map(variant_desc_from_json)
+                .collect::<Result<Vec<_>>>()?,
+        },
+        "sync-status" => AdminResp::SyncStatus {
+            manifest_seq: j.req_usize("manifest_seq")? as u64,
+            variants: j.req_usize("variants")?,
+            versions: j.req_usize("versions")?,
+        },
+        "synced" => AdminResp::Synced {
+            peer: j.req_str("peer")?.to_string(),
+            report: sync_report_from_json(j.req("report")?)?,
+        },
+        other => bail!("unknown admin result kind '{other}'"),
+    })
+}
+
+// -- shared structs --------------------------------------------------------
+
+pub fn sync_report_to_json(r: &SyncReport) -> Json {
+    json::obj(vec![
+        ("leader_seq", json::n(r.leader_seq as f64)),
+        ("up_to_date", Json::Bool(r.up_to_date)),
+        ("variants_synced", json::n(r.variants_synced as f64)),
+        ("versions_installed", json::n(r.versions_installed as f64)),
+        ("files_fetched", json::n(r.files_fetched as f64)),
+        ("patch_files_fetched", json::n(r.patch_files_fetched as f64)),
+        ("artifact_bytes", json::n(r.artifact_bytes as f64)),
+        ("manifest_bytes", json::n(r.manifest_bytes as f64)),
+        ("warm_failures", json::n(r.warm_failures as f64)),
+    ])
+}
+
+pub fn sync_report_from_json(j: &Json) -> Result<SyncReport> {
+    Ok(SyncReport {
+        leader_seq: j.req_usize("leader_seq")? as u64,
+        up_to_date: j.req("up_to_date")?.as_bool().context("'up_to_date' is not a bool")?,
+        variants_synced: j.req_usize("variants_synced")?,
+        versions_installed: j.req_usize("versions_installed")?,
+        files_fetched: j.req_usize("files_fetched")?,
+        patch_files_fetched: j.req_usize("patch_files_fetched")?,
+        artifact_bytes: j.req_usize("artifact_bytes")? as u64,
+        manifest_bytes: j.req_usize("manifest_bytes")? as u64,
+        warm_failures: j.req_usize("warm_failures")?,
+    })
+}
+
+pub fn variant_desc_to_json(d: &VariantDesc) -> Json {
+    json::obj(vec![
+        ("name", json::s(&d.name)),
+        ("active", json::n(d.active as f64)),
+        ("pinned", Json::Bool(d.pinned)),
+        (
+            "versions",
+            json::arr(
+                d.versions
+                    .iter()
+                    .map(|r| {
+                        json::obj(vec![
+                            ("version", json::n(r.version as f64)),
+                            ("parent", json::n(r.parent.unwrap_or(0) as f64)),
+                            ("created_unix", json::n(r.created_unix as f64)),
+                            ("file", json::s(&r.file)),
+                            ("kind", json::s(r.kind.label())),
+                            ("bytes", json::n(r.bytes as f64)),
+                            ("retired", Json::Bool(r.retired)),
+                            ("patch", Json::Bool(r.patch)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+pub fn variant_desc_from_json(j: &Json) -> Result<VariantDesc> {
+    let mut versions = Vec::new();
+    for rv in j.req_arr("versions")? {
+        let parent = rv.req_usize("parent")? as u32;
+        versions.push(VersionRecord {
+            version: rv.req_usize("version")? as u32,
+            parent: if parent == 0 { None } else { Some(parent) },
+            created_unix: rv.req_usize("created_unix")? as u64,
+            file: rv.req_str("file")?.to_string(),
+            kind: ArtifactKind::from_label(rv.req_str("kind")?)?,
+            bytes: rv.req_usize("bytes")? as u64,
+            retired: rv.req("retired")?.as_bool().context("'retired' is not a bool")?,
+            patch: rv.req("patch")?.as_bool().context("'patch' is not a bool")?,
+        });
+    }
+    Ok(VariantDesc {
+        name: j.req_str("name")?.to_string(),
+        active: j.req_usize("active")? as u32,
+        pinned: j.req("pinned")?.as_bool().context("'pinned' is not a bool")?,
+        versions,
+    })
+}
+
+pub fn snapshot_to_json(s: &MetricsSnapshot) -> Json {
+    json::obj(vec![
+        ("served", json::n(s.served as f64)),
+        ("errors", json::n(s.errors as f64)),
+        ("batches", json::n(s.batches as f64)),
+        ("mean_batch_size", json::n(s.mean_batch_size)),
+        ("throughput_rps", json::n(s.throughput_rps)),
+        ("queue_p50_us", json::n(s.queue_p50_us as f64)),
+        ("queue_p99_us", json::n(s.queue_p99_us as f64)),
+        ("compute_p50_us", json::n(s.compute_p50_us as f64)),
+        ("compute_p99_us", json::n(s.compute_p99_us as f64)),
+        ("total_p50_us", json::n(s.total_p50_us as f64)),
+        ("total_p99_us", json::n(s.total_p99_us as f64)),
+        ("cold_starts", json::n(s.cold_starts as f64)),
+        ("cold_p50_us", json::n(s.cold_p50_us as f64)),
+        ("swaps", json::n(s.swaps as f64)),
+        ("publishes", json::n(s.publishes as f64)),
+        ("rollbacks", json::n(s.rollbacks as f64)),
+        ("resident_variants", json::n(s.resident_variants as f64)),
+        ("resident_bytes", json::n(s.resident_bytes as f64)),
+        ("resident_dense_equiv_bytes", json::n(s.resident_dense_equiv_bytes as f64)),
+        (
+            "resident_versions",
+            json::arr(
+                s.resident_versions
+                    .iter()
+                    .map(|v| {
+                        json::obj(vec![
+                            ("variant", json::s(&v.variant)),
+                            ("version", json::n(v.version as f64)),
+                            ("bytes", json::n(v.bytes as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "per_variant",
+            Json::Obj(
+                s.per_variant
+                    .iter()
+                    .map(|(k, &v)| (k.clone(), json::n(v as f64)))
+                    .collect(),
+            ),
+        ),
+        ("pool_tasks", json::n(s.pool_tasks as f64)),
+        ("pool_steal_or_idle_ns", json::n(s.pool_steal_or_idle_ns as f64)),
+        ("engine_steps", json::n(s.engine_steps as f64)),
+        ("http_requests", json::n(s.http_requests as f64)),
+        ("http_long_polls", json::n(s.http_long_polls as f64)),
+    ])
+}
+
+pub fn snapshot_from_json(j: &Json) -> Result<MetricsSnapshot> {
+    let mut resident_versions = Vec::new();
+    for rv in j.req_arr("resident_versions")? {
+        resident_versions.push(VersionResidency {
+            variant: rv.req_str("variant")?.to_string(),
+            version: rv.req_usize("version")? as u32,
+            bytes: rv.req_usize("bytes")? as u64,
+        });
+    }
+    let mut per_variant = std::collections::BTreeMap::new();
+    for (k, v) in j.req("per_variant")?.as_obj().context("'per_variant' is not an object")? {
+        per_variant.insert(
+            k.clone(),
+            v.as_usize().context("'per_variant' values must be counts")? as u64,
+        );
+    }
+    Ok(MetricsSnapshot {
+        served: j.req_usize("served")? as u64,
+        errors: j.req_usize("errors")? as u64,
+        batches: j.req_usize("batches")? as u64,
+        mean_batch_size: j.req("mean_batch_size")?.as_f64().context("not a number")?,
+        throughput_rps: j.req("throughput_rps")?.as_f64().context("not a number")?,
+        queue_p50_us: j.req_usize("queue_p50_us")? as u64,
+        queue_p99_us: j.req_usize("queue_p99_us")? as u64,
+        compute_p50_us: j.req_usize("compute_p50_us")? as u64,
+        compute_p99_us: j.req_usize("compute_p99_us")? as u64,
+        total_p50_us: j.req_usize("total_p50_us")? as u64,
+        total_p99_us: j.req_usize("total_p99_us")? as u64,
+        cold_starts: j.req_usize("cold_starts")? as u64,
+        cold_p50_us: j.req_usize("cold_p50_us")? as u64,
+        swaps: j.req_usize("swaps")? as u64,
+        publishes: j.req_usize("publishes")? as u64,
+        rollbacks: j.req_usize("rollbacks")? as u64,
+        resident_variants: j.req_usize("resident_variants")?,
+        resident_bytes: j.req_usize("resident_bytes")? as u64,
+        resident_dense_equiv_bytes: j.req_usize("resident_dense_equiv_bytes")? as u64,
+        resident_versions,
+        per_variant,
+        pool_tasks: j.req_usize("pool_tasks")? as u64,
+        pool_steal_or_idle_ns: j.req_usize("pool_steal_or_idle_ns")? as u64,
+        engine_steps: j.req_usize("engine_steps")? as u64,
+        http_requests: j.req_usize("http_requests")? as u64,
+        http_long_polls: j.req_usize("http_long_polls")? as u64,
+    })
+}
+
+fn path_json(p: &std::path::Path) -> Json {
+    json::s(&p.to_string_lossy())
+}
+
+fn opt_u32<'a>(
+    mut pairs: Vec<(&'a str, Json)>,
+    key: &'a str,
+    value: Option<u32>,
+) -> Vec<(&'a str, Json)> {
+    if let Some(v) = value {
+        pairs.push((key, json::n(v as f64)));
+    }
+    pairs
+}
+
+fn get_u32(j: &Json, key: &str) -> Result<Option<u32>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(
+            v.as_usize().with_context(|| format!("key '{key}' is not a version number"))? as u32,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_roundtrip() {
+        let op = DataOp::Score {
+            prompt: "once upon".into(),
+            choices: vec!["a time".into(), "a dime".into()],
+        };
+        let j = query_to_json("ft", &op);
+        let (variant, parsed) = query_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(variant, "ft");
+        match parsed {
+            DataOp::Score { prompt, choices } => {
+                assert_eq!(prompt, "once upon");
+                assert_eq!(choices, vec!["a time".to_string(), "a dime".to_string()]);
+            }
+            other => panic!("wrong op: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn score_body_is_bitwise_stable() {
+        let scores = vec![-12.345678901234567f64, f64::MIN_POSITIVE, -0.0, 1.0 / 3.0];
+        let body = RespBody::Score { choice: 0, scores: scores.clone() };
+        let j = data_body_to_json(&body).unwrap();
+        let parsed = data_body_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        match parsed {
+            RespBody::Score { scores: got, .. } => {
+                for (a, b) in scores.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+                }
+            }
+            other => panic!("wrong body: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn admin_op_roundtrip_every_variant() {
+        let ops = vec![
+            AdminOp::Stats,
+            AdminOp::Publish { variant: "ft".into(), artifact: PathBuf::from("/tmp/a.pawd") },
+            AdminOp::PublishIncremental {
+                variant: "ft".into(),
+                artifact: PathBuf::from("/tmp/a.pawd"),
+                parent: Some(3),
+            },
+            AdminOp::PublishIncremental {
+                variant: "ft".into(),
+                artifact: PathBuf::from("/tmp/a.pawd"),
+                parent: None,
+            },
+            AdminOp::Consolidate { variant: "ft".into(), version: Some(2) },
+            AdminOp::Rollback { variant: "ft".into(), to: None },
+            AdminOp::Pin { variant: "ft".into(), version: 4 },
+            AdminOp::Unpin { variant: "ft".into() },
+            AdminOp::Retire { variant: "ft".into(), version: 1 },
+            AdminOp::Gc { variant: None },
+            AdminOp::Gc { variant: Some("ft".into()) },
+            AdminOp::List,
+            AdminOp::SyncStatus,
+            AdminOp::PullFrom { dir: PathBuf::from("/srv/leader") },
+        ];
+        for op in ops {
+            let (route, body) = admin_op_to_route(&op);
+            let parsed =
+                admin_op_from_route(route, &Json::parse(&body.to_string()).unwrap()).unwrap();
+            assert_eq!(format!("{op:?}"), format!("{parsed:?}"));
+        }
+    }
+
+    #[test]
+    fn sync_report_roundtrip() {
+        let r = SyncReport {
+            leader_seq: 42,
+            up_to_date: false,
+            variants_synced: 2,
+            versions_installed: 3,
+            files_fetched: 3,
+            patch_files_fetched: 2,
+            artifact_bytes: 123456,
+            manifest_bytes: 789,
+            warm_failures: 1,
+        };
+        let j = sync_report_to_json(&r);
+        let parsed = sync_report_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(r, parsed);
+    }
+}

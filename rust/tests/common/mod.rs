@@ -10,6 +10,36 @@ use pawd::model::FlatParams;
 use pawd::util::rng::Rng;
 use std::path::PathBuf;
 
+/// Run `f` on its own thread and fail hard if it exceeds `secs` — network
+/// tests must fail loudly instead of wedging the whole suite when a socket
+/// or long-poll misbehaves. Panics from `f` propagate unchanged.
+pub fn with_timeout<T: Send + 'static>(
+    name: &str,
+    secs: u64,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(move || {
+            let _ = tx.send(f());
+        })
+        .unwrap();
+    match rx.recv_timeout(std::time::Duration::from_secs(secs)) {
+        Ok(v) => {
+            let _ = handle.join();
+            v
+        }
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => match handle.join() {
+            Err(panic) => std::panic::resume_unwind(panic),
+            Ok(()) => panic!("test '{name}' worker exited without a result"),
+        },
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+            panic!("test '{name}' exceeded its {secs}s hard timeout")
+        }
+    }
+}
+
 pub fn fresh_dir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(name);
     let _ = std::fs::remove_dir_all(&dir);

@@ -1,0 +1,445 @@
+//! Loopback integration for the HTTP network plane: the data plane answers
+//! bitwise-identically to the in-process client, the admin plane round-trips
+//! typed ops, and `HttpTransport` followers converge exactly like
+//! `FsTransport` ones — with idle long-polls costing header bytes only.
+//!
+//! Every test that touches a socket runs under `common::with_timeout` so a
+//! wedged connection fails the test instead of hanging the suite.
+
+mod common;
+
+use common::{fresh_dir, with_timeout};
+use pawd::coordinator::{
+    AdminOp, AdminResp, Engine, FsTransport, Replicator, Server, ServerConfig, VariantRegistry,
+    VariantStore,
+};
+use pawd::delta::types::{Axis, DeltaModel};
+use pawd::exec::ExecMode;
+use pawd::model::config::ModelConfig;
+use pawd::model::{FlatParams, Transformer};
+use pawd::net::{FrontConfig, HttpApiClient, HttpFrontend, HttpTransport};
+use pawd::util::crc32;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn seeded_full(base: &FlatParams, variant: &str, seed: u64) -> DeltaModel {
+    common::seeded_full(base, variant, seed, &[Axis::Row])
+}
+
+/// `model` with module `k` replaced by freshly seeded content.
+fn perturb_one(model: &DeltaModel, base: &FlatParams, k: usize, seed: u64) -> DeltaModel {
+    let mut out = model.clone();
+    let fresh = seeded_full(base, &model.variant, seed);
+    out.modules[k] = fresh.modules[k].clone();
+    out
+}
+
+/// Bitwise logits of `name` (active version) served fused from `dir`.
+fn logits_of(base: &Arc<FlatParams>, dir: &Path, name: &str, tokens: &[u8]) -> Vec<u32> {
+    let store = VariantStore::new(base.clone(), dir).with_mode(ExecMode::Fused);
+    let tf = Transformer::new(base.cfg());
+    let loaded = store.load(name).unwrap();
+    tf.forward_one(&loaded.weights, tokens).data.iter().map(|x| x.to_bits()).collect()
+}
+
+/// One raw HTTP exchange: write `req` bytes, half-close, read until the
+/// server closes. Lossy-decoded for assertions.
+fn raw_exchange(addr: std::net::SocketAddr, req: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    s.write_all(req).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf);
+    String::from_utf8_lossy(&buf).into_owned()
+}
+
+#[test]
+fn http_query_is_bitwise_equal_to_in_process() {
+    with_timeout("http_query_bitwise", 120, || {
+        let dir = fresh_dir("pawd_itest_http_query");
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = Arc::new(FlatParams::init(&cfg, 101));
+        let registry = VariantRegistry::open(&dir).unwrap();
+        registry.publish("ft", seeded_full(&base, "ft", 5)).unwrap();
+        drop(registry);
+
+        let store = VariantStore::new(base, &dir).with_mode(ExecMode::Fused);
+        let server = Server::start(store, Engine::Native, ServerConfig::default());
+        let frontend = HttpFrontend::start(
+            "127.0.0.1:0",
+            Some(server.client()),
+            server.cache.store().registry().clone(),
+            FrontConfig::default(),
+        )
+        .unwrap();
+        let api = HttpApiClient::new(&frontend.url()).unwrap();
+        let client = server.client();
+
+        let prompt = "Q: is the network plane exact? A: ";
+        let choices: Vec<String> = vec!["yes".into(), "no".into(), "maybe".into()];
+        let local = client.score("ft", prompt, &choices);
+        let local_body = local.result.clone().unwrap();
+        let remote = api.score("ft", prompt, &choices).unwrap();
+        assert_eq!(remote.variant, "ft");
+        assert_eq!(remote.version, local.version);
+        match (&remote.body, &local_body) {
+            (
+                pawd::coordinator::RespBody::Score { choice: rc, scores: rs },
+                pawd::coordinator::RespBody::Score { choice: lc, scores: ls },
+            ) => {
+                assert_eq!(rc, lc);
+                let rbits: Vec<u64> = rs.iter().map(|x| x.to_bits()).collect();
+                let lbits: Vec<u64> = ls.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(rbits, lbits, "HTTP scores must be bitwise-equal to in-process");
+            }
+            other => panic!("unexpected bodies {other:?}"),
+        }
+
+        // Perplexity rides the same f64-exact transport.
+        let local = client.submit("ft", pawd::coordinator::Payload::perplexity("exactness test"));
+        let local = local.recv().unwrap().result.unwrap();
+        let remote = api.perplexity("ft", "exactness test").unwrap();
+        match (&remote.body, &local) {
+            (
+                pawd::coordinator::RespBody::Perplexity { nats_per_token: r },
+                pawd::coordinator::RespBody::Perplexity { nats_per_token: l },
+            ) => assert_eq!(r.to_bits(), l.to_bits()),
+            other => panic!("unexpected bodies {other:?}"),
+        }
+
+        // Engine-level rejections surface as Err with the engine's message.
+        let err = api.score("missing-variant", "Q", &choices).unwrap_err().to_string();
+        assert!(!err.is_empty());
+
+        server.shutdown();
+    })
+}
+
+#[test]
+fn http_admin_plane_round_trips_typed_ops() {
+    with_timeout("http_admin_roundtrip", 120, || {
+        let dir = fresh_dir("pawd_itest_http_admin");
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = Arc::new(FlatParams::init(&cfg, 103));
+        let registry = VariantRegistry::open(&dir).unwrap();
+        registry.publish("ft", seeded_full(&base, "ft", 9)).unwrap();
+        registry.publish("ft", seeded_full(&base, "ft", 10)).unwrap();
+        drop(registry);
+
+        let store = VariantStore::new(base, &dir).with_mode(ExecMode::Fused);
+        let server = Server::start(store, Engine::Native, ServerConfig::default());
+        let frontend = HttpFrontend::start(
+            "127.0.0.1:0",
+            Some(server.client()),
+            server.cache.store().registry().clone(),
+            FrontConfig::default(),
+        )
+        .unwrap();
+        let api = HttpApiClient::new(&frontend.url()).unwrap();
+        api.health().unwrap();
+
+        match api.admin(&AdminOp::List).unwrap() {
+            AdminResp::Variants { variants } => {
+                assert_eq!(variants.len(), 1);
+                assert_eq!(variants[0].name, "ft");
+                assert_eq!(variants[0].versions.len(), 2);
+            }
+            other => panic!("unexpected list response {other:?}"),
+        }
+        match api.admin(&AdminOp::SyncStatus).unwrap() {
+            AdminResp::SyncStatus { manifest_seq, variants, versions } => {
+                assert!(manifest_seq > 0);
+                assert_eq!((variants, versions), (1, 2));
+            }
+            other => panic!("unexpected sync-status response {other:?}"),
+        }
+        match api.admin(&AdminOp::Rollback { variant: "ft".into(), to: None }).unwrap() {
+            AdminResp::RolledBack { variant, version } => {
+                assert_eq!((variant.as_str(), version), ("ft", 1));
+            }
+            other => panic!("unexpected rollback response {other:?}"),
+        }
+        // Stats over HTTP include the http counters this very conversation
+        // has been incrementing.
+        let snap = api.stats().unwrap();
+        assert!(snap.http_requests >= 4, "stats must count these requests");
+
+        // A bogus admin route is a 400, not a hang or a panic.
+        let resp = raw_exchange(
+            frontend.addr(),
+            b"POST /v1/admin/frobnicate HTTP/1.1\r\nHost: t\r\nContent-Length: 2\r\n\r\n{}",
+        );
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+
+        server.shutdown();
+    })
+}
+
+#[test]
+fn http_transport_follower_converges_bitwise() {
+    with_timeout("http_transport_converges", 180, || {
+        let leader_dir = fresh_dir("pawd_itest_http_sync_leader");
+        let follower_dir = fresh_dir("pawd_itest_http_sync_follower");
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = Arc::new(FlatParams::init(&cfg, 107));
+        let leader = Arc::new(VariantRegistry::open(&leader_dir).unwrap());
+        let v1 = seeded_full(&base, "ft", 61);
+        let full = leader.publish_incremental("ft", v1.clone(), None).unwrap();
+        let v2 = perturb_one(&v1, &base, 2, 91);
+        let out2 = leader.publish_incremental("ft", v2, None).unwrap();
+        assert!(out2.patch);
+        leader.publish("other", seeded_full(&base, "other", 77)).unwrap();
+
+        // Sync-only frontend: no engine attached, just the leader registry.
+        let frontend =
+            HttpFrontend::start("127.0.0.1:0", None, leader.clone(), FrontConfig::default())
+                .unwrap();
+        let follower = Arc::new(VariantRegistry::open(&follower_dir).unwrap());
+        let repl = Replicator::new(
+            follower.clone(),
+            Box::new(HttpTransport::new(&frontend.url()).unwrap()),
+        );
+
+        // Cold sync over HTTP: same structure as the FsTransport suite.
+        let report = repl.sync_once(None).unwrap();
+        assert!(!report.up_to_date);
+        assert_eq!(report.variants_synced, 2);
+        assert_eq!(report.versions_installed, 3);
+        assert_eq!(report.files_fetched, 3);
+        assert_eq!(report.patch_files_fetched, 1);
+        assert_eq!(report.leader_seq, leader.manifest_seq());
+        let tokens: Vec<u8> = (0..12u8).map(|t| t.wrapping_mul(23) % 200 + 10).collect();
+        for name in ["ft", "ft@1", "ft@2", "other"] {
+            assert_eq!(
+                logits_of(&base, &leader_dir, name, &tokens),
+                logits_of(&base, &follower_dir, name, &tokens),
+                "HTTP-synced follower must serve bitwise-identical logits for '{name}'"
+            );
+        }
+
+        // Warm patch publish: the follower moves only the patch (plus HTTP
+        // header overhead), well under the consolidated artifact.
+        let v3 = perturb_one(&v1, &base, 0, 191);
+        let out3 = leader.publish_incremental("ft", v3, None).unwrap();
+        assert!(out3.patch);
+        let report = repl.sync_once(None).unwrap();
+        assert_eq!(report.files_fetched, 1);
+        assert_eq!(report.patch_files_fetched, 1);
+        assert!(
+            report.artifact_bytes >= out3.bytes,
+            "wire bytes ({}) must cover the patch body ({})",
+            report.artifact_bytes,
+            out3.bytes
+        );
+        assert!(
+            report.artifact_bytes < out3.bytes + 2048,
+            "wire overhead beyond the patch body must be header-sized ({} vs {})",
+            report.artifact_bytes,
+            out3.bytes
+        );
+        assert!(
+            report.artifact_bytes < full.bytes * 15 / 100,
+            "a one-module patch must replicate in <15% of the consolidated bytes \
+             ({} vs {})",
+            report.artifact_bytes,
+            full.bytes
+        );
+        assert_eq!(
+            logits_of(&base, &leader_dir, "ft", &tokens),
+            logits_of(&base, &follower_dir, "ft", &tokens),
+        );
+
+        // Leader rollback converges over HTTP with zero artifact bytes.
+        leader.rollback("ft", Some(2)).unwrap();
+        let report = repl.sync_once(None).unwrap();
+        assert_eq!(report.files_fetched, 0);
+        assert_eq!(report.artifact_bytes, 0);
+        assert_eq!(follower.resolve("ft").unwrap().version, 2);
+    })
+}
+
+#[test]
+fn idle_long_poll_moves_header_bytes_only() {
+    with_timeout("idle_long_poll", 60, || {
+        let leader_dir = fresh_dir("pawd_itest_http_idle_leader");
+        let follower_dir = fresh_dir("pawd_itest_http_idle_follower");
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = Arc::new(FlatParams::init(&cfg, 109));
+        let leader = Arc::new(VariantRegistry::open(&leader_dir).unwrap());
+        leader.publish("ft", seeded_full(&base, "ft", 31)).unwrap();
+        let frontend =
+            HttpFrontend::start("127.0.0.1:0", None, leader.clone(), FrontConfig::default())
+                .unwrap();
+        let follower = Arc::new(VariantRegistry::open(&follower_dir).unwrap());
+        let repl = Replicator::new(
+            follower,
+            Box::new(HttpTransport::new(&frontend.url()).unwrap()),
+        );
+        let cold = repl.sync_once(None).unwrap();
+        assert!(!cold.up_to_date);
+        let polls_before = pawd::exec::counters::http_long_polls();
+
+        // Nothing published: the wait burns its window server-side and the
+        // whole pass costs one 304's worth of headers — no manifest body,
+        // no artifact bytes.
+        let t0 = Instant::now();
+        let report = repl.sync_wait(None, Duration::from_millis(400)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(300), "poll must park server-side");
+        assert!(report.up_to_date);
+        assert_eq!(report.files_fetched, 0);
+        assert_eq!(report.artifact_bytes, 0);
+        assert!(
+            report.manifest_bytes > 0 && report.manifest_bytes < 600,
+            "an idle poll must cost header bytes only, got {}",
+            report.manifest_bytes
+        );
+        assert!(pawd::exec::counters::http_long_polls() > polls_before);
+    })
+}
+
+#[test]
+fn long_poll_wakes_early_on_publish() {
+    with_timeout("long_poll_wakes", 60, || {
+        let leader_dir = fresh_dir("pawd_itest_http_wake_leader");
+        let follower_dir = fresh_dir("pawd_itest_http_wake_follower");
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = Arc::new(FlatParams::init(&cfg, 113));
+        let leader = Arc::new(VariantRegistry::open(&leader_dir).unwrap());
+        let v1 = seeded_full(&base, "ft", 41);
+        leader.publish_incremental("ft", v1.clone(), None).unwrap();
+        let frontend =
+            HttpFrontend::start("127.0.0.1:0", None, leader.clone(), FrontConfig::default())
+                .unwrap();
+        let follower = Arc::new(VariantRegistry::open(&follower_dir).unwrap());
+        let repl = Replicator::new(
+            follower.clone(),
+            Box::new(HttpTransport::new(&frontend.url()).unwrap()),
+        );
+        repl.sync_once(None).unwrap();
+
+        // Publish from another thread mid-poll: the condvar watch must wake
+        // the parked poll long before its 20s window expires.
+        let publisher = {
+            let leader = leader.clone();
+            let base = base.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(200));
+                let v2 = perturb_one(&v1, &base, 1, 143);
+                leader.publish_incremental("ft", v2, None).unwrap();
+            })
+        };
+        let t0 = Instant::now();
+        let report = repl.sync_wait(None, Duration::from_secs(20)).unwrap();
+        let elapsed = t0.elapsed();
+        publisher.join().unwrap();
+        assert!(!report.up_to_date, "the poll must observe the publish");
+        assert_eq!(report.files_fetched, 1);
+        assert!(
+            elapsed < Duration::from_secs(10),
+            "poll must wake on publish, not burn the window (took {elapsed:?})"
+        );
+        assert_eq!(follower.resolve("ft").unwrap().version, 2);
+    })
+}
+
+#[test]
+fn keep_alive_serves_pipelined_requests_on_one_connection() {
+    with_timeout("keep_alive_pipeline", 60, || {
+        let dir = fresh_dir("pawd_itest_http_keepalive");
+        let registry = Arc::new(VariantRegistry::open(&dir).unwrap());
+        let frontend =
+            HttpFrontend::start("127.0.0.1:0", None, registry, FrontConfig::default()).unwrap();
+        let two = raw_exchange(
+            frontend.addr(),
+            b"GET /v1/healthz HTTP/1.1\r\nHost: t\r\n\r\n\
+              GET /v1/healthz HTTP/1.1\r\nHost: t\r\n\r\n",
+        );
+        assert_eq!(
+            two.matches("HTTP/1.1 200 OK").count(),
+            2,
+            "both pipelined requests must be served on one connection: {two}"
+        );
+        assert!(two.contains("Connection: keep-alive"), "first reply keeps the connection");
+    })
+}
+
+#[test]
+fn sync_file_route_serves_ranges_with_whole_file_crc() {
+    with_timeout("range_and_crc", 60, || {
+        let dir = fresh_dir("pawd_itest_http_range");
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = Arc::new(FlatParams::init(&cfg, 127));
+        let registry = Arc::new(VariantRegistry::open(&dir).unwrap());
+        registry.publish("ft", seeded_full(&base, "ft", 51)).unwrap();
+        let file = registry.list()[0].versions[0].file.clone();
+        let disk = std::fs::read(dir.join(&file)).unwrap();
+        let crc = format!("{:08x}", crc32::hash(&disk));
+        let frontend =
+            HttpFrontend::start("127.0.0.1:0", None, registry, FrontConfig::default()).unwrap();
+
+        let full = raw_exchange(
+            frontend.addr(),
+            format!("GET /v1/sync/file/{file} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes(),
+        );
+        assert!(full.starts_with("HTTP/1.1 200"), "got: {}", &full[..full.len().min(120)]);
+        assert!(full.contains(&format!("X-Content-Crc32: {crc}")));
+        assert!(full.contains("Accept-Ranges: bytes"));
+
+        // Resume from the middle: 206 with the suffix, Content-Range, and
+        // the *whole-file* crc so the client can verify after reassembly.
+        let offset = disk.len() / 2;
+        let part = raw_exchange(
+            frontend.addr(),
+            format!(
+                "GET /v1/sync/file/{file} HTTP/1.1\r\nHost: t\r\nRange: bytes={offset}-\r\n\r\n"
+            )
+            .as_bytes(),
+        );
+        assert!(part.starts_with("HTTP/1.1 206"), "got: {}", &part[..part.len().min(120)]);
+        assert!(part.contains(&format!(
+            "Content-Range: bytes {offset}-{}/{}",
+            disk.len() - 1,
+            disk.len()
+        )));
+        assert!(part.contains(&format!("X-Content-Crc32: {crc}")));
+        assert!(part.contains(&format!("Content-Length: {}", disk.len() - offset)));
+
+        // A range past the end is a 416, not a panic or an empty 206.
+        let beyond = raw_exchange(
+            frontend.addr(),
+            format!(
+                "GET /v1/sync/file/{file} HTTP/1.1\r\nHost: t\r\nRange: bytes={}-\r\n\r\n",
+                disk.len() + 10
+            )
+            .as_bytes(),
+        );
+        assert!(beyond.starts_with("HTTP/1.1 416"), "got: {}", &beyond[..beyond.len().min(120)]);
+    })
+}
+
+#[test]
+fn sync_only_frontend_rejects_data_and_admin_planes() {
+    with_timeout("sync_only_503", 60, || {
+        let dir = fresh_dir("pawd_itest_http_synconly");
+        let registry = Arc::new(VariantRegistry::open(&dir).unwrap());
+        let frontend =
+            HttpFrontend::start("127.0.0.1:0", None, registry, FrontConfig::default()).unwrap();
+        let api = HttpApiClient::new(&frontend.url()).unwrap();
+        api.health().unwrap();
+        let err = api.score("ft", "Q", &["a".into()]).unwrap_err().to_string();
+        assert!(err.contains("503"), "data plane must 503 on a sync-only frontend: {err}");
+        let err = api.admin(&AdminOp::List).unwrap_err().to_string();
+        assert!(err.contains("503"), "admin plane must 503 on a sync-only frontend: {err}");
+
+        // Malformed query bodies are 400s.
+        let resp = raw_exchange(
+            frontend.addr(),
+            b"POST /v1/query HTTP/1.1\r\nHost: t\r\nContent-Length: 9\r\n\r\nnot JSON!",
+        );
+        assert!(resp.starts_with("HTTP/1.1 503") || resp.starts_with("HTTP/1.1 400"));
+    })
+}

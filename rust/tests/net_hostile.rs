@@ -1,0 +1,171 @@
+//! Hostile-input coverage for the network plane: the parser and the live
+//! server must answer malformed, truncated, oversized, and slow-loris
+//! traffic with typed errors and clean drops — never a panic, never a hang.
+
+mod common;
+
+use common::{fresh_dir, with_timeout};
+use pawd::coordinator::VariantRegistry;
+use pawd::net::http::{HttpConn, HttpError, HttpLimits};
+use pawd::net::{FrontConfig, HttpApiClient, HttpFrontend};
+use pawd::util::rng::Rng;
+use std::io::{Cursor, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+const TEMPLATES: &[&[u8]] = &[
+    b"GET /v1/healthz HTTP/1.1\r\nHost: t\r\n\r\n",
+    b"GET /v1/sync/manifest?known_seq=7&timeout_ms=100 HTTP/1.1\r\nHost: t\r\n\r\n",
+    b"GET /v1/sync/file/ft%401.pawd HTTP/1.1\r\nRange: bytes=1024-\r\n\r\n",
+    b"POST /v1/query HTTP/1.1\r\nContent-Length: 24\r\n\r\n{\"variant\":\"ft\",\"op\":\"x\"}",
+    b"POST /v1/admin/publish HTTP/1.0\r\nConnection: keep-alive\r\nContent-Length: 2\r\n\r\n{}",
+];
+
+fn parse(raw: &[u8]) -> Result<Option<pawd::net::http::HttpRequest>, HttpError> {
+    HttpConn::new(Cursor::new(raw.to_vec())).read_request(&HttpLimits::default())
+}
+
+#[test]
+fn parser_handles_every_truncation_point() {
+    for template in TEMPLATES {
+        for cut in 0..template.len() {
+            // Every prefix must come back as a typed result — clean close,
+            // truncation, or a malformed/unsupported rejection.
+            match parse(&template[..cut]) {
+                Ok(None) | Ok(Some(_)) => {}
+                Err(e) => {
+                    let _ = e.status();
+                    let _ = e.to_string();
+                }
+            }
+        }
+        assert!(parse(template).unwrap().is_some(), "intact template must parse");
+    }
+}
+
+#[test]
+fn parser_survives_random_mutations() {
+    let mut rng = Rng::new(0xB0A7);
+    for iter in 0..2000 {
+        let mut bytes = TEMPLATES[iter % TEMPLATES.len()].to_vec();
+        for _ in 0..rng.range(1, 9) {
+            let pos = rng.below(bytes.len());
+            bytes[pos] = rng.next_u32() as u8;
+        }
+        // Typed error or parse — never a panic. Oversized declared bodies
+        // are capped, so even a mutated Content-Length can't balloon.
+        match parse(&bytes) {
+            Ok(_) => {}
+            Err(e) => {
+                let _ = e.status();
+            }
+        }
+    }
+}
+
+#[test]
+fn live_server_survives_hostile_connections() {
+    with_timeout("hostile_server", 120, || {
+        let dir = fresh_dir("pawd_itest_net_hostile");
+        let registry = Arc::new(VariantRegistry::open(&dir).unwrap());
+        // Tight deadlines so the slow-loris probe resolves in test time.
+        let cfg = FrontConfig {
+            limits: HttpLimits {
+                head_deadline: Duration::from_millis(500),
+                body_deadline: Duration::from_millis(500),
+                ..HttpLimits::default()
+            },
+            ..FrontConfig::default()
+        };
+        let frontend = HttpFrontend::start("127.0.0.1:0", None, registry, cfg).unwrap();
+        let addr = frontend.addr();
+        let exchange = |req: &[u8]| -> String {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            s.write_all(req).unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut buf = Vec::new();
+            let _ = s.read_to_end(&mut buf);
+            String::from_utf8_lossy(&buf).into_owned()
+        };
+
+        // Non-HTTP garbage: the server drops (with or without a 400 line).
+        let resp = exchange(b"\x00\x01\x02garbage\xff\xfe\r\n\r\n");
+        assert!(resp.is_empty() || resp.starts_with("HTTP/1.1 4"), "got: {resp}");
+
+        // Oversized head → 431.
+        let mut big = b"GET / HTTP/1.1\r\nX-Filler: ".to_vec();
+        big.resize(big.len() + 20_000, b'a');
+        big.extend_from_slice(b"\r\n\r\n");
+        assert!(exchange(&big).starts_with("HTTP/1.1 431"), "oversized head must 431");
+
+        // Huge declared body → 413 without reading it.
+        let resp =
+            exchange(b"POST /v1/query HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 413"), "got: {resp}");
+
+        // Chunked transfer → 501 (the plane refuses, typed).
+        let resp =
+            exchange(b"POST /v1/query HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 501"), "got: {resp}");
+
+        // Slow loris: trickle a never-ending head and stop. The deadline
+        // must cut the connection instead of pinning a thread forever.
+        {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(8))).unwrap();
+            s.write_all(b"GET /v1/healthz HTTP/1.1\r\nX-Drip: a").unwrap();
+            std::thread::sleep(Duration::from_millis(150));
+            s.write_all(b"b").unwrap();
+            // No terminator, no more bytes: the server's 500ms head
+            // deadline fires and the socket closes (408 line optional).
+            let mut buf = Vec::new();
+            let n = s.read_to_end(&mut buf).unwrap_or(0);
+            let text = String::from_utf8_lossy(&buf[..n.min(buf.len())]).into_owned();
+            assert!(
+                text.is_empty() || text.starts_with("HTTP/1.1 408"),
+                "slow-loris must end in a drop or a 408, got: {text}"
+            );
+        }
+
+        // Connect-and-vanish costs nothing.
+        drop(TcpStream::connect(addr).unwrap());
+
+        // After all of that, the server still answers politely.
+        HttpApiClient::new(&frontend.url()).unwrap().health().unwrap();
+    })
+}
+
+#[test]
+fn file_route_rejects_traversal_and_misses_cleanly() {
+    with_timeout("hostile_file_route", 60, || {
+        let dir = fresh_dir("pawd_itest_net_traversal");
+        let registry = Arc::new(VariantRegistry::open(&dir).unwrap());
+        let frontend =
+            HttpFrontend::start("127.0.0.1:0", None, registry, FrontConfig::default()).unwrap();
+        let addr = frontend.addr();
+        let exchange = |req: &[u8]| -> String {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            s.write_all(req).unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut buf = Vec::new();
+            let _ = s.read_to_end(&mut buf);
+            String::from_utf8_lossy(&buf).into_owned()
+        };
+
+        // Encoded traversal dies at the parser (400), never reaching fs.
+        let resp = exchange(b"GET /v1/sync/file/..%2Fregistry.json HTTP/1.1\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+        // Dotfiles are rejected by the same gate the replicator uses.
+        let resp = exchange(b"GET /v1/sync/file/.hidden HTTP/1.1\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+        // A clean miss is a 404, not an error or a path probe.
+        let resp = exchange(b"GET /v1/sync/file/nope.pawd HTTP/1.1\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 404"), "got: {resp}");
+        // Bad long-poll parameters are 400s.
+        let resp = exchange(b"GET /v1/sync/manifest?known_seq=banana HTTP/1.1\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+    })
+}

@@ -8,7 +8,7 @@
 
 use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
 use pawd::delta::pack::PackedMask;
-use pawd::delta::types::{Axis, DeltaModel, DeltaModule};
+use pawd::delta::types::{Axis, Codec, DeltaModel, DeltaModule};
 use pawd::model::config::ModelConfig;
 use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
 use pawd::model::FlatParams;
@@ -65,6 +65,7 @@ pub fn seeded_full(base: &FlatParams, seed: u64) -> DeltaModel {
                 mask: PackedMask::pack(&delta, rows, cols),
                 axis: Axis::Row,
                 scales: (0..rows).map(|_| r.uniform_in(0.005, 0.05)).collect(),
+                codec: Codec::PerAxis,
             }
         })
         .collect();

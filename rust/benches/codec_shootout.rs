@@ -1,0 +1,74 @@
+//! **C1 — codec shoot-out**: per-module reconstruction error vs payload
+//! bytes vs fused throughput for every delta codec (per-axis, scalar,
+//! low-rank-residual), plus the calibration-driven auto selection. Asserts
+//! the two structural guarantees the codec API promises: per-axis never
+//! loses to scalar on calibration error, and auto never selects a codec
+//! with worse calibration error than per-axis.
+//!
+//! Emits one gated `*_fused_rows_per_s` throughput metric per codec (and
+//! report-only error/bytes metrics) into `BenchReport`; CI's bench-smoke
+//! lane runs this in fast mode.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use pawd::delta::compress::{CompressOptions, FitMode};
+use pawd::delta::CodecKind;
+use pawd::eval::{codec_shootout, render_shootout};
+use pawd::util::benchkit::BenchReport;
+
+fn main() -> anyhow::Result<()> {
+    let (base, ft) = bench_common::synth_pair("tiny", 11);
+    let docs = bench_common::calib_docs(6, 48);
+    let opts = CompressOptions { fit: FitMode::ClosedForm, ..Default::default() };
+
+    let modules = codec_shootout(&base, &ft, &docs, &opts);
+    println!("{}", render_shootout(&modules));
+
+    // Structural guarantees — a red run here is a codec regression, not noise.
+    for m in &modules {
+        let row = |k: CodecKind| m.rows.iter().find(|r| r.kind == k).unwrap();
+        let pa = row(CodecKind::PerAxis);
+        let sc = row(CodecKind::Scalar);
+        let sel = row(m.selected);
+        assert!(
+            pa.val_mse <= sc.val_mse,
+            "{:?}: per-axis val MSE {} worse than scalar {}",
+            m.id,
+            pa.val_mse,
+            sc.val_mse
+        );
+        assert!(
+            sel.val_mse <= pa.val_mse,
+            "{:?}: auto selected {} with val MSE {} worse than per-axis {}",
+            m.id,
+            sel.kind.label(),
+            sel.val_mse,
+            pa.val_mse
+        );
+    }
+
+    // Aggregate per codec across modules: mean fused throughput (gated),
+    // total payload bytes and mean calibration error (report-only).
+    let mut report = BenchReport::new();
+    let n = modules.len() as f64;
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    for kind in CodecKind::ALL {
+        let key = kind.label().replace('-', "_");
+        let rows: Vec<_> =
+            modules.iter().map(|m| m.rows.iter().find(|r| r.kind == kind).unwrap()).collect();
+        let mean_rps = rows.iter().map(|r| r.fused_rows_per_s).sum::<f64>() / n;
+        let bytes: u64 = rows.iter().map(|r| r.payload_bytes).sum();
+        let mean_mse = rows.iter().map(|r| r.val_mse).sum::<f64>() / n;
+        metrics.push((format!("{key}_fused_rows_per_s"), mean_rps));
+        metrics.push((format!("{key}_payload_bytes"), bytes as f64));
+        metrics.push((format!("{key}_mean_val_mse"), mean_mse));
+    }
+    let auto_per_axis =
+        modules.iter().filter(|m| m.selected == CodecKind::PerAxis).count() as f64;
+    metrics.push(("auto_selected_per_axis".into(), auto_per_axis));
+    let borrowed: Vec<(&str, f64)> = metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    report.add("codec_shootout/tiny", &borrowed);
+    report.flush_env()?;
+    Ok(())
+}

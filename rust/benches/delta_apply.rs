@@ -7,7 +7,7 @@
 mod bench_common;
 
 use pawd::delta::pack::PackedMask;
-use pawd::delta::types::{Axis, DeltaModule};
+use pawd::delta::types::{Axis, Codec, DeltaModule};
 use pawd::model::{ModuleId, ProjKind};
 use pawd::util::benchkit::{fmt_rate, Bench};
 use pawd::util::rng::Rng;
@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
                 mask: mask.clone(),
                 axis,
                 scales: vec![0.05; axis.n_scales(d_out, d_in)],
+                codec: Codec::PerAxis,
             };
             b.run_items(&format!("apply_{}_{d_out}x{d_in}", axis.label()), bytes, || {
                 pawd::delta::apply::apply_module_into(&base, &mut out, &m);

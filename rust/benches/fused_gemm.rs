@@ -7,7 +7,7 @@
 mod bench_common;
 
 use pawd::delta::pack::PackedMask;
-use pawd::delta::types::{Axis, DeltaModule};
+use pawd::delta::types::{Axis, Codec, DeltaModule};
 use pawd::exec::{DenseLinear, FusedDeltaLinear, LinearOp};
 use pawd::model::{ModuleId, ProjKind};
 use pawd::tensor::Tensor2;
@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
         mask: mask.clone(),
         axis: Axis::Row,
         scales: scales.clone(),
+        codec: Codec::PerAxis,
     };
     let xt = Tensor2::from_vec(n, d_in, x.clone());
 

@@ -17,7 +17,7 @@ use pawd::exec::ExecMode;
 use pawd::util::benchkit::{fmt_bytes, BenchReport, Table};
 use pawd::util::rng::Rng;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let (base, _) = bench_common::synth_pair("tiny", 31);
@@ -65,7 +65,6 @@ fn main() -> anyhow::Result<()> {
                     Engine::Native,
                     ServerConfig {
                         max_batch: 8,
-                        max_wait: Duration::from_millis(2),
                         n_workers: 2,
                         cache_budget_bytes: budget,
                         exec,

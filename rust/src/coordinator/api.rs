@@ -1,0 +1,74 @@
+//! Transport-agnostic client surface: ONE trait over the in-process
+//! [`Client`] and the HTTP mirror
+//! (`net::api::HttpApiClient`), so harnesses, benches, and ops tooling can
+//! be written once and run against either side of the wire. The error lane
+//! is `Result<_, String>` — the in-process client's native lane — and the
+//! HTTP impl folds its transport errors into the same shape, so a caller
+//! cannot tell a local engine rejection from a remote one (which is the
+//! point: the scores themselves are bitwise-equal across transports).
+
+use super::metrics::MetricsSnapshot;
+use super::request::{AdminOp, AdminResp, Payload, RespBody, Response};
+use super::server::Client;
+use std::sync::mpsc;
+
+/// One data-plane answer, transport-agnostic: which version actually
+/// served, and the body. The HTTP client's wire reply converts into this
+/// losslessly (scores ride shortest-roundtrip `f64` JSON).
+#[derive(Debug)]
+pub struct ApiReply {
+    pub variant: String,
+    pub version: Option<u32>,
+    pub body: RespBody,
+}
+
+/// The client surface both transports share. Implemented by
+/// [`Client`] (in-process channel) and
+/// `net::api::HttpApiClient` (loopback/remote HTTP).
+pub trait ApiClient {
+    /// Rank `choices` as completions of `prompt` on `variant`.
+    fn score(&self, variant: &str, prompt: &str, choices: &[String]) -> Result<ApiReply, String>;
+
+    /// Nats-per-token perplexity of `text` on `variant`.
+    fn perplexity(&self, variant: &str, text: &str) -> Result<ApiReply, String>;
+
+    /// One control-plane operation.
+    fn admin(&self, op: AdminOp) -> Result<AdminResp, String>;
+
+    /// Server metrics + residency gauges, via the admin lane.
+    fn stats(&self) -> Result<MetricsSnapshot, String> {
+        match self.admin(AdminOp::Stats)? {
+            AdminResp::Stats { snapshot } => Ok(*snapshot),
+            other => Err(format!("unexpected stats response {other:?}")),
+        }
+    }
+
+    /// Liveness probe. In-process this is trivially `Ok` (a dead server
+    /// surfaces as an error on the next real call); over HTTP it is
+    /// `GET /v1/healthz`.
+    fn health(&self) -> Result<(), String>;
+}
+
+/// Collapse a response receiver into the trait's reply shape.
+fn recv_reply(rx: mpsc::Receiver<Response>) -> Result<ApiReply, String> {
+    let resp = rx.recv().map_err(|_| "server terminated".to_string())?;
+    Ok(ApiReply { variant: resp.variant, version: resp.version, body: resp.result? })
+}
+
+impl ApiClient for Client {
+    fn score(&self, variant: &str, prompt: &str, choices: &[String]) -> Result<ApiReply, String> {
+        recv_reply(self.submit(variant, Payload::score(prompt, choices)))
+    }
+
+    fn perplexity(&self, variant: &str, text: &str) -> Result<ApiReply, String> {
+        recv_reply(self.submit(variant, Payload::perplexity(text)))
+    }
+
+    fn admin(&self, op: AdminOp) -> Result<AdminResp, String> {
+        Client::admin(self, op)
+    }
+
+    fn health(&self) -> Result<(), String> {
+        Ok(())
+    }
+}

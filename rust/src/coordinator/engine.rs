@@ -1,20 +1,19 @@
 //! The continuously-stepping serving engine.
 //!
 //! Replaces the stop-and-go window dispatcher: instead of holding a batch
-//! window until it is full or its oldest request has aged `max_wait`, the
+//! window until it is full or a dispatch deadline expires, the
 //! engine *steps* whenever anything changes — a request arrives, an abort
 //! lands, or a worker finishes an item. Each step admits a fair-share
 //! window (`fair_take`) onto every idle worker slot immediately, so:
 //!
 //! * an idle host serves a lone request at compute latency, never a
 //!   deadline wait (the old dispatcher's idle-latency bug);
-//! * a hot window never blocks behind `max_wait` — new requests are
+//! * a hot window never blocks behind a deadline — new requests are
 //!   admitted into the in-flight batch at the next step boundary;
 //! * publish / `PullFrom` warms ride the same slots as data windows and
 //!   overlap with serving instead of stalling it.
 //!
-//! [`ServerConfig::max_wait`](super::server::ServerConfig::max_wait)
-//! survives only as a vestigial config field: nothing here reads it —
+//! There is no dispatch-deadline knob in [`ServerConfig`]:
 //! flush-on-idle-slot *is* the deadline policy.
 //!
 //! [`EngineCore`] holds the pure admission state (pending queue, in-flight
@@ -326,8 +325,8 @@ mod tests {
 
     #[test]
     fn step_admits_immediately_when_a_slot_is_idle() {
-        // The old dispatcher would hold this lone request for `max_wait`;
-        // the engine admits it on the very next step.
+        // The old dispatcher would hold this lone request until a dispatch
+        // deadline; the engine admits it on the very next step.
         let mut core = EngineCore::new(2, 8);
         core.add_request(req("a"));
         let groups = core.step().expect("idle slot must admit immediately");

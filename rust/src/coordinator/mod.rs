@@ -3,6 +3,10 @@
 //! hot-swapped on cold start and **updated live** through a versioned
 //! lifecycle registry.
 //!
+//! * [`api`] — the transport-agnostic [`ApiClient`](api::ApiClient) trait
+//!   (score/perplexity/admin/stats/health) implemented by the in-process
+//!   [`Client`](server::Client) here and by
+//!   `net::api::HttpApiClient` over the wire.
 //! * [`request`] — request/response types with per-stage timing, split into
 //!   a data plane ([`DataOp`](request::DataOp)) and a control plane
 //!   ([`AdminOp`](request::AdminOp)).
@@ -19,7 +23,7 @@
 //! * [`engine`] — the continuous-batching step loop
 //!   ([`EngineCore`](engine::EngineCore)): `add_request`/`step`/`abort`
 //!   semantics, fair-share admission into the in-flight batch at every step
-//!   boundary, immediate flush onto idle workers (no `max_wait` stall), and
+//!   boundary, immediate flush onto idle workers (no dispatch-deadline stall), and
 //!   publish/pull warms overlapping data-plane serving.
 //! * [`server`] — wiring around the engine loop: spawns the engine thread
 //!   and worker engines, routes admin requests down the fast lane, and runs
@@ -39,6 +43,7 @@
 //!   [`net`](crate::net) (the coordinator never depends on the network
 //!   plane — `net` bridges *into* these seams).
 
+pub mod api;
 pub mod cache;
 pub mod engine;
 pub mod metrics;
@@ -48,6 +53,7 @@ pub mod request;
 pub mod server;
 pub mod store;
 
+pub use api::{ApiClient, ApiReply};
 pub use cache::{Residency, VariantCache, VersionResidency};
 pub use engine::EngineCore;
 pub use metrics::{Metrics, MetricsSnapshot};

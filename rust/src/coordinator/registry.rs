@@ -1295,7 +1295,7 @@ fn version_state_invalid(s: &VariantState) -> bool {
 mod tests {
     use super::*;
     use crate::delta::pack::PackedMask;
-    use crate::delta::types::{Axis, DeltaModule};
+    use crate::delta::types::{Axis, Codec, DeltaModule};
     use crate::model::{ModuleId, ProjKind};
 
     fn tiny_model(variant: &str) -> DeltaModel {
@@ -1308,6 +1308,7 @@ mod tests {
                 mask: PackedMask::pack(&d, 8, 8),
                 axis: Axis::Row,
                 scales: vec![0.1; 8],
+                codec: Codec::PerAxis,
             }],
         )
     }
@@ -1328,6 +1329,7 @@ mod tests {
                     mask: PackedMask::pack(&d, 16, 16),
                     axis: Axis::Row,
                     scales: (0..16).map(|_| r.uniform_in(0.01, 0.2)).collect(),
+                    codec: Codec::PerAxis,
                 }
             })
             .collect();

@@ -21,8 +21,8 @@
 //! fair-share window onto every idle worker slot the moment one exists:
 //! concurrent data requests — whatever variant they target — coalesce into
 //! mixed windows while all workers are busy, and a lone request on an idle
-//! host dispatches immediately (the legacy `max_wait` deadline no longer
-//! delays anything). A worker pins every `(variant, version)` the window
+//! host dispatches immediately — there is no dispatch deadline to wait
+//! out. A worker pins every `(variant, version)` the window
 //! needs with one cache multi-get, groups the window by shared base storage
 //! into [`BatchPlan`]s, and runs each plan as ONE stacked forward: the base
 //! GEMM executes once per module for the whole window and each variant pays
@@ -76,15 +76,6 @@ pub enum Engine {
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub max_batch: usize,
-    /// **Deprecated — dead since the continuous-batching engine.** The old
-    /// stop-and-go dispatcher held a partial window open up to `max_wait`;
-    /// the [`engine`](super::engine) loop instead flushes a fair-share
-    /// window onto a worker the moment an idle slot exists, so this value
-    /// is read by nothing and delays nothing. The field is kept (not
-    /// `#[deprecated]`-attributed, which would fail the deny-warnings lint
-    /// lane at every construction site) purely so existing configs compile
-    /// unchanged; it will be removed with the next config-breaking change.
-    pub max_wait: Duration,
     pub n_workers: usize,
     pub cache_budget_bytes: u64,
     /// Dense-vs-fused A/B switch: how delta variants are resident and
@@ -101,7 +92,6 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             max_batch: 8,
-            max_wait: Duration::from_millis(4),
             n_workers: 2,
             cache_budget_bytes: 1 << 30,
             exec: ExecMode::Fused,

@@ -18,7 +18,8 @@ use super::types::{Axis, DeltaModule};
 use crate::model::FlatParams;
 use crate::util::par;
 
-/// `out[j,i] = base[j,i] + scale(j,i) * sign(j,i)` for one module.
+/// `out[j,i] = base[j,i] + scale(j,i) * sign(j,i)` for one module, plus the
+/// low-rank residual `B·A` for modules under that codec.
 pub fn apply_module_into(base: &[f32], out: &mut [f32], m: &DeltaModule) {
     let (d_out, d_in) = (m.d_out(), m.d_in());
     assert_eq!(base.len(), d_out * d_in);
@@ -44,6 +45,7 @@ pub fn apply_module_into(base: &[f32], out: &mut [f32], m: &DeltaModule) {
             });
         }
     }
+    add_lowrank_dense(out, m, 1.0);
 }
 
 /// In-place variant: `w += v ⊙ B` (pass `negate=true` to subtract, i.e.
@@ -75,6 +77,27 @@ pub fn apply_module_inplace(w: &mut [f32], m: &DeltaModule, negate: bool) {
             });
         }
     }
+    add_lowrank_dense(w, m, sgn);
+}
+
+/// Accumulate `sgn · (B·A)` — the low-rank residual of `m`, if any — onto a
+/// dense `[d_out, d_in]` buffer. Row-parallel like the bitplane passes; the
+/// rank-k outer products stream `A` row-by-row so the product matrix never
+/// materializes separately.
+fn add_lowrank_dense(w: &mut [f32], m: &DeltaModule, sgn: f32) {
+    let Some(lr) = m.lowrank() else { return };
+    let (d_in, rank) = (m.d_in(), lr.rank);
+    par::parallel_rows_mut(w, m.d_out(), d_in, 16, |row0, chunk| {
+        for (r, wrow) in chunk.chunks_mut(d_in).enumerate() {
+            let j = row0 + r;
+            for (k, &bk) in lr.b[j * rank..(j + 1) * rank].iter().enumerate() {
+                let s = sgn * bk;
+                for (wi, &ai) in wrow.iter_mut().zip(&lr.a[k * d_in..(k + 1) * d_in]) {
+                    *wi += s * ai;
+                }
+            }
+        }
+    });
 }
 
 #[inline]
@@ -232,6 +255,18 @@ pub fn apply_module_reference(base: &[f32], m: &DeltaModule) -> Vec<f32> {
             out[j * d_in + i] = base[j * d_in + i] + m.scale_at(j, i) * m.mask.sign(j, i);
         }
     }
+    if let Some(lr) = m.lowrank() {
+        // Same accumulation order as `add_lowrank_dense` (one += per rank
+        // component) so optimized-vs-reference stays bitwise.
+        for j in 0..d_out {
+            for k in 0..lr.rank {
+                let s = lr.b[j * lr.rank + k];
+                for i in 0..d_in {
+                    out[j * d_in + i] += s * lr.a[k * d_in + i];
+                }
+            }
+        }
+    }
     out
 }
 
@@ -239,6 +274,7 @@ pub fn apply_module_reference(base: &[f32], m: &DeltaModule) -> Vec<f32> {
 mod tests {
     use super::*;
     use crate::delta::pack::PackedMask;
+    use crate::delta::types::{Codec, LowRank};
     use crate::model::{ModuleId, ProjKind};
     use crate::util::rng::Rng;
 
@@ -251,7 +287,13 @@ mod tests {
         let scales: Vec<f32> = (0..n).map(|_| r.uniform_in(0.01, 0.2)).collect();
         (
             base,
-            DeltaModule { id: ModuleId { layer: 0, kind: ProjKind::Q }, mask, axis, scales },
+            DeltaModule {
+                id: ModuleId { layer: 0, kind: ProjKind::Q },
+                mask,
+                axis,
+                scales,
+                codec: Codec::PerAxis,
+            },
         )
     }
 
@@ -267,6 +309,38 @@ mod tests {
                 apply_module_into(&base, &mut got, &m);
                 assert_eq!(got, want, "axis {axis:?} shape {d_out}x{d_in}");
             }
+        }
+    }
+
+    fn mk_lowrank(d_out: usize, d_in: usize, rank: usize, seed: u64) -> (Vec<f32>, DeltaModule) {
+        let (base, mut m) = mk_module(d_out, d_in, Axis::Row, seed);
+        let mut r = Rng::new(seed ^ 0x10);
+        let a: Vec<f32> = (0..rank * d_in).map(|_| r.normal_f32(0.0, 0.05)).collect();
+        let b: Vec<f32> = (0..d_out * rank).map(|_| r.normal_f32(0.0, 0.05)).collect();
+        m.codec = Codec::LowRank(LowRank { rank, a, b });
+        (base, m)
+    }
+
+    #[test]
+    fn lowrank_optimized_matches_reference_bitwise() {
+        for &(d_out, d_in, rank) in &[(1, 1, 1), (5, 33, 2), (8, 32, 3), (17, 100, 4)] {
+            let (base, m) = mk_lowrank(d_out, d_in, rank, 41 + d_in as u64);
+            let want = apply_module_reference(&base, &m);
+            let mut got = vec![0f32; base.len()];
+            apply_module_into(&base, &mut got, &m);
+            assert_eq!(got, want, "lowrank rank {rank} shape {d_out}x{d_in}");
+        }
+    }
+
+    #[test]
+    fn lowrank_inplace_apply_then_revert_is_identity() {
+        let (base, m) = mk_lowrank(13, 47, 3, 7);
+        let mut w = base.clone();
+        apply_module_inplace(&mut w, &m, false);
+        assert_ne!(w, base);
+        apply_module_inplace(&mut w, &m, true);
+        for (a, b) in w.iter().zip(&base) {
+            assert!((a - b).abs() < 1e-5);
         }
     }
 
@@ -308,6 +382,7 @@ mod tests {
                 mask: PackedMask::pack(&delta, rows, cols),
                 axis: Axis::Row,
                 scales: vec![0.05; rows],
+                codec: Codec::PerAxis,
             });
         }
         let v = materialize(&base, &modules);

@@ -355,7 +355,10 @@ pub fn load_effective(
 /// [`read_index`](super::format::read_index) consumes).
 fn index_bytes(index: &super::format::ArtifactIndex) -> u64 {
     let header = 8 + 4 + (4 + index.variant.len()) + (4 + index.base_config.len()) + 17 + 4;
-    let table: usize = index.sections.iter().map(|s| 4 + s.name.len() + 8 + 8).sum();
+    // v4 table entries carry a trailing codec byte.
+    let entry_extra = if index.format >= 4 { 1 } else { 0 };
+    let table: usize =
+        index.sections.iter().map(|s| 4 + s.name.len() + 8 + 8 + entry_extra).sum();
     (header + table) as u64
 }
 
@@ -364,7 +367,7 @@ mod tests {
     use super::*;
     use crate::delta::format::save_delta;
     use crate::delta::pack::PackedMask;
-    use crate::delta::types::Axis;
+    use crate::delta::types::{Axis, Codec};
     use crate::model::{ModuleId, ProjKind};
     use crate::util::rng::Rng;
 
@@ -377,6 +380,7 @@ mod tests {
             mask: PackedMask::pack(&delta, d_out, d_in),
             axis: Axis::Row,
             scales: (0..d_out).map(|_| r.uniform_in(0.01, 0.2)).collect(),
+            codec: Codec::PerAxis,
         }
     }
 
@@ -562,6 +566,32 @@ mod tests {
                 "scale bits of {}",
                 x.id
             );
+            assert!(x.content_eq(y), "codec payload of {}", x.id);
         }
+    }
+
+    #[test]
+    fn diff_ships_module_whose_codec_changed() {
+        // Same mask and scales, but the child re-encoded one module under
+        // the low-rank codec: the diff must carry it, and composing the
+        // patch back must reproduce the child bitwise.
+        use crate::delta::types::LowRank;
+        let parent = full_model(1, &[1, 2, 3]);
+        let mut child = parent.clone();
+        child.meta.version = 2;
+        let m0 = &child.modules[0];
+        let (d_out, d_in) = (m0.d_out(), m0.d_in());
+        let mut recoded = (**m0).clone();
+        recoded.codec = Codec::LowRank(LowRank {
+            rank: 2,
+            a: vec![0.125; 2 * d_in],
+            b: vec![0.25; d_out * 2],
+        });
+        child.modules[0] = Arc::new(recoded);
+        let patch = diff(&parent, &child).unwrap();
+        assert_eq!(patch.modules.len(), 1);
+        assert_eq!(patch.modules[0].codec.kind(), crate::delta::types::CodecKind::LowRank);
+        let recomposed = compose(&parent, &patch).unwrap();
+        assert_model_bitwise_eq(&recomposed, &child);
     }
 }

@@ -1,13 +1,20 @@
 //! Per-module compression with row/col axis selection (Algorithm 6) and the
 //! layer-by-layer model sweep (Algorithm 1 stages 1–2).
+//!
+//! Encoding dispatches through the pluggable codec registry
+//! ([`codec_for`](super::codec::codec_for)): [`CodecChoice`] in the options
+//! selects which [`DeltaCodec`](super::codec::DeltaCodec) encodes each
+//! module, with `Auto` running a per-module shoot-out on held-out
+//! validation MSE.
 
 use super::cache::{build_layer_caches, ModuleCache};
 use super::calibrate::{
     adamw_col, adamw_rowfam, closed_form_col, closed_form_rowfam, col_stats, init_scales,
     mse_col, mse_rowfam, residual, row_stats, CalibConfig,
 };
+use super::codec::codec_for;
 use super::pack::PackedMask;
-use super::types::{Axis, DeltaModel, DeltaModule};
+use super::types::{Axis, Codec, CodecKind, DeltaModel, DeltaModule};
 use crate::model::{FlatParams, ModuleId, Transformer};
 use crate::tensor::Tensor2;
 
@@ -22,6 +29,41 @@ pub enum FitMode {
     InitOnly,
 }
 
+/// Which codec encodes each module (CLI `--codec` values).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecChoice {
+    /// The paper's per-axis scheme (axis slate from `CompressOptions::axes`).
+    PerAxis,
+    /// BitDelta-style single scalar scale per module.
+    Scalar,
+    /// Per-axis plus a low-rank residual correction.
+    LowRank,
+    /// Run every codec and keep the one with the lowest held-out validation
+    /// MSE; ties (and anything not strictly better) fall back to per-axis.
+    Auto,
+}
+
+impl CodecChoice {
+    pub fn parse(s: &str) -> Option<CodecChoice> {
+        match s {
+            "per-axis" => Some(CodecChoice::PerAxis),
+            "scalar" => Some(CodecChoice::Scalar),
+            "lowrank" => Some(CodecChoice::LowRank),
+            "auto" => Some(CodecChoice::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CodecChoice::PerAxis => "per-axis",
+            CodecChoice::Scalar => "scalar",
+            CodecChoice::LowRank => "lowrank",
+            CodecChoice::Auto => "auto",
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct CompressOptions {
     pub calib: CalibConfig,
@@ -31,6 +73,11 @@ pub struct CompressOptions {
     pub axes: Vec<Axis>,
     /// Cap on pooled calibration rows per module.
     pub max_cache_rows: usize,
+    /// Codec (or per-module auto-selection) used to encode each module.
+    pub codec: CodecChoice,
+    /// Rank of the low-rank residual term (clamped per module to
+    /// `min(d_out, d_in)`); only read by the `lowrank` codec.
+    pub lowrank_rank: usize,
 }
 
 impl Default for CompressOptions {
@@ -40,6 +87,8 @@ impl Default for CompressOptions {
             fit: FitMode::AdamW,
             axes: vec![Axis::Row, Axis::Col],
             max_cache_rows: 2048,
+            codec: CodecChoice::PerAxis,
+            lowrank_rank: 4,
         }
     }
 }
@@ -54,6 +103,15 @@ impl CompressOptions {
     }
 }
 
+/// One codec's entry in a per-module shoot-out: what it costs on the wire
+/// against how well it reconstructs held-out activations.
+#[derive(Clone, Debug)]
+pub struct CodecCandidate {
+    pub kind: CodecKind,
+    pub val_mse: f64,
+    pub payload_bytes: u64,
+}
+
 /// Outcome report for one module (feeds Figure 2 and the ablation benches).
 #[derive(Clone, Debug)]
 pub struct ModuleReport {
@@ -63,6 +121,11 @@ pub struct ModuleReport {
     pub candidates: Vec<(Axis, f64, f64)>,
     /// Val MSE of the base model alone (no delta) — the "do nothing" floor.
     pub base_mse: f64,
+    /// Codec the module was actually encoded under.
+    pub codec: CodecKind,
+    /// Every codec that competed for this module (one entry when a codec
+    /// was forced, all of them under `CodecChoice::Auto`).
+    pub codec_candidates: Vec<CodecCandidate>,
 }
 
 /// Fit one candidate axis on the train shard; return (scales, val_mse).
@@ -108,15 +171,19 @@ fn fit_axis(
     }
 }
 
-/// Compress one module: pack the sign mask, fit every candidate axis, pick
-/// the best by held-out validation MSE (Alg. 6 selection rule as stated in
-/// §2: "the axis is selected by validation MSE on the held-out shard").
-pub fn compress_module(
+/// Core per-axis encoder: pack the sign mask, fit every axis in `axes`,
+/// pick the best by held-out validation MSE (Alg. 6 selection rule as
+/// stated in §2: "the axis is selected by validation MSE on the held-out
+/// shard"). The per-axis and scalar codecs both funnel through here with
+/// different axis slates; `tag` stamps the resulting module and report.
+pub(crate) fn encode_with_axes(
     id: ModuleId,
     w_base: &[f32],
     w_ft: &[f32],
     cache: &ModuleCache,
     opts: &CompressOptions,
+    axes: &[Axis],
+    tag: CodecKind,
 ) -> (DeltaModule, ModuleReport) {
     let d_in = cache.x.cols;
     let d_out = cache.y.cols;
@@ -135,7 +202,7 @@ pub fn compress_module(
 
     let mut best: Option<(Axis, Vec<f32>, f64)> = None;
     let mut candidates = Vec::new();
-    for &axis in &opts.axes {
+    for &axis in axes {
         let (v, tr_mse, va_mse) =
             fit_axis(axis, &delta, d_out, d_in, &mask, &wb_t, &train, &val, opts);
         candidates.push((axis, tr_mse, va_mse));
@@ -143,11 +210,39 @@ pub fn compress_module(
             best = Some((axis, v, va_mse));
         }
     }
-    let (axis, scales, _) = best.expect("at least one candidate axis");
-    (
-        DeltaModule { id, mask, axis, scales },
-        ModuleReport { id, chosen: axis, candidates, base_mse },
-    )
+    let (axis, scales, best_val) = best.expect("at least one candidate axis");
+    let codec = match tag {
+        CodecKind::Scalar => Codec::Scalar,
+        _ => Codec::PerAxis,
+    };
+    let m = DeltaModule { id, mask, axis, scales, codec };
+    let cand = CodecCandidate { kind: tag, val_mse: best_val, payload_bytes: m.payload_bytes() };
+    let rep = ModuleReport {
+        id,
+        chosen: axis,
+        candidates,
+        base_mse,
+        codec: tag,
+        codec_candidates: vec![cand],
+    };
+    (m, rep)
+}
+
+/// Compress one module under the codec selected by
+/// [`CompressOptions::codec`], dispatching through the codec registry.
+pub fn compress_module(
+    id: ModuleId,
+    w_base: &[f32],
+    w_ft: &[f32],
+    cache: &ModuleCache,
+    opts: &CompressOptions,
+) -> (DeltaModule, ModuleReport) {
+    match opts.codec {
+        CodecChoice::PerAxis => codec_for(CodecKind::PerAxis).encode(id, w_base, w_ft, cache, opts),
+        CodecChoice::Scalar => codec_for(CodecKind::Scalar).encode(id, w_base, w_ft, cache, opts),
+        CodecChoice::LowRank => codec_for(CodecKind::LowRank).encode(id, w_base, w_ft, cache, opts),
+        CodecChoice::Auto => super::codec::encode_auto(id, w_base, w_ft, cache, opts),
+    }
 }
 
 /// Whole-model compression (Algorithm 1 stages 1–2): sweep layers in order;

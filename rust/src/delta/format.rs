@@ -8,16 +8,18 @@
 //! packed end-to-end; the dense `Ŵ` only ever exists in the destination
 //! buffer.
 //!
-//! Format **v3** layout (little-endian):
+//! Format **v4** layout (little-endian):
 //! ```text
-//! magic "PAWDELTA" | format u32 (=3) | variant str | base_config str |
+//! magic "PAWDELTA" | format u32 (=4) | variant str | base_config str |
 //! version u32 | parent u32 (0 = none) | created_unix u64 |
 //! kind u8 (0 = full, 1 = patch) |
 //! n_modules u32 |
-//!   section table, per module: name str | offset u64 | len u64 |
+//!   section table, per module: name str | offset u64 | len u64 | codec u8 |
 //!   per module: name str | d_out u32 | d_in u32 | axis u8 | group u32 |
 //!               n_scales u32 | scales (n_scales × f16) |
-//!               mask (d_out · ceil(d_in/32) × u32) | crc32 u32
+//!               mask (d_out · ceil(d_in/32) × u32) |
+//!               [codec = lowrank only: rank u32 | A (rank·d_in × f16) |
+//!                B (d_out·rank × f16)] | crc32 u32
 //! file_crc u32
 //! ```
 //! Strings are `u32 length + bytes`. Each record's crc covers its header and
@@ -31,6 +33,13 @@
 //! Partial loads verify per-record crcs; the whole-file crc is only checked
 //! on full sequential reads.
 //!
+//! **Codecs.** v4 stamps each section-table entry with the module's
+//! [`CodecKind`] byte. Per-axis and scalar records are byte-identical to
+//! their v3 serialization (an all-per-axis v4 artifact carries the exact v3
+//! record bytes); low-rank records append the residual factors before the
+//! record crc. **v3** artifacts (no codec byte) decode every module as
+//! [`Codec::PerAxis`], as do v1/v2.
+//!
 //! **Patch artifacts** (`kind = 1`) carry only the modules whose packed
 //! content changed relative to the `parent` version; every other module is
 //! inherited by composing the parent chain
@@ -43,17 +52,18 @@
 //! the version it superseded (the rollback target, and for patches the
 //! composition base).
 //!
-//! **v1** artifacts (no meta triple, no file crc) and **v2** artifacts (meta
-//! triple + file crc, no kind byte, no section table) are still read: the
-//! loader dispatches on the format word; v1 fills the default
-//! [`ArtifactMeta`], v2 reads as a full artifact.
+//! **v1** artifacts (no meta triple, no file crc), **v2** artifacts (meta
+//! triple + file crc, no kind byte, no section table) and **v3** artifacts
+//! (section table without codec bytes) are still read: the loader
+//! dispatches on the format word; v1 fills the default [`ArtifactMeta`],
+//! v2 reads as a full artifact.
 //!
 //! Every read path reports bytes/records touched to
 //! [`exec::counters`](crate::exec::counters) so benches can assert that
 //! warming a patch version does not re-read unchanged modules.
 
 use super::pack::PackedMask;
-use super::types::{ArtifactMeta, Axis, DeltaModel, DeltaModule};
+use super::types::{ArtifactMeta, Axis, Codec, CodecKind, DeltaModel, DeltaModule, LowRank};
 use crate::exec::counters;
 use crate::model::ModuleId;
 use crate::util::crc32;
@@ -65,9 +75,9 @@ use std::sync::Arc;
 
 const MAGIC: &[u8; 8] = b"PAWDELTA";
 /// Current writer format. Readers accept `1..=VERSION`.
-const VERSION: u32 = 3;
+const VERSION: u32 = 4;
 
-/// Serialize a delta model (always format v3). Returns the file size in
+/// Serialize a delta model (always format v4). Returns the file size in
 /// bytes. The model's [`ArtifactMeta`] is written verbatim — the registry
 /// stamps it before publishing; standalone saves keep the default. A patch
 /// model (`meta.is_patch`) must carry a parent version.
@@ -80,7 +90,7 @@ pub fn save_delta<P: AsRef<Path>>(path: P, model: &DeltaModel) -> Result<u64> {
     Ok(buf.len() as u64)
 }
 
-/// Serialize a delta model to the v3 byte layout (the in-memory half of
+/// Serialize a delta model to the v4 byte layout (the in-memory half of
 /// [`save_delta`], split out so patch size can be measured without a file).
 pub fn save_delta_bytes(model: &DeltaModel) -> Result<Vec<u8>> {
     if model.meta.is_patch && model.meta.parent.is_none() {
@@ -110,13 +120,14 @@ pub fn save_delta_bytes(model: &DeltaModel) -> Result<Vec<u8>> {
     let table_bytes: usize = model
         .modules
         .iter()
-        .map(|m| 4 + m.id.to_string().len() + 8 + 8)
+        .map(|m| 4 + m.id.to_string().len() + 8 + 8 + 1)
         .sum();
     let mut offset = buf.len() + table_bytes;
     for (m, rec) in model.modules.iter().zip(&records) {
         put_str(&mut buf, &m.id.to_string());
         buf.extend_from_slice(&(offset as u64).to_le_bytes());
         buf.extend_from_slice(&(rec.len() as u64).to_le_bytes());
+        buf.push(m.codec.kind().code());
         offset += rec.len();
     }
     for rec in &records {
@@ -143,10 +154,12 @@ pub fn parse_delta(bytes: &[u8]) -> Result<DeltaModel> {
     let mut r = Reader { b: bytes, i: 0 };
     let (variant, base_config, meta, format) = parse_header(&mut r)?;
     let n_modules = r.u32()? as usize;
-    // v3: skip over the section table (records are parsed sequentially on a
+    // v3+: skip over the section table (records are parsed sequentially on a
     // full read; the table is for selective loads), but keep the offsets to
-    // sanity-check table/record agreement.
-    let sections = if format >= 3 { Some(parse_section_table(&mut r, n_modules)?) } else { None };
+    // sanity-check table/record agreement — and, for v4, the codec byte each
+    // record must be decoded under.
+    let sections =
+        if format >= 3 { Some(parse_section_table(&mut r, n_modules, format)?) } else { None };
     let mut modules = Vec::with_capacity(n_modules);
     for k in 0..n_modules {
         let rec_start = r.i;
@@ -160,7 +173,8 @@ pub fn parse_delta(bytes: &[u8]) -> Result<DeltaModel> {
                 );
             }
         }
-        let (module, consumed) = parse_module_record(&bytes[rec_start..])?;
+        let codec = sections.as_ref().map_or(CodecKind::PerAxis, |secs| secs[k].codec);
+        let (module, consumed) = parse_module_record(&bytes[rec_start..], codec)?;
         if let Some(secs) = &sections {
             if secs[k].len != consumed as u64 {
                 bail!("section table length mismatch for module '{}'", secs[k].name);
@@ -181,13 +195,15 @@ pub fn parse_delta(bytes: &[u8]) -> Result<DeltaModel> {
     Ok(DeltaModel { variant, base_config, meta, modules })
 }
 
-/// One entry of a v3 artifact's section table: the absolute byte range of a
-/// module record.
+/// One entry of a v3/v4 artifact's section table: the absolute byte range
+/// of a module record plus (v4) the codec it is encoded under. v3 tables
+/// carry no codec byte; their entries decode as [`CodecKind::PerAxis`].
 #[derive(Clone, Debug)]
 pub struct SectionEntry {
     pub name: String,
     pub offset: u64,
     pub len: u64,
+    pub codec: CodecKind,
 }
 
 /// Parsed artifact header + section table (no module payloads decoded).
@@ -227,7 +243,7 @@ pub fn read_index<P: AsRef<Path>>(path: P) -> Result<ArtifactIndex> {
         .with_context(|| format!("indexing {}", path.as_ref().display()))?;
     let sections = if format >= 3 {
         let n_modules = r.u32()? as usize;
-        parse_section_table(&mut r, n_modules)
+        parse_section_table(&mut r, n_modules, format)
             .with_context(|| format!("section table of {}", path.as_ref().display()))?
     } else {
         Vec::new()
@@ -276,7 +292,7 @@ pub fn load_modules<P: AsRef<Path>>(
         f.seek(SeekFrom::Start(sec.offset))?;
         f.read_exact(&mut buf)
             .with_context(|| format!("reading section '{}'", sec.name))?;
-        let (module, consumed) = parse_module_record(&buf)
+        let (module, consumed) = parse_module_record(&buf, sec.codec)
             .with_context(|| format!("decoding section '{}'", sec.name))?;
         if consumed != buf.len() {
             bail!("section '{}' has trailing bytes", sec.name);
@@ -362,22 +378,29 @@ fn parse_header(r: &mut Reader<'_>) -> Result<(String, String, ArtifactMeta, u32
     Ok((variant, base_config, meta, format))
 }
 
-fn parse_section_table(r: &mut Reader<'_>, n_modules: usize) -> Result<Vec<SectionEntry>> {
+fn parse_section_table(
+    r: &mut Reader<'_>,
+    n_modules: usize,
+    format: u32,
+) -> Result<Vec<SectionEntry>> {
     let mut sections = Vec::with_capacity(n_modules);
     for _ in 0..n_modules {
         let name = r.str()?;
         let offset = r.u64()?;
         let len = r.u64()?;
-        sections.push(SectionEntry { name, offset, len });
+        let codec = if format >= 4 { CodecKind::from_code(r.u8()?)? } else { CodecKind::PerAxis };
+        sections.push(SectionEntry { name, offset, len, codec });
     }
     Ok(sections)
 }
 
 /// Parse one contiguous module record (header, f16 scales, packed mask,
-/// trailing crc) from the start of `bytes`; returns the module and the
-/// total bytes consumed including the crc. Shared by the sequential parser
-/// and the selective section reader.
-fn parse_module_record(bytes: &[u8]) -> Result<(DeltaModule, usize)> {
+/// optional low-rank factors, trailing crc) from the start of `bytes`;
+/// returns the module and the total bytes consumed including the crc. The
+/// `codec` comes from the section table (v4) or defaults to per-axis
+/// (v1–v3). Shared by the sequential parser and the selective section
+/// reader.
+fn parse_module_record(bytes: &[u8], codec: CodecKind) -> Result<(DeltaModule, usize)> {
     let mut r = Reader { b: bytes, i: 0 };
     let name = r.str()?;
     let id = ModuleId::parse(&name)
@@ -394,11 +417,31 @@ fn parse_module_record(bytes: &[u8]) -> Result<(DeltaModule, usize)> {
     let scales = decode_f16_slice(r.take(n_scales * 2)?);
     let mask_bytes = d_out * PackedMask::words_per_row_for(d_in) * 4;
     let mask = PackedMask::from_bytes(d_out, d_in, r.take(mask_bytes)?)?;
+    let codec = match codec {
+        CodecKind::PerAxis => Codec::PerAxis,
+        CodecKind::Scalar => {
+            if axis != Axis::Scalar {
+                bail!("scalar-codec record '{name}' carries non-scalar axis {axis:?}");
+            }
+            Codec::Scalar
+        }
+        CodecKind::LowRank => {
+            let rank = r.u32()? as usize;
+            // The rank bound keeps a corrupt record from requesting an
+            // allocation beyond the (already buffer-bounded) matrix shape.
+            if rank == 0 || rank > d_out.min(d_in) {
+                bail!("low-rank record '{name}' has invalid rank {rank} for {d_out}x{d_in}");
+            }
+            let a = decode_f16_slice(r.take(rank * d_in * 2)?);
+            let b = decode_f16_slice(r.take(d_out * rank * 2)?);
+            Codec::LowRank(LowRank { rank, a, b })
+        }
+    };
     let rec_end = r.i;
     if r.u32()? != crc32::hash(&bytes[..rec_end]) {
         bail!("crc mismatch in module record '{name}' (corrupt artifact)");
     }
-    Ok((DeltaModule { id, mask, axis, scales }, r.i))
+    Ok((DeltaModule { id, mask, axis, scales, codec }, r.i))
 }
 
 /// Serialize `model` in the **v1** layout (no meta triple, no file crc)
@@ -438,8 +481,55 @@ pub fn save_delta_v2_bytes(model: &DeltaModel) -> Vec<u8> {
     buf
 }
 
-/// One contiguous module record (header, f16 scales, packed mask, record
-/// crc) — byte-identical in formats v1 through v3.
+/// Serialize `model` in the **v3** layout (section table without codec
+/// bytes) exactly as the PR-4 writer emitted it. Back-compat fixtures only;
+/// v3 cannot represent non-per-axis modules.
+pub fn save_delta_v3_bytes(model: &DeltaModel) -> Result<Vec<u8>> {
+    if model.meta.is_patch && model.meta.parent.is_none() {
+        bail!("patch artifact '{}' has no parent version", model.variant);
+    }
+    for m in &model.modules {
+        if m.codec.kind() != CodecKind::PerAxis {
+            bail!("format v3 cannot carry a {} module", m.codec.kind().label());
+        }
+    }
+    let mut records: Vec<Vec<u8>> = Vec::with_capacity(model.modules.len());
+    for m in &model.modules {
+        let mut rec = Vec::with_capacity(m.payload_bytes() as usize + 64);
+        write_module_record(&mut rec, m);
+        records.push(rec);
+    }
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&3u32.to_le_bytes());
+    put_str(&mut buf, &model.variant);
+    put_str(&mut buf, &model.base_config);
+    buf.extend_from_slice(&model.meta.version.to_le_bytes());
+    buf.extend_from_slice(&model.meta.parent.unwrap_or(0).to_le_bytes());
+    buf.extend_from_slice(&model.meta.created_unix.to_le_bytes());
+    buf.push(model.meta.is_patch as u8);
+    buf.extend_from_slice(&(model.modules.len() as u32).to_le_bytes());
+    let table_bytes: usize =
+        model.modules.iter().map(|m| 4 + m.id.to_string().len() + 8 + 8).sum();
+    let mut offset = buf.len() + table_bytes;
+    for (m, rec) in model.modules.iter().zip(&records) {
+        put_str(&mut buf, &m.id.to_string());
+        buf.extend_from_slice(&(offset as u64).to_le_bytes());
+        buf.extend_from_slice(&(rec.len() as u64).to_le_bytes());
+        offset += rec.len();
+    }
+    for rec in &records {
+        buf.extend_from_slice(rec);
+    }
+    let file_crc = crc32::hash(&buf);
+    buf.extend_from_slice(&file_crc.to_le_bytes());
+    Ok(buf)
+}
+
+/// One contiguous module record (header, f16 scales, packed mask, optional
+/// low-rank factors, record crc). Per-axis and scalar records are
+/// byte-identical in formats v1 through v4; only the low-rank codec (v4)
+/// appends its factor trailer before the crc.
 fn write_module_record(buf: &mut Vec<u8>, m: &DeltaModule) {
     let rec_start = buf.len();
     put_str(buf, &m.id.to_string());
@@ -451,6 +541,11 @@ fn write_module_record(buf: &mut Vec<u8>, m: &DeltaModule) {
     buf.extend_from_slice(&(m.scales.len() as u32).to_le_bytes());
     buf.extend_from_slice(&encode_f16_slice(&m.scales));
     buf.extend_from_slice(&m.mask.to_bytes());
+    if let Some(lr) = m.lowrank() {
+        buf.extend_from_slice(&(lr.rank as u32).to_le_bytes());
+        buf.extend_from_slice(&encode_f16_slice(&lr.a));
+        buf.extend_from_slice(&encode_f16_slice(&lr.b));
+    }
     let crc = crc32::hash(&buf[rec_start..]);
     buf.extend_from_slice(&crc.to_le_bytes());
 }
@@ -518,7 +613,13 @@ mod tests {
             let mask = PackedMask::pack(&delta, d_out, d_in);
             let n = axis.n_scales(d_out, d_in);
             let scales: Vec<f32> = (0..n).map(|_| rng.uniform_in(0.01, 0.5)).collect();
-            modules.push(DeltaModule { id: ModuleId { layer, kind }, mask, axis, scales });
+            modules.push(DeltaModule {
+                id: ModuleId { layer, kind },
+                mask,
+                axis,
+                scales,
+                codec: Codec::PerAxis,
+            });
         }
         let mut model = DeltaModel::new("ft-a", "tiny", modules);
         model.meta = ArtifactMeta {
@@ -528,6 +629,38 @@ mod tests {
             is_patch: false,
         };
         model
+    }
+
+    /// A deterministic model mixing all three codecs: per-axis, scalar
+    /// (BitDelta) and low-rank residual.
+    fn sample_model_mixed() -> DeltaModel {
+        let mut rng = Rng::new(7);
+        let mut modules = Vec::new();
+        for (layer, kind, axis, codec_kind, d_out, d_in) in [
+            (0usize, ProjKind::Q, Axis::Row, CodecKind::PerAxis, 32usize, 48usize),
+            (0, ProjKind::K, Axis::Scalar, CodecKind::Scalar, 32, 48),
+            (1, ProjKind::Up, Axis::Row, CodecKind::LowRank, 40, 32),
+        ] {
+            let delta: Vec<f32> =
+                (0..d_out * d_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mask = PackedMask::pack(&delta, d_out, d_in);
+            let n = axis.n_scales(d_out, d_in);
+            let scales: Vec<f32> = (0..n).map(|_| rng.uniform_in(0.01, 0.5)).collect();
+            let codec = match codec_kind {
+                CodecKind::PerAxis => Codec::PerAxis,
+                CodecKind::Scalar => Codec::Scalar,
+                CodecKind::LowRank => {
+                    let rank = 3;
+                    Codec::LowRank(LowRank {
+                        rank,
+                        a: (0..rank * d_in).map(|_| rng.normal_f32(0.0, 0.1)).collect(),
+                        b: (0..d_out * rank).map(|_| rng.normal_f32(0.0, 0.1)).collect(),
+                    })
+                }
+            };
+            modules.push(DeltaModule { id: ModuleId { layer, kind }, mask, axis, scales, codec });
+        }
+        DeltaModel::new("ft-mixed", "tiny", modules)
     }
 
     fn tmp(name: &str) -> std::path::PathBuf {
@@ -774,5 +907,189 @@ mod tests {
         bytes[8] = 99; // format word
         let err = parse_delta(&bytes).unwrap_err().to_string();
         assert!(err.contains("unsupported delta format"), "{err}");
+    }
+
+    #[test]
+    fn mixed_codec_artifact_roundtrips_bitwise() {
+        let model = sample_model_mixed();
+        let bytes = save_delta_bytes(&model).unwrap();
+        let loaded = parse_delta(&bytes).unwrap();
+        assert_eq!(loaded.modules.len(), model.modules.len());
+        for (a, b) in loaded.modules.iter().zip(&model.modules) {
+            assert_eq!(a.codec.kind(), b.codec.kind());
+            assert!(a.content_eq(b), "module {} changed across the roundtrip", b.id);
+        }
+        // The decode→re-encode cycle is bitwise stable (f16 quantization is
+        // idempotent), so replication can compare artifacts byte-for-byte.
+        assert_eq!(save_delta_bytes(&loaded).unwrap(), bytes);
+    }
+
+    #[test]
+    fn mixed_codec_selective_read_decodes_lowrank_section() {
+        let model = sample_model_mixed();
+        let p = tmp("mixed_sections.pawd");
+        save_delta(&p, &model).unwrap();
+        let index = read_index(&p).unwrap();
+        assert_eq!(
+            index.sections.iter().map(|s| s.codec).collect::<Vec<_>>(),
+            vec![CodecKind::PerAxis, CodecKind::Scalar, CodecKind::LowRank]
+        );
+        let got = load_modules(&p, &index, &[2]).unwrap();
+        assert!(got[0].content_eq(&model.modules[2]));
+        let lr = got[0].lowrank().expect("lowrank payload survived the selective read");
+        assert_eq!(lr.rank, 3);
+    }
+
+    #[test]
+    fn v3_artifacts_decode_as_per_axis_through_codec_path() {
+        // A v3 fixture (codec-less section table) must decode every module
+        // into the per-axis codec with byte-identical payloads: re-encoding
+        // the loaded model as v3 reproduces the fixture exactly.
+        let model = sample_model();
+        let v3 = save_delta_v3_bytes(&model).unwrap();
+        let loaded = parse_delta(&v3).unwrap();
+        assert_eq!(loaded.meta, model.meta);
+        for (a, b) in loaded.modules.iter().zip(&model.modules) {
+            assert_eq!(a.codec.kind(), CodecKind::PerAxis);
+            assert!(a.content_eq(b));
+        }
+        assert_eq!(save_delta_v3_bytes(&loaded).unwrap(), v3, "v3 decode→encode not bitwise");
+        // Same proof for the v1 and v2 fixtures.
+        for legacy in [save_delta_v1_bytes(&model), save_delta_v2_bytes(&model)] {
+            let loaded = parse_delta(&legacy).unwrap();
+            for m in &loaded.modules {
+                assert_eq!(m.codec.kind(), CodecKind::PerAxis);
+            }
+        }
+        // And v3 cannot carry the new codecs at all.
+        assert!(save_delta_v3_bytes(&sample_model_mixed()).is_err());
+    }
+
+    #[test]
+    fn all_per_axis_v4_records_byte_identical_to_v3() {
+        // The v4 bump only adds the table codec byte: for an all-per-axis
+        // model every module *record* must be the exact bytes v3 wrote.
+        let model = sample_model();
+        let v4 = save_delta_bytes(&model).unwrap();
+        let v3 = save_delta_v3_bytes(&model).unwrap();
+        let idx4 = parse_delta_index(&v4);
+        let idx3 = parse_delta_index(&v3);
+        for (s4, s3) in idx4.iter().zip(&idx3) {
+            let r4 = &v4[s4.offset as usize..(s4.offset + s4.len) as usize];
+            let r3 = &v3[s3.offset as usize..(s3.offset + s3.len) as usize];
+            assert_eq!(r4, r3, "record bytes for '{}' drifted from v3", s4.name);
+        }
+    }
+
+    /// Test helper: section table of an in-memory artifact.
+    fn parse_delta_index(bytes: &[u8]) -> Vec<SectionEntry> {
+        let mut r = Reader { b: bytes, i: 0 };
+        let (_, _, _, format) = parse_header(&mut r).unwrap();
+        let n = r.u32().unwrap() as usize;
+        parse_section_table(&mut r, n, format).unwrap()
+    }
+
+    #[test]
+    fn v3_fixed_golden_prefix_is_stable() {
+        // Pin the module-less v3 layout the same way v1/v2 are pinned, so
+        // the legacy writer (and thus the compat reader) cannot drift.
+        let model = DeltaModel::new("v", "c", vec![]);
+        let bytes = save_delta_v3_bytes(&model).unwrap();
+        let mut golden: Vec<u8> = vec![
+            b'P', b'A', b'W', b'D', b'E', b'L', b'T', b'A', // magic
+            3, 0, 0, 0, // format = 3
+            1, 0, 0, 0, b'v', // variant
+            1, 0, 0, 0, b'c', // base_config
+            1, 0, 0, 0, // version = 1
+            0, 0, 0, 0, // parent = none
+            0, 0, 0, 0, 0, 0, 0, 0, // created_unix = 0
+            0, // kind = full
+            0, 0, 0, 0, // n_modules = 0
+        ];
+        let crc = crc32::hash(&golden);
+        golden.extend_from_slice(&crc.to_le_bytes());
+        assert_eq!(bytes, golden);
+        assert!(parse_delta(&bytes).is_ok());
+    }
+
+    #[test]
+    fn v4_fixed_golden_prefix_is_stable() {
+        // The current writer's module-less layout, pinned byte-for-byte.
+        let model = DeltaModel::new("v", "c", vec![]);
+        let bytes = save_delta_bytes(&model).unwrap();
+        let mut golden: Vec<u8> = vec![
+            b'P', b'A', b'W', b'D', b'E', b'L', b'T', b'A', // magic
+            4, 0, 0, 0, // format = 4
+            1, 0, 0, 0, b'v', // variant
+            1, 0, 0, 0, b'c', // base_config
+            1, 0, 0, 0, // version = 1
+            0, 0, 0, 0, // parent = none
+            0, 0, 0, 0, 0, 0, 0, 0, // created_unix = 0
+            0, // kind = full
+            0, 0, 0, 0, // n_modules = 0
+        ];
+        let crc = crc32::hash(&golden);
+        golden.extend_from_slice(&crc.to_le_bytes());
+        assert_eq!(bytes, golden);
+        assert!(parse_delta(&bytes).is_ok());
+    }
+
+    #[test]
+    fn v4_golden_table_entry_layout_carries_codec_byte() {
+        // Pin the v4 section-table entry layout (name str | offset u64 |
+        // len u64 | codec u8) against the serialized mixed-codec artifact:
+        // walk the raw bytes by hand and compare each field to the index.
+        let model = sample_model_mixed();
+        let bytes = save_delta_bytes(&model).unwrap();
+        let index = parse_delta_index(&bytes);
+        let mut off = 8 + 4; // magic + format
+        for s in ["ft-mixed", "tiny"] {
+            off += 4 + s.len();
+        }
+        off += 4 + 4 + 8 + 1 + 4; // version + parent + created + kind + n_modules
+        for (k, sec) in index.iter().enumerate() {
+            let name = model.modules[k].id.to_string();
+            let nlen =
+                u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+            assert_eq!(nlen, name.len());
+            assert_eq!(&bytes[off + 4..off + 4 + nlen], name.as_bytes());
+            off += 4 + nlen;
+            assert_eq!(
+                u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()),
+                sec.offset
+            );
+            off += 8;
+            assert_eq!(
+                u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()),
+                sec.len
+            );
+            off += 8;
+            assert_eq!(bytes[off], model.modules[k].codec.kind().code());
+            off += 1;
+        }
+        // The table ends exactly where the first record begins.
+        assert_eq!(off as u64, index[0].offset);
+    }
+
+    #[test]
+    fn lowrank_record_with_invalid_rank_rejected() {
+        let model = sample_model_mixed();
+        let m = &model.modules[2];
+        let lr = m.lowrank().unwrap();
+        let mut rec = Vec::new();
+        write_module_record(&mut rec, m);
+        // Locate the rank field (just before the f16 factors + crc) and
+        // zero it, re-stamping the record crc so only the rank check trips.
+        let rank_off = rec.len() - 4 - 2 * (lr.a.len() + lr.b.len()) - 4;
+        assert_eq!(
+            u32::from_le_bytes(rec[rank_off..rank_off + 4].try_into().unwrap()),
+            lr.rank as u32
+        );
+        rec[rank_off..rank_off + 4].copy_from_slice(&0u32.to_le_bytes());
+        let crc_at = rec.len() - 4;
+        let crc = crc32::hash(&rec[..crc_at]);
+        rec[crc_at..].copy_from_slice(&crc.to_le_bytes());
+        let err = parse_module_record(&rec, CodecKind::LowRank).unwrap_err().to_string();
+        assert!(err.contains("invalid rank"), "{err}");
     }
 }

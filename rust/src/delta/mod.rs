@@ -6,8 +6,11 @@
 //! * [`calibrate`] — activation-aware scale fitting (AdamW per the paper,
 //!   plus exact closed-form — the objective is quadratic in `v`).
 //! * [`cache`] — calibration (X, Y) caches via forward taps (Alg. 3).
+//! * [`codec`] — the pluggable [`DeltaCodec`](codec::DeltaCodec) trait and
+//!   registry: per-axis (the paper), BitDelta-style scalar, and a low-rank
+//!   residual codec, plus per-module auto-selection by calibration error.
 //! * [`compress`] — per-module row/col selection (Alg. 6) and the
-//!   layer-by-layer model sweep (Alg. 1).
+//!   layer-by-layer model sweep (Alg. 1), dispatching through the codecs.
 //! * [`apply`] — the serving hot path: `Ŵ = W_b + v ⊙ B` materialization,
 //!   in-place swap/revert.
 //! * [`format`] — PAWD on-disk artifact (v3: section table + patch
@@ -20,6 +23,7 @@ pub mod apply;
 pub mod cache;
 pub mod calibrate;
 pub mod chain;
+pub mod codec;
 pub mod compress;
 pub mod format;
 pub mod pack;
@@ -27,6 +31,10 @@ pub mod stats;
 pub mod types;
 
 pub use chain::{ChainLink, LoadStats, MAX_CHAIN_DEPTH};
-pub use compress::{compress_model, compress_module, CompressOptions, FitMode, ModuleReport};
+pub use codec::{codec_for, DeltaCodec};
+pub use compress::{
+    compress_model, compress_module, CodecCandidate, CodecChoice, CompressOptions, FitMode,
+    ModuleReport,
+};
 pub use pack::PackedMask;
-pub use types::{ArtifactMeta, Axis, DeltaModel, DeltaModule};
+pub use types::{ArtifactMeta, Axis, Codec, CodecKind, DeltaModel, DeltaModule};

@@ -70,6 +70,86 @@ impl Axis {
     }
 }
 
+/// Codec discriminant as carried on the wire (format v4 section table) and
+/// in admin/inspect surfaces. [`Codec`] holds the per-module payload; this
+/// enum is the cheap tag shared by format, registry, and reporting code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CodecKind {
+    /// The paper's sign-bitplane + per-axis FP16 scales (format v1–v3 and
+    /// the v4 default).
+    PerAxis,
+    /// BitDelta-style scalar scale (Liu et al., 2024): the per-axis record
+    /// layout restricted to `Axis::Scalar`.
+    Scalar,
+    /// Per-axis bitplane plus a low-rank residual correction, executed as
+    /// `y += (x·Aᵀ)·Bᵀ` and never densified (D-QRELO-style residual
+    /// repair).
+    LowRank,
+}
+
+impl CodecKind {
+    pub const ALL: [CodecKind; 3] = [CodecKind::PerAxis, CodecKind::Scalar, CodecKind::LowRank];
+
+    /// Wire byte in the format-v4 section table.
+    pub fn code(&self) -> u8 {
+        match self {
+            CodecKind::PerAxis => 0,
+            CodecKind::Scalar => 1,
+            CodecKind::LowRank => 2,
+        }
+    }
+
+    pub fn from_code(code: u8) -> anyhow::Result<CodecKind> {
+        Ok(match code {
+            0 => CodecKind::PerAxis,
+            1 => CodecKind::Scalar,
+            2 => CodecKind::LowRank,
+            other => anyhow::bail!("unknown codec code {other}"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CodecKind::PerAxis => "per-axis",
+            CodecKind::Scalar => "scalar",
+            CodecKind::LowRank => "lowrank",
+        }
+    }
+}
+
+/// Low-rank residual factors for the [`CodecKind::LowRank`] codec:
+/// `Δ̂ = v ⊙ B + Bᵣ·A` with `A = [rank, d_in]` and `Bᵣ = [d_out, rank]`,
+/// both row-major. Stored FP16 on disk, f32 in memory; the exec layer adds
+/// the term as `y += (x·Aᵀ)·Bᵣᵀ` without ever densifying `Bᵣ·A`.
+#[derive(Clone, Debug)]
+pub struct LowRank {
+    pub rank: usize,
+    /// `[rank, d_in]` row-major input-side factor.
+    pub a: Vec<f32>,
+    /// `[d_out, rank]` row-major output-side factor.
+    pub b: Vec<f32>,
+}
+
+/// Per-module codec payload. `PerAxis` and `Scalar` carry no extra data —
+/// their entire payload lives in the shared mask/scales fields of
+/// [`DeltaModule`]; `LowRank` adds the residual factors.
+#[derive(Clone, Debug)]
+pub enum Codec {
+    PerAxis,
+    Scalar,
+    LowRank(LowRank),
+}
+
+impl Codec {
+    pub fn kind(&self) -> CodecKind {
+        match self {
+            Codec::PerAxis => CodecKind::PerAxis,
+            Codec::Scalar => CodecKind::Scalar,
+            Codec::LowRank(_) => CodecKind::LowRank,
+        }
+    }
+}
+
 /// Compressed delta for one patchable module.
 #[derive(Clone, Debug)]
 pub struct DeltaModule {
@@ -79,6 +159,9 @@ pub struct DeltaModule {
     /// Scale vector, length `axis.n_scales(d_out, d_in)`. Stored FP16 on
     /// disk (paper: "vectors v are FP16"), f32 in memory.
     pub scales: Vec<f32>,
+    /// Codec this module is encoded under; `Codec::PerAxis` for every
+    /// v1–v3 artifact and the v4 default.
+    pub codec: Codec,
 }
 
 impl DeltaModule {
@@ -101,28 +184,60 @@ impl DeltaModule {
         }
     }
 
-    /// On-disk payload bytes (mask + FP16 scales), excluding record header.
+    /// The low-rank residual factors, when this module carries them.
+    #[inline]
+    pub fn lowrank(&self) -> Option<&LowRank> {
+        match &self.codec {
+            Codec::LowRank(lr) => Some(lr),
+            _ => None,
+        }
+    }
+
+    /// On-disk payload bytes (mask + FP16 scales, plus FP16 low-rank
+    /// factors for the low-rank codec), excluding record header.
     pub fn payload_bytes(&self) -> u64 {
-        self.mask.n_bytes() + (self.scales.len() * 2) as u64
+        let base = self.mask.n_bytes() + (self.scales.len() * 2) as u64;
+        match &self.codec {
+            Codec::LowRank(lr) => base + 4 + ((lr.a.len() + lr.b.len()) * 2) as u64,
+            _ => base,
+        }
     }
 
-    /// In-memory bytes when served packed (mask words + f32 scales) — the
-    /// single source of truth for the exec layer's residency accounting.
+    /// In-memory bytes when served packed (mask words + f32 scales + f32
+    /// low-rank factors) — the single source of truth for the exec layer's
+    /// residency accounting.
     pub fn resident_bytes(&self) -> u64 {
-        self.mask.n_bytes() + (self.scales.len() * 4) as u64
+        let base = self.mask.n_bytes() + (self.scales.len() * 4) as u64;
+        match &self.codec {
+            Codec::LowRank(lr) => base + ((lr.a.len() + lr.b.len()) * 4) as u64,
+            _ => base,
+        }
     }
 
-    /// On-disk content equality: same module, axis, mask bits and the same
-    /// *FP16* scale bits. This is what the incremental publisher diffs on —
-    /// two modules that serialize to identical record payloads are "the
-    /// same" even when their in-memory f32 scales differ below f16
-    /// precision, so a republish of unchanged weights produces an empty
-    /// patch instead of spuriously shipping every module.
+    /// On-disk content equality: same module, codec, axis, mask bits and
+    /// the same *FP16* scale (and low-rank factor) bits. This is what the
+    /// incremental publisher diffs on — two modules that serialize to
+    /// identical record payloads are "the same" even when their in-memory
+    /// f32 values differ below f16 precision, so a republish of unchanged
+    /// weights produces an empty patch instead of spuriously shipping every
+    /// module.
     pub fn content_eq(&self, other: &DeltaModule) -> bool {
-        self.id == other.id
-            && self.axis == other.axis
-            && self.mask == other.mask
-            && encode_f16_slice(&self.scales) == encode_f16_slice(&other.scales)
+        if self.id != other.id
+            || self.codec.kind() != other.codec.kind()
+            || self.axis != other.axis
+            || self.mask != other.mask
+            || encode_f16_slice(&self.scales) != encode_f16_slice(&other.scales)
+        {
+            return false;
+        }
+        match (&self.codec, &other.codec) {
+            (Codec::LowRank(a), Codec::LowRank(b)) => {
+                a.rank == b.rank
+                    && encode_f16_slice(&a.a) == encode_f16_slice(&b.a)
+                    && encode_f16_slice(&a.b) == encode_f16_slice(&b.b)
+            }
+            _ => true,
+        }
     }
 }
 
@@ -250,10 +365,43 @@ mod tests {
             mask,
             axis: Axis::Group(2),
             scales: vec![10.0, 20.0, 30.0],
+            codec: Codec::PerAxis,
         };
         assert_eq!(m.scale_at(0, 3), 10.0);
         assert_eq!(m.scale_at(1, 0), 10.0);
         assert_eq!(m.scale_at(2, 0), 20.0);
         assert_eq!(m.scale_at(5, 1), 30.0);
+    }
+
+    #[test]
+    fn codec_code_roundtrip() {
+        for k in CodecKind::ALL {
+            assert_eq!(CodecKind::from_code(k.code()).unwrap(), k);
+        }
+        assert!(CodecKind::from_code(9).is_err());
+    }
+
+    #[test]
+    fn lowrank_bytes_and_content_eq() {
+        use crate::model::{ModuleId, ProjKind};
+        let mk = |codec: Codec| DeltaModule {
+            id: ModuleId { layer: 0, kind: ProjKind::Q },
+            mask: PackedMask::pack(&vec![1.0; 6 * 4], 6, 4),
+            axis: Axis::Row,
+            scales: vec![1.0; 6],
+            codec,
+        };
+        let pa = mk(Codec::PerAxis);
+        let lr = mk(Codec::LowRank(LowRank {
+            rank: 2,
+            a: vec![0.5; 2 * 4],
+            b: vec![0.25; 6 * 2],
+        }));
+        // Codec kinds differ even though mask/scales match.
+        assert!(!pa.content_eq(&lr));
+        assert!(lr.content_eq(&lr.clone()));
+        // Low-rank payload: +4 rank header + 2 bytes per f16 factor entry.
+        assert_eq!(lr.payload_bytes(), pa.payload_bytes() + 4 + 2 * (2 * 4 + 6 * 2));
+        assert_eq!(lr.resident_bytes(), pa.resident_bytes() + 4 * (2 * 4 + 6 * 2));
     }
 }

@@ -1,10 +1,18 @@
 //! Teacher-fidelity metrics: how closely a compressed student reproduces
 //! the fine-tuned teacher's *behaviour* (the paper's "preserve the function
 //! the network computes" objective, §2 "Prior evidence against weight
-//! reconstruction").
+//! reconstruction") — plus the per-module codec shoot-out harness
+//! ([`codec_shootout`]): reconstruction error vs artifact bytes vs fused
+//! throughput for every registered [`DeltaCodec`](crate::delta::DeltaCodec).
 
-use crate::model::{FlatParams, Transformer};
+use crate::delta::cache::build_layer_caches;
+use crate::delta::codec::codec_for;
+use crate::delta::compress::CompressOptions;
+use crate::delta::types::{Axis, CodecKind, DeltaModule};
+use crate::exec::{FusedDeltaLinear, LinearOp};
+use crate::model::{FlatParams, ModuleId, Transformer};
 use crate::tensor::ops::log_softmax_into;
+use crate::tensor::Tensor2;
 
 /// Fidelity of `student` against `teacher` measured on a set of documents.
 #[derive(Clone, Debug, Default)]
@@ -71,6 +79,124 @@ pub fn fidelity(
     }
 }
 
+/// One codec's measurements for one module in the shoot-out.
+#[derive(Clone, Debug)]
+pub struct ShootoutRow {
+    pub kind: CodecKind,
+    /// Held-out validation MSE of the reconstructed module.
+    pub val_mse: f64,
+    /// Packed artifact bytes for this module.
+    pub payload_bytes: u64,
+    /// Fused single-module forward throughput (activation rows / second).
+    pub fused_rows_per_s: f64,
+}
+
+/// Shoot-out verdict for one module: every codec's row plus the kind the
+/// calibration-error-driven selector would publish.
+#[derive(Clone, Debug)]
+pub struct ModuleShootout {
+    pub id: ModuleId,
+    pub rows: Vec<ShootoutRow>,
+    pub selected: CodecKind,
+}
+
+/// Time a fused forward through one packed module (rows/second over a
+/// deterministic activation batch). Wall-clock, so treat as indicative.
+fn fused_rows_per_s(w_base: &[f32], m: &DeltaModule, iters: usize) -> f64 {
+    let rows = 32;
+    let d_in = m.d_in();
+    let mut x = Tensor2::zeros(rows, d_in);
+    for (i, v) in x.data.iter_mut().enumerate() {
+        *v = ((i % 37) as f32 - 18.0) * 0.05;
+    }
+    let lin = FusedDeltaLinear::new(w_base, m);
+    let mut y = lin.forward(&x); // warm-up + output reuse
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        lin.forward_into(&x, &mut y);
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    (rows * iters) as f64 / secs
+}
+
+/// Run the per-module codec shoot-out over every patchable module: encode
+/// under each registered codec, measure held-out reconstruction error,
+/// packed bytes, and fused throughput, and record which codec the `auto`
+/// selector would publish.
+///
+/// The per-axis slate is extended with [`Axis::Scalar`] so its validation
+/// MSE is a minimum over a superset of the scalar codec's single candidate
+/// — per-axis ≤ scalar therefore holds on every calibrated module by
+/// construction of the selection rule (they share the same val shard).
+/// Selection keeps per-axis unless a challenger is strictly better.
+pub fn codec_shootout(
+    base: &FlatParams,
+    finetuned: &FlatParams,
+    calib_docs: &[Vec<u8>],
+    opts: &CompressOptions,
+) -> Vec<ModuleShootout> {
+    let cfg = base.cfg().clone();
+    let tf = Transformer::new(&cfg);
+    let mut pa_opts = opts.clone();
+    if !pa_opts.axes.contains(&Axis::Scalar) {
+        pa_opts.axes.push(Axis::Scalar);
+    }
+    let mut out = Vec::with_capacity(cfg.n_patchable());
+    for layer in 0..cfg.n_layers {
+        let caches =
+            build_layer_caches(finetuned, base, &tf, layer, calib_docs, opts.max_cache_rows);
+        for kind in crate::model::ProjKind::ALL {
+            let id = ModuleId { layer, kind };
+            let w_base = base.module(id);
+            let w_ft = finetuned.module(id);
+            let mut rows = Vec::with_capacity(CodecKind::ALL.len());
+            for &ck in CodecKind::ALL.iter() {
+                let (m, rep) = codec_for(ck).encode(id, w_base, w_ft, &caches[&kind], &pa_opts);
+                let cand = &rep.codec_candidates[0];
+                rows.push(ShootoutRow {
+                    kind: ck,
+                    val_mse: cand.val_mse,
+                    payload_bytes: cand.payload_bytes,
+                    fused_rows_per_s: fused_rows_per_s(w_base, &m, 8),
+                });
+            }
+            // Same incumbent rule as `encode_auto`: per-axis wins ties.
+            let mut selected = 0;
+            for (i, r) in rows.iter().enumerate().skip(1) {
+                if r.val_mse < rows[selected].val_mse {
+                    selected = i;
+                }
+            }
+            out.push(ModuleShootout { id, selected: rows[selected].kind, rows });
+        }
+    }
+    out
+}
+
+/// Render the shoot-out as an aligned text table (one line per module ×
+/// codec; the selected codec is starred).
+pub fn render_shootout(results: &[ModuleShootout]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<12} {:>9} {:>14} {:>12} {:>14} sel\n",
+        "module", "codec", "val-mse", "bytes", "fused-rows/s"
+    ));
+    for ms in results {
+        for r in &ms.rows {
+            s.push_str(&format!(
+                "{:<12} {:>9} {:>14.6e} {:>12} {:>14.0} {}\n",
+                ms.id.to_string(),
+                r.kind.label(),
+                r.val_mse,
+                r.payload_bytes,
+                r.fused_rows_per_s,
+                if r.kind == ms.selected { "*" } else { "" }
+            ));
+        }
+    }
+    s
+}
+
 fn argmax(xs: &[f32]) -> usize {
     let mut best = (f32::NEG_INFINITY, 0usize);
     for (i, &x) in xs.iter().enumerate() {
@@ -119,6 +245,50 @@ mod tests {
         assert!(fs.logit_mse < fl.logit_mse);
         assert!(fs.kl < fl.kl);
         assert!(fs.agreement >= fl.agreement);
+    }
+
+    #[test]
+    fn shootout_per_axis_never_loses_to_scalar_and_auto_never_loses_to_per_axis() {
+        use crate::delta::compress::FitMode;
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = FlatParams::init(&cfg, 10);
+        let ft = synth_finetune(
+            &base,
+            &SynthDeltaSpec { magnitude: 0.02, anisotropy: 1.2, axis_bias: 0.8, seed: 20 },
+        );
+        let docs: Vec<Vec<u8>> = (0..4)
+            .map(|i| (0..30).map(|t| ((t * 7 + i * 13) % 250 + 1) as u8).collect())
+            .collect();
+        let opts = CompressOptions { fit: FitMode::ClosedForm, ..Default::default() };
+        let results = codec_shootout(&base, &ft, &docs, &opts);
+        assert_eq!(results.len(), cfg.n_patchable());
+        for ms in &results {
+            let by = |k: CodecKind| ms.rows.iter().find(|r| r.kind == k).unwrap();
+            let pa = by(CodecKind::PerAxis);
+            let sc = by(CodecKind::Scalar);
+            let sel = by(ms.selected);
+            assert!(
+                pa.val_mse <= sc.val_mse,
+                "{}: per-axis {} must not lose to scalar {}",
+                ms.id,
+                pa.val_mse,
+                sc.val_mse
+            );
+            assert!(
+                sel.val_mse <= pa.val_mse,
+                "{}: selected {:?} ({}) worse than per-axis ({})",
+                ms.id,
+                ms.selected,
+                sel.val_mse,
+                pa.val_mse
+            );
+            for r in &ms.rows {
+                assert!(r.fused_rows_per_s > 0.0);
+                assert!(r.payload_bytes > 0);
+            }
+        }
+        let rendered = render_shootout(&results);
+        assert!(rendered.contains("per-axis") && rendered.contains('*'));
     }
 
     #[test]

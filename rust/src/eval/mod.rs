@@ -4,4 +4,5 @@
 pub mod fidelity;
 pub mod harness;
 
+pub use fidelity::{codec_shootout, render_shootout, ModuleShootout, ShootoutRow};
 pub use harness::{evaluate_suite, mc_accuracy, SuiteResult};

@@ -163,7 +163,7 @@ impl BatchSource for BatchPlan {
 mod tests {
     use super::*;
     use crate::delta::pack::PackedMask;
-    use crate::delta::types::{Axis, DeltaModel, DeltaModule};
+    use crate::delta::types::{Axis, Codec, DeltaModel, DeltaModule};
     use crate::exec::FusedDeltaLinear;
     use crate::model::config::ModelConfig;
     use crate::util::rng::Rng;
@@ -183,6 +183,7 @@ mod tests {
                 mask: PackedMask::pack(&delta, rows, cols),
                 axis,
                 scales: (0..axis.n_scales(rows, cols)).map(|_| r.uniform_in(0.01, 0.1)).collect(),
+                codec: Codec::PerAxis,
             });
         }
         let delta = DeltaModel::new(format!("s{seed}"), cfg.name.clone(), modules);

@@ -23,6 +23,14 @@
 //! interleave over the same 8-element groups, so the fused path reads each
 //! activation row once per output row where base-then-delta reads it twice
 //! — bitwise-equal to the two-pass result by construction.
+//!
+//! Modules under the low-rank codec ([`Codec::LowRank`]
+//! (crate::delta::types::Codec)) carry residual factors `A: [rank, d_in]`,
+//! `B: [d_out, rank]`; their term is added as `y += (x·Aᵀ)·Bᵀ` — rank-space
+//! coordinates `t = x·Aᵀ` computed once per activation row, then one
+//! rank-length dot per output element. The dense `B·A` product never
+//! exists, and [`FusedDeltaLinear`] and [`add_delta_rows`] use the *same*
+//! accumulation order so the two remain bitwise-equal per element.
 
 use super::counters;
 use crate::delta::types::{Axis, DeltaModule};
@@ -144,6 +152,7 @@ impl LinearOp for FusedDeltaLinear<'_> {
             Axis::Col => {
                 par::parallel_rows_mut(&mut y.data, x.rows, d_out, 8, |row0, chunk| {
                     let mut z = vec![0f32; d_in]; // v ⊙ x, reused across rows
+                    let mut t = lowrank_scratch(m);
                     for (ri, yrow) in chunk.chunks_mut(d_out).enumerate() {
                         let xrow = x.row(row0 + ri);
                         for ((zi, &xi), &vi) in z.iter_mut().zip(xrow).zip(&m.scales) {
@@ -158,6 +167,7 @@ impl LinearOp for FusedDeltaLinear<'_> {
                             );
                             *o = d + s;
                         }
+                        add_lowrank_row(m, xrow, yrow, &mut t);
                     }
                 });
             }
@@ -165,6 +175,7 @@ impl LinearOp for FusedDeltaLinear<'_> {
                 // Row / Scalar / Group: scale constant within each mask row
                 // (scale_at ignores the column index for these axes).
                 par::parallel_rows_mut(&mut y.data, x.rows, d_out, 8, |row0, chunk| {
+                    let mut t = lowrank_scratch(m);
                     for (ri, yrow) in chunk.chunks_mut(d_out).enumerate() {
                         let xrow = x.row(row0 + ri);
                         for (j, o) in yrow.iter_mut().enumerate() {
@@ -176,6 +187,7 @@ impl LinearOp for FusedDeltaLinear<'_> {
                             );
                             *o = d + m.scale_at(j, 0) * s;
                         }
+                        add_lowrank_row(m, xrow, yrow, &mut t);
                     }
                 });
             }
@@ -184,6 +196,30 @@ impl LinearOp for FusedDeltaLinear<'_> {
 
     fn resident_bytes(&self) -> u64 {
         self.module.resident_bytes()
+    }
+}
+
+/// Rank-space scratch for a module's low-rank term (empty for modules
+/// without one), allocated once per worker chunk and reused across rows.
+#[inline]
+fn lowrank_scratch(m: &DeltaModule) -> Vec<f32> {
+    m.lowrank().map_or_else(Vec::new, |lr| vec![0f32; lr.rank])
+}
+
+/// Add the low-rank residual term `(xrow·Aᵀ)·Bᵀ` of `m` (if any) onto one
+/// output row: `t[k] = ⟨xrow, A[k,·]⟩` once per activation row, then
+/// `y[j] += ⟨B[j,·], t⟩`. Exactly one `+=` per output element, and the
+/// same [`dot`] reduction everywhere — [`FusedDeltaLinear`] and
+/// [`add_delta_rows`] both call this, so their outputs stay bitwise-equal.
+#[inline]
+fn add_lowrank_row(m: &DeltaModule, xrow: &[f32], yrow: &mut [f32], t: &mut [f32]) {
+    let Some(lr) = m.lowrank() else { return };
+    let d_in = m.d_in();
+    for (k, tk) in t.iter_mut().enumerate() {
+        *tk = dot(xrow, &lr.a[k * d_in..(k + 1) * d_in]);
+    }
+    for (j, o) in yrow.iter_mut().enumerate() {
+        *o += dot(&lr.b[j * lr.rank..(j + 1) * lr.rank], t);
     }
 }
 
@@ -406,6 +442,7 @@ pub fn add_delta_rows(m: &DeltaModule, x: &Tensor2, y: &mut Tensor2, rows: std::
         Axis::Col => {
             par::parallel_rows_mut(y_slice, n_rows, d_out, 8, |row0, chunk| {
                 let mut z = vec![0f32; d_in]; // v ⊙ x, reused across rows
+                let mut t = lowrank_scratch(m);
                 for (ri, yrow) in chunk.chunks_mut(d_out).enumerate() {
                     let xrow = x.row(rows.start + row0 + ri);
                     for ((zi, &xi), &vi) in z.iter_mut().zip(xrow).zip(&m.scales) {
@@ -414,16 +451,19 @@ pub fn add_delta_rows(m: &DeltaModule, x: &Tensor2, y: &mut Tensor2, rows: std::
                     for (j, o) in yrow.iter_mut().enumerate() {
                         *o += signed_sum(&z, m.mask.row_words(j));
                     }
+                    add_lowrank_row(m, xrow, yrow, &mut t);
                 }
             });
         }
         _ => {
             par::parallel_rows_mut(y_slice, n_rows, d_out, 8, |row0, chunk| {
+                let mut t = lowrank_scratch(m);
                 for (ri, yrow) in chunk.chunks_mut(d_out).enumerate() {
                     let xrow = x.row(rows.start + row0 + ri);
                     for (j, o) in yrow.iter_mut().enumerate() {
                         *o += m.scale_at(j, 0) * signed_sum(xrow, m.mask.row_words(j));
                     }
+                    add_lowrank_row(m, xrow, yrow, &mut t);
                 }
             });
         }
@@ -471,6 +511,7 @@ impl LinearOp for AnyLinear<'_> {
 mod tests {
     use super::*;
     use crate::delta::pack::PackedMask;
+    use crate::delta::types::{Codec, CodecKind, LowRank};
     use crate::model::{ModuleId, ProjKind};
     use crate::util::rng::Rng;
 
@@ -481,7 +522,39 @@ mod tests {
         let mask = PackedMask::pack(&delta, d_out, d_in);
         let scales: Vec<f32> =
             (0..axis.n_scales(d_out, d_in)).map(|_| r.uniform_in(0.01, 0.2)).collect();
-        (base, DeltaModule { id: ModuleId { layer: 0, kind: ProjKind::Q }, mask, axis, scales })
+        let m = DeltaModule {
+            id: ModuleId { layer: 0, kind: ProjKind::Q },
+            mask,
+            axis,
+            scales,
+            codec: Codec::PerAxis,
+        };
+        (base, m)
+    }
+
+    /// `mk_module` re-tagged under `codec`; low-rank gets random factors.
+    fn mk_module_codec(
+        d_out: usize,
+        d_in: usize,
+        codec: CodecKind,
+        seed: u64,
+    ) -> (Vec<f32>, DeltaModule) {
+        let axis = if codec == CodecKind::Scalar { Axis::Scalar } else { Axis::Row };
+        let (base, mut m) = mk_module(d_out, d_in, axis, seed);
+        let mut r = Rng::new(seed ^ 0x5eed);
+        m.codec = match codec {
+            CodecKind::PerAxis => Codec::PerAxis,
+            CodecKind::Scalar => Codec::Scalar,
+            CodecKind::LowRank => {
+                let rank = 3.min(d_out).min(d_in);
+                Codec::LowRank(LowRank {
+                    rank,
+                    a: (0..rank * d_in).map(|_| r.normal_f32(0.0, 0.05)).collect(),
+                    b: (0..d_out * rank).map(|_| r.normal_f32(0.0, 0.05)).collect(),
+                })
+            }
+        };
+        (base, m)
     }
 
     fn rand_x(r: &mut Rng, n: usize, d_in: usize) -> Tensor2 {
@@ -527,6 +600,73 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn fused_matches_materialize_then_gemm_every_codec() {
+        // The per-codec half of the execute contract: for each codec,
+        // running the fused path must agree with densifying the module
+        // (apply path) and running a plain GEMM.
+        for (k, codec) in CodecKind::ALL.into_iter().enumerate() {
+            for &(n, d_out, d_in) in &[(1, 1, 1), (5, 7, 33), (3, 8, 32), (6, 13, 100)] {
+                let (base, m) = mk_module_codec(d_out, d_in, codec, 400 + k as u64);
+                let mut r = Rng::new(4400 + k as u64);
+                let x = rand_x(&mut r, n, d_in);
+                let mut dense = vec![0f32; base.len()];
+                crate::delta::apply::apply_module_into(&base, &mut dense, &m);
+                let want = x.matmul_bt(&Tensor2::from_vec(d_out, d_in, dense));
+                let got = FusedDeltaLinear::new(&base, &m).forward(&x);
+                for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+                    let tol = 1e-5 * (1.0 + w.abs());
+                    assert!(
+                        (g - w).abs() <= tol,
+                        "codec {} shape {n}x{d_out}x{d_in} idx {i}: {g} vs {w}",
+                        codec.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn add_delta_rows_matches_fused_rows_bitwise_every_codec() {
+        for (k, codec) in CodecKind::ALL.into_iter().enumerate() {
+            let (d_out, d_in) = (9, 100);
+            let (base, m) = mk_module_codec(d_out, d_in, codec, 520 + k as u64);
+            let mut r = Rng::new(5200 + k as u64);
+            let x = rand_x(&mut r, 6, d_in);
+            let mut y = DenseLinear::new(&base, d_out, d_in).forward(&x);
+            let base_only = y.clone();
+            add_delta_rows(&m, &x, &mut y, 2..5);
+            let fused = FusedDeltaLinear::new(&base, &m).forward(&x);
+            for t in 0..6 {
+                for j in 0..d_out {
+                    let got = y.at(t, j);
+                    let want =
+                        if (2..5).contains(&t) { fused.at(t, j) } else { base_only.at(t, j) };
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "codec {} row {t} col {j}: {got} vs {want}",
+                        codec.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lowrank_term_never_densifies_and_charges_residency() {
+        let (base, m) = mk_module_codec(64, 256, CodecKind::LowRank, 9);
+        let fused = FusedDeltaLinear::new(&base, &m);
+        let lr = m.lowrank().unwrap();
+        // Residency: packed mask + scales + f32 factors, still ≪ dense.
+        let factor_bytes = ((lr.a.len() + lr.b.len()) * 4) as u64;
+        assert_eq!(
+            fused.resident_bytes(),
+            m.mask.n_bytes() + (m.scales.len() * 4) as u64 + factor_bytes
+        );
+        assert!(fused.resident_bytes() * 4 < (base.len() * 4) as u64);
     }
 
     #[test]

@@ -124,6 +124,10 @@ impl PackedVariant {
                 m.axis,
                 m.axis.n_scales(rows, cols)
             );
+            // Codec-shape invariants the fused kernels rely on (scalar
+            // codec ⇒ scalar axis; low-rank factors must match the
+            // projection shape or the rank-space zip truncates).
+            crate::delta::codec::codec_for(m.codec.kind()).validate(m, rows, cols)?;
             by_id.insert(m.id, i);
         }
         Ok(PackedVariant { base, delta, by_id: Arc::new(by_id) })
@@ -252,7 +256,7 @@ impl Weights for VariantWeights {
 mod tests {
     use super::*;
     use crate::delta::pack::PackedMask;
-    use crate::delta::types::{Axis, DeltaModule};
+    use crate::delta::types::{Axis, Codec, DeltaModule};
     use crate::exec::LinearOp;
     use crate::model::config::ModelConfig;
     use crate::util::rng::Rng;
@@ -271,6 +275,7 @@ mod tests {
                 mask: PackedMask::pack(&delta, rows, cols),
                 axis: Axis::Row,
                 scales: vec![0.05; rows],
+                codec: Codec::PerAxis,
             });
         }
         let delta = Arc::new(DeltaModel::new("t", cfg.name.clone(), modules));
@@ -312,6 +317,32 @@ mod tests {
         let w = VariantWeights::Packed(pv);
         assert!(w.resident_bytes() * 8 < w.dense_equiv_bytes());
         assert!(w.is_packed());
+    }
+
+    #[test]
+    fn rejects_malformed_codec_shapes() {
+        use crate::delta::types::LowRank;
+        let (base, pv) = tiny_packed(1);
+        let good = pv.delta().modules[0].as_ref().clone();
+        let (rows, cols) = good.id.kind.shape(base.cfg());
+        // Scalar codec on a non-scalar axis.
+        let mut scalar_bad = good.clone();
+        scalar_bad.codec = Codec::Scalar;
+        // Low-rank A factor sized for the wrong rank.
+        let mut lr_bad = good.clone();
+        lr_bad.codec =
+            Codec::LowRank(LowRank { rank: 2, a: vec![0.0; cols], b: vec![0.0; rows * 2] });
+        for m in [scalar_bad, lr_bad] {
+            let delta =
+                Arc::new(DeltaModel::new("bad", base.cfg().name.clone(), vec![m]));
+            assert!(PackedVariant::new(base.clone(), delta).is_err());
+        }
+        // A well-formed low-rank module passes.
+        let mut lr_ok = good;
+        lr_ok.codec =
+            Codec::LowRank(LowRank { rank: 2, a: vec![0.0; 2 * cols], b: vec![0.0; rows * 2] });
+        let delta = Arc::new(DeltaModel::new("ok", base.cfg().name.clone(), vec![lr_ok]));
+        assert!(PackedVariant::new(base.clone(), delta).is_ok());
     }
 
     #[test]

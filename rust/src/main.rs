@@ -29,10 +29,16 @@ USAGE:
                                                  GET /v1/sync/file/<name>
   pawd bench-load <base.fp16> <variant_dir> <n>  time cold loads of every variant n times
   pawd publish <variant_dir> <name> <delta.pawd> [--parent [N]]
+               [--fit <base.fp16> <ft.fp16>] [--codec <c>]
                                                  publish the next version of a variant;
                                                  with --parent, ship an incremental patch
                                                  carrying only the modules changed vs N
-                                                 (default: the active version)
+                                                 (default: the active version); with
+                                                 --fit, first compress the checkpoint
+                                                 pair into <delta.pawd> using --codec
+                                                 (per-axis | scalar | lowrank | auto;
+                                                 auto = per-module shoot-out on
+                                                 calibration error, default per-axis)
   pawd consolidate <variant_dir> <name> [version]
                                                  rebase a version's patch chain into a
                                                  single full artifact in place
@@ -134,6 +140,14 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
     println!("base config  : {}", model.base_config);
     println!("modules      : {}", model.modules.len());
     println!("payload      : {}", fmt_bytes(model.payload_bytes()));
+    let codec_counts: Vec<String> = pawd::delta::CodecKind::ALL
+        .iter()
+        .filter_map(|k| {
+            let n = model.modules.iter().filter(|m| m.codec.kind() == *k).count();
+            (n > 0).then(|| format!("{} {n}", k.label()))
+        })
+        .collect();
+    println!("codecs       : {}", codec_counts.join("  "));
     for (kind, row, col) in model.axis_counts_by_kind() {
         println!("  {:<10} row {:>3}  col {:>3}", kind.name(), row, col);
     }
@@ -222,10 +236,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 }
 
 fn cmd_publish(args: &[String]) -> Result<()> {
-    // Positional args first, then the optional `--parent [N]` flag.
+    // Positional args first, then the optional flags.
     let mut positional: Vec<&String> = Vec::new();
     let mut incremental = false;
     let mut parent: Option<u32> = None;
+    let mut fit: Option<(String, String)> = None;
+    let mut codec = pawd::delta::CodecChoice::PerAxis;
     let mut i = 0;
     while i < args.len() {
         if args[i] == "--parent" {
@@ -236,6 +252,16 @@ fn cmd_publish(args: &[String]) -> Result<()> {
             } else {
                 i += 1;
             }
+        } else if args[i] == "--fit" {
+            let b = args.get(i + 1).context("--fit needs <base.fp16> <ft.fp16>")?.clone();
+            let f = args.get(i + 2).context("--fit needs <base.fp16> <ft.fp16>")?.clone();
+            fit = Some((b, f));
+            i += 3;
+        } else if args[i] == "--codec" {
+            let c = args.get(i + 1).context("--codec needs a value")?;
+            codec = pawd::delta::CodecChoice::parse(c)
+                .with_context(|| format!("unknown codec '{c}' (per-axis|scalar|lowrank|auto)"))?;
+            i += 2;
         } else {
             positional.push(&args[i]);
             i += 1;
@@ -244,6 +270,37 @@ fn cmd_publish(args: &[String]) -> Result<()> {
     let dir = PathBuf::from(positional.first().copied().context("missing <variant_dir>")?);
     let name = positional.get(1).copied().context("missing <name>")?;
     let artifact = PathBuf::from(positional.get(2).copied().context("missing <delta.pawd>")?);
+    if let Some((base_p, ft_p)) = fit {
+        let base = load_fp16(&base_p)?;
+        let ft = load_fp16(&ft_p)?;
+        // Deterministic synthetic calibration docs (same recipe as the
+        // benches) so repeated fits of the same pair are bit-identical.
+        let docs: Vec<Vec<u8>> = (0..6)
+            .map(|i| (0..48).map(|t| ((t * 7 + i * 13) % 250 + 1) as u8).collect())
+            .collect();
+        let opts = pawd::delta::CompressOptions {
+            fit: pawd::delta::FitMode::ClosedForm,
+            codec,
+            ..Default::default()
+        };
+        let (model, _reports, _) = pawd::delta::compress_model(name, &base, &ft, &docs, &opts);
+        let bytes = pawd::delta::format::save_delta(&artifact, &model)?;
+        let counts: Vec<String> = pawd::delta::CodecKind::ALL
+            .iter()
+            .map(|k| {
+                let n = model.modules.iter().filter(|m| m.codec.kind() == *k).count();
+                format!("{} {n}", k.label())
+            })
+            .collect();
+        println!(
+            "fitted {} with --codec {} [{}] -> {} ({})",
+            name,
+            codec.label(),
+            counts.join(", "),
+            artifact.display(),
+            fmt_bytes(bytes)
+        );
+    }
     let registry = pawd::coordinator::VariantRegistry::open(&dir)?;
     if incremental {
         let model = load_delta(&artifact)?;

@@ -592,7 +592,7 @@ mod tests {
     #[test]
     fn packed_weights_forward_matches_materialized() {
         use crate::delta::pack::PackedMask;
-        use crate::delta::types::{Axis, DeltaModel, DeltaModule};
+        use crate::delta::types::{Axis, Codec, DeltaModel, DeltaModule};
         use crate::exec::PackedVariant;
         use crate::util::rng::Rng;
         use std::sync::Arc;
@@ -613,6 +613,7 @@ mod tests {
                 mask: PackedMask::pack(&delta, rows, cols),
                 axis,
                 scales: (0..n).map(|_| r.uniform_in(0.005, 0.05)).collect(),
+                codec: Codec::PerAxis,
             });
         }
         let delta = DeltaModel::new("pv", cfg.name.clone(), modules);
@@ -632,7 +633,7 @@ mod tests {
 
     fn mk_packed(base: &std::sync::Arc<FlatParams>, seed: u64) -> crate::exec::PackedVariant {
         use crate::delta::pack::PackedMask;
-        use crate::delta::types::{Axis, DeltaModel, DeltaModule};
+        use crate::delta::types::{Axis, Codec, DeltaModel, DeltaModule};
         use crate::util::rng::Rng;
         let cfg = base.cfg();
         let axes = [Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(3)];
@@ -649,6 +650,7 @@ mod tests {
                 scales: (0..axis.n_scales(rows, cols))
                     .map(|_| r.uniform_in(0.005, 0.05))
                     .collect(),
+                codec: Codec::PerAxis,
             });
         }
         let delta = DeltaModel::new(format!("pv{seed}"), cfg.name.clone(), modules);

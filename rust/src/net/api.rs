@@ -11,9 +11,12 @@
 use super::client::{http_request, ClientConfig, HttpPeer};
 use super::http::Method;
 use super::wire;
-use crate::coordinator::{AdminOp, AdminResp, DataOp, MetricsSnapshot, RespBody};
+use crate::coordinator::{
+    AdminOp, AdminResp, ApiClient, ApiReply, DataOp, MetricsSnapshot, RespBody,
+};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
+use std::result::Result as StdResult;
 
 /// One data-plane answer: which version actually served, and the body.
 #[derive(Debug)]
@@ -109,6 +112,40 @@ impl HttpApiClient {
         }
         Ok(())
     }
+}
+
+/// The transport-agnostic [`ApiClient`] surface: same contract as the
+/// in-process impl, with transport failures folded into the `String` error
+/// lane (context chain flattened, `{:#}`).
+impl ApiClient for HttpApiClient {
+    fn score(
+        &self,
+        variant: &str,
+        prompt: &str,
+        choices: &[String],
+    ) -> StdResult<ApiReply, String> {
+        HttpApiClient::score(self, variant, prompt, choices)
+            .map(into_reply)
+            .map_err(|e| format!("{e:#}"))
+    }
+
+    fn perplexity(&self, variant: &str, text: &str) -> StdResult<ApiReply, String> {
+        HttpApiClient::perplexity(self, variant, text)
+            .map(into_reply)
+            .map_err(|e| format!("{e:#}"))
+    }
+
+    fn admin(&self, op: AdminOp) -> StdResult<AdminResp, String> {
+        HttpApiClient::admin(self, &op).map_err(|e| format!("{e:#}"))
+    }
+
+    fn health(&self) -> StdResult<(), String> {
+        HttpApiClient::health(self).map_err(|e| format!("{e:#}"))
+    }
+}
+
+fn into_reply(q: QueryReply) -> ApiReply {
+    ApiReply { variant: q.variant, version: q.version, body: q.body }
 }
 
 fn parse_body(body: &[u8]) -> Result<Json> {

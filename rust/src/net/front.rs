@@ -254,11 +254,22 @@ fn query(state: &FrontState, req: &HttpRequest, _params: &RouteParams) -> HttpRe
     }
 }
 
-/// `POST /v1/admin/:op` — kebab-case op routes per [`wire::admin_op_from_route`].
+/// `POST /v1/admin/:op` — kebab-case op routes per [`wire::admin_op_from_route`];
+/// the valid segment set is [`wire::admin_routes::ALL`].
 fn admin(state: &FrontState, req: &HttpRequest, params: &RouteParams) -> HttpResponse {
     let Some(client) = &state.client else {
         return HttpResponse::error(503, "admin plane not attached (sync-only frontend)");
     };
+    let route = params.get(0);
+    if !wire::admin_routes::ALL.contains(&route) {
+        return HttpResponse::error(
+            400,
+            &format!(
+                "bad admin request: unknown admin route '{route}' (valid: {})",
+                wire::admin_routes::ALL.join(", ")
+            ),
+        );
+    }
     let body_json = if req.body.is_empty() {
         Ok(obj(Vec::new()))
     } else {

@@ -110,19 +110,55 @@ pub fn timing_to_json(t: &Timing) -> Json {
 
 // -- admin plane -----------------------------------------------------------
 
+/// The kebab-case `POST /v1/admin/<route>` segment for every [`AdminOp`] —
+/// THE single source of truth shared by the wire codecs below, the HTTP
+/// front-end's route validation ([`super::front`]), and the README route
+/// table (a unit test asserts no drift between the three).
+pub mod admin_routes {
+    pub const STATS: &str = "stats";
+    pub const PUBLISH: &str = "publish";
+    pub const PUBLISH_INCREMENTAL: &str = "publish-incremental";
+    pub const CONSOLIDATE: &str = "consolidate";
+    pub const ROLLBACK: &str = "rollback";
+    pub const PIN: &str = "pin";
+    pub const UNPIN: &str = "unpin";
+    pub const RETIRE: &str = "retire";
+    pub const GC: &str = "gc";
+    pub const LIST: &str = "list";
+    pub const SYNC_STATUS: &str = "sync-status";
+    pub const PULL_FROM: &str = "pull-from";
+
+    /// Every admin route, in `AdminOp` declaration order.
+    pub const ALL: [&str; 12] = [
+        STATS,
+        PUBLISH,
+        PUBLISH_INCREMENTAL,
+        CONSOLIDATE,
+        ROLLBACK,
+        PIN,
+        UNPIN,
+        RETIRE,
+        GC,
+        LIST,
+        SYNC_STATUS,
+        PULL_FROM,
+    ];
+}
+
 /// The `POST /v1/admin/<route>` suffix for an op, plus its body.
 pub fn admin_op_to_route(op: &AdminOp) -> (&'static str, Json) {
+    use admin_routes as r;
     match op {
-        AdminOp::Stats => ("stats", json::obj(vec![])),
+        AdminOp::Stats => (r::STATS, json::obj(vec![])),
         AdminOp::Publish { variant, artifact } => (
-            "publish",
+            r::PUBLISH,
             json::obj(vec![
                 ("variant", json::s(variant)),
                 ("artifact", path_json(artifact)),
             ]),
         ),
         AdminOp::PublishIncremental { variant, artifact, parent } => (
-            "publish-incremental",
+            r::PUBLISH_INCREMENTAL,
             json::obj(opt_u32(
                 vec![("variant", json::s(variant)), ("artifact", path_json(artifact))],
                 "parent",
@@ -130,73 +166,77 @@ pub fn admin_op_to_route(op: &AdminOp) -> (&'static str, Json) {
             )),
         ),
         AdminOp::Consolidate { variant, version } => (
-            "consolidate",
+            r::CONSOLIDATE,
             json::obj(opt_u32(vec![("variant", json::s(variant))], "version", *version)),
         ),
         AdminOp::Rollback { variant, to } => (
-            "rollback",
+            r::ROLLBACK,
             json::obj(opt_u32(vec![("variant", json::s(variant))], "to", *to)),
         ),
         AdminOp::Pin { variant, version } => (
-            "pin",
+            r::PIN,
             json::obj(vec![("variant", json::s(variant)), ("version", json::n(*version as f64))]),
         ),
-        AdminOp::Unpin { variant } => ("unpin", json::obj(vec![("variant", json::s(variant))])),
+        AdminOp::Unpin { variant } => (r::UNPIN, json::obj(vec![("variant", json::s(variant))])),
         AdminOp::Retire { variant, version } => (
-            "retire",
+            r::RETIRE,
             json::obj(vec![("variant", json::s(variant)), ("version", json::n(*version as f64))]),
         ),
         AdminOp::Gc { variant } => (
-            "gc",
+            r::GC,
             match variant {
                 Some(v) => json::obj(vec![("variant", json::s(v))]),
                 None => json::obj(vec![]),
             },
         ),
-        AdminOp::List => ("list", json::obj(vec![])),
-        AdminOp::SyncStatus => ("sync-status", json::obj(vec![])),
-        AdminOp::PullFrom { dir } => ("pull-from", json::obj(vec![("dir", path_json(dir))])),
+        AdminOp::List => (r::LIST, json::obj(vec![])),
+        AdminOp::SyncStatus => (r::SYNC_STATUS, json::obj(vec![])),
+        AdminOp::PullFrom { dir } => (r::PULL_FROM, json::obj(vec![("dir", path_json(dir))])),
     }
 }
 
 /// Inverse of [`admin_op_to_route`]: the route segment names the op, the
 /// body carries its fields (an empty body parses as `{}`).
 pub fn admin_op_from_route(route: &str, j: &Json) -> Result<AdminOp> {
+    use admin_routes as r;
     Ok(match route {
-        "stats" => AdminOp::Stats,
-        "publish" => AdminOp::Publish {
+        _ if route == r::STATS => AdminOp::Stats,
+        _ if route == r::PUBLISH => AdminOp::Publish {
             variant: j.req_str("variant")?.to_string(),
             artifact: PathBuf::from(j.req_str("artifact")?),
         },
-        "publish-incremental" => AdminOp::PublishIncremental {
+        _ if route == r::PUBLISH_INCREMENTAL => AdminOp::PublishIncremental {
             variant: j.req_str("variant")?.to_string(),
             artifact: PathBuf::from(j.req_str("artifact")?),
             parent: get_u32(j, "parent")?,
         },
-        "consolidate" => AdminOp::Consolidate {
+        _ if route == r::CONSOLIDATE => AdminOp::Consolidate {
             variant: j.req_str("variant")?.to_string(),
             version: get_u32(j, "version")?,
         },
-        "rollback" => AdminOp::Rollback {
+        _ if route == r::ROLLBACK => AdminOp::Rollback {
             variant: j.req_str("variant")?.to_string(),
             to: get_u32(j, "to")?,
         },
-        "pin" => AdminOp::Pin {
+        _ if route == r::PIN => AdminOp::Pin {
             variant: j.req_str("variant")?.to_string(),
             version: j.req_usize("version")? as u32,
         },
-        "unpin" => AdminOp::Unpin { variant: j.req_str("variant")?.to_string() },
-        "retire" => AdminOp::Retire {
+        _ if route == r::UNPIN => AdminOp::Unpin { variant: j.req_str("variant")?.to_string() },
+        _ if route == r::RETIRE => AdminOp::Retire {
             variant: j.req_str("variant")?.to_string(),
             version: j.req_usize("version")? as u32,
         },
-        "gc" => AdminOp::Gc {
+        _ if route == r::GC => AdminOp::Gc {
             variant: j.get("variant").and_then(|v| v.as_str()).map(str::to_string),
         },
-        "list" => AdminOp::List,
-        "sync-status" => AdminOp::SyncStatus,
-        "pull-from" => AdminOp::PullFrom { dir: PathBuf::from(j.req_str("dir")?) },
-        other => bail!("unknown admin route '{other}'"),
+        _ if route == r::LIST => AdminOp::List,
+        _ if route == r::SYNC_STATUS => AdminOp::SyncStatus,
+        _ if route == r::PULL_FROM => AdminOp::PullFrom { dir: PathBuf::from(j.req_str("dir")?) },
+        other => bail!(
+            "unknown admin route '{other}' (valid: {})",
+            admin_routes::ALL.join(", ")
+        ),
     })
 }
 
@@ -590,6 +630,69 @@ mod tests {
                 admin_op_from_route(route, &Json::parse(&body.to_string()).unwrap()).unwrap();
             assert_eq!(format!("{op:?}"), format!("{parsed:?}"));
         }
+    }
+
+    /// `admin_routes::ALL` is the single source of truth for the admin
+    /// plane's route names: every `AdminOp` must map onto it (exactly, no
+    /// duplicates, no strays) and the README route table must list every
+    /// entry. A new op or a renamed route fails here until all three agree.
+    #[test]
+    fn admin_route_table_has_no_drift() {
+        let ops = vec![
+            AdminOp::Stats,
+            AdminOp::Publish { variant: "ft".into(), artifact: PathBuf::from("/tmp/a.pawd") },
+            AdminOp::PublishIncremental {
+                variant: "ft".into(),
+                artifact: PathBuf::from("/tmp/a.pawd"),
+                parent: None,
+            },
+            AdminOp::Consolidate { variant: "ft".into(), version: None },
+            AdminOp::Rollback { variant: "ft".into(), to: None },
+            AdminOp::Pin { variant: "ft".into(), version: 1 },
+            AdminOp::Unpin { variant: "ft".into() },
+            AdminOp::Retire { variant: "ft".into(), version: 1 },
+            AdminOp::Gc { variant: None },
+            AdminOp::List,
+            AdminOp::SyncStatus,
+            AdminOp::PullFrom { dir: PathBuf::from("/srv/leader") },
+        ];
+        // Exactly one table entry per op, and every entry reachable.
+        let mut seen = std::collections::BTreeSet::new();
+        for op in &ops {
+            let (route, _) = admin_op_to_route(op);
+            assert!(
+                admin_routes::ALL.contains(&route),
+                "route '{route}' missing from admin_routes::ALL"
+            );
+            assert!(seen.insert(route), "route '{route}' produced by two different ops");
+        }
+        assert_eq!(
+            seen.len(),
+            admin_routes::ALL.len(),
+            "admin_routes::ALL lists a route no AdminOp maps to"
+        );
+        let uniq: std::collections::BTreeSet<_> = admin_routes::ALL.iter().collect();
+        assert_eq!(uniq.len(), admin_routes::ALL.len(), "duplicate entry in admin_routes::ALL");
+
+        // The README's `/v1/admin/<op>` row must enumerate every route.
+        let readme = include_str!("../../../README.md");
+        let row = readme
+            .lines()
+            .find(|l| l.contains("/v1/admin/<op>"))
+            .expect("README is missing the /v1/admin/<op> route-table row");
+        for route in admin_routes::ALL {
+            assert!(
+                row.contains(&format!("`{route}`")),
+                "README admin route row does not mention `{route}`"
+            );
+        }
+
+        // Unknown segments keep erroring (the HTTP 400 path) and the error
+        // names the valid set so operators can self-serve.
+        let err = admin_op_from_route("bogus-route", &Json::parse("{}").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bogus-route") && err.contains(admin_routes::SYNC_STATUS));
     }
 
     #[test]

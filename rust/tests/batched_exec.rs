@@ -12,7 +12,6 @@ use pawd::model::{FlatParams, Transformer};
 use pawd::util::rng::Rng;
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
 
 fn setup_store(dir: &PathBuf, n_variants: usize) -> (Arc<FlatParams>, VariantStore) {
     let _ = std::fs::remove_dir_all(dir);
@@ -89,7 +88,7 @@ fn server_mixed_windows_score_identically_to_direct_eval() {
     let server = Server::start(
         store,
         Engine::Native,
-        ServerConfig { max_batch: 6, max_wait: Duration::from_millis(10), ..Default::default() },
+        ServerConfig { max_batch: 6, ..Default::default() },
     );
     // Burst concurrent requests across all three variants so the dispatcher
     // coalesces mixed windows.

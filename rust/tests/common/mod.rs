@@ -5,7 +5,7 @@
 #![allow(dead_code)]
 
 use pawd::delta::pack::PackedMask;
-use pawd::delta::types::{Axis, DeltaModel, DeltaModule};
+use pawd::delta::types::{Axis, Codec, CodecKind, DeltaModel, DeltaModule, LowRank};
 use pawd::model::FlatParams;
 use pawd::util::rng::Rng;
 use std::path::PathBuf;
@@ -70,6 +70,49 @@ pub fn seeded_full(base: &FlatParams, variant: &str, seed: u64, axes: &[Axis]) -
                 scales: (0..axis.n_scales(rows, cols))
                     .map(|_| r.uniform_in(0.005, 0.05))
                     .collect(),
+                codec: Codec::PerAxis,
+            }
+        })
+        .collect();
+    DeltaModel::new(variant, cfg.name.clone(), modules)
+}
+
+/// A full delta cycling through every codec kind per module (per-axis,
+/// scalar, low-rank), content seeded — the mixed-codec artifact the format
+/// v4 / replication round-trip tests exercise.
+pub fn seeded_full_mixed(base: &FlatParams, variant: &str, seed: u64) -> DeltaModel {
+    let cfg = base.cfg();
+    let modules: Vec<DeltaModule> = base
+        .layout
+        .patchable_modules()
+        .iter()
+        .enumerate()
+        .map(|(i, &id)| {
+            let (rows, cols) = id.kind.shape(cfg);
+            let mut r = Rng::new(seed.wrapping_mul(917).wrapping_add(i as u64));
+            let delta: Vec<f32> = (0..rows * cols).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let kind = CodecKind::ALL[i % CodecKind::ALL.len()];
+            let axis = if kind == CodecKind::Scalar { Axis::Scalar } else { Axis::Row };
+            let codec = match kind {
+                CodecKind::PerAxis => Codec::PerAxis,
+                CodecKind::Scalar => Codec::Scalar,
+                CodecKind::LowRank => {
+                    let rank = 2.min(rows).min(cols);
+                    Codec::LowRank(LowRank {
+                        rank,
+                        a: (0..rank * cols).map(|_| r.normal_f32(0.0, 0.02)).collect(),
+                        b: (0..rows * rank).map(|_| r.normal_f32(0.0, 0.02)).collect(),
+                    })
+                }
+            };
+            DeltaModule {
+                id,
+                mask: PackedMask::pack(&delta, rows, cols),
+                axis,
+                scales: (0..axis.n_scales(rows, cols))
+                    .map(|_| r.uniform_in(0.005, 0.05))
+                    .collect(),
+                codec,
             }
         })
         .collect();

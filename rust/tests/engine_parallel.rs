@@ -2,7 +2,7 @@
 //! pooled forwards must be *bitwise* equal to serial ones at any thread
 //! width, the engine must keep admitting mid-flight requests during a
 //! publish storm without ever serving a stale alias, and an idle host must
-//! answer a lone request immediately (no `max_wait` stall).
+//! answer a lone request immediately (no dispatch-deadline stall).
 
 use pawd::coordinator::{Engine, Payload, RespBody, Server, ServerConfig, VariantStore};
 use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
@@ -161,18 +161,14 @@ fn engine_admits_during_publish_storm_without_serving_stale_alias() {
 }
 
 /// Regression for the dispatcher idle-latency bug: the old loop held a
-/// window open for `max_wait` even with every worker idle. The engine
-/// flushes on idle capacity, so a lone request under a 2 s deadline must
-/// complete at compute latency.
+/// window open up to a dispatch deadline even with every worker idle. The
+/// engine flushes on idle capacity (there is no deadline knob anymore), so
+/// a lone request must complete at compute latency.
 #[test]
-fn lone_request_on_idle_host_is_not_held_for_max_wait() {
+fn lone_request_on_idle_host_dispatches_immediately() {
     let dir = std::env::temp_dir().join("pawd_itest_idle_latency");
     let (_base, store) = setup_store(&dir, 1);
-    let server = Server::start(
-        store,
-        Engine::Native,
-        ServerConfig { max_wait: Duration::from_secs(2), ..Default::default() },
-    );
+    let server = Server::start(store, Engine::Native, ServerConfig::default());
     let client = server.client();
     // Warm the variant so the timed request measures dispatch + compute,
     // not artifact load.
@@ -185,7 +181,7 @@ fn lone_request_on_idle_host_is_not_held_for_max_wait() {
     assert!(matches!(resp.result, Ok(RespBody::Perplexity { .. })), "{:?}", resp.result);
     assert!(
         elapsed < Duration::from_secs(1),
-        "idle host held a lone request for {elapsed:?} (max_wait leak)"
+        "idle host held a lone request for {elapsed:?} (deadline-wait leak)"
     );
     // The queue stage itself must be far under the deadline too.
     assert!(

@@ -179,6 +179,64 @@ fn http_admin_plane_round_trips_typed_ops() {
     })
 }
 
+/// Drive the whole [`ApiClient`](pawd::coordinator::ApiClient) surface
+/// through the trait (dyn, so nothing resolves to inherent methods) and
+/// return comparable bits.
+fn exercise_api(c: &dyn pawd::coordinator::ApiClient) -> (usize, Vec<u64>, u64) {
+    c.health().unwrap();
+    let choices: Vec<String> = vec!["yes".into(), "no".into()];
+    let score = c.score("ft", "Q: one surface, two transports? A: ", &choices).unwrap();
+    assert_eq!(score.variant, "ft");
+    let (choice, score_bits) = match score.body {
+        pawd::coordinator::RespBody::Score { choice, scores } => {
+            (choice, scores.iter().map(|x| x.to_bits()).collect::<Vec<u64>>())
+        }
+        other => panic!("unexpected score body {other:?}"),
+    };
+    let ppl = c.perplexity("ft", "trait parity probe").unwrap();
+    let ppl_bits = match ppl.body {
+        pawd::coordinator::RespBody::Perplexity { nats_per_token } => nats_per_token.to_bits(),
+        other => panic!("unexpected perplexity body {other:?}"),
+    };
+    // stats() is the trait's default impl — it must ride the admin lane of
+    // whichever transport `c` is.
+    assert!(c.stats().unwrap().served >= 1);
+    assert!(c.admin(AdminOp::List).is_ok());
+    // Engine rejections surface on the shared String error lane.
+    assert!(c.score("no-such-variant", "Q", &choices).is_err());
+    (choice, score_bits, ppl_bits)
+}
+
+#[test]
+fn api_client_trait_unifies_local_and_http() {
+    with_timeout("api_client_trait", 120, || {
+        let dir = fresh_dir("pawd_itest_api_trait");
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = Arc::new(FlatParams::init(&cfg, 113));
+        let registry = VariantRegistry::open(&dir).unwrap();
+        registry.publish("ft", seeded_full(&base, "ft", 21)).unwrap();
+        drop(registry);
+
+        let store = VariantStore::new(base, &dir).with_mode(ExecMode::Fused);
+        let server = Server::start(store, Engine::Native, ServerConfig::default());
+        let frontend = HttpFrontend::start(
+            "127.0.0.1:0",
+            Some(server.client()),
+            server.cache.store().registry().clone(),
+            FrontConfig::default(),
+        )
+        .unwrap();
+        let api = HttpApiClient::new(&frontend.url()).unwrap();
+        let client = server.client();
+
+        let local = exercise_api(&client);
+        let remote = exercise_api(&api);
+        assert_eq!(local, remote, "trait surface must be bitwise-identical across transports");
+
+        server.shutdown();
+    })
+}
+
 #[test]
 fn http_transport_follower_converges_bitwise() {
     with_timeout("http_transport_converges", 180, || {

@@ -7,7 +7,7 @@
 //! Requires `make artifacts` (skips politely otherwise).
 
 use pawd::delta::pack::PackedMask;
-use pawd::delta::types::{Axis, DeltaModule};
+use pawd::delta::types::{Axis, Codec, DeltaModule};
 use pawd::model::{FlatParams, ModelConfig, ModuleId, ProjKind, Transformer};
 use pawd::runtime::{self, HostTensor};
 use pawd::tensor::Tensor2;
@@ -241,6 +241,7 @@ fn pallas_delta_apply_matches_native() {
             mask: mask.clone(),
             axis,
             scales: scales.clone(),
+            codec: Codec::PerAxis,
         };
         let mut native = vec![0f32; base.len()];
         pawd::delta::apply::apply_module_into(&base, &mut native, &module);
@@ -274,6 +275,7 @@ fn pallas_fused_matmul_matches_native_gemm() {
         mask: mask.clone(),
         axis: Axis::Row,
         scales: scales.clone(),
+        codec: Codec::PerAxis,
     };
     // Native: materialize then GEMM.
     let mut w = vec![0f32; base.len()];

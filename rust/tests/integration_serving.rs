@@ -14,7 +14,6 @@ use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
 use pawd::model::{FlatParams, Transformer};
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
 
 fn setup_store(dir: &PathBuf, n_variants: usize) -> (Arc<FlatParams>, VariantStore) {
     let _ = std::fs::remove_dir_all(dir);
@@ -131,7 +130,7 @@ fn batches_form_and_cold_start_is_recorded() {
     let server = Server::start(
         store,
         Engine::Native,
-        ServerConfig { max_batch: 4, max_wait: Duration::from_millis(20), ..Default::default() },
+        ServerConfig { max_batch: 4, ..Default::default() },
     );
     let client = server.client();
     // Fire a burst of async requests at one variant so they batch.

@@ -6,7 +6,7 @@ use pawd::delta::calibrate::{
     closed_form_col, closed_form_rowfam, col_stats, mse_col, mse_rowfam, residual, row_stats,
 };
 use pawd::delta::pack::PackedMask;
-use pawd::delta::types::{Axis, DeltaModule};
+use pawd::delta::types::{Axis, Codec, DeltaModule};
 use pawd::exec::{FusedDeltaLinear, LinearOp};
 use pawd::model::{ModuleId, ProjKind};
 use pawd::tensor::Tensor2;
@@ -49,6 +49,7 @@ fn prop_apply_then_revert_is_identity() {
             mask,
             axis,
             scales,
+            codec: Codec::PerAxis,
         };
         let mut w = base.clone();
         pawd::delta::apply::apply_module_inplace(&mut w, &m, false);
@@ -67,7 +68,13 @@ fn prop_apply_optimized_matches_reference() {
         let mask = PackedMask::pack(&delta, d_out, d_in);
         let axis = *g.rng.choice(&[Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(5)]);
         let scales = g.vec_normal(axis.n_scales(d_out, d_in), 0.3);
-        let m = DeltaModule { id: ModuleId { layer: 0, kind: ProjKind::V }, mask, axis, scales };
+        let m = DeltaModule {
+            id: ModuleId { layer: 0, kind: ProjKind::V },
+            mask,
+            axis,
+            scales,
+            codec: Codec::PerAxis,
+        };
         let want = pawd::delta::apply::apply_module_reference(&base, &m);
         let mut got = vec![0f32; base.len()];
         pawd::delta::apply::apply_module_into(&base, &mut got, &m);
@@ -91,7 +98,13 @@ fn prop_fused_linear_matches_materialized_gemm() {
         let mask = PackedMask::pack(&delta, d_out, d_in);
         let axis = *g.rng.choice(&[Axis::Row, Axis::Col, Axis::Scalar, Axis::Group(3)]);
         let scales = g.vec_normal(axis.n_scales(d_out, d_in), 0.3);
-        let m = DeltaModule { id: ModuleId { layer: 0, kind: ProjKind::O }, mask, axis, scales };
+        let m = DeltaModule {
+            id: ModuleId { layer: 0, kind: ProjKind::O },
+            mask,
+            axis,
+            scales,
+            codec: Codec::PerAxis,
+        };
         // Reference: dense Ŵ = W_b + v ⊙ B, then a plain GEMM.
         let mut dense = vec![0f32; base.len()];
         pawd::delta::apply::apply_module_into(&base, &mut dense, &m);
@@ -197,6 +210,7 @@ fn prop_format_roundtrip() {
                 mask: PackedMask::pack(&delta, d_out, d_in),
                 axis,
                 scales: g.vec_normal(axis.n_scales(d_out, d_in), 0.1),
+                codec: Codec::PerAxis,
             });
         }
         let model = pawd::delta::types::DeltaModel::new(

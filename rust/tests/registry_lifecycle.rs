@@ -9,7 +9,7 @@ use pawd::coordinator::{
 use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
 use pawd::delta::format::{save_delta, save_delta_v1_bytes};
 use pawd::delta::pack::PackedMask;
-use pawd::delta::types::{Axis, DeltaModel, DeltaModule};
+use pawd::delta::types::{Axis, Codec, DeltaModel, DeltaModule};
 use pawd::exec::ExecMode;
 use pawd::model::config::ModelConfig;
 use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
@@ -31,6 +31,7 @@ fn tiny_delta(variant: &str) -> DeltaModel {
             mask: PackedMask::pack(&d, 8, 8),
             axis: Axis::Row,
             scales: vec![0.1; 8],
+            codec: Codec::PerAxis,
         }],
     )
 }
@@ -256,7 +257,7 @@ fn mid_flight_publish_flips_alias_without_failing_requests() {
     let server = Server::start(
         store,
         Engine::Native,
-        ServerConfig { n_workers: 2, max_wait: Duration::from_millis(1), ..Default::default() },
+        ServerConfig { n_workers: 2, ..Default::default() },
     );
     let stop = AtomicBool::new(false);
     let saw_v1 = AtomicU64::new(0);

@@ -10,11 +10,12 @@
 
 mod common;
 
-use common::fresh_dir;
+use common::{fresh_dir, with_timeout};
 use pawd::coordinator::{
     AdminOp, Engine, FsTransport, Replicator, Server, ServerConfig, SyncTransport,
     VariantRegistry, VariantStore,
 };
+use pawd::net::{FrontConfig, HttpFrontend, HttpTransport};
 use pawd::delta::types::{Axis, DeltaModel};
 use pawd::exec::ExecMode;
 use pawd::model::config::ModelConfig;
@@ -330,6 +331,69 @@ fn server_admin_pull_from_syncs_and_warms_the_cache() {
     assert!(!err.is_empty());
     assert!(client.score("ft", "Q: again? A: ", &["ok".into(), "bad".into()]).result.is_ok());
     server.shutdown();
+}
+
+#[test]
+fn mixed_codec_artifact_round_trips_fs_and_http_with_bitwise_logits() {
+    with_timeout("mixed_codec_round_trip", 120, || {
+        let leader_dir = fresh_dir("pawd_itest_repl_mixed_leader");
+        let fs_dir = fresh_dir("pawd_itest_repl_mixed_fs");
+        let http_dir = fresh_dir("pawd_itest_repl_mixed_http");
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = Arc::new(FlatParams::init(&cfg, 43));
+        let leader = Arc::new(VariantRegistry::open(&leader_dir).unwrap());
+        let tokens: Vec<u8> = (0..12u8).map(|t| t.wrapping_mul(23) % 200 + 10).collect();
+
+        // Full mixed-codec publish (modules cycle per-axis/scalar/lowrank),
+        // then an incremental patch touching one low-rank module (same
+        // kind, new payload) — the diff must ship exactly that module.
+        let v1 = common::seeded_full_mixed(&base, "mx", 5);
+        leader.publish_incremental("mx", v1.clone(), None).unwrap();
+        let mut v2 = v1.clone();
+        let fresh = common::seeded_full_mixed(&base, "mx", 6);
+        v2.modules[2] = fresh.modules[2].clone();
+        assert!(v2.modules[2].lowrank().is_some(), "index 2 cycles to the lowrank codec");
+        let out = leader.publish_incremental("mx", v2, None).unwrap();
+        assert!(out.patch, "single-module change must ship as a patch");
+
+        // FS follower.
+        let fs_follower = Arc::new(VariantRegistry::open(&fs_dir).unwrap());
+        let fs_repl = Replicator::new(fs_follower.clone(), Box::new(FsTransport::new(&leader_dir)));
+        fs_repl.sync_once(None).unwrap();
+        // HTTP follower through a sync-only frontend on the leader.
+        let frontend =
+            HttpFrontend::start("127.0.0.1:0", None, leader.clone(), FrontConfig::default())
+                .unwrap();
+        let http_follower = Arc::new(VariantRegistry::open(&http_dir).unwrap());
+        let http_repl = Replicator::new(
+            http_follower.clone(),
+            Box::new(HttpTransport::new(&frontend.url()).unwrap()),
+        );
+        http_repl.sync_once(None).unwrap();
+
+        for name in ["mx@1", "mx@2", "mx"] {
+            let want = logits_of(&base, &leader_dir, name, &tokens);
+            assert_eq!(want, logits_of(&base, &fs_dir, name, &tokens), "fs logits for '{name}'");
+            assert_eq!(
+                want,
+                logits_of(&base, &http_dir, name, &tokens),
+                "http logits for '{name}'"
+            );
+        }
+
+        // Consolidate the chain on the leader; both followers converge to
+        // the full artifact and still serve bitwise-identical logits.
+        leader.consolidate("mx", Some(2)).unwrap();
+        fs_repl.sync_once(None).unwrap();
+        http_repl.sync_once(None).unwrap();
+        for (label, dir) in [("fs", &fs_dir), ("http", &http_dir)] {
+            let r = VariantRegistry::open(dir).unwrap().resolve("mx").unwrap();
+            assert_eq!((r.version, r.patch), (2, false), "{label} follower consolidated state");
+        }
+        let want = logits_of(&base, &leader_dir, "mx", &tokens);
+        assert_eq!(want, logits_of(&base, &fs_dir, "mx", &tokens));
+        assert_eq!(want, logits_of(&base, &http_dir, "mx", &tokens));
+    });
 }
 
 #[test]

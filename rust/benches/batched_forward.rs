@@ -17,7 +17,10 @@ mod bench_common;
 use pawd::coordinator::{Engine, Payload, Server, ServerConfig, VariantStore};
 use pawd::delta::compress::{compress_model, CompressOptions, FitMode};
 use pawd::delta::format::save_delta;
-use pawd::exec::{counters, pool, BatchPlan, ExecMode, PackedVariant, Uniform, VariantWeights};
+use pawd::exec::{
+    counters, pool, prefix, BatchPlan, ExecMode, PackedVariant, PrefixCache, Uniform,
+    VariantWeights,
+};
 use pawd::model::synth::{synth_finetune, SynthDeltaSpec};
 use pawd::model::Transformer;
 use pawd::util::benchkit::{Bench, BenchReport, Table};
@@ -180,6 +183,54 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // --- cross-window prefix cache -----------------------------------------
+    // Same mixed window, but every request shares a 16-token prefix (two
+    // requests per variant). A warm `PrefixCache` resumes each sequence
+    // from cached per-layer K/V + prefix logits, so only the 8 suffix rows
+    // are computed — and the output stays bitwise-identical to cold.
+    let shared_prefix: Vec<u8> = (0..16).map(|t| ((t * 13) % 200 + 20) as u8).collect();
+    let pseqs: Vec<(usize, Vec<u8>)> = (0..batch)
+        .map(|i| {
+            let mut toks = shared_prefix.clone();
+            toks.extend((0..seq_len - 16).map(|t| ((t * 7 + i * 31) % 200 + 20) as u8));
+            (i, toks)
+        })
+        .collect();
+    let pcache = PrefixCache::with_budget(64 << 20);
+    let cold_logits = tf.forward_plan(plan, &pseqs);
+    let warm_logits = prefix::run_plan(&tf, plan, &pseqs, &pcache); // capture pass
+    assert!(!pcache.is_empty(), "warm pass must capture shared prefixes");
+    let hit_logits = prefix::run_plan(&tf, plan, &pseqs, &pcache); // all-hit pass
+    for (c, w) in cold_logits.iter().zip(&warm_logits) {
+        assert_eq!(c.data, w.data, "prefix capture pass must be bitwise-equal to cold");
+    }
+    for (c, h) in cold_logits.iter().zip(&hit_logits) {
+        assert_eq!(c.data, h.data, "prefix-cached forward must be bitwise-equal to cold");
+    }
+    let hits_before = pcache.stats().hits;
+    let r_prefix_cold = b
+        .run_items(&format!("shared-prefix mixed x{batch}, cold"), tokens_per_batch, || {
+            std::hint::black_box(tf.forward_plan(plan, &pseqs));
+        })
+        .clone();
+    let r_prefix_hit = b
+        .run_items(&format!("shared-prefix mixed x{batch}, cache hit"), tokens_per_batch, || {
+            std::hint::black_box(prefix::run_plan(&tf, plan, &pseqs, &pcache));
+        })
+        .clone();
+    assert!(pcache.stats().hits > hits_before, "timed passes must hit the cache");
+    let prefix_speedup = r_prefix_cold.mean_s() / r_prefix_hit.mean_s();
+    println!(
+        "prefix cache speedup: {prefix_speedup:.2}x (16 of {seq_len} rows per sequence cached)"
+    );
+    if std::env::var("PAWD_BENCH_STRICT").is_ok() {
+        assert!(
+            prefix_speedup >= 1.5,
+            "strict mode: warm prefix-cache throughput must be >= 1.5x cold, \
+             got {prefix_speedup:.2}x"
+        );
+    }
+
     // --- serving under publish churn ---------------------------------------
     // The continuous engine overlaps publish warms with serving: measure
     // end-to-end request throughput on stable variants while a background
@@ -260,6 +311,8 @@ fn main() -> anyhow::Result<()> {
         ("BatchPlan mixed, pool x1", &r_pool1, batched_gemms),
         ("BatchPlan mixed, pool x4", &r_pool4, batched_gemms),
         ("Uniform single, pool x4", &r_single_pool4, gemms_per_forward),
+        ("shared-prefix mixed, cold", &r_prefix_cold, batched_gemms),
+        ("shared-prefix mixed, cache hit", &r_prefix_hit, batched_gemms),
     ] {
         t.row(&[
             name.to_string(),
@@ -296,6 +349,14 @@ fn main() -> anyhow::Result<()> {
     report.add(
         "batched_forward/single8_pool4",
         &[("tok_per_s", tok_per_s(&r_single_pool4))],
+    );
+    report.add(
+        "batched_forward/prefix",
+        &[
+            ("prefix_cold_tokens_per_s", tok_per_s(&r_prefix_cold)),
+            ("prefix_hit_tokens_per_s", tok_per_s(&r_prefix_hit)),
+            ("prefix_speedup", prefix_speedup),
+        ],
     );
     report.add(
         "batched_forward/churn",

@@ -7,15 +7,22 @@
 //!
 //! Emits one gated `*_fused_rows_per_s` throughput metric per codec (and
 //! report-only error/bytes metrics) into `BenchReport`; CI's bench-smoke
-//! lane runs this in fast mode.
+//! lane runs this in fast mode. The lowrank rank sweep adds
+//! `lowrank_r{2,8}_*` series next to the configured-default `lowrank_*`
+//! keys so the rank/bytes/error trade is tracked over time.
 
 #[path = "bench_common/mod.rs"]
 mod bench_common;
 
 use pawd::delta::compress::{CompressOptions, FitMode};
 use pawd::delta::CodecKind;
-use pawd::eval::{codec_shootout, render_shootout};
+use pawd::eval::{codec_shootout, render_shootout, ModuleShootout, ShootoutRow};
 use pawd::util::benchkit::BenchReport;
+
+/// The sweep emits several lowrank rows per module; address one exactly.
+fn pick(m: &ModuleShootout, kind: CodecKind, rank: Option<usize>) -> &ShootoutRow {
+    m.rows.iter().find(|r| r.kind == kind && r.rank == rank).unwrap()
+}
 
 fn main() -> anyhow::Result<()> {
     let (base, ft) = bench_common::synth_pair("tiny", 11);
@@ -27,10 +34,9 @@ fn main() -> anyhow::Result<()> {
 
     // Structural guarantees — a red run here is a codec regression, not noise.
     for m in &modules {
-        let row = |k: CodecKind| m.rows.iter().find(|r| r.kind == k).unwrap();
-        let pa = row(CodecKind::PerAxis);
-        let sc = row(CodecKind::Scalar);
-        let sel = row(m.selected);
+        let pa = pick(m, CodecKind::PerAxis, None);
+        let sc = pick(m, CodecKind::Scalar, None);
+        let sel = m.selected_row();
         assert!(
             pa.val_mse <= sc.val_mse,
             "{:?}: per-axis val MSE {} worse than scalar {}",
@@ -49,20 +55,28 @@ fn main() -> anyhow::Result<()> {
     }
 
     // Aggregate per codec across modules: mean fused throughput (gated),
-    // total payload bytes and mean calibration error (report-only).
+    // total payload bytes and mean calibration error (report-only). The
+    // legacy `lowrank_*` keys keep reporting the configured default rank;
+    // the sweep adds `lowrank_r{2,8}_*` series alongside.
     let mut report = BenchReport::new();
     let n = modules.len() as f64;
     let mut metrics: Vec<(String, f64)> = Vec::new();
-    for kind in CodecKind::ALL {
-        let key = kind.label().replace('-', "_");
-        let rows: Vec<_> =
-            modules.iter().map(|m| m.rows.iter().find(|r| r.kind == kind).unwrap()).collect();
+    let mut emit = |key: String, rows: Vec<&ShootoutRow>| {
         let mean_rps = rows.iter().map(|r| r.fused_rows_per_s).sum::<f64>() / n;
         let bytes: u64 = rows.iter().map(|r| r.payload_bytes).sum();
         let mean_mse = rows.iter().map(|r| r.val_mse).sum::<f64>() / n;
         metrics.push((format!("{key}_fused_rows_per_s"), mean_rps));
         metrics.push((format!("{key}_payload_bytes"), bytes as f64));
         metrics.push((format!("{key}_mean_val_mse"), mean_mse));
+    };
+    for kind in CodecKind::ALL {
+        let rank = (kind == CodecKind::LowRank).then_some(opts.lowrank_rank);
+        let key = kind.label().replace('-', "_");
+        emit(key, modules.iter().map(|m| pick(m, kind, rank)).collect());
+    }
+    for r in [2usize, 8] {
+        let rows = modules.iter().map(|m| pick(m, CodecKind::LowRank, Some(r))).collect();
+        emit(format!("lowrank_r{r}"), rows);
     }
     let auto_per_axis =
         modules.iter().filter(|m| m.selected == CodecKind::PerAxis).count() as f64;

@@ -21,7 +21,7 @@
 //! the ingress and work channels on the `pawd-engine` thread.
 
 use super::metrics::Metrics;
-use super::request::{Payload, Request, Response, Timing, ADMIN_VARIANT};
+use super::request::{DataOp, Payload, Request, Response, Timing, ADMIN_VARIANT};
 use super::server::ServerConfig;
 use crate::exec::counters;
 use std::collections::{HashMap, VecDeque};
@@ -59,6 +59,52 @@ pub(crate) enum Ingress {
     Shutdown,
 }
 
+/// Pool idle time per step at or above this marks spare compute capacity:
+/// the AIMD target grows additively (wider windows amortize more).
+const AIMD_HIGH_IDLE_NS: u64 = 500_000;
+/// Pool idle time per step at or below this marks saturation: the target
+/// backs off multiplicatively (narrower windows cut queue latency).
+const AIMD_LOW_IDLE_NS: u64 = 50_000;
+
+/// Adaptive window-size target fed by the compute pool's
+/// `pool_steal_or_idle_ns` counter (the PR 6 follow-up): lots of idle time
+/// between jobs means the pool is starved for parallel work, so admit
+/// wider windows (+1); near-zero idle means the pool is saturated, so back
+/// off (×0.75). Between the thresholds the target holds (dead band — no
+/// oscillation on a steady load). The target always stays in
+/// `[1, max_batch]`, so the configured cap remains a hard ceiling.
+struct AimdBatch {
+    target: f64,
+    max: usize,
+    last_idle_ns: u64,
+}
+
+impl AimdBatch {
+    fn new(max_batch: usize) -> AimdBatch {
+        let max = max_batch.max(1);
+        // Start wide: the first windows probe the configured cap and the
+        // idle signal walks the target down if the pool saturates.
+        AimdBatch { target: max as f64, max, last_idle_ns: 0 }
+    }
+
+    /// Feed the *cumulative* pool idle counter; the per-step delta drives
+    /// one AIMD move.
+    fn observe_idle_total(&mut self, idle_ns_total: u64) {
+        let delta = idle_ns_total.saturating_sub(self.last_idle_ns);
+        self.last_idle_ns = idle_ns_total;
+        if delta >= AIMD_HIGH_IDLE_NS {
+            self.target = (self.target + 1.0).min(self.max as f64);
+        } else if delta <= AIMD_LOW_IDLE_NS {
+            self.target = (self.target * 0.75).max(1.0);
+        }
+    }
+
+    /// Current admission cap in requests.
+    fn target(&self) -> usize {
+        (self.target.round() as usize).clamp(1, self.max)
+    }
+}
+
 /// Pure admission state of the continuous-batching engine: what is waiting
 /// and how many worker slots are occupied. All channel I/O lives in
 /// `engine_loop`, so this core is deterministic and unit-testable.
@@ -67,6 +113,7 @@ pub struct EngineCore {
     in_flight: usize,
     capacity: usize,
     max_batch: usize,
+    aimd: AimdBatch,
 }
 
 impl EngineCore {
@@ -78,7 +125,19 @@ impl EngineCore {
             in_flight: 0,
             capacity: capacity.max(1),
             max_batch: max_batch.max(1),
+            aimd: AimdBatch::new(max_batch),
         }
+    }
+
+    /// Feed the cumulative pool steal-or-idle counter into the adaptive
+    /// window-size target (called on every `StepDone`).
+    pub fn observe_idle(&mut self, idle_ns_total: u64) {
+        self.aimd.observe_idle_total(idle_ns_total);
+    }
+
+    /// The adaptive per-step admission cap (`<= max_batch`, `>= 1`).
+    pub fn batch_target(&self) -> usize {
+        self.aimd.target()
     }
 
     /// Queue a data request for admission at the next step boundary.
@@ -121,7 +180,7 @@ impl EngineCore {
         if self.pending.is_empty() || self.in_flight >= self.capacity {
             return None;
         }
-        let requests = fair_take(&mut self.pending, self.max_batch);
+        let requests = fair_take(&mut self.pending, self.aimd.target());
         self.in_flight += 1;
         Some(group_by_variant(requests))
     }
@@ -225,7 +284,12 @@ fn process(
                 });
             }
         }
-        Ingress::StepDone => core.work_done(),
+        Ingress::StepDone => {
+            core.work_done();
+            // Adaptive window sizing: each finished item carries the pool's
+            // cumulative steal-or-idle time forward into the AIMD target.
+            core.observe_idle(counters::pool_steal_or_idle_ns());
+        }
         Ingress::Shutdown => return false,
     }
     true
@@ -248,6 +312,14 @@ fn send_window(
 /// and starve a cold variant's lone request. The overall oldest request is
 /// always picked (its variant leads the rotation); unpicked requests stay
 /// in arrival order.
+///
+/// Within a variant's turn the pick is **prefix-affine**: once the variant
+/// has seated a request this window, a queued request whose leading token
+/// block hashes the same is preferred over strict FIFO, so prefix-sharing
+/// requests ride one window and the prefix cache serves the whole group
+/// from one suffix GEMM. Affinity only reorders *within* one variant's
+/// queue — fairness across variants and the oldest-request guarantee are
+/// untouched.
 pub(crate) fn fair_take(window: &mut VecDeque<Request>, max: usize) -> Vec<Request> {
     if window.len() <= max {
         return window.drain(..).collect();
@@ -262,13 +334,21 @@ pub(crate) fn fair_take(window: &mut VecDeque<Request>, max: usize) -> Vec<Reque
         }
         entry.push_back(i);
     }
+    let hints: Vec<u64> = window.iter().map(prefix_hint).collect();
+    let mut last_hint: HashMap<&str, u64> = HashMap::new();
     let mut picked = vec![false; window.len()];
     let mut n = 0usize;
     'rounds: loop {
         let mut any = false;
         for v in &order {
-            if let Some(i) = buckets.get_mut(v).and_then(|b| b.pop_front()) {
+            let Some(b) = buckets.get_mut(v) else { continue };
+            let slot = last_hint
+                .get(v)
+                .and_then(|&h| b.iter().position(|&i| hints[i] == h))
+                .unwrap_or(0);
+            if let Some(i) = b.remove(slot) {
                 picked[i] = true;
+                last_hint.insert(*v, hints[i]);
                 n += 1;
                 any = true;
                 if n == max {
@@ -292,6 +372,25 @@ pub(crate) fn fair_take(window: &mut VecDeque<Request>, max: usize) -> Vec<Reque
     }
     *window = rest;
     taken
+}
+
+/// Hash of a request's leading token block — the co-scheduling signal the
+/// prefix cache cares about: two requests with equal hints (almost
+/// certainly) share their first [`PREFIX_BLOCK`] tokens, so seating them
+/// in one window lets one cached (or once-computed) prefix serve both. A
+/// wrong match costs nothing but a missed reorder: correctness never
+/// depends on the hint.
+///
+/// [`PREFIX_BLOCK`]: crate::exec::prefix::PREFIX_BLOCK
+fn prefix_hint(req: &Request) -> u64 {
+    let text = match &req.payload {
+        Payload::Data(DataOp::Score { prompt, .. }) => prompt.as_str(),
+        Payload::Data(DataOp::Perplexity { text }) => text.as_str(),
+        Payload::Admin(_) => return 0,
+    };
+    let tokens = crate::data::corpus::encode(text);
+    let n = tokens.len().min(crate::exec::prefix::PREFIX_BLOCK);
+    crate::exec::prefix::hash_tokens(&tokens[..n])
 }
 
 /// Group an admitted window by variant, preserving arrival order both
@@ -406,6 +505,97 @@ mod tests {
         let taken = fair_take(&mut window, 8);
         assert_eq!(taken.len(), 4);
         assert!(window.is_empty());
+    }
+
+    fn req_text(variant: &str, text: &str) -> Request {
+        Request::new(0, variant, Payload::perplexity(text)).0
+    }
+
+    #[test]
+    fn aimd_grows_on_idle_and_shrinks_on_saturation() {
+        let mut a = AimdBatch::new(8);
+        assert_eq!(a.target(), 8, "starts at the configured cap");
+        // Saturated pool (tiny idle deltas): multiplicative decrease.
+        a.observe_idle_total(10_000);
+        assert_eq!(a.target(), 6);
+        a.observe_idle_total(20_000);
+        a.observe_idle_total(30_000);
+        assert!(a.target() < 6, "repeated saturation keeps shrinking");
+        // Keep shrinking: the floor is 1, never 0.
+        for step in 4..40u64 {
+            a.observe_idle_total(step * 10_000);
+        }
+        assert_eq!(a.target(), 1, "multiplicative decrease floors at 1");
+        // Starved pool (big idle deltas): additive increase back up.
+        let mut total = 400_000u64;
+        for _ in 0..20 {
+            total += AIMD_HIGH_IDLE_NS;
+            a.observe_idle_total(total);
+        }
+        assert_eq!(a.target(), 8, "additive increase is capped at max_batch");
+        // Dead band: a delta between the thresholds holds the target.
+        total += 200_000;
+        a.observe_idle_total(total);
+        assert_eq!(a.target(), 8, "mid-band deltas leave the target alone");
+    }
+
+    #[test]
+    fn engine_core_admits_using_the_adaptive_target() {
+        let mut core = EngineCore::new(1, 4);
+        for _ in 0..8 {
+            core.add_request(req("a"));
+        }
+        // Drive the target down to 1 with saturated (zero-delta after
+        // first) observations.
+        core.observe_idle(1_000);
+        core.observe_idle(2_000);
+        core.observe_idle(3_000);
+        core.observe_idle(4_000);
+        core.observe_idle(5_000);
+        let t = core.batch_target();
+        assert!(t < 4, "saturation must shrink the admission cap, got {t}");
+        let g = core.step().expect("window admitted");
+        let size: usize = g.iter().map(|vg| vg.requests.len()).sum();
+        assert_eq!(size, t, "step admits exactly the adaptive target");
+        // drain() ignores the adaptive target (shutdown flushes at full
+        // width).
+        let d = core.drain().expect("drain flushes");
+        let dsize: usize = d.iter().map(|vg| vg.requests.len()).sum();
+        assert_eq!(dsize, (8 - size).min(4));
+    }
+
+    #[test]
+    fn fair_take_prefers_prefix_sharing_requests_within_a_variant() {
+        // Variant "a" queues [X, Y, X']: X and X' share a leading token
+        // block, Y does not. With room for 3 picks the affinity rule seats
+        // X and X' together (Y waits), and variant "b" still gets its fair
+        // slot.
+        let shared = "common preamble: the quick brown fox jumps over it";
+        let other = "zzz totally unrelated text with a different head";
+        let mut window: VecDeque<Request> = VecDeque::new();
+        window.push_back(req_text("a", shared));
+        window.push_back(req_text("a", other));
+        window.push_back(req_text("a", &format!("{shared} -- but a longer tail")));
+        window.push_back(req_text("b", "whatever"));
+        let taken = fair_take(&mut window, 3);
+        assert_eq!(taken.len(), 3);
+        let a_texts: Vec<&str> = taken
+            .iter()
+            .filter(|r| r.variant == "a")
+            .map(|r| match &r.payload {
+                Payload::Data(DataOp::Perplexity { text }) => text.as_str(),
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(a_texts.len(), 2);
+        assert!(
+            a_texts.iter().all(|t| t.starts_with("common preamble")),
+            "prefix-sharing requests must ride one window, got {a_texts:?}"
+        );
+        // The non-sharing request is left waiting, not dropped.
+        assert_eq!(window.len(), 1);
+        // Fairness held: variant b seated one request.
+        assert!(taken.iter().any(|r| r.variant == "b"));
     }
 
     #[test]

@@ -84,6 +84,15 @@ pub struct MetricsSnapshot {
     pub http_requests: u64,
     /// Manifest long-polls that parked waiting for a registry change.
     pub http_long_polls: u64,
+    /// Sequences that resumed from the cross-window prefix cache.
+    pub prefix_cache_hits: u64,
+    /// Cacheable prefixes that had to be computed cold.
+    pub prefix_cache_misses: u64,
+    /// Bytes resident in the prefix cache (gauge).
+    pub prefix_cache_bytes: u64,
+    /// Stacked activation rows skipped because a cached prefix supplied
+    /// their K/V and logits.
+    pub prefix_rows_skipped: u64,
 }
 
 impl Metrics {
@@ -192,6 +201,10 @@ fn snapshot_inner(i: &Inner) -> MetricsSnapshot {
         engine_steps: crate::exec::counters::engine_steps(),
         http_requests: crate::exec::counters::http_requests(),
         http_long_polls: crate::exec::counters::http_long_polls(),
+        prefix_cache_hits: crate::exec::counters::prefix_cache_hits(),
+        prefix_cache_misses: crate::exec::counters::prefix_cache_misses(),
+        prefix_cache_bytes: crate::exec::counters::prefix_cache_bytes(),
+        prefix_rows_skipped: crate::exec::counters::prefix_rows_skipped(),
     }
 }
 

@@ -52,7 +52,7 @@ use super::request::{
 };
 use super::store::VariantStore;
 use crate::data::corpus::encode;
-use crate::exec::{pool, BatchPlan, ExecMode, VariantWeights};
+use crate::exec::{pool, prefix, BatchPlan, ExecMode, PrefixCache, VariantWeights};
 use crate::model::Transformer;
 use crate::runtime::RuntimeHandle;
 use crate::tensor::ops::log_softmax_into;
@@ -78,6 +78,11 @@ pub struct ServerConfig {
     pub max_batch: usize,
     pub n_workers: usize,
     pub cache_budget_bytes: u64,
+    /// Byte budget of the cross-window prefix/activation cache (LRU of
+    /// per-layer prefix K/V + logits, shared by every worker). Env
+    /// `PAWD_PREFIX_CACHE` overrides it; `0` (either way) disables the
+    /// cache and every window runs the cold stacked forward.
+    pub prefix_cache_bytes: u64,
     /// Dense-vs-fused A/B switch: how delta variants are resident and
     /// executed. The XLA engine forces `Dense` (it consumes flat buffers).
     pub exec: ExecMode,
@@ -94,6 +99,7 @@ impl Default for ServerConfig {
             max_batch: 8,
             n_workers: 2,
             cache_budget_bytes: 1 << 30,
+            prefix_cache_bytes: 64 << 20,
             exec: ExecMode::Fused,
             n_compute_threads: 0,
         }
@@ -105,6 +111,9 @@ pub struct Server {
     next_id: Arc<AtomicU64>,
     pub metrics: Arc<Metrics>,
     pub cache: Arc<VariantCache>,
+    /// The cross-window prefix/activation cache shared by every worker
+    /// (public so tests and tools can inspect residency and stats).
+    pub prefix: Arc<PrefixCache>,
     engine_thread: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
@@ -277,6 +286,7 @@ impl Server {
             Engine::Xla { .. } => ExecMode::Dense,
         });
         let cache = Arc::new(VariantCache::new(store, cfg.cache_budget_bytes));
+        let prefix = Arc::new(PrefixCache::new(cfg.prefix_cache_bytes));
         let (ingress_tx, ingress_rx) = mpsc::channel::<Ingress>();
         let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
         let work_rx = Arc::new(Mutex::new(work_rx));
@@ -291,11 +301,14 @@ impl Server {
             let sync_seqs = sync_seqs.clone();
             let notify = ingress_tx.clone();
             let n_compute = cfg.n_compute_threads;
+            let prefix = prefix.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("pawd-worker-{wid}"))
                     .spawn(move || {
-                        worker_loop(work_rx, cache, metrics, engine, sync_seqs, notify, n_compute)
+                        worker_loop(
+                            work_rx, cache, prefix, metrics, engine, sync_seqs, notify, n_compute,
+                        )
                     })
                     .expect("spawn worker"),
             );
@@ -312,6 +325,7 @@ impl Server {
             next_id: Arc::new(AtomicU64::new(1)),
             metrics,
             cache,
+            prefix,
             engine_thread: Some(engine_thread),
             workers,
         }
@@ -340,6 +354,7 @@ impl Server {
 fn worker_loop(
     work: Arc<Mutex<mpsc::Receiver<WorkItem>>>,
     cache: Arc<VariantCache>,
+    prefix_cache: Arc<PrefixCache>,
     metrics: Arc<Metrics>,
     engine: Engine,
     sync_seqs: Arc<SyncSeqs>,
@@ -392,7 +407,16 @@ fn worker_loop(
                 });
             }
             WorkItem::Window(groups) => {
-                run_window(groups, batch_start, &tf, &cache, &metrics, &engine, &mut last_set);
+                run_window(
+                    groups,
+                    batch_start,
+                    &tf,
+                    &cache,
+                    &prefix_cache,
+                    &metrics,
+                    &engine,
+                    &mut last_set,
+                );
             }
         }
         // Free this worker's slot so the engine can step again (ignore
@@ -405,11 +429,13 @@ fn worker_loop(
 /// with a cache multi-get, group the window into shared-base [`BatchPlan`]s,
 /// and run each plan as one stacked forward (native engine) or fall back to
 /// per-group scoring (XLA engine, which consumes flat buffers).
+#[allow(clippy::too_many_arguments)]
 fn run_window(
     groups: Vec<VariantGroup>,
     batch_start: Instant,
     tf: &Transformer,
     cache: &VariantCache,
+    prefix_cache: &PrefixCache,
     metrics: &Metrics,
     engine: &Engine,
     last_set: &mut Vec<(String, u32)>,
@@ -503,7 +529,7 @@ fn run_window(
                     .iter()
                     .map(|&(entry, gi, ri)| (entry, &loaded[gi].0.requests[ri].payload))
                     .collect();
-                let plan_results = score_plan_native(tf, &plan, &payloads);
+                let plan_results = score_plan_native(tf, &plan, prefix_cache, &payloads);
                 for ((_, gi, ri), r) in refs.into_iter().zip(plan_results) {
                     out[gi][ri] = Some(r);
                 }
@@ -549,6 +575,7 @@ fn run_window(
 fn score_plan_native(
     tf: &Transformer,
     plan: &BatchPlan,
+    prefix_cache: &PrefixCache,
     payloads: &[(usize, &Payload)],
 ) -> Vec<Result<RespBody, String>> {
     enum Pending {
@@ -592,7 +619,10 @@ fn score_plan_native(
             }
         }
     }
-    let logits = tf.forward_plan(plan, &seqs);
+    // The prefix-cache seam: resume shared prefixes from cached per-layer
+    // activations and capture new ones — bitwise-equal to the cold
+    // `forward_plan` (and exactly that when the cache is disabled).
+    let logits = prefix::run_plan(tf, plan, &seqs, prefix_cache);
     pending
         .into_iter()
         .map(|p| match p {

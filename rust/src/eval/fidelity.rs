@@ -83,12 +83,26 @@ pub fn fidelity(
 #[derive(Clone, Debug)]
 pub struct ShootoutRow {
     pub kind: CodecKind,
+    /// Residual rank for [`CodecKind::LowRank`] rows (the sweep emits one
+    /// row per rank); `None` for rank-free codecs.
+    pub rank: Option<usize>,
     /// Held-out validation MSE of the reconstructed module.
     pub val_mse: f64,
     /// Packed artifact bytes for this module.
     pub payload_bytes: u64,
     /// Fused single-module forward throughput (activation rows / second).
     pub fused_rows_per_s: f64,
+}
+
+impl ShootoutRow {
+    /// Codec label with the sweep rank appended for lowrank rows
+    /// (e.g. `lowrank@4`).
+    pub fn label(&self) -> String {
+        match self.rank {
+            Some(r) => format!("{}@{r}", self.kind.label()),
+            None => self.kind.label().to_string(),
+        }
+    }
 }
 
 /// Shoot-out verdict for one module: every codec's row plus the kind the
@@ -98,6 +112,21 @@ pub struct ModuleShootout {
     pub id: ModuleId,
     pub rows: Vec<ShootoutRow>,
     pub selected: CodecKind,
+    /// Rank of the selected row when it is a lowrank row (always the
+    /// configured [`CompressOptions::lowrank_rank`] — sweep rows at other
+    /// ranks are informational and never selected).
+    pub selected_rank: Option<usize>,
+}
+
+impl ModuleShootout {
+    /// The row the selector picked — the codec (and rank) `auto` would
+    /// publish for this module.
+    pub fn selected_row(&self) -> &ShootoutRow {
+        self.rows
+            .iter()
+            .find(|r| r.kind == self.selected && r.rank == self.selected_rank)
+            .expect("selected row is always present")
+    }
 }
 
 /// Time a fused forward through one packed module (rows/second over a
@@ -129,6 +158,12 @@ fn fused_rows_per_s(w_base: &[f32], m: &DeltaModule, iters: usize) -> f64 {
 /// — per-axis ≤ scalar therefore holds on every calibrated module by
 /// construction of the selection rule (they share the same val shard).
 /// Selection keeps per-axis unless a challenger is strictly better.
+///
+/// The lowrank codec is swept over ranks `{2, 4, 8}` plus the configured
+/// [`CompressOptions::lowrank_rank`] (one row per rank, tagged via
+/// [`ShootoutRow::rank`]) so the bytes-vs-MSE trade of the residual rank
+/// is visible per module. Only the configured-rank row is eligible for
+/// selection — it is what `publish` would actually ship.
 pub fn codec_shootout(
     base: &FlatParams,
     finetuned: &FlatParams,
@@ -141,6 +176,14 @@ pub fn codec_shootout(
     if !pa_opts.axes.contains(&Axis::Scalar) {
         pa_opts.axes.push(Axis::Scalar);
     }
+    let lowrank_ranks = {
+        let mut rs = vec![2usize, 4, 8];
+        if !rs.contains(&opts.lowrank_rank) {
+            rs.push(opts.lowrank_rank);
+            rs.sort_unstable();
+        }
+        rs
+    };
     let mut out = Vec::with_capacity(cfg.n_patchable());
     for layer in 0..cfg.n_layers {
         let caches =
@@ -149,25 +192,46 @@ pub fn codec_shootout(
             let id = ModuleId { layer, kind };
             let w_base = base.module(id);
             let w_ft = finetuned.module(id);
-            let mut rows = Vec::with_capacity(CodecKind::ALL.len());
-            for &ck in CodecKind::ALL.iter() {
-                let (m, rep) = codec_for(ck).encode(id, w_base, w_ft, &caches[&kind], &pa_opts);
+            let measure = |ck: CodecKind, eopts: &CompressOptions, rank: Option<usize>| {
+                let (m, rep) = codec_for(ck).encode(id, w_base, w_ft, &caches[&kind], eopts);
                 let cand = &rep.codec_candidates[0];
-                rows.push(ShootoutRow {
+                ShootoutRow {
                     kind: ck,
+                    rank,
                     val_mse: cand.val_mse,
                     payload_bytes: cand.payload_bytes,
                     fused_rows_per_s: fused_rows_per_s(w_base, &m, 8),
-                });
+                }
+            };
+            let mut rows = Vec::with_capacity(CodecKind::ALL.len() + lowrank_ranks.len() - 1);
+            for &ck in CodecKind::ALL.iter() {
+                if ck == CodecKind::LowRank {
+                    for &rank in &lowrank_ranks {
+                        let mut r_opts = pa_opts.clone();
+                        r_opts.lowrank_rank = rank;
+                        rows.push(measure(ck, &r_opts, Some(rank)));
+                    }
+                } else {
+                    rows.push(measure(ck, &pa_opts, None));
+                }
             }
-            // Same incumbent rule as `encode_auto`: per-axis wins ties.
-            let mut selected = 0;
+            // Same incumbent rule as `encode_auto`, restricted to the rows
+            // `auto` can actually publish (sweep rows at non-configured
+            // ranks are informational only): per-axis wins ties.
+            let eligible =
+                |r: &ShootoutRow| r.rank.is_none() || r.rank == Some(opts.lowrank_rank);
+            let mut selected = 0; // rows[0] is per-axis: always eligible
             for (i, r) in rows.iter().enumerate().skip(1) {
-                if r.val_mse < rows[selected].val_mse {
+                if eligible(r) && r.val_mse < rows[selected].val_mse {
                     selected = i;
                 }
             }
-            out.push(ModuleShootout { id, selected: rows[selected].kind, rows });
+            out.push(ModuleShootout {
+                id,
+                selected: rows[selected].kind,
+                selected_rank: rows[selected].rank,
+                rows,
+            });
         }
     }
     out
@@ -186,11 +250,11 @@ pub fn render_shootout(results: &[ModuleShootout]) -> String {
             s.push_str(&format!(
                 "{:<12} {:>9} {:>14.6e} {:>12} {:>14.0} {}\n",
                 ms.id.to_string(),
-                r.kind.label(),
+                r.label(),
                 r.val_mse,
                 r.payload_bytes,
                 r.fused_rows_per_s,
-                if r.kind == ms.selected { "*" } else { "" }
+                if r.kind == ms.selected && r.rank == ms.selected_rank { "*" } else { "" }
             ));
         }
     }
@@ -266,7 +330,7 @@ mod tests {
             let by = |k: CodecKind| ms.rows.iter().find(|r| r.kind == k).unwrap();
             let pa = by(CodecKind::PerAxis);
             let sc = by(CodecKind::Scalar);
-            let sel = by(ms.selected);
+            let sel = ms.selected_row();
             assert!(
                 pa.val_mse <= sc.val_mse,
                 "{}: per-axis {} must not lose to scalar {}",
@@ -286,9 +350,28 @@ mod tests {
                 assert!(r.fused_rows_per_s > 0.0);
                 assert!(r.payload_bytes > 0);
             }
+            // The lowrank sweep emits one row per rank in {2, 4, 8} (the
+            // default configured rank is 4) and bytes grow with rank.
+            let ranks: Vec<usize> = ms
+                .rows
+                .iter()
+                .filter(|r| r.kind == CodecKind::LowRank)
+                .map(|r| r.rank.unwrap())
+                .collect();
+            assert_eq!(ranks, vec![2, 4, 8], "{}: lowrank sweep ranks", ms.id);
+            let lr = |rank: usize| ms.rows.iter().find(|r| r.rank == Some(rank)).unwrap();
+            assert!(lr(2).payload_bytes < lr(4).payload_bytes);
+            assert!(lr(4).payload_bytes < lr(8).payload_bytes);
+            // Only the configured rank is selectable.
+            if ms.selected == CodecKind::LowRank {
+                assert_eq!(ms.selected_rank, Some(opts.lowrank_rank));
+            } else {
+                assert_eq!(ms.selected_rank, None);
+            }
         }
         let rendered = render_shootout(&results);
         assert!(rendered.contains("per-axis") && rendered.contains('*'));
+        assert!(rendered.contains("lowrank@2") && rendered.contains("lowrank@8"));
     }
 
     #[test]

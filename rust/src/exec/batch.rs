@@ -133,6 +133,20 @@ impl BatchPlan {
     pub fn packed_entries(&self) -> usize {
         self.entries.iter().filter(|e| matches!(e, PlanEntry::Packed(_))).count()
     }
+
+    /// The weights identity executed by plan entry `entry`: the shared base
+    /// `Arc` plus this entry's delta `Arc` (`None` for base/dense rows).
+    /// This pair is the prefix cache's key — activations produced by two
+    /// entries are interchangeable iff both `Arc`s are the same objects.
+    pub fn entry_weights(
+        &self,
+        entry: usize,
+    ) -> (&Arc<FlatParams>, Option<&Arc<crate::delta::DeltaModel>>) {
+        match &self.entries[entry] {
+            PlanEntry::Base => (&self.base, None),
+            PlanEntry::Packed(pv) => (&self.base, Some(pv.delta())),
+        }
+    }
 }
 
 impl BatchSource for BatchPlan {

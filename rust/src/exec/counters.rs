@@ -29,6 +29,10 @@ static ENGINE_STEPS: AtomicU64 = AtomicU64::new(0);
 static ACT_ROW_READS: AtomicU64 = AtomicU64::new(0);
 static HTTP_REQUESTS: AtomicU64 = AtomicU64::new(0);
 static HTTP_LONG_POLLS: AtomicU64 = AtomicU64::new(0);
+static PREFIX_HITS: AtomicU64 = AtomicU64::new(0);
+static PREFIX_MISSES: AtomicU64 = AtomicU64::new(0);
+static PREFIX_BYTES: AtomicU64 = AtomicU64::new(0);
+static PREFIX_ROWS_SKIPPED: AtomicU64 = AtomicU64::new(0);
 
 /// Record one pass of activations through a resident base/dense weight
 /// matrix.
@@ -105,6 +109,33 @@ pub(crate) fn record_http_long_poll() {
     HTTP_LONG_POLLS.fetch_add(1, Ordering::Relaxed);
 }
 
+/// Record `n` sequences that resumed from (or inserted into) the prefix
+/// cache with a reusable entry.
+pub(crate) fn record_prefix_hits(n: u64) {
+    PREFIX_HITS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Record `n` cacheable prefixes that had to be computed cold.
+pub(crate) fn record_prefix_misses(n: u64) {
+    PREFIX_MISSES.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Install the current prefix-cache resident byte total. This is a gauge,
+/// not an accumulator: each [`PrefixCache`](super::prefix::PrefixCache)
+/// stores its post-insert/evict total, so with several caches in one
+/// process the value is last-writer-wins (a measurement aid, like every
+/// counter here).
+pub(crate) fn set_prefix_cache_bytes(n: u64) {
+    PREFIX_BYTES.store(n, Ordering::Relaxed);
+}
+
+/// Record `n` stacked activation rows skipped because a cached prefix
+/// supplied their K/V and logits (per layer work avoided is `n` rows of
+/// every projection GEMM).
+pub(crate) fn record_prefix_rows_skipped(n: u64) {
+    PREFIX_ROWS_SKIPPED.fetch_add(n, Ordering::Relaxed);
+}
+
 /// Total base GEMMs since process start (or the last [`reset`]).
 pub fn base_gemms() -> u64 {
     BASE_GEMMS.load(Ordering::Relaxed)
@@ -168,6 +199,27 @@ pub fn http_long_polls() -> u64 {
     HTTP_LONG_POLLS.load(Ordering::Relaxed)
 }
 
+/// Total sequences served from a cached token prefix.
+pub fn prefix_cache_hits() -> u64 {
+    PREFIX_HITS.load(Ordering::Relaxed)
+}
+
+/// Total cacheable prefixes computed cold.
+pub fn prefix_cache_misses() -> u64 {
+    PREFIX_MISSES.load(Ordering::Relaxed)
+}
+
+/// Bytes currently resident in the prefix cache (gauge; last cache to
+/// update wins when several run in one process).
+pub fn prefix_cache_bytes() -> u64 {
+    PREFIX_BYTES.load(Ordering::Relaxed)
+}
+
+/// Total stacked activation rows skipped thanks to cached prefixes.
+pub fn prefix_rows_skipped() -> u64 {
+    PREFIX_ROWS_SKIPPED.load(Ordering::Relaxed)
+}
+
 /// Reset all counters to zero (benches/tests only).
 pub fn reset() {
     BASE_GEMMS.store(0, Ordering::Relaxed);
@@ -182,6 +234,10 @@ pub fn reset() {
     ACT_ROW_READS.store(0, Ordering::Relaxed);
     HTTP_REQUESTS.store(0, Ordering::Relaxed);
     HTTP_LONG_POLLS.store(0, Ordering::Relaxed);
+    PREFIX_HITS.store(0, Ordering::Relaxed);
+    PREFIX_MISSES.store(0, Ordering::Relaxed);
+    PREFIX_BYTES.store(0, Ordering::Relaxed);
+    PREFIX_ROWS_SKIPPED.store(0, Ordering::Relaxed);
 }
 
 #[cfg(test)]

@@ -12,6 +12,11 @@
 //! * [`counters`] — global op counters (base GEMMs, pool tasks,
 //!   activation-row reads, engine steps) the benches use to assert the
 //!   shared-base and single-pass structure.
+//! * [`prefix`] — the cross-window [`PrefixCache`]: byte-budgeted LRU of
+//!   per-layer prefix activations keyed by weights identity + token-prefix
+//!   hash, so identical prompt prefixes share GEMM work across windows and
+//!   across variants (bitwise-equal to the cold path; `PAWD_PREFIX_CACHE=0`
+//!   kill-switch).
 //! * [`pool`] — the persistent intra-host compute pool behind
 //!   [`par`](crate::util::par): dynamic chunk claiming over parked workers,
 //!   width set by `PAWD_COMPUTE_THREADS` / `ServerConfig::n_compute_threads`
@@ -28,8 +33,10 @@ pub mod batch;
 pub mod counters;
 pub mod linear;
 pub mod pool;
+pub mod prefix;
 pub mod weights;
 
 pub use batch::{BatchPlan, BatchSource, RowSpan, Uniform};
 pub use linear::{signed_sum, AnyLinear, DenseLinear, FusedDeltaLinear, LinearOp};
+pub use prefix::{PrefixCache, PrefixState};
 pub use weights::{ExecMode, PackedVariant, VariantWeights, Weights};

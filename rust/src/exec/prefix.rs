@@ -1,0 +1,571 @@
+//! Cross-window prefix/activation cache: requests whose token sequences
+//! share a leading prefix reuse that prefix's per-layer activations across
+//! engine windows instead of recomputing them — the multi-tenant redundancy
+//! DeltaZip's serving analysis points at, attacked at the activation level.
+//!
+//! **What is cached.** A [`PrefixState`]: for one token prefix of length
+//! `P`, every layer's post-RoPE K and V rows (`[P, d]` each) plus the
+//! prefix's logits (`[P, vocab]`). That is exactly the state a resumed
+//! forward needs — suffix rows attend over the cached K/V (memcpy'd, bits
+//! preserved) and the full logits are stitched from cached + computed rows.
+//! Cut-points sit only at row/layer boundaries, never inside a single FP
+//! reduction, so cached == uncached **bitwise** (same rule as the compute
+//! pool; the property tests assert exact equality at pool widths 1 and 4).
+//!
+//! **Keying and invalidation.** Activations depend on the weights that
+//! produced them, so entries are keyed by *weights identity* — the base
+//! parameter `Arc` plus the executing delta `Arc` (`None` for base/dense
+//! rows) — alongside the token-prefix hash and length. Two consequences:
+//!
+//! * **A delta publish never invalidates anything.** Publishing `variant@N+1`
+//!   composes a *new* [`DeltaModel`](crate::delta::DeltaModel) `Arc`; the old
+//!   version's entries stay valid for in-flight work and the new version
+//!   simply misses into fresh entries. There is no flush path keyed on
+//!   publish at all — the tests assert cached bytes survive a
+//!   `publish_incremental` and stay bitwise-correct.
+//! * **Base-model changes invalidate implicitly and explicitly.** Entries
+//!   hold [`Weak`] references; dropping a base (or delta) `Arc` makes its
+//!   entries unresumable and they are reaped on lookup. [`invalidate_base`]
+//!   drops a base's entries eagerly. The held `Weak` also pins the
+//!   allocation, so a recycled address can never alias a dead key (the
+//!   classic ABA hazard of raw-pointer keys).
+//!
+//! [`invalidate_base`]: PrefixCache::invalidate_base
+//!
+//! **Budget.** Byte-accounted LRU under `ServerConfig::prefix_cache_bytes`
+//! (default 64 MiB). Env `PAWD_PREFIX_CACHE` overrides the budget; `0` is
+//! the kill-switch — every lookup misses, every insert is dropped, and the
+//! serving path degrades to the cold stacked forward (tier-1 CI runs the
+//! whole suite once in that mode).
+
+use super::batch::BatchPlan;
+use super::counters;
+use crate::delta::DeltaModel;
+use crate::model::transformer::PlanSeq;
+use crate::model::{FlatParams, Transformer};
+use crate::tensor::Tensor2;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, Weak};
+
+/// Prefix lengths are quantized to multiples of this block so nearly-equal
+/// prompts still share entries and the key space stays small. Eight tokens
+/// ≈ one cache line of token bytes; prompts shorter than one block are
+/// never cached.
+pub const PREFIX_BLOCK: usize = 8;
+
+/// Cached forward state for one token prefix under one weights identity:
+/// per-layer post-RoPE K/V rows and the prefix logits. Produced by
+/// [`Transformer::forward_plan_prefixed`] `capture`, consumed by its
+/// `resume`.
+pub struct PrefixState {
+    /// The exact prefix tokens (collision guard: lookups compare bytes,
+    /// never trust the hash alone).
+    pub tokens: Vec<u8>,
+    /// Per layer: post-RoPE key rows `[P, d]`.
+    pub k: Vec<Tensor2>,
+    /// Per layer: value rows `[P, d]`.
+    pub v: Vec<Tensor2>,
+    /// Prefix logits `[P, vocab]` — resumed sequences stitch these back
+    /// into their full output.
+    pub logits: Tensor2,
+}
+
+impl PrefixState {
+    /// Prefix length in tokens.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// True when the state covers zero tokens.
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Resident bytes: every cached f32 plus the token bytes.
+    pub fn bytes(&self) -> u64 {
+        let floats: usize = self
+            .k
+            .iter()
+            .chain(self.v.iter())
+            .map(|t| t.data.len())
+            .sum::<usize>()
+            + self.logits.data.len();
+        (floats * 4 + self.tokens.len()) as u64
+    }
+}
+
+/// FNV-1a over the token bytes — stable, dependency-free, and cheap enough
+/// to run per request at admission time.
+pub fn hash_tokens(tokens: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in tokens {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Largest multiple of [`PREFIX_BLOCK`] that is `<= n`.
+fn block_floor(n: usize) -> usize {
+    n / PREFIX_BLOCK * PREFIX_BLOCK
+}
+
+/// Weights identity: `(base Arc address, delta Arc address or 0)`. Raw
+/// addresses alone would be ABA-unsafe; the cache entry's [`Weak`]s pin the
+/// allocations and prove liveness, the key only routes to the entry.
+type WeightsKey = (usize, usize);
+
+fn weights_key(base: &Arc<FlatParams>, delta: Option<&Arc<DeltaModel>>) -> WeightsKey {
+    (Arc::as_ptr(base) as usize, delta.map_or(0, |d| Arc::as_ptr(d) as usize))
+}
+
+struct Entry {
+    state: Arc<PrefixState>,
+    base: Weak<FlatParams>,
+    delta: Option<Weak<DeltaModel>>,
+    bytes: u64,
+    last_used: u64,
+}
+
+impl Entry {
+    /// True iff this entry was produced by exactly these weight objects:
+    /// each `Weak` still upgrades (the allocation is alive *and* strong
+    /// refs remain) and the upgraded `Arc` is pointer-equal to the query.
+    fn live_for(&self, base: &Arc<FlatParams>, delta: Option<&Arc<DeltaModel>>) -> bool {
+        let base_ok = self.base.upgrade().is_some_and(|b| Arc::ptr_eq(&b, base));
+        let delta_ok = match (&self.delta, delta) {
+            (None, None) => true,
+            (Some(w), Some(d)) => w.upgrade().is_some_and(|a| Arc::ptr_eq(&a, d)),
+            _ => false,
+        };
+        base_ok && delta_ok
+    }
+}
+
+struct Inner {
+    map: HashMap<(WeightsKey, u64, usize), Entry>,
+    clock: u64,
+    used: u64,
+    hits: u64,
+    misses: u64,
+    rows_skipped: u64,
+}
+
+/// Point-in-time cache statistics (instance-local; the global
+/// [`counters`](super::counters) aggregate across caches).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub rows_skipped: u64,
+    pub bytes: u64,
+    pub entries: usize,
+}
+
+/// Byte-budgeted LRU cache of [`PrefixState`]s, keyed by
+/// `(weights identity, token-prefix hash, prefix length)`.
+pub struct PrefixCache {
+    budget: u64,
+    inner: Mutex<Inner>,
+}
+
+/// Resolve the effective byte budget: the config value unless the
+/// `PAWD_PREFIX_CACHE` env var parses as a u64 (then the env wins; `0`
+/// disables the cache entirely). Unparsable values fall back to config.
+pub fn effective_budget(cfg_bytes: u64, env: Option<&str>) -> u64 {
+    match env {
+        Some(s) => s.trim().parse::<u64>().unwrap_or(cfg_bytes),
+        None => cfg_bytes,
+    }
+}
+
+impl PrefixCache {
+    /// Cache with the configured budget, honoring the `PAWD_PREFIX_CACHE`
+    /// env override/kill-switch (the serving path constructor).
+    pub fn new(cfg_bytes: u64) -> Self {
+        let env = std::env::var("PAWD_PREFIX_CACHE").ok();
+        Self::with_budget(effective_budget(cfg_bytes, env.as_deref()))
+    }
+
+    /// Cache with exactly this budget, ignoring the environment — tests
+    /// asserting cache activity use this so a `PAWD_PREFIX_CACHE=0` CI run
+    /// (which must keep the *cold* path green) doesn't flip their behavior.
+    pub fn with_budget(budget: u64) -> Self {
+        PrefixCache {
+            budget,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                clock: 0,
+                used: 0,
+                hits: 0,
+                misses: 0,
+                rows_skipped: 0,
+            }),
+        }
+    }
+
+    /// False when the kill-switch zeroed the budget: lookups miss, inserts
+    /// drop, the serving path runs cold.
+    pub fn enabled(&self) -> bool {
+        self.budget > 0
+    }
+
+    /// The byte budget this cache evicts down to.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget
+    }
+
+    /// Bytes currently resident.
+    pub fn used_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().used
+    }
+
+    /// Number of resident entries.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// True when no entries are resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Instance-local statistics snapshot.
+    pub fn stats(&self) -> PrefixStats {
+        let g = self.inner.lock().unwrap();
+        PrefixStats {
+            hits: g.hits,
+            misses: g.misses,
+            rows_skipped: g.rows_skipped,
+            bytes: g.used,
+            entries: g.map.len(),
+        }
+    }
+
+    /// Longest cached prefix of `tokens` (at most `max_len` tokens, walked
+    /// down in [`PREFIX_BLOCK`] steps) that is resumable under exactly
+    /// these weights. Dead entries (weights dropped) and hash collisions
+    /// met on the walk are reaped in passing.
+    pub fn lookup(
+        &self,
+        base: &Arc<FlatParams>,
+        delta: Option<&Arc<DeltaModel>>,
+        tokens: &[u8],
+        max_len: usize,
+    ) -> Option<Arc<PrefixState>> {
+        if !self.enabled() {
+            return None;
+        }
+        let key = weights_key(base, delta);
+        let mut g = self.inner.lock().unwrap();
+        let mut p = block_floor(max_len.min(tokens.len()));
+        while p >= PREFIX_BLOCK {
+            let map_key = (key, hash_tokens(&tokens[..p]), p);
+            if let Some(e) = g.map.get(&map_key) {
+                if e.live_for(base, delta) && e.state.tokens[..] == tokens[..p] {
+                    g.clock += 1;
+                    let now = g.clock;
+                    let e = g.map.get_mut(&map_key).unwrap();
+                    e.last_used = now;
+                    return Some(e.state.clone());
+                }
+                // Dead weights or a hash collision: reap and keep walking.
+                let dead = g.map.remove(&map_key).unwrap();
+                g.used -= dead.bytes;
+                counters::set_prefix_cache_bytes(g.used);
+            }
+            p -= PREFIX_BLOCK;
+        }
+        None
+    }
+
+    /// Insert a captured state under these weights, evicting
+    /// least-recently-used entries until it fits. States larger than the
+    /// whole budget are dropped (the cold path stays correct regardless).
+    pub fn insert(
+        &self,
+        base: &Arc<FlatParams>,
+        delta: Option<&Arc<DeltaModel>>,
+        state: Arc<PrefixState>,
+    ) {
+        let bytes = state.bytes();
+        if !self.enabled() || bytes > self.budget || state.len() < PREFIX_BLOCK {
+            return;
+        }
+        let key = weights_key(base, delta);
+        let map_key = (key, hash_tokens(&state.tokens), state.len());
+        let mut g = self.inner.lock().unwrap();
+        if let Some(old) = g.map.remove(&map_key) {
+            g.used -= old.bytes;
+        }
+        while g.used + bytes > self.budget {
+            let victim = g.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    let e = g.map.remove(&k).unwrap();
+                    g.used -= e.bytes;
+                }
+                None => break,
+            }
+        }
+        g.clock += 1;
+        let entry = Entry {
+            state,
+            base: Arc::downgrade(base),
+            delta: delta.map(Arc::downgrade),
+            bytes,
+            last_used: g.clock,
+        };
+        g.map.insert(map_key, entry);
+        g.used += bytes;
+        counters::set_prefix_cache_bytes(g.used);
+    }
+
+    /// Eagerly drop every entry produced against this base model. The only
+    /// event that must invalidate: swapping the base weights. (Delta
+    /// publishes never reach here — new versions are new `Arc`s that miss
+    /// into fresh entries while old entries age out.)
+    pub fn invalidate_base(&self, base: &Arc<FlatParams>) {
+        let mut g = self.inner.lock().unwrap();
+        let key = Arc::as_ptr(base) as usize;
+        let doomed: Vec<_> = g.map.keys().filter(|(k, _, _)| k.0 == key).copied().collect();
+        for k in doomed {
+            let e = g.map.remove(&k).unwrap();
+            g.used -= e.bytes;
+        }
+        counters::set_prefix_cache_bytes(g.used);
+    }
+
+    /// Fold one window's outcome into the instance stats and the global
+    /// counters.
+    fn record_use(&self, hits: u64, misses: u64, rows_skipped: u64) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.hits += hits;
+            g.misses += misses;
+            g.rows_skipped += rows_skipped;
+        }
+        counters::record_prefix_hits(hits);
+        counters::record_prefix_misses(misses);
+        counters::record_prefix_rows_skipped(rows_skipped);
+    }
+}
+
+/// Run one engine window's stacked forward through the prefix cache:
+/// group the window's sequences by (weights identity, shared block-aligned
+/// prefix), resume every group from the longest cached prefix, compute a
+/// missed shared prefix **once** for its whole group, and capture new
+/// prefixes for future windows. Falls back to the plain cold
+/// [`Transformer::forward_plan`] when the cache is disabled or nothing is
+/// cacheable — and is bitwise-equal to it in every case.
+pub fn run_plan(
+    tf: &Transformer,
+    plan: &BatchPlan,
+    seqs: &[(usize, Vec<u8>)],
+    cache: &PrefixCache,
+) -> Vec<Tensor2> {
+    if !cache.enabled() || seqs.is_empty() {
+        return tf.forward_plan(plan, seqs);
+    }
+    // Group sequence indices by (weights identity, candidate prefix).
+    // `cand = block_floor(T-1)` guarantees at least one suffix row, so a
+    // full-hit resume never degenerates to zero computed rows.
+    let mut groups: HashMap<(WeightsKey, u64, usize), Vec<usize>> = HashMap::new();
+    let mut order: Vec<(WeightsKey, u64, usize)> = Vec::new();
+    for (i, (entry, tokens)) in seqs.iter().enumerate() {
+        let cand = block_floor(tokens.len().saturating_sub(1));
+        if cand < PREFIX_BLOCK {
+            continue;
+        }
+        let (base, delta) = plan.entry_weights(*entry);
+        let gk = (weights_key(base, delta), hash_tokens(&tokens[..cand]), cand);
+        if let Some(members) = groups.get_mut(&gk) {
+            // Hash-collision guard within the window: only byte-identical
+            // prefixes ride one group.
+            let first = members[0];
+            if seqs[first].1[..cand] == tokens[..cand] {
+                members.push(i);
+            }
+        } else {
+            groups.insert(gk, vec![i]);
+            order.push(gk);
+        }
+    }
+
+    let mut resume: Vec<Option<Arc<PrefixState>>> = vec![None; seqs.len()];
+    let mut capture: Vec<usize> = vec![0; seqs.len()];
+    let (mut hits, mut misses, mut skipped) = (0u64, 0u64, 0u64);
+    for gk in &order {
+        let members = &groups[gk];
+        let (_, _, cand) = *gk;
+        let (entry, tokens) = &seqs[members[0]];
+        let (base, delta) = plan.entry_weights(*entry);
+        let (base, delta) = (base.clone(), delta.cloned());
+        let found = cache.lookup(&base, delta.as_ref(), tokens, cand);
+        match found {
+            Some(state) if state.len() == cand => {
+                for &m in members {
+                    resume[m] = Some(state.clone());
+                }
+                hits += members.len() as u64;
+                skipped += (cand * members.len()) as u64;
+            }
+            shorter => {
+                misses += 1;
+                let p0 = shorter.as_ref().map_or(0, |s| s.len());
+                if members.len() >= 2 {
+                    // Compute the shared prefix ONCE for the whole group
+                    // (resuming any shorter cached prefix), cache it, then
+                    // every member resumes it below.
+                    let seq = PlanSeq {
+                        entry: *entry,
+                        tokens: &tokens[..cand],
+                        resume: shorter.as_deref(),
+                        capture: cand,
+                    };
+                    let (_, mut caps) = tf.forward_plan_prefixed(plan, &[seq]);
+                    let state = Arc::new(caps.remove(0).expect("capture requested"));
+                    cache.insert(&base, delta.as_ref(), state.clone());
+                    for &m in members {
+                        resume[m] = Some(state.clone());
+                    }
+                    hits += members.len() as u64 - 1;
+                    skipped += (p0 + cand * (members.len() - 1)) as u64;
+                } else {
+                    // Solo sequence: resume whatever shorter prefix exists
+                    // and capture the candidate for future windows.
+                    let m = members[0];
+                    resume[m] = shorter;
+                    capture[m] = cand;
+                    skipped += p0 as u64;
+                }
+            }
+        }
+    }
+    cache.record_use(hits, misses, skipped);
+
+    if resume.iter().all(Option::is_none) && capture.iter().all(|&c| c == 0) {
+        return tf.forward_plan(plan, seqs);
+    }
+    let plan_seqs: Vec<PlanSeq> = seqs
+        .iter()
+        .enumerate()
+        .map(|(i, (entry, tokens))| PlanSeq {
+            entry: *entry,
+            tokens,
+            resume: resume[i].as_deref(),
+            capture: capture[i],
+        })
+        .collect();
+    let (logits, caps) = tf.forward_plan_prefixed(plan, &plan_seqs);
+    for (i, cap) in caps.into_iter().enumerate() {
+        if let Some(state) = cap {
+            let (base, delta) = plan.entry_weights(seqs[i].0);
+            let (base, delta) = (base.clone(), delta.cloned());
+            cache.insert(&base, delta.as_ref(), Arc::new(state));
+        }
+    }
+    logits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn tiny_state(tokens: Vec<u8>, d: usize) -> Arc<PrefixState> {
+        let p = tokens.len();
+        Arc::new(PrefixState {
+            tokens,
+            k: vec![Tensor2::zeros(p, d)],
+            v: vec![Tensor2::zeros(p, d)],
+            logits: Tensor2::zeros(p, 4),
+        })
+    }
+
+    #[test]
+    fn hash_and_block_floor_basics() {
+        assert_eq!(hash_tokens(b"abc"), hash_tokens(b"abc"));
+        assert_ne!(hash_tokens(b"abc"), hash_tokens(b"abd"));
+        assert_eq!(block_floor(0), 0);
+        assert_eq!(block_floor(7), 0);
+        assert_eq!(block_floor(8), 8);
+        assert_eq!(block_floor(23), 16);
+    }
+
+    #[test]
+    fn effective_budget_env_rules() {
+        assert_eq!(effective_budget(100, None), 100);
+        assert_eq!(effective_budget(100, Some("0")), 0);
+        assert_eq!(effective_budget(100, Some("4096")), 4096);
+        assert_eq!(effective_budget(100, Some(" 7 ")), 7);
+        assert_eq!(effective_budget(100, Some("not-a-number")), 100);
+    }
+
+    #[test]
+    fn insert_lookup_and_weak_liveness() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = Arc::new(FlatParams::init(&cfg, 1));
+        let cache = PrefixCache::with_budget(1 << 20);
+        let toks: Vec<u8> = (0..8).collect();
+        cache.insert(&base, None, tiny_state(toks.clone(), 4));
+        assert_eq!(cache.len(), 1);
+        let long: Vec<u8> = (0..20).collect();
+        let hit = cache.lookup(&base, None, &long, 16).expect("prefix hit");
+        assert_eq!(hit.len(), 8);
+        // A different base Arc (even with identical contents) never hits.
+        let other = Arc::new(FlatParams::init(&cfg, 1));
+        assert!(cache.lookup(&other, None, &long, 16).is_none());
+        // Dropping the base makes the entry dead: its Weak pins the old
+        // allocation (no ABA address reuse) but can no longer upgrade, so
+        // no future Arc can ever hit it.
+        drop(base);
+        let base2 = Arc::new(FlatParams::init(&cfg, 2));
+        assert!(cache.lookup(&base2, None, &long, 16).is_none());
+    }
+
+    #[test]
+    fn eviction_keeps_used_within_budget() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = Arc::new(FlatParams::init(&cfg, 3));
+        let one = tiny_state((0..8).collect(), 4).bytes();
+        let cache = PrefixCache::with_budget(one * 2);
+        for s in 0u8..5 {
+            let toks: Vec<u8> = (0..8).map(|i| i + s * 10).collect();
+            cache.insert(&base, None, tiny_state(toks, 4));
+            assert!(cache.used_bytes() <= cache.budget_bytes());
+        }
+        assert!(cache.len() <= 2);
+        // Most recent entry survives.
+        let last: Vec<u8> = (0..9).map(|i| i + 40).collect();
+        assert!(cache.lookup(&base, None, &last, 8).is_some());
+    }
+
+    #[test]
+    fn kill_switch_disables_everything() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = Arc::new(FlatParams::init(&cfg, 4));
+        let cache = PrefixCache::with_budget(0);
+        assert!(!cache.enabled());
+        cache.insert(&base, None, tiny_state((0..8).collect(), 4));
+        assert_eq!(cache.len(), 0);
+        let long: Vec<u8> = (0..12).collect();
+        assert!(cache.lookup(&base, None, &long, 8).is_none());
+    }
+
+    #[test]
+    fn invalidate_base_drops_only_that_base() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let a = Arc::new(FlatParams::init(&cfg, 5));
+        let b = Arc::new(FlatParams::init(&cfg, 6));
+        let cache = PrefixCache::with_budget(1 << 20);
+        cache.insert(&a, None, tiny_state((0..8).collect(), 4));
+        cache.insert(&b, None, tiny_state((0..8).collect(), 4));
+        assert_eq!(cache.len(), 2);
+        cache.invalidate_base(&a);
+        assert_eq!(cache.len(), 1);
+        let long: Vec<u8> = (0..12).collect();
+        assert!(cache.lookup(&a, None, &long, 8).is_none());
+        assert!(cache.lookup(&b, None, &long, 8).is_some());
+    }
+}

@@ -29,7 +29,7 @@ USAGE:
                                                  GET /v1/sync/file/<name>
   pawd bench-load <base.fp16> <variant_dir> <n>  time cold loads of every variant n times
   pawd publish <variant_dir> <name> <delta.pawd> [--parent [N]]
-               [--fit <base.fp16> <ft.fp16>] [--codec <c>]
+               [--fit <base.fp16> <ft.fp16>] [--codec <c>] [--lowrank-rank N]
                                                  publish the next version of a variant;
                                                  with --parent, ship an incremental patch
                                                  carrying only the modules changed vs N
@@ -38,7 +38,9 @@ USAGE:
                                                  pair into <delta.pawd> using --codec
                                                  (per-axis | scalar | lowrank | auto;
                                                  auto = per-module shoot-out on
-                                                 calibration error, default per-axis)
+                                                 calibration error, default per-axis);
+                                                 --lowrank-rank sets the lowrank codec's
+                                                 rank (default 4)
   pawd consolidate <variant_dir> <name> [version]
                                                  rebase a version's patch chain into a
                                                  single full artifact in place
@@ -208,9 +210,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             let snap = server.metrics.snapshot();
             println!(
                 "served {} requests ({} http requests, {} manifest long-polls), \
-                 {} cold starts, {} engine steps",
-                snap.served, snap.http_requests, snap.http_long_polls, snap.cold_starts,
-                snap.engine_steps
+                 {} cold starts, {} engine steps, prefix cache {}/{} hit/miss \
+                 ({} resident, {} rows skipped)",
+                snap.served,
+                snap.http_requests,
+                snap.http_long_polls,
+                snap.cold_starts,
+                snap.engine_steps,
+                snap.prefix_cache_hits,
+                snap.prefix_cache_misses,
+                fmt_bytes(snap.prefix_cache_bytes),
+                snap.prefix_rows_skipped
             );
         }
     }
@@ -223,13 +233,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let snap = server.metrics.snapshot();
     println!(
         "served {} requests ({} http requests, {} manifest long-polls), {} cold starts, \
-         {} engine steps, {} pool tasks",
+         {} engine steps, {} pool tasks, prefix cache {}/{} hit/miss ({} resident, \
+         {} rows skipped)",
         snap.served,
         snap.http_requests,
         snap.http_long_polls,
         snap.cold_starts,
         snap.engine_steps,
-        snap.pool_tasks
+        snap.pool_tasks,
+        snap.prefix_cache_hits,
+        snap.prefix_cache_misses,
+        fmt_bytes(snap.prefix_cache_bytes),
+        snap.prefix_rows_skipped
     );
     server.shutdown();
     Ok(())
@@ -242,6 +257,7 @@ fn cmd_publish(args: &[String]) -> Result<()> {
     let mut parent: Option<u32> = None;
     let mut fit: Option<(String, String)> = None;
     let mut codec = pawd::delta::CodecChoice::PerAxis;
+    let mut lowrank_rank: Option<usize> = None;
     let mut i = 0;
     while i < args.len() {
         if args[i] == "--parent" {
@@ -262,6 +278,17 @@ fn cmd_publish(args: &[String]) -> Result<()> {
             codec = pawd::delta::CodecChoice::parse(c)
                 .with_context(|| format!("unknown codec '{c}' (per-axis|scalar|lowrank|auto)"))?;
             i += 2;
+        } else if args[i] == "--lowrank-rank" {
+            let r = args
+                .get(i + 1)
+                .context("--lowrank-rank needs a value (e.g. 4)")?
+                .parse::<usize>()
+                .context("bad --lowrank-rank value")?;
+            if r == 0 {
+                bail!("--lowrank-rank must be >= 1");
+            }
+            lowrank_rank = Some(r);
+            i += 2;
         } else {
             positional.push(&args[i]);
             i += 1;
@@ -278,11 +305,14 @@ fn cmd_publish(args: &[String]) -> Result<()> {
         let docs: Vec<Vec<u8>> = (0..6)
             .map(|i| (0..48).map(|t| ((t * 7 + i * 13) % 250 + 1) as u8).collect())
             .collect();
-        let opts = pawd::delta::CompressOptions {
+        let mut opts = pawd::delta::CompressOptions {
             fit: pawd::delta::FitMode::ClosedForm,
             codec,
             ..Default::default()
         };
+        if let Some(r) = lowrank_rank {
+            opts.lowrank_rank = r;
+        }
         let (model, _reports, _) = pawd::delta::compress_model(name, &base, &ft, &docs, &opts);
         let bytes = pawd::delta::format::save_delta(&artifact, &model)?;
         let counts: Vec<String> = pawd::delta::CodecKind::ALL

@@ -11,4 +11,4 @@ pub mod transformer;
 
 pub use config::ModelConfig;
 pub use params::{FlatParams, Layout, ModuleId, ProjKind};
-pub use transformer::Transformer;
+pub use transformer::{PlanSeq, Transformer};

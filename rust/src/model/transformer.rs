@@ -14,7 +14,8 @@
 
 use super::config::ModelConfig;
 use super::params::FlatParams;
-use crate::exec::{BatchSource, LinearOp, RowSpan, Weights};
+use crate::exec::prefix::PrefixState;
+use crate::exec::{BatchSource, LinearOp, RowSpan, Uniform, Weights};
 use crate::model::params::{ModuleId, ProjKind};
 use crate::tensor::ops::{log_softmax_into, rmsnorm_into, silu, softmax_inplace, RopeTable};
 use crate::tensor::{dot, Tensor2};
@@ -64,6 +65,32 @@ impl LayerTaps {
             Up => &self.up_out,
             Down => &self.down_out,
         }
+    }
+}
+
+/// One sequence of a prefix-aware stacked forward
+/// ([`Transformer::forward_plan_prefixed`]): the full token sequence, the
+/// plan entry it executes, an optional cached prefix to resume from, and
+/// how many leading rows to capture into a fresh [`PrefixState`].
+pub struct PlanSeq<'a> {
+    /// Index into the batch plan's entry list.
+    pub entry: usize,
+    /// The FULL token sequence (resume rows included).
+    pub tokens: &'a [u8],
+    /// Cached state for `tokens[..resume.len()]`; the forward computes only
+    /// the remaining suffix rows. Must satisfy `resume.len() < tokens.len()`
+    /// and `tokens[..resume.len()] == resume.tokens`.
+    pub resume: Option<&'a PrefixState>,
+    /// Capture rows `0..capture` (post-RoPE K/V per layer + logits) into a
+    /// new [`PrefixState`]. `0` = no capture; otherwise must exceed the
+    /// resume length (a shorter capture already exists) and not exceed the
+    /// sequence length.
+    pub capture: usize,
+}
+
+impl PlanSeq<'_> {
+    fn resume_len(&self) -> usize {
+        self.resume.map_or(0, |r| r.len())
     }
 }
 
@@ -235,12 +262,23 @@ impl Transformer {
     /// [`rope_rows`](Self::rope_rows), so a batched forward can hand
     /// disjoint sequences to different pool workers.
     fn rope_span(&self, q_rows: &mut [f32], k_rows: &mut [f32], len: usize) {
+        self.rope_span_at(q_rows, k_rows, len, 0);
+    }
+
+    /// [`rope_span`](Self::rope_span) with an absolute position offset:
+    /// row `i` of the slice rotates as position `pos0 + i`, so a
+    /// resume-from-row forward can feed suffix rows whose absolute
+    /// positions start after a cached prefix. Bit-identical to rotating
+    /// the same rows inside a full-sequence pass (the table lookup is by
+    /// absolute position either way).
+    fn rope_span_at(&self, q_rows: &mut [f32], k_rows: &mut [f32], len: usize, pos0: usize) {
         let (nh, hd) = (self.cfg.n_heads, self.cfg.head_dim());
         let d = self.cfg.dim;
         for pos in 0..len {
             for h in 0..nh {
-                self.rope.apply(&mut q_rows[pos * d + h * hd..pos * d + (h + 1) * hd], pos);
-                self.rope.apply(&mut k_rows[pos * d + h * hd..pos * d + (h + 1) * hd], pos);
+                let abs = pos0 + pos;
+                self.rope.apply(&mut q_rows[pos * d + h * hd..pos * d + (h + 1) * hd], abs);
+                self.rope.apply(&mut k_rows[pos * d + h * hd..pos * d + (h + 1) * hd], abs);
             }
         }
     }
@@ -289,6 +327,49 @@ impl Transformer {
                 for ki in 0..=qi {
                     let w = scores[ki];
                     let vrow = &v.row(row0 + ki)[hs..hs + hd];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Causal attention for a resumed sequence: suffix query rows
+    /// `q_row0..q_row0+len` of the stacked batch attend over the sequence's
+    /// assembled full K/V (`p` cached prefix rows followed by `len`
+    /// computed suffix rows). Suffix row `qi` sits at absolute position
+    /// `p + qi`, so its score row covers keys `0..=p+qi` — the exact
+    /// arithmetic a cold [`attend_span`](Self::attend_span) runs for that
+    /// row of the full sequence, in the same `ki` order (bitwise-equal
+    /// reductions).
+    fn attend_prefixed(
+        &self,
+        q: &Tensor2,
+        q_row0: usize,
+        len: usize,
+        k_full: &Tensor2,
+        v_full: &Tensor2,
+        p: usize,
+        out_rows: &mut [f32],
+    ) {
+        let (nh, hd) = (self.cfg.n_heads, self.cfg.head_dim());
+        let d = self.cfg.dim;
+        let scale = 1.0 / (hd as f32).sqrt();
+        for h in 0..nh {
+            let hs = h * hd;
+            let mut scores = vec![0f32; p + len]; // reused row buffer
+            for qi in 0..len {
+                let abs = p + qi;
+                let qrow = &q.row(q_row0 + qi)[hs..hs + hd];
+                for ki in 0..=abs {
+                    scores[ki] = dot(qrow, &k_full.row(ki)[hs..hs + hd]) * scale;
+                }
+                softmax_inplace(&mut scores[..=abs]);
+                let orow = &mut out_rows[qi * d + hs..qi * d + hs + hd];
+                for ki in 0..=abs {
+                    let w = scores[ki];
+                    let vrow = &v_full.row(ki)[hs..hs + hd];
                     for (o, &vv) in orow.iter_mut().zip(vrow) {
                         *o += w * vv;
                     }
@@ -431,6 +512,244 @@ impl Transformer {
                 )
             })
             .collect()
+    }
+
+    /// Prefix-aware stacked forward: like
+    /// [`forward_plan`](Self::forward_plan), but each sequence may *resume*
+    /// from a cached [`PrefixState`] (only its suffix rows enter the
+    /// stacked activations — every projection GEMM shrinks by the resumed
+    /// rows) and/or *capture* its leading rows into a new state for the
+    /// cache. Returns per-sequence FULL logits (`[T, vocab]`, cached prefix
+    /// rows stitched back in) plus the captured states.
+    ///
+    /// Bitwise contract: cut-points sit only at row boundaries — suffix
+    /// rows run the exact per-row arithmetic of a cold pass (row-independent
+    /// GEMM/rmsnorm/SiLU; RoPE by absolute position; attention over
+    /// memcpy'd cached K/V in the same reduction order), so resumed ==
+    /// cold == per-request bitwise, at any pool width. The property tests
+    /// assert exact equality.
+    pub fn forward_plan_prefixed<S: BatchSource>(
+        &self,
+        src: &S,
+        seqs: &[PlanSeq],
+    ) -> (Vec<Tensor2>, Vec<Option<PrefixState>>) {
+        if seqs.is_empty() {
+            return (Vec::new(), Vec::new());
+        }
+        let cfg = &self.cfg;
+        let d = cfg.dim;
+        let mut spans = Vec::with_capacity(seqs.len());
+        let mut total = 0usize;
+        for s in seqs {
+            assert!(s.entry < src.entries(), "plan entry {} out of range", s.entry);
+            let t = s.tokens.len();
+            assert!(t > 0 && t <= cfg.max_seq, "seq len {t} out of range");
+            let p = s.resume_len();
+            if let Some(r) = s.resume {
+                assert!(p < t, "resume must leave at least one suffix row");
+                assert_eq!(&s.tokens[..p], &r.tokens[..], "resume tokens mismatch");
+                assert_eq!(r.k.len(), cfg.n_layers, "resume layer count mismatch");
+            }
+            assert!(
+                s.capture == 0 || (s.capture > p && s.capture <= t),
+                "capture {} out of range (resume {p}, len {t})",
+                s.capture
+            );
+            spans.push(RowSpan { start: total, end: total + (t - p), entry: s.entry });
+            total += t - p;
+        }
+        let params = src.flat();
+        let layout = &params.layout;
+
+        // Suffix embedding lookup -> x: [Σ(T−P), d].
+        let mut x = Tensor2::zeros(total, d);
+        for (span, s) in spans.iter().zip(seqs) {
+            for (i, &tok) in s.tokens[s.resume_len()..].iter().enumerate() {
+                let off = layout.embed + (tok as usize) * d;
+                x.row_mut(span.start + i).copy_from_slice(&params.data[off..off + d]);
+            }
+        }
+
+        // Per-layer captured K/V, built as the layers run.
+        let mut cap_k: Vec<Vec<Tensor2>> = seqs.iter().map(|_| Vec::new()).collect();
+        let mut cap_v: Vec<Vec<Tensor2>> = seqs.iter().map(|_| Vec::new()).collect();
+
+        let mut normed = Tensor2::zeros(total, d);
+        for l in 0..cfg.n_layers {
+            let lo = layout.layers[l].clone();
+            let fwd = |kind: ProjKind, input: &Tensor2| -> Tensor2 {
+                let (d_out, _) = kind.shape(cfg);
+                let mut y = Tensor2::zeros(total, d_out);
+                src.forward_module(ModuleId { layer: l, kind }, input, &spans, &mut y);
+                y
+            };
+            // --- attention block ---
+            let norm_w = &params.data[lo.attn_norm..lo.attn_norm + d];
+            for pos in 0..total {
+                rmsnorm_into(x.row(pos), norm_w, normed.row_mut(pos));
+            }
+            let mut q = fwd(ProjKind::Q, &normed); // [Σ(T−P), d]
+            let mut k = fwd(ProjKind::K, &normed);
+            let v = fwd(ProjKind::V, &normed);
+            // RoPE at absolute positions: a resumed span's rows start at
+            // position P, exactly where a cold pass would rotate them.
+            {
+                let qp = par::SendMutPtr(q.data.as_mut_ptr());
+                let kp = par::SendMutPtr(k.data.as_mut_ptr());
+                let spans_ref = &spans;
+                par::parallel_items(spans_ref.len(), spans_ref.len(), |i| {
+                    let s = &spans_ref[i];
+                    let len = s.end - s.start;
+                    // SAFETY: spans are disjoint contiguous row ranges of
+                    // the stacked batch, and the buffers outlive this call.
+                    let (qrows, krows) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(qp.0.add(s.start * d), len * d),
+                            std::slice::from_raw_parts_mut(kp.0.add(s.start * d), len * d),
+                        )
+                    };
+                    self.rope_span_at(qrows, krows, len, seqs[i].resume_len());
+                });
+            }
+            // Assemble full per-sequence K/V for resumed sequences: cached
+            // prefix rows memcpy'd (bits preserved) ahead of the computed
+            // suffix rows.
+            let kv_full: Vec<Option<(Tensor2, Tensor2)>> = seqs
+                .iter()
+                .zip(&spans)
+                .map(|(s, span)| {
+                    s.resume.map(|r| {
+                        let p = r.len();
+                        let len = span.end - span.start;
+                        let mut kf = Tensor2::zeros(p + len, d);
+                        let mut vf = Tensor2::zeros(p + len, d);
+                        kf.data[..p * d].copy_from_slice(&r.k[l].data);
+                        vf.data[..p * d].copy_from_slice(&r.v[l].data);
+                        kf.data[p * d..].copy_from_slice(&k.data[span.start * d..span.end * d]);
+                        vf.data[p * d..].copy_from_slice(&v.data[span.start * d..span.end * d]);
+                        (kf, vf)
+                    })
+                })
+                .collect();
+            let mut attn_out = Tensor2::zeros(total, d);
+            {
+                let op = par::SendMutPtr(attn_out.data.as_mut_ptr());
+                let (qr, kr, vr) = (&q, &k, &v);
+                let spans_ref = &spans;
+                let kvf = &kv_full;
+                par::parallel_items(spans_ref.len(), spans_ref.len(), |i| {
+                    let s = &spans_ref[i];
+                    let len = s.end - s.start;
+                    // SAFETY: as above — each span writes only its own rows.
+                    let orows = unsafe {
+                        std::slice::from_raw_parts_mut(op.0.add(s.start * d), len * d)
+                    };
+                    match &kvf[i] {
+                        Some((kf, vf)) => {
+                            let p = kf.rows - len;
+                            self.attend_prefixed(qr, s.start, len, kf, vf, p, orows);
+                        }
+                        None => self.attend_span(qr, kr, vr, s.start, len, orows),
+                    }
+                });
+            }
+            // Capture this layer's post-RoPE K/V rows 0..capture.
+            for (i, s) in seqs.iter().enumerate() {
+                if s.capture == 0 {
+                    continue;
+                }
+                let span = &spans[i];
+                let mut kc = Tensor2::zeros(s.capture, d);
+                let mut vc = Tensor2::zeros(s.capture, d);
+                match &kv_full[i] {
+                    Some((kf, vf)) => {
+                        kc.data.copy_from_slice(&kf.data[..s.capture * d]);
+                        vc.data.copy_from_slice(&vf.data[..s.capture * d]);
+                    }
+                    None => {
+                        let r0 = span.start * d;
+                        kc.data.copy_from_slice(&k.data[r0..r0 + s.capture * d]);
+                        vc.data.copy_from_slice(&v.data[r0..r0 + s.capture * d]);
+                    }
+                }
+                cap_k[i].push(kc);
+                cap_v[i].push(vc);
+            }
+            let proj = fwd(ProjKind::O, &attn_out); // [Σ(T−P), d]
+            x.add_assign(&proj);
+
+            // --- MLP block ---
+            let norm_w = &params.data[lo.mlp_norm..lo.mlp_norm + d];
+            for pos in 0..total {
+                rmsnorm_into(x.row(pos), norm_w, normed.row_mut(pos));
+            }
+            let mut gate = fwd(ProjKind::Gate, &normed); // [Σ(T−P), ff]
+            let up = fwd(ProjKind::Up, &normed);
+            for (g, &u) in gate.data.iter_mut().zip(&up.data) {
+                *g = silu(*g) * u;
+            }
+            let down = fwd(ProjKind::Down, &gate); // [Σ(T−P), d]
+            x.add_assign(&down);
+        }
+
+        // Final norm + LM head over the suffix rows only.
+        let fw = &params.data[layout.final_norm..layout.final_norm + d];
+        for pos in 0..total {
+            let src_row = x.row(pos).to_vec();
+            rmsnorm_into(&src_row, fw, x.row_mut(pos));
+        }
+        let lm = crate::exec::DenseLinear::new(
+            &params.data[layout.lm_head..layout.lm_head + cfg.vocab * d],
+            cfg.vocab,
+            d,
+        );
+        let logits = lm.forward(&x); // [Σ(T−P), vocab]
+
+        // Stitch full logits (cached prefix rows ++ computed suffix rows)
+        // and package the captured states.
+        let vocab = cfg.vocab;
+        let mut out_logits = Vec::with_capacity(seqs.len());
+        let mut out_caps = Vec::with_capacity(seqs.len());
+        for (i, s) in seqs.iter().enumerate() {
+            let span = &spans[i];
+            let p = s.resume_len();
+            let t = s.tokens.len();
+            let mut full = Tensor2::zeros(t, vocab);
+            if let Some(r) = s.resume {
+                full.data[..p * vocab].copy_from_slice(&r.logits.data);
+            }
+            full.data[p * vocab..]
+                .copy_from_slice(&logits.data[span.start * vocab..span.end * vocab]);
+            let cap = (s.capture > 0).then(|| {
+                let mut lc = Tensor2::zeros(s.capture, vocab);
+                lc.data.copy_from_slice(&full.data[..s.capture * vocab]);
+                PrefixState {
+                    tokens: s.tokens[..s.capture].to_vec(),
+                    k: std::mem::take(&mut cap_k[i]),
+                    v: std::mem::take(&mut cap_v[i]),
+                    logits: lc,
+                }
+            });
+            out_logits.push(full);
+            out_caps.push(cap);
+        }
+        (out_logits, out_caps)
+    }
+
+    /// Single-sequence resume/capture forward — the per-request face of
+    /// [`forward_plan_prefixed`](Self::forward_plan_prefixed) (a one-item
+    /// [`Uniform`] plan), bitwise-equal to
+    /// [`forward_one`](Self::forward_one) over the same tokens.
+    pub fn forward_one_prefixed<W: Weights>(
+        &self,
+        weights: &W,
+        tokens: &[u8],
+        resume: Option<&PrefixState>,
+        capture: usize,
+    ) -> (Tensor2, Option<PrefixState>) {
+        let seq = PlanSeq { entry: 0, tokens, resume, capture };
+        let (mut logits, mut caps) = self.forward_plan_prefixed(&Uniform(weights), &[seq]);
+        (logits.remove(0), caps.remove(0))
     }
 
     /// Sum of log p(token[pos] | prefix) over `span`, from precomputed

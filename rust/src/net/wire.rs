@@ -487,6 +487,10 @@ pub fn snapshot_to_json(s: &MetricsSnapshot) -> Json {
         ("engine_steps", json::n(s.engine_steps as f64)),
         ("http_requests", json::n(s.http_requests as f64)),
         ("http_long_polls", json::n(s.http_long_polls as f64)),
+        ("prefix_cache_hits", json::n(s.prefix_cache_hits as f64)),
+        ("prefix_cache_misses", json::n(s.prefix_cache_misses as f64)),
+        ("prefix_cache_bytes", json::n(s.prefix_cache_bytes as f64)),
+        ("prefix_rows_skipped", json::n(s.prefix_rows_skipped as f64)),
     ])
 }
 
@@ -533,6 +537,10 @@ pub fn snapshot_from_json(j: &Json) -> Result<MetricsSnapshot> {
         engine_steps: j.req_usize("engine_steps")? as u64,
         http_requests: j.req_usize("http_requests")? as u64,
         http_long_polls: j.req_usize("http_long_polls")? as u64,
+        prefix_cache_hits: j.req_usize("prefix_cache_hits")? as u64,
+        prefix_cache_misses: j.req_usize("prefix_cache_misses")? as u64,
+        prefix_cache_bytes: j.req_usize("prefix_cache_bytes")? as u64,
+        prefix_rows_skipped: j.req_usize("prefix_rows_skipped")? as u64,
     })
 }
 

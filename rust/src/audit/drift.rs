@@ -1,0 +1,588 @@
+//! Registry drift passes (A101–A104): parse the source-of-truth registry
+//! out of each layer and pin the layers to each other and to the README.
+//!
+//! * A101 `counter-drift` — `exec::counters` getters == `MetricsSnapshot`
+//!   fields == wire JSON keys (both codec directions) == `snap.<name>`
+//!   CLI summary references == README "Counter registry" table.
+//! * A102 `env-drift` — `PAWD_*` env reads anywhere == README
+//!   "Environment knobs" table (both directions).
+//! * A103 `route-drift` — `AdminOp` variants (kebab-cased) ==
+//!   `admin_routes` consts == `ALL` == README `/v1/admin/<op>` row.
+//!   This is the PR 8 drift unit test promoted into the analyzer.
+//! * A104 `bench-key-drift` — every gated (`*per_s`) key in
+//!   `BENCH_baseline.json` is emitted by a registered bench binary.
+
+use super::lexer::{ident_at, line_of, match_brace, scrub, skip_ws, word_positions};
+use super::matches::enum_variants;
+use super::{Finding, SourceTree};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::{BTreeMap, BTreeSet};
+
+const COUNTERS_RS: &str = "rust/src/exec/counters.rs";
+const METRICS_RS: &str = "rust/src/coordinator/metrics.rs";
+const WIRE_RS: &str = "rust/src/net/wire.rs";
+const MAIN_RS: &str = "rust/src/main.rs";
+const REQUEST_RS: &str = "rust/src/coordinator/request.rs";
+
+/// Counter getter names: `pub fn <name>() -> u64` in `exec/counters.rs`
+/// (excluding `reset`).
+pub fn counter_getters(counters_src: &str) -> Vec<String> {
+    let sc: String = scrub(counters_src).text.iter().collect();
+    let mut out = Vec::new();
+    for line in sc.lines() {
+        if let Some(p) = line.find("pub fn ") {
+            let rest = &line[p + "pub fn ".len()..];
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '_')
+                .collect();
+            if !name.is_empty() && rest[name.len()..].starts_with("() -> u64") {
+                out.push(name);
+            }
+        }
+    }
+    out
+}
+
+/// `pub <name>:` field names of `struct <name> { .. }`.
+pub fn struct_fields(src: &str, struct_name: &str) -> Option<Vec<String>> {
+    let sc = scrub(src);
+    if sc.error.is_some() {
+        return None;
+    }
+    let text = &sc.text;
+    for p in word_positions(text, "struct") {
+        let i = skip_ws(text, p + "struct".len());
+        match ident_at(text, i) {
+            Some(name) if name == struct_name => {}
+            _ => continue,
+        }
+        let mut j = i + struct_name.len();
+        while j < text.len() && text[j] != '{' && text[j] != ';' {
+            j += 1;
+        }
+        if j >= text.len() || text[j] != '{' {
+            continue;
+        }
+        let close = match_brace(text, j)?;
+        let body = &text[j + 1..close];
+        let mut fields = Vec::new();
+        for q in word_positions(body, "pub") {
+            let s = skip_ws(body, q + 3);
+            if let Some(name) = ident_at(body, s) {
+                let after = skip_ws(body, s + name.len());
+                if after < body.len()
+                    && body[after] == ':'
+                    && body.get(after + 1) != Some(&':')
+                {
+                    fields.push(name);
+                }
+            }
+        }
+        return Some(fields);
+    }
+    None
+}
+
+/// First-column backticked names of the first markdown table after a
+/// heading containing `heading_fragment`; None if no such table.
+pub fn readme_table(readme: &str, heading_fragment: &str) -> Option<BTreeSet<String>> {
+    let lines: Vec<&str> = readme.lines().collect();
+    let h = lines
+        .iter()
+        .position(|l| l.starts_with('#') && l.contains(heading_fragment))?;
+    let mut names = BTreeSet::new();
+    let mut in_table = false;
+    for l in &lines[h + 1..] {
+        if l.starts_with('#') {
+            break;
+        }
+        if l.starts_with('|') {
+            in_table = true;
+            let rest = l[1..].trim_start();
+            if let Some(cell) = rest.strip_prefix('`') {
+                if let Some(end) = cell.find('`') {
+                    let name = &cell[..end];
+                    if !name.is_empty()
+                        && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+                    {
+                        names.insert(name.to_string());
+                    }
+                }
+            }
+        } else if in_table && l.trim().is_empty() {
+            break;
+        }
+    }
+    if in_table {
+        Some(names)
+    } else {
+        None
+    }
+}
+
+pub fn pass_counter_drift(tree: &SourceTree) -> Result<Vec<Finding>> {
+    let mut out = Vec::new();
+    let mut f = |file: &str, line: usize, msg: String| {
+        out.push(Finding::new("A101", "counter-drift", file, line, msg));
+    };
+    let counters: Vec<String> = counter_getters(tree.req(COUNTERS_RS)?)
+        .into_iter()
+        .filter(|c| c != "reset")
+        .collect();
+    let metrics_src = tree.req(METRICS_RS)?;
+    let fields = match struct_fields(metrics_src, "MetricsSnapshot") {
+        Some(fl) => fl,
+        None => {
+            f(METRICS_RS, 1, "MetricsSnapshot struct not found".to_string());
+            return Ok(out);
+        }
+    };
+    let metrics_scrubbed: String = scrub(metrics_src).text.iter().collect();
+    for c in &counters {
+        if !fields.contains(c) {
+            f(
+                METRICS_RS,
+                1,
+                format!("counter '{c}' (exec/counters.rs) has no MetricsSnapshot field"),
+            );
+        }
+        if !metrics_scrubbed.contains(&format!("counters::{c}()")) {
+            f(
+                METRICS_RS,
+                1,
+                format!("counter '{c}' is never read into the snapshot (snapshot_inner)"),
+            );
+        }
+    }
+    let wire_src = tree.req(WIRE_RS)?;
+    for field in &fields {
+        let needle = format!("\"{field}\"");
+        if wire_src.matches(&needle).count() < 2 {
+            f(
+                WIRE_RS,
+                1,
+                format!(
+                    "MetricsSnapshot field '{field}' missing from the wire codec \
+                     (need both snapshot_to_json and snapshot_from_json)"
+                ),
+            );
+        }
+    }
+    let main_src = tree.req(MAIN_RS)?;
+    let main_chars: Vec<char> = main_src.chars().collect();
+    let mut snap_refs = BTreeSet::new();
+    for p in word_positions(&main_chars, "snap") {
+        let i = p + 4;
+        if main_chars.get(i) == Some(&'.') {
+            if let Some(name) = ident_at(&main_chars, i + 1) {
+                snap_refs.insert(name.clone());
+                if !fields.contains(&name) {
+                    f(
+                        MAIN_RS,
+                        line_of(&main_chars, p),
+                        format!("serve summary references unknown snapshot field '{name}'"),
+                    );
+                }
+            }
+        }
+    }
+    for c in &counters {
+        if !snap_refs.contains(c) {
+            f(
+                MAIN_RS,
+                1,
+                format!("counter '{c}' is not surfaced in any CLI summary line (snap.{c})"),
+            );
+        }
+    }
+    let readme = tree.req("README.md")?;
+    let table = match readme_table(readme, "Counter registry") {
+        Some(t) => t,
+        None => {
+            f(
+                "README.md",
+                1,
+                "README counter table ('Counter registry' heading) not found".to_string(),
+            );
+            return Ok(out);
+        }
+    };
+    for c in &counters {
+        if !table.contains(c) {
+            f("README.md", 1, format!("counter '{c}' missing from the README counter table"));
+        }
+    }
+    for name in &table {
+        if !counters.contains(name) {
+            f("README.md", 1, format!("README counter table lists unknown counter '{name}'"));
+        }
+    }
+    Ok(out)
+}
+
+/// `PAWD_*` names read via `env::var` / `env::var_os` in `src`, with the
+/// first read site of each.
+pub fn env_reads(src: &str) -> Vec<(String, usize)> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut search = 0usize;
+    let hay: String = chars.iter().collect();
+    while let Some(rel_p) = hay[search..].find("env::var") {
+        let p = search + rel_p;
+        search = p + "env::var".len();
+        let mut i = search;
+        if hay[i..].starts_with("_os") {
+            i += 3;
+        }
+        let rest: Vec<char> = chars[i..].to_vec();
+        let mut j = skip_ws(&rest, 0);
+        if rest.get(j) != Some(&'(') {
+            continue;
+        }
+        j = skip_ws(&rest, j + 1);
+        if rest.get(j) != Some(&'"') {
+            continue;
+        }
+        j += 1;
+        let mut name = String::new();
+        while j < rest.len() && rest[j] != '"' {
+            name.push(rest[j]);
+            j += 1;
+        }
+        if name.starts_with("PAWD_") {
+            out.push((name, line_of(&chars, p)));
+        }
+    }
+    out
+}
+
+pub fn pass_env_drift(tree: &SourceTree) -> Result<Vec<Finding>> {
+    let mut out = Vec::new();
+    let mut reads: BTreeMap<String, (String, usize)> = BTreeMap::new();
+    for (rel, src) in &tree.files {
+        if !rel.ends_with(".rs") {
+            continue;
+        }
+        for (name, line) in env_reads(src) {
+            reads.entry(name).or_insert_with(|| (rel.clone(), line));
+        }
+    }
+    let readme = tree.req("README.md")?;
+    let table = match readme_table(readme, "Environment knobs") {
+        Some(t) => t,
+        None => {
+            out.push(Finding::new(
+                "A102",
+                "env-drift",
+                "README.md",
+                1,
+                "README env table ('Environment knobs' heading) not found".to_string(),
+            ));
+            return Ok(out);
+        }
+    };
+    for (var, (rel, line)) in &reads {
+        if !table.contains(var) {
+            out.push(Finding::new(
+                "A102",
+                "env-drift",
+                rel,
+                *line,
+                format!("env var '{var}' read here but missing from the README env table"),
+            ));
+        }
+    }
+    for var in &table {
+        if var.starts_with("PAWD_") && !reads.contains_key(var) {
+            out.push(Finding::new(
+                "A102",
+                "env-drift",
+                "README.md",
+                1,
+                format!("README env table lists '{var}' but nothing reads it"),
+            ));
+        }
+    }
+    Ok(out)
+}
+
+/// CamelCase → kebab-case (`PublishIncremental` → `publish-incremental`).
+pub fn kebab(name: &str) -> String {
+    let mut out = String::new();
+    for (i, c) in name.chars().enumerate() {
+        if c.is_ascii_uppercase() && i > 0 {
+            out.push('-');
+        }
+        out.push(c.to_ascii_lowercase());
+    }
+    out
+}
+
+pub fn pass_route_drift(tree: &SourceTree) -> Result<Vec<Finding>> {
+    let mut out = Vec::new();
+    let mut f = |file: &str, msg: String| {
+        out.push(Finding::new("A103", "route-drift", file, 1, msg));
+    };
+    let variants = match enum_variants(tree.req(REQUEST_RS)?, "AdminOp") {
+        Some(v) => v,
+        None => {
+            f(REQUEST_RS, "AdminOp enum not found".to_string());
+            return Ok(out);
+        }
+    };
+    let wire_src = tree.req(WIRE_RS)?;
+    let wire_scrubbed: String = scrub(wire_src).text.iter().collect();
+    let chars: Vec<char> = wire_scrubbed.chars().collect();
+    let (body, body_lines) = match wire_scrubbed.find("pub mod admin_routes") {
+        Some(p) => {
+            let open = (p..chars.len()).find(|&i| chars[i] == '{');
+            match open.and_then(|o| match_brace(&chars, o).map(|c| (o, c))) {
+                Some((o, c)) => (
+                    chars[o..c].iter().collect::<String>(),
+                    (line_of(&chars, o), line_of(&chars, c)),
+                ),
+                None => {
+                    f(WIRE_RS, "admin_routes module not found".to_string());
+                    return Ok(out);
+                }
+            }
+        }
+        None => {
+            f(WIRE_RS, "admin_routes module not found".to_string());
+            return Ok(out);
+        }
+    };
+    // consts: `pub const NAME: &str = "value";` — values live in the raw
+    // source (the scrubbed copy blanks string bodies), restricted to the
+    // admin_routes module's line window
+    let mut consts: BTreeMap<String, String> = BTreeMap::new();
+    for (lineno, line) in wire_src.lines().enumerate() {
+        if lineno + 1 < body_lines.0 || lineno + 1 > body_lines.1 {
+            continue;
+        }
+        let t = line.trim();
+        if let Some(rest) = t.strip_prefix("pub const ") {
+            if let Some(colon) = rest.find(": &str = \"") {
+                let name = &rest[..colon];
+                let val_start = colon + ": &str = \"".len();
+                if let Some(end) = rest[val_start..].find('"') {
+                    if name.chars().all(|c| c.is_ascii_uppercase() || c == '_') {
+                        let val = rest[val_start..val_start + end].to_string();
+                        consts.insert(name.to_string(), val);
+                    }
+                }
+            }
+        }
+    }
+    let all_decl = body.find("pub const ALL: [&str; ");
+    let (all_count, all_names) = match all_decl {
+        Some(p) => {
+            let rest = &body[p + "pub const ALL: [&str; ".len()..];
+            let count: usize = rest
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect::<String>()
+                .parse()
+                .unwrap_or(0);
+            let open = rest.find('[').map(|o| p + "pub const ALL: [&str; ".len() + o);
+            let names = match open {
+                Some(o) => {
+                    let seg = &body[o..body[o..].find(']').map(|e| o + e).unwrap_or(body.len())];
+                    let chars: Vec<char> = seg.chars().collect();
+                    let mut names = Vec::new();
+                    let mut i = 0;
+                    while i < chars.len() {
+                        if chars[i].is_ascii_uppercase()
+                            && (i == 0 || !super::lexer::is_ident_char(chars[i - 1]))
+                        {
+                            let mut name = String::new();
+                            while i < chars.len()
+                                && (chars[i].is_ascii_uppercase() || chars[i] == '_')
+                            {
+                                name.push(chars[i]);
+                                i += 1;
+                            }
+                            names.push(name);
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    names
+                }
+                None => Vec::new(),
+            };
+            (count, names)
+        }
+        None => {
+            f(WIRE_RS, "admin_routes::ALL not found".to_string());
+            return Ok(out);
+        }
+    };
+    let expect: BTreeSet<String> = variants.iter().map(|v| kebab(v)).collect();
+    let got: BTreeSet<String> = consts.values().cloned().collect();
+    for r in expect.difference(&got) {
+        f(WIRE_RS, format!("AdminOp variant route '{r}' has no admin_routes const"));
+    }
+    for r in got.difference(&expect) {
+        f(WIRE_RS, format!("admin_routes const '{r}' matches no AdminOp variant"));
+    }
+    if all_count != variants.len() || all_names.len() != variants.len() {
+        f(
+            WIRE_RS,
+            format!(
+                "admin_routes::ALL has {} entries (declared {}), AdminOp has {} variants",
+                all_names.len(),
+                all_count,
+                variants.len()
+            ),
+        );
+    }
+    let mut all_sorted: Vec<String> =
+        all_names.iter().cloned().collect::<BTreeSet<_>>().into_iter().collect();
+    all_sorted.sort();
+    let mut const_names: Vec<String> = consts.keys().cloned().collect();
+    const_names.sort();
+    if all_sorted != const_names {
+        f(WIRE_RS, "admin_routes::ALL does not list every const exactly once".to_string());
+    }
+    let readme = tree.req("README.md")?;
+    let row = readme.lines().find(|l| l.contains("/v1/admin/<op>"));
+    match row {
+        None => f("README.md", "README route table has no /v1/admin/<op> row".to_string()),
+        Some(row) => {
+            for r in &got {
+                if !row.contains(&format!("`{r}`")) {
+                    f("README.md", format!("README admin route row does not mention `{r}`"));
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+pub fn pass_bench_keys(tree: &SourceTree) -> Result<Vec<Finding>> {
+    let mut out = Vec::new();
+    let baseline_src = match tree.files.get("BENCH_baseline.json") {
+        Some(s) => s,
+        None => return Ok(out), // no baseline, nothing to pin
+    };
+    let baseline = match Json::parse(baseline_src) {
+        Ok(j) => j,
+        Err(e) => {
+            out.push(Finding::new(
+                "A104",
+                "bench-key-drift",
+                "BENCH_baseline.json",
+                1,
+                format!("unreadable: {e:?}"),
+            ));
+            return Ok(out);
+        }
+    };
+    let cargo = tree.req("rust/Cargo.toml")?;
+    let mut registered = BTreeSet::new();
+    for line in cargo.lines() {
+        let t = line.trim();
+        if let Some(rest) = t.strip_prefix("name = \"") {
+            if let Some(end) = rest.find('"') {
+                registered.insert(rest[..end].to_string());
+            }
+        }
+    }
+    let bench_src: String = tree
+        .files
+        .iter()
+        .filter(|(rel, _)| rel.starts_with("rust/benches/"))
+        .map(|(_, s)| s.as_str())
+        .collect::<Vec<_>>()
+        .join("\n");
+    let scenarios = match baseline.get("scenarios").and_then(|s| s.as_obj()) {
+        Some(s) => s,
+        None => return Ok(out),
+    };
+    for (scenario, metrics) in scenarios {
+        let bench = scenario.split('/').next().unwrap_or("");
+        if !registered.contains(bench)
+            || !tree.files.contains_key(&format!("rust/benches/{bench}.rs"))
+        {
+            out.push(Finding::new(
+                "A104",
+                "bench-key-drift",
+                "BENCH_baseline.json",
+                1,
+                format!("baseline scenario '{scenario}' names no registered bench"),
+            ));
+            continue;
+        }
+        let metrics = match metrics.as_obj() {
+            Some(m) => m,
+            None => continue,
+        };
+        for metric in metrics.keys() {
+            if !metric.ends_with("per_s") {
+                continue;
+            }
+            if bench_src.contains(metric.as_str()) {
+                continue;
+            }
+            // dynamic keys like `lowrank_r2_per_s`: strip digit runs and
+            // require every remaining piece to appear
+            let pieces: Vec<&str> = metric
+                .split(|c: char| c.is_ascii_digit())
+                .filter(|p| p.len() > 2)
+                .collect();
+            if !pieces.is_empty() && pieces.iter().all(|p| bench_src.contains(p)) {
+                continue;
+            }
+            out.push(Finding::new(
+                "A104",
+                "bench-key-drift",
+                "BENCH_baseline.json",
+                1,
+                format!("gated key '{scenario}:{metric}' not emitted by any bench source"),
+            ));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miri_counter_getter_parse() {
+        let src = "pub fn base_gemms() -> u64 { X.load(O) }\npub fn reset() { }\n\
+                   fn private_helper() -> u64 { 0 }\npub fn wire_bytes() -> u64 { 0 }";
+        assert_eq!(counter_getters(src), vec!["base_gemms", "wire_bytes"]);
+    }
+
+    #[test]
+    fn miri_struct_fields_and_kebab() {
+        let src = "pub struct S { pub a: u64, b: u64, pub c_d: Vec<u8> }";
+        assert_eq!(struct_fields(src, "S").unwrap(), vec!["a", "c_d"]);
+        assert_eq!(kebab("PublishIncremental"), "publish-incremental");
+        assert_eq!(kebab("Gc"), "gc");
+    }
+
+    #[test]
+    fn miri_readme_table_parse() {
+        let md = "## Counter registry\n\nintro\n\n| Counter | Meaning |\n| --- | --- |\n\
+                  | `a_b` | stuff |\n| `c` | more |\n\n## Next\n";
+        let t = readme_table(md, "Counter registry").unwrap();
+        assert_eq!(t.into_iter().collect::<Vec<_>>(), vec!["a_b", "c"]);
+        assert!(readme_table(md, "Nonexistent").is_none());
+    }
+
+    #[test]
+    fn miri_env_read_scan() {
+        let src = "let a = std::env::var(\"PAWD_X\");\nlet b = env::var_os ( \"PAWD_Y\" );\n\
+                   let c = env::var(\"HOME\");";
+        let reads = env_reads(src);
+        assert_eq!(reads.len(), 2);
+        assert_eq!(reads[0], ("PAWD_X".to_string(), 1));
+        assert_eq!(reads[1], ("PAWD_Y".to_string(), 2));
+    }
+}

@@ -1,0 +1,524 @@
+//! Rust-accurate source scrubbing and the `bracket-balance` pass (A001).
+//!
+//! [`scrub`] blanks comment and string/char-literal *bodies* while keeping
+//! length, newlines, and the delimiters themselves, so every later pass can
+//! scan for tokens positionally without tripping over `"{"` in a string or
+//! `// }` in a comment. Handled: line comments, nested block comments,
+//! escapes, raw strings (`r#"…"#`), byte strings (`b"…"`), byte chars
+//! (`b'x'`), and the char-literal vs lifetime ambiguity (`'x'` vs `'a`).
+
+use super::{Finding, SourceTree};
+
+/// Outcome of scrubbing one file.
+pub struct Scrubbed {
+    /// Same length as the input; comment/literal bodies blanked.
+    pub text: Vec<char>,
+    /// An unterminated construct, as `(line, message)`.
+    pub error: Option<(usize, &'static str)>,
+}
+
+pub fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+pub fn scrub(src: &str) -> Scrubbed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out: Vec<char> = Vec::with_capacity(n);
+    let mut i = 0;
+    let mut line = 1usize;
+
+    fn blank(out: &mut Vec<char>, c: char) {
+        out.push(if c == '\n' { '\n' } else { ' ' });
+    }
+
+    while i < n {
+        let c = chars[i];
+        let nxt = if i + 1 < n { chars[i + 1] } else { '\0' };
+        if c == '\n' {
+            line += 1;
+        }
+        // line comment
+        if c == '/' && nxt == '/' {
+            while i < n && chars[i] != '\n' {
+                blank(&mut out, chars[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // nested block comment
+        if c == '/' && nxt == '*' {
+            let start = line;
+            let mut depth = 0usize;
+            while i < n {
+                if chars[i] == '\n' {
+                    line += 1;
+                }
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    blank(&mut out, chars[i]);
+                    blank(&mut out, chars[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    blank(&mut out, chars[i]);
+                    blank(&mut out, chars[i + 1]);
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                    continue;
+                }
+                blank(&mut out, chars[i]);
+                i += 1;
+            }
+            if depth != 0 {
+                return Scrubbed { text: out, error: Some((start, "unterminated block comment")) };
+            }
+            continue;
+        }
+        let prev = if i > 0 { chars[i - 1] } else { '\0' };
+        let prev_is_ident = is_ident_char(prev);
+        // raw / byte string openers: r"…", r#"…"#, b"…", br#"…"#
+        if !prev_is_ident && (c == 'r' || c == 'b') {
+            let mut j = i;
+            if c == 'b' && j + 1 < n && chars[j + 1] == 'r' {
+                j += 1;
+            }
+            let mut k = j + 1;
+            let mut hashes = 0usize;
+            while k < n && chars[k] == '#' && chars[j] != 'b' {
+                hashes += 1;
+                k += 1;
+            }
+            let raw = chars[j] == 'r';
+            if k < n && chars[k] == '"' && (raw || (c == 'b' && j == i)) {
+                let start = line;
+                for p in i..=k {
+                    out.push(chars[p]);
+                }
+                i = k + 1;
+                let mut closed = false;
+                while i < n {
+                    if chars[i] == '\n' {
+                        line += 1;
+                        out.push('\n');
+                        i += 1;
+                        continue;
+                    }
+                    if !raw && chars[i] == '\\' && i + 1 < n {
+                        blank(&mut out, chars[i]);
+                        if chars[i + 1] == '\n' {
+                            line += 1;
+                            out.push('\n');
+                        } else {
+                            blank(&mut out, chars[i + 1]);
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    if chars[i] == '"' {
+                        if raw {
+                            let mut h = 0usize;
+                            while i + 1 + h < n && chars[i + 1 + h] == '#' && h < hashes {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                out.push('"');
+                                for _ in 0..h {
+                                    out.push('#');
+                                }
+                                i += 1 + h;
+                                closed = true;
+                                break;
+                            }
+                            blank(&mut out, chars[i]);
+                            i += 1;
+                            continue;
+                        }
+                        out.push('"');
+                        i += 1;
+                        closed = true;
+                        break;
+                    }
+                    blank(&mut out, chars[i]);
+                    i += 1;
+                }
+                if !closed {
+                    return Scrubbed {
+                        text: out,
+                        error: Some((start, "unterminated string literal")),
+                    };
+                }
+                continue;
+            }
+        }
+        // plain string
+        if c == '"' {
+            let start = line;
+            out.push('"');
+            i += 1;
+            let mut closed = false;
+            while i < n {
+                if chars[i] == '\n' {
+                    line += 1;
+                    out.push('\n');
+                    i += 1;
+                    continue;
+                }
+                if chars[i] == '\\' && i + 1 < n {
+                    blank(&mut out, chars[i]);
+                    if chars[i + 1] == '\n' {
+                        line += 1;
+                        out.push('\n');
+                    } else {
+                        blank(&mut out, chars[i + 1]);
+                    }
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    out.push('"');
+                    i += 1;
+                    closed = true;
+                    break;
+                }
+                blank(&mut out, chars[i]);
+                i += 1;
+            }
+            if !closed {
+                return Scrubbed { text: out, error: Some((start, "unterminated string literal")) };
+            }
+            continue;
+        }
+        // char literal vs lifetime; b'x' byte chars allowed through (the
+        // `'` after a `b` that itself follows a non-ident char)
+        let byte_char = c == '\''
+            && prev == 'b'
+            && !(i >= 2 && is_ident_char(chars[i - 2]));
+        if c == '\'' && (!prev_is_ident || byte_char) {
+            if nxt == '\\' {
+                out.push('\'');
+                i += 1;
+                blank(&mut out, chars[i]); // backslash
+                i += 1;
+                // the escaped char itself is never the closer (handles '\'')
+                if i < n && chars[i] != '\n' {
+                    blank(&mut out, chars[i]);
+                    i += 1;
+                }
+                let start = line;
+                let mut closed = false;
+                while i < n {
+                    if chars[i] == '\'' {
+                        out.push('\'');
+                        i += 1;
+                        closed = true;
+                        break;
+                    }
+                    if chars[i] == '\n' {
+                        break;
+                    }
+                    blank(&mut out, chars[i]);
+                    i += 1;
+                }
+                if !closed {
+                    return Scrubbed {
+                        text: out,
+                        error: Some((start, "unterminated char literal")),
+                    };
+                }
+                continue;
+            }
+            if i + 2 < n && nxt != '\'' && chars[i + 2] == '\'' {
+                out.push('\'');
+                blank(&mut out, nxt);
+                out.push('\'');
+                i += 3;
+                continue;
+            }
+            // lifetime — pass through
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    Scrubbed { text: out, error: None }
+}
+
+/// 1-based line of a char offset.
+pub fn line_of(text: &[char], offset: usize) -> usize {
+    text[..offset.min(text.len())].iter().filter(|&&c| c == '\n').count() + 1
+}
+
+/// Line numbers suppressed for `pass_name` via `audit:allow(...)` comments
+/// (the comment line and the line after it).
+pub fn allow_lines(src: &str, pass_name: &str) -> Vec<usize> {
+    let mut allowed = Vec::new();
+    for (idx, l) in src.lines().enumerate() {
+        if let Some(p) = l.find("audit:allow(") {
+            let rest = &l[p + "audit:allow(".len()..];
+            if let Some(close) = rest.find(')') {
+                if rest[..close].split(',').any(|x| x.trim() == pass_name) {
+                    allowed.push(idx + 1);
+                    allowed.push(idx + 2);
+                }
+            }
+        }
+    }
+    allowed
+}
+
+/// Next identifier starting at or after `from`; returns `(start, ident)`.
+pub fn next_ident(text: &[char], from: usize) -> Option<(usize, String)> {
+    let mut i = from;
+    while i < text.len() && !is_ident_char(text[i]) {
+        i += 1;
+    }
+    if i >= text.len() {
+        return None;
+    }
+    let start = i;
+    let mut s = String::new();
+    while i < text.len() && is_ident_char(text[i]) {
+        s.push(text[i]);
+        i += 1;
+    }
+    Some((start, s))
+}
+
+/// Identifier starting exactly at `i` (`i` must be its first char and not
+/// be preceded by an ident char), else None.
+pub fn ident_at(text: &[char], i: usize) -> Option<String> {
+    if i >= text.len() || !is_ident_char(text[i]) || text[i].is_ascii_digit() {
+        return None;
+    }
+    if i > 0 && is_ident_char(text[i - 1]) {
+        return None;
+    }
+    let mut s = String::new();
+    let mut j = i;
+    while j < text.len() && is_ident_char(text[j]) {
+        s.push(text[j]);
+        j += 1;
+    }
+    Some(s)
+}
+
+/// All word-boundary occurrences of `word` in `text`.
+pub fn word_positions(text: &[char], word: &str) -> Vec<usize> {
+    let w: Vec<char> = word.chars().collect();
+    let mut out = Vec::new();
+    if w.is_empty() || text.len() < w.len() {
+        return out;
+    }
+    for i in 0..=text.len() - w.len() {
+        if text[i..i + w.len()] == w[..]
+            && (i == 0 || !is_ident_char(text[i - 1]))
+            && (i + w.len() == text.len() || !is_ident_char(text[i + w.len()]))
+        {
+            out.push(i);
+        }
+    }
+    out
+}
+
+/// Skip whitespace forward from `i`.
+pub fn skip_ws(text: &[char], mut i: usize) -> usize {
+    while i < text.len() && text[i].is_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Given the offset of an opening `{`, return the offset of its matching
+/// `}` (scrubbed text), or None.
+pub fn match_brace(text: &[char], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (j, &c) in text.iter().enumerate().skip(open) {
+        if c == '{' {
+            depth += 1;
+        } else if c == '}' {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+/// Is the token starting at `kw_start` in statement position — preceded
+/// (after an optional `pub`/`pub(...)` prefix) by nothing, by `;`/`{`/`}`,
+/// or by a newline? Mirrors the Python `(?:^|[;{}]\s*|\n\s*)` anchor.
+pub fn at_stmt_pos(text: &[char], kw_start: usize) -> bool {
+    let mut i = kw_start;
+    // skip back over whitespace; a newline anywhere in the run qualifies
+    let mut saw_newline = false;
+    loop {
+        while i > 0 && text[i - 1].is_whitespace() {
+            if text[i - 1] == '\n' {
+                saw_newline = true;
+            }
+            i -= 1;
+        }
+        if i == 0 {
+            return true;
+        }
+        // consume one pub / pub(...) prefix and keep walking back
+        if text[i - 1] == ')' {
+            let mut d = 0i64;
+            let mut j = i;
+            while j > 0 {
+                j -= 1;
+                if text[j] == ')' {
+                    d += 1;
+                } else if text[j] == '(' {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+            }
+            let before = {
+                let mut k = j;
+                while k > 0 && text[k - 1].is_whitespace() {
+                    k -= 1;
+                }
+                k
+            };
+            if before >= 3 && text[before - 3..before] == ['p', 'u', 'b'] {
+                i = before - 3;
+                saw_newline = false;
+                continue;
+            }
+            return saw_newline;
+        }
+        if i >= 3 && text[i - 3..i] == ['p', 'u', 'b'] && (i == 3 || !is_ident_char(text[i - 4]))
+        {
+            i -= 3;
+            saw_newline = false;
+            continue;
+        }
+        let prev = text[i - 1];
+        return saw_newline || prev == ';' || prev == '{' || prev == '}';
+    }
+}
+
+/// A001: delimiter balance per file (plus unterminated literals/comments
+/// surfaced by the scrubber).
+pub fn pass_balance(tree: &SourceTree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (rel, src) in &tree.files {
+        if !rel.ends_with(".rs") {
+            continue;
+        }
+        out.extend(balance_one(rel, src));
+    }
+    out
+}
+
+/// Balance-check a single source text (used by the fixture tests too).
+pub fn balance_one(rel: &str, src: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let sc = scrub(src);
+    if let Some((line, msg)) = sc.error {
+        out.push(Finding::new("A001", "bracket-balance", rel, line, msg.to_string()));
+        return out;
+    }
+    let mut stack: Vec<(char, usize)> = Vec::new();
+    let mut line = 1usize;
+    for &c in &sc.text {
+        match c {
+            '\n' => line += 1,
+            '(' | '[' | '{' => stack.push((c, line)),
+            ')' | ']' | '}' => {
+                let want = match c {
+                    ')' => '(',
+                    ']' => '[',
+                    _ => '{',
+                };
+                match stack.pop() {
+                    Some((open, _)) if open == want => {}
+                    Some((open, oline)) => {
+                        out.push(Finding::new(
+                            "A001",
+                            "bracket-balance",
+                            rel,
+                            line,
+                            format!("unbalanced '{c}' (open '{open}' from line {oline})"),
+                        ));
+                        return out;
+                    }
+                    None => {
+                        out.push(Finding::new(
+                            "A001",
+                            "bracket-balance",
+                            rel,
+                            line,
+                            format!("unbalanced '{c}'"),
+                        ));
+                        return out;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    if let Some((open, oline)) = stack.last() {
+        out.push(Finding::new(
+            "A001",
+            "bracket-balance",
+            rel,
+            *oline,
+            format!("unclosed '{open}'"),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scrub_str(s: &str) -> String {
+        scrub(s).text.iter().collect()
+    }
+
+    #[test]
+    fn miri_scrub_blanks_strings_and_comments() {
+        assert_eq!(scrub_str(r#"let x = "a{b"; // }"#), r#"let x = "   ";     "#);
+        assert_eq!(scrub_str("a /* { /* [ */ } */ b"), "a                   b");
+        // raw string with hashes; brace inside must vanish
+        assert_eq!(scrub_str(r##"r#"{"#"##), r##"r#" "#"##);
+    }
+
+    #[test]
+    fn miri_scrub_char_vs_lifetime() {
+        // lifetimes survive, char literals are blanked
+        assert_eq!(scrub_str("&'a str"), "&'a str");
+        assert_eq!(scrub_str("let c = '{';"), "let c = ' ';");
+        assert_eq!(scrub_str(r"let c = '\'';"), "let c = '  ';");
+        assert_eq!(scrub_str("m(b'{')"), "m(b' ')");
+    }
+
+    #[test]
+    fn miri_balance_catches_seeded_imbalance() {
+        assert!(balance_one("x.rs", "fn f() { (a + b }").iter().any(|f| f.code == "A001"));
+        assert!(balance_one("x.rs", "fn ok() { (a + b) }").is_empty());
+        assert!(balance_one("x.rs", "fn f() { \"unterminated").iter().any(|f| f.code == "A001"));
+    }
+
+    #[test]
+    fn miri_stmt_pos() {
+        let t: Vec<char> = "fn a() {}\npub fn b() {}\nlet x = fn_ptr;".chars().collect();
+        assert!(at_stmt_pos(&t, 0)); // start
+        assert!(at_stmt_pos(&t, 14)); // `fn` after `pub ` at line start
+        let call = word_positions(&t, "fn");
+        assert_eq!(call.len(), 2); // fn_ptr does not word-match
+    }
+}

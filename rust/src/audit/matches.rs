@@ -1,0 +1,421 @@
+//! A003 `match-exhaustive`: matches over the declared "grown" enums must
+//! either name every variant or carry a catch-all arm.
+//!
+//! The compiler already enforces exhaustiveness — what it cannot flag is a
+//! `_ => {}` arm silently swallowing a variant added three PRs later. This
+//! pass inverts the check for enums that keep growing: a match whose arms
+//! are all `Enum::…` patterns and that has **no** catch-all must name every
+//! declared variant; adding a variant then turns every such site into a
+//! finding, exactly like the compiler would if the catch-all were absent.
+//! Matches with mixed shapes (`Some(Enum::A)`, tuples, guards on every
+//! arm) are skipped — conservatively, since the pass pins zero findings.
+
+use super::lexer::{allow_lines, is_ident_char, line_of, match_brace, scrub, word_positions};
+use super::{Finding, SourceTree};
+use anyhow::Result;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// The grown enums: `(declaring file, enum name)`. Extend this list when a
+/// new enum starts accreting variants across PRs.
+pub const GROWN_ENUMS: &[(&str, &str)] = &[
+    ("rust/src/coordinator/request.rs", "AdminOp"),
+    ("rust/src/coordinator/request.rs", "Payload"),
+    ("rust/src/coordinator/engine.rs", "Ingress"),
+    ("rust/src/delta/compress.rs", "CodecChoice"),
+    ("rust/src/net/http.rs", "HttpError"),
+];
+
+/// Variant names of `enum_name` declared in `src`, or None if not found.
+pub fn enum_variants(src: &str, enum_name: &str) -> Option<Vec<String>> {
+    let sc = scrub(src);
+    if sc.error.is_some() {
+        return None;
+    }
+    let text = &sc.text;
+    for p in word_positions(text, "enum") {
+        let mut i = p + 4;
+        while i < text.len() && text[i].is_whitespace() {
+            i += 1;
+        }
+        match super::lexer::ident_at(text, i) {
+            Some(name) if name == enum_name => {}
+            _ => continue,
+        }
+        // scan to the opening brace (generics allowed, no brace before it)
+        let mut j = i + enum_name.len();
+        while j < text.len() && text[j] != '{' && text[j] != ';' {
+            j += 1;
+        }
+        if j >= text.len() || text[j] != '{' {
+            continue;
+        }
+        let close = match_brace(text, j)?;
+        return Some(variant_names(&text[j + 1..close]));
+    }
+    None
+}
+
+/// Variant names from an enum body: the first identifier after each
+/// top-level comma (or the body start), skipping `#[...]` attributes.
+fn variant_names(body: &[char]) -> Vec<String> {
+    let mut variants = Vec::new();
+    let mut j = 0usize;
+    let n = body.len();
+    let mut d = 0i64;
+    let mut at_start = true;
+    while j < n {
+        let ch = body[j];
+        if d == 0 && ch == '#' {
+            while j < n && body[j] != '[' {
+                j += 1;
+            }
+            let mut dd = 0i64;
+            while j < n {
+                if body[j] == '[' {
+                    dd += 1;
+                } else if body[j] == ']' {
+                    dd -= 1;
+                    if dd == 0 {
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            j += 1;
+            continue;
+        }
+        match ch {
+            '(' | '[' | '{' => d += 1,
+            ')' | ']' | '}' => d -= 1,
+            ',' if d == 0 => at_start = true,
+            c if d == 0 && at_start && (c.is_alphabetic() || c == '_') => {
+                let mut name = String::new();
+                while j < n && is_ident_char(body[j]) {
+                    name.push(body[j]);
+                    j += 1;
+                }
+                variants.push(name);
+                at_start = false;
+                continue;
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    variants
+}
+
+/// One parsed `match` block: offset of its `{` plus each arm's pattern
+/// text (everything left of the top-level `=>`, guard included).
+pub struct MatchBlock {
+    pub offset: usize,
+    pub arm_patterns: Vec<String>,
+}
+
+/// Parse every `match` block in scrubbed text.
+pub fn iter_matches(text: &[char]) -> Vec<MatchBlock> {
+    let n = text.len();
+    let mut blocks = Vec::new();
+    for m in word_positions(text, "match") {
+        let mut i = m + 5;
+        let mut depth = 0i64;
+        let mut found = None;
+        while i < n {
+            match text[i] {
+                '(' | '[' => depth += 1,
+                ')' | ']' => depth -= 1,
+                '{' if depth == 0 => {
+                    found = Some(i);
+                    break;
+                }
+                ';' if depth == 0 => break,
+                _ => {}
+            }
+            i += 1;
+        }
+        let block_start = match found {
+            Some(b) => b,
+            None => continue,
+        };
+        let mut arms = Vec::new();
+        i = block_start + 1;
+        'arms: while i < n {
+            while i < n && text[i].is_whitespace() {
+                i += 1;
+            }
+            if i >= n || text[i] == '}' {
+                break;
+            }
+            let pat_start = i;
+            let mut d = 0i64;
+            loop {
+                if i >= n {
+                    break 'arms;
+                }
+                match text[i] {
+                    '(' | '[' | '{' => d += 1,
+                    ')' | ']' => d -= 1,
+                    '}' => {
+                        if d == 0 {
+                            break 'arms; // malformed; bail
+                        }
+                        d -= 1;
+                    }
+                    '=' if d == 0 && i + 1 < n && text[i + 1] == '>' => break,
+                    _ => {}
+                }
+                i += 1;
+            }
+            arms.push(text[pat_start..i].iter().collect::<String>());
+            i += 2; // skip =>
+            while i < n && text[i].is_whitespace() {
+                i += 1;
+            }
+            if i < n && text[i] == '{' {
+                let close = match match_brace(text, i) {
+                    Some(c) => c,
+                    None => break,
+                };
+                i = close + 1;
+                while i < n && text[i].is_whitespace() {
+                    i += 1;
+                }
+                if i < n && text[i] == ',' {
+                    i += 1;
+                }
+            } else {
+                let mut d = 0i64;
+                while i < n {
+                    match text[i] {
+                        '(' | '[' | '{' => d += 1,
+                        ')' | ']' | '}' => {
+                            if d == 0 {
+                                break;
+                            }
+                            d -= 1;
+                        }
+                        ',' if d == 0 => {
+                            i += 1;
+                            break;
+                        }
+                        _ => {}
+                    }
+                    i += 1;
+                }
+            }
+        }
+        blocks.push(MatchBlock { offset: block_start, arm_patterns: arms });
+    }
+    blocks
+}
+
+/// Is this arm pattern a catch-all: a top-level `_`, `..`, or bare
+/// lowercase binding, with no guard?
+pub fn pattern_is_catch_all(pat: &str) -> bool {
+    let mut p = pat.trim();
+    let guarded = p.contains(" if ");
+    if guarded {
+        p = p.split(" if ").next().unwrap().trim();
+    }
+    for alt in p.split('|') {
+        let mut a = alt.trim();
+        for pre in ["ref mut ", "ref ", "mut "] {
+            if let Some(rest) = a.strip_prefix(pre) {
+                a = rest.trim();
+            }
+        }
+        if guarded {
+            continue;
+        }
+        if a == "_" || a == ".." {
+            return true;
+        }
+        let bare = !a.is_empty()
+            && a.chars().next().map(|c| c.is_ascii_lowercase() || c == '_').unwrap_or(false)
+            && a.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_');
+        if bare && a != "true" && a != "false" {
+            return true;
+        }
+    }
+    false
+}
+
+/// `Enum::Variant` mentions in a pattern string.
+fn variant_mentions(pat: &str, ename: &str) -> BTreeSet<String> {
+    let chars: Vec<char> = pat.chars().collect();
+    let mut out = BTreeSet::new();
+    for p in word_positions(&chars, ename) {
+        let mut i = p + ename.len();
+        while i < chars.len() && chars[i].is_whitespace() {
+            i += 1;
+        }
+        if i + 1 < chars.len() && chars[i] == ':' && chars[i + 1] == ':' {
+            i += 2;
+            while i < chars.len() && chars[i].is_whitespace() {
+                i += 1;
+            }
+            if let Some(v) = super::lexer::ident_at(&chars, i) {
+                out.insert(v);
+            }
+        }
+    }
+    out
+}
+
+fn mentions_enum(pat: &str, ename: &str) -> bool {
+    let chars: Vec<char> = pat.chars().collect();
+    for p in word_positions(&chars, ename) {
+        let i = super::lexer::skip_ws(&chars, p + ename.len());
+        if i + 1 < chars.len() && chars[i] == ':' && chars[i + 1] == ':' {
+            return true;
+        }
+    }
+    false
+}
+
+/// Does the arm start with `ename`, `_`, or a bare lowercase ident — the
+/// shapes the pass can model?
+fn arm_shape_ok(pat: &str, ename: &str) -> bool {
+    let t = pat.trim_start();
+    if t.starts_with('_') {
+        return true;
+    }
+    let chars: Vec<char> = t.chars().collect();
+    match super::lexer::ident_at(&chars, 0) {
+        Some(first) => {
+            first == ename
+                || first.chars().next().map(|c| c.is_ascii_lowercase()).unwrap_or(false)
+        }
+        None => false,
+    }
+}
+
+/// Check one scrubbed file against the variant table; used by the repo
+/// pass and the fixture tests.
+pub fn check_file(
+    rel: &str,
+    src: &str,
+    enums: &BTreeMap<String, BTreeSet<String>>,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let sc = scrub(src);
+    if sc.error.is_some() {
+        return out;
+    }
+    let allowed = allow_lines(src, "match-exhaustive");
+    for block in iter_matches(&sc.text) {
+        if block.arm_patterns.is_empty() {
+            continue;
+        }
+        let lineno = line_of(&sc.text, block.offset);
+        if allowed.contains(&lineno) {
+            continue;
+        }
+        for (ename, declared) in enums {
+            let mention: Vec<&String> = block
+                .arm_patterns
+                .iter()
+                .filter(|a| mentions_enum(a, ename))
+                .collect();
+            if mention.is_empty() {
+                continue;
+            }
+            let shaped = block.arm_patterns.iter().all(|a| arm_shape_ok(a, ename));
+            let non_catch = block
+                .arm_patterns
+                .iter()
+                .filter(|a| !pattern_is_catch_all(a))
+                .count();
+            if !shaped || mention.len() != non_catch {
+                continue; // mixed shapes — cannot model confidently
+            }
+            if block.arm_patterns.iter().any(|a| pattern_is_catch_all(a)) {
+                continue;
+            }
+            let mut used = BTreeSet::new();
+            for a in &block.arm_patterns {
+                used.extend(variant_mentions(a, ename));
+            }
+            let missing: Vec<&String> = declared.difference(&used).collect();
+            if !missing.is_empty() {
+                out.push(Finding::new(
+                    "A003",
+                    "match-exhaustive",
+                    rel,
+                    lineno,
+                    format!(
+                        "match over {ename} has no catch-all and misses: {}",
+                        missing.iter().map(|s| s.as_str()).collect::<Vec<_>>().join(", ")
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+pub fn pass_match_exhaustive(tree: &SourceTree) -> Result<Vec<Finding>> {
+    let mut out = Vec::new();
+    let mut enums: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for (efile, ename) in GROWN_ENUMS {
+        match enum_variants(tree.req(efile)?, ename) {
+            Some(v) => {
+                enums.insert((*ename).to_string(), v.into_iter().collect());
+            }
+            None => out.push(Finding::new(
+                "A003",
+                "match-exhaustive",
+                efile,
+                1,
+                format!("grown enum {ename} not found (audit config stale?)"),
+            )),
+        }
+    }
+    for (rel, src) in &tree.files {
+        if rel.starts_with("rust/src/")
+            || rel.starts_with("rust/tests/")
+            || rel.starts_with("rust/benches/")
+        {
+            out.extend(check_file(rel, src, &enums));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enums_of(src: &str, name: &str) -> BTreeMap<String, BTreeSet<String>> {
+        let mut m = BTreeMap::new();
+        m.insert(name.to_string(), enum_variants(src, name).unwrap().into_iter().collect());
+        m
+    }
+
+    #[test]
+    fn miri_enum_variant_parse() {
+        let src = "pub enum E { A, B(u32), C { x: u8 }, #[cfg(test)] D, E2 = 5 }";
+        assert_eq!(enum_variants(src, "E").unwrap(), vec!["A", "B", "C", "D", "E2"]);
+    }
+
+    #[test]
+    fn miri_missing_variant_flagged() {
+        let decl = "enum E { A, B, C }";
+        let bad = "fn f(e: E) { match e { E::A => 1, E::B => 2, } }";
+        let good = "fn f(e: E) { match e { E::A => 1, E::B => 2, E::C => 3 } }";
+        let catch = "fn f(e: E) { match e { E::A => 1, _ => 2 } }";
+        let enums = enums_of(decl, "E");
+        let f = check_file("x.rs", bad, &enums);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("misses: C"));
+        assert!(check_file("x.rs", good, &enums).is_empty());
+        assert!(check_file("x.rs", catch, &enums).is_empty());
+    }
+
+    #[test]
+    fn miri_mixed_shapes_skipped() {
+        let decl = "enum E { A, B, C }";
+        let mixed = "fn f(e: Option<E>) { match e { Some(E::A) => 1, None => 2 } }";
+        assert!(check_file("x.rs", mixed, &enums_of(decl, "E")).is_empty());
+    }
+}

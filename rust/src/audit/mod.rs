@@ -1,0 +1,263 @@
+//! Repo-native static analysis: the desk-check suite as machine-checked
+//! passes.
+//!
+//! Nine PRs of this codebase were shipped on manual audits — bracket
+//! balance, `use`-path resolution, exhaustive-match review, and
+//! cross-layer registry diffs (counters ↔ `MetricsSnapshot` ↔ wire keys ↔
+//! CLI summaries ↔ README tables). This module codifies those audits as a
+//! dependency-free analyzer with a Rust-accurate lexer, run three ways:
+//!
+//! * `tests/audit_self.rs` — tier-1 test, asserts **zero findings** at HEAD;
+//! * `pawd audit [--json] [--root <dir>]` — standalone CLI for CI;
+//! * `scripts/audit.py` — a Python mirror with the same passes and codes,
+//!   for pre-commit use in containers that have no Rust toolchain
+//!   (`scripts/audit.sh` picks whichever is available).
+//!
+//! Passes and stable finding codes are listed in the README's "Static
+//! analysis & sanitizers" section. Suppress a deliberate exception with
+//! `// audit:allow(<pass-name>)` on the finding line or the line above.
+//!
+//! Everything here works on *source text*, not on a compiled AST: the
+//! analyzer must run against a tree that does not necessarily compile
+//! (that is the point — it runs before the compiler does in toolchain-less
+//! containers). Passes are conservative: when a construct cannot be
+//! modeled confidently (macro-generated items, glob re-exports, mixed
+//! match shapes) the pass skips rather than risk a false positive,
+//! because `audit_self` pins the suite to zero findings.
+
+pub mod drift;
+pub mod lexer;
+pub mod matches;
+pub mod unsafety;
+pub mod uses;
+
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One analyzer finding. `code` is stable across releases (documented in
+/// the README pass table); `pass` is the kebab-case pass name usable in
+/// `audit:allow(...)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub code: String,
+    pub pass: String,
+    /// Repo-root-relative path with `/` separators.
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(code: &str, pass: &str, file: &str, line: usize, message: String) -> Finding {
+        Finding {
+            code: code.to_string(),
+            pass: pass.to_string(),
+            file: file.to_string(),
+            line,
+            message,
+        }
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} [{}] {}:{}: {}",
+            self.code, self.pass, self.file, self.line, self.message
+        )
+    }
+}
+
+/// Full analyzer output; round-trips through [`crate::util::json`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct AuditReport {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+}
+
+impl AuditReport {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("format", json::n(1.0)),
+            ("files_scanned", json::n(self.files_scanned as f64)),
+            (
+                "findings",
+                json::arr(
+                    self.findings
+                        .iter()
+                        .map(|f| {
+                            json::obj(vec![
+                                ("code", json::s(&f.code)),
+                                ("pass", json::s(&f.pass)),
+                                ("file", json::s(&f.file)),
+                                ("line", json::n(f.line as f64)),
+                                ("message", json::s(&f.message)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<AuditReport> {
+        let mut findings = Vec::new();
+        for f in j.req_arr("findings")? {
+            findings.push(Finding {
+                code: f.req_str("code")?.to_string(),
+                pass: f.req_str("pass")?.to_string(),
+                file: f.req_str("file")?.to_string(),
+                line: f.req_usize("line")?,
+                message: f.req_str("message")?.to_string(),
+            });
+        }
+        Ok(AuditReport { files_scanned: j.req_usize("files_scanned")?, findings })
+    }
+}
+
+/// The audited source tree, loaded once and shared by every pass. Keys are
+/// repo-root-relative paths with `/` separators (stable across platforms,
+/// matching the golden files and the Python mirror).
+pub struct SourceTree {
+    pub root: PathBuf,
+    pub files: BTreeMap<String, String>,
+}
+
+/// Directories (relative to the repo root) whose `.rs` files are audited.
+const RS_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+/// Path fragments excluded everywhere — fixtures carry seeded violations,
+/// and build output is not source.
+const EXCLUDE: &[&str] = &["audit_fixtures", "target"];
+/// Non-Rust registry files the drift passes read.
+const EXTRA_FILES: &[&str] = &["README.md", "BENCH_baseline.json", "rust/Cargo.toml"];
+
+impl SourceTree {
+    pub fn load(root: &Path) -> Result<SourceTree> {
+        let mut files = BTreeMap::new();
+        for dir in RS_DIRS {
+            let base = root.join(dir);
+            if base.is_dir() {
+                collect_rs(root, &base, &mut files)?;
+            }
+        }
+        for extra in EXTRA_FILES {
+            let p = root.join(extra);
+            if p.is_file() {
+                let text = std::fs::read_to_string(&p)
+                    .with_context(|| format!("reading {}", p.display()))?;
+                files.insert((*extra).to_string(), text);
+            }
+        }
+        Ok(SourceTree { root: root.to_path_buf(), files })
+    }
+
+    /// Required registry file — a drift pass cannot run without it.
+    pub fn req(&self, rel: &str) -> Result<&str> {
+        self.files
+            .get(rel)
+            .map(|s| s.as_str())
+            .with_context(|| format!("audited tree is missing required file '{rel}'"))
+    }
+
+    pub fn rs_file_count(&self) -> usize {
+        self.files.keys().filter(|k| k.ends_with(".rs")).count()
+    }
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut BTreeMap<String, String>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        if EXCLUDE.iter().any(|x| rel.split('/').any(|seg| seg == *x)) {
+            continue;
+        }
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if rel.ends_with(".rs") {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            out.insert(rel, text);
+        }
+    }
+    Ok(())
+}
+
+/// Run every pass over the tree rooted at `root`.
+pub fn run_repo_audit(root: &Path) -> Result<AuditReport> {
+    let tree = SourceTree::load(root)?;
+    let mut findings = Vec::new();
+    findings.extend(lexer::pass_balance(&tree));
+    findings.extend(uses::pass_use_resolution(&tree));
+    findings.extend(matches::pass_match_exhaustive(&tree)?);
+    findings.extend(drift::pass_counter_drift(&tree)?);
+    findings.extend(drift::pass_env_drift(&tree)?);
+    findings.extend(drift::pass_route_drift(&tree)?);
+    findings.extend(drift::pass_bench_keys(&tree)?);
+    findings.extend(unsafety::pass_unsafe(&tree));
+    findings.extend(unsafety::pass_condvar(&tree));
+    Ok(AuditReport { files_scanned: tree.rs_file_count(), findings })
+}
+
+/// Walk up from `start` to the repo root (the directory holding both
+/// `rust/Cargo.toml` and `README.md`).
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut d = start.to_path_buf();
+    if !d.is_absolute() {
+        d = std::env::current_dir().ok()?.join(d);
+    }
+    loop {
+        if d.join("rust/Cargo.toml").is_file() && d.join("README.md").is_file() {
+            return Some(d);
+        }
+        if !d.pop() {
+            return None;
+        }
+    }
+}
+
+/// CLI entry: `pawd audit [--json] [--root <dir>]`. Returns the number of
+/// findings (the CLI maps non-zero to exit status 1).
+pub fn cli_audit(args: &[String]) -> Result<usize> {
+    let mut as_json = false;
+    let mut start = std::env::current_dir()?;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--json" => as_json = true,
+            "--root" => {
+                let v = it.next().context("--root needs a directory")?;
+                start = PathBuf::from(v);
+            }
+            other => bail!("unknown audit arg '{other}' (expected --json / --root <dir>)"),
+        }
+    }
+    let root = find_root(&start)
+        .context("repo root not found (need rust/Cargo.toml + README.md above cwd)")?;
+    let report = run_repo_audit(&root)?;
+    if as_json {
+        println!("{}", report.to_json());
+    } else {
+        for f in &report.findings {
+            println!("{f}");
+        }
+        println!(
+            "audit: {} files, {} finding(s)",
+            report.files_scanned,
+            report.findings.len()
+        );
+    }
+    Ok(report.findings.len())
+}

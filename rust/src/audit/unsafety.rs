@@ -1,0 +1,324 @@
+//! Unsafe and concurrency hygiene passes.
+//!
+//! * A201 `unsafe-safety` — every `unsafe` block / `unsafe impl` must carry
+//!   a `SAFETY:` comment on its line or immediately above (attributes and
+//!   sibling unsafe-impl lines are skipped while walking up); an
+//!   `unsafe fn` may instead carry a `# Safety` doc section.
+//! * A202 `unsafe-inventory` — per-file unsafe counts are pinned by
+//!   `rust/tests/audit_golden/unsafe_inventory.txt`, so each new unsafe
+//!   site is a deliberate, reviewable diff.
+//! * A203 `condvar-wait-in-loop` — `.wait(..)` / `.wait_timeout(..)` calls
+//!   must sit inside a `loop` / `while` / `for` so spurious wakeups re-check
+//!   the predicate (`wait_while` is self-predicated and exempt). Lexical,
+//!   receiver-agnostic: any non-loop `.wait(` is suspicious enough to flag,
+//!   with `audit:allow(condvar-wait-in-loop)` as the escape hatch.
+
+use super::lexer::{allow_lines, line_of, scrub, word_positions};
+use super::{Finding, SourceTree};
+use std::collections::BTreeMap;
+
+pub const GOLDEN_UNSAFE: &str = "rust/tests/audit_golden/unsafe_inventory.txt";
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum UnsafeKind {
+    Block,
+    Impl,
+    Fn,
+}
+
+/// `(line, kind)` of every `unsafe` keyword in a file.
+pub fn unsafe_sites(src: &str) -> Vec<(usize, UnsafeKind)> {
+    let sc = scrub(src);
+    if sc.error.is_some() {
+        return Vec::new();
+    }
+    let text = &sc.text;
+    let mut out = Vec::new();
+    for p in word_positions(text, "unsafe") {
+        let mut i = p + "unsafe".len();
+        while i < text.len() && text[i].is_whitespace() {
+            i += 1;
+        }
+        let after: String = text[i..text.len().min(i + 8)].iter().collect();
+        let kind = if after.starts_with('{') {
+            UnsafeKind::Block
+        } else if after.starts_with("impl") {
+            UnsafeKind::Impl
+        } else if after.starts_with("fn") || after.starts_with("extern") {
+            UnsafeKind::Fn
+        } else {
+            UnsafeKind::Block
+        };
+        out.push((line_of(text, p), kind));
+    }
+    out
+}
+
+/// SAFETY justification on the site line or an immediately-preceding run
+/// of comments / attributes / sibling unsafe-impl lines.
+fn has_safety_comment(lines: &[&str], lineno: usize, kind: UnsafeKind) -> bool {
+    if lines[lineno - 1].contains("SAFETY") {
+        return true;
+    }
+    let mut i = lineno as i64 - 2;
+    let mut seen_comment = false;
+    while i >= 0 {
+        let l = lines[i as usize].trim();
+        if l.starts_with("//") {
+            if l.contains("SAFETY") || (kind == UnsafeKind::Fn && l.contains("# Safety")) {
+                return true;
+            }
+            seen_comment = true;
+            i -= 1;
+            continue;
+        }
+        if l.starts_with("#[") || l.starts_with("#![") {
+            i -= 1;
+            continue;
+        }
+        if l.starts_with("unsafe impl") || l.starts_with("pub unsafe impl") {
+            i -= 1;
+            continue;
+        }
+        if l.is_empty() {
+            if seen_comment {
+                break;
+            }
+            i -= 1;
+            continue;
+        }
+        break;
+    }
+    false
+}
+
+/// A201 findings for one source text (shared with the fixture tests).
+pub fn check_safety_comments(rel: &str, src: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let lines: Vec<&str> = src.lines().collect();
+    let allowed = allow_lines(src, "unsafe-safety");
+    for (lineno, kind) in unsafe_sites(src) {
+        if allowed.contains(&lineno) {
+            continue;
+        }
+        if !has_safety_comment(&lines, lineno, kind) {
+            let kname = match kind {
+                UnsafeKind::Block => "block",
+                UnsafeKind::Impl => "impl",
+                UnsafeKind::Fn => "fn",
+            };
+            out.push(Finding::new(
+                "A201",
+                "unsafe-safety",
+                rel,
+                lineno,
+                format!("unsafe {kname} without a SAFETY comment"),
+            ));
+        }
+    }
+    out
+}
+
+pub fn pass_unsafe(tree: &SourceTree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut inventory: BTreeMap<&String, usize> = BTreeMap::new();
+    for (rel, src) in &tree.files {
+        if !rel.starts_with("rust/src/") {
+            continue;
+        }
+        let sites = unsafe_sites(src);
+        if !sites.is_empty() {
+            inventory.insert(rel, sites.len());
+        }
+        out.extend(check_safety_comments(rel, src));
+    }
+    let golden_path = tree.root.join(GOLDEN_UNSAFE);
+    let golden_src = match std::fs::read_to_string(&golden_path) {
+        Ok(s) => s,
+        Err(_) => {
+            out.push(Finding::new(
+                "A202",
+                "unsafe-inventory",
+                GOLDEN_UNSAFE,
+                1,
+                "golden unsafe inventory missing; expected lines '<path> <count>'".to_string(),
+            ));
+            return out;
+        }
+    };
+    let mut golden: BTreeMap<String, usize> = BTreeMap::new();
+    for l in golden_src.lines() {
+        let l = l.trim();
+        if l.is_empty() || l.starts_with('#') {
+            continue;
+        }
+        if let Some((p, c)) = l.rsplit_once(' ') {
+            if let Ok(count) = c.parse::<usize>() {
+                golden.insert(p.to_string(), count);
+            }
+        }
+    }
+    for (rel, count) in &inventory {
+        if golden.get(rel.as_str()).copied() != Some(*count) {
+            out.push(Finding::new(
+                "A202",
+                "unsafe-inventory",
+                rel,
+                1,
+                format!(
+                    "{count} unsafe site(s), golden file says {} — update {GOLDEN_UNSAFE} \
+                     if the new unsafe is deliberate",
+                    golden.get(rel.as_str()).copied().unwrap_or(0)
+                ),
+            ));
+        }
+    }
+    for rel in golden.keys() {
+        if !inventory.keys().any(|k| *k == rel) {
+            out.push(Finding::new(
+                "A202",
+                "unsafe-inventory",
+                GOLDEN_UNSAFE,
+                1,
+                format!("golden file lists '{rel}' but it has no unsafe (or is gone)"),
+            ));
+        }
+    }
+    out
+}
+
+/// A203 findings for one source text (shared with the fixture tests).
+pub fn check_condvar_waits(rel: &str, src: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let sc = scrub(src);
+    if sc.error.is_some() {
+        return out;
+    }
+    let text = &sc.text;
+    let n = text.len();
+    let allowed = allow_lines(src, "condvar-wait-in-loop");
+    // precompute open-brace stack positions for each index on demand
+    for p in word_positions(text, "wait").into_iter().chain(word_positions(text, "wait_timeout"))
+    {
+        if p == 0 || text[p - 1] != '.' {
+            continue;
+        }
+        // `.wait` must be followed directly by `(` (after ws); this skips
+        // `.wait_while` (self-predicated) and unrelated `.wait_for`-style
+        // names because `wait` only word-matches when not followed by `_`
+        let word_len = if text[p..n.min(p + "wait_timeout".len())]
+            .iter()
+            .collect::<String>()
+            .starts_with("wait_timeout")
+        {
+            "wait_timeout".len()
+        } else {
+            "wait".len()
+        };
+        let mut i = p + word_len;
+        while i < n && text[i].is_whitespace() {
+            i += 1;
+        }
+        if i >= n || text[i] != '(' {
+            continue;
+        }
+        let lineno = line_of(text, p);
+        if allowed.contains(&lineno) {
+            continue;
+        }
+        // collect enclosing open braces, innermost last
+        let mut opens: Vec<usize> = Vec::new();
+        for (j, &c) in text.iter().enumerate().take(p) {
+            if c == '{' {
+                opens.push(j);
+            } else if c == '}' {
+                opens.pop();
+            }
+        }
+        let mut in_loop = false;
+        for &open_pos in &opens {
+            let head_start = open_pos.saturating_sub(240);
+            let head: String = text[head_start..open_pos].iter().collect();
+            // strip back to the nearest statement boundary, then look for
+            // a loop keyword heading this block
+            let cut = ["{", "}", ";"]
+                .iter()
+                .filter_map(|d| head.rfind(*d))
+                .max()
+                .map(|c| c + 1)
+                .unwrap_or(0);
+            let head_chars: Vec<char> = head[cut..].chars().collect();
+            if !word_positions(&head_chars, "loop").is_empty()
+                || !word_positions(&head_chars, "while").is_empty()
+                || !word_positions(&head_chars, "for").is_empty()
+            {
+                in_loop = true;
+                break;
+            }
+        }
+        if !in_loop {
+            out.push(Finding::new(
+                "A203",
+                "condvar-wait-in-loop",
+                rel,
+                lineno,
+                "condvar wait outside any loop — spurious wakeups will break the \
+                 predicate (re-check in a while/loop)"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+pub fn pass_condvar(tree: &SourceTree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (rel, src) in &tree.files {
+        if rel.starts_with("rust/src/") || rel.starts_with("rust/tests/") {
+            out.extend(check_condvar_waits(rel, src));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miri_unsafe_sites_classified() {
+        let src = "unsafe impl Send for X {}\nfn f() {\n    // SAFETY: fine\n    \
+                   unsafe { g() }\n}\nunsafe fn g() {}\n";
+        let sites = unsafe_sites(src);
+        assert_eq!(sites.len(), 3);
+        assert_eq!(sites[0], (1, UnsafeKind::Impl));
+        assert_eq!(sites[1], (4, UnsafeKind::Block));
+        assert_eq!(sites[2], (6, UnsafeKind::Fn));
+    }
+
+    #[test]
+    fn miri_safety_comment_required() {
+        let bad = "fn f() {\n    unsafe { g() }\n}\n";
+        let good = "fn f() {\n    // SAFETY: g is fine here\n    unsafe { g() }\n}\n";
+        let fn_doc = "/// Does things.\n///\n/// # Safety\n///\n/// Caller checks cpu.\n\
+                      #[target_feature(enable = \"avx2\")]\nunsafe fn g() {}\n";
+        assert_eq!(check_safety_comments("x.rs", bad).len(), 1);
+        assert!(check_safety_comments("x.rs", good).is_empty());
+        assert!(check_safety_comments("x.rs", fn_doc).is_empty());
+        let allowed = "fn f() {\n    // audit:allow(unsafe-safety)\n    unsafe { g() }\n}\n";
+        assert!(check_safety_comments("x.rs", allowed).is_empty());
+    }
+
+    #[test]
+    fn miri_condvar_wait_needs_loop() {
+        let bad = "fn f() {\n    let g = cv.wait(g).unwrap();\n}\n";
+        let good = "fn f() {\n    while !*done {\n        g = cv.wait(g).unwrap();\n    }\n}\n";
+        let l = "fn f() {\n    loop {\n        let (ng, t) = cv.wait_timeout(g, d).unwrap();\n\
+                 \x20       if t.timed_out() { break; }\n    }\n}\n";
+        let wait_while = "fn f() {\n    let g = cv.wait_while(g, |s| !s.done).unwrap();\n}\n";
+        assert_eq!(check_condvar_waits("x.rs", bad).len(), 1);
+        assert!(check_condvar_waits("x.rs", good).is_empty());
+        assert!(check_condvar_waits("x.rs", l).is_empty());
+        assert!(check_condvar_waits("x.rs", wait_while).is_empty());
+    }
+}

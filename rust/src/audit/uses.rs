@@ -1,0 +1,463 @@
+//! A002 `use-resolution`: every crate-internal `use` path (`crate::`,
+//! `super::`, `self::` inside the lib, `pawd::` from tests/benches/
+//! examples) must resolve to a declared module, item, or `pub use`
+//! re-export.
+//!
+//! The resolver builds a module tree from `rust/src` by scanning scrubbed
+//! source: `mod x;` / inline `mod x { .. }` declarations, item keywords in
+//! statement position, and `pub use` re-exports (named leaves become
+//! members; a glob re-export marks the module "open", and lookups that
+//! land in an open module are skipped rather than flagged). Visibility is
+//! deliberately ignored — the pass audits *existence*, the compiler audits
+//! privacy.
+
+use super::lexer::{
+    allow_lines, at_stmt_pos, is_ident_char, line_of, match_brace, next_ident, scrub, skip_ws,
+    word_positions,
+};
+use super::{Finding, SourceTree};
+use std::collections::{BTreeMap, BTreeSet};
+
+#[derive(Default)]
+pub struct Module {
+    pub items: BTreeSet<String>,
+    pub submodules: BTreeSet<String>,
+    pub has_glob_reexport: bool,
+    pub parsed: bool,
+}
+
+pub struct UseDecl {
+    pub rel: String,
+    pub modpath: String,
+    pub tree: String,
+    pub line: usize,
+}
+
+const ITEM_KEYWORDS: &[&str] =
+    &["fn", "struct", "enum", "trait", "union", "type", "const", "static"];
+
+/// `(segments, alias)` leaves of a use tree like `a::{b, c as d, e::*}`.
+pub fn split_use_tree(tree: &str) -> Vec<(Vec<String>, Option<String>)> {
+    let mut results = Vec::new();
+    rec(&mut results, &[], tree);
+    return results;
+
+    fn rec(results: &mut Vec<(Vec<String>, Option<String>)>, prefix: &[String], t: &str) {
+        let t = t.trim();
+        let brace = t.find('{');
+        match brace {
+            None => {
+                let mut segs: Vec<String> = prefix.to_vec();
+                segs.extend(t.split("::").map(|s| s.trim().to_string()).filter(|s| !s.is_empty()));
+                let mut alias = None;
+                if let Some(last) = segs.last().cloned() {
+                    if let Some(p) = last.find(" as ") {
+                        let (name, al) = last.split_at(p);
+                        *segs.last_mut().unwrap() = name.trim().to_string();
+                        alias = Some(al[4..].trim().to_string());
+                    }
+                }
+                results.push((segs, alias));
+            }
+            Some(b) => {
+                let mut head = t[..b].trim_end();
+                if let Some(h) = head.strip_suffix("::") {
+                    head = h;
+                }
+                let mut segs: Vec<String> = prefix.to_vec();
+                segs.extend(
+                    head.split("::").map(|s| s.trim().to_string()).filter(|s| !s.is_empty()),
+                );
+                let close = t.rfind('}').unwrap_or(t.len());
+                let inner = &t[b + 1..close];
+                let mut depth = 0i64;
+                let mut part = String::new();
+                for ch in inner.chars() {
+                    match ch {
+                        '{' => depth += 1,
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                    if ch == ',' && depth == 0 {
+                        if !part.trim().is_empty() {
+                            rec(results, &segs, &part);
+                        }
+                        part.clear();
+                    } else {
+                        part.push(ch);
+                    }
+                }
+                if !part.trim().is_empty() {
+                    rec(results, &segs, &part);
+                }
+            }
+        }
+    }
+}
+
+/// Does the keyword at `kw_start` carry a `pub` / `pub(...)` prefix?
+fn has_pub_prefix(text: &[char], kw_start: usize) -> bool {
+    let mut i = kw_start;
+    while i > 0 && text[i - 1].is_whitespace() {
+        i -= 1;
+    }
+    if i > 0 && text[i - 1] == ')' {
+        let mut d = 0i64;
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            if text[j] == ')' {
+                d += 1;
+            } else if text[j] == '(' {
+                d -= 1;
+                if d == 0 {
+                    break;
+                }
+            }
+        }
+        while j > 0 && text[j - 1].is_whitespace() {
+            j -= 1;
+        }
+        i = j;
+    }
+    i >= 3
+        && text[i - 3..i] == ['p', 'u', 'b']
+        && (i == 3 || !is_ident_char(text[i - 4]))
+}
+
+/// Scan one (scrubbed) file, tracking inline `mod x { .. }` nesting, and
+/// record items / submodules / use decls per module path.
+fn parse_modules_in_file(
+    rel: &str,
+    scrubbed: &[char],
+    base_modpath: &str,
+    modules: &mut BTreeMap<String, Module>,
+    uses: &mut Vec<UseDecl>,
+) {
+    walk(rel, scrubbed, 0, scrubbed.len(), base_modpath, modules, uses);
+
+    #[allow(clippy::too_many_arguments)]
+    fn walk(
+        rel: &str,
+        scrubbed: &[char],
+        seg_start: usize,
+        seg_end: usize,
+        modpath: &str,
+        modules: &mut BTreeMap<String, Module>,
+        uses: &mut Vec<UseDecl>,
+    ) {
+        modules.entry(modpath.to_string()).or_default().parsed = true;
+        let mut masked: Vec<char> = scrubbed[seg_start..seg_end].to_vec();
+        // inline / declared submodules first, masking inline bodies out
+        let mut pos = 0usize;
+        loop {
+            let next = word_positions(&masked, "mod").into_iter().find(|&p| p >= pos);
+            let p = match next {
+                Some(p) => p,
+                None => break,
+            };
+            if !at_stmt_pos(&masked, p) {
+                pos = p + 3;
+                continue;
+            }
+            let (nstart, name) = match next_ident(&masked, p + 3) {
+                Some(v) => v,
+                None => break,
+            };
+            let after = skip_ws(&masked, nstart + name.len());
+            if after >= masked.len() {
+                break;
+            }
+            match masked[after] {
+                ';' => {
+                    modules.entry(modpath.to_string()).or_default().submodules.insert(name);
+                    pos = after + 1;
+                }
+                '{' => {
+                    let child = if modpath.is_empty() {
+                        name.clone()
+                    } else {
+                        format!("{modpath}::{name}")
+                    };
+                    let abs_open = seg_start + after;
+                    let close = match match_brace(scrubbed, abs_open) {
+                        Some(c) => c,
+                        None => break,
+                    };
+                    modules.entry(modpath.to_string()).or_default().submodules.insert(name);
+                    walk(rel, scrubbed, abs_open + 1, close, &child, modules, uses);
+                    for c in masked
+                        .iter_mut()
+                        .take(close - seg_start)
+                        .skip(after + 1)
+                        .filter(|c| **c != '\n')
+                    {
+                        *c = ' ';
+                    }
+                    pos = close - seg_start;
+                }
+                _ => pos = after,
+            }
+        }
+        // items at this level
+        for kw in ITEM_KEYWORDS {
+            for p in word_positions(&masked, kw) {
+                if !at_stmt_pos(&masked, p) {
+                    continue;
+                }
+                let after = skip_ws(&masked, p + kw.len());
+                if let Some((_, name)) = next_ident(&masked, after) {
+                    // the ident must start right at `after` (no operators
+                    // between keyword and name)
+                    if after < masked.len() && is_ident_char(masked[after]) {
+                        modules.entry(modpath.to_string()).or_default().items.insert(name);
+                    }
+                }
+            }
+        }
+        for p in word_positions(&masked, "macro_rules") {
+            let mut i = p + "macro_rules".len();
+            if i < masked.len() && masked[i] == '!' {
+                i = skip_ws(&masked, i + 1);
+                if let Some(name) = super::lexer::ident_at(&masked, i) {
+                    modules.entry(modpath.to_string()).or_default().items.insert(name);
+                }
+            }
+        }
+        // use decls at this level
+        for p in word_positions(&masked, "use") {
+            if !at_stmt_pos(&masked, p) {
+                continue;
+            }
+            let start = skip_ws(&masked, p + 3);
+            let mut end = start;
+            while end < masked.len() && masked[end] != ';' {
+                end += 1;
+            }
+            if end >= masked.len() {
+                continue;
+            }
+            let tree: String = masked[start..end].iter().collect();
+            uses.push(UseDecl {
+                rel: rel.to_string(),
+                modpath: modpath.to_string(),
+                tree: tree.clone(),
+                line: line_of(scrubbed, seg_start + p),
+            });
+            if has_pub_prefix(&masked, p) {
+                let m = modules.entry(modpath.to_string()).or_default();
+                for (segs, alias) in split_use_tree(&tree) {
+                    match segs.last().map(|s| s.as_str()) {
+                        Some("*") => m.has_glob_reexport = true,
+                        Some(last) => {
+                            m.items.insert(alias.unwrap_or_else(|| last.to_string()));
+                        }
+                        None => {}
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Build the lib crate's module map from `rust/src`. `""` is the crate
+/// root; `main.rs` is tracked as the pseudo-module `__main__`.
+pub fn build_crate(tree: &SourceTree) -> (BTreeMap<String, Module>, Vec<UseDecl>) {
+    let mut modules = BTreeMap::new();
+    let mut uses = Vec::new();
+    for (rel, src) in &tree.files {
+        let p = match rel.strip_prefix("rust/src/") {
+            Some(p) => p,
+            None => continue,
+        };
+        let sc = scrub(src);
+        if sc.error.is_some() {
+            continue; // the balance pass reports it
+        }
+        let modpath = if p == "lib.rs" {
+            String::new()
+        } else if p == "main.rs" {
+            "__main__".to_string()
+        } else if let Some(stem) = p.strip_suffix("/mod.rs") {
+            stem.replace('/', "::")
+        } else {
+            p.trim_end_matches(".rs").replace('/', "::")
+        };
+        parse_modules_in_file(rel, &sc.text, &modpath, &mut modules, &mut uses);
+    }
+    (modules, uses)
+}
+
+/// Resolve absolute (crate-rooted) segments. `None` = cannot decide
+/// confidently (glob re-exports, unparsed module) — skip.
+pub fn resolve_path(modules: &BTreeMap<String, Module>, segs: &[String]) -> Option<bool> {
+    let mut cur = String::new();
+    for seg in segs {
+        let m = match modules.get(&cur) {
+            Some(m) if m.parsed => m,
+            _ => return None,
+        };
+        if seg == "*" {
+            return Some(true);
+        }
+        if seg == "self" {
+            // `use a::b::{self, X}` — the module resolved so far
+            continue;
+        }
+        if m.submodules.contains(seg) {
+            cur = if cur.is_empty() { seg.clone() } else { format!("{cur}::{seg}") };
+            continue;
+        }
+        if m.items.contains(seg) {
+            // items may have associated paths (`Enum::Variant` in a use
+            // tree); accept the remainder unchecked
+            return Some(true);
+        }
+        if m.has_glob_reexport {
+            return None; // the name may come in through the glob
+        }
+        return Some(false);
+    }
+    Some(true)
+}
+
+pub fn pass_use_resolution(tree: &SourceTree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let (modules, uses) = build_crate(tree);
+    let allow: BTreeMap<&String, Vec<usize>> = tree
+        .files
+        .iter()
+        .map(|(rel, src)| (rel, allow_lines(src, "use-resolution")))
+        .collect();
+
+    // lib/bin sources: crate:: / super:: / self::
+    for u in &uses {
+        if allow.get(&u.rel).map(|v| v.contains(&u.line)).unwrap_or(false) {
+            continue;
+        }
+        for (segs, _alias) in split_use_tree(&u.tree) {
+            let head = match segs.first() {
+                Some(h) => h.as_str(),
+                None => continue,
+            };
+            let abs: Vec<String> = match head {
+                "crate" => segs[1..].to_vec(),
+                "self" => {
+                    let mut v: Vec<String> = if u.modpath.is_empty() || u.modpath == "__main__" {
+                        Vec::new()
+                    } else {
+                        u.modpath.split("::").map(String::from).collect()
+                    };
+                    v.extend(segs[1..].iter().cloned());
+                    v
+                }
+                "super" => {
+                    let parts: Vec<String> = if u.modpath.is_empty() || u.modpath == "__main__" {
+                        Vec::new()
+                    } else {
+                        u.modpath.split("::").map(String::from).collect()
+                    };
+                    let k = segs.iter().take_while(|s| s.as_str() == "super").count();
+                    if k > parts.len() {
+                        out.push(Finding::new(
+                            "A002",
+                            "use-resolution",
+                            &u.rel,
+                            u.line,
+                            format!("'{}': too many 'super'", segs.join("::")),
+                        ));
+                        continue;
+                    }
+                    let mut v = parts[..parts.len() - k].to_vec();
+                    v.extend(segs[k..].iter().cloned());
+                    v
+                }
+                _ => continue, // external crate
+            };
+            if resolve_path(&modules, &abs) == Some(false) {
+                out.push(Finding::new(
+                    "A002",
+                    "use-resolution",
+                    &u.rel,
+                    u.line,
+                    format!("use path '{}' does not resolve", segs.join("::")),
+                ));
+            }
+        }
+    }
+
+    // tests/benches/examples: pawd:: resolves against the lib crate root
+    for (rel, src) in &tree.files {
+        if rel.starts_with("rust/src/") || !rel.ends_with(".rs") {
+            continue;
+        }
+        let sc = scrub(src);
+        if sc.error.is_some() {
+            continue;
+        }
+        let allowed = allow_lines(src, "use-resolution");
+        for p in word_positions(&sc.text, "use") {
+            if !at_stmt_pos(&sc.text, p) {
+                continue;
+            }
+            let start = skip_ws(&sc.text, p + 3);
+            let mut end = start;
+            while end < sc.text.len() && sc.text[end] != ';' {
+                end += 1;
+            }
+            if end >= sc.text.len() {
+                continue;
+            }
+            let line = line_of(&sc.text, p);
+            if allowed.contains(&line) {
+                continue;
+            }
+            let use_tree: String = sc.text[start..end].iter().collect();
+            for (segs, _alias) in split_use_tree(&use_tree) {
+                if segs.first().map(|s| s.as_str()) != Some("pawd") {
+                    continue;
+                }
+                if resolve_path(&modules, &segs[1..]) == Some(false) {
+                    out.push(Finding::new(
+                        "A002",
+                        "use-resolution",
+                        rel,
+                        line,
+                        format!("use path '{}' does not resolve", segs.join("::")),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miri_split_use_tree_nested() {
+        let leaves = split_use_tree("a::{b, c as d, e::{f, *}}");
+        let flat: Vec<String> = leaves.iter().map(|(s, _)| s.join("::")).collect();
+        assert_eq!(flat, vec!["a::b", "a::c", "a::e::f", "a::e::*"]);
+        assert_eq!(leaves[1].1.as_deref(), Some("d"));
+    }
+
+    #[test]
+    fn miri_resolve_through_reexport() {
+        let mut modules: BTreeMap<String, Module> = BTreeMap::new();
+        let root = modules.entry(String::new()).or_default();
+        root.parsed = true;
+        root.submodules.insert("a".into());
+        let a = modules.entry("a".into()).or_default();
+        a.parsed = true;
+        a.items.insert("Thing".into());
+        let to = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(resolve_path(&modules, &to(&["a", "Thing"])), Some(true));
+        assert_eq!(resolve_path(&modules, &to(&["a", "Missing"])), Some(false));
+        assert_eq!(resolve_path(&modules, &to(&["a", "self"])), Some(true));
+        modules.get_mut("a").unwrap().has_glob_reexport = true;
+        assert_eq!(resolve_path(&modules, &to(&["a", "Missing"])), None);
+    }
+}

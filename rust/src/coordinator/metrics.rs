@@ -70,6 +70,24 @@ pub struct MetricsSnapshot {
     /// a publish warming `N+1` while `N` ages out.
     pub resident_versions: Vec<VersionResidency>,
     pub per_variant: BTreeMap<String, u64>,
+    /// Base-weight GEMMs executed (process-wide, from
+    /// [`exec::counters`](crate::exec::counters)); the batched path runs
+    /// one per module per mixed-variant window.
+    pub base_gemms: u64,
+    /// Artifact bytes read by the loader (packed `.pawd` payloads).
+    pub loader_bytes: u64,
+    /// Per-module section reads during artifact loads.
+    pub module_reads: u64,
+    /// Modules inherited from a resident parent instead of re-read — the
+    /// patch-chain cache-sharing win.
+    pub modules_inherited: u64,
+    /// Bytes moved by replication transports (fs + http).
+    pub wire_bytes: u64,
+    /// Files fetched by replication transports.
+    pub wire_files: u64,
+    /// Activation rows traversed by fused kernels; the prefix cache exists
+    /// to shrink this.
+    pub activation_row_reads: u64,
     /// Compute-pool chunks executed (process-wide, from
     /// [`exec::counters`](crate::exec::counters)). Zero means every kernel
     /// ran on its caller thread (serial widths / tiny inputs).
@@ -196,6 +214,13 @@ fn snapshot_inner(i: &Inner) -> MetricsSnapshot {
         resident_dense_equiv_bytes: i.residency.dense_equiv_bytes,
         resident_versions: i.residency.per_version.clone(),
         per_variant: i.per_variant.clone(),
+        base_gemms: crate::exec::counters::base_gemms(),
+        loader_bytes: crate::exec::counters::loader_bytes(),
+        module_reads: crate::exec::counters::module_reads(),
+        modules_inherited: crate::exec::counters::modules_inherited(),
+        wire_bytes: crate::exec::counters::wire_bytes(),
+        wire_files: crate::exec::counters::wire_files(),
+        activation_row_reads: crate::exec::counters::activation_row_reads(),
         pool_tasks: crate::exec::counters::pool_tasks(),
         pool_steal_or_idle_ns: crate::exec::counters::pool_steal_or_idle_ns(),
         engine_steps: crate::exec::counters::engine_steps(),
@@ -215,8 +240,9 @@ mod tests {
     #[test]
     fn snapshot_aggregates() {
         let m = Metrics::new();
-        m.record_request("a", Duration::from_micros(10), Duration::from_micros(100), Duration::from_micros(120), false);
-        m.record_request("b", Duration::from_micros(20), Duration::from_micros(200), Duration::from_micros(230), true);
+        let us = Duration::from_micros;
+        m.record_request("a", us(10), us(100), us(120), false);
+        m.record_request("b", us(20), us(200), us(230), true);
         m.record_batch(2);
         m.record_cold_start(Duration::from_millis(5));
         let s = m.snapshot();

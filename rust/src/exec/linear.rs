@@ -387,6 +387,11 @@ pub fn signed_sum_u64(vals: &[f32], words: &[u32]) -> f32 {
 /// ±sign masks straight from the word (`srlv` by lane index, XOR against 1,
 /// shift into the sign bit) and XOR them onto the loaded values — eight
 /// signed accumulations per instruction, no unpacking to ±1.0 floats.
+///
+/// # Safety
+///
+/// Callers must have verified AVX2 support (`is_x86_feature_detected!`)
+/// before dispatching here; all loads are `loadu` so alignment is free.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn signed_sum_avx2(vals: &[f32], words: &[u32]) -> f32 {
@@ -561,6 +566,31 @@ mod tests {
         let mut x = Tensor2::zeros(n, d_in);
         r.fill_normal(&mut x.data, 1.0);
         x
+    }
+
+    #[test]
+    fn miri_signed_sum_u64_matches_reference() {
+        // Pinned to the portable word path — no feature probe, no
+        // intrinsics — so the XOR sign-flip trick runs under Miri (the
+        // sanitizers CI lane filters on the miri_ name prefix). The
+        // reference sums sequentially, so compare with a tolerance rather
+        // than bitwise (the 8-lane accumulation associates differently).
+        let mut r = Rng::new(77);
+        for &d_in in &[1usize, 31, 32, 33, 64, 65, 100, 129] {
+            let vals: Vec<f32> = (0..d_in).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let words: Vec<u32> = (0..d_in.div_ceil(32)).map(|_| r.next_u32()).collect();
+            let want: f64 = (0..d_in)
+                .map(|i| {
+                    let sign = if (words[i / 32] >> (i % 32)) & 1 == 1 { 1.0 } else { -1.0 };
+                    sign * vals[i] as f64
+                })
+                .sum();
+            let got = signed_sum_u64(&vals, &words) as f64;
+            assert!(
+                (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                "d_in {d_in}: got {got}, want {want}"
+            );
+        }
     }
 
     #[test]

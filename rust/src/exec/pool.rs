@@ -280,6 +280,23 @@ mod tests {
     use std::sync::atomic::AtomicU64;
 
     #[test]
+    fn miri_pool_threads_cover_range() {
+        // Small enough to finish quickly under Miri's interpreter (the
+        // sanitizers CI lane runs `miri test --lib -- miri_`), yet still
+        // exercises the full claim protocol: the lifetime-erased job
+        // pointer, the shared chunk cursor, and the condvar completion
+        // handshake — exactly the unsafe surface the golden inventory pins.
+        let pool = Pool::new(2);
+        let sum = AtomicU64::new(0);
+        pool.run(64, 2, 1, |lo, hi| {
+            for i in lo..hi {
+                sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 64 * 65 / 2);
+    }
+
+    #[test]
     fn run_covers_range_exactly_once() {
         let pool = Pool::new(3);
         let sum = AtomicU64::new(0);

@@ -484,6 +484,24 @@ mod tests {
     }
 
     #[test]
+    fn miri_weak_keyed_identity() {
+        // Arc-address identity under Miri's strict provenance (the
+        // sanitizers CI lane filters on the miri_ name prefix): a hit
+        // requires the very same base allocation, and a content-equal
+        // rebuild at a fresh address must miss even though the old entry's
+        // Weak still pins the original allocation against address reuse.
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let base = Arc::new(FlatParams::init(&cfg, 9));
+        let cache = PrefixCache::with_budget(1 << 20);
+        cache.insert(&base, None, tiny_state((0..8).collect(), 4));
+        let long: Vec<u8> = (0..16).collect();
+        assert!(cache.lookup(&base, None, &long, 8).is_some());
+        let rebuilt = Arc::new(FlatParams::init(&cfg, 9));
+        assert!(cache.lookup(&rebuilt, None, &long, 8).is_none());
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
     fn hash_and_block_floor_basics() {
         assert_eq!(hash_tokens(b"abc"), hash_tokens(b"abc"));
         assert_ne!(hash_tokens(b"abc"), hash_tokens(b"abd"));

@@ -31,6 +31,7 @@
 //! artifacts through the PJRT CPU client (`xla` crate) and executes them
 //! from the Rust hot path.
 
+pub mod audit;
 pub mod baselines;
 pub mod coordinator;
 pub mod data;

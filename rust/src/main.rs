@@ -62,6 +62,12 @@ USAGE:
                                                  diff two BENCH_*.json files (CI perf
                                                  gate); --promote overwrites the baseline
                                                  with the current report from a trusted run
+  pawd audit [--json] [--root <dir>]             run the repo static analysis passes
+                                                 (bracket balance, use resolution,
+                                                 exhaustive matches, registry drift,
+                                                 unsafe inventory, condvar loops); exits
+                                                 non-zero on any finding. See the README
+                                                 \"Static analysis & sanitizers\" section
   pawd presets                                   list model config presets
 
 publish/consolidate/rollback/versions/gc administer a variant directory
@@ -87,6 +93,13 @@ fn main() -> Result<()> {
         Some("gc") => cmd_gc(&args[1..]),
         Some("replicate") => cmd_replicate(&args[1..]),
         Some("bench-diff") => cmd_bench_diff(&args[1..]),
+        Some("audit") => {
+            let findings = pawd::audit::cli_audit(&args[1..])?;
+            if findings > 0 {
+                std::process::exit(1);
+            }
+            Ok(())
+        }
         Some("presets") => {
             for p in ["tiny", "llama-mini", "qwen-mini", "phi-mini", "base-110m"] {
                 let c = ModelConfig::preset(p).unwrap();
@@ -221,6 +234,20 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 snap.prefix_cache_misses,
                 fmt_bytes(snap.prefix_cache_bytes),
                 snap.prefix_rows_skipped
+            );
+            println!(
+                "  exec: {} base gemms, {} pool tasks ({} ns idle), \
+                 {} activation rows; loader {} in {} reads \
+                 ({} modules inherited); wire {} in {} files",
+                snap.base_gemms,
+                snap.pool_tasks,
+                snap.pool_steal_or_idle_ns,
+                snap.activation_row_reads,
+                fmt_bytes(snap.loader_bytes),
+                snap.module_reads,
+                snap.modules_inherited,
+                fmt_bytes(snap.wire_bytes),
+                snap.wire_files
             );
         }
     }

@@ -482,6 +482,13 @@ pub fn snapshot_to_json(s: &MetricsSnapshot) -> Json {
                     .collect(),
             ),
         ),
+        ("base_gemms", json::n(s.base_gemms as f64)),
+        ("loader_bytes", json::n(s.loader_bytes as f64)),
+        ("module_reads", json::n(s.module_reads as f64)),
+        ("modules_inherited", json::n(s.modules_inherited as f64)),
+        ("wire_bytes", json::n(s.wire_bytes as f64)),
+        ("wire_files", json::n(s.wire_files as f64)),
+        ("activation_row_reads", json::n(s.activation_row_reads as f64)),
         ("pool_tasks", json::n(s.pool_tasks as f64)),
         ("pool_steal_or_idle_ns", json::n(s.pool_steal_or_idle_ns as f64)),
         ("engine_steps", json::n(s.engine_steps as f64)),
@@ -532,6 +539,13 @@ pub fn snapshot_from_json(j: &Json) -> Result<MetricsSnapshot> {
         resident_dense_equiv_bytes: j.req_usize("resident_dense_equiv_bytes")? as u64,
         resident_versions,
         per_variant,
+        base_gemms: j.req_usize("base_gemms")? as u64,
+        loader_bytes: j.req_usize("loader_bytes")? as u64,
+        module_reads: j.req_usize("module_reads")? as u64,
+        modules_inherited: j.req_usize("modules_inherited")? as u64,
+        wire_bytes: j.req_usize("wire_bytes")? as u64,
+        wire_files: j.req_usize("wire_files")? as u64,
+        activation_row_reads: j.req_usize("activation_row_reads")? as u64,
         pool_tasks: j.req_usize("pool_tasks")? as u64,
         pool_steal_or_idle_ns: j.req_usize("pool_steal_or_idle_ns")? as u64,
         engine_steps: j.req_usize("engine_steps")? as u64,

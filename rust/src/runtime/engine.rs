@@ -276,6 +276,8 @@ fn from_literal(l: xla::Literal) -> Result<HostTensor> {
 
 #[cfg(feature = "xla-runtime")]
 fn bytes_of<T: Copy>(v: &[T]) -> &[u8] {
-    // Plain-old-data reinterpretation for the FFI boundary.
+    // SAFETY: plain-old-data reinterpretation for the FFI boundary — `T` is
+    // `Copy`, the byte length comes from `size_of_val`, and the borrow pins
+    // the source slice for the returned lifetime.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
 }

@@ -1,0 +1,86 @@
+//! Seeded-violation fixtures for the audit passes.
+//!
+//! Each file under `tests/audit_fixtures/` carries exactly one deliberate
+//! violation, and each must surface as exactly one finding with its stable
+//! code — proving the passes fire (the self-audit only proves they stay
+//! quiet). The fixtures are excluded from the repo audit by path segment
+//! and are never compiled (cargo only builds top-level files in `tests/`).
+
+use pawd::audit::{drift, lexer, matches, unsafety, uses, SourceTree};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/audit_fixtures")
+}
+
+fn snippet(name: &str) -> String {
+    let p = fixture_dir().join("snippets").join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+/// The one-and-only-one contract every fixture is held to.
+fn expect_single(findings: &[pawd::audit::Finding], code: &str, msg_fragment: &str) {
+    assert_eq!(
+        findings.len(),
+        1,
+        "expected exactly one {code} finding, got: {:?}",
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>()
+    );
+    assert_eq!(findings[0].code, code);
+    assert!(
+        findings[0].message.contains(msg_fragment),
+        "finding message {:?} missing fragment {msg_fragment:?}",
+        findings[0].message
+    );
+}
+
+#[test]
+fn unbalanced_snippet_yields_one_a001() {
+    let src = snippet("unbalanced.rs");
+    expect_single(&lexer::balance_one("unbalanced.rs", &src), "A001", "{");
+}
+
+#[test]
+fn missing_safety_snippet_yields_one_a201() {
+    let src = snippet("missing_safety.rs");
+    expect_single(&unsafety::check_safety_comments("missing_safety.rs", &src), "A201", "SAFETY");
+}
+
+#[test]
+fn nonexhaustive_match_snippet_yields_one_a003() {
+    let src = snippet("nonexhaustive_match.rs");
+    // The fixture declares its own grown enum; build the variant table the
+    // same way the repo pass does.
+    let variants = matches::enum_variants(&src, "Fruit").expect("Fruit enum parses");
+    assert_eq!(variants, ["Apple", "Banana", "Cherry"]);
+    let mut enums: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    enums.insert("Fruit".to_string(), variants.into_iter().collect());
+    expect_single(
+        &matches::check_file("nonexhaustive_match.rs", &src, &enums),
+        "A003",
+        "Cherry",
+    );
+}
+
+#[test]
+fn condvar_snippet_yields_one_a203() {
+    let src = snippet("condvar_no_loop.rs");
+    expect_single(&unsafety::check_condvar_waits("condvar_no_loop.rs", &src), "A203", "loop");
+}
+
+#[test]
+fn mini_use_tree_yields_one_a002() {
+    let tree = SourceTree::load(&fixture_dir().join("mini_use")).expect("fixture tree loads");
+    let findings = uses::pass_use_resolution(&tree);
+    expect_single(&findings, "A002", "Missing");
+    assert_eq!(findings[0].file, "rust/src/lib.rs");
+}
+
+#[test]
+fn mini_drift_tree_yields_one_a101() {
+    let tree = SourceTree::load(&fixture_dir().join("mini_drift")).expect("fixture tree loads");
+    let findings = drift::pass_counter_drift(&tree).expect("pass runs");
+    expect_single(&findings, "A101", "README counter table");
+    assert_eq!(findings[0].file, "README.md");
+}

@@ -1,0 +1,7 @@
+pub struct MetricsSnapshot {
+    pub orphan_counter: u64,
+}
+
+pub fn snapshot_inner() -> MetricsSnapshot {
+    MetricsSnapshot { orphan_counter: crate::exec::counters::orphan_counter() }
+}

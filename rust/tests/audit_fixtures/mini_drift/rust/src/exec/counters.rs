@@ -1,0 +1,9 @@
+//! Fixture counters registry. `orphan_counter` is wired through the
+//! snapshot, the wire codec, and the serve summary — but deliberately
+//! missing from the README counter table (seeded A101).
+
+pub fn orphan_counter() -> u64 {
+    0
+}
+
+pub fn reset() {}

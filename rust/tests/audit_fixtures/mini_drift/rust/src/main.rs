@@ -1,0 +1,4 @@
+fn main() {
+    let snap = crate::coordinator::metrics::snapshot_inner();
+    println!("{}", snap.orphan_counter);
+}

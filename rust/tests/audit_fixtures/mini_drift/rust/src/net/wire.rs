@@ -1,0 +1,7 @@
+pub fn snapshot_to_json() -> &'static str {
+    "orphan_counter"
+}
+
+pub fn snapshot_from_json() -> &'static str {
+    "orphan_counter"
+}

@@ -1,0 +1,10 @@
+// Fixture crate: seeded A002 — `exec` only exports `Present`, so the
+// `use crate::exec::Missing;` below cannot resolve.
+
+pub mod exec;
+
+use crate::exec::Missing;
+
+pub fn touch() -> Missing {
+    Missing
+}

@@ -1,0 +1,7 @@
+// Fixture: seeded A203 — a condvar wait with no enclosing loop, so a
+// spurious wakeup returns with the predicate unchecked.
+
+fn wait_once(m: &std::sync::Mutex<bool>, cv: &std::sync::Condvar) {
+    let g = m.lock().unwrap();
+    let _g = cv.wait(g).unwrap();
+}

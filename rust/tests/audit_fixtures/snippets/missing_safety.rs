@@ -1,0 +1,5 @@
+// Fixture: seeded A201 — unsafe block without a justification comment.
+
+fn deref(p: *const u32) -> u32 {
+    unsafe { *p }
+}

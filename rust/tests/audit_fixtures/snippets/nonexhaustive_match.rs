@@ -1,0 +1,14 @@
+// Fixture: seeded A003 — match over Fruit misses Cherry and has no catch-all.
+
+pub enum Fruit {
+    Apple,
+    Banana,
+    Cherry,
+}
+
+pub fn describe(f: &Fruit) -> &'static str {
+    match f {
+        Fruit::Apple => "apple",
+        Fruit::Banana => "banana",
+    }
+}

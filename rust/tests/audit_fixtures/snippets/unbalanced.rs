@@ -1,0 +1,6 @@
+// Fixture: seeded A001 — the block opened by `broken` is never closed.
+
+fn broken() {
+    if true {
+        let _x = 1;
+}

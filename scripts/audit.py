@@ -1,0 +1,1184 @@
+#!/usr/bin/env python3
+"""Toolchain-less mirror of `pawd audit` (rust/src/audit/).
+
+The Rust analyzer is the authoritative implementation — it runs in tier-1
+CI (`rust/tests/audit_self.rs`) and as `pawd audit [--json]`. This script
+re-implements the same passes with the same finding codes so the audit can
+run pre-commit in containers that have no Rust toolchain (the environment
+this repo has been grown in). `scripts/audit.sh` prefers the Rust binary
+and falls back to this mirror.
+
+Passes (stable finding codes):
+  A001 bracket-balance      delimiter/string/comment balance per .rs file
+  A002 use-resolution       crate-internal use paths resolve to pub items
+  A003 match-exhaustive     matches over grown enums cover every variant
+  A101 counter-drift        exec/counters == MetricsSnapshot == wire keys
+                            == serve summary refs == README counter table
+  A102 env-drift            PAWD_* env reads == README env table
+  A103 route-drift          AdminOp variants == admin_routes::ALL == README
+  A104 bench-key-drift      BENCH_baseline.json gated keys exist in benches
+  A201 unsafe-safety        every unsafe site carries a SAFETY comment
+  A202 unsafe-inventory     per-file unsafe counts match the golden file
+  A203 condvar-wait-in-loop condvar waits sit inside a re-checking loop
+
+Suppress a finding with `// audit:allow(<pass-name>)` on the same line or
+the line above the site.
+
+Exit status: 0 = clean, 1 = findings, 2 = analyzer error.
+"""
+
+import json
+import os
+import re
+import sys
+
+IDENT = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+
+# Grown enums: matches over these must stay exhaustive (file, enum name).
+GROWN_ENUMS = [
+    ("rust/src/coordinator/request.rs", "AdminOp"),
+    ("rust/src/coordinator/request.rs", "Payload"),
+    ("rust/src/coordinator/engine.rs", "Ingress"),
+    ("rust/src/delta/compress.rs", "CodecChoice"),
+    ("rust/src/net/http.rs", "HttpError"),
+]
+
+GOLDEN_UNSAFE = "rust/tests/audit_golden/unsafe_inventory.txt"
+
+# Directories (relative to the repo root) whose .rs files are audited.
+RS_DIRS = ["rust/src", "rust/tests", "rust/benches", "examples"]
+# Path fragments excluded everywhere (fixtures carry seeded violations).
+EXCLUDE = ["audit_fixtures", "/target/"]
+
+
+def finding(code, pass_name, file, line, message):
+    return {"code": code, "pass": pass_name, "file": file, "line": line, "message": message}
+
+
+# -- lexer ------------------------------------------------------------------
+
+
+def scrub(src):
+    """Blank comments and string/char literal bodies, preserving length,
+    newlines and delimiters. Returns (scrubbed, error) where error is an
+    (line, message) for an unterminated construct, else None."""
+    out = []
+    chars = list(src)
+    n = len(chars)
+    i = 0
+    line = 1
+
+    def put(c):
+        out.append(c)
+
+    def blank(c):
+        out.append("\n" if c == "\n" else " ")
+
+    while i < n:
+        c = chars[i]
+        nxt = chars[i + 1] if i + 1 < n else ""
+        if c == "\n":
+            line += 1
+        if c == "/" and nxt == "/":
+            while i < n and chars[i] != "\n":
+                blank(chars[i])
+                i += 1
+            continue
+        if c == "/" and nxt == "*":
+            start = line
+            depth = 0
+            while i < n:
+                if chars[i] == "\n":
+                    line += 1
+                if chars[i] == "/" and i + 1 < n and chars[i + 1] == "*":
+                    depth += 1
+                    blank(chars[i])
+                    blank(chars[i + 1])
+                    i += 2
+                    continue
+                if chars[i] == "*" and i + 1 < n and chars[i + 1] == "/":
+                    depth -= 1
+                    blank(chars[i])
+                    blank(chars[i + 1])
+                    i += 2
+                    if depth == 0:
+                        break
+                    continue
+                blank(chars[i])
+                i += 1
+            if depth != 0:
+                return "".join(out), (start, "unterminated block comment")
+            continue
+        prev = chars[i - 1] if i > 0 else ""
+        prev_is_ident = bool(prev) and (prev.isalnum() or prev == "_")
+        # Raw / byte string openers: r" r#" br" br#" b" (never mid-ident).
+        if not prev_is_ident and c in ("r", "b"):
+            j = i
+            if c == "b" and j + 1 < n and chars[j + 1] == "r":
+                j += 1
+            if chars[j] in ("r", "b") or True:
+                pass
+            k = j + 1
+            hashes = 0
+            while k < n and chars[k] == "#" and chars[j] != "b":
+                hashes += 1
+                k += 1
+            raw = chars[j] == "r" or (c == "b" and j > i)
+            if k < n and chars[k] == '"' and (raw or (c == "b" and j == i)):
+                start = line
+                # emit prefix + opening quote
+                for p in range(i, k + 1):
+                    put(chars[p])
+                    if chars[p] == "\n":
+                        line += 1
+                i = k + 1
+                closed = False
+                while i < n:
+                    if chars[i] == "\n":
+                        line += 1
+                        put("\n")
+                        i += 1
+                        continue
+                    if not raw and chars[i] == "\\" and i + 1 < n:
+                        blank(chars[i])
+                        blank(chars[i + 1])
+                        if chars[i + 1] == "\n":
+                            line += 1
+                            out[-1] = "\n"
+                        i += 2
+                        continue
+                    if chars[i] == '"':
+                        if raw:
+                            h = 0
+                            while i + 1 + h < n and chars[i + 1 + h] == "#" and h < hashes:
+                                h += 1
+                            if h == hashes:
+                                put('"')
+                                for p in range(h):
+                                    put("#")
+                                i += 1 + h
+                                closed = True
+                                break
+                            blank(chars[i])
+                            i += 1
+                            continue
+                        put('"')
+                        i += 1
+                        closed = True
+                        break
+                    blank(chars[i])
+                    i += 1
+                if not closed:
+                    return "".join(out), (start, "unterminated string literal")
+                continue
+        if c == '"':
+            start = line
+            put('"')
+            i += 1
+            closed = False
+            while i < n:
+                if chars[i] == "\n":
+                    line += 1
+                    put("\n")
+                    i += 1
+                    continue
+                if chars[i] == "\\" and i + 1 < n:
+                    blank(chars[i])
+                    if chars[i + 1] == "\n":
+                        line += 1
+                        put("\n")
+                    else:
+                        blank(chars[i + 1])
+                    i += 2
+                    continue
+                if chars[i] == '"':
+                    put('"')
+                    i += 1
+                    closed = True
+                    break
+                blank(chars[i])
+                i += 1
+            if not closed:
+                return "".join(out), (start, "unterminated string literal")
+            continue
+        # b'x' byte literals: the `'` is preceded by an ident char (`b`),
+        # so allow it through when the char before the `b` is a non-ident.
+        byte_char = (
+            c == "'" and prev == "b"
+            and not (i >= 2 and (chars[i - 2].isalnum() or chars[i - 2] == "_")))
+        if c == "'" and (not prev_is_ident or byte_char):
+            # Char literal vs lifetime.
+            if nxt == "\\":
+                put("'")
+                i += 1
+                blank(chars[i])  # backslash
+                i += 1
+                # the escaped char itself is never the closer (handles '\'')
+                if i < n and chars[i] != "\n":
+                    blank(chars[i])
+                    i += 1
+                start = line
+                closed = False
+                while i < n:
+                    if chars[i] == "'":
+                        put("'")
+                        i += 1
+                        closed = True
+                        break
+                    if chars[i] == "\n":
+                        break
+                    blank(chars[i])
+                    i += 1
+                if not closed:
+                    return "".join(out), (start, "unterminated char literal")
+                continue
+            if i + 2 < n and nxt != "'" and chars[i + 2] == "'":
+                put("'")
+                blank(nxt)
+                put("'")
+                i += 3
+                continue
+            # lifetime — pass through
+            put(c)
+            i += 1
+            continue
+        put(c)
+        i += 1
+    return "".join(out), None
+
+
+def line_of(text, offset):
+    return text.count("\n", 0, offset) + 1
+
+
+def allow_lines(src, pass_name):
+    """Line numbers suppressed for a pass via audit:allow comments."""
+    allowed = set()
+    for idx, l in enumerate(src.splitlines(), start=1):
+        m = re.search(r"audit:allow\(([a-z0-9_,\- ]+)\)", l)
+        if m and pass_name in [p.strip() for p in m.group(1).split(",")]:
+            allowed.add(idx)
+            allowed.add(idx + 1)
+    return allowed
+
+
+# -- A001 bracket balance ---------------------------------------------------
+
+
+def pass_balance(files):
+    out = []
+    for rel, src in files.items():
+        scrubbed, err = scrub(src)
+        if err:
+            out.append(finding("A001", "bracket-balance", rel, err[0], err[1]))
+            continue
+        stack = []
+        pairs = {")": "(", "]": "[", "}": "{"}
+        ok = True
+        line = 1
+        for ch in scrubbed:
+            if ch == "\n":
+                line += 1
+            elif ch in "([{":
+                stack.append((ch, line))
+            elif ch in ")]}":
+                if not stack or stack[-1][0] != pairs[ch]:
+                    out.append(finding(
+                        "A001", "bracket-balance", rel, line,
+                        f"unbalanced '{ch}'" + (f" (open '{stack[-1][0]}' from line {stack[-1][1]})" if stack else "")))
+                    ok = False
+                    break
+                stack.pop()
+        if ok and stack:
+            ch, ln = stack[-1]
+            out.append(finding("A001", "bracket-balance", rel, ln, f"unclosed '{ch}'"))
+    return out
+
+
+# -- module tree + A002 use resolution --------------------------------------
+
+
+class Module:
+    def __init__(self, path):
+        self.path = path          # e.g. "exec::pool" ("" = crate root)
+        self.items = set()        # pub-ish item names (incl. private: we
+                                  # audit resolvability, not visibility)
+        self.submodules = set()
+        self.has_glob_reexport = False
+        self.reexport_globs = []  # module paths globbed in via pub use ..::*
+        self.parsed = False
+
+
+ITEM_RE = re.compile(
+    r"(?:^|[;{}]\s*|\n\s*)(?:pub(?:\s*\([^)]*\))?\s+)?"
+    r"(fn|struct|enum|trait|union|type|const|static|macro_rules!)\s+([A-Za-z_][A-Za-z0-9_]*)")
+MOD_DECL_RE = re.compile(r"(?:pub(?:\s*\([^)]*\))?\s+)?mod\s+([A-Za-z_][A-Za-z0-9_]*)\s*([;{])")
+
+
+def split_use_tree(tree):
+    """'a::{b, c as d, e::*}' -> list of (path_segments, leaf_or_star)."""
+    tree = tree.strip()
+    results = []
+
+    def rec(prefix, t):
+        t = t.strip()
+        brace = t.find("{")
+        if brace == -1:
+            segs = [s.strip() for s in t.split("::") if s.strip()]
+            alias = None
+            if segs and " as " in segs[-1]:
+                last, alias = segs[-1].split(" as ", 1)
+                segs[-1] = last.strip()
+            results.append((prefix + segs, (alias or "").strip() or None))
+            return
+        head = t[:brace].rstrip()
+        if head.endswith("::"):
+            head = head[:-2]
+        segs = prefix + [s.strip() for s in head.split("::") if s.strip()]
+        inner = t[brace + 1:t.rfind("}")]
+        depth = 0
+        part = ""
+        parts = []
+        for ch in inner:
+            if ch == "{":
+                depth += 1
+            elif ch == "}":
+                depth -= 1
+            if ch == "," and depth == 0:
+                parts.append(part)
+                part = ""
+            else:
+                part += ch
+        if part.strip():
+            parts.append(part)
+        for p in parts:
+            rec(segs, p)
+
+    rec([], tree)
+    return results
+
+
+def parse_modules_in_file(rel, scrubbed, base_modpath, modules, uses):
+    """Collect items, submodule decls, and use statements, tracking inline
+    `mod x { .. }` nesting so each use knows its module path."""
+    # inline module spans: list of (start, end, modpath)
+    spans = []
+
+    def walk(seg_start, seg_end, modpath):
+        if modpath not in modules:
+            modules[modpath] = Module(modpath)
+        m = modules[modpath]
+        m.parsed = True
+        body = scrubbed[seg_start:seg_end]
+        # find inline mods at this level; recurse and mask them out
+        masked = body
+        pos = 0
+        while True:
+            mm = MOD_DECL_RE.search(masked, pos)
+            if not mm:
+                break
+            name, kind = mm.group(1), mm.group(2)
+            child = (modpath + "::" + name).lstrip(":")
+            if kind == ";":
+                m.submodules.add(name)
+                pos = mm.end()
+                continue
+            # inline: find matching close brace
+            depth = 0
+            j = seg_start + mm.end() - 1
+            while j < seg_end:
+                if scrubbed[j] == "{":
+                    depth += 1
+                elif scrubbed[j] == "}":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                j += 1
+            m.submodules.add(name)
+            walk(seg_start + mm.end(), j, child)
+            # mask the inline body so outer item scan skips it
+            masked = masked[:mm.end()] + " " * (j - (seg_start + mm.end())) + masked[j - seg_start:]
+            pos = j - seg_start
+        for im in ITEM_RE.finditer(masked):
+            m.items.add(im.group(2))
+        # use statements at this level
+        for um in re.finditer(r"(?:^|[;{}]\s*|\n\s*)(pub(?:\s*\([^)]*\))?\s+)?use\s+([^;]+);", masked):
+            is_pub = bool(um.group(1))
+            tree = um.group(2)
+            off = seg_start + um.start(2)
+            uses.append((rel, modpath, is_pub, tree, line_of(scrubbed, off)))
+            if is_pub:
+                for segs, alias in split_use_tree(tree):
+                    if not segs:
+                        continue
+                    if segs[-1] == "*":
+                        m.has_glob_reexport = True
+                        m.reexport_globs.append(segs[:-1])
+                    else:
+                        m.items.add(alias or segs[-1])
+
+    walk(0, len(scrubbed), base_modpath)
+
+
+def build_crate(root, files):
+    """Parse rust/src into a module map keyed by 'a::b' ('' = crate root).
+    Returns (modules, uses)."""
+    modules = {}
+    uses = []
+    src_files = {rel: s for rel, s in files.items() if rel.startswith("rust/src/")}
+    for rel, src in sorted(src_files.items()):
+        scrubbed, err = scrub(src)
+        if err:
+            continue  # balance pass reports it
+        p = rel[len("rust/src/"):]
+        if p == "lib.rs":
+            modpath = ""
+        elif p == "main.rs":
+            modpath = "__main__"
+        elif p.endswith("/mod.rs"):
+            modpath = p[:-len("/mod.rs")].replace("/", "::")
+        else:
+            modpath = p[:-3].replace("/", "::")
+        parse_modules_in_file(rel, scrubbed, modpath, modules, uses)
+    return modules, uses
+
+
+def resolve_path(modules, start_mod, segs):
+    """Resolve segs (already absolute, crate-rooted) to True/False/None.
+    None = cannot decide confidently (skip)."""
+    cur = ""
+    for idx, seg in enumerate(segs):
+        last = idx == len(segs) - 1
+        m = modules.get(cur)
+        if m is None or not m.parsed:
+            return None
+        if seg == "*":
+            return True
+        if seg == "self":
+            # `use a::b::{self, X}` — refers to the module resolved so far.
+            continue
+        if seg in m.submodules:
+            cur = (cur + "::" + seg).lstrip(":")
+            continue
+        if seg in m.items:
+            # Items may have associated paths (Enum::Variant in a use tree);
+            # accept the remainder unchecked.
+            return True
+        if m.has_glob_reexport:
+            return None  # name may come in through the glob
+        return False
+    return True
+
+
+def pass_use_resolution(root, files):
+    out = []
+    modules, uses = build_crate(root, files)
+
+    def check(rel, modpath, tree, lineno, crate_prefixes):
+        for segs, _alias in split_use_tree(tree):
+            if not segs:
+                continue
+            head = segs[0]
+            if head in ("crate", "pawd") and "crate" in crate_prefixes:
+                abs_segs = segs[1:]
+            elif head == "self":
+                abs_segs = (modpath.split("::") if modpath and modpath != "__main__" else []) + segs[1:]
+            elif head == "super":
+                parts = modpath.split("::") if modpath and modpath != "__main__" else []
+                k = 0
+                while k < len(segs) and segs[k] == "super":
+                    k += 1
+                if k > len(parts):
+                    out.append(finding("A002", "use-resolution", rel, lineno,
+                                       f"'{'::'.join(segs)}': too many 'super'"))
+                    continue
+                abs_segs = parts[:len(parts) - k] + segs[k:]
+            else:
+                continue  # external crate
+            r = resolve_path(modules, modpath, abs_segs)
+            if r is False:
+                out.append(finding("A002", "use-resolution", rel, lineno,
+                                   f"use path '{'::'.join(segs)}' does not resolve"))
+
+    # src files: crate:: and super:: / self::
+    src_allow = {rel: allow_lines(src, "use-resolution") for rel, src in files.items()}
+    for rel, modpath, _is_pub, tree, lineno in uses:
+        if lineno in src_allow.get(rel, ()):
+            continue
+        check(rel, modpath, tree, lineno, crate_prefixes={"crate"})
+
+    # tests/benches/examples: pawd:: resolves against the lib crate root.
+    for rel, src in sorted(files.items()):
+        if rel.startswith("rust/src/"):
+            continue
+        scrubbed, err = scrub(src)
+        if err:
+            continue
+        allowed = allow_lines(src, "use-resolution")
+        for um in re.finditer(r"(?:^|[;{}]\s*|\n\s*)(?:pub\s+)?use\s+([^;]+);", scrubbed):
+            tree = um.group(1)
+            lineno = line_of(scrubbed, um.start(1))
+            if lineno in allowed:
+                continue
+            for segs, _alias in split_use_tree(tree):
+                if not segs or segs[0] != "pawd":
+                    continue
+                r = resolve_path(modules, "", segs[1:])
+                if r is False:
+                    out.append(finding("A002", "use-resolution", rel, lineno,
+                                       f"use path '{'::'.join(segs)}' does not resolve"))
+    return out
+
+
+# -- A003 exhaustive matches ------------------------------------------------
+
+
+def enum_variants(files, enum_file, enum_name):
+    src = files.get(enum_file)
+    if src is None:
+        return None
+    scrubbed, err = scrub(src)
+    if err:
+        return None
+    m = re.search(r"enum\s+" + enum_name + r"\b[^{]*\{", scrubbed)
+    if not m:
+        return None
+    i = m.end() - 1
+    depth = 0
+    start = i
+    while i < len(scrubbed):
+        if scrubbed[i] == "{":
+            depth += 1
+        elif scrubbed[i] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+        i += 1
+    body = scrubbed[start + 1:i]
+    variants = []
+    j, n, d = 0, len(body), 0
+    at_start = True  # expecting the next variant name
+    while j < n:
+        ch = body[j]
+        if d == 0 and ch == "#":
+            # skip a variant attribute #[...]
+            while j < n and body[j] != "[":
+                j += 1
+            dd = 0
+            while j < n:
+                if body[j] == "[":
+                    dd += 1
+                elif body[j] == "]":
+                    dd -= 1
+                    if dd == 0:
+                        break
+                j += 1
+            j += 1
+            continue
+        if ch in "([{":
+            d += 1
+        elif ch in ")]}":
+            d -= 1
+        elif d == 0 and ch == ",":
+            at_start = True
+        elif d == 0 and at_start and (ch.isalpha() or ch == "_"):
+            mm = IDENT.match(body, j)
+            variants.append(mm.group(0))
+            at_start = False
+            j = mm.end()
+            continue
+        j += 1
+    return variants
+
+
+def iter_matches(scrubbed):
+    """Yield (offset, arms) for every `match` block; each arm is
+    (pattern_text, pattern_offset)."""
+    for m in re.finditer(r"\bmatch\b", scrubbed):
+        i = m.end()
+        depth = 0
+        n = len(scrubbed)
+        # find block-open brace at bracket depth 0
+        while i < n:
+            c = scrubbed[i]
+            if c in "([":
+                depth += 1
+            elif c in ")]":
+                depth -= 1
+            elif c == "{" and depth == 0:
+                break
+            elif c == ";" and depth == 0:
+                i = None
+                break
+            i += 1
+        if i is None or i >= n:
+            continue
+        block_start = i
+        # walk arms at depth 1
+        arms = []
+        i += 1
+        while i < n:
+            # skip ws
+            while i < n and scrubbed[i] in " \t\n":
+                i += 1
+            if i >= n or scrubbed[i] == "}":
+                break
+            pat_start = i
+            d = 0
+            # pattern: until top-level =>
+            while i < n:
+                c = scrubbed[i]
+                if c in "([{":
+                    d += 1
+                elif c in ")]}":
+                    if d == 0 and c == "}":
+                        break  # malformed; bail
+                    d -= 1
+                elif c == "=" and d == 0 and i + 1 < n and scrubbed[i + 1] == ">":
+                    break
+                i += 1
+            if i >= n or scrubbed[i] == "}":
+                break
+            arms.append((scrubbed[pat_start:i], pat_start))
+            i += 2  # skip =>
+            while i < n and scrubbed[i] in " \t\n":
+                i += 1
+            if i < n and scrubbed[i] == "{":
+                d = 0
+                while i < n:
+                    if scrubbed[i] == "{":
+                        d += 1
+                    elif scrubbed[i] == "}":
+                        d -= 1
+                        if d == 0:
+                            break
+                    i += 1
+                i += 1
+                while i < n and scrubbed[i] in " \t\n":
+                    i += 1
+                if i < n and scrubbed[i] == ",":
+                    i += 1
+            else:
+                d = 0
+                while i < n:
+                    c = scrubbed[i]
+                    if c in "([{":
+                        d += 1
+                    elif c in ")]}":
+                        if d == 0:
+                            break
+                        d -= 1
+                    elif c == "," and d == 0:
+                        i += 1
+                        break
+                    i += 1
+        yield block_start, arms
+
+
+def pattern_is_catch_all(pat):
+    """A top-level `_`, `..`, or bare binding (no ::, no literal)."""
+    p = pat.strip()
+    if " if " in p:  # guard: a guarded arm never guarantees coverage
+        p = p.split(" if ")[0].strip()
+        guarded = True
+    else:
+        guarded = False
+    for alt in p.split("|"):
+        a = alt.strip()
+        for pre in ("ref ", "mut ", "ref mut "):
+            if a.startswith(pre):
+                a = a[len(pre):].strip()
+        if a == "_" or a == "..":
+            if not guarded:
+                return True
+        if re.fullmatch(r"[a-z_][a-z0-9_]*", a) and a not in ("true", "false"):
+            if not guarded:
+                return True
+    return False
+
+
+def pass_match_exhaustive(root, files):
+    out = []
+    enums = {}
+    for efile, ename in GROWN_ENUMS:
+        v = enum_variants(files, efile, ename)
+        if v is None:
+            out.append(finding("A003", "match-exhaustive", efile, 1,
+                               f"grown enum {ename} not found (audit config stale?)"))
+        else:
+            enums[ename] = set(v)
+    for rel, src in sorted(files.items()):
+        if not rel.startswith(("rust/src/", "rust/tests/", "rust/benches/")):
+            continue
+        scrubbed, err = scrub(src)
+        if err:
+            continue
+        allowed = allow_lines(src, "match-exhaustive")
+        for block_start, arms in iter_matches(scrubbed):
+            if not arms:
+                continue
+            lineno = line_of(scrubbed, block_start)
+            if lineno in allowed:
+                continue
+            for ename, declared in enums.items():
+                mention = [a for a in arms if re.search(r"\b" + ename + r"\s*::", a[0])]
+                if not mention:
+                    continue
+                # only audit matches where every arm is this enum or catch-all
+                shaped = all(
+                    re.match(r"^\s*(" + ename + r"|_|[a-z_][a-z0-9_]*)\b", a[0].strip())
+                    for a in arms)
+                if not shaped or len(mention) != len([a for a in arms if not pattern_is_catch_all(a[0])]):
+                    continue
+                if any(pattern_is_catch_all(a[0]) for a in arms):
+                    continue
+                used = set()
+                for a in arms:
+                    used.update(re.findall(ename + r"\s*::\s*([A-Za-z_][A-Za-z0-9_]*)", a[0]))
+                missing = declared - used
+                if missing:
+                    out.append(finding(
+                        "A003", "match-exhaustive", rel, lineno,
+                        f"match over {ename} has no catch-all and misses: "
+                        + ", ".join(sorted(missing))))
+    return out
+
+
+# -- A101 counter drift -----------------------------------------------------
+
+
+def counter_getters(files):
+    src = files["rust/src/exec/counters.rs"]
+    scrubbed, _ = scrub(src)
+    names = []
+    for m in re.finditer(r"pub fn ([a-z0-9_]+)\(\) -> u64", scrubbed):
+        names.append(m.group(1))
+    return names
+
+
+def struct_fields(scrubbed, struct_name):
+    m = re.search(r"struct\s+" + struct_name + r"\s*\{", scrubbed)
+    if not m:
+        return None
+    i = m.end() - 1
+    depth = 0
+    start = i
+    while i < len(scrubbed):
+        if scrubbed[i] == "{":
+            depth += 1
+        elif scrubbed[i] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+        i += 1
+    body = scrubbed[start + 1:i]
+    return re.findall(r"pub ([a-z0-9_]+)\s*:", body)
+
+
+def backticked(text):
+    return set(re.findall(r"`([A-Za-z0-9_]+)`", text))
+
+
+def readme_table(readme, heading_fragment):
+    """Rows of the first markdown table after a heading containing the
+    fragment; returns set of first-column backticked names, or None."""
+    lines = readme.splitlines()
+    try:
+        h = next(i for i, l in enumerate(lines)
+                 if l.startswith("#") and heading_fragment in l)
+    except StopIteration:
+        return None
+    names = set()
+    in_table = False
+    for l in lines[h + 1:]:
+        if l.startswith("#"):
+            break
+        if l.startswith("|"):
+            in_table = True
+            m = re.match(r"\|\s*`([A-Za-z0-9_]+)`", l)
+            if m:
+                names.add(m.group(1))
+        elif in_table and not l.strip():
+            break
+    return names if in_table else None
+
+
+def pass_counter_drift(root, files):
+    out = []
+    f = lambda file, line, msg: out.append(finding("A101", "counter-drift", file, line, msg))
+    counters = counter_getters(files)
+    counters = [c for c in counters if c != "reset"]
+    metrics_src = files["rust/src/coordinator/metrics.rs"]
+    metrics, _ = scrub(metrics_src)
+    fields = struct_fields(metrics, "MetricsSnapshot")
+    if fields is None:
+        f("rust/src/coordinator/metrics.rs", 1, "MetricsSnapshot struct not found")
+        return out
+    for c in counters:
+        if c not in fields:
+            f("rust/src/coordinator/metrics.rs", 1,
+              f"counter '{c}' (exec/counters.rs) has no MetricsSnapshot field")
+        if not re.search(r"counters::" + c + r"\(\)", metrics):
+            f("rust/src/coordinator/metrics.rs", 1,
+              f"counter '{c}' is never read into the snapshot (snapshot_inner)")
+    wire_src = files["rust/src/net/wire.rs"]
+    for field in fields:
+        hits = len(re.findall(r'"' + field + r'"', wire_src))
+        if hits < 2:
+            f("rust/src/net/wire.rs", 1,
+              f"MetricsSnapshot field '{field}' missing from the wire codec "
+              f"(need both snapshot_to_json and snapshot_from_json)")
+    main_src = files["rust/src/main.rs"]
+    snap_refs = set()
+    for m in re.finditer(r"\bsnap\.([a-z0-9_]+)", main_src):
+        snap_refs.add(m.group(1))
+        if m.group(1) not in fields:
+            f("rust/src/main.rs", line_of(main_src, m.start()),
+              f"serve summary references unknown snapshot field '{m.group(1)}'")
+    for c in counters:
+        if c not in snap_refs:
+            f("rust/src/main.rs", 1,
+              f"counter '{c}' is not surfaced in any CLI summary line (snap.{c})")
+    readme = files["README.md"]
+    table = readme_table(readme, "Counter registry")
+    if table is None:
+        f("README.md", 1, "README counter table ('Counter registry' heading) not found")
+        return out
+    for c in counters:
+        if c not in table:
+            f("README.md", 1, f"counter '{c}' missing from the README counter table")
+    for name in table:
+        if name not in counters:
+            f("README.md", 1, f"README counter table lists unknown counter '{name}'")
+    return out
+
+
+# -- A102 env drift ---------------------------------------------------------
+
+
+def pass_env_drift(root, files):
+    out = []
+    reads = {}
+    for rel, src in sorted(files.items()):
+        if not rel.endswith(".rs"):
+            continue
+        for m in re.finditer(r'env::var(?:_os)?\s*\(\s*"(PAWD_[A-Z0-9_]+)"', src):
+            reads.setdefault(m.group(1), (rel, line_of(src, m.start())))
+    readme = files["README.md"]
+    table = readme_table(readme, "Environment knobs")
+    if table is None:
+        out.append(finding("A102", "env-drift", "README.md", 1,
+                           "README env table ('Environment knobs' heading) not found"))
+        return out
+    for var, (rel, line) in sorted(reads.items()):
+        if var not in table:
+            out.append(finding("A102", "env-drift", rel, line,
+                               f"env var '{var}' read here but missing from the README env table"))
+    for var in sorted(table):
+        if var.startswith("PAWD_") and var not in reads:
+            out.append(finding("A102", "env-drift", "README.md", 1,
+                               f"README env table lists '{var}' but nothing reads it"))
+    return out
+
+
+# -- A103 route drift -------------------------------------------------------
+
+
+def kebab(name):
+    return re.sub(r"(?<!^)([A-Z])", r"-\1", name).lower()
+
+
+def pass_route_drift(root, files):
+    out = []
+    f = lambda file, line, msg: out.append(finding("A103", "route-drift", file, line, msg))
+    variants = enum_variants(files, "rust/src/coordinator/request.rs", "AdminOp")
+    if variants is None:
+        f("rust/src/coordinator/request.rs", 1, "AdminOp enum not found")
+        return out
+    wire_src = files["rust/src/net/wire.rs"]
+    m = re.search(r"pub mod admin_routes\s*\{", wire_src)
+    if not m:
+        f("rust/src/net/wire.rs", 1, "admin_routes module not found")
+        return out
+    i = m.end() - 1
+    depth = 0
+    start = i
+    while i < len(wire_src):
+        if wire_src[i] == "{":
+            depth += 1
+        elif wire_src[i] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+        i += 1
+    body = wire_src[start:i]
+    consts = dict(re.findall(r'pub const ([A-Z_]+): &str = "([a-z\-]+)";', body))
+    all_m = re.search(r"pub const ALL: \[&str; (\d+)\] = \[(.*?)\];", body, re.S)
+    if not all_m:
+        f("rust/src/net/wire.rs", 1, "admin_routes::ALL not found")
+        return out
+    all_names = re.findall(r"[A-Z][A-Z_]*", all_m.group(2))
+    expect = {kebab(v) for v in variants}
+    got = set(consts.values())
+    for r in sorted(expect - got):
+        f("rust/src/net/wire.rs", 1, f"AdminOp variant route '{r}' has no admin_routes const")
+    for r in sorted(got - expect):
+        f("rust/src/net/wire.rs", 1, f"admin_routes const '{r}' matches no AdminOp variant")
+    if int(all_m.group(1)) != len(variants) or len(all_names) != len(variants):
+        f("rust/src/net/wire.rs", 1,
+          f"admin_routes::ALL has {len(all_names)} entries (declared {all_m.group(1)}), "
+          f"AdminOp has {len(variants)} variants")
+    if sorted(set(all_names)) != sorted(consts.keys()):
+        f("rust/src/net/wire.rs", 1, "admin_routes::ALL does not list every const exactly once")
+    readme = files["README.md"]
+    row = next((l for l in readme.splitlines() if "/v1/admin/<op>" in l), None)
+    if row is None:
+        f("README.md", 1, "README route table has no /v1/admin/<op> row")
+        return out
+    for r in sorted(got):
+        if f"`{r}`" not in row:
+            f("README.md", 1, f"README admin route row does not mention `{r}`")
+    return out
+
+
+# -- A104 bench key drift ---------------------------------------------------
+
+
+def pass_bench_keys(root, files):
+    out = []
+    try:
+        baseline = json.loads(files["BENCH_baseline.json"])
+    except (KeyError, json.JSONDecodeError) as e:
+        return [finding("A104", "bench-key-drift", "BENCH_baseline.json", 1, f"unreadable: {e}")]
+    cargo = files["rust/Cargo.toml"]
+    registered = set(re.findall(r'name = "([a-z0-9_]+)"', cargo))
+    bench_src = "\n".join(s for rel, s in files.items() if rel.startswith("rust/benches/"))
+    for scenario, metrics in sorted(baseline.get("scenarios", {}).items()):
+        bench = scenario.split("/")[0]
+        if bench not in registered or ("rust/benches/" + bench + ".rs") not in files:
+            out.append(finding("A104", "bench-key-drift", "BENCH_baseline.json", 1,
+                               f"baseline scenario '{scenario}' names no registered bench"))
+            continue
+        for metric in sorted(metrics):
+            if not metric.endswith("per_s"):
+                continue
+            if metric in bench_src:
+                continue
+            pieces = [p for p in re.split(r"[0-9]+", metric) if len(p) > 2]
+            if pieces and all(p in bench_src for p in pieces):
+                continue
+            out.append(finding("A104", "bench-key-drift", "BENCH_baseline.json", 1,
+                               f"gated key '{scenario}:{metric}' not emitted by any bench source"))
+    return out
+
+
+# -- A201/A202 unsafe -------------------------------------------------------
+
+
+def unsafe_sites(rel, src):
+    scrubbed, err = scrub(src)
+    if err:
+        return []
+    sites = []
+    for m in re.finditer(r"\bunsafe\b", scrubbed):
+        after = scrubbed[m.end():m.end() + 40].lstrip()
+        if after.startswith("{"):
+            kind = "block"
+        elif after.startswith("impl"):
+            kind = "impl"
+        elif after.startswith("fn") or after.startswith("extern"):
+            kind = "fn"
+        else:
+            kind = "block"
+        sites.append((line_of(scrubbed, m.start()), kind))
+    return sites
+
+
+def has_safety_comment(lines, lineno, kind):
+    """SAFETY on the site line or an immediately-preceding comment/attr/
+    unsafe-impl run. For `unsafe fn`, a doc `# Safety` section counts."""
+    if "SAFETY" in lines[lineno - 1]:
+        return True
+    i = lineno - 2
+    seen_comment = False
+    while i >= 0:
+        l = lines[i].strip()
+        if l.startswith("//"):
+            if "SAFETY" in l or (kind == "fn" and "# Safety" in l):
+                return True
+            seen_comment = True
+            i -= 1
+            continue
+        if l.startswith("#[") or l.startswith("#!["):
+            i -= 1
+            continue
+        if l.startswith("unsafe impl") or l.startswith("pub unsafe impl"):
+            i -= 1
+            continue
+        if not l:
+            if seen_comment:
+                break
+            i -= 1
+            continue
+        break
+    return False
+
+
+def pass_unsafe(root, files):
+    out = []
+    inventory = {}
+    for rel, src in sorted(files.items()):
+        if not rel.startswith("rust/src/"):
+            continue
+        sites = unsafe_sites(rel, src)
+        if sites:
+            inventory[rel] = len(sites)
+        lines = src.splitlines()
+        allowed = allow_lines(src, "unsafe-safety")
+        for lineno, kind in sites:
+            if lineno in allowed:
+                continue
+            if not has_safety_comment(lines, lineno, kind):
+                out.append(finding("A201", "unsafe-safety", rel, lineno,
+                                   f"unsafe {kind} without a SAFETY comment"))
+    golden_path = os.path.join(root, GOLDEN_UNSAFE)
+    if not os.path.exists(golden_path):
+        out.append(finding("A202", "unsafe-inventory", GOLDEN_UNSAFE, 1,
+                           "golden unsafe inventory missing; expected lines '<path> <count>'"))
+        return out
+    golden = {}
+    with open(golden_path) as fh:
+        for l in fh:
+            l = l.strip()
+            if l and not l.startswith("#"):
+                p, c = l.rsplit(" ", 1)
+                golden[p] = int(c)
+    for rel, count in sorted(inventory.items()):
+        if golden.get(rel) != count:
+            out.append(finding(
+                "A202", "unsafe-inventory", rel, 1,
+                f"{count} unsafe site(s), golden file says {golden.get(rel, 0)} — "
+                f"update {GOLDEN_UNSAFE} if the new unsafe is deliberate"))
+    for rel in sorted(set(golden) - set(inventory)):
+        out.append(finding("A202", "unsafe-inventory", GOLDEN_UNSAFE, 1,
+                           f"golden file lists '{rel}' but it has no unsafe (or is gone)"))
+    return out
+
+
+# -- A203 condvar waits -----------------------------------------------------
+
+
+def pass_condvar(root, files):
+    out = []
+    for rel, src in sorted(files.items()):
+        if not rel.startswith(("rust/src/", "rust/tests/")):
+            continue
+        scrubbed, err = scrub(src)
+        if err:
+            continue
+        allowed = allow_lines(src, "condvar-wait-in-loop")
+        for m in re.finditer(r"\.wait(?:_timeout)?\s*\(", scrubbed):
+            lineno = line_of(scrubbed, m.start())
+            if lineno in allowed:
+                continue
+            # enclosing-brace scan: is any enclosing block a loop/while/for?
+            depth = 0
+            in_loop = False
+            i = m.start()
+            opens = []
+            d = 0
+            for j, ch in enumerate(scrubbed[:i]):
+                if ch == "{":
+                    opens.append(j)
+                elif ch == "}":
+                    if opens:
+                        opens.pop()
+            for open_pos in opens:
+                head = scrubbed[max(0, open_pos - 240):open_pos]
+                # strip balanced trailing condition text back to a keyword
+                cut = max(head.rfind(";"), head.rfind("{"), head.rfind("}"))
+                head = head[cut + 1:]
+                if re.search(r"\b(loop|while|for)\b", head):
+                    in_loop = True
+                    break
+            if not in_loop:
+                out.append(finding(
+                    "A203", "condvar-wait-in-loop", rel, lineno,
+                    "condvar wait outside any loop — spurious wakeups will "
+                    "break the predicate (re-check in a while/loop)"))
+    return out
+
+
+# -- driver -----------------------------------------------------------------
+
+
+def collect_files(root):
+    files = {}
+    for d in RS_DIRS:
+        base = os.path.join(root, d)
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fn in sorted(filenames):
+                if not fn.endswith(".rs"):
+                    continue
+                full = os.path.join(dirpath, fn)
+                rel = os.path.relpath(full, root)
+                if any(x in rel.replace(os.sep, "/") or x.strip("/") in rel.split(os.sep)
+                       for x in EXCLUDE):
+                    continue
+                with open(full, encoding="utf-8") as fh:
+                    files[rel.replace(os.sep, "/")] = fh.read()
+    for extra in ["README.md", "BENCH_baseline.json", "rust/Cargo.toml"]:
+        p = os.path.join(root, extra)
+        if os.path.exists(p):
+            with open(p, encoding="utf-8") as fh:
+                files[extra] = fh.read()
+    return files
+
+
+def run_audit(root):
+    files = collect_files(root)
+    findings = []
+    findings += pass_balance({r: s for r, s in files.items() if r.endswith(".rs")})
+    findings += pass_use_resolution(root, files)
+    findings += pass_match_exhaustive(root, files)
+    findings += pass_counter_drift(root, files)
+    findings += pass_env_drift(root, files)
+    findings += pass_route_drift(root, files)
+    findings += pass_bench_keys(root, files)
+    findings += pass_unsafe(root, files)
+    findings += pass_condvar(root, files)
+    n_rs = len([r for r in files if r.endswith(".rs")])
+    return {"format": 1, "files_scanned": n_rs, "findings": findings}
+
+
+def find_root(start):
+    d = os.path.abspath(start)
+    while True:
+        if os.path.exists(os.path.join(d, "rust", "Cargo.toml")) and \
+           os.path.exists(os.path.join(d, "README.md")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            return None
+        d = parent
+
+
+def main(argv):
+    as_json = "--json" in argv
+    argv = [a for a in argv if a != "--json"]
+    root = find_root(argv[0] if argv else os.getcwd())
+    if root is None:
+        print("audit: repo root not found (need rust/Cargo.toml + README.md)", file=sys.stderr)
+        return 2
+    report = run_audit(root)
+    if as_json:
+        print(json.dumps(report, indent=2))
+    else:
+        for f in report["findings"]:
+            print(f"{f['code']} [{f['pass']}] {f['file']}:{f['line']}: {f['message']}")
+        print(f"audit: {report['files_scanned']} files, {len(report['findings'])} finding(s)")
+    return 1 if report["findings"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
